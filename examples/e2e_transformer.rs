@@ -1,0 +1,81 @@
+//! END-TO-END VALIDATION DRIVER (see EXPERIMENTS.md §E2E for the recorded
+//! run): train a multi-million-parameter decoder-only transformer LM on a
+//! synthetic token corpus for a few hundred steps through the FULL stack —
+//!
+//!   Pallas kernels (L1) → jax fwd/bwd AOT-lowered to HLO (L2) →
+//!   rust ADSP coordinator executing via PJRT across a heterogeneous
+//!   4-worker cluster (L3)
+//!
+//! — and log the loss curve, proving all layers compose. The uniform-token
+//! cross-entropy for the 512-token vocab is ln(512) ≈ 6.24; the planted
+//! bigram structure (80% deterministic transitions) has an achievable loss
+//! of ≈ 0.8·ln(1/0.8) + entropy of the noise tail, far below uniform — the
+//! curve must drop decisively from ~6.2 toward it.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_transformer`
+//! (Takes a few minutes on CPU: lm_e2e is a 3.8M-parameter, 4-layer,
+//! d=256 transformer at batch 16 × seq 64.)
+
+use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+use adsp::simulation::SimEngine;
+use adsp::sync::SyncModelKind;
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterSpec::new(vec![
+        WorkerSpec::new(2.0, 0.5),
+        WorkerSpec::new(1.5, 0.5),
+        WorkerSpec::new(1.0, 0.8),
+        WorkerSpec::new(0.6, 0.5),
+    ]);
+    let mut sync = SyncSpec::new(SyncModelKind::Adsp);
+    sync.gamma = 20.0;
+    sync.epoch_secs = 400.0;
+    sync.eval_window_secs = 30.0;
+
+    let mut spec = ExperimentSpec::new("lm_e2e", cluster, sync);
+    spec.batch_size = 16;
+    spec.eval_interval_secs = 20.0;
+    spec.max_virtual_secs = 800.0;
+    // "a few hundred steps": cap at 300 total mini-batch steps.
+    spec.max_total_steps = 300;
+    spec.eta_prime0 = 1.0; // plain SGD needs a large LR at this scale
+    spec.eta_decay_secs = 2000.0;
+
+    println!("== e2e: lm_e2e transformer (3.8M params) on 4 heterogeneous workers ==");
+    println!("   vocab 512 (uniform CE ≈ 6.24), planted-bigram corpus\n");
+
+    let t0 = std::time::Instant::now();
+    let out = SimEngine::new(spec)?.run()?;
+
+    println!("loss curve (virtual time, token cross-entropy):");
+    for s in &out.loss_log.samples {
+        let bars = (s.loss * 7.0).min(70.0) as usize;
+        println!(
+            "  t={:>6.0}s  steps={:>4}  loss {:>6.3}  {}",
+            s.t,
+            s.total_steps,
+            s.loss,
+            "#".repeat(bars)
+        );
+    }
+
+    let first = out.loss_log.first_loss().unwrap_or(f64::NAN);
+    println!("\ntotal: {} steps, {} commits, {:.1}s wall", out.total_steps, out.total_commits, t0.elapsed().as_secs_f64());
+    println!("loss: {first:.3} -> {:.3} (best {:.3})", out.final_loss, out.best_loss);
+    println!("token accuracy: {:.1}%", 100.0 * out.final_accuracy);
+    println!(
+        "breakdown: {:.0}% compute / {:.0}% waiting; {} XLA execs",
+        100.0 * (1.0 - out.breakdown.waiting_fraction()),
+        100.0 * out.breakdown.waiting_fraction(),
+        out.xla_execs
+    );
+
+    anyhow::ensure!(out.final_loss.is_finite(), "training diverged");
+    anyhow::ensure!(
+        out.best_loss < first * 0.75,
+        "loss did not drop decisively: {first:.3} -> {:.3}",
+        out.best_loss
+    );
+    println!("\nE2E OK: all three layers compose and the transformer learns.");
+    Ok(())
+}

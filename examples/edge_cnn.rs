@@ -1,0 +1,65 @@
+//! Edge image classification (paper application (i)): the CIFAR-style CNN
+//! trained across the paper's Table-1 EC2 heterogeneity profile, comparing
+//! the full synchronization-model zoo.
+//!
+//! Uses real CIFAR-10 if `data/cifar-10-batches-bin/` exists, else the
+//! synthetic class-image generator (same shapes). This is a reduced-scale
+//! rendition of Fig. 4; the full-size version is
+//! `adsp experiment fig4 --full`.
+//!
+//! Run: `make artifacts && cargo run --release --example edge_cnn`
+
+use adsp::config::{profiles, ExperimentSpec, SyncSpec};
+use adsp::simulation::SimEngine;
+use adsp::sync::SyncModelKind;
+
+fn main() -> anyhow::Result<()> {
+    // 6 workers drawn from the Table-1 EC2 distribution.
+    let cluster = profiles::ec2_cluster(6, 1.0, 0.4);
+    println!(
+        "== edge CNN: {} workers, heterogeneity H = {:.2} ==\n",
+        cluster.m(),
+        cluster.heterogeneity()
+    );
+
+    let mut results = Vec::new();
+    for kind in [
+        SyncModelKind::Bsp,
+        SyncModelKind::Ssp,
+        SyncModelKind::FixedAdacomm,
+        SyncModelKind::Adsp,
+    ] {
+        let mut sync = SyncSpec::new(kind);
+        sync.gamma = 20.0; // short check period keeps early U accumulation sane
+        sync.tau = 8;
+        let mut spec = ExperimentSpec::new("cnn_cifar", cluster.clone(), sync);
+        spec.batch_size = 32;
+        spec.eta_prime0 = 0.03; // conv nets tolerate less accumulated update
+        spec.eta_decay_secs = 1200.0;
+        spec.max_virtual_secs = 900.0;
+        spec.max_total_steps = 600; // keep the demo 1-core-CPU-friendly
+        spec.eval_interval_secs = 30.0;
+        let out = SimEngine::new(spec)?.run()?;
+        println!(
+            "{:<16} loss {:.3} -> {:.3}  acc {:.1}%  steps {:>5}  waiting {:>4.0}%  ({:.1}s wall)",
+            kind.name(),
+            out.loss_log.first_loss().unwrap_or(f64::NAN),
+            out.final_loss,
+            100.0 * out.final_accuracy,
+            out.total_steps,
+            100.0 * out.breakdown.waiting_fraction(),
+            out.wall_secs,
+        );
+        results.push((kind, out));
+    }
+
+    // Same virtual horizon everywhere: ADSP should have trained the most
+    // steps and reached the lowest loss.
+    let adsp = &results.last().unwrap().1;
+    let bsp = &results[0].1;
+    println!(
+        "\nADSP trained {:.1}x the steps of BSP in the same virtual time.",
+        adsp.total_steps as f64 / bsp.total_steps.max(1) as f64
+    );
+    Ok(())
+}

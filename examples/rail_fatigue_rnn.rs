@@ -1,0 +1,51 @@
+//! High-speed-rail bogie fatigue prediction (paper application (ii),
+//! Appendix D): a GRU-RNN over per-bogie stress/temperature traces, trained
+//! across heterogeneous trackside edge systems with ADSP, then evaluated.
+//!
+//! The proprietary China-rail dataset is substituted by synthetic AR traces
+//! with class-dependent fatigue dynamics (DESIGN.md §Substitutions); output
+//! classes: 0 = healthy, 1 = minor repair, 2 = replace.
+//!
+//! Run: `make artifacts && cargo run --release --example rail_fatigue_rnn`
+
+use adsp::config::{profiles, ExperimentSpec, SyncSpec};
+use adsp::simulation::SimEngine;
+use adsp::sync::SyncModelKind;
+
+fn main() -> anyhow::Result<()> {
+    // Trackside gateways: a mix of old and new hardware (geekbench profile).
+    let cluster = profiles::geekbench_cluster(5, 1.0, 0.5, 42);
+    println!(
+        "== rail fatigue RNN: {} trackside workers, H = {:.2} ==\n",
+        cluster.m(),
+        cluster.heterogeneity()
+    );
+
+    for kind in [SyncModelKind::FixedAdacomm, SyncModelKind::Adsp] {
+        let mut sync = SyncSpec::new(kind);
+        sync.gamma = 45.0;
+        sync.tau = 6;
+        let mut spec = ExperimentSpec::new("rnn_rail", cluster.clone(), sync);
+        spec.batch_size = 128;
+        spec.max_virtual_secs = 600.0;
+        spec.max_total_steps = 1500;
+        spec.eval_interval_secs = 20.0;
+        spec.target_loss = 0.5;
+        let out = SimEngine::new(spec)?.run()?;
+        println!("--- {} ---", kind);
+        println!(
+            "  fatigue-class loss {:.3} -> {:.3} | accuracy {:.1}%",
+            out.loss_log.first_loss().unwrap_or(f64::NAN),
+            out.final_loss,
+            100.0 * out.final_accuracy
+        );
+        println!(
+            "  convergence {:.0}s virtual | {} steps | waiting {:.0}%\n",
+            out.convergence_time(),
+            out.total_steps,
+            100.0 * out.breakdown.waiting_fraction()
+        );
+    }
+    println!("(paper Fig. 12 reports ADSP 29.5% faster than Fixed ADACOMM on this task)");
+    Ok(())
+}

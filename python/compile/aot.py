@@ -1,0 +1,162 @@
+"""AOT compiler: lower every model's step functions to HLO *text* artifacts.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the rust `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Per model this writes, under artifacts/<model>/:
+    local_steps_k{K}_b{B}.hlo.txt   one per (K local steps, batch B) variant
+    eval_step_b{B}.hlo.txt
+    apply_commit.hlo.txt            PS update (Pallas kernel inside)
+    apply_commit_momentum.hlo.txt   Fig. 3(c) explicit-momentum PS update
+    init_params.bin                 deterministic f32 LE init, sorted-name order
+    manifest.json                   the full contract rust validates against
+
+Usage: python -m compile.aot --out-dir ../artifacts [--models m1,m2] [--seed 0]
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    make_apply_fn,
+    make_apply_momentum_fn,
+    make_eval_fn,
+    make_local_steps_fn,
+    param_order,
+)
+from .models.registry import MODEL_CONFIGS, get_model
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPES[dtype])
+
+
+def param_specs(params):
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in params.items()}
+
+
+def lower_to_file(fn, args, path: pathlib.Path) -> int:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    path.write_text(text)
+    return len(text)
+
+
+def build_model(name: str, out_root: pathlib.Path, seed: int, verbose: bool = True):
+    build = get_model(name)
+    model = build.model
+    out = out_root / name
+    out.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    params = model.init(jax.random.PRNGKey(seed))
+    order = param_order(params)
+    pspec = param_specs(params)
+
+    # --- init_params.bin: raw little-endian f32, sorted-name order ----------
+    blob = b"".join(
+        np.asarray(params[k], dtype="<f4").tobytes(order="C") for k in order
+    )
+    (out / "init_params.bin").write_bytes(blob)
+
+    entries = []
+
+    # --- local_steps variants ------------------------------------------------
+    local_fn = make_local_steps_fn(model)
+    for b in build.batch_sizes:
+        for k in build.k_steps:
+            xs = spec((k, b, *model.x_shape), model.x_dtype)
+            ys = spec((k, b, *model.y_shape), model.y_dtype)
+            eta = spec((), "f32")
+            fname = f"local_steps_k{k}_b{b}.hlo.txt"
+            nchars = lower_to_file(local_fn, (pspec, pspec, xs, ys, eta), out / fname)
+            entries.append({"k": k, "b": b, "file": fname})
+            if verbose:
+                print(f"  [{name}] {fname}: {nchars} chars", flush=True)
+
+    # --- eval ----------------------------------------------------------------
+    eb = build.eval_batch
+    eval_fname = f"eval_step_b{eb}.hlo.txt"
+    lower_to_file(
+        make_eval_fn(model),
+        (pspec, spec((eb, *model.x_shape), model.x_dtype), spec((eb, *model.y_shape), model.y_dtype)),
+        out / eval_fname,
+    )
+
+    # --- PS applies ------------------------------------------------------------
+    lower_to_file(make_apply_fn(), (pspec, pspec, spec((), "f32")), out / "apply_commit.hlo.txt")
+    lower_to_file(
+        make_apply_momentum_fn(),
+        (pspec, pspec, pspec, spec((), "f32"), spec((), "f32")),
+        out / "apply_commit_momentum.hlo.txt",
+    )
+
+    total = int(sum(int(np.prod(params[k].shape)) for k in order))
+    manifest = {
+        "model": name,
+        "seed": seed,
+        "params": [
+            {"name": k, "shape": [int(d) for d in params[k].shape],
+             "numel": int(np.prod(params[k].shape) or 1)}
+            for k in order
+        ],
+        "total_param_numel": total,
+        "bytes_per_commit": 4 * total,
+        "x_shape": list(model.x_shape),
+        "x_dtype": model.x_dtype,
+        "y_shape": list(model.y_shape),
+        "y_dtype": model.y_dtype,
+        "num_classes": model.num_classes,
+        "local_steps": entries,
+        "eval": {"b": eb, "file": eval_fname},
+        "apply": "apply_commit.hlo.txt",
+        "apply_momentum": "apply_commit_momentum.hlo.txt",
+        "init_params": "init_params.bin",
+        "init_params_sha256": hashlib.sha256(blob).hexdigest(),
+        "jax_version": jax.__version__,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"  [{name}] done: {total} params, {time.time() - t0:.1f}s", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(sorted(MODEL_CONFIGS)))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    out_root = pathlib.Path(args.out_dir)
+    names = [m.strip() for m in args.models.split(",") if m.strip()]
+    for name in names:
+        print(f"building {name} ...", flush=True)
+        build_model(name, out_root, args.seed)
+    (out_root / "BUILD_INFO.json").write_text(
+        json.dumps({"models": names, "jax": jax.__version__, "built_at": time.time()})
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

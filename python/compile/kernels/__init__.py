@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; MXU/VMEM-tiled for TPU).
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest/hypothesis checks them
+against each other across shapes and dtypes. The kernels are called from the
+Layer-2 jax model graphs in `compile.models` / `compile.model`, so they lower
+into the same AOT HLO artifacts the rust runtime executes.
+"""
+
+from .matmul import matmul
+from .sgd import apply_commit, apply_commit_momentum, fused_local_step
+
+__all__ = ["matmul", "fused_local_step", "apply_commit", "apply_commit_momentum"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+pytest/hypothesis sweeps shapes and dtypes and asserts the kernels in
+`matmul.py` / `sgd.py` match these to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fused_local_step(p, u, g, eta_prime):
+    scaled = jnp.float32(eta_prime) * g
+    return p - scaled, u + scaled
+
+
+def apply_commit(w, u, eta):
+    return w - jnp.float32(eta) * u
+
+
+def apply_commit_momentum(w, u, vel, eta, mu):
+    v_new = jnp.float32(mu) * vel - jnp.float32(eta) * u
+    return w + v_new, v_new

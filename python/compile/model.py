@@ -1,0 +1,78 @@
+"""Layer-2 step functions: the jax graphs that get AOT-lowered to HLO.
+
+Calling convention (mirrored by rust/src/runtime/manifest.rs — keep in sync):
+
+* Parameters are a dict keyed by name; the flattened argument order is the
+  *sorted* key order. `param_order()` is the single source of truth.
+* `local_steps`  : (params P, U P, xs [K,B,...], ys [K,B,...], eta') ->
+                   (params' P, U' P, losses [K])
+                   K local SGD steps via lax.scan; each step runs the model
+                   fwd+bwd and the fused Pallas local-step kernel
+                   (p -= eta'*g ; U += eta'*g). Paper Alg. 2, lines 5-8.
+* `eval_step`    : (params P, x [B,...], y [B,...]) -> (loss, correct)
+* `apply_commit` : (W P, U P, eta) -> W' P          Paper Alg. 2, PS line 4.
+* `apply_commit_momentum`
+                 : (W P, U P, V P, eta, mu) -> (W' P, V' P)
+                   explicit-momentum PS update for the Fig. 3(c) sweep.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import apply_commit as _k_apply
+from .kernels import apply_commit_momentum as _k_apply_mom
+from .kernels import fused_local_step as _k_local
+from .models.common import ModelDef, Params
+
+
+def param_order(params: Params) -> List[str]:
+    """Canonical (sorted) parameter-leaf order — matches jax dict flattening."""
+    return sorted(params.keys())
+
+
+def make_local_steps_fn(model: ModelDef):
+    grad_fn = jax.value_and_grad(model.loss)
+
+    def local_steps(params: Params, u: Params, xs, ys, eta_prime):
+        def body(carry, xy):
+            p, acc = carry
+            x, y = xy
+            loss, g = grad_fn(p, x, y)
+            new_p: Dict[str, jnp.ndarray] = {}
+            new_u: Dict[str, jnp.ndarray] = {}
+            for name in p:
+                new_p[name], new_u[name] = _k_local(p[name], acc[name], g[name], eta_prime)
+            return (new_p, new_u), loss
+
+        (params, u), losses = jax.lax.scan(body, (params, u), (xs, ys))
+        return params, u, losses
+
+    return local_steps
+
+
+def make_eval_fn(model: ModelDef):
+    def eval_step(params: Params, x, y):
+        loss, correct = model.loss_and_metrics(params, x, y)
+        return loss, correct
+
+    return eval_step
+
+
+def make_apply_fn():
+    def apply_commit(w: Params, u: Params, eta):
+        return {name: _k_apply(w[name], u[name], eta) for name in w}
+
+    return apply_commit
+
+
+def make_apply_momentum_fn():
+    def apply_commit_momentum(w: Params, u: Params, vel: Params, eta, mu):
+        new_w: Dict[str, jnp.ndarray] = {}
+        new_v: Dict[str, jnp.ndarray] = {}
+        for name in w:
+            new_w[name], new_v[name] = _k_apply_mom(w[name], u[name], vel[name], eta, mu)
+        return new_w, new_v
+
+    return apply_commit_momentum

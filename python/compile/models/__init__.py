@@ -1,0 +1,9 @@
+"""Layer-2 model zoo (jax, AOT-only) — the paper's three applications plus
+the quickstart MLP, a VGG-style large model (Fig. 11) and a decoder-only
+transformer LM for the end-to-end driver.
+"""
+
+from .common import ModelDef, dense, pallas_dense
+from .registry import MODEL_CONFIGS, get_model
+
+__all__ = ["ModelDef", "dense", "pallas_dense", "get_model", "MODEL_CONFIGS"]

@@ -1,0 +1,153 @@
+"""MLP quickstart, CIFAR-style CNN, VGG-style large CNN, and the linear SVM
+(chiller COP prediction) — four of the paper's workloads (§5.1, Appendix D).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelDef,
+    conv2d,
+    conv_params,
+    correct_count,
+    dense,
+    dense_params,
+    maxpool2,
+    pallas_dense,
+    softmax_xent,
+)
+
+
+def make_mlp(hidden: int = 32, n_in: int = 16, n_classes: int = 4) -> ModelDef:
+    """Two-layer MLP on synthetic blobs; dense layers run the Pallas matmul."""
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            **dense_params(k1, "fc1", n_in, hidden),
+            **dense_params(k2, "fc2", hidden, n_classes),
+        }
+
+    def loss_and_metrics(params, x, y):
+        h = jax.nn.relu(pallas_dense(params, "fc1", x))
+        logits = pallas_dense(params, "fc2", h)
+        return softmax_xent(logits, y), correct_count(logits, y)
+
+    return ModelDef(
+        name="mlp_quick",
+        x_shape=(n_in,),
+        x_dtype="f32",
+        y_shape=(),
+        y_dtype="i32",
+        num_classes=n_classes,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )
+
+
+def make_cnn(n_classes: int = 10, c1: int = 16, c2: int = 32, fc: int = 64) -> ModelDef:
+    """The TF-tutorial-style CIFAR CNN (paper §5.1 application (i))."""
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        flat = 8 * 8 * c2  # 32x32 -> two maxpool2 -> 8x8
+        return {
+            **conv_params(ks[0], "conv1", 3, 3, 3, c1),
+            **conv_params(ks[1], "conv2", 3, 3, c1, c2),
+            **dense_params(ks[2], "fc1", flat, fc),
+            **dense_params(ks[3], "fc2", fc, n_classes),
+        }
+
+    def loss_and_metrics(params, x, y):
+        h = maxpool2(jax.nn.relu(conv2d(params, "conv1", x)))
+        h = maxpool2(jax.nn.relu(conv2d(params, "conv2", h)))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(pallas_dense(params, "fc1", h))
+        logits = dense(params, "fc2", h)
+        return softmax_xent(logits, y), correct_count(logits, y)
+
+    return ModelDef(
+        name="cnn_cifar",
+        x_shape=(32, 32, 3),
+        x_dtype="f32",
+        y_shape=(),
+        y_dtype="i32",
+        num_classes=n_classes,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )
+
+
+def make_vgg_sim(n_classes: int = 10) -> ModelDef:
+    """Scaled VGG-style CNN standing in for the paper's 528 MB VGG-16
+    (Fig. 11). Same block structure (stacked 3x3 convs, doubling widths,
+    large FC head); width scaled to keep CPU-simulated runs tractable. The
+    substitution preserves what Fig. 11 measures: per-step compute time large
+    relative to communication."""
+
+    widths = (32, 64, 128)
+
+    def init(key):
+        ks = jax.random.split(key, 8)
+        p = {}
+        c_in = 3
+        i = 0
+        for bi, w in enumerate(widths):
+            p.update(conv_params(ks[i], f"b{bi}/conv1", 3, 3, c_in, w)); i += 1
+            p.update(conv_params(ks[i], f"b{bi}/conv2", 3, 3, w, w)); i += 1
+            c_in = w
+        flat = 4 * 4 * widths[-1]  # 32 -> 16 -> 8 -> 4
+        p.update(dense_params(ks[i], "fc1", flat, 256)); i += 1
+        p.update(dense_params(ks[i], "fc2", 256, n_classes))
+        return p
+
+    def loss_and_metrics(params, x, y):
+        h = x
+        for bi in range(len(widths)):
+            h = jax.nn.relu(conv2d(params, f"b{bi}/conv1", h))
+            h = jax.nn.relu(conv2d(params, f"b{bi}/conv2", h))
+            h = maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(pallas_dense(params, "fc1", h))
+        logits = dense(params, "fc2", h)
+        return softmax_xent(logits, y), correct_count(logits, y)
+
+    return ModelDef(
+        name="vgg_sim",
+        x_shape=(32, 32, 3),
+        x_dtype="f32",
+        y_shape=(),
+        y_dtype="i32",
+        num_classes=n_classes,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )
+
+
+def make_svm(n_features: int = 12, l2: float = 1e-3) -> ModelDef:
+    """Linear SVM with hinge loss — chiller COP prediction (application iii).
+    Labels are +-1 (f32); `correct` counts positive-margin examples."""
+
+    def init(key):
+        return {
+            "svm/w": jax.random.normal(key, (n_features, 1), jnp.float32) * 0.01,
+            "svm/b": jnp.zeros((1,), jnp.float32),
+        }
+
+    def loss_and_metrics(params, x, y):
+        margin = (x @ params["svm/w"])[:, 0] + params["svm/b"][0]
+        hinge = jnp.maximum(0.0, 1.0 - y * margin)
+        loss = jnp.mean(hinge) + l2 * jnp.sum(params["svm/w"] ** 2)
+        correct = jnp.sum((y * margin > 0).astype(jnp.float32))
+        return loss, correct
+
+    return ModelDef(
+        name="svm_chiller",
+        x_shape=(n_features,),
+        x_dtype="f32",
+        y_shape=(),
+        y_dtype="f32",
+        num_classes=2,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )

@@ -1,0 +1,137 @@
+"""Shared model-definition plumbing: the ModelDef contract consumed by
+`compile.aot`, parameter initializers, and dense layers routed through the
+Layer-1 Pallas matmul (with a custom VJP so fwd AND bwd matmuls run the tiled
+kernel).
+"""
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul as _pallas_matmul
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    """Everything aot.py needs to lower one model family.
+
+    `loss_and_metrics(params, x, y) -> (mean_loss, correct_count)` where x is
+    a [B, *x_shape] batch and y is [B, *y_shape]; correct_count is an f32
+    scalar (number of correctly classified examples/tokens, or a margin
+    statistic for the SVM).
+    """
+
+    name: str
+    x_shape: Tuple[int, ...]
+    x_dtype: str  # "f32" | "i32"
+    y_shape: Tuple[int, ...]
+    y_dtype: str  # "i32" | "f32"
+    num_classes: int
+    init: Callable[[jax.Array], Params]
+    loss_and_metrics: Callable[[Params, jnp.ndarray, jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]
+
+    def loss(self, params: Params, x, y) -> jnp.ndarray:
+        return self.loss_and_metrics(params, x, y)[0]
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed dense layer with a custom VJP (pallas_call has no native AD).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _pmm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return _pallas_matmul(x, w)
+
+
+def _pmm_fwd(x, w):
+    return _pallas_matmul(x, w), (x, w)
+
+
+def _pmm_bwd(res, dz):
+    x, w = res
+    # Both backward matmuls also go through the tiled kernel.
+    dx = _pallas_matmul(dz, w.T)
+    dw = _pallas_matmul(x.T, dz)
+    return dx, dw
+
+
+_pmm.defvjp(_pmm_fwd, _pmm_bwd)
+
+
+def pallas_dense(params: Params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    """x[B, in] @ W[in, out] + b[out] with the matmul on the Pallas kernel."""
+    return _pmm(x, params[f"{prefix}/w"]) + params[f"{prefix}/b"]
+
+
+def dense(params: Params, prefix: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Plain XLA dense — used where the tiled kernel's interpret-mode lowering
+    would dominate AOT time (large transformer configs)."""
+    return x @ params[f"{prefix}/w"] + params[f"{prefix}/b"]
+
+
+# ---------------------------------------------------------------------------
+# Initializers (He/Glorot, deterministic under a passed PRNG key).
+# ---------------------------------------------------------------------------
+
+
+def he_init(key, shape, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def glorot_init(key, shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -lim, lim)
+
+
+def dense_params(key, prefix: str, n_in: int, n_out: int) -> Params:
+    kw, _ = jax.random.split(key)
+    return {
+        f"{prefix}/w": he_init(kw, (n_in, n_out)),
+        f"{prefix}/b": jnp.zeros((n_out,), jnp.float32),
+    }
+
+
+def conv_params(key, prefix: str, kh: int, kw_: int, c_in: int, c_out: int) -> Params:
+    kw, _ = jax.random.split(key)
+    fan_in = kh * kw_ * c_in
+    return {
+        f"{prefix}/w": he_init(kw, (kh, kw_, c_in, c_out), fan_in=fan_in),
+        f"{prefix}/b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def conv2d(params: Params, prefix: str, x: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC conv with SAME padding."""
+    w = params[f"{prefix}/w"]
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + params[f"{prefix}/b"]
+
+
+def maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; labels are int class ids with logits [..., C]."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def correct_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

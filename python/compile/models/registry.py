@@ -1,0 +1,67 @@
+"""Model registry: name -> (ModelDef, artifact variants to lower).
+
+`batch_sizes` lists the mini-batch shapes to emit; `k_steps` lists the
+lax.scan local-step counts per artifact (workers compose an arbitrary tau
+from these, e.g. tau=23 = 16+4+1+1+1 — see rust/src/runtime/executor.rs).
+The multi-batch variants on cnn_cifar serve the BatchTune baseline (Fig. 9).
+"""
+
+import dataclasses
+from typing import Dict, Tuple
+
+from .classifiers import make_cnn, make_mlp, make_svm, make_vgg_sim
+from .common import ModelDef
+from .rnn import make_rnn
+from .transformer import LmConfig, make_lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBuild:
+    model: ModelDef
+    batch_sizes: Tuple[int, ...] = (128,)
+    k_steps: Tuple[int, ...] = (1, 4, 16)
+    eval_batch: int = 256
+
+
+def _builds() -> Dict[str, ModelBuild]:
+    return {
+        "mlp_quick": ModelBuild(make_mlp(), batch_sizes=(32, 128)),
+        "cnn_cifar": ModelBuild(make_cnn(), batch_sizes=(32, 64, 128, 256)),
+        "vgg_sim": ModelBuild(make_vgg_sim(), batch_sizes=(32,), eval_batch=64),
+        "rnn_rail": ModelBuild(make_rnn(), batch_sizes=(128,)),
+        "svm_chiller": ModelBuild(make_svm(), batch_sizes=(128,)),
+        "lm_small": ModelBuild(
+            make_lm(LmConfig(name="lm_small")), batch_sizes=(16,), eval_batch=32
+        ),
+        "lm_e2e": ModelBuild(
+            make_lm(
+                # vocab sized so plain-SGD local updates learn the planted
+                # bigram corpus decisively within a few hundred steps on a
+                # 1-core CPU host (see examples/e2e_transformer.rs).
+                LmConfig(
+                    name="lm_e2e",
+                    vocab=512,
+                    seq_len=64,
+                    d_model=256,
+                    n_heads=8,
+                    n_layers=4,
+                    d_ff=1024,
+                )
+            ),
+            batch_sizes=(16,),
+            k_steps=(1, 4, 16),
+            eval_batch=32,
+        ),
+    }
+
+
+MODEL_CONFIGS = _builds()
+
+
+def get_model(name: str) -> ModelBuild:
+    try:
+        return MODEL_CONFIGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model '{name}'; available: {sorted(MODEL_CONFIGS)}"
+        ) from None

@@ -1,0 +1,58 @@
+"""GRU-RNN for high-speed-rail bogie fatigue prediction (paper application
+(ii), Appendix D.1). Input: a sequence of per-timestep feature vectors
+(historical stress, age, route, temperature); output: one of three fatigue
+levels. The proprietary rail dataset is substituted by synthetic AR sequences
+with class-dependent dynamics, generated in rust/src/data/rail.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, correct_count, dense_params, glorot_init, softmax_xent
+
+
+def make_rnn(
+    seq_len: int = 16, n_feat: int = 8, hidden: int = 64, n_classes: int = 3
+) -> ModelDef:
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {
+            # Fused GRU weights: [x; h] -> (reset, update, candidate) gates.
+            "gru/wx": glorot_init(ks[0], (n_feat, 3 * hidden)),
+            "gru/wh": glorot_init(ks[1], (hidden, 3 * hidden)),
+            "gru/b": jnp.zeros((3 * hidden,), jnp.float32),
+            **dense_params(ks[2], "head", hidden, n_classes),
+        }
+
+    def gru_cell(params, h, x_t):
+        gx = x_t @ params["gru/wx"] + params["gru/b"]
+        gh = h @ params["gru/wh"]
+        rx, zx, nx = jnp.split(gx, 3, axis=-1)
+        rh, zh, nh = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(rx + rh)
+        z = jax.nn.sigmoid(zx + zh)
+        n = jnp.tanh(nx + r * nh)
+        return (1.0 - z) * n + z * h
+
+    def loss_and_metrics(params, x, y):
+        # x: [B, T, F] -> scan over T.
+        b = x.shape[0]
+        h0 = jnp.zeros((b, hidden), jnp.float32)
+
+        def step(h, x_t):
+            return gru_cell(params, h, x_t), None
+
+        h_final, _ = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+        logits = h_final @ params["head/w"] + params["head/b"]
+        return softmax_xent(logits, y), correct_count(logits, y)
+
+    return ModelDef(
+        name="rnn_rail",
+        x_shape=(seq_len, n_feat),
+        x_dtype="f32",
+        y_shape=(),
+        y_dtype="i32",
+        num_classes=n_classes,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )

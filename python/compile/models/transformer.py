@@ -1,0 +1,104 @@
+"""Decoder-only transformer LM — the end-to-end driver workload.
+
+The paper's largest workload is VGG-16 (Fig. 11); the system-prompt-mandated
+end-to-end validation trains a transformer on a synthetic token corpus
+through the full ADSP stack. Config knobs scale it from the test-sized
+`lm_small` to the e2e `lm_e2e`; both lower through the same code path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, correct_count, glorot_init, softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    name: str
+    vocab: int = 256
+    seq_len: int = 32
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 128
+
+
+def make_lm(cfg: LmConfig) -> ModelDef:
+    d, h = cfg.d_model, cfg.n_heads
+    assert d % h == 0, "d_model must divide n_heads"
+    hd = d // h
+
+    def init(key):
+        ks = jax.random.split(key, 2 + 7 * cfg.n_layers)
+        p = {
+            "embed/tok": jax.random.normal(ks[0], (cfg.vocab, d), jnp.float32) * 0.02,
+            "embed/pos": jax.random.normal(ks[1], (cfg.seq_len, d), jnp.float32) * 0.02,
+            "final_ln/g": jnp.ones((d,), jnp.float32),
+            "final_ln/b": jnp.zeros((d,), jnp.float32),
+        }
+        ki = 2
+        for layer in range(cfg.n_layers):
+            pre = f"l{layer:02d}"
+            p[f"{pre}/ln1/g"] = jnp.ones((d,), jnp.float32)
+            p[f"{pre}/ln1/b"] = jnp.zeros((d,), jnp.float32)
+            p[f"{pre}/attn/wqkv"] = glorot_init(ks[ki], (d, 3 * d)); ki += 1
+            p[f"{pre}/attn/wo"] = glorot_init(ks[ki], (d, d)); ki += 1
+            p[f"{pre}/ln2/g"] = jnp.ones((d,), jnp.float32)
+            p[f"{pre}/ln2/b"] = jnp.zeros((d,), jnp.float32)
+            p[f"{pre}/mlp/w1"] = glorot_init(ks[ki], (d, cfg.d_ff)); ki += 1
+            p[f"{pre}/mlp/b1"] = jnp.zeros((cfg.d_ff,), jnp.float32)
+            p[f"{pre}/mlp/w2"] = glorot_init(ks[ki], (cfg.d_ff, d)); ki += 1
+            p[f"{pre}/mlp/b2"] = jnp.zeros((d,), jnp.float32)
+        p["head/w"] = glorot_init(ks[ki], (d, cfg.vocab))
+        return p
+
+    def layer_norm(x, g, b):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+    def attention(p, pre, x):
+        b, t, _ = x.shape
+        qkv = x @ p[f"{pre}/attn/wqkv"]  # [B,T,3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, h, hd).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+        q, k, v = heads(q), heads(k), heads(v)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        att = jnp.where(mask, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+        return out @ p[f"{pre}/attn/wo"]
+
+    def loss_and_metrics(params, x, y):
+        # x, y: [B, T] int32 (y = x shifted by one, built by the data layer).
+        emb = params["embed/tok"][x] + params["embed/pos"][None, :, :]
+        z = emb
+        for layer in range(cfg.n_layers):
+            pre = f"l{layer:02d}"
+            z = z + attention(
+                params, pre, layer_norm(z, params[f"{pre}/ln1/g"], params[f"{pre}/ln1/b"])
+            )
+            zn = layer_norm(z, params[f"{pre}/ln2/g"], params[f"{pre}/ln2/b"])
+            ff = jax.nn.gelu(zn @ params[f"{pre}/mlp/w1"] + params[f"{pre}/mlp/b1"])
+            z = z + ff @ params[f"{pre}/mlp/w2"] + params[f"{pre}/mlp/b2"]
+        z = layer_norm(z, params["final_ln/g"], params["final_ln/b"])
+        logits = z @ params["head/w"]  # [B,T,V]
+        return softmax_xent(logits, y), correct_count(logits, y)
+
+    return ModelDef(
+        name=cfg.name,
+        x_shape=(cfg.seq_len,),
+        x_dtype="i32",
+        y_shape=(cfg.seq_len,),
+        y_dtype="i32",
+        num_classes=cfg.vocab,
+        init=init,
+        loss_and_metrics=loss_and_metrics,
+    )

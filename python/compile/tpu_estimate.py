@@ -1,0 +1,104 @@
+"""Structural TPU resource estimates for the Layer-1 Pallas kernels.
+
+interpret=True gives CPU-numpy timings only, so real-TPU performance is
+*estimated* from the block schedule (DESIGN.md §Hardware-Adaptation): VMEM
+footprint per grid step, MXU utilization of the matmul tiles, and the
+HBM-bandwidth-bound time of the streaming kernels. This tool prints the
+table recorded in DESIGN.md/EXPERIMENTS.md and is unit-tested so the
+estimates stay in sync with the kernel defaults.
+
+Usage: python -m compile.tpu_estimate
+"""
+
+import dataclasses
+
+# TPU v4-ish single-core envelope (order-of-magnitude planning numbers).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_FLOPS = 137e12  # bf16; f32 accumulate ~ half
+HBM_BW = 1.2e12  # bytes/s
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulEstimate:
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def vmem_bytes(self) -> int:
+        """x-tile + y-tile + accumulator tile, double-buffered inputs."""
+        single = (self.bm * self.bk + self.bk * self.bn + self.bm * self.bn) * F32
+        return single + (self.bm * self.bk + self.bk * self.bn) * F32  # 2x in-flight
+
+    @property
+    def vmem_fraction(self) -> float:
+        return self.vmem_bytes / VMEM_BYTES
+
+    def mxu_utilization(self, m: int, n: int, k: int) -> float:
+        """Fraction of MXU lanes busy: tiles that are multiples of 128 run
+        full; ragged edges idle lanes proportionally."""
+
+        def eff(dim: int, block: int) -> float:
+            b = min(dim, block)
+            full = (b // 128) * 128
+            return full / b if full else b / 128.0
+
+        return eff(m, self.bm) * eff(n, self.bn) * eff(k, self.bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEstimate:
+    """Elementwise streaming kernel (fused local step / commit apply)."""
+
+    n_elements: int
+    reads_per_element: int
+    writes_per_element: int
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.n_elements * F32 * (self.reads_per_element + self.writes_per_element)
+
+    @property
+    def hbm_bound_secs(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+
+def kernel_table() -> list[dict]:
+    from .kernels import matmul as _m  # defaults live on the kernel
+
+    defaults = _m.__kwdefaults__ or {"bm": 256, "bn": 256, "bk": 512}
+    mm = MatmulEstimate(defaults["bm"], defaults["bn"], defaults["bk"])
+    rows = [
+        {
+            "kernel": "matmul (tiled)",
+            "blocks": f"{mm.bm}x{mm.bn}x{mm.bk}",
+            "vmem_bytes": mm.vmem_bytes,
+            "vmem_fraction": round(mm.vmem_fraction, 4),
+            "mxu_util_2048x64x2048": round(mm.mxu_utilization(2048, 64, 2048), 3),
+        }
+    ]
+    for name, (r, w) in {
+        "fused_local_step": (3, 2),  # read p,u,g; write p',u'
+        "apply_commit": (2, 1),
+        "apply_commit_momentum": (3, 2),
+    }.items():
+        est = StreamEstimate(5_300_000, r, w)  # lm_e2e-scale leaf set
+        rows.append(
+            {
+                "kernel": name,
+                "blocks": "whole-leaf (interpret) / 1<<20 (TPU)",
+                "hbm_bytes": est.hbm_bytes,
+                "hbm_bound_us": round(est.hbm_bound_secs * 1e6, 1),
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    for row in kernel_table():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

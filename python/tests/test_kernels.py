@@ -1,0 +1,154 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes (and the LM path over dtypes) with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    apply_commit,
+    apply_commit_momentum,
+    fused_local_step,
+    matmul,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand(kx, (m, k))
+    y = rand(ky, (k, n))
+    got = matmul(x, y)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (128, 128, 128), (1, 1, 1)])
+def test_matmul_block_shapes(blocks):
+    bm, bn, bk = blocks
+    key = jax.random.PRNGKey(0)
+    x = rand(key, (48, 72))
+    y = rand(key, (72, 40))
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((2, 3))
+    y = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        matmul(x, y)
+
+
+def test_matmul_under_jit_and_grad():
+    """The custom-vjp dense layer (models.common._pmm) must differentiate."""
+    from compile.models.common import _pmm
+
+    key = jax.random.PRNGKey(1)
+    x = rand(key, (8, 16))
+    w = rand(key, (16, 4))
+
+    def loss(w):
+        return jnp.sum(_pmm(x, w) ** 2)
+
+    g = jax.jit(jax.grad(loss))(w)
+    # Reference gradient: 2 x^T (x w).
+    want = 2.0 * x.T @ (x @ w)
+    np.testing.assert_allclose(g, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused local step / applies
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    eta=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_local_step_matches_ref(n, eta, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    p, u, g = rand(k1, (n,)), rand(k2, (n,)), rand(k3, (n,))
+    p2, u2 = fused_local_step(p, u, g, eta)
+    rp, ru = ref.fused_local_step(p, u, g, eta)
+    np.testing.assert_allclose(p2, rp, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(u2, ru, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    shape=st.sampled_from([(7,), (3, 5), (2, 3, 4), (129,), (1,)]),
+    eta=st.floats(1e-4, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apply_commit_matches_ref(shape, eta, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w, u = rand(k1, shape), rand(k2, shape)
+    got = apply_commit(w, u, eta)
+    np.testing.assert_allclose(got, ref.apply_commit(w, u, eta), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3000),
+    eta=st.floats(1e-4, 0.5),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apply_momentum_matches_ref(n, eta, mu, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w, u, v = rand(k1, (n,)), rand(k2, (n,)), rand(k3, (n,))
+    gw, gv = apply_commit_momentum(w, u, v, eta, mu)
+    rw, rv = ref.apply_commit_momentum(w, u, v, eta, mu)
+    np.testing.assert_allclose(gw, rw, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(gv, rv, rtol=1e-6, atol=1e-6)
+
+
+def test_apply_momentum_zero_mu_equals_plain():
+    key = jax.random.PRNGKey(3)
+    w, u = rand(key, (64,)), rand(key, (64,))
+    v = jnp.zeros(64)
+    gw, _ = apply_commit_momentum(w, u, v, 0.1, 0.0)
+    np.testing.assert_allclose(gw, apply_commit(w, u, 0.1), rtol=1e-6)
+
+
+def test_kernels_compose_as_sgd():
+    """tau local steps then a PS apply must equal plain SGD bookkeeping."""
+    key = jax.random.PRNGKey(4)
+    p = rand(key, (32,))
+    w_global = p
+    u = jnp.zeros(32)
+    eta_p, eta_g = 0.05, 0.5
+    gs = [rand(jax.random.PRNGKey(10 + i), (32,)) for i in range(4)]
+    for g in gs:
+        p, u = fused_local_step(p, u, g, eta_p)
+    # p = w0 - eta_p * sum(g);  U = eta_p * sum(g).
+    total = eta_p * sum(gs)
+    np.testing.assert_allclose(p, w_global - total, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(u, total, rtol=1e-5, atol=1e-6)
+    w2 = apply_commit(w_global, u, eta_g)
+    np.testing.assert_allclose(w2, w_global - eta_g * total, rtol=1e-5, atol=1e-6)

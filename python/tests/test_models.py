@@ -1,0 +1,144 @@
+"""L2 correctness: model shape contracts, gradient sanity, and the semantic
+checks of the lowered step functions (local_steps / eval / applies)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    make_apply_fn,
+    make_apply_momentum_fn,
+    make_eval_fn,
+    make_local_steps_fn,
+    param_order,
+)
+from compile.models.registry import MODEL_CONFIGS, get_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL_MODELS = ["mlp_quick", "svm_chiller", "rnn_rail", "cnn_cifar", "lm_small"]
+
+
+def fake_batch(model, rng, k, b):
+    if model.x_dtype == "f32":
+        xs = rng.standard_normal((k, b, *model.x_shape), dtype=np.float32)
+    else:
+        xs = rng.integers(0, model.num_classes, (k, b, *model.x_shape)).astype(np.int32)
+    if model.y_dtype == "i32":
+        ys = rng.integers(0, model.num_classes, (k, b, *model.y_shape)).astype(np.int32)
+    else:
+        ys = np.where(rng.random((k, b, *model.y_shape)) < 0.5, -1.0, 1.0).astype(np.float32)
+    return jnp.asarray(xs), jnp.asarray(ys)
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_init_deterministic_and_finite(name):
+    model = get_model(name).model
+    p1 = model.init(jax.random.PRNGKey(0))
+    p2 = model.init(jax.random.PRNGKey(0))
+    p3 = model.init(jax.random.PRNGKey(1))
+    assert sorted(p1) == param_order(p1)
+    some_differ = False
+    for k in p1:
+        assert p1[k].dtype == jnp.float32
+        assert bool(jnp.all(jnp.isfinite(p1[k])))
+        np.testing.assert_array_equal(p1[k], p2[k])
+        if p1[k].size and not np.array_equal(np.asarray(p1[k]), np.asarray(p3[k])):
+            some_differ = True
+    assert some_differ, "different seeds must give different params"
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_loss_and_metrics_contract(name):
+    model = get_model(name).model
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    x, y = fake_batch(model, rng, 1, 8)
+    loss, correct = model.loss_and_metrics(params, x[0], y[0])
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    denom = 8 * int(np.prod(model.y_shape)) if model.y_shape else 8
+    assert 0.0 <= float(correct) <= denom
+
+
+@pytest.mark.parametrize("name", SMALL_MODELS)
+def test_local_steps_semantics(name):
+    """params' = params − η′·Σg and U' = U + η′·Σg, loss finite per step."""
+    model = get_model(name).model
+    params = model.init(jax.random.PRNGKey(0))
+    u0 = {k: jnp.zeros_like(v) for k, v in params.items()}
+    rng = np.random.default_rng(1)
+    k_steps, b = 3, 4
+    xs, ys = fake_batch(model, rng, k_steps, b)
+    eta = 0.01
+
+    local = make_local_steps_fn(model)
+    p2, u2, losses = jax.jit(local)(params, u0, xs, ys, eta)
+    assert losses.shape == (k_steps,)
+    assert bool(jnp.all(jnp.isfinite(losses)))
+    # Conservation: for every leaf, params' + U' == params + U (both sides
+    # accumulate ±η′g symmetrically).
+    for key in params:
+        lhs = p2[key] + u2[key]
+        rhs = params[key] + u0[key]
+        np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-5)
+    # And U actually moved (gradients are nonzero).
+    moved = sum(float(jnp.sum(jnp.abs(u2[k]))) for k in u2)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("name", ["mlp_quick", "svm_chiller"])
+def test_training_reduces_loss_on_fixed_batch(name):
+    model = get_model(name).model
+    params = model.init(jax.random.PRNGKey(0))
+    u = {k: jnp.zeros_like(v) for k, v in params.items()}
+    rng = np.random.default_rng(2)
+    xs, ys = fake_batch(model, rng, 1, 32)
+    local = jax.jit(make_local_steps_fn(model))
+    first = None
+    for _ in range(30):
+        params, u, losses = local(params, u, xs, ys, 0.05)
+        if first is None:
+            first = float(losses[0])
+    assert float(losses[-1]) < first, f"loss did not drop: {first} -> {losses[-1]}"
+
+
+def test_eval_fn_matches_loss_and_metrics():
+    model = get_model("mlp_quick").model
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    x, y = fake_batch(model, rng, 1, 16)
+    ev = jax.jit(make_eval_fn(model))
+    loss, correct = ev(params, x[0], y[0])
+    loss2, correct2 = model.loss_and_metrics(params, x[0], y[0])
+    np.testing.assert_allclose(loss, loss2, rtol=1e-6)
+    np.testing.assert_allclose(correct, correct2)
+
+
+def test_apply_fns_match_reference():
+    model = get_model("mlp_quick").model
+    w = model.init(jax.random.PRNGKey(0))
+    u = {k: jnp.ones_like(v) * 0.1 for k, v in w.items()}
+    vel = {k: jnp.zeros_like(v) for k, v in w.items()}
+    eta, mu = 0.5, 0.9
+
+    w2 = jax.jit(make_apply_fn())(w, u, eta)
+    for k in w:
+        np.testing.assert_allclose(w2[k], w[k] - eta * u[k], rtol=1e-6)
+
+    w3, v3 = jax.jit(make_apply_momentum_fn())(w, u, vel, eta, mu)
+    for k in w:
+        np.testing.assert_allclose(v3[k], -eta * u[k], rtol=1e-6)
+        np.testing.assert_allclose(w3[k], w[k] - eta * u[k], rtol=1e-6)
+
+
+def test_registry_contents():
+    for name in ["mlp_quick", "cnn_cifar", "vgg_sim", "rnn_rail", "svm_chiller", "lm_small", "lm_e2e"]:
+        build = get_model(name)
+        assert build.model.name == name
+        assert 1 in build.k_steps, "k=1 variant required for tau composition"
+        assert build.batch_sizes
+    with pytest.raises(KeyError):
+        get_model("nonexistent")
+    assert set(SMALL_MODELS) <= set(MODEL_CONFIGS)

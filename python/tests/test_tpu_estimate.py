@@ -1,0 +1,38 @@
+"""The structural TPU estimates must stay consistent with the kernel
+defaults and the VMEM budget claimed in DESIGN.md §Hardware-Adaptation."""
+
+from compile.tpu_estimate import (
+    MatmulEstimate,
+    StreamEstimate,
+    VMEM_BYTES,
+    kernel_table,
+)
+
+
+def test_default_matmul_tiles_fit_vmem_with_double_buffering():
+    rows = kernel_table()
+    mm = rows[0]
+    assert mm["kernel"].startswith("matmul")
+    assert mm["vmem_bytes"] < VMEM_BYTES / 4, "tiles must leave double-buffer headroom"
+    assert 0.0 < mm["vmem_fraction"] < 0.25
+
+
+def test_mxu_utilization_full_on_aligned_tiles():
+    mm = MatmulEstimate(256, 256, 512)
+    assert mm.mxu_utilization(2048, 2048, 2048) == 1.0
+    # Ragged N dimension idles lanes.
+    assert mm.mxu_utilization(2048, 64, 2048) < 1.0
+    assert mm.mxu_utilization(2048, 64, 2048) > 0.0
+
+
+def test_stream_estimates_scale_linearly():
+    a = StreamEstimate(1_000_000, 3, 2)
+    b = StreamEstimate(2_000_000, 3, 2)
+    assert b.hbm_bytes == 2 * a.hbm_bytes
+    assert a.hbm_bytes == 1_000_000 * 4 * 5
+    assert a.hbm_bound_secs > 0
+
+
+def test_table_covers_all_kernels():
+    names = {r["kernel"] for r in kernel_table()}
+    assert {"fused_local_step", "apply_commit", "apply_commit_momentum"} <= names

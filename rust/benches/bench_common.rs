@@ -1,0 +1,14 @@
+//! Shared bench plumbing (criterion is unavailable offline; see
+//! `adsp::util::bench`). Each figure bench regenerates its paper series at
+//! bench scale, asserts the headline shape, and times a representative unit.
+
+use adsp::runtime::artifacts_root;
+
+pub fn artifacts_ready() -> bool {
+    if artifacts_root().join("mlp_quick/manifest.json").is_file() {
+        true
+    } else {
+        eprintln!("SKIP bench: artifacts not built (run `make artifacts`)");
+        false
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench harness for paper fig10: regenerates the series at bench scale
+//! (see `adsp::experiments::fig10` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig10 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig10", Scale::Bench).expect("fig10 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig10 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let bw = table.filter_rows("series", "a_bandwidth");
+    let bw_idx = table.header.iter().position(|h| h == "bandwidth_mb_per_s").unwrap();
+    let get = |n: &str| -> f64 {
+        bw.iter().find(|r| r[1] == n).unwrap()[bw_idx].parse().unwrap()
+    };
+    // Paper shape: per-step committers use the most bandwidth.
+    assert!(get("bsp") >= get("fixed_adacomm"), "BSP should out-consume Fixed ADACOMM");
+
+
+    // Ablation unit: PS apply native vs XLA artifact.
+    let rt = adsp::runtime::ModelRuntime::load_by_name("mlp_quick").unwrap();
+    rt.warmup().unwrap();
+    let init = rt.init_params().unwrap();
+    let mut u = init.zeros_like();
+    for leaf in &mut u.leaves {
+        for (i, v) in leaf.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+    }
+    let h = BenchHarness::new("fig10").with_iters(3, 30);
+    let mut w1 = init.clone();
+    h.run("ps_apply_native", || adsp::runtime::native::apply_commit(&mut w1, &u, 0.1));
+    let mut w2 = init.clone();
+    h.run("ps_apply_xla_artifact", || rt.apply_commit(&mut w2, &u, 0.1).unwrap());
+}

@@ -1,0 +1,35 @@
+//! Bench harness for paper fig11: regenerates the series at bench scale
+//! (see `adsp::experiments::fig11` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig11 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig11", Scale::Bench).expect("fig11 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig11 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let names: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
+    assert!(names.contains(&"adsp") && names.contains(&"bsp"));
+
+
+    let rt = adsp::runtime::ModelRuntime::load_by_name("vgg_sim").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let mut src = adsp::data::make_source(&rt.manifest, 0, 0);
+    let h = BenchHarness::new("fig11").with_iters(0, 2);
+    h.run("vgg_sim_local_step_b32", || {
+        let (xs, ys) = src.sample_batch(1, 32);
+        rt.local_steps(&mut params, &mut u, &xs, &ys, 0.01).unwrap().len()
+    });
+}

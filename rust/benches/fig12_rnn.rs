@@ -1,0 +1,37 @@
+//! Bench harness for paper fig12: regenerates the series at bench scale
+//! (see `adsp::experiments::fig12` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig12 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig12", Scale::Bench).expect("fig12 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig12 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let conv = table.column_f64("convergence_time_s");
+    let names: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
+    let t = |n: &str| conv[names.iter().position(|&x| x == n).unwrap()];
+    assert!(t("adsp") <= t("bsp") * 1.05, "paper shape: ADSP ~fastest on the RNN");
+
+
+    let rt = adsp::runtime::ModelRuntime::load_by_name("rnn_rail").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let mut src = adsp::data::make_source(&rt.manifest, 0, 0);
+    let h = BenchHarness::new("fig12").with_iters(2, 10);
+    h.run("rnn_local_steps_k4_b128", || {
+        let (xs, ys) = src.sample_batch(4, 128);
+        rt.local_steps(&mut params, &mut u, &xs, &ys, 0.01).unwrap().len()
+    });
+}

@@ -1,0 +1,37 @@
+//! Bench harness for paper fig1: regenerates the series at bench scale
+//! (see `adsp::experiments::fig1` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig1 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig1", Scale::Bench).expect("fig1 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig1 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let wf = table.column_f64("wait_fraction");
+    let names: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
+    let adsp = names.iter().position(|&n| n == "adsp").unwrap();
+    assert!(wf[adsp] < 0.15, "paper shape: ADSP waiting ~0 (got {})", wf[adsp]);
+
+
+    // Unit: one full bench-scale ADSP run on the motivating cluster.
+    let h = BenchHarness::new("fig1").with_iters(0, 3);
+    h.run("adsp_3worker_run", || {
+        let cluster = adsp::config::profiles::ratio_cluster(&[1.0, 1.0, 3.0], 2.0, 0.3);
+        let mut spec = adsp::experiments::common::bench_spec(adsp::sync::SyncModelKind::Adsp, cluster);
+        spec.max_virtual_secs = 120.0;
+        spec.max_total_steps = 2000;
+        adsp::simulation::SimEngine::new(spec).unwrap().run().unwrap().total_steps
+    });
+}

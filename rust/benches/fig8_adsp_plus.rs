@@ -1,0 +1,32 @@
+//! Bench harness for paper fig8: regenerates the series at bench scale
+//! (see `adsp::experiments::fig8` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig8 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig8", Scale::Bench).expect("fig8 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig8 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    assert!(table.filter_rows("variant", "adsp").len() == 1);
+    assert!(table.filter_rows("variant", "adsp_plus_best").len() == 1);
+
+
+    let h = BenchHarness::new("fig8").with_iters(2, 20);
+    h.run("no_waiting_tau_derivation", || {
+        let cluster = adsp::config::profiles::ratio_cluster(&[1.0, 1.0, 2.0, 3.0], 1.0, 0.3);
+        let spec = adsp::config::SyncSpec::new(adsp::sync::SyncModelKind::AdspPlus);
+        adsp::sync::AdspPlusPolicy::no_waiting_tau(&spec, &cluster).len()
+    });
+}

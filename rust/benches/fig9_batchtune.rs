@@ -1,0 +1,32 @@
+//! Bench harness for paper fig9: regenerates the series at bench scale
+//! (see `adsp::experiments::fig9` docs for the workload and the paper shape
+//! being reproduced), asserts the headline shape, and times the figure's
+//! representative hot-path unit. Full-size: `adsp experiment fig9 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::util::BenchHarness;
+
+fn main() {
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig9", Scale::Bench).expect("fig9 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig9 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    let conv = table.column_f64("convergence_time_s");
+    let names: Vec<&str> = table.rows.iter().map(|r| r[0].as_str()).collect();
+    let t = |n: &str| conv[names.iter().position(|&x| x == n).unwrap()];
+    assert!(t("adsp") <= t("bsp"), "paper shape: ADSP still fastest");
+
+
+    let h = BenchHarness::new("fig9").with_iters(2, 50);
+    h.run("assign_batchtune_sizes", || {
+        adsp::sync::assign_batchtune_sizes(&[1.0, 1.0, 2.0, 3.0], 128, &[32, 64, 128, 256])
+    });
+}

@@ -1,0 +1,8 @@
+//! Configuration system: cluster/sync/experiment specs (TOML-loadable) and
+//! the paper's heterogeneity profiles (Tables 1 & 2).
+
+pub mod profiles;
+pub mod spec;
+
+pub use profiles::{ec2_cluster, geekbench_cluster, ratio_cluster, scale_speeds_to_heterogeneity};
+pub use spec::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};

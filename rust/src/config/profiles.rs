@@ -1,0 +1,188 @@
+//! Heterogeneity profiles from the paper.
+//!
+//! * Table 1 — the 19-instance EC2 testbed (7×t2.large, 5×t2.xlarge,
+//!   4×t2.2xlarge, 2×t3.xlarge workers + 1×t3.2xlarge PS). Relative training
+//!   speeds are proportional to vCPU counts within a family, with the t3
+//!   burst advantage folded in (the paper reports a 1:1:3 step-time ratio
+//!   across its 3-worker motivating experiment; the full table spans ~4×).
+//! * Table 2 — the 2018 US smartphone share with Geekbench multi-core
+//!   scores; speeds are proportional to the scores, workers sampled from the
+//!   share distribution.
+
+use crate::config::{ClusterSpec, WorkerSpec};
+use crate::util::Rng;
+
+/// Relative speed (steps/s) per EC2 instance type, vCPU-scaled.
+const EC2_TYPES: &[(&str, f64, usize)] = &[
+    // (type, relative speed, worker count) — Table 1 worker rows.
+    ("t2.large", 1.0, 7),
+    ("t2.xlarge", 2.0, 5),
+    ("t2.2xlarge", 4.0, 4),
+    ("t3.xlarge", 2.6, 2),
+];
+
+/// Geekbench 4 multi-core scores and US market shares (Table 2).
+const GEEKBENCH: &[(&str, f64, f64)] = &[
+    ("iPhone 6", 2759.0, 0.0622),
+    ("iPhone 6S", 4459.0, 0.0777),
+    ("iPhone 6S Plus", 4459.0, 0.0434),
+    ("iPhone SE", 4459.0, 0.0389),
+    ("iPhone 7", 5937.0, 0.1205),
+    ("iPhone 7 Plus", 5937.0, 0.0996),
+    ("Samsung Galaxy S8", 6711.0, 0.0296),
+    ("iPhone 8 Plus", 11421.0, 0.0568),
+    ("iPhone X", 11421.0, 0.0500),
+    ("iPhone 8", 11421.0, 0.0404),
+];
+
+/// The paper's Table-1 testbed, scaled to `n` workers (18 = the paper's
+/// worker count; 36 = the scalability experiment, "same distribution").
+///
+/// `base_speed` is the steps/s of the slowest class (t2.large); `comm` is
+/// the baseline commit round-trip in seconds.
+pub fn ec2_cluster(n: usize, base_speed: f64, comm: f64) -> ClusterSpec {
+    let total: usize = EC2_TYPES.iter().map(|&(_, _, c)| c).sum();
+    let mut workers = Vec::with_capacity(n);
+    'outer: loop {
+        for &(_, rel, count) in EC2_TYPES {
+            let scaled = (count * n).div_ceil(total).max(1);
+            for _ in 0..scaled {
+                if workers.len() == n {
+                    break 'outer;
+                }
+                workers.push(WorkerSpec::new(base_speed * rel, comm));
+            }
+        }
+        if workers.len() >= n {
+            break;
+        }
+    }
+    ClusterSpec::new(workers)
+}
+
+/// Sample `n` workers from the Table-2 smartphone distribution; speeds are
+/// Geekbench-score-proportional, normalized so the slowest device trains at
+/// `base_speed` steps/s.
+pub fn geekbench_cluster(n: usize, base_speed: f64, comm: f64, seed: u64) -> ClusterSpec {
+    let mut rng = Rng::new(seed ^ 0x6eeb);
+    let share_sum: f64 = GEEKBENCH.iter().map(|&(_, _, s)| s).sum();
+    let min_score = GEEKBENCH.iter().map(|&(_, sc, _)| sc).fold(f64::INFINITY, f64::min);
+    let mut workers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut u = rng.next_f64() * share_sum;
+        let mut score = GEEKBENCH[GEEKBENCH.len() - 1].1;
+        for &(_, sc, s) in GEEKBENCH {
+            if u < s {
+                score = sc;
+                break;
+            }
+            u -= s;
+        }
+        workers.push(WorkerSpec::new(base_speed * score / min_score, comm));
+    }
+    ClusterSpec::new(workers)
+}
+
+/// The paper's motivating 3-worker cluster with a 1:1:3 step-*time* ratio
+/// (so speeds 1, 1, 1/3), generalized to any time-ratio list.
+pub fn ratio_cluster(time_ratios: &[f64], base_speed: f64, comm: f64) -> ClusterSpec {
+    ClusterSpec::new(
+        time_ratios.iter().map(|&r| WorkerSpec::new(base_speed / r, comm)).collect(),
+    )
+}
+
+/// Rescale a cluster's speeds to hit a target heterogeneity degree
+/// H = mean(v)/min(v) (Fig. 5: the paper tunes per-worker sleeps). Keeps the
+/// fastest worker fixed and slows the bottom half.
+pub fn scale_speeds_to_heterogeneity(cluster: &ClusterSpec, target_h: f64) -> ClusterSpec {
+    assert!(target_h >= 1.0, "H must be >= 1");
+    let mut c = cluster.clone();
+    let m = c.m();
+    if m < 2 || target_h == 1.0 {
+        for w in &mut c.workers {
+            w.speed = 1.0;
+        }
+        return c;
+    }
+    // Linear speed ramp v_i = min_v + (max_v - min_v) * i/(m-1) has
+    // H = mean/min = (min + (max-min)/2)/min. Solve for min given max=1:
+    //   H = (min + (1-min)/2)/min  ⇒  min = 1 / (2H - 1).
+    let min_v = 1.0 / (2.0 * target_h - 1.0);
+    // Assign the ramp against the original speed ordering (slowest stays
+    // slowest), preserving the cluster's rank structure.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| cluster.workers[a].speed.total_cmp(&cluster.workers[b].speed));
+    for (rank, &idx) in order.iter().enumerate() {
+        let f = rank as f64 / (m - 1) as f64;
+        c.workers[idx].speed = min_v + (1.0 - min_v) * f;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ec2_18_worker_distribution() {
+        let c = ec2_cluster(18, 1.0, 0.2);
+        assert_eq!(c.m(), 18);
+        // Contains all four speed classes.
+        let speeds = c.speeds();
+        for rel in [1.0, 2.0, 4.0, 2.6] {
+            assert!(speeds.iter().any(|&s| (s - rel).abs() < 1e-9), "missing class {rel}");
+        }
+        assert!(c.heterogeneity() > 1.5);
+    }
+
+    #[test]
+    fn ec2_36_same_shape() {
+        let c18 = ec2_cluster(18, 1.0, 0.2);
+        let c36 = ec2_cluster(36, 1.0, 0.2);
+        assert_eq!(c36.m(), 36);
+        assert!((c18.heterogeneity() - c36.heterogeneity()).abs() < 0.4);
+    }
+
+    #[test]
+    fn geekbench_sampling() {
+        let c = geekbench_cluster(100, 1.0, 0.2, 7);
+        assert_eq!(c.m(), 100);
+        let min = c.speeds().iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = c.speeds().iter().cloned().fold(0.0, f64::max);
+        assert!(min >= 1.0 - 1e-9);
+        // iPhone 8-class devices are ~4.1x the iPhone 6.
+        assert!(max <= 11421.0 / 2759.0 + 1e-9);
+        assert!(max > 2.0, "sampling should hit a fast class in 100 draws");
+    }
+
+    #[test]
+    fn ratio_cluster_matches_paper_motivation() {
+        let c = ratio_cluster(&[1.0, 1.0, 3.0], 1.0, 0.2);
+        let v = c.speeds();
+        assert_eq!(v.len(), 3);
+        assert!((v[0] - 1.0).abs() < 1e-9 && (v[2] - 1.0 / 3.0).abs() < 1e-9);
+        // H = mean/min = (7/9)/(1/3) = 7/3 ≈ 2.33.
+        assert!((c.heterogeneity() - 7.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneity_scaling_hits_target() {
+        let base = ec2_cluster(18, 1.0, 0.2);
+        for h in [1.1, 1.6, 2.3, 3.2] {
+            let c = scale_speeds_to_heterogeneity(&base, h);
+            assert!((c.heterogeneity() - h).abs() < 0.05, "H={} got {}", h, c.heterogeneity());
+        }
+    }
+
+    #[test]
+    fn heterogeneity_scaling_preserves_rank() {
+        let base = ec2_cluster(18, 1.0, 0.2);
+        let c = scale_speeds_to_heterogeneity(&base, 2.0);
+        let mut pairs: Vec<(f64, f64)> =
+            base.speeds().into_iter().zip(c.speeds()).collect();
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in pairs.windows(2) {
+            assert!(w[0].1 <= w[1].1 + 1e-9, "rank order broken");
+        }
+    }
+}

@@ -1,0 +1,435 @@
+//! Experiment specifications — the framework's user-facing config surface.
+//! Specs are plain structs with JSON load/save (see `util::json`; this
+//! environment ships no serde/toml): `adsp train --config spec.json`.
+
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sync::SyncModelKind;
+use crate::util::Json;
+
+/// One edge worker: relative training speed and communication overhead.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    /// Steps per (virtual) second at the model's reference batch size.
+    pub speed: f64,
+    /// Commit round-trip time O_i in seconds (push U + pull W).
+    pub comm_secs: f64,
+    /// Mini-batch size; 0 = use the experiment default.
+    pub batch_size: usize,
+}
+
+impl WorkerSpec {
+    pub fn new(speed: f64, comm_secs: f64) -> Self {
+        WorkerSpec { speed, comm_secs, batch_size: 0 }
+    }
+}
+
+/// The emulated cluster: one PS + workers.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub workers: Vec<WorkerSpec>,
+}
+
+impl ClusterSpec {
+    pub fn new(workers: Vec<WorkerSpec>) -> Self {
+        ClusterSpec { workers }
+    }
+
+    pub fn m(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn speeds(&self) -> Vec<f64> {
+        self.workers.iter().map(|w| w.speed).collect()
+    }
+
+    pub fn comms(&self) -> Vec<f64> {
+        self.workers.iter().map(|w| w.comm_secs).collect()
+    }
+
+    /// Heterogeneity degree H = mean(v) / min(v) (paper §5.2).
+    pub fn heterogeneity(&self) -> f64 {
+        let v = self.speeds();
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        mean / min
+    }
+
+    /// Add a constant extra delay to every worker's comm time (Fig. 6).
+    pub fn with_extra_delay(mut self, extra: f64) -> Self {
+        for w in &mut self.workers {
+            w.comm_secs += extra;
+        }
+        self
+    }
+}
+
+/// Synchronization-model selection + hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct SyncSpec {
+    pub kind: SyncModelKind,
+    /// SSP staleness bound.
+    pub staleness: u64,
+    /// (Fixed) ADACOMM tau.
+    pub tau: u64,
+    /// ADSP check period Γ (seconds).
+    pub gamma: f64,
+    /// ADSP epoch length (seconds).
+    pub epoch_secs: f64,
+    /// ADSP online-evaluation window per candidate (seconds).
+    pub eval_window_secs: f64,
+    /// ADSP+ per-worker local-step counts (empty = derive from speeds).
+    pub tau_per_worker: Vec<u64>,
+    /// Explicit PS momentum (Fig. 3(c) sweep); 0 = plain SGD apply.
+    pub ps_momentum: f64,
+    /// Fixed uniform commit rate for the Fig. 3(a) sweep (0 = adaptive).
+    pub fixed_delta_c: u64,
+}
+
+impl SyncSpec {
+    pub fn new(kind: SyncModelKind) -> Self {
+        SyncSpec {
+            kind,
+            staleness: 3,
+            tau: 8,
+            gamma: 60.0,
+            epoch_secs: 1200.0,
+            eval_window_secs: 60.0,
+            tau_per_worker: Vec::new(),
+            ps_momentum: 0.0,
+            fixed_delta_c: 0,
+        }
+    }
+
+    pub fn with_tau(mut self, tau: u64) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn with_staleness(mut self, s: u64) -> Self {
+        self.staleness = s;
+        self
+    }
+
+    pub fn with_gamma(mut self, gamma: f64) -> Self {
+        self.gamma = gamma;
+        self
+    }
+}
+
+/// A full experiment: model + cluster + sync model + stopping rule.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    pub model: String,
+    pub cluster: ClusterSpec,
+    pub sync: SyncSpec,
+    /// Default mini-batch size (paper default 128; must exist as a variant).
+    pub batch_size: usize,
+    /// Initial local learning rate η′ (paper: 0.1, exponential decay).
+    pub eta_prime0: f64,
+    /// η′ exponential-decay time constant in virtual seconds (0 = no decay).
+    pub eta_decay_secs: f64,
+    /// Global learning rate η; 0 = the paper's default 1/M.
+    pub eta_global: f64,
+    /// Evaluation cadence in virtual seconds.
+    pub eval_interval_secs: f64,
+    /// Stop when converged (loss-variance rule) or at this many virtual secs.
+    pub max_virtual_secs: f64,
+    /// Hard cap on cumulative worker steps (safety).
+    pub max_total_steps: u64,
+    /// Convergence: variance of the last `window` eval losses below `tol`
+    /// AND mean below `target_loss` (if set).
+    pub convergence_window: usize,
+    pub convergence_tol: f64,
+    pub target_loss: f64,
+    /// Experiment seed (data + jitter).
+    pub seed: u64,
+    /// Dataset size per worker (synthetic examples).
+    pub shard_examples: usize,
+    /// Multiplicative step-time jitter amplitude (0 = deterministic step
+    /// times; 0.2 = per-chunk times scaled by U[0.8, 1.2]). Edge devices
+    /// rarely have stable throughput — this models it.
+    pub step_jitter: f64,
+    /// Probability that a commit is lost in flight (the worker re-trains on
+    /// stale params until its next commit; failure-injection knob).
+    pub drop_commit_prob: f64,
+    /// Top-k gradient compression: fraction of update entries kept per
+    /// commit (0 or 1 = off). Kept entries cost 8 bytes (value + index) in
+    /// the bandwidth accounting, mirroring Deep-Gradient-Compression-style
+    /// sparsification (paper §2.2 related work).
+    pub compress_topk: f64,
+}
+
+impl ExperimentSpec {
+    pub fn new(model: &str, cluster: ClusterSpec, sync: SyncSpec) -> Self {
+        ExperimentSpec {
+            model: model.to_string(),
+            cluster,
+            sync,
+            batch_size: 128,
+            eta_prime0: 0.1,
+            eta_decay_secs: 0.0,
+            eta_global: 0.0,
+            eval_interval_secs: 10.0,
+            max_virtual_secs: 3600.0,
+            max_total_steps: 2_000_000,
+            convergence_window: 10,
+            convergence_tol: 1e-4,
+            target_loss: 0.0,
+            seed: 0,
+            shard_examples: 4096,
+            step_jitter: 0.0,
+            drop_commit_prob: 0.0,
+            compress_topk: 0.0,
+        }
+    }
+
+    /// Effective global learning rate (paper default η = 1/M).
+    pub fn eta(&self) -> f32 {
+        if self.eta_global > 0.0 {
+            self.eta_global as f32
+        } else {
+            1.0 / self.cluster.m() as f32
+        }
+    }
+
+    /// η′ at virtual time `t` (exponential decay, paper §5.1).
+    pub fn eta_prime_at(&self, t: f64) -> f32 {
+        if self.eta_decay_secs > 0.0 {
+            (self.eta_prime0 * (-t / self.eta_decay_secs).exp()) as f32
+        } else {
+            self.eta_prime0 as f32
+        }
+    }
+
+    /// Parse from a JSON config (defaults applied for absent keys):
+    ///
+    /// ```json
+    /// { "model": "cnn_cifar",
+    ///   "cluster": { "workers": [ {"speed": 1.0, "comm_secs": 0.3}, ... ] },
+    ///   "sync": { "kind": "adsp", "gamma": 60.0 },
+    ///   "batch_size": 128, "max_virtual_secs": 3600.0 }
+    /// ```
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing experiment JSON")?;
+        let model = v.req("model")?.as_str()?.to_string();
+
+        let workers = v
+            .req("cluster")?
+            .req("workers")?
+            .as_arr()?
+            .iter()
+            .map(|w| {
+                Ok(WorkerSpec {
+                    speed: w.req("speed")?.as_f64()?,
+                    comm_secs: w.f64_or("comm_secs", 0.2)?,
+                    batch_size: w.usize_or("batch_size", 0)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cluster = ClusterSpec::new(workers);
+
+        let sj = v.req("sync")?;
+        let kind = SyncModelKind::from_str(sj.req("kind")?.as_str()?)
+            .map_err(anyhow::Error::msg)?;
+        let mut sync = SyncSpec::new(kind);
+        sync.staleness = sj.u64_or("staleness", sync.staleness)?;
+        sync.tau = sj.u64_or("tau", sync.tau)?;
+        sync.gamma = sj.f64_or("gamma", sync.gamma)?;
+        sync.epoch_secs = sj.f64_or("epoch_secs", sync.epoch_secs)?;
+        sync.eval_window_secs = sj.f64_or("eval_window_secs", sync.eval_window_secs)?;
+        sync.ps_momentum = sj.f64_or("ps_momentum", 0.0)?;
+        sync.fixed_delta_c = sj.u64_or("fixed_delta_c", 0)?;
+        if let Some(t) = sj.get("tau_per_worker") {
+            sync.tau_per_worker = t.as_arr()?.iter().map(|x| x.as_u64()).collect::<Result<_>>()?;
+        }
+
+        let mut spec = ExperimentSpec::new(&model, cluster, sync);
+        spec.batch_size = v.usize_or("batch_size", spec.batch_size)?;
+        spec.eta_prime0 = v.f64_or("eta_prime0", spec.eta_prime0)?;
+        spec.eta_decay_secs = v.f64_or("eta_decay_secs", spec.eta_decay_secs)?;
+        spec.eta_global = v.f64_or("eta_global", spec.eta_global)?;
+        spec.eval_interval_secs = v.f64_or("eval_interval_secs", spec.eval_interval_secs)?;
+        spec.max_virtual_secs = v.f64_or("max_virtual_secs", spec.max_virtual_secs)?;
+        spec.max_total_steps = v.u64_or("max_total_steps", spec.max_total_steps)?;
+        spec.convergence_window = v.usize_or("convergence_window", spec.convergence_window)?;
+        spec.convergence_tol = v.f64_or("convergence_tol", spec.convergence_tol)?;
+        spec.target_loss = v.f64_or("target_loss", spec.target_loss)?;
+        spec.seed = v.u64_or("seed", 0)?;
+        spec.shard_examples = v.usize_or("shard_examples", spec.shard_examples)?;
+        spec.step_jitter = v.f64_or("step_jitter", 0.0)?;
+        spec.drop_commit_prob = v.f64_or("drop_commit_prob", 0.0)?;
+        spec.compress_topk = v.f64_or("compress_topk", 0.0)?;
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            (
+                "cluster",
+                Json::obj(vec![(
+                    "workers",
+                    Json::Arr(
+                        self.cluster
+                            .workers
+                            .iter()
+                            .map(|w| {
+                                Json::obj(vec![
+                                    ("speed", Json::num(w.speed)),
+                                    ("comm_secs", Json::num(w.comm_secs)),
+                                    ("batch_size", Json::num(w.batch_size as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )]),
+            ),
+            (
+                "sync",
+                Json::obj(vec![
+                    ("kind", Json::str(self.sync.kind.name())),
+                    ("staleness", Json::num(self.sync.staleness as f64)),
+                    ("tau", Json::num(self.sync.tau as f64)),
+                    ("gamma", Json::num(self.sync.gamma)),
+                    ("epoch_secs", Json::num(self.sync.epoch_secs)),
+                    ("eval_window_secs", Json::num(self.sync.eval_window_secs)),
+                    ("ps_momentum", Json::num(self.sync.ps_momentum)),
+                    ("fixed_delta_c", Json::num(self.sync.fixed_delta_c as f64)),
+                    (
+                        "tau_per_worker",
+                        Json::Arr(
+                            self.sync.tau_per_worker.iter().map(|&t| Json::num(t as f64)).collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("eta_prime0", Json::num(self.eta_prime0)),
+            ("eta_decay_secs", Json::num(self.eta_decay_secs)),
+            ("eta_global", Json::num(self.eta_global)),
+            ("eval_interval_secs", Json::num(self.eval_interval_secs)),
+            ("max_virtual_secs", Json::num(self.max_virtual_secs)),
+            ("max_total_steps", Json::num(self.max_total_steps as f64)),
+            ("convergence_window", Json::num(self.convergence_window as f64)),
+            ("convergence_tol", Json::num(self.convergence_tol)),
+            ("target_loss", Json::num(self.target_loss)),
+            ("seed", Json::num(self.seed as f64)),
+            ("shard_examples", Json::num(self.shard_examples as f64)),
+            ("step_jitter", Json::num(self.step_jitter)),
+            ("drop_commit_prob", Json::num(self.drop_commit_prob)),
+            ("compress_topk", Json::num(self.compress_topk)),
+        ])
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json_str(&std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.cluster.workers.is_empty() {
+            bail!("cluster has no workers");
+        }
+        if self.cluster.workers.iter().any(|w| w.speed <= 0.0) {
+            bail!("worker speeds must be positive");
+        }
+        if self.batch_size == 0 {
+            bail!("batch_size must be positive");
+        }
+        if self.sync.gamma <= 0.0 || self.sync.epoch_secs <= 0.0 {
+            bail!("gamma and epoch_secs must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.drop_commit_prob) {
+            bail!("drop_commit_prob must be in [0,1]");
+        }
+        if self.compress_topk < 0.0 || self.compress_topk > 1.0 {
+            bail!("compress_topk must be in [0,1]");
+        }
+        if self.step_jitter < 0.0 || self.step_jitter >= 1.0 {
+            bail!("step_jitter must be in [0,1)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut spec = ExperimentSpec::new(
+            "cnn_cifar",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.33, 0.4)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.sync.tau_per_worker = vec![3, 9];
+        spec.target_loss = 1.25;
+        let text = spec.to_json().dump_pretty();
+        let back = ExperimentSpec::from_json_str(&text).unwrap();
+        assert_eq!(back.model, "cnn_cifar");
+        assert_eq!(back.cluster.m(), 2);
+        assert_eq!(back.sync.kind, SyncModelKind::Adsp);
+        assert_eq!(back.sync.tau_per_worker, vec![3, 9]);
+        assert!((back.target_loss - 1.25).abs() < 1e-12);
+        assert!((back.cluster.workers[1].comm_secs - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn minimal_json_uses_defaults() {
+        let text = r#"{
+  "model": "mlp_quick",
+  "cluster": { "workers": [ {"speed": 1.0}, {"speed": 0.5} ] },
+  "sync": { "kind": "bsp" }
+}"#;
+        let spec = ExperimentSpec::from_json_str(text).unwrap();
+        assert_eq!(spec.batch_size, 128);
+        assert!((spec.eta() - 0.5).abs() < 1e-6);
+        assert_eq!(spec.cluster.workers[0].comm_secs, 0.2);
+        assert_eq!(spec.sync.kind, SyncModelKind::Bsp);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut spec = ExperimentSpec::new(
+            "m",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+            SyncSpec::new(SyncModelKind::Bsp),
+        );
+        spec.cluster.workers[0].speed = -1.0;
+        assert!(spec.validate().is_err());
+        spec.cluster.workers.clear();
+        assert!(spec.validate().is_err());
+        // Unknown sync kind in JSON.
+        let bad = r#"{"model":"m","cluster":{"workers":[{"speed":1.0}]},"sync":{"kind":"nope"}}"#;
+        assert!(ExperimentSpec::from_json_str(bad).is_err());
+    }
+
+    #[test]
+    fn eta_prime_decays() {
+        let mut spec = ExperimentSpec::new(
+            "m",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.eta_decay_secs = 100.0;
+        assert!((spec.eta_prime_at(0.0) - 0.1).abs() < 1e-6);
+        assert!(spec.eta_prime_at(100.0) < spec.eta_prime_at(0.0));
+        let ratio = spec.eta_prime_at(100.0) / spec.eta_prime_at(0.0);
+        assert!((ratio as f64 - (-1.0f64).exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn heterogeneity_degree() {
+        let c = ClusterSpec::new(vec![
+            WorkerSpec::new(1.0, 0.1),
+            WorkerSpec::new(1.0, 0.1),
+            WorkerSpec::new(1.0 / 3.0, 0.1),
+        ]);
+        // mean = 7/9, min = 1/3 → H = 7/3.
+        assert!((c.heterogeneity() - 7.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! Layer-3 coordination: the parameter server, the real-time (wall-clock)
+//! cluster engine, and the scheduler glue.
+//!
+//! Two engines share the same [`crate::sync::SyncPolicy`] zoo:
+//!
+//! * [`crate::simulation::SimEngine`] — deterministic virtual-time
+//!   discrete-event simulation (the default for experiments/benches).
+//! * [`realtime::RealtimeEngine`] — actual OS threads, one per worker, each
+//!   owning its own PJRT runtime, pacing themselves with calibrated sleeps
+//!   exactly like the paper's testbed tunes heterogeneity ("we further
+//!   enable each worker to sleep for a specific short time after each
+//!   step", §5.2), with a PS thread applying commits and a scheduler
+//!   driving checkpoints/evals on wall-clock timers.
+
+pub mod ps;
+pub mod realtime;
+
+pub use ps::ParameterServer;
+pub use realtime::{RealtimeEngine, RealtimeOutcome};

@@ -1,0 +1,367 @@
+//! Real-time (wall-clock) cluster engine — the "testbed" flavor.
+//!
+//! One OS thread per worker, each owning its **own** PJRT runtime (PJRT
+//! handles are not `Send`; in the paper each worker is a separate machine
+//! anyway). A PS thread owns the global model and applies commits arriving
+//! over an mpsc channel; a wall-clock scheduler inside the PS loop fires
+//! checkpoint / epoch / eval ticks. Heterogeneity is emulated exactly the
+//! way the paper does it (§5.2): each worker pads its step to the target
+//! duration with a sleep.
+//!
+//! `time_scale` compresses virtual seconds into wall seconds (0.02 → a
+//! 60-second check period passes in 1.2 s) so examples finish quickly while
+//! preserving every rate *ratio*.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use crate::config::ExperimentSpec;
+use crate::data::make_source;
+use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
+use crate::runtime::{ModelRuntime, ParamSet};
+use crate::sync::{
+    assign_batchtune_sizes, make_policy, Action, ClusterView, SyncPolicy, WorkerProgress,
+};
+
+use super::ParameterServer;
+
+/// A worker→PS message: the accumulated update plus a reply channel for the
+/// fresh global model.
+struct CommitMsg {
+    worker: usize,
+    u: ParamSet,
+    reply: mpsc::Sender<ParamSet>,
+}
+
+#[derive(Debug)]
+pub struct RealtimeOutcome {
+    pub model: String,
+    pub sync: String,
+    pub converged_at_virtual: Option<f64>,
+    pub end_virtual: f64,
+    pub wall_secs: f64,
+    pub total_steps: u64,
+    pub total_commits: u64,
+    pub final_loss: f64,
+    pub loss_log: LossLog,
+    pub workers: Vec<WorkerMetrics>,
+    pub breakdown: Breakdown,
+}
+
+pub struct RealtimeEngine {
+    spec: ExperimentSpec,
+    /// Wall seconds per virtual second.
+    pub time_scale: f64,
+}
+
+struct Shared {
+    /// Training start (set by the PS after every thread finished compiling,
+    /// so runtime warmup does not consume virtual time).
+    start: OnceLock<Instant>,
+    /// All threads rendezvous here after loading their runtimes.
+    barrier: Barrier,
+    progress: Mutex<Vec<WorkerProgress>>,
+    policy: Mutex<Box<dyn SyncPolicy>>,
+    metrics: Mutex<Vec<WorkerMetrics>>,
+    stop: AtomicBool,
+    total_steps: AtomicU64,
+    last_eval: Mutex<Option<(f64, f64)>>,
+    initial_loss: Mutex<Option<f64>>,
+    speeds: Vec<f64>,
+    comms: Vec<f64>,
+    k_variants: Vec<usize>,
+}
+
+impl Shared {
+    fn with_view<R>(&self, now: f64, f: impl FnOnce(&mut dyn SyncPolicy, &ClusterView) -> R) -> R {
+        let progress = self.progress.lock().unwrap();
+        let last_eval = *self.last_eval.lock().unwrap();
+        let initial_loss = *self.initial_loss.lock().unwrap();
+        let view = ClusterView {
+            now,
+            workers: &progress,
+            speeds: &self.speeds,
+            comms: &self.comms,
+            k_variants: &self.k_variants,
+            last_eval,
+            initial_loss,
+        };
+        let mut policy = self.policy.lock().unwrap();
+        f(policy.as_mut(), &view)
+    }
+}
+
+impl RealtimeEngine {
+    pub fn new(spec: ExperimentSpec, time_scale: f64) -> Self {
+        RealtimeEngine { spec, time_scale }
+    }
+
+    pub fn run(self) -> Result<RealtimeOutcome> {
+        let spec = self.spec.clone();
+        spec.validate()?;
+        let scale = self.time_scale;
+        let m = spec.cluster.m();
+
+        // Probe the manifest once on the main thread for batch variants.
+        let probe = ModelRuntime::load_by_name(&spec.model)
+            .with_context(|| format!("loading artifacts for '{}'", spec.model))?;
+        let available = probe.manifest.batch_sizes();
+        let b_default = if available.contains(&spec.batch_size) {
+            spec.batch_size
+        } else {
+            available[0]
+        };
+        let batch_sizes: Vec<usize> = if spec.sync.kind.is_batchtune() {
+            assign_batchtune_sizes(&spec.cluster.speeds(), b_default, &available)
+        } else {
+            vec![b_default; m]
+        };
+        let k_variants = probe.manifest.k_variants(b_default);
+        let init = probe.init_params()?;
+        let bytes_per_commit = probe.manifest.bytes_per_commit as u64;
+        let eval_b = probe.manifest.eval.b;
+        drop(probe);
+
+        let shared = Arc::new(Shared {
+            start: OnceLock::new(),
+            barrier: Barrier::new(m + 1),
+            progress: Mutex::new(
+                batch_sizes
+                    .iter()
+                    .map(|&b| WorkerProgress { batch_size: b, ..Default::default() })
+                    .collect(),
+            ),
+            policy: Mutex::new(make_policy(&spec.sync, &spec.cluster)),
+            metrics: Mutex::new(vec![WorkerMetrics::default(); m]),
+            stop: AtomicBool::new(false),
+            total_steps: AtomicU64::new(0),
+            last_eval: Mutex::new(None),
+            initial_loss: Mutex::new(None),
+            speeds: spec.cluster.speeds(),
+            comms: spec.cluster.comms(),
+            k_variants,
+        });
+
+        let (commit_tx, commit_rx) = mpsc::channel::<CommitMsg>();
+
+        let outcome = std::thread::scope(|scope| -> Result<RealtimeOutcome> {
+            // ---------------- worker threads ----------------
+            for w in 0..m {
+                let spec = spec.clone();
+                let shared = shared.clone();
+                let commit_tx = commit_tx.clone();
+                scope.spawn(move || {
+                    if let Err(e) = worker_loop(w, &spec, scale, shared.clone(), commit_tx) {
+                        // A failed worker must not strand the barrier/PS.
+                        shared.stop.store(true, Ordering::SeqCst);
+                        eprintln!("worker {w} failed: {e:#}");
+                    }
+                });
+            }
+            drop(commit_tx);
+
+            // ---------------- PS + scheduler (this thread) ----------------
+            let rt = ModelRuntime::load_by_name(&spec.model)?;
+            rt.warmup_for(&[])?; // PS only evaluates and applies
+            // Release the cluster: everyone compiled, the clock starts now.
+            shared.barrier.wait();
+            let start = Instant::now();
+            shared.start.set(start).expect("start set twice");
+            let mut ps = ParameterServer::new(init, spec.eta(), spec.sync.ps_momentum as f32);
+            let mut eval_source = make_source(&rt.manifest, spec.seed, 0);
+            let mut detector = ConvergenceDetector::new(
+                spec.convergence_window,
+                spec.convergence_tol,
+                spec.target_loss,
+            );
+            let mut converged_at = None;
+            let mut total_commits = 0u64;
+            let mut next_checkpoint = spec.sync.gamma;
+            let mut next_epoch = spec.sync.epoch_secs;
+            let mut next_eval = 0.0f64;
+
+            loop {
+                let now_v = start.elapsed().as_secs_f64() / scale;
+                if now_v >= spec.max_virtual_secs
+                    || shared.total_steps.load(Ordering::Relaxed) >= spec.max_total_steps
+                {
+                    break;
+                }
+
+                // Scheduler ticks.
+                if now_v >= next_eval {
+                    let (x, y) = eval_source.eval_batch(eval_b);
+                    let steps = shared.total_steps.load(Ordering::Relaxed);
+                    let (loss, _acc) = ps.evaluate(&rt, now_v, steps, &x, &y)?;
+                    shared.initial_loss.lock().unwrap().get_or_insert(loss);
+                    *shared.last_eval.lock().unwrap() = Some((now_v, loss));
+                    shared.with_view(now_v, |p, _| p.on_eval(now_v, loss));
+                    if converged_at.is_none() && detector.push(loss) {
+                        converged_at = Some(now_v);
+                        break;
+                    }
+                    next_eval = now_v + spec.eval_interval_secs;
+                }
+                if now_v >= next_checkpoint {
+                    shared.with_view(now_v, |p, v| p.on_checkpoint(v));
+                    next_checkpoint += spec.sync.gamma;
+                }
+                if now_v >= next_epoch {
+                    shared.with_view(now_v, |p, v| p.on_epoch_start(v));
+                    next_epoch += spec.sync.epoch_secs;
+                }
+
+                // Apply any pending commits (bounded wait so ticks stay live).
+                match commit_rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(msg) => {
+                        ps.apply(&msg.u);
+                        total_commits += 1;
+                        let now_v = start.elapsed().as_secs_f64() / scale;
+                        {
+                            let mut progress = shared.progress.lock().unwrap();
+                            progress[msg.worker].commits += 1;
+                            let mut metrics = shared.metrics.lock().unwrap();
+                            metrics[msg.worker].commits += 1;
+                            metrics[msg.worker].bytes_up += bytes_per_commit;
+                            metrics[msg.worker].bytes_down += bytes_per_commit;
+                        }
+                        shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
+                        let _ = msg.reply.send(ps.snapshot());
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+
+            shared.stop.store(true, Ordering::SeqCst);
+            // Drain outstanding commits so workers blocked on replies exit.
+            while let Ok(msg) = commit_rx.recv_timeout(Duration::from_millis(200)) {
+                ps.apply(&msg.u);
+                total_commits += 1;
+                let _ = msg.reply.send(ps.snapshot());
+            }
+
+            let end_virtual = start.elapsed().as_secs_f64() / scale;
+            let workers = shared.metrics.lock().unwrap().clone();
+            let breakdown = Breakdown::from_workers(&workers);
+            Ok(RealtimeOutcome {
+                model: spec.model.clone(),
+                sync: spec.sync.kind.name().to_string(),
+                converged_at_virtual: converged_at,
+                end_virtual,
+                wall_secs: start.elapsed().as_secs_f64(),
+                total_steps: shared.total_steps.load(Ordering::Relaxed),
+                total_commits,
+                final_loss: ps.loss_log.last_loss().unwrap_or(f64::NAN),
+                loss_log: ps.loss_log,
+                workers,
+                breakdown,
+            })
+        })?;
+
+        Ok(outcome)
+    }
+}
+
+fn worker_loop(
+    w: usize,
+    spec: &ExperimentSpec,
+    scale: f64,
+    shared: Arc<Shared>,
+    commit_tx: mpsc::Sender<CommitMsg>,
+) -> Result<()> {
+    // Each worker owns its own runtime (PJRT handles are not Send; on the
+    // paper's testbed each worker is its own machine). A load failure must
+    // still hit the barrier or the PS would wait forever.
+    let my_batch = shared.progress.lock().unwrap()[w].batch_size;
+    let rt = match ModelRuntime::load_by_name(&spec.model).and_then(|rt| {
+        rt.warmup_for(&[my_batch])?;
+        Ok(rt)
+    }) {
+        Ok(rt) => rt,
+        Err(e) => {
+            shared.stop.store(true, Ordering::SeqCst);
+            shared.barrier.wait();
+            return Err(e);
+        }
+    };
+    shared.barrier.wait();
+    let start = *shared.start.wait();
+    let mut params = rt.init_params()?;
+    let mut u = params.zeros_like();
+    let mut data = make_source(&rt.manifest, spec.seed, w);
+    let b = my_batch;
+    let v = shared.speeds[w];
+    let o = shared.comms[w];
+    let b_ref = spec.batch_size.max(1) as f64;
+    let step_v = (b as f64 / b_ref).max(1e-9) / v; // virtual secs per step
+
+    while !shared.stop.load(Ordering::Relaxed) {
+        let now_v = start.elapsed().as_secs_f64() / scale;
+        let action = shared.with_view(now_v, |p, view| p.next_action(w, view));
+        match action {
+            Action::Train { k } => {
+                let ks = rt.manifest.k_variants(b);
+                let k = ks.iter().map(|&x| x as u64).find(|&x| x <= k.max(1)).unwrap_or(1);
+                let (xs, ys) = data.sample_batch(k as usize, b);
+                let eta_prime = spec.eta_prime_at(now_v);
+                let t0 = Instant::now();
+                rt.local_steps(&mut params, &mut u, &xs, &ys, eta_prime)?;
+                // Pad to the emulated step duration (paper's sleep knob).
+                let want = Duration::from_secs_f64(step_v * k as f64 * scale);
+                let spent = t0.elapsed();
+                if want > spent {
+                    std::thread::sleep(want - spent);
+                }
+                {
+                    let mut progress = shared.progress.lock().unwrap();
+                    progress[w].steps += k;
+                    progress[w].local_since_commit += k;
+                }
+                shared.total_steps.fetch_add(k, Ordering::Relaxed);
+                let mut metrics = shared.metrics.lock().unwrap();
+                metrics[w].steps += k;
+                metrics[w].compute_secs += step_v * k as f64;
+            }
+            Action::Commit => {
+                // Emulate the one-way trip, send, await the reply, emulate
+                // the way back.
+                std::thread::sleep(Duration::from_secs_f64(o / 2.0 * scale));
+                let (reply_tx, reply_rx) = mpsc::channel();
+                let snapshot = std::mem::replace(&mut u, params.zeros_like());
+                {
+                    let mut progress = shared.progress.lock().unwrap();
+                    progress[w].local_since_commit = 0;
+                }
+                if commit_tx.send(CommitMsg { worker: w, u: snapshot, reply: reply_tx }).is_err() {
+                    break;
+                }
+                match reply_rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok(fresh) => params = fresh,
+                    Err(_) => break,
+                }
+                std::thread::sleep(Duration::from_secs_f64(o / 2.0 * scale));
+                let mut metrics = shared.metrics.lock().unwrap();
+                metrics[w].comm_secs += o;
+            }
+            Action::Block => {
+                // Poll; blocked time is charged in virtual units.
+                {
+                    let mut progress = shared.progress.lock().unwrap();
+                    progress[w].blocked = true;
+                }
+                std::thread::sleep(Duration::from_secs_f64((0.05 * scale).max(0.0005)));
+                {
+                    let mut progress = shared.progress.lock().unwrap();
+                    progress[w].blocked = false;
+                }
+                let mut metrics = shared.metrics.lock().unwrap();
+                metrics[w].blocked_secs += 0.05;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Real CIFAR-10 loader (binary version: `data_batch_{1..5}.bin`,
+//! `test_batch.bin` under `data/cifar-10-batches-bin/`).
+//!
+//! Each record is 1 label byte + 3072 pixel bytes (CHW, uint8). We convert
+//! to the model's NHWC f32 layout, normalized to zero mean / unit-ish range.
+//! When the directory is absent the synthetic `ClassImages` generator is
+//! used instead (see `data::make_source`).
+
+use std::path::PathBuf;
+
+use crate::runtime::Batch;
+use crate::util::Rng;
+
+use super::DataSource;
+
+const REC: usize = 1 + 3072;
+const HW: usize = 32;
+const C: usize = 3;
+
+pub struct CifarSource {
+    /// Training examples as (label, NHWC f32 image).
+    train: Vec<(i32, Vec<f32>)>,
+    eval: Vec<(i32, Vec<f32>)>,
+    rng: Rng,
+}
+
+fn cifar_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ADSP_CIFAR_DIR") {
+        return d.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("data/cifar-10-batches-bin");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "data/cifar-10-batches-bin".into();
+        }
+    }
+}
+
+fn parse_records(bytes: &[u8]) -> Vec<(i32, Vec<f32>)> {
+    bytes
+        .chunks_exact(REC)
+        .map(|rec| {
+            let label = rec[0] as i32;
+            // CHW u8 → HWC f32 in [-1, 1].
+            let mut img = vec![0.0f32; HW * HW * C];
+            for ch in 0..C {
+                for y in 0..HW {
+                    for x in 0..HW {
+                        let v = rec[1 + ch * HW * HW + y * HW + x] as f32;
+                        img[(y * HW + x) * C + ch] = v / 127.5 - 1.0;
+                    }
+                }
+            }
+            (label, img)
+        })
+        .collect()
+}
+
+impl CifarSource {
+    /// Load if the binary batches are present; shard by `worker_idx` so each
+    /// worker sees a disjoint slice (paper: every edge system has its own
+    /// local data).
+    pub fn try_load(worker_idx: usize) -> Option<Self> {
+        let dir = cifar_dir();
+        if !dir.is_dir() {
+            return None;
+        }
+        let mut train = Vec::new();
+        for i in 1..=4 {
+            let bytes = std::fs::read(dir.join(format!("data_batch_{i}.bin"))).ok()?;
+            train.extend(parse_records(&bytes));
+        }
+        // Paper Appendix D.1: batch 5 for in-training evaluation.
+        let eval_bytes = std::fs::read(dir.join("data_batch_5.bin")).ok()?;
+        let eval = parse_records(&eval_bytes);
+        // Simple striped shard: worker w takes records w, w+W, w+2W… for a
+        // notional W=64 stride cycle (keeps shards disjoint for ≤64 workers).
+        let stride = 64;
+        let shard: Vec<(i32, Vec<f32>)> = train
+            .into_iter()
+            .enumerate()
+            .filter(|(i, _)| i % stride == worker_idx % stride)
+            .map(|(_, r)| r)
+            .collect();
+        Some(CifarSource { train: shard, eval, rng: Rng::new(worker_idx as u64 + 0xC1FA) })
+    }
+}
+
+impl DataSource for CifarSource {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let numel = HW * HW * C;
+        let mut xs = Vec::with_capacity(k * b * numel);
+        let mut ys = Vec::with_capacity(k * b);
+        for _ in 0..k * b {
+            let (label, img) = &self.train[self.rng.below(self.train.len())];
+            xs.extend_from_slice(img);
+            ys.push(*label);
+        }
+        (Batch::f32(vec![k, b, HW, HW, C], xs), Batch::i32(vec![k, b], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let numel = HW * HW * C;
+        let mut xs = Vec::with_capacity(b * numel);
+        let mut ys = Vec::with_capacity(b);
+        for i in 0..b {
+            let (label, img) = &self.eval[i % self.eval.len()];
+            xs.extend_from_slice(img);
+            ys.push(*label);
+        }
+        (Batch::f32(vec![b, HW, HW, C], xs), Batch::i32(vec![b], ys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_records_layout() {
+        // Two synthetic records: label 3 with all-255 red channel, label 7 zeros.
+        let mut bytes = vec![0u8; 2 * REC];
+        bytes[0] = 3;
+        for i in 0..HW * HW {
+            bytes[1 + i] = 255; // channel 0 (R)
+        }
+        bytes[REC] = 7;
+        let recs = parse_records(&bytes);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].0, 3);
+        assert_eq!(recs[1].0, 7);
+        // First record: R channel saturated → +1.0 at every (y,x,0).
+        assert!((recs[0].1[0] - 1.0).abs() < 1e-6);
+        assert!((recs[0].1[1] + 1.0).abs() < 1e-6); // G is 0 → -1
+        // Second record all zeros → -1 everywhere.
+        assert!(recs[1].1.iter().all(|&v| (v + 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn try_load_absent_dir_is_none() {
+        std::env::set_var("ADSP_CIFAR_DIR", "/definitely/not/here");
+        assert!(CifarSource::try_load(0).is_none());
+        std::env::remove_var("ADSP_CIFAR_DIR");
+    }
+}

@@ -1,0 +1,80 @@
+//! Training data. The paper's three applications use Cifar-10, a proprietary
+//! high-speed-rail dataset, and a proprietary chiller dataset; per DESIGN.md
+//! §Substitutions, the proprietary sets are replaced by synthetic generators
+//! with the same input/output contracts, and Cifar-10 is loaded from disk
+//! when present (`data/cifar-10-batches-bin`) with a class-conditional
+//! Gaussian-image generator as the fallback.
+//!
+//! Every worker gets an independent, deterministic shard: the *task*
+//! (class patterns, true hyperplane, bigram table) is derived from the
+//! experiment seed so all workers learn the same problem, while each
+//! worker's example stream comes from its own RNG split.
+
+pub mod cifar;
+pub mod synthetic;
+
+use crate::runtime::{Batch, Manifest};
+use crate::util::Rng;
+
+/// A per-worker stream of training mini-batches plus a shared, deterministic
+/// evaluation set.
+pub trait DataSource: Send {
+    /// Sample a `[k, b, ...]` stacked training batch (xs, ys).
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch);
+    /// The deterministic evaluation batch of size `b` (same for every call).
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch);
+}
+
+/// Build the data source for `model` and worker `worker_idx`.
+///
+/// Model-name dispatch mirrors `python/compile/models/registry.py`.
+pub fn make_source(
+    manifest: &Manifest,
+    seed: u64,
+    worker_idx: usize,
+) -> Box<dyn DataSource> {
+    let task_rng = Rng::new(seed ^ 0xDA7A);
+    let worker_rng = Rng::new(seed ^ 0xDA7A).split(worker_idx as u64 + 1);
+    let name = manifest.model.as_str();
+    if name.starts_with("lm_") {
+        return Box::new(synthetic::BigramLm::new(
+            manifest.num_classes,
+            manifest.x_shape[0],
+            task_rng,
+            worker_rng,
+        ));
+    }
+    match name {
+        "mlp_quick" => Box::new(synthetic::Blobs::new(
+            manifest.x_shape[0],
+            manifest.num_classes,
+            task_rng,
+            worker_rng,
+        )),
+        "cnn_cifar" | "vgg_sim" => {
+            if let Some(c) = cifar::CifarSource::try_load(worker_idx) {
+                Box::new(c)
+            } else {
+                Box::new(synthetic::ClassImages::new(
+                    manifest.x_shape.clone(),
+                    manifest.num_classes,
+                    task_rng,
+                    worker_rng,
+                ))
+            }
+        }
+        "rnn_rail" => Box::new(synthetic::RailSequences::new(
+            manifest.x_shape[0],
+            manifest.x_shape[1],
+            manifest.num_classes,
+            task_rng,
+            worker_rng,
+        )),
+        "svm_chiller" => Box::new(synthetic::ChillerRecords::new(
+            manifest.x_shape[0],
+            task_rng,
+            worker_rng,
+        )),
+        other => panic!("no data source registered for model '{other}'"),
+    }
+}

@@ -1,0 +1,499 @@
+//! Synthetic data generators — learnable stand-ins for the paper's datasets
+//! (see DESIGN.md §Substitutions for the fidelity argument).
+
+use crate::runtime::Batch;
+use crate::util::Rng;
+
+use super::DataSource;
+
+// ---------------------------------------------------------------------------
+// Gaussian blobs (mlp_quick)
+// ---------------------------------------------------------------------------
+
+/// Class-conditional Gaussian blobs in `dim` dimensions: class c has a unit
+/// center vector; examples are `center * margin + noise`.
+pub struct Blobs {
+    dim: usize,
+    classes: usize,
+    centers: Vec<Vec<f32>>,
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl Blobs {
+    pub fn new(dim: usize, classes: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+        let centers = (0..classes)
+            .map(|_| {
+                let mut v: Vec<f32> = (0..dim).map(|_| task_rng.normal_f32()).collect();
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                v.iter_mut().for_each(|x| *x /= n);
+                v
+            })
+            .collect();
+        let eval_rng = task_rng.split(0xE7A1);
+        Blobs { dim, classes, centers, rng: worker_rng, eval_rng }
+    }
+
+    fn fill(&self, rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(n * self.dim);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(self.classes);
+            for d in 0..self.dim {
+                xs.push(self.centers[c][d] * 2.0 + 0.6 * rng.normal_f32());
+            }
+            ys.push(c as i32);
+        }
+        (xs, ys)
+    }
+}
+
+impl DataSource for Blobs {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let mut rng = self.rng.split(0);
+        self.rng = self.rng.split(1);
+        let (xs, ys) = self.fill(&mut rng, k * b);
+        (Batch::f32(vec![k, b, self.dim], xs), Batch::i32(vec![k, b], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let mut rng = self.eval_rng.clone();
+        let (xs, ys) = self.fill(&mut rng, b);
+        (Batch::f32(vec![b, self.dim], xs), Batch::i32(vec![b], ys))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Class-pattern images (cnn_cifar / vgg_sim fallback)
+// ---------------------------------------------------------------------------
+
+/// Cifar-shaped synthetic images: each class has a smooth low-frequency
+/// pattern (bilinear-upsampled 4x4 seed); examples are pattern + noise.
+pub struct ClassImages {
+    shape: Vec<usize>, // [H, W, C]
+    classes: usize,
+    patterns: Vec<Vec<f32>>, // per class, H*W*C
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl ClassImages {
+    pub fn new(shape: Vec<usize>, classes: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+        assert_eq!(shape.len(), 3, "expect [H,W,C]");
+        let (h, w, c) = (shape[0], shape[1], shape[2]);
+        let patterns = (0..classes)
+            .map(|_| {
+                // 4x4xC low-res seed, bilinear upsample.
+                let lo: Vec<f32> = (0..4 * 4 * c).map(|_| task_rng.normal_f32()).collect();
+                let mut img = Vec::with_capacity(h * w * c);
+                for y in 0..h {
+                    for x in 0..w {
+                        let fy = y as f32 / h as f32 * 3.0;
+                        let fx = x as f32 / w as f32 * 3.0;
+                        let (y0, x0) = (fy.floor() as usize, fx.floor() as usize);
+                        let (y1, x1) = ((y0 + 1).min(3), (x0 + 1).min(3));
+                        let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                        for ch in 0..c {
+                            let g = |yy: usize, xx: usize| lo[(yy * 4 + xx) * c + ch];
+                            let v = g(y0, x0) * (1.0 - dy) * (1.0 - dx)
+                                + g(y0, x1) * (1.0 - dy) * dx
+                                + g(y1, x0) * dy * (1.0 - dx)
+                                + g(y1, x1) * dy * dx;
+                            img.push(v);
+                        }
+                    }
+                }
+                img
+            })
+            .collect();
+        let eval_rng = task_rng.split(0xE7A2);
+        ClassImages { shape, classes, patterns, rng: worker_rng, eval_rng }
+    }
+
+    fn fill(&self, rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let numel: usize = self.shape.iter().product();
+        let mut xs = Vec::with_capacity(n * numel);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cl = rng.below(self.classes);
+            let pat = &self.patterns[cl];
+            for &p in pat {
+                xs.push(p + 0.8 * rng.normal_f32());
+            }
+            ys.push(cl as i32);
+        }
+        (xs, ys)
+    }
+}
+
+impl DataSource for ClassImages {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let mut rng = self.rng.split(0);
+        self.rng = self.rng.split(1);
+        let (xs, ys) = self.fill(&mut rng, k * b);
+        let mut dims = vec![k, b];
+        dims.extend(&self.shape);
+        (Batch::f32(dims, xs), Batch::i32(vec![k, b], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let mut rng = self.eval_rng.clone();
+        let (xs, ys) = self.fill(&mut rng, b);
+        let mut dims = vec![b];
+        dims.extend(&self.shape);
+        (Batch::f32(dims, xs), Batch::i32(vec![b], ys))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rail fatigue sequences (rnn_rail)
+// ---------------------------------------------------------------------------
+
+/// Synthetic bogie stress traces: `feat` parallel AR(1) channels whose
+/// persistence and drift depend on the fatigue class (0 = healthy,
+/// 1 = minor repair, 2 = replace) — mirrors the paper's Appendix D.1 feature
+/// list (historical stress, age, route, temperature).
+pub struct RailSequences {
+    seq: usize,
+    feat: usize,
+    classes: usize,
+    /// Per-class (ar_coeff, drift, noise) triples.
+    dynamics: Vec<(f32, f32, f32)>,
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl RailSequences {
+    pub fn new(seq: usize, feat: usize, classes: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+        let dynamics = (0..classes)
+            .map(|c| {
+                let f = c as f32 / (classes.max(2) - 1) as f32;
+                // Healthy traces mean-revert; fatigued traces drift upward.
+                (0.4 + 0.5 * f, 0.8 * f, 0.3 + 0.2 * task_rng.next_f32())
+            })
+            .collect();
+        let eval_rng = task_rng.split(0xE7A3);
+        RailSequences { seq, feat, classes, dynamics, rng: worker_rng, eval_rng }
+    }
+
+    fn fill(&self, rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(n * self.seq * self.feat);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(self.classes);
+            let (ar, drift, noise) = self.dynamics[c];
+            let mut state = vec![0.0f32; self.feat];
+            for _t in 0..self.seq {
+                for s in state.iter_mut() {
+                    *s = ar * *s + drift * 0.25 + noise * rng.normal_f32();
+                    xs.push(*s);
+                }
+            }
+            ys.push(c as i32);
+        }
+        (xs, ys)
+    }
+}
+
+impl DataSource for RailSequences {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let mut rng = self.rng.split(0);
+        self.rng = self.rng.split(1);
+        let (xs, ys) = self.fill(&mut rng, k * b);
+        (Batch::f32(vec![k, b, self.seq, self.feat], xs), Batch::i32(vec![k, b], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let mut rng = self.eval_rng.clone();
+        let (xs, ys) = self.fill(&mut rng, b);
+        (Batch::f32(vec![b, self.seq, self.feat], xs), Batch::i32(vec![b], ys))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chiller COP records (svm_chiller)
+// ---------------------------------------------------------------------------
+
+/// Linear-margin records: a hidden hyperplane (the "true" COP threshold
+/// surface over outlet temperature, outdoor temperature, electricity, age…)
+/// labels each feature vector ±1 with small label noise.
+pub struct ChillerRecords {
+    feat: usize,
+    w_true: Vec<f32>,
+    b_true: f32,
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl ChillerRecords {
+    pub fn new(feat: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+        let w_true: Vec<f32> = (0..feat).map(|_| task_rng.normal_f32()).collect();
+        let b_true = 0.3 * task_rng.normal_f32();
+        let eval_rng = task_rng.split(0xE7A4);
+        ChillerRecords { feat, w_true, b_true, rng: worker_rng, eval_rng }
+    }
+
+    fn fill(&self, rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut xs = Vec::with_capacity(n * self.feat);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut dot = self.b_true;
+            for d in 0..self.feat {
+                let x = rng.normal_f32();
+                dot += x * self.w_true[d];
+                xs.push(x);
+            }
+            let flip = rng.next_f32() < 0.02;
+            let y = if (dot >= 0.0) ^ flip { 1.0 } else { -1.0 };
+            ys.push(y);
+        }
+        (xs, ys)
+    }
+}
+
+impl DataSource for ChillerRecords {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let mut rng = self.rng.split(0);
+        self.rng = self.rng.split(1);
+        let (xs, ys) = self.fill(&mut rng, k * b);
+        (Batch::f32(vec![k, b, self.feat], xs), Batch::f32(vec![k, b], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let mut rng = self.eval_rng.clone();
+        let (xs, ys) = self.fill(&mut rng, b);
+        (Batch::f32(vec![b, self.feat], xs), Batch::f32(vec![b], ys))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bigram language stream (lm_*)
+// ---------------------------------------------------------------------------
+
+/// Synthetic token corpus with a planted bigram structure: from token v the
+/// next token is `(a·v + c) mod V` with probability 0.8, else uniform. The
+/// LM's achievable cross-entropy is well below uniform `ln V`, so loss
+/// curves show clear learning.
+pub struct BigramLm {
+    vocab: usize,
+    seq: usize,
+    a: usize,
+    c: usize,
+    rng: Rng,
+    eval_rng: Rng,
+    state: usize,
+}
+
+impl BigramLm {
+    pub fn new(vocab: usize, seq: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+        // Odd multiplier for a full-period-ish map.
+        let a = 2 * (1 + task_rng.below(vocab.max(4) / 2 - 1)) + 1;
+        let c = task_rng.below(vocab);
+        let eval_rng = task_rng.split(0xE7A5);
+        BigramLm { vocab, seq, a, c, rng: worker_rng, eval_rng, state: 1 }
+    }
+
+    fn fill(&self, rng: &mut Rng, n: usize, start: usize) -> (Vec<i32>, Vec<i32>) {
+        // Produce n sequences of length seq (+1 shifted targets).
+        let mut xs = Vec::with_capacity(n * self.seq);
+        let mut ys = Vec::with_capacity(n * self.seq);
+        let mut tok = start % self.vocab;
+        for _ in 0..n {
+            for _t in 0..self.seq {
+                xs.push(tok as i32);
+                tok = if rng.next_f64() < 0.8 {
+                    (self.a * tok + self.c) % self.vocab
+                } else {
+                    rng.below(self.vocab)
+                };
+                ys.push(tok as i32);
+            }
+        }
+        (xs, ys)
+    }
+}
+
+impl DataSource for BigramLm {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        let mut rng = self.rng.split(0);
+        self.rng = self.rng.split(1);
+        let start = self.state;
+        self.state = self.state.wrapping_mul(0x9E37).wrapping_add(1) % self.vocab.max(1);
+        let (xs, ys) = self.fill(&mut rng, k * b, start);
+        (Batch::i32(vec![k, b, self.seq], xs), Batch::i32(vec![k, b, self.seq], ys))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        let mut rng = self.eval_rng.clone();
+        let (xs, ys) = self.fill(&mut rng, b, 7);
+        (Batch::i32(vec![b, self.seq], xs), Batch::i32(vec![b, self.seq], ys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BatchData;
+
+    fn rngs() -> (Rng, Rng) {
+        (Rng::new(1), Rng::new(2))
+    }
+
+    #[test]
+    fn blobs_shapes_and_determinism() {
+        let (t, w) = rngs();
+        let mut d1 = Blobs::new(16, 4, t.clone(), w.clone());
+        let mut d2 = Blobs::new(16, 4, t, w);
+        let (x1, y1) = d1.sample_batch(2, 8);
+        let (x2, y2) = d2.sample_batch(2, 8);
+        assert_eq!(x1.dims, vec![2, 8, 16]);
+        assert_eq!(y1.dims, vec![2, 8]);
+        match (&x1.data, &x2.data) {
+            (BatchData::F32(a), BatchData::F32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype"),
+        }
+        match (&y1.data, &y2.data) {
+            (BatchData::I32(a), BatchData::I32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype"),
+        }
+        // Consecutive batches differ.
+        let (x3, _) = d1.sample_batch(2, 8);
+        match (&x1.data, &x3.data) {
+            (BatchData::F32(a), BatchData::F32(b)) => assert_ne!(a, b),
+            _ => panic!("dtype"),
+        }
+    }
+
+    #[test]
+    fn eval_batch_is_stable() {
+        let (t, w) = rngs();
+        let mut d = Blobs::new(8, 3, t, w);
+        let (x1, y1) = d.eval_batch(16);
+        let _ = d.sample_batch(1, 4);
+        let (x2, y2) = d.eval_batch(16);
+        match (&x1.data, &x2.data) {
+            (BatchData::F32(a), BatchData::F32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype"),
+        }
+        match (&y1.data, &y2.data) {
+            (BatchData::I32(a), BatchData::I32(b)) => assert_eq!(a, b),
+            _ => panic!("dtype"),
+        }
+    }
+
+    #[test]
+    fn images_shape_and_class_separation() {
+        let (t, w) = rngs();
+        let mut d = ClassImages::new(vec![8, 8, 3], 4, t, w);
+        let (x, y) = d.sample_batch(1, 32);
+        assert_eq!(x.dims, vec![1, 32, 8, 8, 3]);
+        assert_eq!(y.dims, vec![1, 32]);
+        // Mean images of two classes differ more than noise/sqrt(n) would.
+        let BatchData::F32(xs) = &x.data else { panic!() };
+        let BatchData::I32(ys) = &y.data else { panic!() };
+        let numel = 8 * 8 * 3;
+        let mut means = vec![vec![0.0f64; numel]; 4];
+        let mut counts = [0usize; 4];
+        for (i, &cl) in ys.iter().enumerate() {
+            counts[cl as usize] += 1;
+            for j in 0..numel {
+                means[cl as usize][j] += xs[i * numel + j] as f64;
+            }
+        }
+        let present: Vec<usize> = (0..4).filter(|&c| counts[c] > 2).collect();
+        assert!(present.len() >= 2);
+        let (c0, c1) = (present[0], present[1]);
+        let dist: f64 = (0..numel)
+            .map(|j| {
+                let a = means[c0][j] / counts[c0] as f64;
+                let b = means[c1][j] / counts[c1] as f64;
+                (a - b) * (a - b)
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 1.0, "class patterns should separate, dist={dist}");
+    }
+
+    #[test]
+    fn rail_class_dynamics_differ() {
+        let (t, w) = rngs();
+        let mut d = RailSequences::new(16, 8, 3, t, w);
+        let (x, y) = d.sample_batch(1, 64);
+        assert_eq!(x.dims, vec![1, 64, 16, 8]);
+        let BatchData::F32(xs) = &x.data else { panic!() };
+        let BatchData::I32(ys) = &y.data else { panic!() };
+        // Class-2 traces drift upward → higher mean at the last timestep.
+        let per = 16 * 8;
+        let last_mean = |cl: i32| {
+            let mut s = 0.0;
+            let mut n = 0;
+            for (i, &c) in ys.iter().enumerate() {
+                if c == cl {
+                    for f in 0..8 {
+                        s += xs[i * per + 15 * 8 + f] as f64;
+                    }
+                    n += 8;
+                }
+            }
+            if n == 0 { f64::NAN } else { s / n as f64 }
+        };
+        let (m0, m2) = (last_mean(0), last_mean(2));
+        if m0.is_finite() && m2.is_finite() {
+            assert!(m2 > m0, "fatigued class should drift up: {m0} vs {m2}");
+        }
+    }
+
+    #[test]
+    fn chiller_labels_match_margin_mostly() {
+        let (t, w) = rngs();
+        let mut d = ChillerRecords::new(12, t, w);
+        let (x, y) = d.sample_batch(1, 256);
+        let BatchData::F32(xs) = &x.data else { panic!() };
+        let BatchData::F32(ys) = &y.data else { panic!() };
+        let mut agree = 0;
+        for i in 0..256 {
+            let mut dot = d.b_true;
+            for f in 0..12 {
+                dot += xs[i * 12 + f] * d.w_true[f];
+            }
+            if (dot >= 0.0) == (ys[i] > 0.0) {
+                agree += 1;
+            }
+        }
+        // 2% label flips → ~98% agreement.
+        assert!(agree >= 240, "agree={agree}");
+    }
+
+    #[test]
+    fn bigram_lm_structure() {
+        let (t, w) = rngs();
+        let mut d = BigramLm::new(64, 16, t, w);
+        let (x, y) = d.sample_batch(1, 32);
+        assert_eq!(x.dims, vec![1, 32, 16]);
+        assert_eq!(y.dims, vec![1, 32, 16]);
+        let BatchData::I32(xs) = &x.data else { panic!() };
+        let BatchData::I32(ys) = &y.data else { panic!() };
+        // y is x shifted by one within each sequence.
+        for s in 0..32 {
+            for tt in 0..15 {
+                assert_eq!(ys[s * 16 + tt], xs[s * 16 + tt + 1]);
+            }
+        }
+        // ~80% of transitions follow the planted map.
+        let mut hits = 0;
+        let mut total = 0;
+        for s in 0..32 {
+            for tt in 0..16 {
+                let cur = xs[s * 16 + tt] as usize;
+                let nxt = ys[s * 16 + tt] as usize;
+                if (d.a * cur + d.c) % 64 == nxt {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.6, "bigram structure too weak: {frac}");
+        assert!(xs.iter().all(|&v| (0..64).contains(&v)));
+    }
+}

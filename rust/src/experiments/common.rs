@@ -1,0 +1,190 @@
+//! Shared experiment plumbing: scales, base specs, CSV emission.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{ClusterSpec, ExperimentSpec, SyncSpec};
+use crate::simulation::{SimEngine, SimOutcome};
+use crate::sync::SyncModelKind;
+
+/// Experiment sizing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Bench-sized: small model, short horizon — regenerates figure *shape*
+    /// in seconds. Used by `cargo bench` and CI.
+    Bench,
+    /// Paper-sized configuration (18-worker EC2 profile, CNN substitute).
+    Full,
+}
+
+impl Scale {
+    pub fn is_full(&self) -> bool {
+        matches!(self, Scale::Full)
+    }
+}
+
+/// A printed figure: header + rows, also written to `results/<name>.csv`.
+#[derive(Clone, Debug, Default)]
+pub struct SeriesTable {
+    pub name: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl SeriesTable {
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        SeriesTable {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row arity mismatch in {}", self.name);
+        self.rows.push(row);
+    }
+
+    pub fn print(&self) {
+        println!("== {} ==", self.name);
+        println!("{}", self.header.join(","));
+        for row in &self.rows {
+            println!("{}", row.join(","));
+        }
+    }
+
+    pub fn write_csv(&self) -> Result<PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut text = self.header.join(",");
+        text.push('\n');
+        for row in &self.rows {
+            text.push_str(&row.join(","));
+            text.push('\n');
+        }
+        std::fs::write(&path, text)?;
+        Ok(path)
+    }
+
+    /// Fetch a column as f64 (for tests/benches asserting figure shape).
+    pub fn column_f64(&self, name: &str) -> Vec<f64> {
+        let idx = self.header.iter().position(|h| h == name).expect("no such column");
+        self.rows.iter().filter_map(|r| r[idx].parse().ok()).collect()
+    }
+
+    /// Rows where `key_col == key`.
+    pub fn filter_rows(&self, key_col: &str, key: &str) -> Vec<&Vec<String>> {
+        let idx = self.header.iter().position(|h| h == key_col).expect("no such column");
+        self.rows.iter().filter(|r| r[idx] == key).collect()
+    }
+}
+
+pub fn results_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("ADSP_RESULTS") {
+        return d.into();
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        if cur.join("Cargo.toml").is_file() {
+            return cur.join("results");
+        }
+        if !cur.pop() {
+            return "results".into();
+        }
+    }
+}
+
+/// The bench-scale base experiment: quickstart MLP on the paper's 1:1:3
+/// motivating cluster, compressed time constants.
+pub fn bench_spec(kind: SyncModelKind, cluster: ClusterSpec) -> ExperimentSpec {
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 30.0;
+    sync.epoch_secs = 240.0;
+    sync.eval_window_secs = 20.0;
+    sync.tau = 8;
+    sync.staleness = 3;
+    let mut spec = ExperimentSpec::new("mlp_quick", cluster, sync);
+    spec.batch_size = 32;
+    spec.eval_interval_secs = 5.0;
+    spec.max_virtual_secs = 600.0;
+    spec.max_total_steps = 25_000;
+    spec.convergence_window = 10;
+    spec.convergence_tol = 2e-5;
+    spec.target_loss = 0.40;
+    spec.eta_prime0 = 0.05;
+    spec
+}
+
+/// The paper-scale base experiment: CNN substitute on the Table-1 cluster.
+pub fn full_spec(kind: SyncModelKind, cluster: ClusterSpec) -> ExperimentSpec {
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 60.0;
+    sync.epoch_secs = 1200.0;
+    sync.eval_window_secs = 60.0;
+    sync.tau = 8;
+    sync.staleness = 3;
+    let mut spec = ExperimentSpec::new("cnn_cifar", cluster, sync);
+    spec.batch_size = 128;
+    spec.eval_interval_secs = 15.0;
+    spec.max_virtual_secs = 3600.0;
+    spec.max_total_steps = 400_000;
+    spec.convergence_window = 10;
+    spec.convergence_tol = 1e-4;
+    spec.target_loss = 1.3;
+    spec.eta_prime0 = 0.1;
+    spec.eta_decay_secs = 3600.0;
+    spec
+}
+
+pub fn spec_for(scale: Scale, kind: SyncModelKind, cluster: ClusterSpec) -> ExperimentSpec {
+    match scale {
+        Scale::Bench => bench_spec(kind, cluster),
+        Scale::Full => full_spec(kind, cluster),
+    }
+}
+
+/// Run one simulation.
+pub fn run_sim(spec: ExperimentSpec) -> Result<SimOutcome> {
+    SimEngine::new(spec)?.run()
+}
+
+/// Downsample a loss log into at most `n` (t, loss) points for CSV series.
+pub fn downsample(outcome: &SimOutcome, n: usize) -> Vec<(f64, f64)> {
+    let s = &outcome.loss_log.samples;
+    if s.is_empty() {
+        return Vec::new();
+    }
+    let stride = (s.len() / n.max(1)).max(1);
+    s.iter()
+        .enumerate()
+        .filter(|(i, _)| i % stride == 0 || *i == s.len() - 1)
+        .map(|(_, p)| (p.t, p.loss))
+        .collect()
+}
+
+pub fn fmt(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_table_roundtrip() {
+        let mut t = SeriesTable::new("test_tbl", &["a", "b"]);
+        t.push_row(vec!["1".into(), "2.5".into()]);
+        t.push_row(vec!["2".into(), "5.0".into()]);
+        assert_eq!(t.column_f64("b"), vec![2.5, 5.0]);
+        assert_eq!(t.filter_rows("a", "2").len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = SeriesTable::new("x", &["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+}

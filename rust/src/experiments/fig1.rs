@@ -1,0 +1,63 @@
+//! Fig. 1 — training-time breakdown (computation vs waiting) and convergence
+//! time for BSP / SSP / ADACOMM / ADSP on the motivating 3-worker cluster
+//! with a 1:1:3 per-step time ratio.
+//!
+//! Paper shape: waiting dominates (>50%) under BSP/SSP, is still ~half under
+//! ADACOMM, and is negligible under ADSP; ADSP converges fastest.
+
+use anyhow::Result;
+
+use crate::config::profiles::ratio_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let (base_speed, comm) = match scale {
+        Scale::Bench => (2.0, 0.3),
+        Scale::Full => (1.0, 0.5),
+    };
+    let cluster = ratio_cluster(&[1.0, 1.0, 3.0], base_speed, comm);
+
+    let mut table = SeriesTable::new(
+        "fig1_breakdown",
+        &[
+            "sync",
+            "convergence_time_s",
+            "avg_compute_s",
+            "avg_wait_s",
+            "wait_fraction",
+            "time_per_step_s",
+            "final_loss",
+        ],
+    );
+
+    for kind in [
+        SyncModelKind::Bsp,
+        SyncModelKind::Ssp,
+        SyncModelKind::Adacomm,
+        SyncModelKind::Adsp,
+    ] {
+        let spec = spec_for(scale, kind, cluster.clone());
+        let out = run_sim(spec)?;
+        anyhow::ensure!(!out.deadlocked, "policy deadlock in {kind}");
+        let steps_per_worker =
+            out.total_steps as f64 / out.workers.len().max(1) as f64;
+        let time_per_step = if steps_per_worker > 0.0 {
+            out.convergence_time() / steps_per_worker
+        } else {
+            f64::NAN
+        };
+        table.push_row(vec![
+            kind.name().to_string(),
+            fmt(out.convergence_time()),
+            fmt(out.breakdown.avg_compute_secs),
+            fmt(out.breakdown.avg_waiting_secs),
+            fmt(out.breakdown.waiting_fraction()),
+            fmt(time_per_step),
+            fmt(out.final_loss),
+        ]);
+    }
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,73 @@
+//! Fig. 12 — RNN on the high-speed-rail dataset (GRU on synthetic rail
+//! sequences, DESIGN.md §Substitutions) and Fig. 13 — linear SVM on the
+//! chiller dataset (synthetic linear-margin records).
+//!
+//! Paper shape: the same ordering as Fig. 4 — ADSP fastest (≈29.5% over
+//! Fixed ADACOMM in the rail case), BSP slowest.
+
+use anyhow::Result;
+
+use crate::config::profiles::ec2_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{downsample, fmt, run_sim, spec_for, Scale, SeriesTable};
+
+const BASELINES: [SyncModelKind; 5] = [
+    SyncModelKind::Bsp,
+    SyncModelKind::Ssp,
+    SyncModelKind::Adacomm,
+    SyncModelKind::FixedAdacomm,
+    SyncModelKind::Adsp,
+];
+
+fn run_model(scale: Scale, model: &str, name: &str, target_loss: f64) -> Result<SeriesTable> {
+    let cluster = match scale {
+        Scale::Bench => ec2_cluster(4, 2.0, 0.3),
+        Scale::Full => ec2_cluster(18, 1.0, 0.5),
+    };
+
+    let mut table = SeriesTable::new(
+        name,
+        &["sync", "convergence_time_s", "final_loss", "accuracy", "total_steps"],
+    );
+    let mut curves = SeriesTable::new(&format!("{name}_curves"), &["sync", "t", "loss"]);
+
+    for kind in BASELINES {
+        let mut spec = spec_for(scale, kind, cluster.clone());
+        spec.model = model.to_string();
+        spec.batch_size = 128;
+        spec.target_loss = target_loss;
+        let out = run_sim(spec)?;
+        for (t, loss) in downsample(&out, 40) {
+            curves.push_row(vec![kind.name().into(), fmt(t), fmt(loss)]);
+        }
+        table.push_row(vec![
+            kind.name().to_string(),
+            fmt(out.convergence_time()),
+            fmt(out.final_loss),
+            fmt(out.final_accuracy),
+            out.total_steps.to_string(),
+        ]);
+    }
+    curves.write_csv()?;
+    table.write_csv()?;
+    Ok(table)
+}
+
+/// Fig. 12: GRU on rail-fatigue sequences.
+pub fn run_rnn(scale: Scale) -> Result<SeriesTable> {
+    let target = match scale {
+        Scale::Bench => 0.55,
+        Scale::Full => 0.45,
+    };
+    run_model(scale, "rnn_rail", "fig12_rnn", target)
+}
+
+/// Fig. 13: linear SVM on chiller records.
+pub fn run_svm(scale: Scale) -> Result<SeriesTable> {
+    let target = match scale {
+        Scale::Bench => 0.30,
+        Scale::Full => 0.25,
+    };
+    run_model(scale, "svm_chiller", "fig13_svm", target)
+}

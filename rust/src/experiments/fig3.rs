@@ -1,0 +1,72 @@
+//! Fig. 3 — the commit-rate / implicit-momentum study on the 1:1:3 cluster:
+//!
+//! * (a) convergence time vs a fixed uniform commit rate ΔC_target —
+//!   U-shaped: too few commits (stale) and too many (communication-bound)
+//!   both hurt.
+//! * (b) μ_implicit vs ΔC_target from Theorem 1's formula (analytic), plus
+//!   the same quantity measured from the run's realized rates.
+//! * (c) convergence time vs *explicit* PS momentum μ at a high commit rate
+//!   (staleness ≈ 0, so explicit μ emulates μ_implicit).
+
+use anyhow::Result;
+
+use crate::config::profiles::ratio_cluster;
+use crate::sync::{implicit_momentum, SyncModelKind};
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let (base_speed, comm) = match scale {
+        Scale::Bench => (2.0, 0.3),
+        Scale::Full => (1.0, 0.5),
+    };
+    let cluster = ratio_cluster(&[1.0, 1.0, 3.0], base_speed, comm);
+    let speeds = cluster.speeds();
+
+    let mut table = SeriesTable::new(
+        "fig3_commit_rate",
+        &["series", "x", "convergence_time_s", "mu_implicit", "final_loss"],
+    );
+
+    // --- (a)+(b): fixed ΔC sweep ------------------------------------------
+    let sweep: &[u64] = match scale {
+        Scale::Bench => &[1, 2, 4, 8, 16],
+        Scale::Full => &[1, 2, 4, 6, 8, 12, 16, 24],
+    };
+    for &dc in sweep {
+        let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
+        spec.sync.fixed_delta_c = dc;
+        let gamma = spec.sync.gamma;
+        let out = run_sim(spec)?;
+        let mu = implicit_momentum(gamma, &vec![dc as f64; speeds.len()], &speeds);
+        table.push_row(vec![
+            "a_commit_rate".into(),
+            dc.to_string(),
+            fmt(out.convergence_time()),
+            fmt(mu),
+            fmt(out.final_loss),
+        ]);
+    }
+
+    // --- (c): explicit momentum sweep at a high commit rate ----------------
+    let mus: &[f64] = match scale {
+        Scale::Bench => &[0.0, 0.3, 0.6, 0.9],
+        Scale::Full => &[0.0, 0.2, 0.4, 0.6, 0.8, 0.9],
+    };
+    for &mu in mus {
+        let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
+        spec.sync.fixed_delta_c = 16; // fast commits → tiny implicit momentum
+        spec.sync.ps_momentum = mu;
+        let out = run_sim(spec)?;
+        table.push_row(vec![
+            "c_explicit_momentum".into(),
+            fmt(mu),
+            fmt(out.convergence_time()),
+            fmt(mu),
+            fmt(out.final_loss),
+        ]);
+    }
+
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,68 @@
+//! Fig. 4 — the headline comparison: ADSP vs BSP / SSP / ADACOMM / Fixed
+//! ADACOMM on the Table-1 EC2 cluster (CNN substitute at full scale).
+//!
+//! Emits (a) loss-vs-time series, (b) convergence times, (c) cumulative
+//! steps, (d) loss-vs-steps — one summary row per model plus downsampled
+//! curves in `results/fig4_curves.csv`.
+//!
+//! Paper shape to reproduce: ADSP fastest (≈80% over BSP, ≈53% over SSP,
+//! ≈33% over Fixed ADACOMM) while training the most steps.
+
+use anyhow::Result;
+
+use crate::config::profiles::ec2_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{downsample, fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub const BASELINES: [SyncModelKind; 5] = [
+    SyncModelKind::Bsp,
+    SyncModelKind::Ssp,
+    SyncModelKind::Adacomm,
+    SyncModelKind::FixedAdacomm,
+    SyncModelKind::Adsp,
+];
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let cluster = match scale {
+        Scale::Bench => ec2_cluster(6, 2.0, 0.3),
+        Scale::Full => ec2_cluster(18, 1.0, 0.5),
+    };
+
+    let mut table = SeriesTable::new(
+        "fig4_convergence",
+        &[
+            "sync",
+            "convergence_time_s",
+            "total_steps",
+            "total_commits",
+            "final_loss",
+            "best_loss",
+            "loss_drop_per_kstep",
+            "accuracy",
+        ],
+    );
+    let mut curves = SeriesTable::new("fig4_curves", &["sync", "t", "loss"]);
+
+    for kind in BASELINES {
+        let spec = spec_for(scale, kind, cluster.clone());
+        let out = run_sim(spec)?;
+        anyhow::ensure!(!out.deadlocked, "policy deadlock in {kind}");
+        for (t, loss) in downsample(&out, 60) {
+            curves.push_row(vec![kind.name().into(), fmt(t), fmt(loss)]);
+        }
+        table.push_row(vec![
+            kind.name().to_string(),
+            fmt(out.convergence_time()),
+            out.total_steps.to_string(),
+            out.total_commits.to_string(),
+            fmt(out.final_loss),
+            fmt(out.best_loss),
+            fmt(out.loss_drop_per_kstep()),
+            fmt(out.final_accuracy),
+        ]);
+    }
+    curves.write_csv()?;
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,50 @@
+//! Fig. 6 — impact of network latency: convergence under extra commit
+//! delays. Paper shape: local-update models (ADSP, ADACOMM, Fixed ADACOMM)
+//! degrade far less than per-step committers (BSP, SSP) as O_i grows, and
+//! ADSP stays fastest at every delay level.
+
+use anyhow::Result;
+
+use crate::config::profiles::ratio_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let (base_speed, comm) = match scale {
+        Scale::Bench => (2.0, 0.2),
+        Scale::Full => (1.0, 0.3),
+    };
+    let base = ratio_cluster(&[1.0, 1.0, 2.0, 3.0], base_speed, comm);
+    let delays: &[f64] = match scale {
+        Scale::Bench => &[0.0, 0.5, 2.0],
+        Scale::Full => &[0.0, 1.0, 4.0],
+    };
+
+    let mut table = SeriesTable::new(
+        "fig6_latency",
+        &["extra_delay_s", "sync", "convergence_time_s", "final_loss"],
+    );
+
+    for &d in delays {
+        let cluster = base.clone().with_extra_delay(d);
+        for kind in [
+            SyncModelKind::Bsp,
+            SyncModelKind::Ssp,
+            SyncModelKind::Adacomm,
+            SyncModelKind::FixedAdacomm,
+            SyncModelKind::Adsp,
+        ] {
+            let spec = spec_for(scale, kind, cluster.clone());
+            let out = run_sim(spec)?;
+            table.push_row(vec![
+                fmt(d),
+                kind.name().to_string(),
+                fmt(out.convergence_time()),
+                fmt(out.final_loss),
+            ]);
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,39 @@
+//! Fig. 5(f) / Fig. 7 — system scalability: ADSP vs Fixed ADACOMM as the
+//! worker count doubles (paper: 18 → 36, same hardware distribution).
+//! Paper shape: both slow down at larger scale, ADSP's advantage widens.
+
+use anyhow::Result;
+
+use crate::config::profiles::ec2_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let (sizes, base_speed, comm): (&[usize], f64, f64) = match scale {
+        Scale::Bench => (&[6, 12], 2.0, 0.3),
+        Scale::Full => (&[18, 36], 1.0, 0.5),
+    };
+
+    let mut table = SeriesTable::new(
+        "fig7_scalability",
+        &["workers", "sync", "convergence_time_s", "final_loss", "total_steps"],
+    );
+
+    for &n in sizes {
+        let cluster = ec2_cluster(n, base_speed, comm);
+        for kind in [SyncModelKind::FixedAdacomm, SyncModelKind::Adsp] {
+            let spec = spec_for(scale, kind, cluster.clone());
+            let out = run_sim(spec)?;
+            table.push_row(vec![
+                n.to_string(),
+                kind.name().to_string(),
+                fmt(out.convergence_time()),
+                fmt(out.final_loss),
+                out.total_steps.to_string(),
+            ]);
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,60 @@
+//! Fig. 9 — ADSP vs BatchTune (R²SP-style batch-size adaptation applied to
+//! BSP and Fixed ADACOMM). Paper shape: BatchTune clearly helps both
+//! baselines, but ADSP still converges fastest.
+
+use anyhow::Result;
+
+use crate::config::profiles::ratio_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let (base_speed, comm) = match scale {
+        Scale::Bench => (2.0, 0.3),
+        Scale::Full => (1.0, 0.5),
+    };
+    let cluster = ratio_cluster(&[1.0, 1.0, 2.0, 3.0], base_speed, comm);
+
+    let mut table = SeriesTable::new(
+        "fig9_batchtune",
+        &["sync", "convergence_time_s", "final_loss", "batch_sizes"],
+    );
+
+    for kind in [
+        SyncModelKind::Bsp,
+        SyncModelKind::BatchTuneBsp,
+        SyncModelKind::FixedAdacomm,
+        SyncModelKind::BatchTuneFixedAdacomm,
+        SyncModelKind::Adsp,
+    ] {
+        let mut spec = spec_for(scale, kind, cluster.clone());
+        // BatchTune needs multiple batch variants; the bench model exposes
+        // {32, 128}, the CNN {32, 64, 128, 256}.
+        if scale == Scale::Bench {
+            spec.batch_size = 32;
+        }
+        let b_ref = spec.batch_size;
+        let out = run_sim(spec)?;
+        let batches = if kind.is_batchtune() {
+            let available = crate::runtime::ModelRuntime::load_by_name(&out.model)?
+                .manifest
+                .batch_sizes();
+            format!(
+                "{:?}",
+                crate::sync::assign_batchtune_sizes(&cluster.speeds(), b_ref, &available)
+            )
+            .replace(',', ";")
+        } else {
+            b_ref.to_string()
+        };
+        table.push_row(vec![
+            kind.name().to_string(),
+            fmt(out.convergence_time()),
+            fmt(out.final_loss),
+            batches,
+        ]);
+    }
+    table.write_csv()?;
+    Ok(table)
+}

@@ -1,0 +1,50 @@
+//! Experiment harness: one driver per paper figure/table (see DESIGN.md §4
+//! for the full index). Each driver runs the relevant sweep through the
+//! simulator, prints the figure's series as CSV rows, and writes them under
+//! `results/`.
+//!
+//! Every driver takes a [`common::Scale`]: `Scale::Bench` is the reduced
+//! configuration used by `cargo bench` (small model, short horizon — shape,
+//! not absolute numbers); `Scale::Full` is the paper-sized configuration run
+//! via `adsp experiment <fig> --full`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12_13;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+
+pub use common::{Scale, SeriesTable};
+
+use anyhow::Result;
+
+/// Run a figure by name ("fig1" … "fig13"); returns the printed table.
+pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
+    match name {
+        "fig1" => fig1::run(scale),
+        "fig3" | "fig3a" | "fig3b" | "fig3c" => fig3::run(scale),
+        "fig4" => fig4::run(scale),
+        "fig5" => fig5::run(scale),
+        "fig6" => fig6::run(scale),
+        "fig7" => fig7::run(scale),
+        "fig8" => fig8::run(scale),
+        "fig9" => fig9::run(scale),
+        "fig10" | "fig10a" | "fig10b" => fig10::run(scale),
+        "fig11" => fig11::run(scale),
+        "fig12" => fig12_13::run_rnn(scale),
+        "fig13" => fig12_13::run_svm(scale),
+        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig13)"),
+    }
+}
+
+pub const ALL_FIGURES: [&str; 12] = [
+    "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "fig13",
+];

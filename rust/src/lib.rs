@@ -1,0 +1,36 @@
+//! # ADSP — Distributed Machine Learning through Heterogeneous Edge Systems
+//!
+//! A full reproduction of the AAAI 2020 paper by Hu, Wang and Wu, built as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator: the
+//!   parameter server, the heterogeneous-worker runtime, the ADSP scheduler
+//!   with its online commit-rate search, the full baseline zoo (BSP, SSP,
+//!   TAP, ADACOMM, Fixed ADACOMM, ADSP⁺, ADSP⁺⁺, BatchTune), a deterministic
+//!   discrete-event cluster simulator, a tokio real-time engine, and the
+//!   experiment harness regenerating every figure in the paper.
+//! * **Layer 2 (python/compile, build-time only)** — the jax model zoo whose
+//!   `local_steps` / `eval_step` / `apply_commit` graphs are AOT-lowered to
+//!   HLO-text artifacts.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels (tiled matmul,
+//!   fused local-SGD step, commit apply) called inside those graphs.
+//!
+//! Python never runs on the training path: the rust binary loads the HLO
+//! artifacts once via PJRT ([`runtime`]) and drives everything from there.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-figure
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod simulation;
+pub mod sync;
+pub mod util;
+
+pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+pub use simulation::{SimEngine, SimOutcome};
+pub use sync::SyncModelKind;

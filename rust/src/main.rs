@@ -1,0 +1,259 @@
+//! `adsp` — the launcher CLI (hand-rolled arg parsing; this environment has
+//! no clap — see Cargo.toml).
+//!
+//! * `adsp train [flags]`       — run one training job (sim or real-time).
+//! * `adsp experiment <fig>`    — regenerate a paper figure (CSV + stdout).
+//! * `adsp inspect <model>`     — show a model artifact's manifest.
+//! * `adsp list`                — list models / sync policies / experiments.
+
+use std::str::FromStr;
+
+use anyhow::{bail, Context, Result};
+
+use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+use adsp::coordinator::RealtimeEngine;
+use adsp::experiments::{self, Scale};
+use adsp::runtime::ModelRuntime;
+use adsp::simulation::SimEngine;
+use adsp::sync::SyncModelKind;
+
+const USAGE: &str = "\
+adsp — ADSP: distributed ML through heterogeneous edge systems (AAAI 2020)
+
+USAGE:
+  adsp train [--model M] [--sync S] [--workers SPEC] [--comm SECS]
+             [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
+             [--target-loss L] [--config FILE.json] [--realtime]
+             [--time-scale F] [--seed N]
+  adsp experiment <fig1|fig3..fig13|all> [--full]
+  adsp inspect <model>
+  adsp list
+
+TRAIN FLAGS:
+  --model M        model name (default mlp_quick; see `adsp list`)
+  --sync S         bsp|ssp|tap|adacomm|fixed_adacomm|adsp|adsp_plus|
+                   batch_tune_bsp|batch_tune_fixed_adacomm  (default adsp)
+  --workers SPEC   comma speeds \"1.0,1.0,0.33\", or ec2:<n> / geekbench:<n>
+  --comm SECS      commit round-trip time O_i (default 0.3)
+  --batch N        mini-batch size (default 32)
+  --gamma SECS     ADSP check period (default 60)
+  --max-secs S     virtual-time cap (default 600)
+  --max-steps N    total-step cap (default 100000)
+  --target-loss L  convergence target (default: variance rule only)
+  --config FILE    JSON ExperimentSpec (overrides the flags above)
+  --realtime       run the wall-clock thread cluster instead of the simulator
+  --time-scale F   wall secs per virtual sec in --realtime (default 0.02)
+  --seed N         experiment seed (default 0)
+";
+
+/// Tiny flag parser: --key value pairs plus boolean switches.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut switches = std::collections::HashSet::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    switches.insert(name.to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .with_context(|| format!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), val.clone());
+                    i += 2;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags, switches })
+    }
+
+    fn get<T: FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+}
+
+fn parse_cluster(workers: &str, comm: f64, seed: u64) -> Result<ClusterSpec> {
+    if let Some(n) = workers.strip_prefix("ec2:") {
+        return Ok(profiles::ec2_cluster(n.parse()?, 1.0, comm));
+    }
+    if let Some(n) = workers.strip_prefix("geekbench:") {
+        return Ok(profiles::geekbench_cluster(n.parse()?, 1.0, comm, seed));
+    }
+    let speeds: Vec<f64> = workers
+        .split(',')
+        .map(|s| s.trim().parse::<f64>().context("bad worker speed"))
+        .collect::<Result<_>>()?;
+    Ok(ClusterSpec::new(speeds.into_iter().map(|v| WorkerSpec::new(v, comm)).collect()))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let spec = if let Some(path) = args.flags.get("config") {
+        ExperimentSpec::load(std::path::Path::new(path))?
+    } else {
+        let sync = args.get::<String>("sync", "adsp".into())?;
+        let kind = SyncModelKind::from_str(&sync).map_err(anyhow::Error::msg)?;
+        let seed = args.get("seed", 0u64)?;
+        let comm = args.get("comm", 0.3)?;
+        let workers = args.get::<String>("workers", "1.0,1.0,0.33".into())?;
+        let cluster = parse_cluster(&workers, comm, seed)?;
+        let model = args.get::<String>("model", "mlp_quick".into())?;
+        let mut s = ExperimentSpec::new(&model, cluster, SyncSpec::new(kind));
+        s.batch_size = args.get("batch", 32usize)?;
+        s.sync.gamma = args.get("gamma", 60.0)?;
+        s.max_virtual_secs = args.get("max-secs", 600.0)?;
+        s.max_total_steps = args.get("max-steps", 100_000u64)?;
+        s.target_loss = args.get("target-loss", 0.0)?;
+        s.seed = seed;
+        s
+    };
+
+    if args.has("realtime") {
+        let time_scale = args.get("time-scale", 0.02)?;
+        let out = RealtimeEngine::new(spec, time_scale).run()?;
+        println!("model:          {}", out.model);
+        println!("sync:           {}", out.sync);
+        println!(
+            "converged:      {}",
+            out.converged_at_virtual
+                .map(|t| format!("{t:.1}s virtual"))
+                .unwrap_or_else(|| "no (hit cap)".into())
+        );
+        println!("end:            {:.1}s virtual / {:.2}s wall", out.end_virtual, out.wall_secs);
+        println!("total steps:    {}", out.total_steps);
+        println!("total commits:  {}", out.total_commits);
+        println!("final loss:     {:.4}", out.final_loss);
+        println!(
+            "breakdown:      compute {:.1}s | comm {:.1}s | blocked {:.1}s",
+            out.breakdown.avg_compute_secs,
+            out.breakdown.avg_comm_secs,
+            out.breakdown.avg_blocked_secs
+        );
+    } else {
+        let out = SimEngine::new(spec)?.run()?;
+        print_outcome_summary(&out);
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "train" => {
+            let args = Args::parse(rest, &["realtime"])?;
+            cmd_train(&args)?;
+        }
+        "experiment" => {
+            let args = Args::parse(rest, &["full"])?;
+            let Some(name) = args.positional.first() else {
+                bail!("usage: adsp experiment <fig1|fig3..fig13|all> [--full]");
+            };
+            let scale = if args.has("full") { Scale::Full } else { Scale::Bench };
+            if name == "all" {
+                for fig in experiments::ALL_FIGURES {
+                    let t0 = std::time::Instant::now();
+                    let table = experiments::run_by_name(fig, scale)?;
+                    table.print();
+                    table.write_csv()?;
+                    eprintln!("[{fig}: {:.1}s]", t0.elapsed().as_secs_f64());
+                }
+            } else {
+                let table = experiments::run_by_name(name, scale)?;
+                table.print();
+                let path = table.write_csv()?;
+                eprintln!("wrote {path:?}");
+            }
+        }
+        "inspect" => {
+            let args = Args::parse(rest, &[])?;
+            let Some(model) = args.positional.first() else {
+                bail!("usage: adsp inspect <model>");
+            };
+            let rt = ModelRuntime::load_by_name(model)?;
+            println!("{}", rt.manifest.to_json().dump_pretty());
+        }
+        "list" => {
+            let root = adsp::runtime::artifacts_root();
+            println!("artifacts root: {root:?}");
+            let mut models: Vec<String> = std::fs::read_dir(&root)
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .filter(|e| e.path().join("manifest.json").is_file())
+                        .map(|e| e.file_name().to_string_lossy().into_owned())
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.sort();
+            println!("models: {models:?}");
+            let kinds: Vec<&str> = SyncModelKind::ALL.iter().map(|k| k.name()).collect();
+            println!("sync models: {kinds:?}");
+            println!("experiments: {:?}", experiments::ALL_FIGURES);
+        }
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn print_outcome_summary(out: &adsp::simulation::SimOutcome) {
+    println!("model:            {}", out.model);
+    println!("sync:             {}", out.sync_describe);
+    println!(
+        "converged:        {}",
+        out.converged_at
+            .map(|t| format!("{t:.1}s (virtual)"))
+            .unwrap_or_else(|| "no (hit cap)".into())
+    );
+    println!("end time:         {:.1}s virtual / {:.2}s wall", out.end_time, out.wall_secs);
+    println!("total steps:      {}", out.total_steps);
+    println!("total commits:    {}", out.total_commits);
+    println!("final loss:       {:.4} (best {:.4})", out.final_loss, out.best_loss);
+    println!("final accuracy:   {:.3}", out.final_accuracy);
+    println!(
+        "breakdown:        compute {:.1}s | wait {:.1}s (comm {:.1} + blocked {:.1}) → waiting {:.0}%",
+        out.breakdown.avg_compute_secs,
+        out.breakdown.avg_waiting_secs,
+        out.breakdown.avg_comm_secs,
+        out.breakdown.avg_blocked_secs,
+        100.0 * out.breakdown.waiting_fraction()
+    );
+    println!(
+        "bandwidth:        {:.2} MB/s ({} MB total)",
+        out.bandwidth_bytes_per_sec() / 1e6,
+        out.bytes_total / 1_000_000
+    );
+    println!("xla executions:   {}", out.xla_execs);
+}

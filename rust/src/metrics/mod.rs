@@ -1,0 +1,220 @@
+//! Evaluation substrate: per-worker time breakdown (Fig. 1), bandwidth
+//! accounting (Fig. 10a), the global loss log (Figs. 4/5/6/11–13) and the
+//! paper's convergence detector (§5.2: stop when the loss variance over the
+//! last 10 evaluations is small enough).
+
+use crate::util::variance;
+
+/// Per-worker timing/traffic counters.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerMetrics {
+    /// Seconds spent computing gradients (steps × per-step time).
+    pub compute_secs: f64,
+    /// Seconds spent communicating (commit round trips).
+    pub comm_secs: f64,
+    /// Seconds spent blocked at synchronization barriers.
+    pub blocked_secs: f64,
+    pub steps: u64,
+    pub commits: u64,
+    /// Bytes pushed to the PS (updates).
+    pub bytes_up: u64,
+    /// Bytes pulled from the PS (fresh parameters).
+    pub bytes_down: u64,
+}
+
+impl WorkerMetrics {
+    /// The paper's "waiting time": everything that is not computation.
+    pub fn waiting_secs(&self) -> f64 {
+        self.comm_secs + self.blocked_secs
+    }
+}
+
+/// Aggregated cluster breakdown (Fig. 1's bars, averaged over workers).
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub avg_compute_secs: f64,
+    pub avg_waiting_secs: f64,
+    pub avg_comm_secs: f64,
+    pub avg_blocked_secs: f64,
+}
+
+impl Breakdown {
+    pub fn from_workers(ws: &[WorkerMetrics]) -> Self {
+        let n = ws.len().max(1) as f64;
+        Breakdown {
+            avg_compute_secs: ws.iter().map(|w| w.compute_secs).sum::<f64>() / n,
+            avg_waiting_secs: ws.iter().map(|w| w.waiting_secs()).sum::<f64>() / n,
+            avg_comm_secs: ws.iter().map(|w| w.comm_secs).sum::<f64>() / n,
+            avg_blocked_secs: ws.iter().map(|w| w.blocked_secs).sum::<f64>() / n,
+        }
+    }
+
+    /// Fraction of total time spent waiting (Fig. 1's headline number).
+    pub fn waiting_fraction(&self) -> f64 {
+        let total = self.avg_compute_secs + self.avg_waiting_secs;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.avg_waiting_secs / total
+        }
+    }
+}
+
+/// One global-model evaluation sample.
+#[derive(Clone, Copy, Debug)]
+pub struct LossSample {
+    /// Virtual time (seconds).
+    pub t: f64,
+    /// Cumulative local steps across all workers at sample time.
+    pub total_steps: u64,
+    pub loss: f64,
+    pub accuracy: f64,
+}
+
+/// Time-series of global evaluations.
+#[derive(Clone, Debug, Default)]
+pub struct LossLog {
+    pub samples: Vec<LossSample>,
+}
+
+impl LossLog {
+    pub fn push(&mut self, t: f64, total_steps: u64, loss: f64, accuracy: f64) {
+        self.samples.push(LossSample { t, total_steps, loss, accuracy });
+    }
+
+    pub fn last_loss(&self) -> Option<f64> {
+        self.samples.last().map(|s| s.loss)
+    }
+
+    pub fn first_loss(&self) -> Option<f64> {
+        self.samples.first().map(|s| s.loss)
+    }
+
+    /// First time the loss dropped to `target` (linear scan).
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.samples.iter().find(|s| s.loss <= target).map(|s| s.t)
+    }
+
+    /// Min loss over the run.
+    pub fn best_loss(&self) -> Option<f64> {
+        self.samples.iter().map(|s| s.loss).min_by(f64::total_cmp)
+    }
+}
+
+/// Paper §5.2: "we stop training … when the loss variance is smaller than a
+/// small enough value for 10 steps", optionally also requiring the mean to
+/// be at/below a target plateau so flat early phases don't trigger.
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    window: usize,
+    tol: f64,
+    target_loss: f64,
+    recent: std::collections::VecDeque<f64>,
+}
+
+impl ConvergenceDetector {
+    pub fn new(window: usize, tol: f64, target_loss: f64) -> Self {
+        ConvergenceDetector {
+            window: window.max(2),
+            tol,
+            target_loss,
+            recent: std::collections::VecDeque::new(),
+        }
+    }
+
+    /// Feed a new eval loss; returns true once converged.
+    pub fn push(&mut self, loss: f64) -> bool {
+        if !loss.is_finite() {
+            return false;
+        }
+        self.recent.push_back(loss);
+        if self.recent.len() > self.window {
+            self.recent.pop_front();
+        }
+        self.check()
+    }
+
+    pub fn check(&self) -> bool {
+        if self.recent.len() < self.window {
+            return false;
+        }
+        let xs: Vec<f64> = self.recent.iter().copied().collect();
+        let var = variance(&xs);
+        if var > self.tol {
+            return false;
+        }
+        if self.target_loss > 0.0 {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            return mean <= self.target_loss;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_averages() {
+        let ws = vec![
+            WorkerMetrics { compute_secs: 10.0, comm_secs: 2.0, blocked_secs: 8.0, ..Default::default() },
+            WorkerMetrics { compute_secs: 20.0, comm_secs: 0.0, blocked_secs: 0.0, ..Default::default() },
+        ];
+        let b = Breakdown::from_workers(&ws);
+        assert!((b.avg_compute_secs - 15.0).abs() < 1e-12);
+        assert!((b.avg_waiting_secs - 5.0).abs() < 1e-12);
+        assert!((b.waiting_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convergence_requires_flat_window() {
+        let mut det = ConvergenceDetector::new(5, 1e-4, 0.0);
+        for i in 0..4 {
+            assert!(!det.push(1.0 / (i + 1) as f64));
+        }
+        // Still descending steeply → variance high.
+        assert!(!det.push(0.05));
+        // Now feed a flat tail.
+        let mut fired = false;
+        for _ in 0..5 {
+            fired = det.push(0.05);
+        }
+        assert!(fired);
+    }
+
+    #[test]
+    fn convergence_respects_target() {
+        let mut det = ConvergenceDetector::new(3, 1e-3, 0.1);
+        // Flat but ABOVE target → not converged.
+        for _ in 0..5 {
+            assert!(!det.push(0.5));
+        }
+        let mut det2 = ConvergenceDetector::new(3, 1e-3, 0.6);
+        let mut fired = false;
+        for _ in 0..3 {
+            fired = det2.push(0.5);
+        }
+        assert!(fired);
+    }
+
+    #[test]
+    fn nan_losses_ignored() {
+        let mut det = ConvergenceDetector::new(2, 1e-3, 0.0);
+        assert!(!det.push(f64::NAN));
+        assert!(!det.push(1.0));
+        assert!(det.push(1.0));
+    }
+
+    #[test]
+    fn loss_log_queries() {
+        let mut log = LossLog::default();
+        log.push(0.0, 0, 2.0, 0.1);
+        log.push(10.0, 100, 1.0, 0.4);
+        log.push(20.0, 200, 0.5, 0.7);
+        assert_eq!(log.time_to_loss(1.0), Some(10.0));
+        assert_eq!(log.time_to_loss(0.1), None);
+        assert_eq!(log.best_loss(), Some(0.5));
+        assert_eq!(log.first_loss(), Some(2.0));
+    }
+}

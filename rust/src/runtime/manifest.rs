@@ -1,0 +1,347 @@
+//! The artifact contract, mirrored from `python/compile/aot.py` (keep the two
+//! in sync — the calling convention is documented in `python/compile/model.py`).
+//!
+//! Flattened argument order for every artifact follows the *sorted* parameter
+//! name order recorded in `params`:
+//!
+//! * `local_steps_k{K}_b{B}`: params P…, U P…, xs `[K,B,*x_shape]`,
+//!   ys `[K,B,*y_shape]`, eta' `f32[]` → params' P…, U' P…, losses `f32[K]`
+//! * `eval_step_b{B}`: params P…, x, y → loss `f32[]`, correct `f32[]`
+//! * `apply_commit`: W P…, U P…, eta → W' P…
+//! * `apply_commit_momentum`: W P…, U P…, V P…, eta, mu → W' P…, V' P…
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct StepVariant {
+    /// Number of local steps fused into one execute (lax.scan length).
+    pub k: usize,
+    /// Mini-batch size.
+    pub b: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalMeta {
+    pub b: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub seed: u64,
+    pub params: Vec<ParamMeta>,
+    pub total_param_numel: usize,
+    pub bytes_per_commit: usize,
+    pub x_shape: Vec<usize>,
+    pub x_dtype: String,
+    pub y_shape: Vec<usize>,
+    pub y_dtype: String,
+    pub num_classes: usize,
+    pub local_steps: Vec<StepVariant>,
+    pub eval: EvalMeta,
+    pub apply: String,
+    pub apply_momentum: String,
+    pub init_params: String,
+    pub init_params_sha256: String,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`?)"))?;
+        let m = Self::from_json_str(&text)
+            .with_context(|| format!("parsing manifest {path:?}"))?;
+        m.validate(dir)?;
+        Ok(m)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let params = v
+            .req("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.req("name")?.as_str()?.to_string(),
+                    shape: p.req("shape")?.usize_vec()?,
+                    numel: p.req("numel")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let local_steps = v
+            .req("local_steps")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(StepVariant {
+                    k: e.req("k")?.as_usize()?,
+                    b: e.req("b")?.as_usize()?,
+                    file: e.req("file")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let eval = EvalMeta {
+            b: v.req("eval")?.req("b")?.as_usize()?,
+            file: v.req("eval")?.req("file")?.as_str()?.to_string(),
+        };
+        Ok(Manifest {
+            model: v.req("model")?.as_str()?.to_string(),
+            seed: v.u64_or("seed", 0)?,
+            params,
+            total_param_numel: v.req("total_param_numel")?.as_usize()?,
+            bytes_per_commit: v.req("bytes_per_commit")?.as_usize()?,
+            x_shape: v.req("x_shape")?.usize_vec()?,
+            x_dtype: v.req("x_dtype")?.as_str()?.to_string(),
+            y_shape: v.req("y_shape")?.usize_vec()?,
+            y_dtype: v.req("y_dtype")?.as_str()?.to_string(),
+            num_classes: v.req("num_classes")?.as_usize()?,
+            local_steps,
+            eval,
+            apply: v.req("apply")?.as_str()?.to_string(),
+            apply_momentum: v.req("apply_momentum")?.as_str()?.to_string(),
+            init_params: v.req("init_params")?.as_str()?.to_string(),
+            init_params_sha256: v.str_or("init_params_sha256", "")?.to_string(),
+            jax_version: v.str_or("jax_version", "")?.to_string(),
+        })
+    }
+
+    /// Serialize back to JSON (CLI `inspect`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "params",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("name", Json::str(p.name.clone())),
+                                (
+                                    "shape",
+                                    Json::Arr(p.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                                ),
+                                ("numel", Json::num(p.numel as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("total_param_numel", Json::num(self.total_param_numel as f64)),
+            ("bytes_per_commit", Json::num(self.bytes_per_commit as f64)),
+            ("x_shape", Json::Arr(self.x_shape.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("x_dtype", Json::str(self.x_dtype.clone())),
+            ("y_shape", Json::Arr(self.y_shape.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("y_dtype", Json::str(self.y_dtype.clone())),
+            ("num_classes", Json::num(self.num_classes as f64)),
+            (
+                "local_steps",
+                Json::Arr(
+                    self.local_steps
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("k", Json::num(e.k as f64)),
+                                ("b", Json::num(e.b as f64)),
+                                ("file", Json::str(e.file.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "eval",
+                Json::obj(vec![
+                    ("b", Json::num(self.eval.b as f64)),
+                    ("file", Json::str(self.eval.file.clone())),
+                ]),
+            ),
+            ("apply", Json::str(self.apply.clone())),
+            ("apply_momentum", Json::str(self.apply_momentum.clone())),
+            ("init_params", Json::str(self.init_params.clone())),
+            ("jax_version", Json::str(self.jax_version.clone())),
+        ])
+    }
+
+    /// Structural validation: referenced files exist, param metadata is
+    /// self-consistent, the init blob has the right byte length.
+    pub fn validate(&self, dir: &Path) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.numel).sum();
+        if total != self.total_param_numel {
+            bail!(
+                "manifest {}: param numel sum {} != total_param_numel {}",
+                self.model, total, self.total_param_numel
+            );
+        }
+        for p in &self.params {
+            let numel: usize = p.shape.iter().product::<usize>().max(1);
+            if numel != p.numel {
+                bail!("manifest {}: param {} shape/numel mismatch", self.model, p.name);
+            }
+        }
+        let mut names: Vec<&str> = self.params.iter().map(|p| p.name.as_str()).collect();
+        let sorted = {
+            let mut s = names.clone();
+            s.sort_unstable();
+            s
+        };
+        if names != sorted {
+            bail!("manifest {}: params not in sorted order", self.model);
+        }
+        names.dedup();
+        if names.len() != self.params.len() {
+            bail!("manifest {}: duplicate param names", self.model);
+        }
+        if self.local_steps.is_empty() {
+            bail!("manifest {}: no local_steps variants", self.model);
+        }
+        for v in &self.local_steps {
+            let f = dir.join(&v.file);
+            if !f.is_file() {
+                bail!("manifest {}: missing artifact {f:?}", self.model);
+            }
+        }
+        for f in [&self.eval.file, &self.apply, &self.apply_momentum] {
+            if !dir.join(f).is_file() {
+                bail!("manifest {}: missing artifact {f}", self.model);
+            }
+        }
+        let init = dir.join(&self.init_params);
+        let meta = std::fs::metadata(&init)
+            .with_context(|| format!("missing init params {init:?}"))?;
+        if meta.len() as usize != 4 * self.total_param_numel {
+            bail!(
+                "manifest {}: init_params.bin is {} bytes, expected {}",
+                self.model, meta.len(), 4 * self.total_param_numel
+            );
+        }
+        Ok(())
+    }
+
+    /// Batch sizes available for `local_steps` (sorted ascending, deduped).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut bs: Vec<usize> = self.local_steps.iter().map(|v| v.b).collect();
+        bs.sort_unstable();
+        bs.dedup();
+        bs
+    }
+
+    /// k-variants available for batch size `b` (sorted descending).
+    pub fn k_variants(&self, b: usize) -> Vec<usize> {
+        let mut ks: Vec<usize> =
+            self.local_steps.iter().filter(|v| v.b == b).map(|v| v.k).collect();
+        ks.sort_unstable_by(|a, c| c.cmp(a));
+        ks
+    }
+
+    pub fn variant(&self, k: usize, b: usize) -> Option<&StepVariant> {
+        self.local_steps.iter().find(|v| v.k == k && v.b == b)
+    }
+
+    /// Decompose `tau` local steps into available scan lengths for batch `b`,
+    /// largest-first (e.g. tau=23, ks={16,4,1} → [16,4,1,1,1]).
+    pub fn decompose_tau(&self, tau: usize, b: usize) -> Result<Vec<usize>> {
+        let ks = self.k_variants(b);
+        if ks.is_empty() {
+            bail!("model {}: no local_steps variants for batch size {b}", self.model);
+        }
+        if !ks.contains(&1) {
+            bail!("model {}: need a k=1 variant for batch size {b}", self.model);
+        }
+        let mut rest = tau;
+        let mut plan = Vec::new();
+        for &k in &ks {
+            while rest >= k {
+                plan.push(k);
+                rest -= k;
+            }
+        }
+        debug_assert_eq!(rest, 0);
+        Ok(plan)
+    }
+
+    pub fn param_file(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.init_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            model: "m".into(),
+            seed: 0,
+            params: vec![
+                ParamMeta { name: "a/w".into(), shape: vec![2, 3], numel: 6 },
+                ParamMeta { name: "b/w".into(), shape: vec![4], numel: 4 },
+            ],
+            total_param_numel: 10,
+            bytes_per_commit: 40,
+            x_shape: vec![2],
+            x_dtype: "f32".into(),
+            y_shape: vec![],
+            y_dtype: "i32".into(),
+            num_classes: 2,
+            local_steps: vec![
+                StepVariant { k: 1, b: 8, file: "x".into() },
+                StepVariant { k: 4, b: 8, file: "x".into() },
+                StepVariant { k: 16, b: 8, file: "x".into() },
+                StepVariant { k: 1, b: 32, file: "x".into() },
+            ],
+            eval: EvalMeta { b: 8, file: "x".into() },
+            apply: "x".into(),
+            apply_momentum: "x".into(),
+            init_params: "x".into(),
+            init_params_sha256: String::new(),
+            jax_version: String::new(),
+        }
+    }
+
+    #[test]
+    fn decompose_tau_exact() {
+        let m = sample_manifest();
+        assert_eq!(m.decompose_tau(23, 8).unwrap(), vec![16, 4, 1, 1, 1]);
+        assert_eq!(m.decompose_tau(1, 8).unwrap(), vec![1]);
+        assert_eq!(m.decompose_tau(16, 8).unwrap(), vec![16]);
+        assert_eq!(m.decompose_tau(0, 8).unwrap(), Vec::<usize>::new());
+        // Batch 32 only has k=1.
+        assert_eq!(m.decompose_tau(3, 32).unwrap(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn decompose_tau_sums() {
+        let m = sample_manifest();
+        for tau in 0..200 {
+            let plan = m.decompose_tau(tau, 8).unwrap();
+            assert_eq!(plan.iter().sum::<usize>(), tau);
+        }
+    }
+
+    #[test]
+    fn batch_and_k_queries() {
+        let m = sample_manifest();
+        assert_eq!(m.batch_sizes(), vec![8, 32]);
+        assert_eq!(m.k_variants(8), vec![16, 4, 1]);
+        assert!(m.variant(4, 8).is_some());
+        assert!(m.variant(4, 32).is_none());
+    }
+}

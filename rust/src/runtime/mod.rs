@@ -1,0 +1,43 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py`, compile them once, and execute them on the
+//! training hot path. Python never runs here.
+//!
+//! * [`manifest`] — the artifact contract (shapes, dtypes, calling
+//!   convention) mirrored from `manifest.json`; validated at load.
+//! * [`tensor`] — host-side parameter sets and batches, plus XLA literal
+//!   conversion.
+//! * [`model`] — [`model::ModelRuntime`]: one compiled-executable cache per
+//!   model directory with typed wrappers for `local_steps`, `eval_step`,
+//!   `apply_commit` and `apply_commit_momentum`.
+//! * [`native`] — pure-rust reference implementations of the PS/worker
+//!   update rules, used for cross-validation against the XLA path and as
+//!   the simulator's fast apply.
+
+pub mod manifest;
+pub mod model;
+pub mod native;
+pub mod tensor;
+
+pub use manifest::{Manifest, ParamMeta, StepVariant};
+pub use model::ModelRuntime;
+pub use tensor::{Batch, BatchData, ParamSet};
+
+/// Default artifacts root, overridable with the `ADSP_ARTIFACTS` env var
+/// (used by tests and benches so they run from any working directory).
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("ADSP_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from the current dir looking for an `artifacts/` directory so
+    // `cargo test` / examples work from the repo root or any subdirectory.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

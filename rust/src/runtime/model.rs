@@ -1,0 +1,241 @@
+//! `ModelRuntime`: the per-model PJRT executable cache and the typed step
+//! wrappers the coordinator calls on the hot path.
+//!
+//! Artifacts are compiled lazily (first use) and cached for the lifetime of
+//! the runtime; compilation happens once per process per artifact, matching
+//! the "python runs once, rust serves forever" deployment contract.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::{f32_literal, Batch, ParamSet};
+
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Running count of XLA executions (profiling aid for the perf pass).
+    pub exec_count: RefCell<u64>,
+    /// Cumulative wall time spent inside XLA execute + result marshalling
+    /// (everything else is L3 coordinator overhead).
+    pub exec_secs: RefCell<f64>,
+}
+
+impl ModelRuntime {
+    /// Load a model's artifact directory (e.g. `artifacts/cnn_cifar`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ModelRuntime {
+            client,
+            manifest,
+            dir,
+            execs: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+            exec_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Load by model name from the default artifacts root.
+    pub fn load_by_name(model: &str) -> Result<Self> {
+        Self::load(super::artifacts_root().join(model))
+    }
+
+    pub fn init_params(&self) -> Result<ParamSet> {
+        ParamSet::load(&self.manifest, &self.dir)
+    }
+
+    fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.execs.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+        );
+        self.execs.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (so hot-path timings exclude compiles).
+    pub fn warmup(&self) -> Result<()> {
+        let all: Vec<usize> = self.manifest.batch_sizes();
+        self.warmup_for(&all)
+    }
+
+    /// Compile only the variants a run will actually use (the batch sizes in
+    /// play) plus eval/apply. On a 1-core host this cuts cluster start-up by
+    /// the unused-variant compile time (see EXPERIMENTS.md §Perf).
+    pub fn warmup_for(&self, batch_sizes: &[usize]) -> Result<()> {
+        let files: Vec<String> = self
+            .manifest
+            .local_steps
+            .iter()
+            .filter(|v| batch_sizes.contains(&v.b))
+            .map(|v| v.file.clone())
+            .chain([
+                self.manifest.eval.file.clone(),
+                self.manifest.apply.clone(),
+                self.manifest.apply_momentum.clone(),
+            ])
+            .collect();
+        for f in files {
+            self.executable(&f)?;
+        }
+        Ok(())
+    }
+
+    fn run(&self, file: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        *self.exec_count.borrow_mut() += 1;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(args)?;
+        let literal = result[0][0].to_literal_sync()?;
+        let outs = literal.to_tuple()?;
+        *self.exec_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Run `k` fused local SGD steps (paper Alg. 2 worker loop): updates
+    /// `params` and `u` in place, returns the per-step losses.
+    ///
+    /// `xs.dims` must be `[k, b, *x_shape]` and `ys.dims` `[k, b, *y_shape]`
+    /// for an available `(k, b)` variant.
+    pub fn local_steps(
+        &self,
+        params: &mut ParamSet,
+        u: &mut ParamSet,
+        xs: &Batch,
+        ys: &Batch,
+        eta_prime: f32,
+    ) -> Result<Vec<f32>> {
+        let (k, b) = (xs.dims[0], xs.dims[1]);
+        let variant = self
+            .manifest
+            .variant(k, b)
+            .with_context(|| format!("no local_steps variant k={k} b={b} for {}", self.manifest.model))?
+            .clone();
+
+        let n = self.manifest.params.len();
+        let mut args = Vec::with_capacity(2 * n + 3);
+        args.extend(params.to_literals(&self.manifest)?);
+        args.extend(u.to_literals(&self.manifest)?);
+        args.push(xs.to_literal()?);
+        args.push(ys.to_literal()?);
+        args.push(f32_literal(&[eta_prime], &[])?);
+
+        let outs = self.run(&variant.file, &args)?;
+        if outs.len() != 2 * n + 1 {
+            bail!("local_steps returned {} outputs, expected {}", outs.len(), 2 * n + 1);
+        }
+        for (i, leaf) in outs[..n].iter().enumerate() {
+            params.leaves[i] = leaf.to_vec::<f32>()?;
+        }
+        for (i, leaf) in outs[n..2 * n].iter().enumerate() {
+            u.leaves[i] = leaf.to_vec::<f32>()?;
+        }
+        Ok(outs[2 * n].to_vec::<f32>()?)
+    }
+
+    /// Run `tau` local steps by composing available k-variants; the batch
+    /// provider is called once per composed chunk with the chunk length.
+    pub fn local_steps_tau(
+        &self,
+        params: &mut ParamSet,
+        u: &mut ParamSet,
+        tau: usize,
+        b: usize,
+        eta_prime: f32,
+        mut next_batches: impl FnMut(usize) -> (Batch, Batch),
+    ) -> Result<Vec<f32>> {
+        let plan = self.manifest.decompose_tau(tau, b)?;
+        let mut losses = Vec::with_capacity(tau);
+        for k in plan {
+            let (xs, ys) = next_batches(k);
+            losses.extend(self.local_steps(params, u, &xs, &ys, eta_prime)?);
+        }
+        Ok(losses)
+    }
+
+    /// Evaluate `(loss, accuracy)` on one eval batch.
+    pub fn eval(&self, params: &ParamSet, x: &Batch, y: &Batch) -> Result<(f32, f32)> {
+        let mut args = params.to_literals(&self.manifest)?;
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        let outs = self.run(&self.manifest.eval.file.clone(), &args)?;
+        if outs.len() != 2 {
+            bail!("eval_step returned {} outputs, expected 2", outs.len());
+        }
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let correct = outs[1].to_vec::<f32>()?[0];
+        let denom = self.manifest.eval.b as f32
+            * self.manifest.y_shape.iter().product::<usize>().max(1) as f32;
+        Ok((loss, correct / denom))
+    }
+
+    /// PS commit apply (paper Alg. 2 PS line 4): `W ← W − eta·U`, via the
+    /// Pallas `apply_commit` artifact.
+    pub fn apply_commit(&self, w: &mut ParamSet, u: &ParamSet, eta: f32) -> Result<()> {
+        let n = self.manifest.params.len();
+        let mut args = Vec::with_capacity(2 * n + 1);
+        args.extend(w.to_literals(&self.manifest)?);
+        args.extend(u.to_literals(&self.manifest)?);
+        args.push(f32_literal(&[eta], &[])?);
+        let outs = self.run(&self.manifest.apply.clone(), &args)?;
+        if outs.len() != n {
+            bail!("apply_commit returned {} outputs, expected {n}", outs.len());
+        }
+        for (i, leaf) in outs.iter().enumerate() {
+            w.leaves[i] = leaf.to_vec::<f32>()?;
+        }
+        Ok(())
+    }
+
+    /// Momentum PS apply (Fig. 3(c)): `V ← mu·V − eta·U; W ← W + V`.
+    pub fn apply_commit_momentum(
+        &self,
+        w: &mut ParamSet,
+        u: &ParamSet,
+        vel: &mut ParamSet,
+        eta: f32,
+        mu: f32,
+    ) -> Result<()> {
+        let n = self.manifest.params.len();
+        let mut args = Vec::with_capacity(3 * n + 2);
+        args.extend(w.to_literals(&self.manifest)?);
+        args.extend(u.to_literals(&self.manifest)?);
+        args.extend(vel.to_literals(&self.manifest)?);
+        args.push(f32_literal(&[eta], &[])?);
+        args.push(f32_literal(&[mu], &[])?);
+        let outs = self.run(&self.manifest.apply_momentum.clone(), &args)?;
+        if outs.len() != 2 * n {
+            bail!("apply_commit_momentum returned {} outputs, expected {}", outs.len(), 2 * n);
+        }
+        for (i, leaf) in outs[..n].iter().enumerate() {
+            w.leaves[i] = leaf.to_vec::<f32>()?;
+        }
+        for (i, leaf) in outs[n..].iter().enumerate() {
+            vel.leaves[i] = leaf.to_vec::<f32>()?;
+        }
+        Ok(())
+    }
+
+    pub fn executions(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    /// Total seconds spent inside XLA (execute + host marshalling).
+    pub fn execution_secs(&self) -> f64 {
+        *self.exec_secs.borrow()
+    }
+}

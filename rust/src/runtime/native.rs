@@ -1,0 +1,160 @@
+//! Pure-rust reference implementations of the update rules.
+//!
+//! Two purposes:
+//! 1. **Cross-validation** — integration tests assert the XLA
+//!    `apply_commit` / `apply_commit_momentum` artifacts match these to
+//!    float tolerance, closing the loop Pallas kernel ↔ jnp oracle ↔ rust.
+//! 2. **Simulator fast path** — the discrete-event engine applies commits
+//!    natively (one fused pass, no literal marshalling), keeping simulated
+//!    cluster-seconds cheap; an ablation bench (`fig10_bandwidth`, apply
+//!    group) quantifies the difference.
+
+use super::tensor::ParamSet;
+
+/// `W ← W − eta·U` (paper Alg. 2, PS).
+pub fn apply_commit(w: &mut ParamSet, u: &ParamSet, eta: f32) {
+    debug_assert_eq!(w.num_leaves(), u.num_leaves());
+    for (wl, ul) in w.leaves.iter_mut().zip(&u.leaves) {
+        debug_assert_eq!(wl.len(), ul.len());
+        for (wv, uv) in wl.iter_mut().zip(ul) {
+            *wv -= eta * uv;
+        }
+    }
+}
+
+/// `V ← mu·V − eta·U; W ← W + V` (momentum PS update, Fig. 3(c) sweep).
+pub fn apply_commit_momentum(w: &mut ParamSet, u: &ParamSet, vel: &mut ParamSet, eta: f32, mu: f32) {
+    for ((wl, ul), vl) in w.leaves.iter_mut().zip(&u.leaves).zip(&mut vel.leaves) {
+        for ((wv, uv), vv) in wl.iter_mut().zip(ul).zip(vl.iter_mut()) {
+            *vv = mu * *vv - eta * uv;
+            *wv += *vv;
+        }
+    }
+}
+
+/// Worker-side fused local step on host data (mirrors the Pallas kernel):
+/// `p ← p − eta'·g; U ← U + eta'·g`. Used only in tests — the real worker
+/// path runs the AOT artifact.
+pub fn fused_local_step(p: &mut ParamSet, u: &mut ParamSet, g: &ParamSet, eta_prime: f32) {
+    for ((pl, ul), gl) in p.leaves.iter_mut().zip(&mut u.leaves).zip(&g.leaves) {
+        for ((pv, uv), gv) in pl.iter_mut().zip(ul.iter_mut()).zip(gl) {
+            let s = eta_prime * gv;
+            *pv -= s;
+            *uv += s;
+        }
+    }
+}
+
+/// Top-k gradient compression (Deep-Gradient-Compression-style, paper §2.2
+/// related work): keep the largest-magnitude `frac` of entries across the
+/// whole update, zero the rest. Returns the number of entries kept — the
+/// bandwidth model charges 8 bytes each (f32 value + u32 index).
+pub fn topk_sparsify(u: &mut ParamSet, frac: f64) -> usize {
+    let total = u.total_numel();
+    if frac <= 0.0 || frac >= 1.0 || total == 0 {
+        return total;
+    }
+    let keep = ((total as f64 * frac).ceil() as usize).clamp(1, total);
+    // Threshold via select_nth on |values| (O(n) expected).
+    let mut mags: Vec<f32> = u.leaves.iter().flat_map(|l| l.iter().map(|x| x.abs())).collect();
+    let idx = total - keep;
+    mags.select_nth_unstable_by(idx, f32::total_cmp);
+    let threshold = mags[idx];
+    let mut kept = 0usize;
+    for leaf in &mut u.leaves {
+        for v in leaf.iter_mut() {
+            if v.abs() >= threshold && kept < keep {
+                kept += 1;
+            } else {
+                *v = 0.0;
+            }
+        }
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ps(leaves: Vec<Vec<f32>>) -> ParamSet {
+        ParamSet { leaves }
+    }
+
+    #[test]
+    fn apply_matches_manual() {
+        let mut w = ps(vec![vec![1.0, 2.0], vec![3.0]]);
+        let u = ps(vec![vec![0.5, -0.5], vec![1.0]]);
+        apply_commit(&mut w, &u, 0.1);
+        assert_eq!(w.leaves[0], vec![0.95, 2.05]);
+        assert_eq!(w.leaves[1], vec![2.9]);
+    }
+
+    #[test]
+    fn momentum_zero_mu_equals_plain_apply() {
+        let mut w1 = ps(vec![vec![1.0, -2.0, 0.25]]);
+        let mut w2 = w1.clone();
+        let u = ps(vec![vec![0.3, 0.6, -0.9]]);
+        let mut v = w1.zeros_like();
+        apply_commit(&mut w1, &u, 0.2);
+        apply_commit_momentum(&mut w2, &u, &mut v, 0.2, 0.0);
+        assert!(w1.max_abs_diff(&w2) < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut w = ps(vec![vec![0.0]]);
+        let u = ps(vec![vec![1.0]]);
+        let mut v = w.zeros_like();
+        apply_commit_momentum(&mut w, &u, &mut v, 1.0, 0.5);
+        assert_eq!(v.leaves[0][0], -1.0);
+        apply_commit_momentum(&mut w, &u, &mut v, 1.0, 0.5);
+        assert_eq!(v.leaves[0][0], -1.5);
+        assert_eq!(w.leaves[0][0], -2.5);
+    }
+
+    #[test]
+    fn topk_keeps_largest_entries() {
+        let mut u = ps(vec![vec![0.1, -5.0, 0.2], vec![3.0, -0.05, 0.0]]);
+        let kept = topk_sparsify(&mut u, 0.3); // ceil(6*0.3) = 2 kept
+        assert_eq!(kept, 2);
+        assert_eq!(u.leaves[0], vec![0.0, -5.0, 0.0]);
+        assert_eq!(u.leaves[1], vec![3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_extremes_are_noops() {
+        let mut u = ps(vec![vec![1.0, 2.0]]);
+        let orig = u.clone();
+        assert_eq!(topk_sparsify(&mut u, 0.0), 2);
+        assert_eq!(u, orig);
+        assert_eq!(topk_sparsify(&mut u, 1.0), 2);
+        assert_eq!(u, orig);
+    }
+
+    #[test]
+    fn topk_preserves_update_direction() {
+        // The kept entries are untouched; dropped ones zeroed.
+        let mut u = ps(vec![(0..100).map(|i| i as f32 / 100.0).collect()]);
+        let kept = topk_sparsify(&mut u, 0.10);
+        assert_eq!(kept, 10);
+        let nonzero = u.leaves[0].iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nonzero, 10);
+        // Largest survive.
+        assert_eq!(u.leaves[0][99], 0.99);
+        assert_eq!(u.leaves[0][50], 0.0);
+    }
+
+    #[test]
+    fn local_step_accumulates_and_descends() {
+        let mut p = ps(vec![vec![1.0, 1.0]]);
+        let mut u = p.zeros_like();
+        let g = ps(vec![vec![2.0, -2.0]]);
+        fused_local_step(&mut p, &mut u, &g, 0.1);
+        fused_local_step(&mut p, &mut u, &g, 0.1);
+        assert!((p.leaves[0][0] - 0.6).abs() < 1e-6);
+        assert!((p.leaves[0][1] - 1.4).abs() < 1e-6);
+        assert!((u.leaves[0][0] - 0.4).abs() < 1e-6);
+        assert!((u.leaves[0][1] + 0.4).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,239 @@
+//! Host-side tensors: parameter sets (the model/update/velocity vectors the
+//! coordinator moves around) and input batches, with XLA literal conversion.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// A full set of model parameters (or accumulated updates / velocities),
+/// stored leaf-wise in the manifest's sorted-name order. All leaves are f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSet {
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Load from the raw little-endian f32 blob emitted by aot.py.
+    pub fn from_bytes(manifest: &Manifest, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != 4 * manifest.total_param_numel {
+            bail!(
+                "param blob is {} bytes, manifest expects {}",
+                bytes.len(),
+                4 * manifest.total_param_numel
+            );
+        }
+        let mut leaves = Vec::with_capacity(manifest.params.len());
+        let mut off = 0usize;
+        for p in &manifest.params {
+            let mut leaf = Vec::with_capacity(p.numel);
+            for i in 0..p.numel {
+                let s = off + 4 * i;
+                leaf.push(f32::from_le_bytes([bytes[s], bytes[s + 1], bytes[s + 2], bytes[s + 3]]));
+            }
+            off += 4 * p.numel;
+            leaves.push(leaf);
+        }
+        Ok(ParamSet { leaves })
+    }
+
+    pub fn load(manifest: &Manifest, dir: &std::path::Path) -> Result<Self> {
+        let path = manifest.param_file(dir);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(manifest, &bytes)
+    }
+
+    /// All-zero set with the same structure (for U accumulators / velocity).
+    pub fn zeros_like(&self) -> Self {
+        ParamSet { leaves: self.leaves.iter().map(|l| vec![0.0; l.len()]).collect() }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn total_numel(&self) -> usize {
+        self.leaves.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.leaves
+            .iter()
+            .flat_map(|l| l.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        self.leaves
+            .iter()
+            .zip(&other.leaves)
+            .flat_map(|(a, b)| a.iter().zip(b.iter()))
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn zero_(&mut self) {
+        for leaf in &mut self.leaves {
+            leaf.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.leaves.iter().all(|l| l.iter().all(|x| x.is_finite()))
+    }
+
+    /// Serialize to the same raw little-endian f32 format as
+    /// `init_params.bin` (checkpointing).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * self.total_numel());
+        for leaf in &self.leaves {
+            for v in leaf {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Save to a checkpoint file (atomic-ish: write then rename).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Convert to one XLA literal per leaf (shapes from the manifest).
+    pub fn to_literals(&self, manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+        debug_assert_eq!(self.leaves.len(), manifest.params.len());
+        self.leaves
+            .iter()
+            .zip(&manifest.params)
+            .map(|(leaf, meta)| f32_literal(leaf, &meta.shape))
+            .collect()
+    }
+}
+
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)?)
+}
+
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)?)
+}
+
+/// Mini-batch payload: f32 features or i32 tokens/labels.
+#[derive(Clone, Debug)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchData {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::F32(v) => v.len(),
+            BatchData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A (possibly k-stacked) input batch: `dims` is the full literal shape,
+/// e.g. `[K, B, 32, 32, 3]` for the CNN's xs or `[K, B]` for its labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub dims: Vec<usize>,
+    pub data: BatchData,
+}
+
+impl Batch {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Batch { dims, data: BatchData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Batch { dims, data: BatchData::I32(data) }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match &self.data {
+            BatchData::F32(v) => f32_literal(v, &self.dims),
+            BatchData::I32(v) => i32_literal(v, &self.dims),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{EvalMeta, ParamMeta, StepVariant};
+
+    fn tiny_manifest() -> Manifest {
+        Manifest {
+            model: "t".into(),
+            seed: 0,
+            params: vec![
+                ParamMeta { name: "a".into(), shape: vec![2, 2], numel: 4 },
+                ParamMeta { name: "b".into(), shape: vec![3], numel: 3 },
+            ],
+            total_param_numel: 7,
+            bytes_per_commit: 28,
+            x_shape: vec![1],
+            x_dtype: "f32".into(),
+            y_shape: vec![],
+            y_dtype: "i32".into(),
+            num_classes: 2,
+            local_steps: vec![StepVariant { k: 1, b: 1, file: "x".into() }],
+            eval: EvalMeta { b: 1, file: "x".into() },
+            apply: "x".into(),
+            apply_momentum: "x".into(),
+            init_params: "x".into(),
+            init_params_sha256: String::new(),
+            jax_version: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = tiny_manifest();
+        let vals: Vec<f32> = (0..7).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let ps = ParamSet::from_bytes(&m, &bytes).unwrap();
+        assert_eq!(ps.leaves.len(), 2);
+        assert_eq!(ps.leaves[0], vals[..4]);
+        assert_eq!(ps.leaves[1], vals[4..]);
+        assert_eq!(ps.total_numel(), 7);
+    }
+
+    #[test]
+    fn wrong_length_rejected() {
+        let m = tiny_manifest();
+        assert!(ParamSet::from_bytes(&m, &[0u8; 12]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_norms() {
+        let m = tiny_manifest();
+        let bytes = vec![0u8; 28];
+        let mut ps = ParamSet::from_bytes(&m, &bytes).unwrap();
+        assert_eq!(ps.l2_norm(), 0.0);
+        ps.leaves[0][0] = 3.0;
+        ps.leaves[1][2] = 4.0;
+        assert!((ps.l2_norm() - 5.0).abs() < 1e-9);
+        let z = ps.zeros_like();
+        assert_eq!(z.total_numel(), 7);
+        assert_eq!(z.l2_norm(), 0.0);
+        assert!((ps.max_abs_diff(&z) - 4.0).abs() < 1e-9);
+        assert!(ps.is_finite());
+    }
+}

@@ -1,0 +1,638 @@
+//! The discrete-event engine. See the module docs in `simulation/mod.rs`.
+//!
+//! Event timeline per worker: `Ready` → (policy) → either
+//! * `Train{k}`: one XLA execute of the `k`-step scan artifact, next
+//!   `Ready` at `now + k·t_i`;
+//! * `Commit`: update snapshot travels `O_i/2` to the PS (`CommitArrive`,
+//!   where it is applied and the fresh-model snapshot is taken), then
+//!   `O_i/2` back (`Ready` with the pulled parameters);
+//! * `Block`: parked; re-polled after every state-changing event; on wake
+//!   the worker re-pulls the current global model (the barrier broadcast).
+//!
+//! The scheduler's `Checkpoint` (every Γ), `Eval` (every eval interval) and
+//! `EpochStart` events drive the policy callbacks.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{Context, Result};
+use crate::config::ExperimentSpec;
+use crate::data::{make_source, DataSource};
+use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
+use crate::runtime::{native, ModelRuntime, ParamSet};
+use crate::sync::{
+    assign_batchtune_sizes, make_policy, Action, ClusterView, SyncModelKind, SyncPolicy,
+    WorkerProgress,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EventKind {
+    /// Worker is free to act (optionally installing pulled parameters).
+    Ready(usize),
+    /// Worker's update snapshot reaches the PS.
+    CommitArrive(usize),
+    Checkpoint,
+    Eval,
+    EpochStart,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap via Reverse: earlier time first, then FIFO sequence.
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct WorkerSim {
+    params: ParamSet,
+    u: ParamSet,
+    /// Update snapshot in flight to the PS.
+    in_flight: Option<ParamSet>,
+    /// Compressed wire size of the in-flight update (None = dense).
+    in_flight_bytes: Option<u64>,
+    /// Parameters pulled from the PS, installed at the next Ready.
+    pending_pull: Option<ParamSet>,
+    metrics: WorkerMetrics,
+    block_start: Option<f64>,
+    data: Box<dyn DataSource>,
+}
+
+/// Everything a run produces (figure harnesses consume this).
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub model: String,
+    pub sync: SyncModelKind,
+    pub sync_describe: String,
+    /// Virtual time at which the convergence detector fired (None = ran to a cap).
+    pub converged_at: Option<f64>,
+    pub end_time: f64,
+    pub total_steps: u64,
+    pub total_commits: u64,
+    pub final_loss: f64,
+    pub best_loss: f64,
+    pub final_accuracy: f64,
+    pub loss_log: LossLog,
+    pub workers: Vec<WorkerMetrics>,
+    pub breakdown: Breakdown,
+    pub bytes_total: u64,
+    /// Real (host) seconds the simulation took.
+    pub wall_secs: f64,
+    /// Number of XLA executions issued.
+    pub xla_execs: u64,
+    /// Wall seconds spent inside XLA — `wall_secs − xla_secs` is the L3
+    /// coordinator overhead (perf-pass metric; target < 15% of wall).
+    pub xla_secs: f64,
+    /// True if every worker sat blocked across several consecutive evals
+    /// (policy deadlock — must never happen; asserted in tests).
+    pub deadlocked: bool,
+    /// Commits lost to failure injection (`spec.drop_commit_prob`).
+    pub dropped_commits: u64,
+}
+
+impl SimOutcome {
+    /// Convergence time: detector time, else the full run time.
+    pub fn convergence_time(&self) -> f64 {
+        self.converged_at.unwrap_or(self.end_time)
+    }
+
+    /// Bandwidth usage per virtual second (Fig. 10a).
+    pub fn bandwidth_bytes_per_sec(&self) -> f64 {
+        if self.end_time <= 0.0 {
+            0.0
+        } else {
+            self.bytes_total as f64 / self.end_time
+        }
+    }
+
+    /// Average per-step loss-decrease efficiency (Fig. 4d companion).
+    pub fn loss_drop_per_kstep(&self) -> f64 {
+        match (self.loss_log.first_loss(), self.loss_log.last_loss()) {
+            (Some(a), Some(b)) if self.total_steps > 0 => {
+                (a - b) / (self.total_steps as f64 / 1000.0)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+pub struct SimEngine {
+    spec: ExperimentSpec,
+    runtime: ModelRuntime,
+    policy: Box<dyn SyncPolicy>,
+    global: ParamSet,
+    velocity: ParamSet,
+    workers: Vec<WorkerSim>,
+    progress: Vec<WorkerProgress>,
+    speeds: Vec<f64>,
+    comms: Vec<f64>,
+    k_variants: Vec<usize>,
+    queue: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    now: f64,
+    total_steps: u64,
+    total_commits: u64,
+    bytes_total: u64,
+    loss_log: LossLog,
+    detector: ConvergenceDetector,
+    eval_source: Box<dyn DataSource>,
+    last_eval: Option<(f64, f64)>,
+    initial_loss: Option<f64>,
+    converged_at: Option<f64>,
+    deadlock_evals: u32,
+    deadlocked: bool,
+    /// Use the XLA `apply_commit` artifact at the PS instead of the native
+    /// fused loop (ablation knob; see `runtime::native`).
+    pub use_xla_apply: bool,
+    /// Fault/jitter RNG (seeded from the experiment seed; independent of the
+    /// data streams so enabling faults never changes the sampled batches).
+    fault_rng: crate::util::Rng,
+    /// Commits dropped by failure injection.
+    pub dropped_commits: u64,
+    /// Periodic checkpointing: save the global model here every
+    /// `checkpoint_every` virtual seconds (None = off).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    pub checkpoint_every: f64,
+    last_checkpoint_save: f64,
+}
+
+impl SimEngine {
+    pub fn new(spec: ExperimentSpec) -> Result<Self> {
+        spec.validate()?;
+        let runtime = ModelRuntime::load_by_name(&spec.model)
+            .with_context(|| format!("loading artifacts for model '{}'", spec.model))?;
+        let manifest = &runtime.manifest;
+
+        // Batch sizes: BatchTune assigns per-worker sizes ∝ speed; everyone
+        // else trains the experiment batch size.
+        let available = manifest.batch_sizes();
+        let b_default = if available.contains(&spec.batch_size) {
+            spec.batch_size
+        } else {
+            // Fall back to the largest available batch ≤ requested, else min.
+            *available
+                .iter()
+                .filter(|&&b| b <= spec.batch_size)
+                .max()
+                .unwrap_or(&available[0])
+        };
+        let speeds = spec.cluster.speeds();
+        let batch_sizes: Vec<usize> = if spec.sync.kind.is_batchtune() {
+            assign_batchtune_sizes(&speeds, b_default, &available)
+        } else {
+            vec![b_default; spec.cluster.m()]
+        };
+
+        let spec_seed = spec.seed;
+        let policy = make_policy(&spec.sync, &spec.cluster);
+        let global = runtime.init_params()?;
+        let velocity = global.zeros_like();
+
+        let mut workers = Vec::with_capacity(spec.cluster.m());
+        let mut progress = Vec::with_capacity(spec.cluster.m());
+        for w in 0..spec.cluster.m() {
+            workers.push(WorkerSim {
+                params: global.clone(),
+                u: global.zeros_like(),
+                in_flight: None,
+                in_flight_bytes: None,
+                pending_pull: None,
+                metrics: WorkerMetrics::default(),
+                block_start: None,
+                data: make_source(manifest, spec.seed, w),
+            });
+            progress.push(WorkerProgress {
+                batch_size: batch_sizes[w],
+                ..Default::default()
+            });
+        }
+
+        // k-variants for the default batch; BatchTune workers may have a
+        // different per-batch variant set — the engine re-clamps at Train.
+        let k_variants = manifest.k_variants(b_default);
+        let eval_source = make_source(manifest, spec.seed, 0);
+        let detector = ConvergenceDetector::new(
+            spec.convergence_window,
+            spec.convergence_tol,
+            spec.target_loss,
+        );
+        let comms = spec.cluster.comms();
+
+        Ok(SimEngine {
+            spec,
+            runtime,
+            policy,
+            global,
+            velocity,
+            workers,
+            progress,
+            speeds,
+            comms,
+            k_variants,
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            total_steps: 0,
+            total_commits: 0,
+            bytes_total: 0,
+            loss_log: LossLog::default(),
+            detector,
+            eval_source,
+            last_eval: None,
+            initial_loss: None,
+            converged_at: None,
+            deadlock_evals: 0,
+            deadlocked: false,
+            use_xla_apply: false,
+            fault_rng: crate::util::Rng::new(spec_seed ^ 0xFA17),
+            dropped_commits: 0,
+            checkpoint_path: None,
+            checkpoint_every: 0.0,
+            last_checkpoint_save: 0.0,
+        })
+    }
+
+    fn push_event(&mut self, t: f64, kind: EventKind) {
+        self.seq += 1;
+        self.queue.push(Reverse(Event { t, seq: self.seq, kind }));
+    }
+
+    fn step_time(&self, w: usize) -> f64 {
+        let b = self.progress[w].batch_size as f64;
+        let b_ref = self.spec.batch_size as f64;
+        (b / b_ref).max(1e-9) / self.speeds[w]
+    }
+
+    /// Ask the policy what worker `w` should do and carry it out.
+    fn drive_worker(&mut self, w: usize) -> Result<()> {
+        if self.total_steps >= self.spec.max_total_steps {
+            return Ok(());
+        }
+        let action = {
+            let view = ClusterView {
+                now: self.now,
+                workers: &self.progress,
+                speeds: &self.speeds,
+                comms: &self.comms,
+                k_variants: &self.k_variants,
+                last_eval: self.last_eval,
+                initial_loss: self.initial_loss,
+            };
+            self.policy.next_action(w, &view)
+        };
+        match action {
+            Action::Train { k } => self.do_train(w, k),
+            Action::Commit => self.do_commit(w),
+            Action::Block => {
+                self.progress[w].blocked = true;
+                self.workers[w].block_start = Some(self.now);
+                Ok(())
+            }
+        }
+    }
+
+    fn do_train(&mut self, w: usize, k: u64) -> Result<()> {
+        let b = self.progress[w].batch_size;
+        // Re-clamp to this worker's batch variants and the step budget.
+        let ks = self.runtime.manifest.k_variants(b);
+        let mut k = k.max(1);
+        k = ks
+            .iter()
+            .map(|&v| v as u64)
+            .find(|&v| v <= k)
+            .unwrap_or(1);
+        let budget = self.spec.max_total_steps.saturating_sub(self.total_steps);
+        if budget == 0 {
+            return Ok(());
+        }
+        if k > budget {
+            k = ks
+                .iter()
+                .map(|&v| v as u64)
+                .find(|&v| v <= budget)
+                .unwrap_or(1)
+                .min(budget);
+        }
+
+        let eta_prime = self.spec.eta_prime_at(self.now);
+        let (xs, ys) = self.workers[w].data.sample_batch(k as usize, b);
+        let wk = &mut self.workers[w];
+        let losses = self
+            .runtime
+            .local_steps(&mut wk.params, &mut wk.u, &xs, &ys, eta_prime)
+            .with_context(|| format!("worker {w} local_steps k={k} b={b}"))?;
+        debug_assert_eq!(losses.len(), k as usize);
+
+        let mut dt = self.step_time(w) * k as f64;
+        if self.spec.step_jitter > 0.0 {
+            // Multiplicative U[1-j, 1+j] jitter per chunk.
+            let j = self.spec.step_jitter;
+            dt *= 1.0 - j + 2.0 * j * self.fault_rng.next_f64();
+        }
+        self.progress[w].steps += k;
+        self.progress[w].local_since_commit += k;
+        self.total_steps += k;
+        self.workers[w].metrics.steps += k;
+        // Charge only the part of the chunk inside the horizon so breakdown
+        // fractions stay exact at the cap.
+        self.workers[w].metrics.compute_secs +=
+            dt.min((self.spec.max_virtual_secs - self.now).max(0.0));
+        let t_next = self.now + dt;
+        self.push_event(t_next, EventKind::Ready(w));
+        Ok(())
+    }
+
+    fn do_commit(&mut self, w: usize) -> Result<()> {
+        // Snapshot U and reset the accumulator; the snapshot travels O/2.
+        let mut u = std::mem::replace(&mut self.workers[w].u, self.global.zeros_like());
+        if self.spec.compress_topk > 0.0 && self.spec.compress_topk < 1.0 {
+            let kept = native::topk_sparsify(&mut u, self.spec.compress_topk);
+            // Sparse encoding: 8 bytes per surviving entry, recorded at the
+            // arrival accounting via `in_flight_bytes`.
+            self.workers[w].in_flight_bytes = Some(8 * kept as u64);
+        }
+        self.workers[w].in_flight = Some(u);
+        self.progress[w].local_since_commit = 0;
+        let o = self.comms[w];
+        self.workers[w].metrics.comm_secs += o;
+        self.push_event(self.now + o / 2.0, EventKind::CommitArrive(w));
+        Ok(())
+    }
+
+    fn on_commit_arrive(&mut self, w: usize) -> Result<()> {
+        let u = self.workers[w].in_flight.take().expect("commit without in-flight update");
+        let up_bytes = self
+            .workers[w]
+            .in_flight_bytes
+            .take()
+            .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
+        if self.spec.drop_commit_prob > 0.0
+            && self.fault_rng.next_f64() < self.spec.drop_commit_prob
+        {
+            // Failure injection: the update is lost in flight. The worker
+            // still pulls the (unchanged) global model and keeps training —
+            // the paper's commit-count bookkeeping counts *applied* commits,
+            // so c_i is not advanced.
+            self.dropped_commits += 1;
+            self.workers[w].pending_pull = Some(self.global.clone());
+            self.push_event(self.now + self.comms[w] / 2.0, EventKind::Ready(w));
+            return Ok(());
+        }
+        let eta = self.spec.eta();
+        let mu = self.spec.sync.ps_momentum as f32;
+        if self.use_xla_apply {
+            if mu > 0.0 {
+                self.runtime
+                    .apply_commit_momentum(&mut self.global, &u, &mut self.velocity, eta, mu)?;
+            } else {
+                self.runtime.apply_commit(&mut self.global, &u, eta)?;
+            }
+        } else if mu > 0.0 {
+            native::apply_commit_momentum(&mut self.global, &u, &mut self.velocity, eta, mu);
+        } else {
+            native::apply_commit(&mut self.global, &u, eta);
+        }
+
+        self.progress[w].commits += 1;
+        self.total_commits += 1;
+        let down_bytes = self.runtime.manifest.bytes_per_commit as u64;
+        self.workers[w].metrics.commits += 1;
+        self.workers[w].metrics.bytes_up += up_bytes;
+        self.workers[w].metrics.bytes_down += down_bytes;
+        self.bytes_total += up_bytes + down_bytes;
+
+        {
+            let view = ClusterView {
+                now: self.now,
+                workers: &self.progress,
+                speeds: &self.speeds,
+                comms: &self.comms,
+                k_variants: &self.k_variants,
+                last_eval: self.last_eval,
+                initial_loss: self.initial_loss,
+            };
+            self.policy.on_commit_applied(w, &view);
+        }
+
+        // Fresh model snapshot rides back to the worker (arrives O/2 later).
+        self.workers[w].pending_pull = Some(self.global.clone());
+        self.push_event(self.now + self.comms[w] / 2.0, EventKind::Ready(w));
+        Ok(())
+    }
+
+    fn do_eval(&mut self) -> Result<()> {
+        let eb = self.runtime.manifest.eval.b;
+        let (x, y) = self.eval_source.eval_batch(eb);
+        let (loss, acc) = self.runtime.eval(&self.global, &x, &y)?;
+        let (loss, acc) = (loss as f64, acc as f64);
+        self.loss_log.push(self.now, self.total_steps, loss, acc);
+        if self.initial_loss.is_none() {
+            self.initial_loss = Some(loss);
+        }
+        self.last_eval = Some((self.now, loss));
+        self.policy.on_eval(self.now, loss);
+        if self.converged_at.is_none() && self.detector.push(loss) {
+            self.converged_at = Some(self.now);
+        }
+        // Deadlock sentinel: every worker blocked across several evals.
+        let all_blocked =
+            !self.progress.is_empty() && self.progress.iter().all(|p| p.blocked);
+        if all_blocked {
+            self.deadlock_evals += 1;
+            if self.deadlock_evals >= 3 {
+                self.deadlocked = true;
+            }
+        } else {
+            self.deadlock_evals = 0;
+        }
+        Ok(())
+    }
+
+    /// Re-poll blocked workers after a state change; wake those whose policy
+    /// now returns something other than Block.
+    fn wake_blocked(&mut self) -> Result<()> {
+        let blocked: Vec<usize> =
+            (0..self.progress.len()).filter(|&w| self.progress[w].blocked).collect();
+        for w in blocked {
+            let action = {
+                let view = ClusterView {
+                now: self.now,
+                workers: &self.progress,
+                speeds: &self.speeds,
+                comms: &self.comms,
+                k_variants: &self.k_variants,
+                last_eval: self.last_eval,
+                initial_loss: self.initial_loss,
+            };
+                self.policy.next_action(w, &view)
+            };
+            if action != Action::Block {
+                self.progress[w].blocked = false;
+                if let Some(start) = self.workers[w].block_start.take() {
+                    self.workers[w].metrics.blocked_secs += self.now - start;
+                }
+                // Barrier release broadcast: wake with the current model.
+                self.workers[w].params = self.global.clone();
+                match action {
+                    Action::Train { k } => self.do_train(w, k)?,
+                    Action::Commit => self.do_commit(w)?,
+                    Action::Block => unreachable!(),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resume from a checkpoint produced by [`ParamSet::save`] (must match
+    /// the model's parameter layout).
+    pub fn load_initial_params(&mut self, path: &std::path::Path) -> Result<()> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        let params = ParamSet::from_bytes(&self.runtime.manifest, &bytes)?;
+        for w in &mut self.workers {
+            w.params = params.clone();
+        }
+        self.global = params;
+        Ok(())
+    }
+
+    /// Run to convergence or a cap.
+    pub fn run(mut self) -> Result<SimOutcome> {
+        let wall_start = std::time::Instant::now();
+        let mut in_use: Vec<usize> = self.progress.iter().map(|p| p.batch_size).collect();
+        in_use.sort_unstable();
+        in_use.dedup();
+        self.runtime.warmup_for(&in_use).context("compiling artifacts")?;
+
+        // Initial schedule.
+        self.push_event(0.0, EventKind::Eval);
+        self.push_event(self.spec.sync.gamma, EventKind::Checkpoint);
+        self.push_event(self.spec.sync.epoch_secs, EventKind::EpochStart);
+        for w in 0..self.workers.len() {
+            self.push_event(0.0, EventKind::Ready(w));
+        }
+
+        while let Some(Reverse(ev)) = self.queue.pop() {
+            if ev.t > self.spec.max_virtual_secs {
+                break;
+            }
+            self.now = ev.t;
+            match ev.kind {
+                EventKind::Ready(w) => {
+                    if let Some(p) = self.workers[w].pending_pull.take() {
+                        self.workers[w].params = p;
+                    }
+                    self.drive_worker(w)?;
+                }
+                EventKind::CommitArrive(w) => {
+                    self.on_commit_arrive(w)?;
+                }
+                EventKind::Checkpoint => {
+                    let view = ClusterView {
+                        now: self.now,
+                        workers: &self.progress,
+                        speeds: &self.speeds,
+                        comms: &self.comms,
+                        k_variants: &self.k_variants,
+                        last_eval: self.last_eval,
+                        initial_loss: self.initial_loss,
+                    };
+                    self.policy.on_checkpoint(&view);
+                    let next = self.now + self.spec.sync.gamma;
+                    self.push_event(next, EventKind::Checkpoint);
+                }
+                EventKind::Eval => {
+                    self.do_eval()?;
+                    if let Some(path) = self.checkpoint_path.clone() {
+                        if self.checkpoint_every > 0.0
+                            && self.now - self.last_checkpoint_save >= self.checkpoint_every
+                        {
+                            self.global.save(&path)?;
+                            self.last_checkpoint_save = self.now;
+                        }
+                    }
+                    if self.converged_at.is_some() || self.deadlocked {
+                        break;
+                    }
+                    self.push_event(self.now + self.spec.eval_interval_secs, EventKind::Eval);
+                }
+                EventKind::EpochStart => {
+                    let view = ClusterView {
+                        now: self.now,
+                        workers: &self.progress,
+                        speeds: &self.speeds,
+                        comms: &self.comms,
+                        k_variants: &self.k_variants,
+                        last_eval: self.last_eval,
+                        initial_loss: self.initial_loss,
+                    };
+                    self.policy.on_epoch_start(&view);
+                    let next = self.now + self.spec.sync.epoch_secs;
+                    self.push_event(next, EventKind::EpochStart);
+                }
+            }
+            self.wake_blocked()?;
+            if self.total_steps >= self.spec.max_total_steps {
+                break;
+            }
+        }
+
+        // Close out blocked-time accounting.
+        for w in 0..self.workers.len() {
+            if let Some(start) = self.workers[w].block_start.take() {
+                self.workers[w].metrics.blocked_secs += self.now - start;
+            }
+        }
+
+        if let Some(path) = &self.checkpoint_path {
+            self.global.save(path)?;
+        }
+
+        let workers: Vec<WorkerMetrics> =
+            self.workers.iter().map(|w| w.metrics.clone()).collect();
+        let breakdown = Breakdown::from_workers(&workers);
+        let final_loss = self.loss_log.last_loss().unwrap_or(f64::NAN);
+        let best_loss = self.loss_log.best_loss().unwrap_or(f64::NAN);
+        let final_accuracy =
+            self.loss_log.samples.last().map(|s| s.accuracy).unwrap_or(f64::NAN);
+
+        Ok(SimOutcome {
+            model: self.spec.model.clone(),
+            sync: self.spec.sync.kind,
+            sync_describe: self.policy.describe(),
+            converged_at: self.converged_at,
+            end_time: self.now,
+            total_steps: self.total_steps,
+            total_commits: self.total_commits,
+            final_loss,
+            best_loss,
+            final_accuracy,
+            loss_log: self.loss_log,
+            workers,
+            breakdown,
+            bytes_total: self.bytes_total,
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+            xla_execs: self.runtime.executions(),
+            xla_secs: self.runtime.execution_secs(),
+            deadlocked: self.deadlocked,
+            dropped_commits: self.dropped_commits,
+        })
+    }
+}

@@ -1,0 +1,15 @@
+//! The heterogeneous-edge-cluster substrate: a deterministic discrete-event
+//! simulator standing in for the paper's 19-instance EC2 testbed (DESIGN.md
+//! §Substitutions).
+//!
+//! Gradients are **real** — every simulated training step executes the
+//! model's AOT-compiled `local_steps` artifact through PJRT — while *time*
+//! is virtual: worker i advances `1/vᵢ` seconds per step (batch-scaled) and
+//! `Oᵢ` per commit round trip. Everything the paper measures (waiting time,
+//! convergence time, commit balance, bandwidth) is a function of exactly
+//! these quantities, so figure shapes are preserved while runs stay
+//! deterministic and fast.
+
+pub mod engine;
+
+pub use engine::{SimEngine, SimOutcome};

@@ -1,0 +1,214 @@
+//! ADACOMM and Fixed ADACOMM (Wang & Joshi 2018), the paper's strongest
+//! baselines (§5.1).
+//!
+//! Both run `τ` local update steps on every worker, then synchronize with a
+//! BSP-style barrier (all workers commit their accumulated update, the PS
+//! applies them, everyone pulls). **Fixed** ADACOMM keeps τ constant;
+//! ADACOMM re-tunes τ over time from the loss: the published rule sets
+//! `τ(l) = ceil(τ0 · sqrt(l / l0))` each communication period and, per the
+//! ADSP paper's description, "if the loss does not decrease, it simply
+//! multiplies τ with a constant".
+
+use super::{Action, ClusterView, SyncModelKind, SyncPolicy};
+
+/// Fixed ADACOMM: τ local steps, then a synchronization barrier.
+pub struct FixedAdacommPolicy {
+    m: usize,
+    tau: u64,
+}
+
+impl FixedAdacommPolicy {
+    pub fn new(m: usize, tau: u64) -> Self {
+        assert!(tau >= 1);
+        FixedAdacommPolicy { m, tau }
+    }
+
+    pub fn tau(&self) -> u64 {
+        self.tau
+    }
+}
+
+fn adacomm_next_action(tau: u64, w: usize, view: &ClusterView) -> Action {
+    let me = &view.workers[w];
+    if me.local_since_commit >= tau {
+        return Action::Commit;
+    }
+    if me.local_since_commit == 0 && me.commits > view.min_commits() {
+        // Finished my round and others haven't: barrier.
+        return Action::Block;
+    }
+    // Train the remaining steps of this round, chunked to available scan
+    // variants so the whole τ-block can run in few executes.
+    let remaining = tau - me.local_since_commit;
+    Action::Train { k: view.clamp_k(remaining) }
+}
+
+impl SyncPolicy for FixedAdacommPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::FixedAdacomm
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        adacomm_next_action(self.tau, w, view)
+    }
+
+    fn delta_c(&self, _w: usize) -> Option<f64> {
+        None
+    }
+
+    fn describe(&self) -> String {
+        format!("fixed_adacomm(m={}, tau={})", self.m, self.tau)
+    }
+}
+
+/// Adaptive-τ ADACOMM.
+pub struct AdacommPolicy {
+    m: usize,
+    tau0: u64,
+    tau: u64,
+    /// Loss at the first evaluation (l_0 in the τ rule).
+    l0: Option<f64>,
+    /// Loss at the previous re-tune, for the "did not decrease" escape.
+    last_tuned_loss: Option<f64>,
+    /// Commit rounds between re-tunes.
+    retune_every: u64,
+    rounds_since_tune: u64,
+    /// Multiplier applied when the loss fails to decrease.
+    escape_mult: f64,
+    tau_cap: u64,
+}
+
+impl AdacommPolicy {
+    pub fn new(m: usize, tau0: u64) -> Self {
+        assert!(tau0 >= 1);
+        AdacommPolicy {
+            m,
+            tau0,
+            tau: tau0,
+            l0: None,
+            last_tuned_loss: None,
+            retune_every: 4,
+            rounds_since_tune: 0,
+            escape_mult: 2.0,
+            tau_cap: 256,
+        }
+    }
+
+    pub fn tau(&self) -> u64 {
+        self.tau
+    }
+
+    fn retune(&mut self, loss: f64) {
+        let l0 = *self.l0.get_or_insert(loss);
+        let decreased = self.last_tuned_loss.map_or(true, |prev| loss < prev);
+        if decreased {
+            let ratio = (loss / l0).max(0.0);
+            self.tau = ((self.tau0 as f64) * ratio.sqrt()).ceil().max(1.0) as u64;
+        } else {
+            self.tau = ((self.tau as f64 * self.escape_mult) as u64).clamp(1, self.tau_cap);
+        }
+        self.last_tuned_loss = Some(loss);
+    }
+}
+
+impl SyncPolicy for AdacommPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::Adacomm
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        adacomm_next_action(self.tau, w, view)
+    }
+
+    fn on_commit_applied(&mut self, _w: usize, view: &ClusterView) {
+        // Count completed rounds: when all workers reach the same commit
+        // count a round has closed.
+        if view.min_commits() == view.max_commits() {
+            self.rounds_since_tune += 1;
+            if self.rounds_since_tune >= self.retune_every {
+                if let Some((_, loss)) = view.last_eval {
+                    self.retune(loss);
+                    self.rounds_since_tune = 0;
+                }
+            }
+        }
+    }
+
+    fn on_eval(&mut self, _t: f64, loss: f64) {
+        if self.l0.is_none() && loss.is_finite() {
+            self.l0 = Some(loss);
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("adacomm(m={}, tau0={}, tau={})", self.m, self.tau0, self.tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::WorkerProgress;
+
+    fn view<'a>(workers: &'a [WorkerProgress]) -> ClusterView<'a> {
+        ClusterView {
+            now: 0.0,
+            workers,
+            speeds: &[1.0, 1.0, 1.0],
+            comms: &[0.1, 0.1, 0.1],
+            k_variants: &[16, 4, 1],
+            last_eval: None,
+            initial_loss: None,
+        }
+    }
+
+    #[test]
+    fn fixed_adacomm_round_structure() {
+        let mut ws = vec![WorkerProgress::default(); 3];
+        let mut p = FixedAdacommPolicy::new(3, 8);
+        // Fresh: train a full chunk toward τ=8 → clamped to 4 (next variant ≤ 8 is 4 after 16).
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 4 });
+        // Mid-round with 3 remaining → k=1 chunks.
+        ws[0].local_since_commit = 5;
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
+        // τ reached → commit.
+        ws[0].local_since_commit = 8;
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Commit);
+        // After committing, block while others lag.
+        ws[0].local_since_commit = 0;
+        ws[0].commits = 1;
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Block);
+        // Peers done → next round starts.
+        ws[1].commits = 1;
+        ws[2].commits = 1;
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 4 });
+    }
+
+    #[test]
+    fn adacomm_tau_decays_with_loss() {
+        let mut p = AdacommPolicy::new(3, 16);
+        p.retune(4.0); // first call fixes l0 = 4
+        assert_eq!(p.tau(), 16);
+        p.retune(1.0); // sqrt(1/4)=0.5 → tau = 8
+        assert_eq!(p.tau(), 8);
+        p.retune(0.25); // sqrt(1/16)=0.25 → tau = 4
+        assert_eq!(p.tau(), 4);
+    }
+
+    #[test]
+    fn adacomm_escapes_on_stall() {
+        let mut p = AdacommPolicy::new(3, 8);
+        p.retune(2.0);
+        let tau_before = p.tau();
+        p.retune(2.5); // loss went UP → multiply
+        assert_eq!(p.tau(), tau_before * 2);
+    }
+
+    #[test]
+    fn adacomm_tau_never_below_one() {
+        let mut p = AdacommPolicy::new(3, 2);
+        p.retune(1.0);
+        p.retune(1e-9);
+        assert!(p.tau() >= 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! ADSP⁺ (paper Appendix D.2, Fig. 8): the offline-searched variant.
+//!
+//! Given a fixed commit-rate target, ADSP⁺ pins each worker to a *fixed*
+//! number of local updates τᵢ between commits (instead of ADSP's no-waiting
+//! "train until the timer fires"), with the τᵢ found by an offline search.
+//! It never blocks. The paper uses it to show ADSP's maximal-training
+//! strategy is near-optimal; `experiments/fig8.rs` performs the offline
+//! search over τ-scalings (search time excluded, as in the paper).
+//!
+//! When `spec.tau_per_worker` is empty, τᵢ defaults to the no-waiting value
+//! `vᵢ·(Γ/ΔC − Oᵢ)` — i.e. exactly what ADSP would train — so the default
+//! configuration reproduces ADSP's schedule with timer jitter removed.
+
+use crate::config::{ClusterSpec, SyncSpec};
+
+use super::{Action, ClusterView, SyncModelKind, SyncPolicy};
+
+pub struct AdspPlusPolicy {
+    m: usize,
+    tau: Vec<u64>,
+}
+
+impl AdspPlusPolicy {
+    pub fn new(spec: &SyncSpec, cluster: &ClusterSpec) -> Self {
+        let m = cluster.m();
+        let tau = if spec.tau_per_worker.len() == m {
+            spec.tau_per_worker.iter().map(|&t| t.max(1)).collect()
+        } else {
+            Self::no_waiting_tau(spec, cluster)
+        };
+        AdspPlusPolicy { m, tau }
+    }
+
+    /// The no-waiting τᵢ: what worker i can train inside one commit period
+    /// at rate ΔC (= fixed_delta_c, default 1): τᵢ = vᵢ·(Γ/ΔC − Oᵢ).
+    pub fn no_waiting_tau(spec: &SyncSpec, cluster: &ClusterSpec) -> Vec<u64> {
+        let dc = spec.fixed_delta_c.max(1) as f64;
+        cluster
+            .workers
+            .iter()
+            .map(|w| {
+                let budget = (spec.gamma / dc - w.comm_secs).max(0.0);
+                ((w.speed * budget).floor() as u64).max(1)
+            })
+            .collect()
+    }
+
+    pub fn tau(&self) -> &[u64] {
+        &self.tau
+    }
+
+    /// Scale every τᵢ by `f` (the Fig. 8 offline search dimension).
+    pub fn with_scaled_tau(mut self, f: f64) -> Self {
+        for t in &mut self.tau {
+            *t = ((*t as f64 * f).round() as u64).max(1);
+        }
+        self
+    }
+}
+
+impl SyncPolicy for AdspPlusPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::AdspPlus
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        let me = &view.workers[w];
+        let tau = self.tau[w];
+        if me.local_since_commit >= tau {
+            Action::Commit
+        } else {
+            let remaining = tau - me.local_since_commit;
+            Action::Train { k: view.clamp_k(remaining) }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("adsp_plus(m={}, tau={:?})", self.m, self.tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkerSpec;
+    use crate::sync::{SyncModelKind, WorkerProgress};
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.25, 0.2)])
+    }
+
+    #[test]
+    fn default_tau_is_no_waiting_schedule() {
+        let spec = SyncSpec::new(SyncModelKind::AdspPlus).with_gamma(60.0);
+        let p = AdspPlusPolicy::new(&spec, &cluster());
+        // v=1: 1*(60-0.2)=59; v=0.25: 0.25*59.8 = 14.
+        assert_eq!(p.tau(), &[59, 14]);
+    }
+
+    #[test]
+    fn explicit_tau_respected_and_scaled() {
+        let mut spec = SyncSpec::new(SyncModelKind::AdspPlus);
+        spec.tau_per_worker = vec![10, 4];
+        let p = AdspPlusPolicy::new(&spec, &cluster()).with_scaled_tau(0.5);
+        assert_eq!(p.tau(), &[5, 2]);
+        let p2 = AdspPlusPolicy::new(&spec, &cluster()).with_scaled_tau(0.01);
+        assert_eq!(p2.tau(), &[1, 1], "tau floors at 1");
+    }
+
+    #[test]
+    fn commit_after_tau_never_block() {
+        let mut spec = SyncSpec::new(SyncModelKind::AdspPlus);
+        spec.tau_per_worker = vec![3, 3];
+        let mut p = AdspPlusPolicy::new(&spec, &cluster());
+        let mut ws = vec![WorkerProgress { batch_size: 32, ..Default::default() }; 2];
+        fn view(ws: &[WorkerProgress]) -> ClusterView<'_> {
+            ClusterView {
+                now: 0.0,
+                workers: ws,
+                speeds: &[1.0, 0.25],
+                comms: &[0.2, 0.2],
+                k_variants: &[16, 4, 1],
+                last_eval: None,
+                initial_loss: None,
+            }
+        }
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
+        ws[0].local_since_commit = 3;
+        ws[0].commits = 5; // far ahead of peer
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Commit);
+        ws[0].local_since_commit = 0;
+        assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
+    }
+}

@@ -1,0 +1,196 @@
+//! The classic synchronization models: BSP, SSP and TAP (paper §2.2).
+//!
+//! All three commit after *every* local step; they differ only in when a
+//! worker is allowed to proceed:
+//!
+//! * **BSP** (Valiant 1990): full barrier — nobody starts round r+1 until
+//!   every worker's round-r commit is applied.
+//! * **SSP(s)** (Ho et al. 2013): bounded staleness — a worker blocks when
+//!   it is more than `s` steps ahead of the slowest worker.
+//! * **TAP** (Hsieh et al. 2017): totally asynchronous — never blocks (and,
+//!   per the paper, has no convergence guarantee; kept as a baseline).
+
+use super::{Action, ClusterView, SyncModelKind, SyncPolicy};
+
+/// Bulk Synchronous Parallel.
+pub struct BspPolicy {
+    m: usize,
+}
+
+impl BspPolicy {
+    pub fn new(m: usize) -> Self {
+        BspPolicy { m }
+    }
+}
+
+impl SyncPolicy for BspPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::Bsp
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        let me = &view.workers[w];
+        if me.local_since_commit >= 1 {
+            return Action::Commit;
+        }
+        // I have committed round `me.commits`; the barrier releases when
+        // every worker has reached the same commit count.
+        if me.commits > view.min_commits() {
+            return Action::Block;
+        }
+        Action::Train { k: 1 }
+    }
+
+    fn delta_c(&self, _w: usize) -> Option<f64> {
+        None
+    }
+
+    fn describe(&self) -> String {
+        format!("bsp(m={})", self.m)
+    }
+}
+
+/// Stale Synchronous Parallel with staleness bound `s`.
+pub struct SspPolicy {
+    m: usize,
+    s: u64,
+}
+
+impl SspPolicy {
+    pub fn new(m: usize, s: u64) -> Self {
+        SspPolicy { m, s }
+    }
+
+    pub fn staleness_bound(&self) -> u64 {
+        self.s
+    }
+}
+
+impl SyncPolicy for SspPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::Ssp
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        let me = &view.workers[w];
+        if me.local_since_commit >= 1 {
+            return Action::Commit;
+        }
+        // Block when training one more step would exceed the staleness
+        // bound relative to the slowest worker.
+        if me.steps + 1 > view.min_steps() + self.s {
+            return Action::Block;
+        }
+        Action::Train { k: 1 }
+    }
+
+    fn describe(&self) -> String {
+        format!("ssp(m={}, s={})", self.m, self.s)
+    }
+}
+
+/// Totally Asynchronous Parallel — never waits.
+pub struct TapPolicy {
+    m: usize,
+}
+
+impl TapPolicy {
+    pub fn new(m: usize) -> Self {
+        TapPolicy { m }
+    }
+}
+
+impl SyncPolicy for TapPolicy {
+    fn kind(&self) -> SyncModelKind {
+        SyncModelKind::Tap
+    }
+
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
+        if view.workers[w].local_since_commit >= 1 {
+            Action::Commit
+        } else {
+            Action::Train { k: 1 }
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("tap(m={})", self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::WorkerProgress;
+
+    fn view<'a>(
+        workers: &'a [WorkerProgress],
+        speeds: &'a [f64],
+        comms: &'a [f64],
+    ) -> ClusterView<'a> {
+        ClusterView {
+            now: 0.0,
+            workers,
+            speeds,
+            comms,
+            k_variants: &[16, 4, 1],
+            last_eval: None,
+            initial_loss: None,
+        }
+    }
+
+    fn workers(n: usize) -> Vec<WorkerProgress> {
+        vec![WorkerProgress { batch_size: 32, ..Default::default() }; n]
+    }
+
+    #[test]
+    fn bsp_train_commit_block_cycle() {
+        let speeds = [1.0, 1.0];
+        let comms = [0.1, 0.1];
+        let mut ws = workers(2);
+        let mut p = BspPolicy::new(2);
+        // Fresh worker trains.
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+        // After a local step it must commit.
+        ws[0].steps = 1;
+        ws[0].local_since_commit = 1;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Commit);
+        // After its commit, with the peer still at round 0, it blocks.
+        ws[0].local_since_commit = 0;
+        ws[0].commits = 1;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
+        // Once the peer catches up, it trains again.
+        ws[1].commits = 1;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+    }
+
+    #[test]
+    fn ssp_allows_bounded_lead() {
+        let speeds = [1.0, 1.0];
+        let comms = [0.1, 0.1];
+        let mut ws = workers(2);
+        let mut p = SspPolicy::new(2, 3);
+        // Lead of 3 over the slowest (0 steps): 3+1 > 0+3 → block.
+        ws[0].steps = 3;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
+        // Lead of 2: allowed.
+        ws[0].steps = 2;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+        // Slow worker catches up → leader unblocks.
+        ws[0].steps = 3;
+        ws[1].steps = 1;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+    }
+
+    #[test]
+    fn tap_never_blocks() {
+        let speeds = [1.0, 1.0];
+        let comms = [0.1, 0.1];
+        let mut ws = workers(2);
+        ws[0].steps = 1_000_000;
+        let mut p = TapPolicy::new(2);
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+        ws[0].local_since_commit = 1;
+        assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Commit);
+    }
+}

@@ -1,0 +1,331 @@
+//! The synchronization-model zoo.
+//!
+//! Every parameter-synchronization model the paper discusses is implemented
+//! behind one engine-agnostic trait, [`SyncPolicy`]: the engine (virtual-time
+//! simulator or tokio real-time coordinator) asks, per ready worker, *what
+//! should this worker do next*; policies answer from pure state. This keeps
+//! the decision logic identical across engines and directly testable.
+//!
+//! | model           | commit trigger                  | blocking rule            |
+//! |-----------------|---------------------------------|--------------------------|
+//! | BSP             | every step                      | full barrier every round |
+//! | SSP(s)          | every step                      | staleness > s            |
+//! | TAP             | every step                      | never                    |
+//! | ADACOMM         | every τ steps (τ adapted)       | barrier at sync rounds   |
+//! | Fixed ADACOMM   | every τ steps (τ fixed)         | barrier at sync rounds   |
+//! | ADSP            | timer Γ/ΔCᵢ − Oᵢ (rate searched)| **never**                |
+//! | ADSP⁺           | after τᵢ local steps (offline)  | never                    |
+//! | BatchTune-X     | as X, with bᵢ ∝ vᵢ              | as X                     |
+
+pub mod adacomm;
+pub mod adsp;
+pub mod adsp_plus;
+pub mod classic;
+
+pub use adacomm::{AdacommPolicy, FixedAdacommPolicy};
+pub use adsp::{implicit_momentum, AdspPolicy};
+pub use adsp_plus::AdspPlusPolicy;
+pub use classic::{BspPolicy, SspPolicy, TapPolicy};
+
+/// Which synchronization model to run (CLI / TOML facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SyncModelKind {
+    Bsp,
+    Ssp,
+    Tap,
+    Adacomm,
+    FixedAdacomm,
+    Adsp,
+    AdspPlus,
+    BatchTuneBsp,
+    BatchTuneFixedAdacomm,
+}
+
+impl SyncModelKind {
+    pub const ALL: [SyncModelKind; 9] = [
+        SyncModelKind::Bsp,
+        SyncModelKind::Ssp,
+        SyncModelKind::Tap,
+        SyncModelKind::Adacomm,
+        SyncModelKind::FixedAdacomm,
+        SyncModelKind::Adsp,
+        SyncModelKind::AdspPlus,
+        SyncModelKind::BatchTuneBsp,
+        SyncModelKind::BatchTuneFixedAdacomm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SyncModelKind::Bsp => "bsp",
+            SyncModelKind::Ssp => "ssp",
+            SyncModelKind::Tap => "tap",
+            SyncModelKind::Adacomm => "adacomm",
+            SyncModelKind::FixedAdacomm => "fixed_adacomm",
+            SyncModelKind::Adsp => "adsp",
+            SyncModelKind::AdspPlus => "adsp_plus",
+            SyncModelKind::BatchTuneBsp => "batch_tune_bsp",
+            SyncModelKind::BatchTuneFixedAdacomm => "batch_tune_fixed_adacomm",
+        }
+    }
+
+    /// The underlying policy for BatchTune wrappers.
+    pub fn inner(&self) -> SyncModelKind {
+        match self {
+            SyncModelKind::BatchTuneBsp => SyncModelKind::Bsp,
+            SyncModelKind::BatchTuneFixedAdacomm => SyncModelKind::FixedAdacomm,
+            k => *k,
+        }
+    }
+
+    pub fn is_batchtune(&self) -> bool {
+        matches!(self, SyncModelKind::BatchTuneBsp | SyncModelKind::BatchTuneFixedAdacomm)
+    }
+}
+
+impl std::fmt::Display for SyncModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for SyncModelKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SyncModelKind::ALL
+            .iter()
+            .find(|k| k.name() == s)
+            .copied()
+            .ok_or_else(|| format!("unknown sync model '{s}'"))
+    }
+}
+
+/// Per-worker progress counters maintained by the engine.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerProgress {
+    /// Local training steps completed.
+    pub steps: u64,
+    /// Total commits c_i delivered to the PS.
+    pub commits: u64,
+    /// Local steps since the last commit was *initiated*.
+    pub local_since_commit: u64,
+    /// Mini-batch size this worker trains with.
+    pub batch_size: usize,
+    /// Whether the engine currently has this worker parked.
+    pub blocked: bool,
+}
+
+/// Read-only cluster snapshot handed to policies.
+pub struct ClusterView<'a> {
+    /// Current (virtual) time in seconds.
+    pub now: f64,
+    pub workers: &'a [WorkerProgress],
+    /// v_i — steps per second at the reference batch size.
+    pub speeds: &'a [f64],
+    /// O_i — commit round-trip seconds.
+    pub comms: &'a [f64],
+    /// Scan-length variants available in the artifact (sorted descending).
+    pub k_variants: &'a [usize],
+    /// Latest global-model evaluation (time, loss), if any.
+    pub last_eval: Option<(f64, f64)>,
+    /// First recorded global loss (ADACOMM's l_0).
+    pub initial_loss: Option<f64>,
+}
+
+impl ClusterView<'_> {
+    pub fn m(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn min_steps(&self) -> u64 {
+        self.workers.iter().map(|w| w.steps).min().unwrap_or(0)
+    }
+
+    pub fn min_commits(&self) -> u64 {
+        self.workers.iter().map(|w| w.commits).min().unwrap_or(0)
+    }
+
+    pub fn max_commits(&self) -> u64 {
+        self.workers.iter().map(|w| w.commits).max().unwrap_or(0)
+    }
+
+    /// Per-step wall time for worker `w` (batch-size scaled: compute grows
+    /// linearly with the mini-batch relative to the reference batch).
+    pub fn step_time(&self, w: usize, reference_batch: usize) -> f64 {
+        let scale = if reference_batch > 0 && self.workers[w].batch_size > 0 {
+            self.workers[w].batch_size as f64 / reference_batch as f64
+        } else {
+            1.0
+        };
+        scale / self.speeds[w]
+    }
+
+    /// Largest available scan variant not exceeding `k`.
+    pub fn clamp_k(&self, k: u64) -> u64 {
+        for &v in self.k_variants {
+            if (v as u64) <= k {
+                return v as u64;
+            }
+        }
+        1
+    }
+}
+
+/// What a ready worker should do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Run `k` local mini-batch steps, then ask again.
+    Train { k: u64 },
+    /// Push the accumulated update U to the PS and pull fresh parameters.
+    Commit,
+    /// Park until the cluster state changes (engine re-polls after events).
+    Block,
+}
+
+/// Engine-agnostic synchronization policy. Implementations must be
+/// deterministic functions of their internal state and the [`ClusterView`].
+pub trait SyncPolicy: Send {
+    fn kind(&self) -> SyncModelKind;
+
+    /// Decide the next action for ready worker `w`.
+    fn next_action(&mut self, w: usize, view: &ClusterView) -> Action;
+
+    /// Worker `w`'s commit was applied at the PS at `view.now`.
+    fn on_commit_applied(&mut self, _w: usize, _view: &ClusterView) {}
+
+    /// Scheduler checkpoint (every Γ seconds).
+    fn on_checkpoint(&mut self, _view: &ClusterView) {}
+
+    /// Epoch boundary (ADSP restarts its commit-rate search here).
+    fn on_epoch_start(&mut self, _view: &ClusterView) {}
+
+    /// A fresh global-model evaluation sample.
+    fn on_eval(&mut self, _t: f64, _loss: f64) {}
+
+    /// Current commit-rate assignment ΔC_i, when the model has one.
+    fn delta_c(&self, _w: usize) -> Option<f64> {
+        None
+    }
+
+    /// Diagnostic label (e.g. current C_target / τ) for logs.
+    fn describe(&self) -> String {
+        self.kind().name().to_string()
+    }
+}
+
+/// Construct the policy for a spec. BatchTune wrappers return their inner
+/// policy — the engine separately assigns per-worker batch sizes via
+/// [`assign_batchtune_sizes`].
+pub fn make_policy(
+    spec: &crate::config::SyncSpec,
+    cluster: &crate::config::ClusterSpec,
+) -> Box<dyn SyncPolicy> {
+    let m = cluster.m();
+    match spec.kind.inner() {
+        SyncModelKind::Bsp => Box::new(BspPolicy::new(m)),
+        SyncModelKind::Ssp => Box::new(SspPolicy::new(m, spec.staleness)),
+        SyncModelKind::Tap => Box::new(TapPolicy::new(m)),
+        SyncModelKind::FixedAdacomm => Box::new(FixedAdacommPolicy::new(m, spec.tau)),
+        SyncModelKind::Adacomm => Box::new(AdacommPolicy::new(m, spec.tau)),
+        SyncModelKind::Adsp => Box::new(AdspPolicy::new(spec, cluster)),
+        SyncModelKind::AdspPlus => Box::new(AdspPlusPolicy::new(spec, cluster)),
+        // inner() never returns the wrappers.
+        SyncModelKind::BatchTuneBsp | SyncModelKind::BatchTuneFixedAdacomm => unreachable!(),
+    }
+}
+
+/// BatchTune (R²SP-style, Fig. 9): assign each worker the available batch
+/// size closest to `b_ref * v_i / max(v)` so per-step wall time is roughly
+/// equalized while the *global* batch per round stays ≈ m·b_ref.
+pub fn assign_batchtune_sizes(
+    speeds: &[f64],
+    b_ref: usize,
+    available: &[usize],
+) -> Vec<usize> {
+    let vmax = speeds.iter().cloned().fold(f64::MIN, f64::max);
+    // Scale so the global batch sums to ~m*b_ref: proportional to v_i,
+    // normalized by mean speed.
+    let vmean = speeds.iter().sum::<f64>() / speeds.len() as f64;
+    let _ = vmax;
+    speeds
+        .iter()
+        .map(|&v| {
+            let ideal = b_ref as f64 * v / vmean;
+            *available
+                .iter()
+                .min_by(|&&a, &&b| {
+                    (a as f64 - ideal).abs().total_cmp(&(b as f64 - ideal).abs())
+                })
+                .expect("no batch sizes available")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in SyncModelKind::ALL {
+            let parsed: SyncModelKind = k.name().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("nope".parse::<SyncModelKind>().is_err());
+    }
+
+    #[test]
+    fn names_are_snake_case_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in SyncModelKind::ALL {
+            let n = kind.name();
+            assert!(n.chars().all(|c| c.is_ascii_lowercase() || c == '_'), "{n}");
+            assert!(seen.insert(n), "duplicate name {n}");
+        }
+    }
+
+    #[test]
+    fn batchtune_tracks_speed() {
+        let sizes = assign_batchtune_sizes(&[1.0, 1.0, 3.0], 128, &[32, 64, 128, 256]);
+        // mean v = 5/3; slow workers get ~77 → 64, fast gets ~230 → 256.
+        assert_eq!(sizes, vec![64, 64, 256]);
+        // Global batch within 25% of 3*128.
+        let total: usize = sizes.iter().sum();
+        assert!((total as f64 - 384.0).abs() / 384.0 < 0.25);
+    }
+
+    #[test]
+    fn clamp_k_picks_largest_fitting_variant() {
+        let workers = vec![WorkerProgress::default(); 2];
+        let view = ClusterView {
+            now: 0.0,
+            workers: &workers,
+            speeds: &[1.0, 1.0],
+            comms: &[0.1, 0.1],
+            k_variants: &[16, 4, 1],
+            last_eval: None,
+            initial_loss: None,
+        };
+        assert_eq!(view.clamp_k(100), 16);
+        assert_eq!(view.clamp_k(7), 4);
+        assert_eq!(view.clamp_k(3), 1);
+        assert_eq!(view.clamp_k(1), 1);
+    }
+
+    #[test]
+    fn step_time_scales_with_batch() {
+        let mut workers = vec![WorkerProgress::default(); 1];
+        workers[0].batch_size = 64;
+        let view = ClusterView {
+            now: 0.0,
+            workers: &workers,
+            speeds: &[2.0],
+            comms: &[0.1],
+            k_variants: &[1],
+            last_eval: None,
+            initial_loss: None,
+        };
+        // Half the reference batch → half the step time.
+        assert!((view.step_time(0, 128) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,110 @@
+//! Micro-benchmark harness (criterion is unavailable offline; benches are
+//! `harness = false` binaries built on this).
+//!
+//! Reports min/mean/p50/p95 over timed iterations after warmup, in a
+//! stable, grep-friendly format:
+//!
+//! ```text
+//! bench fig4/local_steps_k16 ... 20 iters  min 1.234ms  mean 1.301ms  p50 1.280ms  p95 1.402ms
+//! ```
+
+use std::time::Instant;
+
+pub struct BenchHarness {
+    group: String,
+    warmup: usize,
+    iters: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub min_s: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+impl BenchHarness {
+    pub fn new(group: &str) -> Self {
+        BenchHarness { group: group.to_string(), warmup: 2, iters: 10 }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
+        self.warmup = warmup;
+        self.iters = iters.max(1);
+        self
+    }
+
+    /// Time `f` and print one result line; returns the stats.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(f64::total_cmp);
+        let stats = BenchStats {
+            iters: self.iters,
+            min_s: times[0],
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            p50_s: times[times.len() / 2],
+            p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+        };
+        println!(
+            "bench {}/{} ... {} iters  min {}  mean {}  p50 {}  p95 {}",
+            self.group,
+            name,
+            stats.iters,
+            fmt_secs(stats.min_s),
+            fmt_secs(stats.mean_s),
+            fmt_secs(stats.p50_s),
+            fmt_secs(stats.p95_s),
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_stats() {
+        let h = BenchHarness::new("test").with_iters(1, 5);
+        let s = h.run("noop_sleepless", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert!(s.min_s > 0.0);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-5).ends_with("us"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+}

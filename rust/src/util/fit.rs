@@ -1,0 +1,242 @@
+//! Loss-curve fitting for the ADSP reward (paper §4.2, "Online Search and
+//! Reward Design").
+//!
+//! SGD loss curves follow `l(t) ≈ 1/(a1²·t + a2) + a3` (Peng et al. 2018,
+//! Optimus). The scheduler collects `(t, loss)` pairs inside one evaluation
+//! window, fits `(a1, a2, a3)` by damped Gauss–Newton, and scores the window
+//! with the reward
+//!
+//! `r = a1² / (1/(l_ref − a3) − a2)`
+//!
+//! i.e. the reciprocal of the time at which the fitted curve reaches a fixed
+//! reference loss `l_ref` — "loss-decrease speed". Higher is better.
+
+/// Result of fitting `l = 1/(a1²·t + a2) + a3`.
+#[derive(Clone, Copy, Debug)]
+pub struct InverseCurveFit {
+    pub a1: f64,
+    pub a2: f64,
+    pub a3: f64,
+    /// Final sum of squared residuals.
+    pub sse: f64,
+    pub converged: bool,
+}
+
+impl InverseCurveFit {
+    pub fn predict(&self, t: f64) -> f64 {
+        1.0 / (self.a1 * self.a1 * t + self.a2) + self.a3
+    }
+}
+
+/// Fit `l = 1/(a1²·t + a2) + a3` to `(t, loss)` samples.
+///
+/// Uses damped Gauss–Newton with a grid-seeded start; `a1²` guarantees the
+/// decay coefficient stays non-negative exactly as the paper parameterizes
+/// it. Returns `None` for degenerate inputs (<3 points, non-finite values,
+/// or a flat curve where the fit has no information).
+pub fn fit_inverse_curve(samples: &[(f64, f64)]) -> Option<InverseCurveFit> {
+    if samples.len() < 3 {
+        return None;
+    }
+    if samples.iter().any(|(t, l)| !t.is_finite() || !l.is_finite()) {
+        return None;
+    }
+    let l_min = samples.iter().map(|&(_, l)| l).fold(f64::INFINITY, f64::min);
+    let l_max = samples.iter().map(|&(_, l)| l).fold(f64::NEG_INFINITY, f64::max);
+    if l_max - l_min < 1e-12 {
+        // Perfectly flat: return the flat curve directly (a1=0 ⇒ reward 0).
+        return Some(InverseCurveFit { a1: 0.0, a2: 1.0, a3: l_min - 1.0, sse: 0.0, converged: true });
+    }
+
+    // Seed: a3 slightly below the observed minimum; 1/(l0 - a3) = a2.
+    let t0 = samples[0].0;
+    let span = l_max - l_min;
+    let mut best: Option<InverseCurveFit> = None;
+    for &a3_frac in &[0.5, 0.8, 0.95] {
+        let a3 = l_min - span * (1.0 - a3_frac);
+        let l0 = samples[0].1 - a3;
+        if l0 <= 0.0 {
+            continue;
+        }
+        let a2 = 1.0 / l0 - 0.0_f64.max(t0);
+        let seed = [0.05, a2.max(1e-6), a3];
+        if let Some(fit) = gauss_newton(samples, seed) {
+            if best.map_or(true, |b| fit.sse < b.sse) {
+                best = Some(fit);
+            }
+        }
+    }
+    best
+}
+
+fn gauss_newton(samples: &[(f64, f64)], seed: [f64; 3]) -> Option<InverseCurveFit> {
+    let [mut a1, mut a2, mut a3] = seed;
+    let mut lambda = 1e-3; // LM damping
+    let mut sse = sse_of(samples, a1, a2, a3);
+    let mut converged = false;
+
+    for _ in 0..200 {
+        // Accumulate J^T J and J^T r for the 3-parameter model.
+        let mut jtj = [[0.0f64; 3]; 3];
+        let mut jtr = [0.0f64; 3];
+        for &(t, l) in samples {
+            let denom = a1 * a1 * t + a2;
+            if denom.abs() < 1e-12 {
+                return None;
+            }
+            let pred = 1.0 / denom + a3;
+            let r = l - pred;
+            let d_denom = -1.0 / (denom * denom);
+            let j = [d_denom * 2.0 * a1 * t, d_denom, 1.0];
+            for i in 0..3 {
+                for k in 0..3 {
+                    jtj[i][k] += j[i] * j[k];
+                }
+                jtr[i] += j[i] * r;
+            }
+        }
+        for i in 0..3 {
+            jtj[i][i] *= 1.0 + lambda;
+        }
+        let delta = solve3(jtj, jtr)?;
+        let (na1, na2, na3) = (a1 + delta[0], a2 + delta[1], a3 + delta[2]);
+        let new_sse = sse_of(samples, na1, na2, na3);
+        if new_sse.is_finite() && new_sse < sse {
+            let rel = (sse - new_sse) / sse.max(1e-300);
+            a1 = na1;
+            a2 = na2;
+            a3 = na3;
+            sse = new_sse;
+            lambda = (lambda * 0.5).max(1e-12);
+            if rel < 1e-10 {
+                converged = true;
+                break;
+            }
+        } else {
+            lambda *= 4.0;
+            if lambda > 1e8 {
+                converged = true;
+                break;
+            }
+        }
+    }
+    Some(InverseCurveFit { a1, a2, a3, sse, converged })
+}
+
+fn sse_of(samples: &[(f64, f64)], a1: f64, a2: f64, a3: f64) -> f64 {
+    samples
+        .iter()
+        .map(|&(t, l)| {
+            let denom = a1 * a1 * t + a2;
+            let pred = 1.0 / denom + a3;
+            let r = l - pred;
+            r * r
+        })
+        .sum()
+}
+
+/// Solve a 3x3 linear system by Gaussian elimination with partial pivoting.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))?;
+        if a[piv][col].abs() < 1e-14 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for col in (0..3).rev() {
+        let mut s = b[col];
+        for k in col + 1..3 {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// The paper's reward: the loss-decrease speed, computed as the reciprocal of
+/// the fitted time-to-reach `l_ref`:  `r = a1² / (1/(l_ref − a3) − a2)`.
+///
+/// Windows whose fit predicts `l_ref` is unreachable (l_ref <= a3) or already
+/// passed get reward `0`, matching "this configuration does not make progress
+/// toward the reference loss".
+pub fn reward_from_fit(fit: &InverseCurveFit, l_ref: f64) -> f64 {
+    let gap = l_ref - fit.a3;
+    if gap <= 0.0 {
+        return 0.0;
+    }
+    let denom = 1.0 / gap - fit.a2;
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    (fit.a1 * fit.a1 / denom).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(a1: f64, a2: f64, a3: f64, n: usize, noise: f64, seed: u64) -> Vec<(f64, f64)> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * 2.0 + 1.0;
+                let l = 1.0 / (a1 * a1 * t + a2) + a3 + noise * rng.normal();
+                (t, l)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_planted_parameters_noiseless() {
+        let samples = synth(0.3, 0.5, 0.1, 30, 0.0, 1);
+        let fit = fit_inverse_curve(&samples).unwrap();
+        assert!((fit.a1.abs() - 0.3).abs() < 1e-3, "a1={}", fit.a1);
+        assert!((fit.a2 - 0.5).abs() < 1e-2, "a2={}", fit.a2);
+        assert!((fit.a3 - 0.1).abs() < 1e-3, "a3={}", fit.a3);
+    }
+
+    #[test]
+    fn recovers_under_noise() {
+        let samples = synth(0.2, 1.0, 0.3, 60, 0.005, 2);
+        let fit = fit_inverse_curve(&samples).unwrap();
+        assert!((fit.a3 - 0.3).abs() < 0.1, "a3={}", fit.a3);
+        let pred_mid = fit.predict(60.0);
+        let true_mid = 1.0 / (0.04 * 60.0 + 1.0) + 0.3;
+        assert!((pred_mid - true_mid).abs() < 0.05);
+    }
+
+    #[test]
+    fn faster_decay_earns_higher_reward() {
+        let fast = fit_inverse_curve(&synth(0.5, 0.5, 0.0, 30, 0.0, 3)).unwrap();
+        let slow = fit_inverse_curve(&synth(0.1, 0.5, 0.0, 30, 0.0, 4)).unwrap();
+        let l_ref = 0.5;
+        assert!(reward_from_fit(&fast, l_ref) > reward_from_fit(&slow, l_ref));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(fit_inverse_curve(&[]).is_none());
+        assert!(fit_inverse_curve(&[(0.0, 1.0), (1.0, 0.9)]).is_none());
+        assert!(fit_inverse_curve(&[(0.0, f64::NAN), (1.0, 0.9), (2.0, 0.8)]).is_none());
+        // Flat curve fits with a1=0 and reward 0.
+        let flat = fit_inverse_curve(&[(0.0, 1.0), (1.0, 1.0), (2.0, 1.0)]).unwrap();
+        assert_eq!(reward_from_fit(&flat, 0.5), 0.0);
+    }
+
+    #[test]
+    fn unreachable_reference_loss_is_zero_reward() {
+        let fit = fit_inverse_curve(&synth(0.3, 0.5, 0.4, 30, 0.0, 5)).unwrap();
+        // l_ref below the asymptote a3=0.4 can never be reached.
+        assert_eq!(reward_from_fit(&fit, 0.2), 0.0);
+    }
+}

@@ -1,0 +1,448 @@
+//! Minimal JSON parser/serializer (this environment ships no serde; see
+//! Cargo.toml). Covers the full JSON grammar the project uses: manifests,
+//! experiment specs, and outcome dumps.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------- accessors ----------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("expected unsigned integer, got {f}");
+        }
+        Ok(f as u64)
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        Ok(self.as_u64()? as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|j| j.as_usize()).collect()
+    }
+
+    pub fn f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|j| j.as_f64()).collect()
+    }
+
+    // Optional-with-default helpers for config parsing.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map(|j| j.as_f64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key).map(|j| j.as_u64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map(|j| j.as_usize()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str> {
+        self.get(key).map(|j| j.as_str()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    // ---------------- builders ----------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn num(v: impl Into<f64>) -> Json {
+        Json::Num(v.into())
+    }
+
+    pub fn str(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    // ---------------- serialize ----------------
+
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
+    pub fn dump_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, true);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize, pretty: bool) {
+        let pad = |out: &mut String, n: usize| {
+            if pretty {
+                out.push('\n');
+                for _ in 0..n {
+                    out.push(' ');
+                }
+            }
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else if n.is_finite() {
+                    let _ = write!(out, "{n}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    item.write(out, indent + 1, pretty);
+                }
+                if !items.is_empty() {
+                    pad(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    pad(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push(':');
+                    if pretty {
+                        out.push(' ');
+                    }
+                    v.write(out, indent + 1, pretty);
+                }
+                if !map.is_empty() {
+                    pad(out, indent);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ---------------- parse ----------------
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        _ => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("invalid literal at byte {pos}")
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>().map_err(|_| anyhow!("bad number '{s}'"))?))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        if *pos >= b.len() {
+            bail!("unterminated string");
+        }
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    bail!("unterminated escape");
+                }
+                match b[*pos] {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        if *pos + 4 >= b.len() {
+                            bail!("bad \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                        let code = u32::from_str_radix(hex, 16)?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    c => bail!("bad escape \\{}", c as char),
+                }
+                *pos += 1;
+            }
+            _ => {
+                // Consume one UTF-8 scalar.
+                let rest = std::str::from_utf8(&b[*pos..])
+                    .map_err(|_| anyhow!("invalid utf-8 in string"))?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // [
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("expected ',' or ']' at byte {pos}"),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // {
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b'"' {
+            bail!("expected object key at byte {pos}");
+        }
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            bail!("expected ':' at byte {pos}");
+        }
+        *pos += 1;
+        map.insert(key, parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => bail!("expected ',' or '}}' at byte {pos}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let text = r#"{
+ "model": "cnn",
+ "seed": 0,
+ "params": [{"name": "a/w", "shape": [2, 3], "numel": 6}],
+ "x_shape": [32, 32, 3],
+ "frac": 0.25,
+ "neg": -1.5e-3,
+ "flag": true,
+ "nothing": null
+}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.req("model").unwrap().as_str().unwrap(), "cnn");
+        assert_eq!(v.req("x_shape").unwrap().usize_vec().unwrap(), vec![32, 32, 3]);
+        assert_eq!(v.req("frac").unwrap().as_f64().unwrap(), 0.25);
+        assert!(v.req("flag").unwrap().as_bool().unwrap());
+        assert_eq!(v.req("nothing").unwrap(), &Json::Null);
+        let p = &v.req("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.req("numel").unwrap().as_usize().unwrap(), 6);
+        // Dump → parse → identical.
+        let again = Json::parse(&v.dump()).unwrap();
+        assert_eq!(again, v);
+        let again2 = Json::parse(&v.dump_pretty()).unwrap();
+        assert_eq!(again2, v);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::parse(r#""a\"b\\c\ndA""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\"b\\c\ndA");
+        let s = Json::Str("x\"y\n\t\\".into()).dump();
+        assert_eq!(Json::parse(&s).unwrap().as_str().unwrap(), "x\"y\n\t\\");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1, 2,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("123 45").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(Json::parse("42").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(Json::parse("-7.5").unwrap().as_f64().unwrap(), -7.5);
+        assert_eq!(Json::parse("1e3").unwrap().as_f64().unwrap(), 1000.0);
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("-1").unwrap().as_u64().is_err());
+        // Integral floats dump without the fraction.
+        assert_eq!(Json::num(3.0).dump(), "3");
+        assert_eq!(Json::num(3.25).dump(), "3.25");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let v = Json::parse("\"héllo ☃\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo ☃");
+        assert_eq!(Json::parse(&v.dump()).unwrap(), v);
+    }
+
+    #[test]
+    fn defaults_helpers() {
+        let v = Json::parse(r#"{"a": 2}"#).unwrap();
+        assert_eq!(v.f64_or("a", 9.0).unwrap(), 2.0);
+        assert_eq!(v.f64_or("b", 9.0).unwrap(), 9.0);
+        assert_eq!(v.str_or("c", "dflt").unwrap(), "dflt");
+        assert!(v.f64_or("a", 0.0).is_ok());
+        let bad = Json::parse(r#"{"a": "x"}"#).unwrap();
+        assert!(bad.f64_or("a", 0.0).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, the loss-curve fit
+//! behind the ADSP reward (paper §4.2), streaming statistics, a JSON
+//! parser/serializer, and a micro-bench harness (this environment ships no
+//! serde/criterion/proptest — see Cargo.toml).
+
+pub mod bench;
+pub mod fit;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use bench::BenchHarness;
+pub use fit::{fit_inverse_curve, reward_from_fit, InverseCurveFit};
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::{mean, variance, OnlineStats};

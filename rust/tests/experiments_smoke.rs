@@ -1,0 +1,56 @@
+//! Smoke tests for the figure harness: the cheapest drivers run end-to-end
+//! at bench scale and their headline *shapes* hold (who wins). The full set
+//! runs under `cargo bench` / `adsp experiment all`.
+
+use adsp::experiments::{self, Scale};
+use adsp::runtime::artifacts_root;
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("mlp_quick/manifest.json").is_file()
+}
+
+#[test]
+fn fig1_shape_adsp_waits_least_and_wins() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let table = experiments::run_by_name("fig1", Scale::Bench).unwrap();
+    assert_eq!(table.rows.len(), 4);
+    let idx_sync = 0;
+    let conv = table.column_f64("convergence_time_s");
+    let waitfrac = table.column_f64("wait_fraction");
+    let names: Vec<&str> = table.rows.iter().map(|r| r[idx_sync].as_str()).collect();
+    let pos = |n: &str| names.iter().position(|&x| x == n).unwrap();
+
+    // ADSP's waiting fraction is the smallest and near zero.
+    let adsp_wait = waitfrac[pos("adsp")];
+    for (i, &w) in waitfrac.iter().enumerate() {
+        assert!(adsp_wait <= w + 1e-9, "adsp should wait least (row {i})");
+    }
+    assert!(adsp_wait < 0.15, "adsp wait fraction should be negligible: {adsp_wait}");
+    // BSP waits the most of all models and dominates its runtime.
+    assert!(waitfrac[pos("bsp")] > 0.4, "bsp should be wait-dominated");
+    // ADSP converges at least as fast as BSP and SSP.
+    assert!(conv[pos("adsp")] <= conv[pos("bsp")] + 1e-9);
+    assert!(conv[pos("adsp")] <= conv[pos("ssp")] + 1e-9);
+}
+
+#[test]
+fn fig3_shape_momentum_decreases_with_rate() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let table = experiments::run_by_name("fig3", Scale::Bench).unwrap();
+    // Series (a): μ_implicit strictly decreases as ΔC grows.
+    let a_rows = table.filter_rows("series", "a_commit_rate");
+    assert!(a_rows.len() >= 3);
+    let mu_idx = table.header.iter().position(|h| h == "mu_implicit").unwrap();
+    let mus: Vec<f64> = a_rows.iter().map(|r| r[mu_idx].parse().unwrap()).collect();
+    for w in mus.windows(2) {
+        assert!(w[1] < w[0], "mu_implicit must decrease with commit rate: {mus:?}");
+    }
+    // Series (c) exists with matching sweep values.
+    assert!(!table.filter_rows("series", "c_explicit_momentum").is_empty());
+}

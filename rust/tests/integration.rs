@@ -1,0 +1,426 @@
+//! Integration tests over the real AOT artifacts: runtime contract, XLA vs
+//! native cross-validation, full simulator runs per synchronization model,
+//! and the real-time engine.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+use adsp::coordinator::RealtimeEngine;
+use adsp::data::make_source;
+use adsp::runtime::{artifacts_root, native, ModelRuntime};
+use adsp::simulation::SimEngine;
+use adsp::sync::SyncModelKind;
+
+fn have_artifacts(model: &str) -> bool {
+    artifacts_root().join(model).join("manifest.json").is_file()
+}
+
+macro_rules! require_artifacts {
+    ($model:expr) => {
+        if !have_artifacts($model) {
+            eprintln!("SKIP: artifacts for {} not built (run `make artifacts`)", $model);
+            return;
+        }
+    };
+}
+
+fn tiny_spec(model: &str, kind: SyncModelKind) -> ExperimentSpec {
+    let cluster = ClusterSpec::new(vec![
+        WorkerSpec::new(2.0, 0.2),
+        WorkerSpec::new(2.0, 0.2),
+        WorkerSpec::new(0.7, 0.2),
+    ]);
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 20.0;
+    sync.epoch_secs = 120.0;
+    sync.eval_window_secs = 15.0;
+    sync.tau = 4;
+    let mut spec = ExperimentSpec::new(model, cluster, sync);
+    spec.batch_size = 32;
+    spec.eval_interval_secs = 5.0;
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 3000;
+    spec.eta_prime0 = 0.05;
+    spec
+}
+
+// ---------------------------------------------------------------------------
+// runtime contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifests_load_and_validate_for_all_models() {
+    let root = artifacts_root();
+    if !root.is_dir() {
+        eprintln!("SKIP: no artifacts dir");
+        return;
+    }
+    let mut found = 0;
+    for entry in std::fs::read_dir(&root).unwrap() {
+        let dir = entry.unwrap().path();
+        if dir.join("manifest.json").is_file() {
+            let rt = ModelRuntime::load(&dir).unwrap();
+            let p = rt.init_params().unwrap();
+            assert_eq!(p.total_numel(), rt.manifest.total_param_numel);
+            assert!(p.is_finite());
+            found += 1;
+        }
+    }
+    assert!(found >= 5, "expected the full model zoo, found {found}");
+}
+
+#[test]
+fn local_steps_conservation_invariant() {
+    // params' + U' == params + U for every leaf (both sides move by ±η′g).
+    require_artifacts!("mlp_quick");
+    let rt = ModelRuntime::load_by_name("mlp_quick").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let before: Vec<Vec<f32>> = params
+        .leaves
+        .iter()
+        .zip(&u.leaves)
+        .map(|(p, uu)| p.iter().zip(uu).map(|(a, b)| a + b).collect())
+        .collect();
+    let mut src = make_source(&rt.manifest, 0, 0);
+    let (xs, ys) = src.sample_batch(4, 32);
+    let losses = rt.local_steps(&mut params, &mut u, &xs, &ys, 0.05).unwrap();
+    assert_eq!(losses.len(), 4);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    for (i, (p, uu)) in params.leaves.iter().zip(&u.leaves).enumerate() {
+        for (j, (a, b)) in p.iter().zip(uu).enumerate() {
+            let diff = (a + b - before[i][j]).abs();
+            assert!(diff < 1e-3, "leaf {i}[{j}] conservation broken: {diff}");
+        }
+    }
+    // U moved.
+    assert!(u.l2_norm() > 0.0);
+}
+
+#[test]
+fn xla_apply_matches_native() {
+    require_artifacts!("mlp_quick");
+    let rt = ModelRuntime::load_by_name("mlp_quick").unwrap();
+    let init = rt.init_params().unwrap();
+    let mut u = init.zeros_like();
+    for leaf in &mut u.leaves {
+        for (i, v) in leaf.iter_mut().enumerate() {
+            *v = (i as f32 * 0.37).sin();
+        }
+    }
+    let mut w_xla = init.clone();
+    let mut w_native = init.clone();
+    rt.apply_commit(&mut w_xla, &u, 0.3).unwrap();
+    native::apply_commit(&mut w_native, &u, 0.3);
+    assert!(w_xla.max_abs_diff(&w_native) < 1e-5, "XLA and native PS apply disagree");
+
+    // Momentum path.
+    let mut v_xla = init.zeros_like();
+    let mut v_native = init.zeros_like();
+    let mut wm_xla = init.clone();
+    let mut wm_native = init.clone();
+    for _ in 0..3 {
+        rt.apply_commit_momentum(&mut wm_xla, &u, &mut v_xla, 0.2, 0.9).unwrap();
+        native::apply_commit_momentum(&mut wm_native, &u, &mut v_native, 0.2, 0.9);
+    }
+    assert!(wm_xla.max_abs_diff(&wm_native) < 1e-4);
+    assert!(v_xla.max_abs_diff(&v_native) < 1e-4);
+}
+
+#[test]
+fn eval_loss_drops_under_training() {
+    require_artifacts!("mlp_quick");
+    let rt = ModelRuntime::load_by_name("mlp_quick").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let mut src = make_source(&rt.manifest, 0, 0);
+    let (ex, ey) = src.eval_batch(rt.manifest.eval.b);
+    let (loss0, _) = rt.eval(&params, &ex, &ey).unwrap();
+    for _ in 0..6 {
+        let (xs, ys) = src.sample_batch(16, 32);
+        rt.local_steps(&mut params, &mut u, &xs, &ys, 0.05).unwrap();
+    }
+    let (loss1, acc1) = rt.eval(&params, &ex, &ey).unwrap();
+    assert!(loss1 < loss0, "loss did not drop: {loss0} -> {loss1}");
+    assert!(acc1 > 0.3, "accuracy still at chance: {acc1}");
+}
+
+#[test]
+fn local_steps_tau_composes_variants() {
+    require_artifacts!("mlp_quick");
+    let rt = ModelRuntime::load_by_name("mlp_quick").unwrap();
+    let mut params = rt.init_params().unwrap();
+    let mut u = params.zeros_like();
+    let mut src = make_source(&rt.manifest, 0, 0);
+    // tau = 23 → plan [16, 4, 1, 1, 1] at b=32.
+    let losses = rt
+        .local_steps_tau(&mut params, &mut u, 23, 32, 0.05, |k| src.sample_batch(k, 32))
+        .unwrap();
+    assert_eq!(losses.len(), 23);
+}
+
+#[test]
+fn data_sources_exist_for_every_model() {
+    for model in ["mlp_quick", "cnn_cifar", "vgg_sim", "rnn_rail", "svm_chiller", "lm_small"] {
+        require_artifacts!(model);
+        let rt = ModelRuntime::load_by_name(model).unwrap();
+        let mut src = make_source(&rt.manifest, 7, 0);
+        let (xs, ys) = src.sample_batch(1, rt.manifest.batch_sizes()[0]);
+        assert_eq!(xs.dims[0], 1);
+        assert_eq!(xs.dims[1], rt.manifest.batch_sizes()[0]);
+        assert_eq!(ys.dims[0], 1);
+        let (ex, _) = src.eval_batch(rt.manifest.eval.b);
+        assert_eq!(ex.dims[0], rt.manifest.eval.b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simulator end-to-end per sync model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_sync_model_trains_without_deadlock() {
+    require_artifacts!("mlp_quick");
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let out = SimEngine::new(spec).unwrap().run().unwrap();
+        assert!(!out.deadlocked, "{kind} deadlocked");
+        assert!(out.total_steps > 0, "{kind} trained no steps");
+        assert!(out.total_commits > 0, "{kind} committed nothing");
+        let first = out.loss_log.first_loss().unwrap();
+        let best = out.best_loss;
+        assert!(best < first, "{kind} never improved: {first} -> {best}");
+        assert!(out.final_loss.is_finite(), "{kind} diverged");
+    }
+}
+
+#[test]
+fn adsp_keeps_commit_counts_balanced() {
+    require_artifacts!("mlp_quick");
+    let spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    let commits: Vec<u64> = out.workers.iter().map(|w| w.commits).collect();
+    let min = *commits.iter().min().unwrap();
+    let max = *commits.iter().max().unwrap();
+    // Theorem 2's ε: by any checkpoint the counts stay within a small gap.
+    assert!(max - min <= 3, "commit imbalance too large: {commits:?}");
+}
+
+#[test]
+fn adsp_has_negligible_waiting_bsp_does_not() {
+    require_artifacts!("mlp_quick");
+    let adsp = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::Adsp))
+        .unwrap()
+        .run()
+        .unwrap();
+    let bsp = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::Bsp))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        adsp.breakdown.waiting_fraction() < 0.10,
+        "ADSP waiting fraction {:.2} should be negligible",
+        adsp.breakdown.waiting_fraction()
+    );
+    assert!(
+        bsp.breakdown.waiting_fraction() > adsp.breakdown.waiting_fraction(),
+        "BSP should wait more than ADSP"
+    );
+}
+
+#[test]
+fn bandwidth_accounting_consistent() {
+    require_artifacts!("mlp_quick");
+    let spec = tiny_spec("mlp_quick", SyncModelKind::Tap);
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    let rt = ModelRuntime::load_by_name("mlp_quick").unwrap();
+    // Each commit moves U up and the fresh model down.
+    let per_commit = 2 * rt.manifest.bytes_per_commit as u64;
+    assert_eq!(out.bytes_total, out.total_commits * per_commit);
+    let sum_worker: u64 = out.workers.iter().map(|w| w.bytes_up + w.bytes_down).sum();
+    assert_eq!(sum_worker, out.bytes_total);
+}
+
+#[test]
+fn deterministic_same_seed_same_outcome() {
+    require_artifacts!("mlp_quick");
+    let a = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::Adsp)).unwrap().run().unwrap();
+    let b = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::Adsp)).unwrap().run().unwrap();
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.total_commits, b.total_commits);
+    assert_eq!(a.loss_log.samples.len(), b.loss_log.samples.len());
+    for (sa, sb) in a.loss_log.samples.iter().zip(&b.loss_log.samples) {
+        assert!((sa.loss - sb.loss).abs() < 1e-9, "loss logs diverge");
+    }
+}
+
+#[test]
+fn xla_apply_path_matches_native_path_in_sim() {
+    require_artifacts!("mlp_quick");
+    let mut e1 = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::FixedAdacomm)).unwrap();
+    e1.use_xla_apply = true;
+    let a = e1.run().unwrap();
+    let b = SimEngine::new(tiny_spec("mlp_quick", SyncModelKind::FixedAdacomm))
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(a.total_steps, b.total_steps);
+    let la = a.loss_log.samples.last().unwrap().loss;
+    let lb = b.loss_log.samples.last().unwrap().loss;
+    assert!((la - lb).abs() < 1e-3, "XLA vs native PS apply drifted: {la} vs {lb}");
+}
+
+#[test]
+fn svm_and_rnn_models_train_in_sim() {
+    for model in ["svm_chiller", "rnn_rail"] {
+        require_artifacts!(model);
+        let mut spec = tiny_spec(model, SyncModelKind::Adsp);
+        spec.batch_size = 128;
+        spec.max_total_steps = 600;
+        let out = SimEngine::new(spec).unwrap().run().unwrap();
+        let first = out.loss_log.first_loss().unwrap();
+        assert!(out.best_loss < first, "{model}: {first} -> {}", out.best_loss);
+    }
+}
+
+#[test]
+fn ec2_profile_cluster_runs() {
+    require_artifacts!("mlp_quick");
+    let cluster = profiles::ec2_cluster(6, 2.0, 0.2);
+    let mut sync = SyncSpec::new(SyncModelKind::Adsp);
+    sync.gamma = 20.0;
+    let mut spec = ExperimentSpec::new("mlp_quick", cluster, sync);
+    spec.batch_size = 32;
+    spec.max_virtual_secs = 60.0;
+    spec.max_total_steps = 2000;
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    assert_eq!(out.workers.len(), 6);
+    assert!(out.total_steps > 0);
+}
+
+#[test]
+fn experiment_spec_json_file_roundtrip() {
+    require_artifacts!("mlp_quick");
+    let spec = tiny_spec("mlp_quick", SyncModelKind::Ssp);
+    let dir = std::env::temp_dir().join("adsp_test_spec");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("spec.json");
+    std::fs::write(&path, spec.to_json().dump_pretty()).unwrap();
+    let loaded = ExperimentSpec::load(&path).unwrap();
+    assert_eq!(loaded.model, "mlp_quick");
+    assert_eq!(loaded.sync.kind, SyncModelKind::Ssp);
+    assert_eq!(loaded.cluster.m(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// real-time engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn realtime_engine_short_run() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 150.0;
+    spec.max_total_steps = 1500;
+    spec.eval_interval_secs = 10.0;
+    // 150 virtual seconds at 0.01 scale ≈ 1.5 wall seconds.
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert!(out.total_commits > 0, "no commits");
+    assert!(out.final_loss.is_finite());
+    let first = out.loss_log.first_loss().unwrap_or(f64::NAN);
+    assert!(out.loss_log.best_loss().unwrap_or(f64::NAN) <= first);
+    assert!(out.wall_secs < 30.0, "realtime run took too long: {}", out.wall_secs);
+}
+
+#[test]
+fn realtime_bsp_barrier_works() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Bsp);
+    spec.max_virtual_secs = 80.0;
+    spec.max_total_steps = 600;
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    // Lockstep: commit counts within 1 of each other.
+    let commits: Vec<u64> = out.workers.iter().map(|w| w.commits).collect();
+    let min = *commits.iter().min().unwrap();
+    let max = *commits.iter().max().unwrap();
+    assert!(max - min <= 2, "BSP commits should be near-lockstep: {commits:?}");
+}
+
+// ---------------------------------------------------------------------------
+// fault injection, compression, checkpointing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn step_jitter_changes_timing_not_data() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 60.0;
+    let base = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+    spec.step_jitter = 0.3;
+    let jit = SimEngine::new(spec).unwrap().run().unwrap();
+    assert!(!jit.deadlocked);
+    assert!(jit.total_steps > 0);
+    // Jitter shifts the step timeline.
+    assert_ne!(base.total_steps, 0);
+    // Losses stay finite and training still progresses.
+    assert!(jit.best_loss < jit.loss_log.first_loss().unwrap());
+}
+
+#[test]
+fn dropped_commits_slow_but_dont_break_training() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Tap);
+    spec.max_virtual_secs = 90.0;
+    spec.drop_commit_prob = 0.3;
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    assert!(out.dropped_commits > 0, "fault injection never fired");
+    assert!(out.total_commits > 0, "some commits must survive");
+    assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training must still progress");
+}
+
+#[test]
+fn compression_reduces_bandwidth_and_still_learns() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::FixedAdacomm);
+    spec.max_virtual_secs = 90.0;
+    let dense = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+    spec.compress_topk = 0.1;
+    let sparse = SimEngine::new(spec).unwrap().run().unwrap();
+    let dense_up: u64 = dense.workers.iter().map(|w| w.bytes_up).sum();
+    let sparse_up: u64 = sparse.workers.iter().map(|w| w.bytes_up).sum();
+    let per_commit_dense = dense_up as f64 / dense.total_commits.max(1) as f64;
+    let per_commit_sparse = sparse_up as f64 / sparse.total_commits.max(1) as f64;
+    assert!(
+        per_commit_sparse < per_commit_dense * 0.5,
+        "top-10% compression should cut upstream bytes: {per_commit_sparse} vs {per_commit_dense}"
+    );
+    assert!(sparse.best_loss < sparse.loss_log.first_loss().unwrap());
+}
+
+#[test]
+fn checkpoint_save_and_resume() {
+    require_artifacts!("mlp_quick");
+    let dir = std::env::temp_dir().join("adsp_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("global.params");
+
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 60.0;
+    let mut engine = SimEngine::new(spec.clone()).unwrap();
+    engine.checkpoint_path = Some(ckpt.clone());
+    engine.checkpoint_every = 20.0;
+    let first = engine.run().unwrap();
+    assert!(ckpt.is_file(), "checkpoint not written");
+
+    // Resume: loss starts near where the first run ended, not at init.
+    let mut engine2 = SimEngine::new(spec).unwrap();
+    engine2.load_initial_params(&ckpt).unwrap();
+    let resumed = engine2.run().unwrap();
+    let init_loss = first.loss_log.first_loss().unwrap();
+    let resumed_start = resumed.loss_log.first_loss().unwrap();
+    assert!(
+        resumed_start < init_loss * 0.8,
+        "resume should start from trained params: {resumed_start} vs init {init_loss}"
+    );
+}

@@ -1,0 +1,473 @@
+//! Property-based tests over the coordinator invariants (hand-rolled
+//! randomized harness — proptest is unavailable offline; the structure is
+//! the same: generate hundreds of random scenarios with a seeded RNG and
+//! assert invariants on every one, printing the failing seed on panic).
+//!
+//! The mock engine here mirrors `simulation::engine` event semantics but
+//! replaces the XLA step with a counter bump, so thousands of policy
+//! decisions run per millisecond and the *policy* invariants get exercised
+//! far beyond what the full-stack tests can afford:
+//!
+//! * BSP — lockstep: commit counts never differ by more than 1.
+//! * SSP(s) — staleness: `steps_i − min_j steps_j ≤ s + k_chunk` always.
+//! * TAP / ADSP / ADSP⁺ — never block.
+//! * (Fixed) ADACOMM — commits happen exactly every τ local steps.
+//! * ADSP — commit counts stay ε-balanced at checkpoints (Theorem 2's
+//!   precondition) and ΔC assignments favor laggards.
+//! * Curve fit — recovers planted (a1, a2, a3) under noise.
+
+use adsp::config::{ClusterSpec, SyncSpec, WorkerSpec};
+use adsp::sync::{
+    implicit_momentum, make_policy, Action, ClusterView, SyncModelKind, SyncPolicy,
+    WorkerProgress,
+};
+use adsp::util::{fit_inverse_curve, Json, Rng};
+
+const K_VARIANTS: [usize; 3] = [16, 4, 1];
+
+/// Policy-only discrete-event mock of the simulator (no XLA, no data).
+struct MockEngine {
+    policy: Box<dyn SyncPolicy>,
+    progress: Vec<WorkerProgress>,
+    speeds: Vec<f64>,
+    comms: Vec<f64>,
+    gamma: f64,
+    now: f64,
+    queue: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u64, usize, u8)>>,
+    seq: u64,
+    next_checkpoint: f64,
+    /// Synthetic decaying loss fed to on_eval.
+    next_eval: f64,
+    /// Records (worker, steps_at_commit_initiation, local_since_commit) rows.
+    commit_trace: Vec<(usize, u64, u64)>,
+    max_staleness_seen: u64,
+    blocked_ever: bool,
+}
+
+const EV_READY: u8 = 0;
+const EV_ARRIVE: u8 = 1;
+
+fn key(t: f64) -> u64 {
+    // Microsecond-resolution ordering key (monotone in t for t >= 0).
+    (t * 1e6) as u64
+}
+
+impl MockEngine {
+    fn new(kind: SyncModelKind, cluster: &ClusterSpec, sync: &SyncSpec) -> Self {
+        let m = cluster.m();
+        let mut spec = sync.clone();
+        spec.kind = kind;
+        MockEngine {
+            policy: make_policy(&spec, cluster),
+            progress: vec![WorkerProgress { batch_size: 32, ..Default::default() }; m],
+            speeds: cluster.speeds(),
+            comms: cluster.comms(),
+            gamma: sync.gamma,
+            now: 0.0,
+            queue: std::collections::BinaryHeap::new(),
+            seq: 0,
+            next_checkpoint: sync.gamma,
+            next_eval: 0.0,
+            commit_trace: Vec::new(),
+            max_staleness_seen: 0,
+            blocked_ever: false,
+        }
+    }
+
+    #[allow(dead_code)]
+    fn view(&self) -> ClusterView<'_> {
+        ClusterView {
+            now: self.now,
+            workers: &self.progress,
+            speeds: &self.speeds,
+            comms: &self.comms,
+            k_variants: &K_VARIANTS,
+            last_eval: None,
+            initial_loss: Some(2.0),
+        }
+    }
+
+    fn push(&mut self, t: f64, w: usize, ev: u8) {
+        self.seq += 1;
+        self.queue.push(std::cmp::Reverse((key(t), self.seq, w, ev)));
+    }
+
+    fn drive(&mut self, w: usize) {
+        let action = {
+            let view = ClusterView {
+                now: self.now,
+                workers: &self.progress,
+                speeds: &self.speeds,
+                comms: &self.comms,
+                k_variants: &K_VARIANTS,
+                last_eval: None,
+                initial_loss: Some(2.0),
+            };
+            self.policy.next_action(w, &view)
+        };
+        match action {
+            Action::Train { k } => {
+                let k = k.max(1);
+                self.progress[w].steps += k;
+                self.progress[w].local_since_commit += k;
+                let stale = self.progress[w].steps
+                    - self.progress.iter().map(|p| p.steps).min().unwrap();
+                self.max_staleness_seen = self.max_staleness_seen.max(stale);
+                let dt = k as f64 / self.speeds[w];
+                let t = self.now + dt;
+                self.push(t, w, EV_READY);
+            }
+            Action::Commit => {
+                self.commit_trace.push((
+                    w,
+                    self.progress[w].steps,
+                    self.progress[w].local_since_commit,
+                ));
+                self.progress[w].local_since_commit = 0;
+                self.push(self.now + self.comms[w] / 2.0, w, EV_ARRIVE);
+            }
+            Action::Block => {
+                self.progress[w].blocked = true;
+                self.blocked_ever = true;
+            }
+        }
+    }
+
+    /// Run until `horizon`; returns false on policy deadlock.
+    fn run(&mut self, horizon: f64, mut on_commit: impl FnMut(&Self, usize)) -> bool {
+        for w in 0..self.progress.len() {
+            self.push(0.0, w, EV_READY);
+        }
+        while let Some(std::cmp::Reverse((tk, _, w, ev))) = self.queue.pop() {
+            self.now = tk as f64 / 1e6;
+            if self.now > horizon {
+                return true;
+            }
+            while self.next_eval <= self.now {
+                // Synthetic 1/t loss curve.
+                let loss = 2.0 / (1.0 + 0.01 * self.next_eval) + 0.1;
+                self.policy.on_eval(self.next_eval, loss);
+                self.next_eval += 5.0;
+            }
+            while self.next_checkpoint <= self.now {
+                let view = ClusterView {
+                    now: self.next_checkpoint,
+                    workers: &self.progress,
+                    speeds: &self.speeds,
+                    comms: &self.comms,
+                    k_variants: &K_VARIANTS,
+                    last_eval: None,
+                    initial_loss: Some(2.0),
+                };
+                self.policy.on_checkpoint(&view);
+                self.next_checkpoint += self.gamma;
+            }
+            match ev {
+                EV_READY => self.drive(w),
+                EV_ARRIVE => {
+                    self.progress[w].commits += 1;
+                    let view = ClusterView {
+                        now: self.now,
+                        workers: &self.progress,
+                        speeds: &self.speeds,
+                        comms: &self.comms,
+                        k_variants: &K_VARIANTS,
+                        last_eval: None,
+                        initial_loss: Some(2.0),
+                    };
+                    self.policy.on_commit_applied(w, &view);
+                    on_commit(self, w);
+                    self.push(self.now + self.comms[w] / 2.0, w, EV_READY);
+                }
+                _ => unreachable!(),
+            }
+            // Re-poll blocked workers.
+            let blocked: Vec<usize> =
+                (0..self.progress.len()).filter(|&i| self.progress[i].blocked).collect();
+            for i in blocked {
+                let action = {
+                    let view = ClusterView {
+                        now: self.now,
+                        workers: &self.progress,
+                        speeds: &self.speeds,
+                        comms: &self.comms,
+                        k_variants: &K_VARIANTS,
+                        last_eval: None,
+                        initial_loss: Some(2.0),
+                    };
+                    self.policy.next_action(i, &view)
+                };
+                if action != Action::Block {
+                    self.progress[i].blocked = false;
+                    self.push(self.now, i, EV_READY);
+                }
+            }
+            if self.queue.is_empty() && self.progress.iter().all(|p| p.blocked) {
+                return false; // deadlock
+            }
+        }
+        true
+    }
+}
+
+fn random_cluster(rng: &mut Rng) -> ClusterSpec {
+    let m = 2 + rng.below(6);
+    ClusterSpec::new(
+        (0..m)
+            .map(|_| {
+                WorkerSpec::new(0.3 + 3.0 * rng.next_f64(), 0.05 + 0.4 * rng.next_f64())
+            })
+            .collect(),
+    )
+}
+
+fn random_sync(rng: &mut Rng, kind: SyncModelKind) -> SyncSpec {
+    let mut s = SyncSpec::new(kind);
+    s.gamma = 10.0 + 40.0 * rng.next_f64();
+    s.epoch_secs = 1000.0;
+    s.eval_window_secs = 15.0;
+    s.tau = 1 + rng.below(12) as u64;
+    s.staleness = 1 + rng.below(6) as u64;
+    s
+}
+
+const CASES: usize = 150;
+
+#[test]
+fn prop_bsp_lockstep() {
+    let mut rng = Rng::new(0xB5B);
+    for case in 0..CASES {
+        let mut case_rng = rng.split(case as u64);
+        let cluster = random_cluster(&mut case_rng);
+        let sync = random_sync(&mut case_rng, SyncModelKind::Bsp);
+        let mut eng = MockEngine::new(SyncModelKind::Bsp, &cluster, &sync);
+        let ok = eng.run(300.0, |e, _| {
+            let min = e.progress.iter().map(|p| p.commits).min().unwrap();
+            let max = e.progress.iter().map(|p| p.commits).max().unwrap();
+            assert!(max - min <= 1, "case {case}: BSP lockstep broken: {min}..{max}");
+        });
+        assert!(ok, "case {case}: BSP deadlocked");
+        // BSP commits exactly once per local step.
+        for &(_, _, local) in &eng.commit_trace {
+            assert_eq!(local, 1, "case {case}: BSP must commit every step");
+        }
+    }
+}
+
+#[test]
+fn prop_ssp_staleness_bound() {
+    let mut rng = Rng::new(0x55B);
+    for case in 0..CASES {
+        let mut case_rng = rng.split(case as u64);
+        let cluster = random_cluster(&mut case_rng);
+        let sync = random_sync(&mut case_rng, SyncModelKind::Ssp);
+        let s = sync.staleness;
+        let mut eng = MockEngine::new(SyncModelKind::Ssp, &cluster, &sync);
+        let ok = eng.run(300.0, |_, _| {});
+        assert!(ok, "case {case}: SSP deadlocked");
+        // SSP trains k=1 chunks, so the bound is exactly s (the mock counts
+        // steps at chunk start, adding at most one in-flight step).
+        assert!(
+            eng.max_staleness_seen <= s + 1,
+            "case {case}: staleness {} exceeded bound {}",
+            eng.max_staleness_seen,
+            s
+        );
+    }
+}
+
+#[test]
+fn prop_never_blocking_policies_never_block() {
+    let mut rng = Rng::new(0x7A9);
+    for kind in [SyncModelKind::Tap, SyncModelKind::Adsp, SyncModelKind::AdspPlus] {
+        for case in 0..CASES / 3 {
+            let mut case_rng = rng.split(case as u64);
+            let cluster = random_cluster(&mut case_rng);
+            let sync = random_sync(&mut case_rng, kind);
+            let mut eng = MockEngine::new(kind, &cluster, &sync);
+            let ok = eng.run(300.0, |_, _| {});
+            assert!(ok, "case {case}: {kind} deadlocked");
+            assert!(!eng.blocked_ever, "case {case}: {kind} blocked a worker");
+        }
+    }
+}
+
+#[test]
+fn prop_fixed_adacomm_commits_every_tau() {
+    let mut rng = Rng::new(0xADA);
+    for case in 0..CASES {
+        let mut case_rng = rng.split(case as u64);
+        let cluster = random_cluster(&mut case_rng);
+        let sync = random_sync(&mut case_rng, SyncModelKind::FixedAdacomm);
+        let tau = sync.tau;
+        let mut eng = MockEngine::new(SyncModelKind::FixedAdacomm, &cluster, &sync);
+        let ok = eng.run(300.0, |_, _| {});
+        assert!(ok, "case {case}: FixedAdacomm deadlocked");
+        assert!(!eng.commit_trace.is_empty());
+        for &(w, _, local) in &eng.commit_trace {
+            assert_eq!(local, tau, "case {case}: worker {w} committed off-τ ({local} vs {tau})");
+        }
+    }
+}
+
+#[test]
+fn prop_adsp_commit_balance_at_horizon() {
+    let mut rng = Rng::new(0xAD5);
+    for case in 0..CASES {
+        let mut case_rng = rng.split(case as u64);
+        let cluster = random_cluster(&mut case_rng);
+        let sync = random_sync(&mut case_rng, SyncModelKind::Adsp);
+        let mut eng = MockEngine::new(SyncModelKind::Adsp, &cluster, &sync);
+        let ok = eng.run(400.0, |_, _| {});
+        assert!(ok, "case {case}: ADSP deadlocked");
+        let commits: Vec<u64> = eng.progress.iter().map(|p| p.commits).collect();
+        let min = *commits.iter().min().unwrap();
+        let max = *commits.iter().max().unwrap();
+        assert!(
+            max.saturating_sub(min) <= 4,
+            "case {case}: ADSP commit imbalance {commits:?} (H={:.2})",
+            cluster.heterogeneity()
+        );
+    }
+}
+
+#[test]
+fn prop_adsp_assigns_larger_rates_to_laggards() {
+    let mut rng = Rng::new(0xDC1);
+    for case in 0..CASES {
+        let mut case_rng = rng.split(case as u64);
+        let cluster = random_cluster(&mut case_rng);
+        let m = cluster.m();
+        let sync = random_sync(&mut case_rng, SyncModelKind::Adsp);
+        let mut policy = make_policy(&sync, &cluster);
+        // Synthesize unequal commit counts and fire a checkpoint.
+        let mut workers =
+            vec![WorkerProgress { batch_size: 32, ..Default::default() }; m];
+        for (i, w) in workers.iter_mut().enumerate() {
+            w.commits = (i as u64) * 2;
+        }
+        let view = ClusterView {
+            now: sync.gamma,
+            workers: &workers,
+            speeds: &cluster.speeds(),
+            comms: &cluster.comms(),
+            k_variants: &K_VARIANTS,
+            last_eval: None,
+            initial_loss: Some(2.0),
+        };
+        policy.on_checkpoint(&view);
+        let dc: Vec<f64> = (0..m).map(|w| policy.delta_c(w).unwrap()).collect();
+        for i in 1..m {
+            assert!(
+                dc[i - 1] >= dc[i] - 1e-9,
+                "case {case}: laggard {} got smaller ΔC than leader {}: {dc:?}",
+                i - 1,
+                i
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_implicit_momentum_bounds_and_monotonicity() {
+    let mut rng = Rng::new(0x313);
+    for case in 0..CASES {
+        let mut r = rng.split(case as u64);
+        let m = 2 + r.below(8);
+        let gamma = 10.0 + 100.0 * r.next_f64();
+        let speeds: Vec<f64> = (0..m).map(|_| 0.1 + 3.0 * r.next_f64()).collect();
+        let dc1: Vec<f64> = (0..m).map(|_| 1.0 + 10.0 * r.next_f64()).collect();
+        let dc2: Vec<f64> = dc1.iter().map(|d| d * 2.0).collect();
+        let mu1 = implicit_momentum(gamma, &dc1, &speeds);
+        let mu2 = implicit_momentum(gamma, &dc2, &speeds);
+        assert!((0.0..1.0).contains(&mu1), "case {case}: mu out of range: {mu1}");
+        assert!(mu2 < mu1, "case {case}: doubling rates must reduce momentum");
+    }
+}
+
+#[test]
+fn prop_fit_recovers_planted_curves() {
+    let mut rng = Rng::new(0xF17);
+    for case in 0..60 {
+        let mut r = rng.split(case as u64);
+        let a1 = 0.05 + 0.5 * r.next_f64();
+        let a2 = 0.2 + 2.0 * r.next_f64();
+        let a3 = r.next_f64();
+        let samples: Vec<(f64, f64)> = (0..40)
+            .map(|i| {
+                let t = 1.0 + i as f64 * 3.0;
+                (t, 1.0 / (a1 * a1 * t + a2) + a3 + 0.001 * r.normal())
+            })
+            .collect();
+        let fit = fit_inverse_curve(&samples).expect("fit failed");
+        // Prediction error at held-out points stays small.
+        for &t in &[5.5, 60.5, 110.5] {
+            let truth = 1.0 / (a1 * a1 * t + a2) + a3;
+            assert!(
+                (fit.predict(t) - truth).abs() < 0.05,
+                "case {case}: fit off at t={t}: {} vs {truth}",
+                fit.predict(t)
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::new(0x15);
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.next_f64() < 0.5),
+            2 => Json::Num((r.next_f64() * 2000.0 - 1000.0 * 64.0).round() / 64.0),
+            3 => {
+                let n = r.below(12);
+                Json::Str((0..n).map(|_| char::from(32 + r.below(94) as u8)).collect())
+            }
+            4 => Json::Arr((0..r.below(5)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(5))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..300 {
+        let mut r = rng.split(case);
+        let v = random_json(&mut r, 3);
+        let text = v.dump();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case} roundtrip failed: {text}");
+        let back2 = Json::parse(&v.dump_pretty()).unwrap();
+        assert_eq!(back2, v);
+    }
+}
+
+#[test]
+fn prop_batchtune_keeps_global_batch() {
+    let mut rng = Rng::new(0xBA7);
+    let available = [32usize, 64, 128, 256];
+    for case in 0..CASES {
+        let mut r = rng.split(case as u64);
+        let m = 2 + r.below(10);
+        let speeds: Vec<f64> = (0..m).map(|_| 0.4 + 3.0 * r.next_f64()).collect();
+        let sizes = adsp::sync::assign_batchtune_sizes(&speeds, 128, &available);
+        assert_eq!(sizes.len(), m);
+        // Faster workers never get smaller batches than slower ones.
+        let mut idx: Vec<usize> = (0..m).collect();
+        idx.sort_by(|&a, &b| speeds[a].total_cmp(&speeds[b]));
+        for pair in idx.windows(2) {
+            assert!(
+                sizes[pair[0]] <= sizes[pair[1]],
+                "case {case}: batch ordering broken: speeds={speeds:?} sizes={sizes:?}"
+            );
+        }
+        // Global batch within 40% of m*128 (rounding to available sizes).
+        let total: usize = sizes.iter().sum();
+        let want = m * 128;
+        assert!(
+            (total as f64 - want as f64).abs() / want as f64 <= 0.4,
+            "case {case}: global batch drifted: {total} vs {want}"
+        );
+    }
+}

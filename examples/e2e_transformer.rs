@@ -1,4 +1,4 @@
-//! END-TO-END VALIDATION DRIVER (see EXPERIMENTS.md §E2E for the recorded
+//! END-TO-END VALIDATION DRIVER (see DESIGN.md §E2E for the recorded
 //! run): train a multi-million-parameter decoder-only transformer LM on a
 //! synthetic token corpus for a few hundred steps through the FULL stack —
 //!

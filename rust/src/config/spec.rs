@@ -160,6 +160,19 @@ pub struct ExperimentSpec {
     /// the bandwidth accounting, mirroring Deep-Gradient-Compression-style
     /// sparsification (paper §2.2 related work).
     pub compress_topk: f64,
+    /// Parameter-server shards S (`pserver` subsystem). 1 = the paper's
+    /// single serial PS; larger S splits the model into S slabs served in
+    /// parallel, and the sim engine splits commit traffic/apply work across
+    /// them (plus a contention term). Must be ≥ 1.
+    pub shards: usize,
+    /// Commits in flight per shard before `apply` backpressures (sharded
+    /// PS pipeline; realtime engine also drains up to this many commits
+    /// per round when sharded — applies still serialize per shard).
+    pub pipeline_depth: usize,
+    /// Modeled serial PS apply time per commit in virtual seconds (sim
+    /// engine only; split across `shards`). 0 = instantaneous apply, the
+    /// seed behaviour.
+    pub ps_apply_secs: f64,
 }
 
 impl ExperimentSpec {
@@ -183,6 +196,9 @@ impl ExperimentSpec {
             step_jitter: 0.0,
             drop_commit_prob: 0.0,
             compress_topk: 0.0,
+            shards: 1,
+            pipeline_depth: 2,
+            ps_apply_secs: 0.0,
         }
     }
 
@@ -262,6 +278,9 @@ impl ExperimentSpec {
         spec.step_jitter = v.f64_or("step_jitter", 0.0)?;
         spec.drop_commit_prob = v.f64_or("drop_commit_prob", 0.0)?;
         spec.compress_topk = v.f64_or("compress_topk", 0.0)?;
+        spec.shards = v.usize_or("shards", spec.shards)?;
+        spec.pipeline_depth = v.usize_or("pipeline_depth", spec.pipeline_depth)?;
+        spec.ps_apply_secs = v.f64_or("ps_apply_secs", spec.ps_apply_secs)?;
         spec.validate()?;
         Ok(spec)
     }
@@ -322,6 +341,9 @@ impl ExperimentSpec {
             ("step_jitter", Json::num(self.step_jitter)),
             ("drop_commit_prob", Json::num(self.drop_commit_prob)),
             ("compress_topk", Json::num(self.compress_topk)),
+            ("shards", Json::num(self.shards as f64)),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("ps_apply_secs", Json::num(self.ps_apply_secs)),
         ])
     }
 
@@ -350,6 +372,15 @@ impl ExperimentSpec {
         }
         if self.step_jitter < 0.0 || self.step_jitter >= 1.0 {
             bail!("step_jitter must be in [0,1)");
+        }
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if self.pipeline_depth == 0 {
+            bail!("pipeline_depth must be >= 1");
+        }
+        if self.ps_apply_secs < 0.0 {
+            bail!("ps_apply_secs must be non-negative");
         }
         Ok(())
     }
@@ -406,6 +437,28 @@ mod tests {
         // Unknown sync kind in JSON.
         let bad = r#"{"model":"m","cluster":{"workers":[{"speed":1.0}]},"sync":{"kind":"nope"}}"#;
         assert!(ExperimentSpec::from_json_str(bad).is_err());
+    }
+
+    #[test]
+    fn shard_knobs_roundtrip_and_validate() {
+        let mut spec = ExperimentSpec::new(
+            "m",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        assert_eq!((spec.shards, spec.pipeline_depth), (1, 2));
+        spec.shards = 8;
+        spec.pipeline_depth = 4;
+        spec.ps_apply_secs = 0.05;
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.shards, 8);
+        assert_eq!(back.pipeline_depth, 4);
+        assert!((back.ps_apply_secs - 0.05).abs() < 1e-12);
+        spec.shards = 0;
+        assert!(spec.validate().is_err());
+        spec.shards = 1;
+        spec.pipeline_depth = 0;
+        assert!(spec.validate().is_err());
     }
 
     #[test]

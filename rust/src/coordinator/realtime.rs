@@ -2,11 +2,21 @@
 //!
 //! One OS thread per worker, each owning its **own** PJRT runtime (PJRT
 //! handles are not `Send`; in the paper each worker is a separate machine
-//! anyway). A PS thread owns the global model and applies commits arriving
-//! over an mpsc channel; a wall-clock scheduler inside the PS loop fires
-//! checkpoint / epoch / eval ticks. Heterogeneity is emulated exactly the
-//! way the paper does it (§5.2): each worker pads its step to the target
-//! duration with a sleep.
+//! anyway). The PS side runs the sharded subsystem
+//! ([`crate::pserver::ShardedParameterServer`]): `spec.shards` shard
+//! threads apply commit slabs in parallel behind a bounded pipeline, while
+//! this coordinator thread drains arriving commits, enqueues them, and
+//! serves consistent snapshots back to workers. With `shards = 1` commits
+//! drain one at a time and each worker's reply snapshot is taken right
+//! after its own apply — exactly the old single-PS-thread protocol (and
+//! the PS arithmetic is bit-identical at any shard count). With
+//! `shards > 1` up to `spec.pipeline_depth` commits drain per round so
+//! their applies overlap on the shard threads; the drained workers then
+//! share one consistent snapshot (each still containing that worker's own
+//! commit). A wall-clock scheduler in the same
+//! loop fires checkpoint / epoch / eval ticks. Heterogeneity is emulated
+//! exactly the way the paper does it (§5.2): each worker pads its step to
+//! the target duration with a sleep.
 //!
 //! `time_scale` compresses virtual seconds into wall seconds (0.02 → a
 //! 60-second check period passes in 1.2 s) so examples finish quickly while
@@ -21,18 +31,20 @@ use anyhow::{Context, Result};
 use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
-use crate::runtime::{ModelRuntime, ParamSet};
+use crate::pserver::ShardedParameterServer;
+use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{
     assign_batchtune_sizes, make_policy, Action, ClusterView, SyncPolicy, WorkerProgress,
 };
-
-use super::ParameterServer;
 
 /// A worker→PS message: the accumulated update plus a reply channel for the
 /// fresh global model.
 struct CommitMsg {
     worker: usize,
     u: ParamSet,
+    /// Wire size of the pushed update (dense, or 8 bytes per surviving
+    /// entry under `compress_topk`).
+    up_bytes: u64,
     reply: mpsc::Sender<ParamSet>,
 }
 
@@ -170,7 +182,13 @@ impl RealtimeEngine {
             shared.barrier.wait();
             let start = Instant::now();
             shared.start.set(start).expect("start set twice");
-            let mut ps = ParameterServer::new(init, spec.eta(), spec.sync.ps_momentum as f32);
+            let mut ps = ShardedParameterServer::new(
+                init,
+                spec.eta(),
+                spec.sync.ps_momentum as f32,
+                spec.shards,
+                spec.pipeline_depth,
+            );
             let mut eval_source = make_source(&rt.manifest, spec.seed, 0);
             let mut detector = ConvergenceDetector::new(
                 spec.convergence_window,
@@ -214,22 +232,43 @@ impl RealtimeEngine {
                     next_epoch += spec.sync.epoch_secs;
                 }
 
-                // Apply any pending commits (bounded wait so ticks stay live).
+                // Apply pending commits (bounded wait so ticks stay live).
+                // Sharded PS: drain up to one pipeline's worth per round so
+                // the applies overlap on the shard threads; one consistent
+                // snapshot serves every drained worker (each reply still
+                // contains that worker's own commit). Unsharded: one commit
+                // per round, snapshot right after it — the seed protocol.
+                let drain_limit =
+                    if spec.shards > 1 { spec.pipeline_depth.max(1) } else { 1 };
                 match commit_rx.recv_timeout(Duration::from_millis(2)) {
-                    Ok(msg) => {
-                        ps.apply(&msg.u);
-                        total_commits += 1;
+                    Ok(first) => {
+                        let mut batch = vec![first];
+                        while batch.len() < drain_limit {
+                            match commit_rx.try_recv() {
+                                Ok(msg) => batch.push(msg),
+                                Err(_) => break,
+                            }
+                        }
+                        for msg in &batch {
+                            ps.apply(&msg.u);
+                            total_commits += 1;
+                        }
+                        let fresh = ps.snapshot();
                         let now_v = start.elapsed().as_secs_f64() / scale;
                         {
                             let mut progress = shared.progress.lock().unwrap();
-                            progress[msg.worker].commits += 1;
                             let mut metrics = shared.metrics.lock().unwrap();
-                            metrics[msg.worker].commits += 1;
-                            metrics[msg.worker].bytes_up += bytes_per_commit;
-                            metrics[msg.worker].bytes_down += bytes_per_commit;
+                            for msg in &batch {
+                                progress[msg.worker].commits += 1;
+                                metrics[msg.worker].commits += 1;
+                                metrics[msg.worker].bytes_up += msg.up_bytes;
+                                metrics[msg.worker].bytes_down += bytes_per_commit;
+                            }
                         }
-                        shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
-                        let _ = msg.reply.send(ps.snapshot());
+                        for msg in batch {
+                            shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
+                            let _ = msg.reply.send(fresh.clone());
+                        }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -247,6 +286,7 @@ impl RealtimeEngine {
             let end_virtual = start.elapsed().as_secs_f64() / scale;
             let workers = shared.metrics.lock().unwrap().clone();
             let breakdown = Breakdown::from_workers(&workers);
+            let loss_log = std::mem::take(&mut ps.loss_log);
             Ok(RealtimeOutcome {
                 model: spec.model.clone(),
                 sync: spec.sync.kind.name().to_string(),
@@ -255,8 +295,8 @@ impl RealtimeEngine {
                 wall_secs: start.elapsed().as_secs_f64(),
                 total_steps: shared.total_steps.load(Ordering::Relaxed),
                 total_commits,
-                final_loss: ps.loss_log.last_loss().unwrap_or(f64::NAN),
-                loss_log: ps.loss_log,
+                final_loss: loss_log.last_loss().unwrap_or(f64::NAN),
+                loss_log,
                 workers,
                 breakdown,
             })
@@ -331,12 +371,22 @@ fn worker_loop(
                 // the way back.
                 std::thread::sleep(Duration::from_secs_f64(o / 2.0 * scale));
                 let (reply_tx, reply_rx) = mpsc::channel();
-                let snapshot = std::mem::replace(&mut u, params.zeros_like());
+                let mut snapshot = std::mem::replace(&mut u, params.zeros_like());
+                // Top-k sparsification on the wire, mirroring the sim
+                // engine's accounting (8 bytes per surviving entry).
+                let dense_bytes = rt.manifest.bytes_per_commit as u64;
+                let up_bytes =
+                    if spec.compress_topk > 0.0 && spec.compress_topk < 1.0 {
+                        8 * native::topk_sparsify(&mut snapshot, spec.compress_topk) as u64
+                    } else {
+                        dense_bytes
+                    };
                 {
                     let mut progress = shared.progress.lock().unwrap();
                     progress[w].local_since_commit = 0;
                 }
-                if commit_tx.send(CommitMsg { worker: w, u: snapshot, reply: reply_tx }).is_err() {
+                let msg = CommitMsg { worker: w, u: snapshot, up_bytes, reply: reply_tx };
+                if commit_tx.send(msg).is_err() {
                     break;
                 }
                 match reply_rx.recv_timeout(Duration::from_secs(30)) {

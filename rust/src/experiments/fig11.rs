@@ -24,7 +24,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
     // runs the real vgg_sim (~0.8M params, minutes per sync model).
     let mut table = SeriesTable::new(
         "fig11_large_model",
-        &["sync", "convergence_time_s", "final_loss", "total_steps", "wait_fraction"],
+        &["sync", "convergence_time_s", "final_loss", "total_steps", "wait_fraction", "shards"],
     );
 
     for kind in [
@@ -61,8 +61,50 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             fmt(out.final_loss),
             out.total_steps.to_string(),
             fmt(out.breakdown.waiting_fraction()),
+            "1".to_string(),
         ]);
     }
+
+    // Large models are where PS sharding pays off most: the dense commit is
+    // big, so the per-commit transfer/apply cost the shards split is big.
+    // Sweep shards for ADSP on the same workload; S=1 runs with the same
+    // ps_apply_secs so the sweep rows are comparable to each other.
+    for s in [1usize, 2, 4] {
+        let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
+        spec.model = "vgg_sim".into();
+        spec.batch_size = 32;
+        spec.shards = s;
+        match scale {
+            Scale::Bench => {
+                spec.model = "cnn_cifar".into();
+                spec.eta_prime0 = 0.03;
+                spec.max_total_steps = 180;
+                spec.max_virtual_secs = 600.0;
+                spec.sync.gamma = 60.0;
+                spec.eval_interval_secs = 20.0;
+                spec.target_loss = 0.0;
+                spec.convergence_tol = 1e-7;
+                spec.ps_apply_secs = 0.1;
+            }
+            Scale::Full => {
+                spec.sync.gamma = 600.0;
+                spec.max_virtual_secs = 14400.0;
+                spec.max_total_steps = 40_000;
+                spec.target_loss = 1.6;
+                spec.ps_apply_secs = 0.5;
+            }
+        }
+        let out = run_sim(spec)?;
+        table.push_row(vec![
+            format!("{}_sharded_ps", SyncModelKind::Adsp.name()),
+            fmt(out.convergence_time()),
+            fmt(out.final_loss),
+            out.total_steps.to_string(),
+            fmt(out.breakdown.waiting_fraction()),
+            s.to_string(),
+        ]);
+    }
+
     table.write_csv()?;
     Ok(table)
 }

@@ -1,6 +1,13 @@
 //! Fig. 5(f) / Fig. 7 — system scalability: ADSP vs Fixed ADACOMM as the
 //! worker count doubles (paper: 18 → 36, same hardware distribution).
 //! Paper shape: both slow down at larger scale, ADSP's advantage widens.
+//!
+//! Beyond the paper, the series sweeps the sharded-PS knob at the largest
+//! cluster: with a non-zero modeled PS apply time, splitting the PS into S
+//! shards (spec.shards) cuts the per-commit service and transfer time per
+//! `simulation::engine::shard_split_factor`, so convergence time improves
+//! until the contention term wins. `benches/fig7b_sharded_ps.rs` measures
+//! the same effect on the real `pserver` thread pool.
 
 use anyhow::Result;
 
@@ -14,10 +21,16 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         Scale::Bench => (&[6, 12], 2.0, 0.3),
         Scale::Full => (&[18, 36], 1.0, 0.5),
     };
+    // Modeled serial PS apply time for the shard sweep: large enough that
+    // the PS is a visible bottleneck at the biggest cluster's commit rate.
+    let (shard_sweep, apply_secs): (&[usize], f64) = match scale {
+        Scale::Bench => (&[1, 2, 4, 8], 0.05),
+        Scale::Full => (&[1, 2, 4, 8, 16], 0.2),
+    };
 
     let mut table = SeriesTable::new(
         "fig7_scalability",
-        &["workers", "sync", "convergence_time_s", "final_loss", "total_steps"],
+        &["workers", "sync", "shards", "convergence_time_s", "final_loss", "total_steps"],
     );
 
     for &n in sizes {
@@ -28,12 +41,32 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             table.push_row(vec![
                 n.to_string(),
                 kind.name().to_string(),
+                "1".to_string(),
                 fmt(out.convergence_time()),
                 fmt(out.final_loss),
                 out.total_steps.to_string(),
             ]);
         }
     }
+
+    // Sharded-PS sweep at the largest scale (ADSP, same cluster).
+    let n = *sizes.last().expect("at least one size");
+    let cluster = ec2_cluster(n, base_speed, comm);
+    for &s in shard_sweep {
+        let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
+        spec.shards = s;
+        spec.ps_apply_secs = apply_secs;
+        let out = run_sim(spec)?;
+        table.push_row(vec![
+            n.to_string(),
+            format!("{}_sharded_ps", SyncModelKind::Adsp.name()),
+            s.to_string(),
+            fmt(out.convergence_time()),
+            fmt(out.final_loss),
+            out.total_steps.to_string(),
+        ]);
+    }
+
     table.write_csv()?;
     Ok(table)
 }

@@ -18,19 +18,21 @@
 //! Python never runs on the training path: the rust binary loads the HLO
 //! artifacts once via PJRT ([`runtime`]) and drives everything from there.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-figure
-//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory, the per-figure
+//! experiment index (§4), and the recorded paper-vs-measured results.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod pserver;
 pub mod runtime;
 pub mod simulation;
 pub mod sync;
 pub mod util;
 
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+pub use pserver::ShardedParameterServer;
 pub use simulation::{SimEngine, SimOutcome};
 pub use sync::SyncModelKind;

@@ -24,7 +24,7 @@ USAGE:
   adsp train [--model M] [--sync S] [--workers SPEC] [--comm SECS]
              [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
              [--target-loss L] [--config FILE.json] [--realtime]
-             [--time-scale F] [--seed N]
+             [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
   adsp experiment <fig1|fig3..fig13|all> [--full]
   adsp inspect <model>
   adsp list
@@ -44,6 +44,10 @@ TRAIN FLAGS:
   --realtime       run the wall-clock thread cluster instead of the simulator
   --time-scale F   wall secs per virtual sec in --realtime (default 0.02)
   --seed N         experiment seed (default 0)
+  --shards S       parameter-server shards (default 1 = serial PS)
+  --pipeline-depth D  commits in flight per shard (default 2)
+  --ps-apply-secs T   modeled serial PS apply secs per commit in the
+                      simulator, split across shards (default 0)
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -127,6 +131,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.max_total_steps = args.get("max-steps", 100_000u64)?;
         s.target_loss = args.get("target-loss", 0.0)?;
         s.seed = seed;
+        s.shards = args.get("shards", 1usize)?;
+        s.pipeline_depth = args.get("pipeline-depth", 2usize)?;
+        s.ps_apply_secs = args.get("ps-apply-secs", 0.0)?;
         s
     };
 

@@ -1,0 +1,27 @@
+//! Sharded parameter-server subsystem.
+//!
+//! The paper's `ParameterServer` ([`crate::coordinator::ps`]) holds the
+//! whole global model and applies one dense commit at a time — fine for the
+//! 19-node testbed, a bottleneck at production scale where the commit rate
+//! and the model size both grow. This subsystem splits the global model
+//! into `S` contiguous slabs ([`partition`]), gives each slab its own
+//! state + commit counters + version number ([`shard`]), and runs the
+//! slabs on a shard-thread pool with a bounded apply pipeline
+//! ([`server::ShardedParameterServer`]): a worker's push to shard *j*
+//! overlaps with the apply running on shard *k*, and with up to
+//! `pipeline_depth` earlier commits still in flight.
+//!
+//! Invariant (cross-validated in `tests/proptests.rs`): because the PS
+//! update rules are element-wise, an `S`-sharded apply is **bit-identical**
+//! to the serial `ParameterServer` for every `S` — in particular `S = 1`
+//! reproduces the baseline zoo exactly, momentum path included. See
+//! `DESIGN.md` §PServer for the design notes and `benches/fig7b_sharded_ps`
+//! for apply throughput vs. shard count.
+
+pub mod partition;
+pub mod server;
+pub mod shard;
+
+pub use partition::{LeafSlice, Partition};
+pub use server::ShardedParameterServer;
+pub use shard::ShardState;

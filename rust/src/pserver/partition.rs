@@ -1,0 +1,220 @@
+//! Deterministic partitioning of a [`ParamSet`]'s leaves into `S`
+//! contiguous slabs, with exact reassembly.
+//!
+//! The flattened parameter vector (leaves concatenated in manifest order)
+//! is cut at `floor(j·N/S)` for `j = 0..=S`, so slab sizes differ by at
+//! most one element and the layout depends only on `(leaf lengths, S)` —
+//! every engine, worker, and checkpoint derives the same partition without
+//! coordination. Slab boundaries may split a leaf; [`LeafSlice`] records
+//! the per-leaf sub-ranges so `split` → `reassemble` is the identity.
+
+use crate::runtime::ParamSet;
+
+/// One contiguous sub-range of one leaf, owned by a single shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeafSlice {
+    /// Leaf index in the `ParamSet`.
+    pub leaf: usize,
+    /// Start offset within the leaf (inclusive).
+    pub start: usize,
+    /// End offset within the leaf (exclusive).
+    pub end: usize,
+}
+
+impl LeafSlice {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// A deterministic slab partition of a fixed leaf layout.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    leaf_lens: Vec<usize>,
+    total: usize,
+    /// Per-shard ordered leaf slices (concatenation = the shard's slab).
+    shards: Vec<Vec<LeafSlice>>,
+}
+
+impl Partition {
+    /// Partition a leaf layout into `num_shards` slabs (clamped to ≥ 1).
+    pub fn new(leaf_lens: Vec<usize>, num_shards: usize) -> Self {
+        let s = num_shards.max(1);
+        let total: usize = leaf_lens.iter().sum();
+        let mut shards = Vec::with_capacity(s);
+        for j in 0..s {
+            let lo = j * total / s;
+            let hi = (j + 1) * total / s;
+            let mut slices = Vec::new();
+            let mut off = 0usize;
+            for (leaf, &len) in leaf_lens.iter().enumerate() {
+                let a = lo.max(off);
+                let b = hi.min(off + len);
+                if a < b {
+                    slices.push(LeafSlice { leaf, start: a - off, end: b - off });
+                }
+                off += len;
+            }
+            shards.push(slices);
+        }
+        Partition { leaf_lens, total, shards }
+    }
+
+    /// Partition matching `params`' leaf layout.
+    pub fn for_params(params: &ParamSet, num_shards: usize) -> Self {
+        Self::new(params.leaves.iter().map(|l| l.len()).collect(), num_shards)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_numel(&self) -> usize {
+        self.total
+    }
+
+    pub fn leaf_lens(&self) -> &[usize] {
+        &self.leaf_lens
+    }
+
+    /// Number of elements in slab `j`.
+    pub fn shard_len(&self, j: usize) -> usize {
+        self.shards[j].iter().map(LeafSlice::len).sum()
+    }
+
+    /// The ordered leaf slices backing slab `j`.
+    pub fn slices(&self, j: usize) -> &[LeafSlice] {
+        &self.shards[j]
+    }
+
+    fn check_layout(&self, p: &ParamSet) {
+        debug_assert_eq!(p.leaves.len(), self.leaf_lens.len(), "leaf count mismatch");
+        debug_assert!(
+            p.leaves.iter().zip(&self.leaf_lens).all(|(l, &n)| l.len() == n),
+            "leaf length mismatch"
+        );
+    }
+
+    /// Copy slab `j` out of `p` as a flat vector.
+    pub fn extract(&self, p: &ParamSet, j: usize) -> Vec<f32> {
+        self.check_layout(p);
+        let mut out = Vec::with_capacity(self.shard_len(j));
+        for sl in &self.shards[j] {
+            out.extend_from_slice(&p.leaves[sl.leaf][sl.start..sl.end]);
+        }
+        out
+    }
+
+    /// Split `p` into all `S` slabs (in shard order).
+    pub fn split(&self, p: &ParamSet) -> Vec<Vec<f32>> {
+        (0..self.num_shards()).map(|j| self.extract(p, j)).collect()
+    }
+
+    /// Write slab `j` back into `out` at its home ranges.
+    pub fn scatter(&self, j: usize, slab: &[f32], out: &mut ParamSet) {
+        self.check_layout(out);
+        assert_eq!(slab.len(), self.shard_len(j), "slab {j} length mismatch");
+        let mut off = 0usize;
+        for sl in &self.shards[j] {
+            out.leaves[sl.leaf][sl.start..sl.end].copy_from_slice(&slab[off..off + sl.len()]);
+            off += sl.len();
+        }
+    }
+
+    /// Rebuild the full `ParamSet` from all `S` slabs; exact inverse of
+    /// [`Partition::split`].
+    pub fn reassemble(&self, slabs: &[Vec<f32>]) -> ParamSet {
+        assert_eq!(slabs.len(), self.num_shards(), "slab count mismatch");
+        let mut out = ParamSet { leaves: self.leaf_lens.iter().map(|&n| vec![0.0; n]).collect() };
+        for (j, slab) in slabs.iter().enumerate() {
+            self.scatter(j, slab, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(lens: &[usize]) -> ParamSet {
+        let mut next = 0.0f32;
+        ParamSet {
+            leaves: lens
+                .iter()
+                .map(|&n| {
+                    (0..n)
+                        .map(|_| {
+                            next += 1.0;
+                            next
+                        })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn slabs_are_balanced_and_cover() {
+        let p = set(&[5, 3, 9]); // N = 17
+        for s in 1..=6 {
+            let part = Partition::for_params(&p, s);
+            let lens: Vec<usize> = (0..s).map(|j| part.shard_len(j)).collect();
+            assert_eq!(lens.iter().sum::<usize>(), 17, "s={s}");
+            let (min, max) =
+                (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "s={s}: unbalanced {lens:?}");
+        }
+    }
+
+    #[test]
+    fn split_reassemble_is_identity() {
+        for lens in [vec![7usize], vec![4, 4, 4], vec![1, 0, 6, 2], vec![0, 0]] {
+            let p = set(&lens);
+            for s in [1, 2, 3, 5, 11] {
+                let part = Partition::for_params(&p, s);
+                let back = part.reassemble(&part.split(&p));
+                assert_eq!(back, p, "lens={lens:?} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn boundaries_can_split_leaves() {
+        let p = set(&[10]);
+        let part = Partition::for_params(&p, 3);
+        // One leaf, three shards → every shard slices the same leaf.
+        assert_eq!(part.slices(0), &[LeafSlice { leaf: 0, start: 0, end: 3 }]);
+        assert_eq!(part.slices(1), &[LeafSlice { leaf: 0, start: 3, end: 6 }]);
+        assert_eq!(part.slices(2), &[LeafSlice { leaf: 0, start: 6, end: 10 }]);
+    }
+
+    #[test]
+    fn more_shards_than_elements() {
+        let p = set(&[2]);
+        let part = Partition::for_params(&p, 5);
+        assert_eq!(part.num_shards(), 5);
+        assert_eq!((0..5).map(|j| part.shard_len(j)).sum::<usize>(), 2);
+        assert_eq!(part.reassemble(&part.split(&p)), p);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let p = set(&[4]);
+        let part = Partition::for_params(&p, 0);
+        assert_eq!(part.num_shards(), 1);
+        assert_eq!(part.extract(&p, 0), p.leaves[0]);
+    }
+
+    #[test]
+    fn extract_matches_flat_ranges() {
+        let p = set(&[3, 4]); // flat = [1..=7]
+        let part = Partition::for_params(&p, 2);
+        assert_eq!(part.extract(&p, 0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(part.extract(&p, 1), vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -1,0 +1,267 @@
+//! `ShardedParameterServer`: the parallel, pipelined PS built on
+//! [`super::partition`] + [`super::shard`].
+//!
+//! One OS thread per shard, each owning its slab's [`ShardState`] and fed
+//! by a bounded FIFO channel. `apply` splits the dense commit into slabs
+//! and enqueues one per shard, returning as soon as everything is queued —
+//! so the caller's next push (to shard *j*) overlaps with applies still
+//! running (on shard *k*), and up to `pipeline_depth` commits ride the
+//! pipeline per shard before backpressure kicks in. Per-shard FIFO order
+//! plus "every commit is enqueued to all shards before any later message"
+//! makes [`ShardedParameterServer::snapshot`] a consistent cut: every shard
+//! reports the same version, and the reassembled model equals the serial
+//! PS applied to the same commit sequence, bit for bit.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::metrics::LossLog;
+use crate::runtime::{Batch, ModelRuntime, ParamSet};
+
+use super::partition::Partition;
+use super::shard::ShardState;
+
+enum ShardMsg {
+    /// Apply this slab of a commit (FIFO per shard).
+    Apply(Vec<f32>),
+    /// Reply with `(version, global slab)` after all earlier messages.
+    Read(mpsc::Sender<(u64, Vec<f32>)>),
+}
+
+/// Drop-in parallel replacement for `coordinator::ps::ParameterServer`;
+/// with `num_shards = 1` it is bit-identical to it (momentum included).
+pub struct ShardedParameterServer {
+    partition: Partition,
+    txs: Vec<mpsc::SyncSender<ShardMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    pipeline_depth: usize,
+    /// Total commits enqueued (== every shard's version at a consistent cut).
+    pub commits: u64,
+    pub loss_log: LossLog,
+}
+
+impl ShardedParameterServer {
+    /// Split `init` into `num_shards` slabs (clamped to ≥ 1) and start the
+    /// shard threads. `pipeline_depth` (clamped to ≥ 1) bounds the number
+    /// of commits in flight per shard before `apply` blocks.
+    pub fn new(
+        init: ParamSet,
+        eta: f32,
+        mu: f32,
+        num_shards: usize,
+        pipeline_depth: usize,
+    ) -> Self {
+        let partition = Partition::for_params(&init, num_shards);
+        let depth = pipeline_depth.max(1);
+        let s = partition.num_shards();
+        let mut txs = Vec::with_capacity(s);
+        let mut handles = Vec::with_capacity(s);
+        for j in 0..s {
+            let slab = partition.extract(&init, j);
+            let (tx, rx) = mpsc::sync_channel::<ShardMsg>(depth);
+            let mut state = ShardState::new(slab, eta, mu);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        ShardMsg::Apply(u) => state.apply(&u),
+                        ShardMsg::Read(reply) => {
+                            let _ = reply.send((state.version, state.global.clone()));
+                        }
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        ShardedParameterServer {
+            partition,
+            txs,
+            handles,
+            pipeline_depth: depth,
+            commits: 0,
+            loss_log: LossLog::default(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.partition.num_shards()
+    }
+
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Enqueue one commit `U` on every shard and return; applies run on the
+    /// shard threads. Blocks only when a shard's pipeline is full.
+    pub fn apply(&mut self, u: &ParamSet) {
+        for (j, tx) in self.txs.iter().enumerate() {
+            let slab = self.partition.extract(u, j);
+            tx.send(ShardMsg::Apply(slab)).expect("shard thread died");
+        }
+        self.commits += 1;
+    }
+
+    /// The version a snapshot taken now will carry.
+    pub fn version(&self) -> u64 {
+        self.commits
+    }
+
+    /// Consistent versioned snapshot: drains every shard's pipeline up to
+    /// this point (read markers ride the same FIFOs as applies).
+    pub fn versioned_snapshot(&self) -> (u64, ParamSet) {
+        let rxs: Vec<mpsc::Receiver<(u64, Vec<f32>)>> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(ShardMsg::Read(rtx)).expect("shard thread died");
+                rrx
+            })
+            .collect();
+        let mut slabs = Vec::with_capacity(rxs.len());
+        let mut version = 0u64;
+        for (j, rrx) in rxs.into_iter().enumerate() {
+            let (v, slab) = rrx.recv().expect("shard thread died");
+            debug_assert!(j == 0 || v == version, "inconsistent shard versions");
+            version = v;
+            slabs.push(slab);
+        }
+        (version, self.partition.reassemble(&slabs))
+    }
+
+    /// Snapshot of the current global model (what a worker pulls). Acts as
+    /// a barrier on all commits applied so far.
+    pub fn snapshot(&self) -> ParamSet {
+        self.versioned_snapshot().1
+    }
+
+    /// Evaluate the (gathered) global model and record the sample, exactly
+    /// like `ParameterServer::evaluate`.
+    pub fn evaluate(
+        &mut self,
+        rt: &ModelRuntime,
+        t: f64,
+        total_steps: u64,
+        x: &Batch,
+        y: &Batch,
+    ) -> Result<(f64, f64)> {
+        let global = self.snapshot();
+        let (loss, acc) = rt.eval(&global, x, y)?;
+        self.loss_log.push(t, total_steps, loss as f64, acc as f64);
+        Ok((loss as f64, acc as f64))
+    }
+}
+
+impl Drop for ShardedParameterServer {
+    fn drop(&mut self) {
+        // Close the pipelines, then join so no shard outlives the server.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ParameterServer;
+
+    fn set(leaves: Vec<Vec<f32>>) -> ParamSet {
+        ParamSet { leaves }
+    }
+
+    fn wavy(lens: &[usize], phase: f32) -> ParamSet {
+        let mut i = 0.0f32;
+        set(lens
+            .iter()
+            .map(|&n| {
+                (0..n)
+                    .map(|_| {
+                        i += 1.0;
+                        (i * phase).sin()
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    #[test]
+    fn single_shard_matches_serial_ps_bitwise() {
+        let lens = [5usize, 17, 3];
+        for mu in [0.0f32, 0.9] {
+            let init = wavy(&lens, 0.3);
+            let mut serial = ParameterServer::new(init.clone(), 0.25, mu);
+            let mut sharded = ShardedParameterServer::new(init, 0.25, mu, 1, 2);
+            for c in 0..10 {
+                let u = wavy(&lens, 0.1 + c as f32 * 0.07);
+                serial.apply(&u);
+                sharded.apply(&u);
+            }
+            let (v, got) = sharded.versioned_snapshot();
+            assert_eq!(v, 10);
+            assert_eq!(sharded.commits, serial.commits);
+            for (a, b) in got.leaves.iter().zip(serial.global().leaves.iter()) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "mu={mu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn many_shards_match_serial_ps_bitwise() {
+        let lens = [4usize, 9, 1, 14];
+        for s in [2usize, 3, 7, 32] {
+            let init = wavy(&lens, 0.21);
+            let mut serial = ParameterServer::new(init.clone(), 0.5, 0.9);
+            let mut sharded = ShardedParameterServer::new(init, 0.5, 0.9, s, 4);
+            assert_eq!(sharded.num_shards(), s);
+            for c in 0..6 {
+                let u = wavy(&lens, 0.05 * (c + 1) as f32);
+                serial.apply(&u);
+                sharded.apply(&u);
+            }
+            let got = sharded.snapshot();
+            assert_eq!(got.max_abs_diff(serial.global()), 0.0, "s={s}");
+        }
+    }
+
+    #[test]
+    fn snapshot_is_a_consistent_cut_under_pipelining() {
+        // Enqueue a burst deeper than the pipeline, then snapshot: the cut
+        // must reflect exactly the commits applied so far, on every shard.
+        let init = set(vec![vec![0.0; 40]]);
+        let mut ps = ShardedParameterServer::new(init, 1.0, 0.0, 4, 2);
+        let u = set(vec![vec![1.0; 40]]);
+        for _ in 0..16 {
+            ps.apply(&u);
+        }
+        let (v, got) = ps.versioned_snapshot();
+        assert_eq!(v, 16);
+        assert!(got.leaves[0].iter().all(|&x| x == -16.0), "{:?}", &got.leaves[0][..4]);
+    }
+
+    #[test]
+    fn snapshot_is_decoupled_from_later_commits() {
+        let init = set(vec![vec![1.0, 2.0]]);
+        let mut ps = ShardedParameterServer::new(init, 1.0, 0.0, 2, 1);
+        let snap = ps.snapshot();
+        ps.apply(&set(vec![vec![1.0, 1.0]]));
+        assert_eq!(snap.leaves[0], vec![1.0, 2.0]);
+        assert_eq!(ps.snapshot().leaves[0], vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn shards_exceeding_param_count_still_work() {
+        let init = set(vec![vec![1.0, 2.0, 3.0]]);
+        let mut ps = ShardedParameterServer::new(init, 1.0, 0.0, 8, 2);
+        ps.apply(&set(vec![vec![1.0, 1.0, 1.0]]));
+        assert_eq!(ps.snapshot().leaves[0], vec![0.0, 1.0, 2.0]);
+    }
+}

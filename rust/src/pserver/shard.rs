@@ -1,0 +1,118 @@
+//! Per-shard state: a slab of the global model and its velocity, plus the
+//! shard's own commit counter and version number.
+//!
+//! The update rules call [`crate::runtime::native`]'s shared slice-level
+//! helpers — the same code the serial whole-model apply runs leaf by leaf —
+//! so applying a commit shard-by-shard is bit-identical to the serial PS
+//! by construction (and the cross-validation tests pin it down).
+
+use crate::runtime::native;
+
+/// State owned by one shard (slab `j` of the partition).
+#[derive(Clone, Debug)]
+pub struct ShardState {
+    /// This shard's slice of the global model W.
+    pub global: Vec<f32>,
+    /// This shard's slice of the velocity V (momentum path).
+    pub velocity: Vec<f32>,
+    eta: f32,
+    mu: f32,
+    /// Commits applied on this shard.
+    pub commits: u64,
+    /// Version number: bumps once per applied commit. All shards of one
+    /// server agree on the version at every consistent cut.
+    pub version: u64,
+}
+
+impl ShardState {
+    pub fn new(global: Vec<f32>, eta: f32, mu: f32) -> Self {
+        let velocity = vec![0.0; global.len()];
+        ShardState { global, velocity, eta, mu, commits: 0, version: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.global.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global.is_empty()
+    }
+
+    pub fn eta(&self) -> f32 {
+        self.eta
+    }
+
+    pub fn mu(&self) -> f32 {
+        self.mu
+    }
+
+    /// Apply this shard's slice of one commit: `W ← W − η·U`, or the
+    /// momentum form `V ← μ·V − η·U; W ← W + V` when μ > 0 — through the
+    /// same slice helpers `native::apply_commit{,_momentum}` run per leaf.
+    pub fn apply(&mut self, u: &[f32]) {
+        debug_assert_eq!(u.len(), self.global.len(), "commit slab length mismatch");
+        if self.mu > 0.0 {
+            native::apply_commit_momentum_slice(
+                &mut self.global,
+                u,
+                &mut self.velocity,
+                self.eta,
+                self.mu,
+            );
+        } else {
+            native::apply_commit_slice(&mut self.global, u, self.eta);
+        }
+        self.commits += 1;
+        self.version += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native;
+    use crate::runtime::ParamSet;
+
+    #[test]
+    fn plain_apply_matches_native_bitwise() {
+        let w0: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let u: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut shard = ShardState::new(w0.clone(), 0.125, 0.0);
+        shard.apply(&u);
+        let mut ps = ParamSet { leaves: vec![w0] };
+        native::apply_commit(&mut ps, &ParamSet { leaves: vec![u] }, 0.125);
+        for (a, b) in shard.global.iter().zip(&ps.leaves[0]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn momentum_apply_matches_native_bitwise() {
+        let w0: Vec<f32> = (0..64).map(|i| (i as f32 * 0.21).sin()).collect();
+        let u: Vec<f32> = (0..64).map(|i| (i as f32 * 0.43).cos()).collect();
+        let mut shard = ShardState::new(w0.clone(), 0.1, 0.9);
+        let mut ps = ParamSet { leaves: vec![w0] };
+        let mut vel = ps.zeros_like();
+        let uu = ParamSet { leaves: vec![u.clone()] };
+        for _ in 0..3 {
+            shard.apply(&u);
+            native::apply_commit_momentum(&mut ps, &uu, &mut vel, 0.1, 0.9);
+        }
+        for (a, b) in shard.global.iter().zip(&ps.leaves[0]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in shard.velocity.iter().zip(&vel.leaves[0]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn counters_track_applies() {
+        let mut shard = ShardState::new(vec![0.0; 4], 1.0, 0.0);
+        assert_eq!((shard.commits, shard.version), (0, 0));
+        shard.apply(&[1.0, 2.0, 3.0, 4.0]);
+        shard.apply(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!((shard.commits, shard.version), (2, 2));
+        assert_eq!(shard.global, vec![-2.0, -4.0, -6.0, -8.0]);
+    }
+}

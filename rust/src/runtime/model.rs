@@ -75,7 +75,7 @@ impl ModelRuntime {
 
     /// Compile only the variants a run will actually use (the batch sizes in
     /// play) plus eval/apply. On a 1-core host this cuts cluster start-up by
-    /// the unused-variant compile time (see EXPERIMENTS.md §Perf).
+    /// the unused-variant compile time (see DESIGN.md §Perf).
     pub fn warmup_for(&self, batch_sizes: &[usize]) -> Result<()> {
         let files: Vec<String> = self
             .manifest

@@ -11,24 +11,39 @@
 
 use super::tensor::ParamSet;
 
+/// `W ← W − eta·U` over one flat slice — the single source of truth for
+/// the plain apply math, shared by the whole-model path below and the
+/// sharded PS (`pserver::shard`), so the two stay bit-identical by
+/// construction.
+pub fn apply_commit_slice(w: &mut [f32], u: &[f32], eta: f32) {
+    debug_assert_eq!(w.len(), u.len());
+    for (wv, uv) in w.iter_mut().zip(u) {
+        *wv -= eta * uv;
+    }
+}
+
+/// Momentum form over one flat slice: `V ← mu·V − eta·U; W ← W + V`.
+pub fn apply_commit_momentum_slice(w: &mut [f32], u: &[f32], vel: &mut [f32], eta: f32, mu: f32) {
+    debug_assert_eq!(w.len(), u.len());
+    debug_assert_eq!(w.len(), vel.len());
+    for ((wv, uv), vv) in w.iter_mut().zip(u).zip(vel.iter_mut()) {
+        *vv = mu * *vv - eta * uv;
+        *wv += *vv;
+    }
+}
+
 /// `W ← W − eta·U` (paper Alg. 2, PS).
 pub fn apply_commit(w: &mut ParamSet, u: &ParamSet, eta: f32) {
     debug_assert_eq!(w.num_leaves(), u.num_leaves());
     for (wl, ul) in w.leaves.iter_mut().zip(&u.leaves) {
-        debug_assert_eq!(wl.len(), ul.len());
-        for (wv, uv) in wl.iter_mut().zip(ul) {
-            *wv -= eta * uv;
-        }
+        apply_commit_slice(wl, ul, eta);
     }
 }
 
 /// `V ← mu·V − eta·U; W ← W + V` (momentum PS update, Fig. 3(c) sweep).
 pub fn apply_commit_momentum(w: &mut ParamSet, u: &ParamSet, vel: &mut ParamSet, eta: f32, mu: f32) {
     for ((wl, ul), vl) in w.leaves.iter_mut().zip(&u.leaves).zip(&mut vel.leaves) {
-        for ((wv, uv), vv) in wl.iter_mut().zip(ul).zip(vl.iter_mut()) {
-            *vv = mu * *vv - eta * uv;
-            *wv += *vv;
-        }
+        apply_commit_momentum_slice(wl, ul, vl, eta, mu);
     }
 }
 

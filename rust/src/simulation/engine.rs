@@ -171,6 +171,26 @@ pub struct SimEngine {
     pub checkpoint_path: Option<std::path::PathBuf>,
     pub checkpoint_every: f64,
     last_checkpoint_save: f64,
+    /// Virtual time at which the PS apply stage frees up. Commits serialize
+    /// here exactly like the real `pserver` shard FIFOs do — sharding cuts
+    /// each commit's service time (split across S shards), it does not run
+    /// two commits' applies concurrently. `pipeline_depth` only buffers
+    /// (overlaps transfer with apply), which the event model already gets
+    /// for free. With `spec.ps_apply_secs == 0` this stays at 0 and the
+    /// model degenerates to the seed's instant apply.
+    ps_busy: f64,
+}
+
+/// Extra per-shard overhead as a fraction of the split cost — the RPC and
+/// reassembly tax each additional shard adds on top of the ideal 1/S split.
+const SHARD_CONTENTION_FRAC: f64 = 0.02;
+
+/// Cost multiplier for splitting one transfer/apply across `s` PS shards:
+/// ideal `1/s` parallelism plus a linear contention term. Exactly 1.0 at
+/// `s = 1`, so the single-shard baseline zoo reproduces the seed timings.
+pub fn shard_split_factor(s: usize) -> f64 {
+    let s = s.max(1) as f64;
+    1.0 / s + SHARD_CONTENTION_FRAC * (s - 1.0)
 }
 
 impl SimEngine {
@@ -266,7 +286,14 @@ impl SimEngine {
             checkpoint_path: None,
             checkpoint_every: 0.0,
             last_checkpoint_save: 0.0,
+            ps_busy: 0.0,
         })
+    }
+
+    /// One-way commit transfer time for worker `w`: the dense update is
+    /// striped across the S shard servers in parallel (plus contention).
+    fn oneway_secs(&self, w: usize) -> f64 {
+        self.comms[w] / 2.0 * shard_split_factor(self.spec.shards)
     }
 
     fn push_event(&mut self, t: f64, kind: EventKind) {
@@ -370,10 +397,23 @@ impl SimEngine {
         }
         self.workers[w].in_flight = Some(u);
         self.progress[w].local_since_commit = 0;
-        let o = self.comms[w];
-        self.workers[w].metrics.comm_secs += o;
-        self.push_event(self.now + o / 2.0, EventKind::CommitArrive(w));
+        let oneway = self.oneway_secs(w);
+        self.workers[w].metrics.comm_secs += 2.0 * oneway;
+        self.push_event(self.now + oneway, EventKind::CommitArrive(w));
         Ok(())
+    }
+
+    /// Virtual time at which the PS finishes applying a commit arriving
+    /// now: applies serialize (as the per-shard FIFO threads do), each
+    /// occupying the sharded per-commit service time
+    /// `ps_apply_secs · split_factor(S)`.
+    fn ps_apply_done(&mut self) -> f64 {
+        let service = self.spec.ps_apply_secs * shard_split_factor(self.spec.shards);
+        if service <= 0.0 {
+            return self.now;
+        }
+        self.ps_busy = self.ps_busy.max(self.now) + service;
+        self.ps_busy
     }
 
     fn on_commit_arrive(&mut self, w: usize) -> Result<()> {
@@ -392,7 +432,8 @@ impl SimEngine {
             // so c_i is not advanced.
             self.dropped_commits += 1;
             self.workers[w].pending_pull = Some(self.global.clone());
-            self.push_event(self.now + self.comms[w] / 2.0, EventKind::Ready(w));
+            let oneway = self.oneway_secs(w);
+            self.push_event(self.now + oneway, EventKind::Ready(w));
             return Ok(());
         }
         let eta = self.spec.eta();
@@ -431,9 +472,12 @@ impl SimEngine {
             self.policy.on_commit_applied(w, &view);
         }
 
-        // Fresh model snapshot rides back to the worker (arrives O/2 later).
+        // Fresh model snapshot rides back to the worker once every shard
+        // has applied its slab (sharded apply occupancy + striped return).
+        let done = self.ps_apply_done();
+        let oneway = self.oneway_secs(w);
         self.workers[w].pending_pull = Some(self.global.clone());
-        self.push_event(self.now + self.comms[w] / 2.0, EventKind::Ready(w));
+        self.push_event(done + oneway, EventKind::Ready(w));
         Ok(())
     }
 
@@ -634,5 +678,24 @@ impl SimEngine {
             deadlocked: self.deadlocked,
             dropped_commits: self.dropped_commits,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shard_split_factor;
+
+    #[test]
+    fn split_factor_is_exact_at_one_shard() {
+        assert_eq!(shard_split_factor(0), 1.0);
+        assert_eq!(shard_split_factor(1), 1.0);
+    }
+
+    #[test]
+    fn split_factor_gains_then_saturates() {
+        assert!(shard_split_factor(2) < shard_split_factor(1));
+        assert!(shard_split_factor(4) < shard_split_factor(2));
+        // Far past the sweet spot the contention term dominates.
+        assert!(shard_split_factor(200) > shard_split_factor(8));
     }
 }

@@ -242,11 +242,9 @@ pub fn assign_batchtune_sizes(
     b_ref: usize,
     available: &[usize],
 ) -> Vec<usize> {
-    let vmax = speeds.iter().cloned().fold(f64::MIN, f64::max);
     // Scale so the global batch sums to ~m*b_ref: proportional to v_i,
     // normalized by mean speed.
     let vmean = speeds.iter().sum::<f64>() / speeds.len() as f64;
-    let _ = vmax;
     speeds
         .iter()
         .map(|&v| {

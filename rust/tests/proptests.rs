@@ -471,3 +471,152 @@ fn prop_batchtune_keeps_global_batch() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sharded parameter server (pserver) invariants
+// ---------------------------------------------------------------------------
+//
+// Same hand-rolled randomized structure as above, shaped like a proptest
+// strategy setup (cf. the params-struct + generator idiom in SNIPPETS.md):
+// a per-case params struct is drawn from a seeded RNG, and the invariant is
+// asserted on every case with the failing case id in the message.
+
+use adsp::coordinator::ParameterServer;
+use adsp::pserver::{Partition, ShardedParameterServer};
+use adsp::runtime::ParamSet;
+
+/// Per-case generation parameters (the "strategy" of these proptests).
+struct PserverCaseParams {
+    leaves: Vec<Vec<f32>>,
+    shards: usize,
+    pipeline_depth: usize,
+    eta: f32,
+    mu: f32,
+    commits: usize,
+}
+
+impl PserverCaseParams {
+    fn draw(r: &mut Rng) -> Self {
+        let n_leaves = 1 + r.below(7);
+        let leaves = (0..n_leaves)
+            .map(|_| {
+                let len = r.below(40); // zero-length leaves allowed
+                (0..len).map(|_| r.normal_f32()).collect()
+            })
+            .collect();
+        PserverCaseParams {
+            leaves,
+            shards: 1 + r.below(12),
+            pipeline_depth: 1 + r.below(4),
+            eta: 0.05 + 0.5 * r.next_f32(),
+            mu: if r.below(2) == 0 { 0.0 } else { 0.5 + 0.4 * r.next_f32() },
+            commits: 1 + r.below(12),
+        }
+    }
+
+    fn params(&self) -> ParamSet {
+        ParamSet { leaves: self.leaves.clone() }
+    }
+
+    fn random_update(&self, r: &mut Rng) -> ParamSet {
+        ParamSet {
+            leaves: self
+                .leaves
+                .iter()
+                .map(|l| l.iter().map(|_| r.normal_f32()).collect())
+                .collect(),
+        }
+    }
+}
+
+fn assert_bit_identical(a: &ParamSet, b: &ParamSet, what: &str) {
+    assert_eq!(a.leaves.len(), b.leaves.len(), "{what}: leaf count");
+    for (i, (la, lb)) in a.leaves.iter().zip(&b.leaves).enumerate() {
+        assert_eq!(la.len(), lb.len(), "{what}: leaf {i} length");
+        for (j, (x, y)) in la.iter().zip(lb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: leaf {i} elem {j}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_partition_roundtrip_arbitrary_shapes() {
+    let mut rng = Rng::new(0x9A57);
+    for case in 0..300u64 {
+        let mut r = rng.split(case);
+        let p = PserverCaseParams::draw(&mut r).params();
+        let s = 1 + r.below(12);
+        let part = Partition::for_params(&p, s);
+        let slabs = part.split(&p);
+        assert_eq!(slabs.len(), s, "case {case}");
+        let covered: usize = slabs.iter().map(Vec::len).sum();
+        assert_eq!(covered, p.total_numel(), "case {case}: slabs must cover");
+        // Contiguous balanced slabs: sizes differ by at most one element.
+        let min = slabs.iter().map(Vec::len).min().unwrap();
+        let max = slabs.iter().map(Vec::len).max().unwrap();
+        assert!(max - min <= 1, "case {case}: unbalanced slabs");
+        // partition → reassemble == identity (exact, not approximate).
+        assert_bit_identical(&part.reassemble(&slabs), &p, &format!("case {case} s={s}"));
+    }
+}
+
+#[test]
+fn prop_single_shard_apply_matches_parameter_server_exactly() {
+    // Acceptance invariant: S = 1 sharded apply is bit-identical to
+    // `coordinator::ps::ParameterServer::apply` over an identical commit
+    // sequence, on both the plain and the momentum path.
+    let mut rng = Rng::new(0x51AB);
+    for case in 0..120u64 {
+        let mut r = rng.split(case);
+        let mut cp = PserverCaseParams::draw(&mut r);
+        cp.shards = 1;
+        let init = cp.params();
+        let mut serial = ParameterServer::new(init.clone(), cp.eta, cp.mu);
+        let mut sharded =
+            ShardedParameterServer::new(init, cp.eta, cp.mu, cp.shards, cp.pipeline_depth);
+        for _ in 0..cp.commits {
+            let u = cp.random_update(&mut r);
+            serial.apply(&u);
+            sharded.apply(&u);
+        }
+        let (version, got) = sharded.versioned_snapshot();
+        assert_eq!(version, cp.commits as u64, "case {case}");
+        assert_eq!(sharded.commits, serial.commits, "case {case}");
+        assert_bit_identical(
+            &got,
+            serial.global(),
+            &format!("case {case} mu={}", cp.mu),
+        );
+    }
+}
+
+#[test]
+fn prop_sharded_apply_bit_identical_for_any_shard_count() {
+    // The element-wise update rules make this hold for every S, not just 1;
+    // pin it so future shard-local optimizations cannot silently reorder
+    // the float math.
+    let mut rng = Rng::new(0x5EAF);
+    for case in 0..80u64 {
+        let mut r = rng.split(case);
+        let cp = PserverCaseParams::draw(&mut r);
+        let init = cp.params();
+        let mut serial = ParameterServer::new(init.clone(), cp.eta, cp.mu);
+        let mut sharded =
+            ShardedParameterServer::new(init, cp.eta, cp.mu, cp.shards, cp.pipeline_depth);
+        assert_eq!(sharded.num_shards(), cp.shards, "case {case}");
+        for _ in 0..cp.commits {
+            let u = cp.random_update(&mut r);
+            serial.apply(&u);
+            sharded.apply(&u);
+        }
+        assert_bit_identical(
+            &sharded.snapshot(),
+            serial.global(),
+            &format!("case {case} s={} mu={}", cp.shards, cp.mu),
+        );
+    }
+}

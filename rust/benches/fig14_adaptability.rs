@@ -1,0 +1,71 @@
+//! Bench harness for fig14 (reproduction extension): regenerates the
+//! dynamic-cluster adaptability series at bench scale (see
+//! `adsp::experiments::fig14` docs for the scenarios), asserts the
+//! headline shape — ADSP degrades less than the barrier baselines when
+//! the cluster shifts under it — and times the timeline hot path.
+//! Full-size: `adsp experiment fig14 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::cluster::{scenarios, ClusterState};
+use adsp::config::profiles::ec2_cluster;
+use adsp::experiments::{self, Scale};
+use adsp::sync::SyncModelKind;
+use adsp::util::BenchHarness;
+
+fn main() {
+    // Timeline hot path first — artifact-free, so CI exercises the
+    // scenario/event machinery even when `make artifacts` never ran.
+    let h = BenchHarness::new("fig14").with_iters(3, 50);
+    h.run("timeline_build_validate_apply", || {
+        let cluster = ec2_cluster(18, 1.0, 0.3);
+        let tl = scenarios::preset("churn", &cluster, 600.0).expect("preset");
+        tl.validate(cluster.m()).expect("validate");
+        let mut state = ClusterState::new(&cluster, SyncModelKind::Adsp, 128, &[32, 64, 128]);
+        for ev in tl.events() {
+            state.apply_event(ev).expect("apply");
+        }
+        state.active.iter().filter(|&&a| a).count()
+    });
+
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig14", Scale::Bench).expect("fig14 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig14 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    // Every scenario × sync-model combination completed.
+    assert_eq!(table.rows.len(), 9, "3 scenarios x 3 sync models");
+
+    let deg_idx = table.header.iter().position(|h| h == "degradation").unwrap();
+    let sync_idx = table.header.iter().position(|h| h == "sync").unwrap();
+    let degradation = |scenario: &str, sync: &str| -> f64 {
+        table
+            .filter_rows("scenario", scenario)
+            .iter()
+            .find(|r| r[sync_idx] == sync)
+            .unwrap_or_else(|| panic!("no row for {scenario}/{sync}"))[deg_idx]
+            .parse()
+            .unwrap()
+    };
+
+    // Acceptance shape: under the mid-run 4x slowdown of the fastest
+    // worker, ADSP's convergence-time degradation is strictly smaller
+    // than SSP's and ADACOMM's — the barrier models inherit the new
+    // straggler's pace, ADSP re-targets its commit rates and keeps going.
+    let adsp = degradation("slowdown", "adsp");
+    let ssp = degradation("slowdown", "ssp");
+    let adacomm = degradation("slowdown", "adacomm");
+    assert!(
+        adsp < ssp,
+        "ADSP should degrade less than SSP under slowdown: {adsp:.4} vs {ssp:.4}"
+    );
+    assert!(
+        adsp < adacomm,
+        "ADSP should degrade less than ADACOMM under slowdown: {adsp:.4} vs {adacomm:.4}"
+    );
+}

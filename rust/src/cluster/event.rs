@@ -1,0 +1,128 @@
+//! One scripted change to the live cluster, with JSON round-trip.
+
+use anyhow::{bail, Result};
+
+use crate::config::WorkerSpec;
+use crate::util::Json;
+
+/// A single timeline event. Times are in virtual seconds from run start
+/// (the real-time engine converts through its `time_scale`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterEvent {
+    /// Worker `worker` trains at `speed` steps/s from `t` on (a thermal
+    /// throttle, a co-tenant appearing or leaving, a CPU upgrade, ...).
+    SpeedChange { t: f64, worker: usize, speed: f64 },
+    /// Worker `worker`'s commit round-trip O_i becomes `comm_secs` at `t`
+    /// (a network degradation or recovery).
+    CommChange { t: f64, worker: usize, comm_secs: f64 },
+    /// A new worker joins at `t`, bootstrapped from a consistent PS
+    /// snapshot. It is appended at the next free worker index.
+    WorkerJoin { t: f64, spec: WorkerSpec },
+    /// Worker `worker` leaves at `t`. Its in-flight commit (if any) is
+    /// lost; barriers stop counting it.
+    WorkerLeave { t: f64, worker: usize },
+}
+
+impl ClusterEvent {
+    /// Fire time in virtual seconds.
+    pub fn t(&self) -> f64 {
+        match self {
+            ClusterEvent::SpeedChange { t, .. }
+            | ClusterEvent::CommChange { t, .. }
+            | ClusterEvent::WorkerJoin { t, .. }
+            | ClusterEvent::WorkerLeave { t, .. } => *t,
+        }
+    }
+
+    /// The JSON `kind` tag.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ClusterEvent::SpeedChange { .. } => "speed_change",
+            ClusterEvent::CommChange { .. } => "comm_change",
+            ClusterEvent::WorkerJoin { .. } => "join",
+            ClusterEvent::WorkerLeave { .. } => "leave",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClusterEvent::SpeedChange { t, worker, speed } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("worker", Json::num(*worker as f64)),
+                ("speed", Json::num(*speed)),
+            ]),
+            ClusterEvent::CommChange { t, worker, comm_secs } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("worker", Json::num(*worker as f64)),
+                ("comm_secs", Json::num(*comm_secs)),
+            ]),
+            ClusterEvent::WorkerJoin { t, spec } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("speed", Json::num(spec.speed)),
+                ("comm_secs", Json::num(spec.comm_secs)),
+                ("batch_size", Json::num(spec.batch_size as f64)),
+            ]),
+            ClusterEvent::WorkerLeave { t, worker } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("worker", Json::num(*worker as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let t = v.req("t")?.as_f64()?;
+        let kind = v.req("kind")?.as_str()?;
+        Ok(match kind {
+            "speed_change" => ClusterEvent::SpeedChange {
+                t,
+                worker: v.req("worker")?.as_usize()?,
+                speed: v.req("speed")?.as_f64()?,
+            },
+            "comm_change" => ClusterEvent::CommChange {
+                t,
+                worker: v.req("worker")?.as_usize()?,
+                comm_secs: v.req("comm_secs")?.as_f64()?,
+            },
+            "join" => ClusterEvent::WorkerJoin {
+                t,
+                spec: WorkerSpec {
+                    speed: v.req("speed")?.as_f64()?,
+                    comm_secs: v.f64_or("comm_secs", 0.2)?,
+                    batch_size: v.usize_or("batch_size", 0)?,
+                },
+            },
+            "leave" => ClusterEvent::WorkerLeave { t, worker: v.req("worker")?.as_usize()? },
+            other => bail!("unknown cluster event kind '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_every_kind() {
+        let events = vec![
+            ClusterEvent::SpeedChange { t: 60.0, worker: 2, speed: 0.25 },
+            ClusterEvent::CommChange { t: 90.5, worker: 0, comm_secs: 1.5 },
+            ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(1.5, 0.4) },
+            ClusterEvent::WorkerLeave { t: 180.0, worker: 1 },
+        ];
+        for ev in events {
+            let back = ClusterEvent::from_json(&Json::parse(&ev.to_json().dump()).unwrap())
+                .unwrap();
+            assert_eq!(back, ev);
+        }
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let v = Json::parse(r#"{"kind":"explode","t":1.0}"#).unwrap();
+        assert!(ClusterEvent::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,37 @@
+//! Dynamic cluster subsystem: time-varying heterogeneity and worker churn.
+//!
+//! The paper's headline claim is ADSP's *adaptability* to large
+//! heterogeneity — workers whose speeds drift, degrade, or that join and
+//! leave mid-training. The seed reproduction froze the cluster at engine
+//! construction (a static `Vec<f64>` of speeds); this subsystem makes the
+//! cluster a first-class, time-varying object shared by both engines:
+//!
+//! * [`event::ClusterEvent`] — one scripted change: a speed or comm-time
+//!   shift, a worker joining, or a worker leaving.
+//! * [`timeline::ClusterTimeline`] — a time-sorted script of events with
+//!   JSON round-trip (it rides inside `ExperimentSpec`) and validation
+//!   against the evolving membership.
+//! * [`state::ClusterState`] — the live membership/speeds/comms/batch
+//!   sizes. Both engines own one; it is the *single* source of truth for
+//!   the per-worker batch assignment (BatchTune included), which the seed
+//!   computed independently in each engine.
+//! * [`scenarios`] — the named adaptability presets swept by the
+//!   `fig14_adaptability` experiment and the CLI's `--scenario` flag.
+//!
+//! Event semantics (see DESIGN.md §Timeline for the per-policy reaction
+//! table): events fire in virtual time in the simulator and on the scaled
+//! wall clock in the real-time engine. A joining worker is bootstrapped
+//! from a consistent PS snapshot with its progress counters set to the
+//! active minimum (so barriers stay sane); a leaving worker's in-flight
+//! commit is lost. Policies are notified through
+//! `SyncPolicy::on_cluster_change`. An empty timeline is bit-identical to
+//! the seed's static path (pinned by tests).
+
+pub mod event;
+pub mod scenarios;
+pub mod state;
+pub mod timeline;
+
+pub use event::ClusterEvent;
+pub use state::{ClusterDelta, ClusterState};
+pub use timeline::ClusterTimeline;

@@ -1,0 +1,148 @@
+//! Named adaptability scenarios — the dynamic-cluster analogues of the
+//! paper's Fig. 5 heterogeneity sweep, used by the `fig14_adaptability`
+//! experiment and the CLI's `--scenario` flag.
+//!
+//! All presets are pure functions of the initial cluster and the run
+//! horizon, so the same names mean the same script at every scale.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, WorkerSpec};
+
+use super::event::ClusterEvent;
+use super::timeline::ClusterTimeline;
+
+pub const SCENARIO_NAMES: [&str; 3] = ["slowdown", "straggler_burst", "churn"];
+
+/// Build a preset by name. `horizon` is the run's `max_virtual_secs`;
+/// events land at 20% / 50% of it so every scenario has a settled
+/// before-phase and a long enough after-phase to measure degradation.
+pub fn preset(name: &str, cluster: &ClusterSpec, horizon: f64) -> Result<ClusterTimeline> {
+    let t0 = 0.2 * horizon;
+    let t1 = 0.5 * horizon;
+    match name {
+        "slowdown" => Ok(slowdown(cluster, t0, 4.0)),
+        "straggler_burst" => Ok(straggler_burst(cluster, t0, t1, 8.0)),
+        "churn" => Ok(churn(cluster, t0, t1, 2)),
+        other => bail!("unknown scenario '{other}' (try {SCENARIO_NAMES:?})"),
+    }
+}
+
+fn fastest(cluster: &ClusterSpec) -> usize {
+    (0..cluster.m())
+        .max_by(|&a, &b| cluster.workers[a].speed.total_cmp(&cluster.workers[b].speed))
+        .expect("non-empty cluster")
+}
+
+/// Mid-run `factor`× slowdown of the *fastest* worker — the paper's
+/// motivating failure for barrier models: the cluster's leader becomes
+/// its straggler and every barrier inherits its new pace.
+pub fn slowdown(cluster: &ClusterSpec, t: f64, factor: f64) -> ClusterTimeline {
+    let w = fastest(cluster);
+    ClusterTimeline::new(vec![ClusterEvent::SpeedChange {
+        t,
+        worker: w,
+        speed: cluster.workers[w].speed / factor.max(1.0),
+    }])
+}
+
+/// A transient straggler burst: the slowest third of the cluster (at
+/// least one worker) degrades `factor`× at `t0` and recovers at `t1`.
+pub fn straggler_burst(
+    cluster: &ClusterSpec,
+    t0: f64,
+    t1: f64,
+    factor: f64,
+) -> ClusterTimeline {
+    let m = cluster.m();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| cluster.workers[a].speed.total_cmp(&cluster.workers[b].speed));
+    let hit = (m / 3).max(1);
+    let mut events = Vec::with_capacity(2 * hit);
+    for &w in order.iter().take(hit) {
+        let v = cluster.workers[w].speed;
+        events.push(ClusterEvent::SpeedChange { t: t0, worker: w, speed: v / factor.max(1.0) });
+        events.push(ClusterEvent::SpeedChange { t: t1, worker: w, speed: v });
+    }
+    ClusterTimeline::new(events)
+}
+
+/// Join/leave churn: the `k` fastest workers leave at `t0` and `k`
+/// replacements at the cluster's mean speed join at `t1` (bootstrapped
+/// from a PS snapshot by the engine).
+pub fn churn(cluster: &ClusterSpec, t0: f64, t1: f64, k: usize) -> ClusterTimeline {
+    let m = cluster.m();
+    let k = k.clamp(1, m.saturating_sub(1).max(1));
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| cluster.workers[b].speed.total_cmp(&cluster.workers[a].speed));
+    let mean = cluster.speeds().iter().sum::<f64>() / m as f64;
+    let comm = cluster.comms().iter().sum::<f64>() / m as f64;
+    let mut events: Vec<ClusterEvent> = order
+        .iter()
+        .take(k)
+        .map(|&w| ClusterEvent::WorkerLeave { t: t0, worker: w })
+        .collect();
+    for _ in 0..k {
+        events.push(ClusterEvent::WorkerJoin { t: t1, spec: WorkerSpec::new(mean, comm) });
+    }
+    ClusterTimeline::new(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::new(vec![
+            WorkerSpec::new(1.0, 0.2),
+            WorkerSpec::new(2.0, 0.2),
+            WorkerSpec::new(4.0, 0.2),
+            WorkerSpec::new(0.5, 0.2),
+        ])
+    }
+
+    #[test]
+    fn every_preset_validates_against_its_cluster() {
+        let c = cluster();
+        for name in SCENARIO_NAMES {
+            let tl = preset(name, &c, 600.0).unwrap();
+            assert!(!tl.is_empty(), "{name} produced no events");
+            tl.validate(c.m()).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(preset("nope", &c, 600.0).is_err());
+    }
+
+    #[test]
+    fn slowdown_hits_the_fastest_worker() {
+        let tl = slowdown(&cluster(), 100.0, 4.0);
+        match tl.events() {
+            [ClusterEvent::SpeedChange { worker, speed, t }] => {
+                assert_eq!(*worker, 2);
+                assert!((*speed - 1.0).abs() < 1e-12);
+                assert_eq!(*t, 100.0);
+            }
+            other => panic!("unexpected events {other:?}"),
+        }
+    }
+
+    #[test]
+    fn straggler_burst_restores_speeds() {
+        let c = cluster();
+        let tl = straggler_burst(&c, 50.0, 150.0, 8.0);
+        // Slowest third of 4 workers = 1 worker (index 3), two events.
+        assert_eq!(tl.len(), 2);
+        assert!(matches!(
+            tl.events()[1],
+            ClusterEvent::SpeedChange { worker: 3, speed, .. } if (speed - 0.5).abs() < 1e-12
+        ));
+    }
+
+    #[test]
+    fn churn_keeps_membership_nonempty() {
+        let c = cluster();
+        let tl = churn(&c, 50.0, 150.0, 2);
+        assert_eq!(tl.len(), 4);
+        tl.validate(c.m()).unwrap();
+        assert_eq!(tl.join_count(), 2);
+    }
+}

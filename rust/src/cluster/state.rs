@@ -1,0 +1,339 @@
+//! The live cluster: membership, speeds, comm times and batch sizes.
+//!
+//! `ClusterState` is the single source of truth both engines consume. It
+//! owns the per-worker batch assignment (BatchTune sizing included) that
+//! the seed computed independently in `SimEngine::new` and
+//! `RealtimeEngine::run`, and it is the only place timeline events are
+//! applied — engines translate the returned [`ClusterDelta`] into their
+//! own bookkeeping (spawning a worker, dropping in-flight commits, ...).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterSpec, WorkerSpec};
+use crate::sync::{assign_batchtune_sizes, SyncModelKind, WorkerProgress};
+
+use super::event::ClusterEvent;
+
+/// What applying one event did, from the engine's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterDelta {
+    /// The event was a no-op (e.g. a speed re-asserted to its current
+    /// value). Engines skip policy callbacks so no-op events leave runs
+    /// bit-identical.
+    None,
+    /// Speeds or comm times changed for an existing worker.
+    Changed,
+    /// A worker joined; its index is returned (always appended).
+    Joined(usize),
+    /// The worker at this index left the cluster.
+    Left(usize),
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    /// v_i — steps/s at the reference batch size (all workers ever seen;
+    /// departed workers keep their last value but are inactive).
+    pub speeds: Vec<f64>,
+    /// O_i — commit round-trip seconds.
+    pub comms: Vec<f64>,
+    /// Assigned mini-batch size per worker.
+    pub batch_sizes: Vec<usize>,
+    /// Live membership. Invariant: at least one worker is active.
+    pub active: Vec<bool>,
+    b_default: usize,
+    available: Vec<usize>,
+}
+
+impl ClusterState {
+    /// Build the initial state from the experiment's cluster, resolving
+    /// the default batch size against the model's `available` variants
+    /// (largest available ≤ requested, else the smallest variant) and
+    /// assigning per-worker sizes — BatchTune wrappers get speed-scaled
+    /// sizes, everyone else the default. This is the one place batch
+    /// assignment happens; both engines read the result.
+    pub fn new(
+        cluster: &ClusterSpec,
+        kind: SyncModelKind,
+        requested_batch: usize,
+        available: &[usize],
+    ) -> Self {
+        let b_default = if available.is_empty() {
+            requested_batch.max(1)
+        } else if available.contains(&requested_batch) {
+            requested_batch
+        } else {
+            *available
+                .iter()
+                .filter(|&&b| b <= requested_batch)
+                .max()
+                .unwrap_or(&available[0])
+        };
+        let speeds = cluster.speeds();
+        let batch_sizes = if kind.is_batchtune() && !available.is_empty() {
+            assign_batchtune_sizes(&speeds, b_default, available)
+        } else {
+            vec![b_default; cluster.m()]
+        };
+        ClusterState {
+            speeds,
+            comms: cluster.comms(),
+            batch_sizes,
+            active: vec![true; cluster.m()],
+            b_default,
+            available: available.to_vec(),
+        }
+    }
+
+    /// Total worker slots ever allocated (departed workers included).
+    pub fn m(&self) -> usize {
+        self.speeds.len()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// The resolved default batch size.
+    pub fn b_default(&self) -> usize {
+        self.b_default
+    }
+
+    /// Batch size a joining worker would get: its spec's explicit size
+    /// clamped to the available variants, else the default. (Re-running
+    /// the BatchTune assignment mid-run would resize *existing* workers'
+    /// batches under them, so joiners never trigger one.)
+    pub fn join_batch(&self, spec: &WorkerSpec) -> usize {
+        if spec.batch_size == 0 || self.available.is_empty() {
+            return self.b_default;
+        }
+        if self.available.contains(&spec.batch_size) {
+            return spec.batch_size;
+        }
+        *self
+            .available
+            .iter()
+            .filter(|&&b| b <= spec.batch_size)
+            .max()
+            .unwrap_or(&self.available[0])
+    }
+
+    /// The progress entry for a worker joining at index `w` — the one
+    /// place the join-snapshot counter bootstrap lives: steps/commits
+    /// start at the *active minimum* so barrier and staleness models
+    /// treat the newcomer as a peer of the current round, not a round-0
+    /// straggler. `progress` is the engine's per-worker table *before*
+    /// the joiner is appended.
+    pub fn join_progress(&self, w: usize, progress: &[WorkerProgress]) -> WorkerProgress {
+        let amin = |f: fn(&WorkerProgress) -> u64| {
+            progress
+                .iter()
+                .zip(&self.active)
+                .filter(|(_, &a)| a)
+                .map(|(p, _)| f(p))
+                .min()
+                .unwrap_or(0)
+        };
+        WorkerProgress {
+            steps: amin(|p| p.steps),
+            commits: amin(|p| p.commits),
+            batch_size: self.batch_sizes[w],
+            ..Default::default()
+        }
+    }
+
+    /// Heterogeneity degree H = mean(v)/min(v) over the *active* workers.
+    pub fn heterogeneity(&self) -> f64 {
+        let v: Vec<f64> = self
+            .speeds
+            .iter()
+            .zip(&self.active)
+            .filter(|(_, &a)| a)
+            .map(|(&s, _)| s)
+            .collect();
+        if v.is_empty() {
+            return 1.0;
+        }
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        mean / min
+    }
+
+    /// Apply one event, upholding the invariants (speeds positive,
+    /// membership never empty). Returns what changed so the engine can
+    /// react; [`ClusterDelta::None`] means nothing observable moved.
+    pub fn apply_event(&mut self, ev: &ClusterEvent) -> Result<ClusterDelta> {
+        match ev {
+            ClusterEvent::SpeedChange { worker, speed, .. } => {
+                let w = self.check_worker(*worker)?;
+                if !speed.is_finite() || *speed <= 0.0 {
+                    bail!("speed change to non-positive {speed} for worker {w}");
+                }
+                if self.speeds[w] == *speed {
+                    return Ok(ClusterDelta::None);
+                }
+                self.speeds[w] = *speed;
+                Ok(ClusterDelta::Changed)
+            }
+            ClusterEvent::CommChange { worker, comm_secs, .. } => {
+                let w = self.check_worker(*worker)?;
+                if !comm_secs.is_finite() || *comm_secs < 0.0 {
+                    bail!("comm change to negative {comm_secs} for worker {w}");
+                }
+                if self.comms[w] == *comm_secs {
+                    return Ok(ClusterDelta::None);
+                }
+                self.comms[w] = *comm_secs;
+                Ok(ClusterDelta::Changed)
+            }
+            ClusterEvent::WorkerJoin { spec, .. } => {
+                if !spec.speed.is_finite() || spec.speed <= 0.0 {
+                    bail!("joining worker needs a positive speed, got {}", spec.speed);
+                }
+                let batch = self.join_batch(spec);
+                self.speeds.push(spec.speed);
+                self.comms.push(spec.comm_secs.max(0.0));
+                self.batch_sizes.push(batch);
+                self.active.push(true);
+                Ok(ClusterDelta::Joined(self.m() - 1))
+            }
+            ClusterEvent::WorkerLeave { worker, .. } => {
+                let w = self.check_worker(*worker)?;
+                if self.active_count() == 1 {
+                    bail!("worker {w} leaving would empty the cluster");
+                }
+                self.active[w] = false;
+                Ok(ClusterDelta::Left(w))
+            }
+        }
+    }
+
+    fn check_worker(&self, w: usize) -> Result<usize> {
+        if w >= self.m() {
+            bail!("cluster event targets worker {w} but only {} exist", self.m());
+        }
+        if !self.active[w] {
+            bail!("cluster event targets worker {w}, which already left");
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkerSpec;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::new(vec![
+            WorkerSpec::new(1.0, 0.2),
+            WorkerSpec::new(2.0, 0.3),
+            WorkerSpec::new(1.0 / 3.0, 0.4),
+        ])
+    }
+
+    #[test]
+    fn batch_default_resolves_like_the_engines_did() {
+        let avail = [32usize, 64, 128];
+        // Present → taken as-is.
+        let s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 64, &avail);
+        assert_eq!(s.b_default(), 64);
+        assert_eq!(s.batch_sizes, vec![64, 64, 64]);
+        // Absent → largest available ≤ requested.
+        let s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 100, &avail);
+        assert_eq!(s.b_default(), 64);
+        // Smaller than everything → the smallest variant.
+        let s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 8, &avail);
+        assert_eq!(s.b_default(), 32);
+    }
+
+    #[test]
+    fn batchtune_sizes_assigned_once_here() {
+        let avail = [32usize, 64, 128, 256];
+        let s = ClusterState::new(&cluster(), SyncModelKind::BatchTuneBsp, 128, &avail);
+        assert_eq!(s.batch_sizes, assign_batchtune_sizes(&s.speeds, 128, &avail));
+        // Faster worker gets the bigger batch.
+        assert!(s.batch_sizes[1] > s.batch_sizes[2]);
+    }
+
+    #[test]
+    fn apply_event_delta_and_noop() {
+        let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
+        let ev = ClusterEvent::SpeedChange { t: 1.0, worker: 0, speed: 0.5 };
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::Changed);
+        assert_eq!(s.speeds[0], 0.5);
+        // Re-asserting the same value is a no-op.
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::None);
+    }
+
+    #[test]
+    fn join_appends_and_leave_deactivates() {
+        let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32, 64]);
+        let j = s
+            .apply_event(&ClusterEvent::WorkerJoin { t: 1.0, spec: WorkerSpec::new(4.0, 0.1) })
+            .unwrap();
+        assert_eq!(j, ClusterDelta::Joined(3));
+        assert_eq!(s.m(), 4);
+        assert_eq!(s.batch_sizes[3], 32);
+        let l = s.apply_event(&ClusterEvent::WorkerLeave { t: 2.0, worker: 0 }).unwrap();
+        assert_eq!(l, ClusterDelta::Left(0));
+        assert_eq!(s.active_count(), 3);
+        // Events against the departed worker are rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::SpeedChange { t: 3.0, worker: 0, speed: 1.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn invariants_enforced() {
+        let mut s = ClusterState::new(
+            &ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1), WorkerSpec::new(1.0, 0.1)]),
+            SyncModelKind::Bsp,
+            32,
+            &[32],
+        );
+        assert!(s
+            .apply_event(&ClusterEvent::SpeedChange { t: 0.0, worker: 0, speed: -1.0 })
+            .is_err());
+        s.apply_event(&ClusterEvent::WorkerLeave { t: 0.0, worker: 1 }).unwrap();
+        // Last active worker cannot leave.
+        assert!(s.apply_event(&ClusterEvent::WorkerLeave { t: 1.0, worker: 0 }).is_err());
+        assert_eq!(s.active_count(), 1);
+    }
+
+    #[test]
+    fn join_progress_bootstraps_to_active_minimum() {
+        let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
+        let mut progress = vec![WorkerProgress::default(); 3];
+        progress[0].steps = 50;
+        progress[0].commits = 5;
+        progress[1].steps = 80;
+        progress[1].commits = 7;
+        progress[2].steps = 10; // straggler…
+        progress[2].commits = 1;
+        s.apply_event(&ClusterEvent::WorkerLeave { t: 0.0, worker: 2 }).unwrap();
+        progress[2].active = false; // …left
+        let j = s
+            .apply_event(&ClusterEvent::WorkerJoin { t: 1.0, spec: WorkerSpec::new(1.0, 0.1) })
+            .unwrap();
+        let ClusterDelta::Joined(w) = j else { panic!("expected join") };
+        let entry = s.join_progress(w, &progress);
+        // Minimum over the *active* founders, not the departed straggler.
+        assert_eq!(entry.steps, 50);
+        assert_eq!(entry.commits, 5);
+        assert_eq!(entry.batch_size, 32);
+        assert!(entry.active);
+    }
+
+    #[test]
+    fn join_batch_clamps_to_variants() {
+        let s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 64, &[32, 64, 128]);
+        assert_eq!(s.join_batch(&WorkerSpec::new(1.0, 0.1)), 64); // default
+        let mut w = WorkerSpec::new(1.0, 0.1);
+        w.batch_size = 128;
+        assert_eq!(s.join_batch(&w), 128);
+        w.batch_size = 100;
+        assert_eq!(s.join_batch(&w), 64);
+        w.batch_size = 4;
+        assert_eq!(s.join_batch(&w), 32);
+    }
+}

@@ -1,0 +1,181 @@
+//! A time-sorted script of [`ClusterEvent`]s with validation and JSON
+//! round-trip (it rides inside `ExperimentSpec` under the `timeline` key).
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+use super::event::ClusterEvent;
+
+/// The scripted cluster dynamics of one experiment. Events are kept
+/// sorted by fire time (stable, so same-time events keep script order).
+/// An empty timeline reproduces the seed's static cluster exactly.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterTimeline {
+    events: Vec<ClusterEvent>,
+}
+
+impl ClusterTimeline {
+    pub fn new(mut events: Vec<ClusterEvent>) -> Self {
+        events.sort_by(|a, b| a.t().total_cmp(&b.t()));
+        ClusterTimeline { events }
+    }
+
+    pub fn events(&self) -> &[ClusterEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Worker indices joining over the timeline get appended after the
+    /// initial membership: the j-th join lands at index `initial_m + j`.
+    pub fn join_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ClusterEvent::WorkerJoin { .. })).count()
+    }
+
+    /// Check the script against the evolving membership it creates:
+    /// * every event time is finite and ≥ 0;
+    /// * speed/comm targets are positive / non-negative;
+    /// * `worker` indices refer to a worker that exists *and is still
+    ///   active* at that point of the script;
+    /// * no leave ever empties the cluster.
+    pub fn validate(&self, initial_m: usize) -> Result<()> {
+        if initial_m == 0 {
+            bail!("timeline validation needs a non-empty initial cluster");
+        }
+        let mut active = vec![true; initial_m];
+        for (i, ev) in self.events.iter().enumerate() {
+            let t = ev.t();
+            if !t.is_finite() || t < 0.0 {
+                bail!("timeline event {i}: bad time {t}");
+            }
+            let check_worker = |w: usize, active: &[bool]| -> Result<()> {
+                if w >= active.len() {
+                    bail!("timeline event {i}: worker {w} does not exist yet (m={})", active.len());
+                }
+                if !active[w] {
+                    bail!("timeline event {i}: worker {w} already left");
+                }
+                Ok(())
+            };
+            match ev {
+                ClusterEvent::SpeedChange { worker, speed, .. } => {
+                    check_worker(*worker, &active)?;
+                    if !speed.is_finite() || *speed <= 0.0 {
+                        bail!("timeline event {i}: speed must be positive, got {speed}");
+                    }
+                }
+                ClusterEvent::CommChange { worker, comm_secs, .. } => {
+                    check_worker(*worker, &active)?;
+                    if !comm_secs.is_finite() || *comm_secs < 0.0 {
+                        bail!("timeline event {i}: comm_secs must be >= 0, got {comm_secs}");
+                    }
+                }
+                ClusterEvent::WorkerJoin { spec, .. } => {
+                    if !spec.speed.is_finite() || spec.speed <= 0.0 {
+                        bail!("timeline event {i}: joining worker needs a positive speed");
+                    }
+                    if !spec.comm_secs.is_finite() || spec.comm_secs < 0.0 {
+                        bail!("timeline event {i}: joining worker needs comm_secs >= 0");
+                    }
+                    active.push(true);
+                }
+                ClusterEvent::WorkerLeave { worker, .. } => {
+                    check_worker(*worker, &active)?;
+                    if active.iter().filter(|&&a| a).count() == 1 {
+                        bail!("timeline event {i}: leave would empty the cluster");
+                    }
+                    active[*worker] = false;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(ClusterEvent::to_json).collect())
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let events = v
+            .as_arr()?
+            .iter()
+            .map(ClusterEvent::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterTimeline::new(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkerSpec;
+
+    fn ev_speed(t: f64, w: usize, v: f64) -> ClusterEvent {
+        ClusterEvent::SpeedChange { t, worker: w, speed: v }
+    }
+
+    #[test]
+    fn events_sorted_by_time_stably() {
+        let tl = ClusterTimeline::new(vec![
+            ev_speed(50.0, 1, 2.0),
+            ev_speed(10.0, 0, 1.0),
+            ClusterEvent::WorkerLeave { t: 50.0, worker: 0 },
+        ]);
+        assert_eq!(tl.events()[0].t(), 10.0);
+        // Same-time events keep script order (speed change before leave).
+        assert!(matches!(tl.events()[1], ClusterEvent::SpeedChange { .. }));
+        assert!(matches!(tl.events()[2], ClusterEvent::WorkerLeave { .. }));
+    }
+
+    #[test]
+    fn validate_accepts_join_then_reference() {
+        let tl = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerJoin { t: 10.0, spec: WorkerSpec::new(1.0, 0.2) },
+            ev_speed(20.0, 2, 0.5), // index 2 only exists after the join
+        ]);
+        assert!(tl.validate(2).is_ok());
+        // Without the join, index 2 is out of range.
+        let tl2 = ClusterTimeline::new(vec![ev_speed(20.0, 2, 0.5)]);
+        assert!(tl2.validate(2).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_scripts() {
+        // Negative time.
+        assert!(ClusterTimeline::new(vec![ev_speed(-1.0, 0, 1.0)]).validate(2).is_err());
+        // Non-positive speed.
+        assert!(ClusterTimeline::new(vec![ev_speed(1.0, 0, 0.0)]).validate(2).is_err());
+        // Emptying the cluster.
+        let drain = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerLeave { t: 1.0, worker: 0 },
+            ClusterEvent::WorkerLeave { t: 2.0, worker: 1 },
+        ]);
+        assert!(drain.validate(2).is_err());
+        // Touching a departed worker.
+        let ghost = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerLeave { t: 1.0, worker: 0 },
+            ev_speed(2.0, 0, 1.0),
+        ]);
+        assert!(ghost.validate(3).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let tl = ClusterTimeline::new(vec![
+            ev_speed(60.0, 1, 0.25),
+            ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(2.0, 0.3) },
+            ClusterEvent::WorkerLeave { t: 180.0, worker: 0 },
+        ]);
+        let back = ClusterTimeline::from_json(&Json::parse(&tl.to_json().dump()).unwrap())
+            .unwrap();
+        assert_eq!(back, tl);
+        assert_eq!(back.join_count(), 1);
+    }
+}

@@ -6,11 +6,12 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::ClusterTimeline;
 use crate::sync::SyncModelKind;
 use crate::util::Json;
 
 /// One edge worker: relative training speed and communication overhead.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WorkerSpec {
     /// Steps per (virtual) second at the model's reference batch size.
     pub speed: f64,
@@ -173,6 +174,11 @@ pub struct ExperimentSpec {
     /// engine only; split across `shards`). 0 = instantaneous apply, the
     /// seed behaviour.
     pub ps_apply_secs: f64,
+    /// Scripted cluster dynamics: speed/comm shifts and worker join/leave
+    /// events, fired in virtual time by the simulator and on the scaled
+    /// wall clock by the real-time engine. Empty = the static cluster
+    /// (bit-identical to the pre-timeline behaviour).
+    pub timeline: ClusterTimeline,
 }
 
 impl ExperimentSpec {
@@ -199,6 +205,7 @@ impl ExperimentSpec {
             shards: 1,
             pipeline_depth: 2,
             ps_apply_secs: 0.0,
+            timeline: ClusterTimeline::default(),
         }
     }
 
@@ -281,6 +288,9 @@ impl ExperimentSpec {
         spec.shards = v.usize_or("shards", spec.shards)?;
         spec.pipeline_depth = v.usize_or("pipeline_depth", spec.pipeline_depth)?;
         spec.ps_apply_secs = v.f64_or("ps_apply_secs", spec.ps_apply_secs)?;
+        if let Some(t) = v.get("timeline") {
+            spec.timeline = ClusterTimeline::from_json(t).context("parsing timeline")?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -344,6 +354,7 @@ impl ExperimentSpec {
             ("shards", Json::num(self.shards as f64)),
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
             ("ps_apply_secs", Json::num(self.ps_apply_secs)),
+            ("timeline", self.timeline.to_json()),
         ])
     }
 
@@ -382,6 +393,7 @@ impl ExperimentSpec {
         if self.ps_apply_secs < 0.0 {
             bail!("ps_apply_secs must be non-negative");
         }
+        self.timeline.validate(self.cluster.m())?;
         Ok(())
     }
 }
@@ -459,6 +471,29 @@ mod tests {
         spec.shards = 1;
         spec.pipeline_depth = 0;
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn timeline_roundtrips_and_validates_through_spec() {
+        use crate::cluster::ClusterEvent;
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.3)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.timeline = ClusterTimeline::new(vec![
+            ClusterEvent::SpeedChange { t: 60.0, worker: 1, speed: 0.125 },
+            ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(2.0, 0.25) },
+            ClusterEvent::WorkerLeave { t: 180.0, worker: 0 },
+        ]);
+        spec.validate().unwrap();
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.timeline, spec.timeline);
+        // A script referencing a worker that never exists is rejected.
+        spec.timeline =
+            ClusterTimeline::new(vec![ClusterEvent::WorkerLeave { t: 1.0, worker: 9 }]);
+        assert!(spec.validate().is_err());
+        assert!(ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).is_err());
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! exactly the way the paper does it (§5.2): each worker pads its step to
 //! the target duration with a sleep.
 //!
+//! **Timeline events** (`spec.timeline`, see `crate::cluster`) fire on the
+//! scaled wall clock from the same scheduler loop: speed/comm shifts
+//! mutate the shared [`ClusterState`], which workers re-read every
+//! iteration (the per-step sleep pad tracks the live speed); a leaving
+//! worker's thread observes its `active` flag drop and exits; a joining
+//! worker's thread is spawned mid-run, skips the start barrier, and
+//! bootstraps from a consistent PS snapshot (the join-snapshot protocol).
+//!
 //! `time_scale` compresses virtual seconds into wall seconds (0.02 → a
 //! 60-second check period passes in 1.2 s) so examples finish quickly while
 //! preserving every rate *ratio*.
@@ -28,14 +36,13 @@ use std::sync::{Arc, Barrier, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
+use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::pserver::ShardedParameterServer;
 use crate::runtime::{native, ModelRuntime, ParamSet};
-use crate::sync::{
-    assign_batchtune_sizes, make_policy, Action, ClusterView, SyncPolicy, WorkerProgress,
-};
+use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
 
 /// A worker→PS message: the accumulated update plus a reply channel for the
 /// fresh global model.
@@ -73,7 +80,8 @@ struct Shared {
     /// Training start (set by the PS after every thread finished compiling,
     /// so runtime warmup does not consume virtual time).
     start: OnceLock<Instant>,
-    /// All threads rendezvous here after loading their runtimes.
+    /// All initial threads rendezvous here after loading their runtimes
+    /// (workers joining via the timeline skip it).
     barrier: Barrier,
     progress: Mutex<Vec<WorkerProgress>>,
     policy: Mutex<Box<dyn SyncPolicy>>,
@@ -82,21 +90,23 @@ struct Shared {
     total_steps: AtomicU64,
     last_eval: Mutex<Option<(f64, f64)>>,
     initial_loss: Mutex<Option<f64>>,
-    speeds: Vec<f64>,
-    comms: Vec<f64>,
+    /// Live speeds/comms/membership, mutated by timeline events. Lock
+    /// order where both are held: `cluster` before `progress`.
+    cluster: Mutex<ClusterState>,
     k_variants: Vec<usize>,
 }
 
 impl Shared {
     fn with_view<R>(&self, now: f64, f: impl FnOnce(&mut dyn SyncPolicy, &ClusterView) -> R) -> R {
+        let cluster = self.cluster.lock().unwrap();
         let progress = self.progress.lock().unwrap();
         let last_eval = *self.last_eval.lock().unwrap();
         let initial_loss = *self.initial_loss.lock().unwrap();
         let view = ClusterView {
             now,
             workers: &progress,
-            speeds: &self.speeds,
-            comms: &self.comms,
+            speeds: &cluster.speeds,
+            comms: &cluster.comms,
             k_variants: &self.k_variants,
             last_eval,
             initial_loss,
@@ -121,17 +131,12 @@ impl RealtimeEngine {
         let probe = ModelRuntime::load_by_name(&spec.model)
             .with_context(|| format!("loading artifacts for '{}'", spec.model))?;
         let available = probe.manifest.batch_sizes();
-        let b_default = if available.contains(&spec.batch_size) {
-            spec.batch_size
-        } else {
-            available[0]
-        };
-        let batch_sizes: Vec<usize> = if spec.sync.kind.is_batchtune() {
-            assign_batchtune_sizes(&spec.cluster.speeds(), b_default, &available)
-        } else {
-            vec![b_default; m]
-        };
-        let k_variants = probe.manifest.k_variants(b_default);
+        // Batch assignment lives in ClusterState — the same source of
+        // truth the simulator reads (BatchTune sizing included).
+        let cluster_state =
+            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available);
+        let batch_sizes = cluster_state.batch_sizes.clone();
+        let k_variants = probe.manifest.k_variants(cluster_state.b_default());
         let init = probe.init_params()?;
         let bytes_per_commit = probe.manifest.bytes_per_commit as u64;
         let eval_b = probe.manifest.eval.b;
@@ -152,12 +157,15 @@ impl RealtimeEngine {
             total_steps: AtomicU64::new(0),
             last_eval: Mutex::new(None),
             initial_loss: Mutex::new(None),
-            speeds: spec.cluster.speeds(),
-            comms: spec.cluster.comms(),
+            cluster: Mutex::new(cluster_state),
             k_variants,
         });
 
         let (commit_tx, commit_rx) = mpsc::channel::<CommitMsg>();
+        // Joining workers need a sender after the initial handles drop;
+        // only keep one alive when the timeline can actually join (so the
+        // no-churn disconnect behaviour matches the seed exactly).
+        let join_tx = if spec.timeline.join_count() > 0 { Some(commit_tx.clone()) } else { None };
 
         let outcome = std::thread::scope(|scope| -> Result<RealtimeOutcome> {
             // ---------------- worker threads ----------------
@@ -166,7 +174,7 @@ impl RealtimeEngine {
                 let shared = shared.clone();
                 let commit_tx = commit_tx.clone();
                 scope.spawn(move || {
-                    if let Err(e) = worker_loop(w, &spec, scale, shared.clone(), commit_tx) {
+                    if let Err(e) = worker_loop(w, &spec, scale, shared.clone(), commit_tx, None) {
                         // A failed worker must not strand the barrier/PS.
                         shared.stop.store(true, Ordering::SeqCst);
                         eprintln!("worker {w} failed: {e:#}");
@@ -200,6 +208,7 @@ impl RealtimeEngine {
             let mut next_checkpoint = spec.sync.gamma;
             let mut next_epoch = spec.sync.epoch_secs;
             let mut next_eval = 0.0f64;
+            let mut next_timeline = 0usize;
 
             loop {
                 let now_v = start.elapsed().as_secs_f64() / scale;
@@ -207,6 +216,61 @@ impl RealtimeEngine {
                     || shared.total_steps.load(Ordering::Relaxed) >= spec.max_total_steps
                 {
                     break;
+                }
+
+                // Timeline events fire on the scaled wall clock.
+                while next_timeline < spec.timeline.len()
+                    && spec.timeline.events()[next_timeline].t() <= now_v
+                {
+                    let ev = &spec.timeline.events()[next_timeline];
+                    next_timeline += 1;
+                    let delta = match shared.cluster.lock().unwrap().apply_event(ev) {
+                        Ok(d) => d,
+                        Err(e) => {
+                            // Propagating without stopping would strand the
+                            // worker threads and hang the scope join.
+                            shared.stop.store(true, Ordering::SeqCst);
+                            return Err(e)
+                                .with_context(|| format!("timeline event at t={:.1}", ev.t()));
+                        }
+                    };
+                    match delta {
+                        ClusterDelta::None => continue,
+                        ClusterDelta::Changed => {}
+                        ClusterDelta::Left(wl) => {
+                            // The thread notices its active flag and exits;
+                            // mark its progress entry inactive + unblocked
+                            // right away so barriers stop counting it.
+                            let mut progress = shared.progress.lock().unwrap();
+                            progress[wl].active = false;
+                            progress[wl].blocked = false;
+                        }
+                        ClusterDelta::Joined(wj) => {
+                            // Join-snapshot protocol: bootstrap counters to
+                            // the active minimum and the model from a
+                            // consistent versioned PS snapshot.
+                            {
+                                let cluster = shared.cluster.lock().unwrap();
+                                let mut progress = shared.progress.lock().unwrap();
+                                let entry = cluster.join_progress(wj, &progress);
+                                progress.push(entry);
+                                shared.metrics.lock().unwrap().push(WorkerMetrics::default());
+                            }
+                            let boot = ps.snapshot();
+                            let spec2 = spec.clone();
+                            let shared2 = shared.clone();
+                            let tx = join_tx.clone().expect("join without join_tx");
+                            scope.spawn(move || {
+                                if let Err(e) =
+                                    worker_loop(wj, &spec2, scale, shared2.clone(), tx, Some(boot))
+                                {
+                                    shared2.stop.store(true, Ordering::SeqCst);
+                                    eprintln!("joined worker {wj} failed: {e:#}");
+                                }
+                            });
+                        }
+                    }
+                    shared.with_view(now_v, |p, v| p.on_cluster_change(v));
                 }
 
                 // Scheduler ticks.
@@ -249,6 +313,17 @@ impl RealtimeEngine {
                                 Err(_) => break,
                             }
                         }
+                        // A worker that left while its commit was in flight
+                        // loses it — the simulator's arrival-drop semantics.
+                        // (Dropping the msg drops its reply sender, so the
+                        // departed thread's recv fails and it exits.)
+                        let batch: Vec<CommitMsg> = {
+                            let cluster = shared.cluster.lock().unwrap();
+                            batch.into_iter().filter(|m| cluster.active[m.worker]).collect()
+                        };
+                        if batch.is_empty() {
+                            continue;
+                        }
                         for msg in &batch {
                             ps.apply(&msg.u);
                             total_commits += 1;
@@ -276,6 +351,7 @@ impl RealtimeEngine {
             }
 
             shared.stop.store(true, Ordering::SeqCst);
+            drop(join_tx);
             // Drain outstanding commits so workers blocked on replies exit.
             while let Ok(msg) = commit_rx.recv_timeout(Duration::from_millis(200)) {
                 ps.apply(&msg.u);
@@ -312,10 +388,15 @@ fn worker_loop(
     scale: f64,
     shared: Arc<Shared>,
     commit_tx: mpsc::Sender<CommitMsg>,
+    // `Some(snapshot)` for timeline joiners: start from the PS snapshot
+    // and skip the start barrier (the run is already underway).
+    boot: Option<ParamSet>,
 ) -> Result<()> {
     // Each worker owns its own runtime (PJRT handles are not Send; on the
-    // paper's testbed each worker is its own machine). A load failure must
-    // still hit the barrier or the PS would wait forever.
+    // paper's testbed each worker is its own machine). An *initial* worker
+    // must still hit the barrier on load failure or the PS would wait
+    // forever; joiners never touch the barrier.
+    let initial = boot.is_none();
     let my_batch = shared.progress.lock().unwrap()[w].batch_size;
     let rt = match ModelRuntime::load_by_name(&spec.model).and_then(|rt| {
         rt.warmup_for(&[my_batch])?;
@@ -324,22 +405,36 @@ fn worker_loop(
         Ok(rt) => rt,
         Err(e) => {
             shared.stop.store(true, Ordering::SeqCst);
-            shared.barrier.wait();
+            if initial {
+                shared.barrier.wait();
+            }
             return Err(e);
         }
     };
-    shared.barrier.wait();
+    if initial {
+        shared.barrier.wait();
+    }
     let start = *shared.start.wait();
-    let mut params = rt.init_params()?;
+    let mut params = match boot {
+        Some(snapshot) => snapshot,
+        None => rt.init_params()?,
+    };
     let mut u = params.zeros_like();
     let mut data = make_source(&rt.manifest, spec.seed, w);
     let b = my_batch;
-    let v = shared.speeds[w];
-    let o = shared.comms[w];
     let b_ref = spec.batch_size.max(1) as f64;
-    let step_v = (b as f64 / b_ref).max(1e-9) / v; // virtual secs per step
 
     while !shared.stop.load(Ordering::Relaxed) {
+        // Re-read the live cluster each round: timeline events may have
+        // shifted this worker's speed/comm or retired it.
+        let (v, o, active) = {
+            let c = shared.cluster.lock().unwrap();
+            (c.speeds[w], c.comms[w], c.active[w])
+        };
+        if !active {
+            break; // the worker left the cluster
+        }
+        let step_v = (b as f64 / b_ref).max(1e-9) / v; // virtual secs per step
         let now_v = start.elapsed().as_secs_f64() / scale;
         let action = shared.with_view(now_v, |p, view| p.next_action(w, view));
         match action {

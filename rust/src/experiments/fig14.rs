@@ -1,0 +1,68 @@
+//! Fig. 14 (reproduction extension) — adaptability to *dynamic* clusters.
+//!
+//! The paper's Fig. 5 sweeps static heterogeneity; its adaptability claim,
+//! however, is about clusters that *shift mid-training* (§1: workers whose
+//! speeds drift, degrade, or that join/leave). This experiment scripts
+//! three such shifts through the `cluster` timeline subsystem and measures
+//! each model's convergence-time degradation relative to its own static
+//! baseline:
+//!
+//! * `slowdown` — the fastest worker degrades 4× mid-run (the cluster's
+//!   leader becomes its straggler; barrier models inherit its new pace);
+//! * `straggler_burst` — the slowest third degrades 8× for a window, then
+//!   recovers;
+//! * `churn` — the two fastest workers leave, two mean-speed replacements
+//!   join later from a PS snapshot.
+//!
+//! Expected shape: ADSP's degradation stays small under every scenario
+//! (it never blocks and re-targets its commit rates on cluster change),
+//! while SSP and ADACOMM degrade with the post-change straggler.
+
+use anyhow::Result;
+
+use crate::cluster::scenarios;
+use crate::config::profiles::ec2_cluster;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+
+pub const SYNC_MODELS: [SyncModelKind; 3] =
+    [SyncModelKind::Adsp, SyncModelKind::Ssp, SyncModelKind::Adacomm];
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let cluster = match scale {
+        Scale::Bench => ec2_cluster(6, 2.0, 0.3),
+        Scale::Full => ec2_cluster(18, 1.0, 0.5),
+    };
+
+    let mut table = SeriesTable::new(
+        "fig14_adaptability",
+        &["scenario", "sync", "baseline_time_s", "scenario_time_s", "degradation", "final_loss"],
+    );
+
+    for &scenario in &scenarios::SCENARIO_NAMES {
+        for kind in SYNC_MODELS {
+            let base_spec = spec_for(scale, kind, cluster.clone());
+            let horizon = base_spec.max_virtual_secs;
+            let baseline = run_sim(base_spec.clone())?;
+
+            let mut spec = base_spec;
+            spec.timeline = scenarios::preset(scenario, &spec.cluster, horizon)?;
+            let shifted = run_sim(spec)?;
+
+            let t_base = baseline.convergence_time();
+            let t_shift = shifted.convergence_time();
+            let degradation = if t_base > 0.0 { (t_shift - t_base) / t_base } else { 0.0 };
+            table.push_row(vec![
+                scenario.to_string(),
+                kind.name().to_string(),
+                fmt(t_base),
+                fmt(t_shift),
+                fmt(degradation),
+                fmt(shifted.final_loss),
+            ]);
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}

@@ -13,6 +13,7 @@ pub mod fig1;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12_13;
+pub mod fig14;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -40,11 +41,12 @@ pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
         "fig11" => fig11::run(scale),
         "fig12" => fig12_13::run_rnn(scale),
         "fig13" => fig12_13::run_svm(scale),
-        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig13)"),
+        "fig14" => fig14::run(scale),
+        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig14)"),
     }
 }
 
-pub const ALL_FIGURES: [&str; 12] = [
+pub const ALL_FIGURES: [&str; 13] = [
     "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13",
+    "fig13", "fig14",
 ];

@@ -21,6 +21,7 @@
 //! See `DESIGN.md` for the full system inventory, the per-figure
 //! experiment index (§4), and the recorded paper-vs-measured results.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -32,6 +33,7 @@ pub mod simulation;
 pub mod sync;
 pub mod util;
 
+pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline};
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use pserver::ShardedParameterServer;
 pub use simulation::{SimEngine, SimOutcome};

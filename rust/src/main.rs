@@ -25,7 +25,8 @@ USAGE:
              [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
              [--target-loss L] [--config FILE.json] [--realtime]
              [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
-  adsp experiment <fig1|fig3..fig13|all> [--full]
+             [--scenario NAME]
+  adsp experiment <fig1|fig3..fig14|all> [--full]
   adsp inspect <model>
   adsp list
 
@@ -48,6 +49,11 @@ TRAIN FLAGS:
   --pipeline-depth D  commits in flight per shard (default 2)
   --ps-apply-secs T   modeled serial PS apply secs per commit in the
                       simulator, split across shards (default 0)
+  --scenario NAME     scripted cluster dynamics preset applied on top of
+                      the cluster: slowdown | straggler_burst | churn
+                      (timeline events land at 20%/50% of --max-secs;
+                      a JSON --config may instead script its own
+                      \"timeline\" section)
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -134,6 +140,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.shards = args.get("shards", 1usize)?;
         s.pipeline_depth = args.get("pipeline-depth", 2usize)?;
         s.ps_apply_secs = args.get("ps-apply-secs", 0.0)?;
+        if let Some(name) = args.flags.get("scenario") {
+            s.timeline =
+                adsp::cluster::scenarios::preset(name, &s.cluster, s.max_virtual_secs)?;
+        }
+        s.validate()?;
         s
     };
 

@@ -16,13 +16,13 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use anyhow::{Context, Result};
+use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::{make_source, DataSource};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{
-    assign_batchtune_sizes, make_policy, Action, ClusterView, SyncModelKind, SyncPolicy,
-    WorkerProgress,
+    make_policy, Action, ClusterView, SyncModelKind, SyncPolicy, WorkerProgress,
 };
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -34,6 +34,8 @@ enum EventKind {
     Checkpoint,
     Eval,
     EpochStart,
+    /// The i-th `spec.timeline` event fires (speed/comm shift or churn).
+    Cluster(usize),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -141,8 +143,10 @@ pub struct SimEngine {
     velocity: ParamSet,
     workers: Vec<WorkerSim>,
     progress: Vec<WorkerProgress>,
-    speeds: Vec<f64>,
-    comms: Vec<f64>,
+    /// Live membership/speeds/comms/batch sizes — the single source of
+    /// truth both engines share (see `crate::cluster`). Timeline events
+    /// mutate it mid-run; an empty timeline leaves it frozen.
+    cluster: ClusterState,
     k_variants: Vec<usize>,
     queue: BinaryHeap<Reverse<Event>>,
     seq: u64,
@@ -200,25 +204,12 @@ impl SimEngine {
             .with_context(|| format!("loading artifacts for model '{}'", spec.model))?;
         let manifest = &runtime.manifest;
 
-        // Batch sizes: BatchTune assigns per-worker sizes ∝ speed; everyone
-        // else trains the experiment batch size.
+        // Batch sizes (BatchTune included) are assigned once, inside
+        // `ClusterState` — the shared source of truth for both engines.
         let available = manifest.batch_sizes();
-        let b_default = if available.contains(&spec.batch_size) {
-            spec.batch_size
-        } else {
-            // Fall back to the largest available batch ≤ requested, else min.
-            *available
-                .iter()
-                .filter(|&&b| b <= spec.batch_size)
-                .max()
-                .unwrap_or(&available[0])
-        };
-        let speeds = spec.cluster.speeds();
-        let batch_sizes: Vec<usize> = if spec.sync.kind.is_batchtune() {
-            assign_batchtune_sizes(&speeds, b_default, &available)
-        } else {
-            vec![b_default; spec.cluster.m()]
-        };
+        let cluster =
+            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available);
+        let b_default = cluster.b_default();
 
         let spec_seed = spec.seed;
         let policy = make_policy(&spec.sync, &spec.cluster);
@@ -239,7 +230,7 @@ impl SimEngine {
                 data: make_source(manifest, spec.seed, w),
             });
             progress.push(WorkerProgress {
-                batch_size: batch_sizes[w],
+                batch_size: cluster.batch_sizes[w],
                 ..Default::default()
             });
         }
@@ -253,7 +244,6 @@ impl SimEngine {
             spec.convergence_tol,
             spec.target_loss,
         );
-        let comms = spec.cluster.comms();
 
         Ok(SimEngine {
             spec,
@@ -263,8 +253,7 @@ impl SimEngine {
             velocity,
             workers,
             progress,
-            speeds,
-            comms,
+            cluster,
             k_variants,
             queue: BinaryHeap::new(),
             seq: 0,
@@ -293,7 +282,7 @@ impl SimEngine {
     /// One-way commit transfer time for worker `w`: the dense update is
     /// striped across the S shard servers in parallel (plus contention).
     fn oneway_secs(&self, w: usize) -> f64 {
-        self.comms[w] / 2.0 * shard_split_factor(self.spec.shards)
+        self.cluster.comms[w] / 2.0 * shard_split_factor(self.spec.shards)
     }
 
     fn push_event(&mut self, t: f64, kind: EventKind) {
@@ -304,7 +293,7 @@ impl SimEngine {
     fn step_time(&self, w: usize) -> f64 {
         let b = self.progress[w].batch_size as f64;
         let b_ref = self.spec.batch_size as f64;
-        (b / b_ref).max(1e-9) / self.speeds[w]
+        (b / b_ref).max(1e-9) / self.cluster.speeds[w]
     }
 
     /// Ask the policy what worker `w` should do and carry it out.
@@ -312,12 +301,15 @@ impl SimEngine {
         if self.total_steps >= self.spec.max_total_steps {
             return Ok(());
         }
+        if !self.cluster.active[w] {
+            return Ok(()); // the worker left; its stale events are ignored
+        }
         let action = {
             let view = ClusterView {
                 now: self.now,
                 workers: &self.progress,
-                speeds: &self.speeds,
-                comms: &self.comms,
+                speeds: &self.cluster.speeds,
+                comms: &self.cluster.comms,
                 k_variants: &self.k_variants,
                 last_eval: self.last_eval,
                 initial_loss: self.initial_loss,
@@ -417,6 +409,13 @@ impl SimEngine {
     }
 
     fn on_commit_arrive(&mut self, w: usize) -> Result<()> {
+        if !self.cluster.active[w] {
+            // The worker left while its commit was in flight: the update
+            // is lost with it (timeline churn semantics).
+            self.workers[w].in_flight = None;
+            self.workers[w].in_flight_bytes = None;
+            return Ok(());
+        }
         let u = self.workers[w].in_flight.take().expect("commit without in-flight update");
         let up_bytes = self
             .workers[w]
@@ -463,8 +462,8 @@ impl SimEngine {
             let view = ClusterView {
                 now: self.now,
                 workers: &self.progress,
-                speeds: &self.speeds,
-                comms: &self.comms,
+                speeds: &self.cluster.speeds,
+                comms: &self.cluster.comms,
                 k_variants: &self.k_variants,
                 last_eval: self.last_eval,
                 initial_loss: self.initial_loss,
@@ -495,9 +494,17 @@ impl SimEngine {
         if self.converged_at.is_none() && self.detector.push(loss) {
             self.converged_at = Some(self.now);
         }
-        // Deadlock sentinel: every worker blocked across several evals.
-        let all_blocked =
-            !self.progress.is_empty() && self.progress.iter().all(|p| p.blocked);
+        // Deadlock sentinel: every *active* worker blocked across several
+        // evals (departed workers are never blocked).
+        let mut any_active = false;
+        let mut all_blocked = true;
+        for (p, &a) in self.progress.iter().zip(&self.cluster.active) {
+            if a {
+                any_active = true;
+                all_blocked &= p.blocked;
+            }
+        }
+        let all_blocked = any_active && all_blocked;
         if all_blocked {
             self.deadlock_evals += 1;
             if self.deadlock_evals >= 3 {
@@ -519,8 +526,8 @@ impl SimEngine {
                 let view = ClusterView {
                 now: self.now,
                 workers: &self.progress,
-                speeds: &self.speeds,
-                comms: &self.comms,
+                speeds: &self.cluster.speeds,
+                comms: &self.cluster.comms,
                 k_variants: &self.k_variants,
                 last_eval: self.last_eval,
                 initial_loss: self.initial_loss,
@@ -544,6 +551,64 @@ impl SimEngine {
         Ok(())
     }
 
+    /// Fire the i-th timeline event: apply it to the live cluster state,
+    /// translate the delta into engine bookkeeping, and notify the policy
+    /// (skipped entirely for no-op events so they leave runs
+    /// bit-identical).
+    fn on_cluster_event(&mut self, i: usize) -> Result<()> {
+        let ev = self.spec.timeline.events()[i].clone();
+        let delta = self
+            .cluster
+            .apply_event(&ev)
+            .with_context(|| format!("timeline event {i} at t={:.1}", ev.t()))?;
+        match delta {
+            ClusterDelta::None => return Ok(()),
+            ClusterDelta::Changed => {}
+            ClusterDelta::Joined(w) => {
+                // Join-snapshot protocol: the newcomer pulls the current
+                // consistent global model and starts its counters at the
+                // active minimum so barrier/staleness models treat it as
+                // a peer of the current round, not a round-0 straggler.
+                self.workers.push(WorkerSim {
+                    params: self.global.clone(),
+                    u: self.global.zeros_like(),
+                    in_flight: None,
+                    in_flight_bytes: None,
+                    pending_pull: None,
+                    metrics: WorkerMetrics::default(),
+                    block_start: None,
+                    data: make_source(&self.runtime.manifest, self.spec.seed, w),
+                });
+                let entry = self.cluster.join_progress(w, &self.progress);
+                self.progress.push(entry);
+                self.push_event(self.now, EventKind::Ready(w));
+            }
+            ClusterDelta::Left(w) => {
+                // Close out the departing worker: mark it inactive in the
+                // view the policies read (barriers stop counting it),
+                // stop blocked-time accounting; queued events for it will
+                // be ignored and any in-flight commit dropped at arrival.
+                self.progress[w].active = false;
+                self.progress[w].blocked = false;
+                if let Some(start) = self.workers[w].block_start.take() {
+                    self.workers[w].metrics.blocked_secs += self.now - start;
+                }
+                self.workers[w].pending_pull = None;
+            }
+        }
+        let view = ClusterView {
+            now: self.now,
+            workers: &self.progress,
+            speeds: &self.cluster.speeds,
+            comms: &self.cluster.comms,
+            k_variants: &self.k_variants,
+            last_eval: self.last_eval,
+            initial_loss: self.initial_loss,
+        };
+        self.policy.on_cluster_change(&view);
+        Ok(())
+    }
+
     /// Resume from a checkpoint produced by [`ParamSet::save`] (must match
     /// the model's parameter layout).
     pub fn load_initial_params(&mut self, path: &std::path::Path) -> Result<()> {
@@ -561,6 +626,12 @@ impl SimEngine {
     pub fn run(mut self) -> Result<SimOutcome> {
         let wall_start = std::time::Instant::now();
         let mut in_use: Vec<usize> = self.progress.iter().map(|p| p.batch_size).collect();
+        // Workers joining later train too — compile their variants up front.
+        for ev in self.spec.timeline.events() {
+            if let crate::cluster::ClusterEvent::WorkerJoin { spec, .. } = ev {
+                in_use.push(self.cluster.join_batch(spec));
+            }
+        }
         in_use.sort_unstable();
         in_use.dedup();
         self.runtime.warmup_for(&in_use).context("compiling artifacts")?;
@@ -571,6 +642,10 @@ impl SimEngine {
         self.push_event(self.spec.sync.epoch_secs, EventKind::EpochStart);
         for w in 0..self.workers.len() {
             self.push_event(0.0, EventKind::Ready(w));
+        }
+        for i in 0..self.spec.timeline.len() {
+            let t = self.spec.timeline.events()[i].t();
+            self.push_event(t, EventKind::Cluster(i));
         }
 
         while let Some(Reverse(ev)) = self.queue.pop() {
@@ -592,8 +667,8 @@ impl SimEngine {
                     let view = ClusterView {
                         now: self.now,
                         workers: &self.progress,
-                        speeds: &self.speeds,
-                        comms: &self.comms,
+                        speeds: &self.cluster.speeds,
+                        comms: &self.cluster.comms,
                         k_variants: &self.k_variants,
                         last_eval: self.last_eval,
                         initial_loss: self.initial_loss,
@@ -621,8 +696,8 @@ impl SimEngine {
                     let view = ClusterView {
                         now: self.now,
                         workers: &self.progress,
-                        speeds: &self.speeds,
-                        comms: &self.comms,
+                        speeds: &self.cluster.speeds,
+                        comms: &self.cluster.comms,
                         k_variants: &self.k_variants,
                         last_eval: self.last_eval,
                         initial_loss: self.initial_loss,
@@ -630,6 +705,9 @@ impl SimEngine {
                     self.policy.on_epoch_start(&view);
                     let next = self.now + self.spec.sync.epoch_secs;
                     self.push_event(next, EventKind::EpochStart);
+                }
+                EventKind::Cluster(i) => {
+                    self.on_cluster_event(i)?;
                 }
             }
             self.wake_blocked()?;

@@ -56,6 +56,11 @@ impl SyncPolicy for FixedAdacommPolicy {
         None
     }
 
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        // The sync barrier counts active commits only; τ stays fixed.
+        self.m = view.m();
+    }
+
     fn describe(&self) -> String {
         format!("fixed_adacomm(m={}, tau={})", self.m, self.tau)
     }
@@ -138,6 +143,14 @@ impl SyncPolicy for AdacommPolicy {
         if self.l0.is_none() && loss.is_finite() {
             self.l0 = Some(loss);
         }
+    }
+
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        self.m = view.m();
+        // A membership shift invalidates the current round's "all equal"
+        // bookkeeping; restart the re-tune countdown so the next τ is
+        // derived from post-change rounds only.
+        self.rounds_since_tune = 0;
     }
 
     fn describe(&self) -> String {

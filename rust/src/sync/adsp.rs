@@ -184,6 +184,31 @@ impl SyncPolicy for AdspPolicy {
         self.set_rate(1, view);
     }
 
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        // Adopt the shifted cluster: refresh v_i/O_i, size the per-worker
+        // vectors to the new membership (joiners' timers start now), then
+        // re-run the ΔC target assignment and restart the commit-rate
+        // search — the settled rate was tuned for a cluster that no
+        // longer exists.
+        let m = view.m();
+        self.m = m;
+        self.speeds = view.speeds.to_vec();
+        self.comms = view.comms.to_vec();
+        let rate = self.current_rate();
+        self.delta_c.resize(m, rate as f64);
+        self.deadlines.resize(m, view.now);
+        if self.fixed_delta_c > 0 {
+            return; // pinned rates: joiners inherit the fixed ΔC above
+        }
+        self.search = SearchState::Probing {
+            rate: 1,
+            window_start: view.now,
+            samples: Vec::new(),
+            best: None,
+        };
+        self.set_rate(1, view);
+    }
+
     fn on_eval(&mut self, t: f64, loss: f64) {
         if !loss.is_finite() {
             return;
@@ -391,6 +416,40 @@ mod tests {
         // Flat window has lower reward → settle back to rate 1.
         assert_eq!(p.current_rate(), 1);
         assert!(matches!(p.search, SearchState::Settled { rate: 1 }));
+    }
+
+    #[test]
+    fn cluster_change_restarts_search_and_resizes() {
+        let cl = cluster3();
+        let mut p = AdspPolicy::new(&spec(), &cl);
+        // Settle the search at some rate first.
+        p.search = SearchState::Settled { rate: 5 };
+        p.c_target = 40.0;
+        let mut speeds = cl.speeds();
+        let mut comms = cl.comms();
+        let mut ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
+        for w in &mut ws {
+            w.commits = 8;
+        }
+        // Worker 3 joins, worker 0's speed collapses 4×.
+        speeds[0] /= 4.0;
+        speeds.push(2.0);
+        comms.push(0.1);
+        ws.push(WorkerProgress {
+            batch_size: 128,
+            commits: 8, // engine bootstraps to the active minimum
+            ..Default::default()
+        });
+        p.on_cluster_change(&view(100.0, &ws, &speeds, &comms));
+        // Search restarted from rate 1 and the target re-anchored.
+        assert_eq!(p.current_rate(), 1);
+        assert!(matches!(p.search, SearchState::Probing { rate: 1, .. }));
+        assert!((p.c_target() - 9.0).abs() < 1e-9, "C_target = max cᵢ + 1");
+        // Per-worker state resized; the joiner has a live deadline + ΔC.
+        assert!(p.delta_c(3).is_some());
+        assert_eq!(p.deadlines.len(), 4);
+        // Refreshed speeds feed the momentum diagnostic.
+        assert!((p.speeds[0] - cl.speeds()[0] / 4.0).abs() < 1e-12);
     }
 
     #[test]

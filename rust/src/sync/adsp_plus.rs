@@ -18,17 +18,31 @@ use super::{Action, ClusterView, SyncModelKind, SyncPolicy};
 pub struct AdspPlusPolicy {
     m: usize,
     tau: Vec<u64>,
+    /// τᵢ came from `spec.tau_per_worker` (an offline search result) —
+    /// cluster changes then only extend for joiners instead of
+    /// recomputing everyone from the no-waiting formula.
+    explicit: bool,
+    gamma: f64,
+    /// Fixed commit rate ΔC the no-waiting τ derivation assumes.
+    dc: f64,
 }
 
 impl AdspPlusPolicy {
     pub fn new(spec: &SyncSpec, cluster: &ClusterSpec) -> Self {
         let m = cluster.m();
-        let tau = if spec.tau_per_worker.len() == m {
+        let explicit = spec.tau_per_worker.len() == m;
+        let tau = if explicit {
             spec.tau_per_worker.iter().map(|&t| t.max(1)).collect()
         } else {
             Self::no_waiting_tau(spec, cluster)
         };
-        AdspPlusPolicy { m, tau }
+        AdspPlusPolicy { m, tau, explicit, gamma: spec.gamma, dc: spec.fixed_delta_c.max(1) as f64 }
+    }
+
+    /// τ for one worker from the no-waiting rule, given live v/O.
+    fn no_waiting_tau_one(&self, speed: f64, comm: f64) -> u64 {
+        let budget = (self.gamma / self.dc - comm).max(0.0);
+        ((speed * budget).floor() as u64).max(1)
     }
 
     /// The no-waiting τᵢ: what worker i can train inside one commit period
@@ -74,6 +88,23 @@ impl SyncPolicy for AdspPlusPolicy {
         }
     }
 
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        self.m = view.m();
+        if self.explicit {
+            // Keep the offline-searched τᵢ; joiners get the no-waiting
+            // default derived from their live speed.
+            while self.tau.len() < self.m {
+                let w = self.tau.len();
+                self.tau.push(self.no_waiting_tau_one(view.speeds[w], view.comms[w]));
+            }
+        } else {
+            // Derived schedule: re-derive everyone from the shifted v/O.
+            self.tau = (0..self.m)
+                .map(|w| self.no_waiting_tau_one(view.speeds[w], view.comms[w]))
+                .collect();
+        }
+    }
+
     fn describe(&self) -> String {
         format!("adsp_plus(m={}, tau={:?})", self.m, self.tau)
     }
@@ -105,6 +136,36 @@ mod tests {
         assert_eq!(p.tau(), &[5, 2]);
         let p2 = AdspPlusPolicy::new(&spec, &cluster()).with_scaled_tau(0.01);
         assert_eq!(p2.tau(), &[1, 1], "tau floors at 1");
+    }
+
+    #[test]
+    fn cluster_change_rederives_tau_from_live_speeds() {
+        let spec = SyncSpec::new(SyncModelKind::AdspPlus).with_gamma(60.0);
+        let mut p = AdspPlusPolicy::new(&spec, &cluster());
+        assert_eq!(p.tau(), &[59, 14]);
+        let ws = vec![WorkerProgress { batch_size: 32, ..Default::default() }; 3];
+        // Worker 0 slows 4×, a third worker joins at speed 0.5.
+        let speeds = [0.25, 0.25, 0.5];
+        let comms = [0.2, 0.2, 0.2];
+        let view = ClusterView {
+            now: 100.0,
+            workers: &ws,
+            speeds: &speeds,
+            comms: &comms,
+            k_variants: &[16, 4, 1],
+            last_eval: None,
+            initial_loss: None,
+        };
+        p.on_cluster_change(&view);
+        // Derived schedule recomputes everyone: 0.25*59.8 = 14, 0.5*59.8 = 29.
+        assert_eq!(p.tau(), &[14, 14, 29]);
+
+        // Explicit (offline-searched) taus survive; only the joiner is derived.
+        let mut spec2 = SyncSpec::new(SyncModelKind::AdspPlus).with_gamma(60.0);
+        spec2.tau_per_worker = vec![10, 4];
+        let mut p2 = AdspPlusPolicy::new(&spec2, &cluster());
+        p2.on_cluster_change(&view);
+        assert_eq!(p2.tau(), &[10, 4, 29]);
     }
 
     #[test]

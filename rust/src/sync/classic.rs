@@ -45,6 +45,13 @@ impl SyncPolicy for BspPolicy {
         None
     }
 
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        // The barrier itself is derived from the active-filtered commit
+        // minimum, so it rebuilds implicitly; only the size bookkeeping
+        // needs refreshing.
+        self.m = view.m();
+    }
+
     fn describe(&self) -> String {
         format!("bsp(m={})", self.m)
     }
@@ -84,6 +91,12 @@ impl SyncPolicy for SspPolicy {
         Action::Train { k: 1 }
     }
 
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        // The staleness bound compares against the active minimum, so a
+        // departed straggler stops pinning the cluster automatically.
+        self.m = view.m();
+    }
+
     fn describe(&self) -> String {
         format!("ssp(m={}, s={})", self.m, self.s)
     }
@@ -111,6 +124,10 @@ impl SyncPolicy for TapPolicy {
         } else {
             Action::Train { k: 1 }
         }
+    }
+
+    fn on_cluster_change(&mut self, view: &ClusterView) {
+        self.m = view.m();
     }
 
     fn describe(&self) -> String {
@@ -180,6 +197,29 @@ mod tests {
         ws[0].steps = 3;
         ws[1].steps = 1;
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+    }
+
+    #[test]
+    fn barriers_release_when_the_laggard_leaves() {
+        let speeds = [1.0, 1.0];
+        let comms = [0.1, 0.1];
+        let mut ws = workers(2);
+        // Worker 0 committed round 1; worker 1 never will — it leaves.
+        ws[0].commits = 1;
+        let mut bsp = BspPolicy::new(2);
+        assert_eq!(bsp.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
+        ws[1].active = false;
+        bsp.on_cluster_change(&view(&ws, &speeds, &comms));
+        assert_eq!(bsp.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
+
+        // Same for SSP's staleness bound.
+        let mut ws = workers(2);
+        ws[0].steps = 5;
+        let mut ssp = SspPolicy::new(2, 3);
+        assert_eq!(ssp.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
+        ws[1].active = false;
+        ssp.on_cluster_change(&view(&ws, &speeds, &comms));
+        assert_eq!(ssp.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
     }
 
     #[test]

@@ -101,7 +101,7 @@ impl std::str::FromStr for SyncModelKind {
 }
 
 /// Per-worker progress counters maintained by the engine.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct WorkerProgress {
     /// Local training steps completed.
     pub steps: u64,
@@ -113,6 +113,23 @@ pub struct WorkerProgress {
     pub batch_size: usize,
     /// Whether the engine currently has this worker parked.
     pub blocked: bool,
+    /// Live membership: false once the worker left the cluster (timeline
+    /// churn). Inactive workers are invisible to barriers and staleness
+    /// bounds — the `min_*`/`max_*` helpers below skip them.
+    pub active: bool,
+}
+
+impl Default for WorkerProgress {
+    fn default() -> Self {
+        WorkerProgress {
+            steps: 0,
+            commits: 0,
+            local_since_commit: 0,
+            batch_size: 0,
+            blocked: false,
+            active: true,
+        }
+    }
 }
 
 /// Read-only cluster snapshot handed to policies.
@@ -133,20 +150,27 @@ pub struct ClusterView<'a> {
 }
 
 impl ClusterView<'_> {
+    /// Worker slots ever allocated (departed workers included, so
+    /// per-worker vectors stay index-stable across churn).
     pub fn m(&self) -> usize {
         self.workers.len()
     }
 
+    /// Workers currently in the cluster.
+    pub fn m_active(&self) -> usize {
+        self.workers.iter().filter(|w| w.active).count()
+    }
+
     pub fn min_steps(&self) -> u64 {
-        self.workers.iter().map(|w| w.steps).min().unwrap_or(0)
+        self.workers.iter().filter(|w| w.active).map(|w| w.steps).min().unwrap_or(0)
     }
 
     pub fn min_commits(&self) -> u64 {
-        self.workers.iter().map(|w| w.commits).min().unwrap_or(0)
+        self.workers.iter().filter(|w| w.active).map(|w| w.commits).min().unwrap_or(0)
     }
 
     pub fn max_commits(&self) -> u64 {
-        self.workers.iter().map(|w| w.commits).max().unwrap_or(0)
+        self.workers.iter().filter(|w| w.active).map(|w| w.commits).max().unwrap_or(0)
     }
 
     /// Per-step wall time for worker `w` (batch-size scaled: compute grows
@@ -198,6 +222,15 @@ pub trait SyncPolicy: Send {
 
     /// Epoch boundary (ADSP restarts its commit-rate search here).
     fn on_epoch_start(&mut self, _view: &ClusterView) {}
+
+    /// The cluster shifted under the policy: a worker joined or left, or
+    /// speeds/comm times changed (timeline event). Implementations must
+    /// resize any per-worker state to `view.m()` and may re-derive their
+    /// schedule — ADSP re-runs its ΔC target assignment and restarts the
+    /// commit-rate search; barrier models rebuild their barriers through
+    /// the active-filtered `min_*` helpers. Engines re-poll blocked
+    /// workers right after this callback.
+    fn on_cluster_change(&mut self, _view: &ClusterView) {}
 
     /// A fresh global-model evaluation sample.
     fn on_eval(&mut self, _t: f64, _loss: f64) {}
@@ -308,6 +341,32 @@ mod tests {
         assert_eq!(view.clamp_k(7), 4);
         assert_eq!(view.clamp_k(3), 1);
         assert_eq!(view.clamp_k(1), 1);
+    }
+
+    #[test]
+    fn view_helpers_skip_inactive_workers() {
+        let mut workers = vec![WorkerProgress::default(); 3];
+        workers[0].steps = 5;
+        workers[0].commits = 2;
+        workers[1].steps = 9;
+        workers[1].commits = 4;
+        workers[2].steps = 1; // the laggard…
+        workers[2].commits = 0;
+        workers[2].active = false; // …has left the cluster.
+        let view = ClusterView {
+            now: 0.0,
+            workers: &workers,
+            speeds: &[1.0, 1.0, 1.0],
+            comms: &[0.1, 0.1, 0.1],
+            k_variants: &[1],
+            last_eval: None,
+            initial_loss: None,
+        };
+        assert_eq!(view.m(), 3);
+        assert_eq!(view.m_active(), 2);
+        assert_eq!(view.min_steps(), 5);
+        assert_eq!(view.min_commits(), 2);
+        assert_eq!(view.max_commits(), 4);
     }
 
     #[test]

@@ -37,6 +37,32 @@ fn fig1_shape_adsp_waits_least_and_wins() {
 }
 
 #[test]
+fn fig14_shape_adsp_adapts_best_to_slowdown() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let table = experiments::run_by_name("fig14", Scale::Bench).unwrap();
+    assert_eq!(table.rows.len(), 9, "3 scenarios x 3 sync models");
+    let sync_idx = table.header.iter().position(|h| h == "sync").unwrap();
+    let deg_idx = table.header.iter().position(|h| h == "degradation").unwrap();
+    let deg = |scenario: &str, sync: &str| -> f64 {
+        table
+            .filter_rows("scenario", scenario)
+            .iter()
+            .find(|r| r[sync_idx] == sync)
+            .unwrap()[deg_idx]
+            .parse()
+            .unwrap()
+    };
+    // Acceptance: under the mid-run slowdown of the fastest worker, ADSP's
+    // convergence-time degradation is strictly smaller than the barrier
+    // baselines'.
+    assert!(deg("slowdown", "adsp") < deg("slowdown", "ssp"));
+    assert!(deg("slowdown", "adsp") < deg("slowdown", "adacomm"));
+}
+
+#[test]
 fn fig3_shape_momentum_decreases_with_rate() {
     if !have_artifacts() {
         eprintln!("SKIP: run `make artifacts`");

@@ -4,6 +4,7 @@
 //!
 //! Requires `make artifacts` (skipped with a message otherwise).
 
+use adsp::cluster::{scenarios, ClusterEvent, ClusterTimeline};
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::coordinator::RealtimeEngine;
 use adsp::data::make_source;
@@ -313,6 +314,91 @@ fn experiment_spec_json_file_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// cluster timelines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_timeline_bit_identical_for_every_sync_model() {
+    // Acceptance pin: the timeline refactor must not perturb the static
+    // path. A run with no timeline, and a run whose timeline contains
+    // only *no-op* events (a speed re-asserted to its current value, an
+    // event past the horizon), must produce bit-identical loss logs and
+    // identical counters for every sync model.
+    require_artifacts!("mlp_quick");
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let base = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        let mut noop = spec.clone();
+        noop.timeline = ClusterTimeline::new(vec![
+            ClusterEvent::SpeedChange {
+                t: 30.0,
+                worker: 0,
+                speed: spec.cluster.workers[0].speed,
+            },
+            ClusterEvent::CommChange { t: 1e9, worker: 1, comm_secs: 99.0 },
+        ]);
+        let same = SimEngine::new(noop).unwrap().run().unwrap();
+        assert_eq!(base.total_steps, same.total_steps, "{kind}: steps diverged");
+        assert_eq!(base.total_commits, same.total_commits, "{kind}: commits diverged");
+        assert_eq!(
+            base.loss_log.samples.len(),
+            same.loss_log.samples.len(),
+            "{kind}: eval count diverged"
+        );
+        for (a, b) in base.loss_log.samples.iter().zip(&same.loss_log.samples) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{kind}: loss log diverged at t={}",
+                a.t
+            );
+        }
+    }
+}
+
+#[test]
+fn every_sync_model_survives_churn_timeline() {
+    require_artifacts!("mlp_quick");
+    for kind in SyncModelKind::ALL {
+        let mut spec = tiny_spec("mlp_quick", kind);
+        spec.timeline = scenarios::churn(&spec.cluster, 30.0, 60.0, 1);
+        let out = SimEngine::new(spec).unwrap().run().unwrap();
+        assert!(!out.deadlocked, "{kind} deadlocked under churn");
+        assert!(out.total_steps > 0, "{kind} trained no steps");
+        assert!(out.final_loss.is_finite(), "{kind} diverged");
+        // One leaver + one joiner: the metrics vector grew by one slot.
+        assert_eq!(out.workers.len(), 4, "{kind}: joiner missing from metrics");
+    }
+}
+
+#[test]
+fn joined_worker_trains_from_snapshot() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Tap);
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::WorkerJoin {
+        t: 40.0,
+        spec: WorkerSpec::new(2.0, 0.2),
+    }]);
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    assert_eq!(out.workers.len(), 4);
+    let joined = &out.workers[3];
+    assert!(joined.steps > 0, "joiner never trained");
+    assert!(joined.commits > 0, "joiner never committed");
+    // It only lived for part of the run.
+    assert!(joined.steps < out.workers[0].steps, "joiner outran a founder");
+}
+
+#[test]
+fn mid_run_slowdown_shifts_load_not_correctness() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.timeline = scenarios::slowdown(&spec.cluster, 30.0, 4.0);
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    assert!(!out.deadlocked);
+    assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training regressed");
+}
+
+// ---------------------------------------------------------------------------
 // real-time engine
 // ---------------------------------------------------------------------------
 
@@ -345,6 +431,29 @@ fn realtime_bsp_barrier_works() {
     let min = *commits.iter().min().unwrap();
     let max = *commits.iter().max().unwrap();
     assert!(max - min <= 2, "BSP commits should be near-lockstep: {commits:?}");
+}
+
+#[test]
+fn realtime_engine_applies_timeline_churn() {
+    // Wall-clock timeline: one worker's speed collapses, another leaves,
+    // and a replacement joins mid-run from a PS snapshot. The run must
+    // complete with the joiner having trained.
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 150.0;
+    spec.max_total_steps = 2000;
+    spec.eval_interval_secs = 10.0;
+    spec.timeline = ClusterTimeline::new(vec![
+        ClusterEvent::SpeedChange { t: 30.0, worker: 0, speed: 0.5 },
+        ClusterEvent::WorkerLeave { t: 50.0, worker: 1 },
+        ClusterEvent::WorkerJoin { t: 80.0, spec: WorkerSpec::new(2.0, 0.2) },
+    ]);
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert_eq!(out.workers.len(), 4, "joiner missing from metrics");
+    assert!(out.workers[3].steps > 0, "joiner never trained");
+    assert!(out.final_loss.is_finite());
+    assert!(out.wall_secs < 30.0, "realtime churn run took too long: {}", out.wall_secs);
 }
 
 // ---------------------------------------------------------------------------

@@ -42,6 +42,12 @@ struct MockEngine {
     commit_trace: Vec<(usize, u64, u64)>,
     max_staleness_seen: u64,
     blocked_ever: bool,
+    /// When set, at this time the current laggard leaves and a fresh
+    /// worker joins (bootstrapped to the active minimum), mirroring the
+    /// engines' timeline-churn handling.
+    churn_at: Option<f64>,
+    join_speed: f64,
+    joined_at_steps: Option<u64>,
 }
 
 const EV_READY: u8 = 0;
@@ -71,6 +77,9 @@ impl MockEngine {
             commit_trace: Vec::new(),
             max_staleness_seen: 0,
             blocked_ever: false,
+            churn_at: None,
+            join_speed: 1.0,
+            joined_at_steps: None,
         }
     }
 
@@ -93,6 +102,9 @@ impl MockEngine {
     }
 
     fn drive(&mut self, w: usize) {
+        if !self.progress[w].active {
+            return; // stale event for a departed worker
+        }
         let action = {
             let view = ClusterView {
                 now: self.now,
@@ -133,6 +145,44 @@ impl MockEngine {
         }
     }
 
+    /// Retire the current laggard and join a replacement at the active
+    /// minimum — the mock analogue of the engines' churn handling.
+    fn do_churn(&mut self) {
+        let laggard = (0..self.progress.len())
+            .filter(|&i| self.progress[i].active)
+            .min_by_key(|&i| self.progress[i].steps)
+            .expect("active worker");
+        if self.progress.iter().filter(|p| p.active).count() > 1 {
+            self.progress[laggard].active = false;
+            self.progress[laggard].blocked = false;
+        }
+        let active_min = |f: fn(&WorkerProgress) -> u64| {
+            self.progress.iter().filter(|p| p.active).map(f).min().unwrap_or(0)
+        };
+        let (min_steps, min_commits) = (active_min(|p| p.steps), active_min(|p| p.commits));
+        let j = self.progress.len();
+        self.progress.push(WorkerProgress {
+            steps: min_steps,
+            commits: min_commits,
+            batch_size: 32,
+            ..Default::default()
+        });
+        self.joined_at_steps = Some(min_steps);
+        self.speeds.push(self.join_speed);
+        self.comms.push(0.2);
+        let view = ClusterView {
+            now: self.now,
+            workers: &self.progress,
+            speeds: &self.speeds,
+            comms: &self.comms,
+            k_variants: &K_VARIANTS,
+            last_eval: None,
+            initial_loss: Some(2.0),
+        };
+        self.policy.on_cluster_change(&view);
+        self.push(self.now, j, EV_READY);
+    }
+
     /// Run until `horizon`; returns false on policy deadlock.
     fn run(&mut self, horizon: f64, mut on_commit: impl FnMut(&Self, usize)) -> bool {
         for w in 0..self.progress.len() {
@@ -142,6 +192,12 @@ impl MockEngine {
             self.now = tk as f64 / 1e6;
             if self.now > horizon {
                 return true;
+            }
+            if let Some(tc) = self.churn_at {
+                if self.now >= tc {
+                    self.churn_at = None;
+                    self.do_churn();
+                }
             }
             while self.next_eval <= self.now {
                 // Synthetic 1/t loss curve.
@@ -164,6 +220,7 @@ impl MockEngine {
             }
             match ev {
                 EV_READY => self.drive(w),
+                EV_ARRIVE if !self.progress[w].active => {} // commit lost with the leaver
                 EV_ARRIVE => {
                     self.progress[w].commits += 1;
                     let view = ClusterView {
@@ -202,7 +259,16 @@ impl MockEngine {
                     self.push(self.now, i, EV_READY);
                 }
             }
-            if self.queue.is_empty() && self.progress.iter().all(|p| p.blocked) {
+            let active_all_blocked = {
+                let mut any = false;
+                let mut all = true;
+                for p in self.progress.iter().filter(|p| p.active) {
+                    any = true;
+                    all &= p.blocked;
+                }
+                any && all
+            };
+            if self.queue.is_empty() && active_all_blocked {
                 return false; // deadlock
             }
         }
@@ -591,6 +657,173 @@ fn prop_single_shard_apply_matches_parameter_server_exactly() {
             serial.global(),
             &format!("case {case} mu={}", cp.mu),
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic cluster timelines (cluster subsystem)
+// ---------------------------------------------------------------------------
+
+use adsp::cluster::{scenarios, ClusterEvent, ClusterState, ClusterTimeline};
+use adsp::config::ExperimentSpec;
+
+#[test]
+fn prop_cluster_events_preserve_invariants() {
+    // (a) Whatever event stream hits the live state — valid or not (bad
+    // targets are rejected with an error) — speeds stay positive, the
+    // membership never empties, and the per-worker vectors stay aligned.
+    let mut rng = Rng::new(0xD17A);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let cluster = random_cluster(&mut r);
+        let mut state =
+            ClusterState::new(&cluster, SyncModelKind::Adsp, 32, &[16, 32, 64]);
+        let mut t = 0.0;
+        for _ in 0..30 {
+            t += r.next_f64() * 10.0;
+            let ev = match r.below(4) {
+                0 => ClusterEvent::SpeedChange {
+                    t,
+                    worker: r.below(state.m()),
+                    speed: 0.1 + 3.0 * r.next_f64(),
+                },
+                1 => ClusterEvent::CommChange {
+                    t,
+                    worker: r.below(state.m()),
+                    comm_secs: r.next_f64(),
+                },
+                2 => ClusterEvent::WorkerJoin {
+                    t,
+                    spec: WorkerSpec::new(0.1 + 2.0 * r.next_f64(), 0.1 + 0.3 * r.next_f64()),
+                },
+                _ => ClusterEvent::WorkerLeave { t, worker: r.below(state.m()) },
+            };
+            let _ = state.apply_event(&ev); // invalid targets must error, not corrupt
+            assert!(state.active_count() >= 1, "case {case}: membership emptied");
+            assert!(
+                state.speeds.iter().all(|&v| v > 0.0 && v.is_finite()),
+                "case {case}: non-positive speed crept in"
+            );
+            assert!(state.comms.iter().all(|&o| o >= 0.0), "case {case}");
+            let m = state.m();
+            assert_eq!(state.comms.len(), m, "case {case}");
+            assert_eq!(state.active.len(), m, "case {case}");
+            assert_eq!(state.batch_sizes.len(), m, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_timeline_json_roundtrips_through_spec() {
+    // (c) Random *valid* timelines survive the ExperimentSpec JSON cycle
+    // exactly (event order, kinds, and float payloads).
+    let mut rng = Rng::new(0x71AE);
+    for case in 0..150u64 {
+        let mut r = rng.split(case);
+        let cluster = random_cluster(&mut r);
+        let mut active = vec![true; cluster.m()];
+        let mut t = 0.0;
+        let mut events = Vec::new();
+        for _ in 0..r.below(12) {
+            t += 0.5 + r.next_f64() * 20.0;
+            let alive: Vec<usize> =
+                (0..active.len()).filter(|&w| active[w]).collect();
+            match r.below(4) {
+                0 => events.push(ClusterEvent::SpeedChange {
+                    t,
+                    worker: alive[r.below(alive.len())],
+                    speed: 0.1 + 3.0 * r.next_f64(),
+                }),
+                1 => events.push(ClusterEvent::CommChange {
+                    t,
+                    worker: alive[r.below(alive.len())],
+                    comm_secs: r.next_f64(),
+                }),
+                2 => {
+                    events.push(ClusterEvent::WorkerJoin {
+                        t,
+                        spec: WorkerSpec::new(0.2 + r.next_f64(), 0.1),
+                    });
+                    active.push(true);
+                }
+                _ => {
+                    if alive.len() > 1 {
+                        let w = alive[r.below(alive.len())];
+                        events.push(ClusterEvent::WorkerLeave { t, worker: w });
+                        active[w] = false;
+                    }
+                }
+            }
+        }
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            cluster,
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.timeline = ClusterTimeline::new(events);
+        spec.validate().unwrap_or_else(|e| panic!("case {case}: generated invalid: {e}"));
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back.timeline, spec.timeline, "case {case}");
+    }
+}
+
+#[test]
+fn prop_policies_survive_churn() {
+    // Mid-run leave + join must not deadlock any policy: barriers rebuild
+    // over the active membership, the joiner (bootstrapped to the active
+    // minimum) participates in rounds, and progress continues.
+    let mut rng = Rng::new(0xC4A2);
+    let kinds = [
+        SyncModelKind::Bsp,
+        SyncModelKind::Ssp,
+        SyncModelKind::FixedAdacomm,
+        SyncModelKind::Adacomm,
+        SyncModelKind::Adsp,
+        SyncModelKind::AdspPlus,
+    ];
+    for kind in kinds {
+        for case in 0..40 {
+            let mut case_rng = rng.split(case as u64);
+            let cluster = random_cluster(&mut case_rng);
+            let sync = random_sync(&mut case_rng, kind);
+            let mut eng = MockEngine::new(kind, &cluster, &sync);
+            eng.churn_at = Some(30.0 + 150.0 * case_rng.next_f64());
+            eng.join_speed = 0.3 + 3.0 * case_rng.next_f64();
+            let ok = eng.run(400.0, |_, _| {});
+            assert!(ok, "case {case}: {kind} deadlocked after churn");
+            assert!(eng.churn_at.is_none(), "case {case}: churn never fired");
+            // The joiner really trained past its bootstrap point.
+            let boot = eng.joined_at_steps.expect("join recorded");
+            let joined = eng.progress.last().unwrap();
+            assert!(joined.active);
+            assert!(
+                joined.steps > boot,
+                "case {case}: {kind} joiner never trained ({} <= {boot})",
+                joined.steps
+            );
+            // Active workers kept committing.
+            assert!(
+                eng.progress.iter().filter(|p| p.active).any(|p| p.commits > 0),
+                "case {case}: {kind} cluster stopped committing"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_presets_validate_at_any_size() {
+    let mut rng = Rng::new(0x5CE2);
+    for case in 0..100u64 {
+        let mut r = rng.split(case);
+        let cluster = random_cluster(&mut r);
+        let horizon = 100.0 + 900.0 * r.next_f64();
+        for name in scenarios::SCENARIO_NAMES {
+            let tl = scenarios::preset(name, &cluster, horizon)
+                .unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            tl.validate(cluster.m())
+                .unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+        }
     }
 }
 

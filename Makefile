@@ -1,0 +1,17 @@
+# Build entry points referenced throughout the docs and test skip hints.
+#
+# `make artifacts` needs the layer-2 Python toolchain (jax); everything
+# rust-side runs without it (artifact-dependent tests/benches skip).
+
+ARTIFACTS ?= artifacts
+
+.PHONY: artifacts tier1 docs
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(ARTIFACTS)
+
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps && cargo test --doc

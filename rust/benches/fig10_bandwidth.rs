@@ -27,6 +27,17 @@ fn main() {
     // Paper shape: per-step committers use the most bandwidth.
     assert!(get("bsp") >= get("fixed_adacomm"), "BSP should out-consume Fixed ADACOMM");
 
+    // Series (c): starving the per-worker links (LinkModel path) must not
+    // speed convergence up — transfer time now grows with payload bytes.
+    let conv_idx = table.header.iter().position(|h| h == "convergence_time_s").unwrap();
+    let conv = |series: &str| -> f64 {
+        table.filter_rows("series", series).first().unwrap()[conv_idx].parse().unwrap()
+    };
+    assert!(
+        conv("c_link_500kBps") >= conv("c_link_unbounded") - 1e-9,
+        "starved links should not converge faster"
+    );
+
 
     // Ablation unit: PS apply native vs XLA artifact.
     let rt = adsp::runtime::ModelRuntime::load_by_name("mlp_quick").unwrap();

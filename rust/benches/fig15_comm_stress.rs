@@ -1,0 +1,94 @@
+//! Bench harness for fig15 (reproduction extension): regenerates the
+//! communication-stress series at bench scale (see
+//! `adsp::experiments::fig15` docs for the blackout severities), asserts
+//! the headline shape — ADSP's convergence-time degradation under PS-link
+//! blackouts is the smallest of the swept models — and times the network
+//! hot paths. Full-size: `adsp experiment fig15 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::cluster::{scenarios, ClusterState};
+use adsp::config::profiles::ec2_cluster;
+use adsp::experiments::fig15::SEVERITIES;
+use adsp::experiments::{self, Scale};
+use adsp::network::{IngressDiscipline, IngressQueue, LinkModel};
+use adsp::sync::SyncModelKind;
+use adsp::util::{BenchHarness, Rng};
+
+fn main() {
+    // Network hot paths first — artifact-free, so CI exercises the link /
+    // contention / blackout machinery even when `make artifacts` never ran.
+    let h = BenchHarness::new("fig15").with_iters(3, 50);
+    h.run("link_transfer_1k_commits", || {
+        let link = LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.02, jitter: 0.1 };
+        let mut rng = Rng::new(42);
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            acc += link.transfer_secs_jittered(1000 + i * 37, &mut rng);
+        }
+        acc
+    });
+    h.run("ingress_fairshare_1k_commits", || {
+        let mut q = IngressQueue::new(8e6, IngressDiscipline::FairShare);
+        let mut t = 0.0;
+        let mut last = 0.0;
+        for i in 0..1000u64 {
+            t += 0.01;
+            last = q.admit(t, 50_000 + i * 13);
+        }
+        last
+    });
+    h.run("blackout_preset_build_apply", || {
+        let cluster = ec2_cluster(18, 1.0, 0.3);
+        let tl = scenarios::preset("blackout", &cluster, 600.0).expect("preset");
+        tl.validate(cluster.m()).expect("validate");
+        let mut state = ClusterState::new(&cluster, SyncModelKind::Adsp, 128, &[32, 64, 128]);
+        for ev in tl.events() {
+            state.apply_event(ev).expect("apply");
+        }
+        state.blackout_until.iter().filter(|&&t| t > 0.0).count()
+    });
+
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig15", Scale::Bench).expect("fig15 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig15 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    // Every severity × sync-model combination completed.
+    assert_eq!(table.rows.len(), 9, "3 blackout severities x 3 sync models");
+
+    let deg_idx = table.header.iter().position(|h| h == "degradation").unwrap();
+    let sync_idx = table.header.iter().position(|h| h == "sync").unwrap();
+    let mean_degradation = |sync: &str| -> f64 {
+        let rows: Vec<f64> = table
+            .rows
+            .iter()
+            .filter(|r| r[sync_idx] == sync)
+            .map(|r| r[deg_idx].parse().unwrap())
+            .collect();
+        assert_eq!(rows.len(), SEVERITIES.len(), "missing rows for {sync}");
+        rows.iter().sum::<f64>() / rows.len() as f64
+    };
+
+    // Acceptance shape: across the blackout severities, ADSP's mean
+    // convergence-time degradation is the smallest — its unaffected
+    // workers keep committing, its affected workers keep training to
+    // their own deadlines, and it re-anchors when the blackout lifts;
+    // the barrier models stall on the silent workers.
+    let adsp = mean_degradation("adsp");
+    let ssp = mean_degradation("ssp");
+    let adacomm = mean_degradation("adacomm");
+    assert!(
+        adsp < ssp,
+        "ADSP should degrade less than SSP under blackouts: {adsp:.4} vs {ssp:.4}"
+    );
+    assert!(
+        adsp < adacomm,
+        "ADSP should degrade less than ADACOMM under blackouts: {adsp:.4} vs {adacomm:.4}"
+    );
+}

@@ -21,16 +21,28 @@ pub enum ClusterEvent {
     /// Worker `worker` leaves at `t`. Its in-flight commit (if any) is
     /// lost; barriers stop counting it.
     WorkerLeave { t: f64, worker: usize },
+    /// Worker `worker`'s link bandwidth becomes `bandwidth_bytes_per_sec`
+    /// at `t` (`0.0` = unbounded) — a cell handover, a congested uplink
+    /// recovering, a throttled plan kicking in.
+    BandwidthChange { t: f64, worker: usize, bandwidth_bytes_per_sec: f64 },
+    /// The listed `workers` (empty = every worker active at `start`) lose
+    /// connectivity for `duration` seconds: commits issued during the
+    /// window defer until the blackout lifts, at which point policies are
+    /// re-notified through `on_cluster_change` (ADSP re-anchors its
+    /// commit target).
+    CommBlackout { start: f64, duration: f64, workers: Vec<usize> },
 }
 
 impl ClusterEvent {
-    /// Fire time in virtual seconds.
+    /// Fire time in virtual seconds (a blackout fires at its `start`).
     pub fn t(&self) -> f64 {
         match self {
             ClusterEvent::SpeedChange { t, .. }
             | ClusterEvent::CommChange { t, .. }
             | ClusterEvent::WorkerJoin { t, .. }
-            | ClusterEvent::WorkerLeave { t, .. } => *t,
+            | ClusterEvent::WorkerLeave { t, .. }
+            | ClusterEvent::BandwidthChange { t, .. } => *t,
+            ClusterEvent::CommBlackout { start, .. } => *start,
         }
     }
 
@@ -41,9 +53,12 @@ impl ClusterEvent {
             ClusterEvent::CommChange { .. } => "comm_change",
             ClusterEvent::WorkerJoin { .. } => "join",
             ClusterEvent::WorkerLeave { .. } => "leave",
+            ClusterEvent::BandwidthChange { .. } => "bandwidth_change",
+            ClusterEvent::CommBlackout { .. } => "blackout",
         }
     }
 
+    /// JSON object form (one entry of a timeline array).
     pub fn to_json(&self) -> Json {
         match self {
             ClusterEvent::SpeedChange { t, worker, speed } => Json::obj(vec![
@@ -70,9 +85,27 @@ impl ClusterEvent {
                 ("t", Json::num(*t)),
                 ("worker", Json::num(*worker as f64)),
             ]),
+            ClusterEvent::BandwidthChange { t, worker, bandwidth_bytes_per_sec } => {
+                Json::obj(vec![
+                    ("kind", Json::str(self.kind_name())),
+                    ("t", Json::num(*t)),
+                    ("worker", Json::num(*worker as f64)),
+                    ("bandwidth_bytes_per_sec", Json::num(*bandwidth_bytes_per_sec)),
+                ])
+            }
+            ClusterEvent::CommBlackout { start, duration, workers } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*start)),
+                ("duration", Json::num(*duration)),
+                (
+                    "workers",
+                    Json::Arr(workers.iter().map(|&w| Json::num(w as f64)).collect()),
+                ),
+            ]),
         }
     }
 
+    /// Parse one event from its JSON object form.
     pub fn from_json(v: &Json) -> Result<Self> {
         let t = v.req("t")?.as_f64()?;
         let kind = v.req("kind")?.as_str()?;
@@ -96,6 +129,19 @@ impl ClusterEvent {
                 },
             },
             "leave" => ClusterEvent::WorkerLeave { t, worker: v.req("worker")?.as_usize()? },
+            "bandwidth_change" => ClusterEvent::BandwidthChange {
+                t,
+                worker: v.req("worker")?.as_usize()?,
+                bandwidth_bytes_per_sec: v.req("bandwidth_bytes_per_sec")?.as_f64()?,
+            },
+            "blackout" => ClusterEvent::CommBlackout {
+                start: t,
+                duration: v.req("duration")?.as_f64()?,
+                workers: match v.get("workers") {
+                    Some(arr) => arr.usize_vec()?,
+                    None => Vec::new(),
+                },
+            },
             other => bail!("unknown cluster event kind '{other}'"),
         })
     }
@@ -112,6 +158,9 @@ mod tests {
             ClusterEvent::CommChange { t: 90.5, worker: 0, comm_secs: 1.5 },
             ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(1.5, 0.4) },
             ClusterEvent::WorkerLeave { t: 180.0, worker: 1 },
+            ClusterEvent::BandwidthChange { t: 200.0, worker: 2, bandwidth_bytes_per_sec: 5e5 },
+            ClusterEvent::CommBlackout { start: 240.0, duration: 30.0, workers: vec![0, 2] },
+            ClusterEvent::CommBlackout { start: 300.0, duration: 10.0, workers: vec![] },
         ];
         for ev in events {
             let back = ClusterEvent::from_json(&Json::parse(&ev.to_json().dump()).unwrap())

@@ -6,26 +6,43 @@
 //! construction (a static `Vec<f64>` of speeds); this subsystem makes the
 //! cluster a first-class, time-varying object shared by both engines:
 //!
-//! * [`event::ClusterEvent`] — one scripted change: a speed or comm-time
-//!   shift, a worker joining, or a worker leaving.
+//! * [`event::ClusterEvent`] — one scripted change: a speed, comm-time
+//!   or link-bandwidth shift, a communication blackout, a worker joining,
+//!   or a worker leaving.
 //! * [`timeline::ClusterTimeline`] — a time-sorted script of events with
 //!   JSON round-trip (it rides inside `ExperimentSpec`) and validation
 //!   against the evolving membership.
 //! * [`state::ClusterState`] — the live membership/speeds/comms/batch
-//!   sizes. Both engines own one; it is the *single* source of truth for
+//!   sizes plus the per-worker [`crate::network::LinkModel`]s and blackout
+//!   windows. Both engines own one; it is the *single* source of truth for
 //!   the per-worker batch assignment (BatchTune included), which the seed
 //!   computed independently in each engine.
-//! * [`scenarios`] — the named adaptability presets swept by the
-//!   `fig14_adaptability` experiment and the CLI's `--scenario` flag.
+//! * [`scenarios`] — the named presets swept by the `fig14_adaptability`
+//!   and `fig15_comm_stress` experiments and the CLI's `--scenario` flag.
 //!
 //! Event semantics (see DESIGN.md §Timeline for the per-policy reaction
 //! table): events fire in virtual time in the simulator and on the scaled
 //! wall clock in the real-time engine. A joining worker is bootstrapped
 //! from a consistent PS snapshot with its progress counters set to the
 //! active minimum (so barriers stay sane); a leaving worker's in-flight
-//! commit is lost. Policies are notified through
-//! `SyncPolicy::on_cluster_change`. An empty timeline is bit-identical to
-//! the seed's static path (pinned by tests).
+//! commit is lost; a blacked-out worker's commits defer until the
+//! blackout lifts. Policies are notified through
+//! `SyncPolicy::on_cluster_change` — both when an event fires and when a
+//! blackout lifts. An empty timeline is bit-identical to the seed's
+//! static path (pinned by tests).
+//!
+//! ```
+//! use adsp::cluster::{ClusterEvent, ClusterTimeline};
+//!
+//! // Script a mid-run degradation and a 30-second blackout, then check
+//! // it against a 2-worker cluster.
+//! let timeline = ClusterTimeline::new(vec![
+//!     ClusterEvent::SpeedChange { t: 60.0, worker: 0, speed: 0.25 },
+//!     ClusterEvent::CommBlackout { start: 120.0, duration: 30.0, workers: vec![1] },
+//! ]);
+//! assert_eq!(timeline.len(), 2);
+//! timeline.validate(2).expect("script is consistent");
+//! ```
 
 pub mod event;
 pub mod scenarios;

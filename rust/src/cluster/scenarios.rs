@@ -12,7 +12,11 @@ use crate::config::{ClusterSpec, WorkerSpec};
 use super::event::ClusterEvent;
 use super::timeline::ClusterTimeline;
 
-pub const SCENARIO_NAMES: [&str; 3] = ["slowdown", "straggler_burst", "churn"];
+/// Every preset [`preset`] accepts. The first three are the adaptability
+/// scenarios swept by `fig14_adaptability`; `blackout` is the
+/// communication-stress scenario swept (at several severities) by
+/// `fig15_comm_stress`.
+pub const SCENARIO_NAMES: [&str; 4] = ["slowdown", "straggler_burst", "churn", "blackout"];
 
 /// Build a preset by name. `horizon` is the run's `max_virtual_secs`;
 /// events land at 20% / 50% of it so every scenario has a settled
@@ -24,6 +28,7 @@ pub fn preset(name: &str, cluster: &ClusterSpec, horizon: f64) -> Result<Cluster
         "slowdown" => Ok(slowdown(cluster, t0, 4.0)),
         "straggler_burst" => Ok(straggler_burst(cluster, t0, t1, 8.0)),
         "churn" => Ok(churn(cluster, t0, t1, 2)),
+        "blackout" => Ok(blackout(cluster, t0, t1 - t0, 0.5)),
         other => bail!("unknown scenario '{other}' (try {SCENARIO_NAMES:?})"),
     }
 }
@@ -88,6 +93,26 @@ pub fn churn(cluster: &ClusterSpec, t0: f64, t1: f64, k: usize) -> ClusterTimeli
     ClusterTimeline::new(events)
 }
 
+/// A communication blackout: the slowest `frac` of the cluster (at least
+/// one worker; `frac >= 1` = everyone) loses its PS link at `t` for
+/// `duration` seconds. Barrier models stall on the silent workers'
+/// commit counters; ADSP's unaffected workers keep committing and the
+/// affected ones keep training locally until their own commit deadline,
+/// then re-anchor when the blackout lifts.
+pub fn blackout(cluster: &ClusterSpec, t: f64, duration: f64, frac: f64) -> ClusterTimeline {
+    let m = cluster.m();
+    let hit = ((m as f64 * frac).ceil() as usize).clamp(1, m);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| cluster.workers[a].speed.total_cmp(&cluster.workers[b].speed));
+    order.truncate(hit);
+    order.sort_unstable();
+    ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+        start: t,
+        duration: duration.max(f64::MIN_POSITIVE),
+        workers: if hit == m { Vec::new() } else { order },
+    }])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +169,27 @@ mod tests {
         assert_eq!(tl.len(), 4);
         tl.validate(c.m()).unwrap();
         assert_eq!(tl.join_count(), 2);
+    }
+
+    #[test]
+    fn blackout_hits_the_slowest_fraction() {
+        let c = cluster();
+        // Half of 4 workers = the two slowest (indices 3 and 0).
+        let tl = blackout(&c, 100.0, 50.0, 0.5);
+        match tl.events() {
+            [ClusterEvent::CommBlackout { start, duration, workers }] => {
+                assert_eq!(*start, 100.0);
+                assert_eq!(*duration, 50.0);
+                assert_eq!(workers, &vec![0, 3]);
+            }
+            other => panic!("unexpected events {other:?}"),
+        }
+        tl.validate(c.m()).unwrap();
+        // frac >= 1 blacks out everyone (encoded as the empty list).
+        let all = blackout(&c, 100.0, 50.0, 1.0);
+        assert!(matches!(
+            all.events(),
+            [ClusterEvent::CommBlackout { workers, .. }] if workers.is_empty()
+        ));
     }
 }

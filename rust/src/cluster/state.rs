@@ -10,25 +10,36 @@
 use anyhow::{bail, Result};
 
 use crate::config::{ClusterSpec, WorkerSpec};
+use crate::network::{LinkModel, NetworkSpec};
 use crate::sync::{assign_batchtune_sizes, SyncModelKind, WorkerProgress};
 
 use super::event::ClusterEvent;
 
 /// What applying one event did, from the engine's point of view.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ClusterDelta {
     /// The event was a no-op (e.g. a speed re-asserted to its current
     /// value). Engines skip policy callbacks so no-op events leave runs
     /// bit-identical.
     None,
-    /// Speeds or comm times changed for an existing worker.
+    /// Speeds, comm times or link parameters changed for an existing
+    /// worker.
     Changed,
     /// A worker joined; its index is returned (always appended).
     Joined(usize),
     /// The worker at this index left the cluster.
     Left(usize),
+    /// A communication blackout started; it lifts at `until` (the engine
+    /// schedules a policy re-notification there so e.g. ADSP can
+    /// re-anchor its commit target when connectivity returns).
+    Blackout {
+        /// Virtual time the blackout lifts.
+        until: f64,
+    },
 }
 
+/// The live cluster: membership, speeds, comm times, batch sizes and
+/// network links, mutated only by timeline events.
 #[derive(Clone, Debug)]
 pub struct ClusterState {
     /// v_i — steps/s at the reference batch size (all workers ever seen;
@@ -40,6 +51,14 @@ pub struct ClusterState {
     pub batch_sizes: Vec<usize>,
     /// Live membership. Invariant: at least one worker is active.
     pub active: Vec<bool>,
+    /// Per-worker communication links (see [`crate::network`]); the
+    /// degenerate default adds zero transfer time.
+    pub links: Vec<LinkModel>,
+    /// Virtual time each worker's current blackout lifts (`0.0` = none;
+    /// commits issued before this defer their departure to it).
+    pub blackout_until: Vec<f64>,
+    /// The link handed to workers joining mid-run.
+    default_link: LinkModel,
     b_default: usize,
     available: Vec<usize>,
 }
@@ -74,14 +93,34 @@ impl ClusterState {
         } else {
             vec![b_default; cluster.m()]
         };
+        let m = cluster.m();
         ClusterState {
             speeds,
             comms: cluster.comms(),
             batch_sizes,
-            active: vec![true; cluster.m()],
+            active: vec![true; m],
+            links: vec![LinkModel::unbounded(); m],
+            blackout_until: vec![0.0; m],
+            default_link: LinkModel::unbounded(),
             b_default,
             available: available.to_vec(),
         }
+    }
+
+    /// Install the experiment's communication model: per-worker links
+    /// (falling back to the spec's default link) and the default link
+    /// future joiners inherit. The degenerate [`NetworkSpec`] leaves the
+    /// state exactly as [`ClusterState::new`] built it.
+    pub fn with_network(mut self, network: &NetworkSpec) -> Self {
+        self.links = (0..self.m()).map(|w| network.link_for(w).clone()).collect();
+        self.default_link = network.default_link.clone();
+        self
+    }
+
+    /// The virtual time worker `w`'s commit may actually depart: `now`,
+    /// unless a blackout is in force, in which case its lift time.
+    pub fn departure_time(&self, w: usize, now: f64) -> f64 {
+        now.max(self.blackout_until[w])
     }
 
     /// Total worker slots ever allocated (departed workers included).
@@ -89,6 +128,7 @@ impl ClusterState {
         self.speeds.len()
     }
 
+    /// Workers currently in the cluster.
     pub fn active_count(&self) -> usize {
         self.active.iter().filter(|&&a| a).count()
     }
@@ -194,6 +234,8 @@ impl ClusterState {
                 self.comms.push(spec.comm_secs.max(0.0));
                 self.batch_sizes.push(batch);
                 self.active.push(true);
+                self.links.push(self.default_link.clone());
+                self.blackout_until.push(0.0);
                 Ok(ClusterDelta::Joined(self.m() - 1))
             }
             ClusterEvent::WorkerLeave { worker, .. } => {
@@ -203,6 +245,44 @@ impl ClusterState {
                 }
                 self.active[w] = false;
                 Ok(ClusterDelta::Left(w))
+            }
+            ClusterEvent::BandwidthChange { worker, bandwidth_bytes_per_sec, .. } => {
+                let w = self.check_worker(*worker)?;
+                if !bandwidth_bytes_per_sec.is_finite() || *bandwidth_bytes_per_sec < 0.0 {
+                    bail!("bandwidth change to invalid {bandwidth_bytes_per_sec} for worker {w}");
+                }
+                if self.links[w].bandwidth_bytes_per_sec == *bandwidth_bytes_per_sec {
+                    return Ok(ClusterDelta::None);
+                }
+                self.links[w].bandwidth_bytes_per_sec = *bandwidth_bytes_per_sec;
+                Ok(ClusterDelta::Changed)
+            }
+            ClusterEvent::CommBlackout { start, duration, workers } => {
+                if !duration.is_finite() || *duration <= 0.0 {
+                    bail!("blackout duration must be positive, got {duration}");
+                }
+                let until = start + duration;
+                let targets: Vec<usize> = if workers.is_empty() {
+                    (0..self.m()).filter(|&w| self.active[w]).collect()
+                } else {
+                    workers
+                        .iter()
+                        .map(|&w| self.check_worker(w))
+                        .collect::<Result<_>>()?
+                };
+                let mut extended = false;
+                for w in targets {
+                    if until > self.blackout_until[w] {
+                        self.blackout_until[w] = until;
+                        extended = true;
+                    }
+                }
+                // A blackout wholly inside an already-scheduled one
+                // changes nothing observable.
+                if !extended {
+                    return Ok(ClusterDelta::None);
+                }
+                Ok(ClusterDelta::Blackout { until })
             }
         }
     }
@@ -322,6 +402,63 @@ mod tests {
         assert_eq!(entry.commits, 5);
         assert_eq!(entry.batch_size, 32);
         assert!(entry.active);
+    }
+
+    #[test]
+    fn bandwidth_change_retunes_the_link() {
+        use crate::network::{LinkModel, NetworkSpec};
+        let mut net = NetworkSpec::default();
+        net.default_link = LinkModel::with_bandwidth(1e6);
+        let mut s =
+            ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]).with_network(&net);
+        let ev = ClusterEvent::BandwidthChange {
+            t: 1.0,
+            worker: 1,
+            bandwidth_bytes_per_sec: 5e5,
+        };
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::Changed);
+        assert_eq!(s.links[1].bandwidth_bytes_per_sec, 5e5);
+        // Re-asserting the same rate is a no-op.
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::None);
+        // A joiner inherits the spec's default link.
+        s.apply_event(&ClusterEvent::WorkerJoin { t: 2.0, spec: WorkerSpec::new(1.0, 0.1) })
+            .unwrap();
+        assert_eq!(s.links[3].bandwidth_bytes_per_sec, 1e6);
+        assert_eq!(s.blackout_until[3], 0.0);
+    }
+
+    #[test]
+    fn blackout_extends_and_dedups() {
+        let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
+        let ev = ClusterEvent::CommBlackout { start: 10.0, duration: 20.0, workers: vec![0, 2] };
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::Blackout { until: 30.0 });
+        assert_eq!(s.blackout_until, vec![30.0, 0.0, 30.0]);
+        assert_eq!(s.departure_time(0, 12.0), 30.0);
+        assert_eq!(s.departure_time(1, 12.0), 12.0);
+        assert_eq!(s.departure_time(0, 45.0), 45.0);
+        // A shorter overlapping blackout changes nothing observable.
+        let inner =
+            ClusterEvent::CommBlackout { start: 12.0, duration: 5.0, workers: vec![0] };
+        assert_eq!(s.apply_event(&inner).unwrap(), ClusterDelta::None);
+        // An empty worker list hits every active worker.
+        let all = ClusterEvent::CommBlackout { start: 40.0, duration: 10.0, workers: vec![] };
+        assert_eq!(s.apply_event(&all).unwrap(), ClusterDelta::Blackout { until: 50.0 });
+        assert_eq!(s.blackout_until, vec![50.0, 50.0, 50.0]);
+        // Bad targets and durations are rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::CommBlackout {
+                start: 1.0,
+                duration: -2.0,
+                workers: vec![]
+            })
+            .is_err());
+        assert!(s
+            .apply_event(&ClusterEvent::CommBlackout {
+                start: 1.0,
+                duration: 2.0,
+                workers: vec![7]
+            })
+            .is_err());
     }
 
     #[test]

@@ -16,19 +16,23 @@ pub struct ClusterTimeline {
 }
 
 impl ClusterTimeline {
+    /// Build a timeline, stably sorting the events by fire time.
     pub fn new(mut events: Vec<ClusterEvent>) -> Self {
         events.sort_by(|a, b| a.t().total_cmp(&b.t()));
         ClusterTimeline { events }
     }
 
+    /// The events in fire order.
     pub fn events(&self) -> &[ClusterEvent] {
         &self.events
     }
 
+    /// Number of scripted events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// True for the static cluster (no scripted events).
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -93,15 +97,34 @@ impl ClusterTimeline {
                     }
                     active[*worker] = false;
                 }
+                ClusterEvent::BandwidthChange { worker, bandwidth_bytes_per_sec, .. } => {
+                    check_worker(*worker, &active)?;
+                    if !bandwidth_bytes_per_sec.is_finite() || *bandwidth_bytes_per_sec < 0.0 {
+                        bail!(
+                            "timeline event {i}: bandwidth must be finite and >= 0, \
+                             got {bandwidth_bytes_per_sec}"
+                        );
+                    }
+                }
+                ClusterEvent::CommBlackout { duration, workers, .. } => {
+                    if !duration.is_finite() || *duration <= 0.0 {
+                        bail!("timeline event {i}: blackout duration must be positive, got {duration}");
+                    }
+                    for &w in workers {
+                        check_worker(w, &active)?;
+                    }
+                }
             }
         }
         Ok(())
     }
 
+    /// JSON array form (the `timeline` key of an experiment spec).
     pub fn to_json(&self) -> Json {
         Json::Arr(self.events.iter().map(ClusterEvent::to_json).collect())
     }
 
+    /// Parse from the JSON array form.
     pub fn from_json(v: &Json) -> Result<Self> {
         let events = v
             .as_arr()?
@@ -164,6 +187,26 @@ mod tests {
             ev_speed(2.0, 0, 1.0),
         ]);
         assert!(ghost.validate(3).is_err());
+        // Negative bandwidth.
+        let bw = ClusterTimeline::new(vec![ClusterEvent::BandwidthChange {
+            t: 1.0,
+            worker: 0,
+            bandwidth_bytes_per_sec: -5.0,
+        }]);
+        assert!(bw.validate(2).is_err());
+        // Zero-length blackout / blackout on a missing worker.
+        let zb = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 1.0,
+            duration: 0.0,
+            workers: vec![],
+        }]);
+        assert!(zb.validate(2).is_err());
+        let mb = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 1.0,
+            duration: 5.0,
+            workers: vec![9],
+        }]);
+        assert!(mb.validate(2).is_err());
     }
 
     #[test]

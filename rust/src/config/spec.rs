@@ -7,6 +7,7 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterTimeline;
+use crate::network::NetworkSpec;
 use crate::sync::SyncModelKind;
 use crate::util::Json;
 
@@ -179,6 +180,12 @@ pub struct ExperimentSpec {
     /// wall clock by the real-time engine. Empty = the static cluster
     /// (bit-identical to the pre-timeline behaviour).
     pub timeline: ClusterTimeline,
+    /// Communication model (`network` subsystem): per-worker links whose
+    /// transfer time derives from actual commit payload bytes, plus the
+    /// shared PS-ingress pipe. The default is degenerate (unbounded
+    /// bandwidth, zero latency) and bit-identical to the static-comm
+    /// behaviour.
+    pub network: NetworkSpec,
 }
 
 impl ExperimentSpec {
@@ -206,6 +213,7 @@ impl ExperimentSpec {
             pipeline_depth: 2,
             ps_apply_secs: 0.0,
             timeline: ClusterTimeline::default(),
+            network: NetworkSpec::default(),
         }
     }
 
@@ -291,6 +299,9 @@ impl ExperimentSpec {
         if let Some(t) = v.get("timeline") {
             spec.timeline = ClusterTimeline::from_json(t).context("parsing timeline")?;
         }
+        if let Some(n) = v.get("network") {
+            spec.network = NetworkSpec::from_json(n).context("parsing network")?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -355,6 +366,7 @@ impl ExperimentSpec {
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
             ("ps_apply_secs", Json::num(self.ps_apply_secs)),
             ("timeline", self.timeline.to_json()),
+            ("network", self.network.to_json()),
         ])
     }
 
@@ -394,6 +406,7 @@ impl ExperimentSpec {
             bail!("ps_apply_secs must be non-negative");
         }
         self.timeline.validate(self.cluster.m())?;
+        self.network.validate(self.cluster.m())?;
         Ok(())
     }
 }
@@ -492,6 +505,32 @@ mod tests {
         // A script referencing a worker that never exists is rejected.
         spec.timeline =
             ClusterTimeline::new(vec![ClusterEvent::WorkerLeave { t: 1.0, worker: 9 }]);
+        assert!(spec.validate().is_err());
+        assert!(ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).is_err());
+    }
+
+    #[test]
+    fn network_section_roundtrips_and_validates_through_spec() {
+        use crate::network::{IngressDiscipline, LinkModel};
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.3)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        // Absent section stays degenerate through a round trip.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert!(back.network.is_static());
+        spec.network.default_link =
+            LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.05, jitter: 0.1 };
+        spec.network.links =
+            vec![LinkModel::with_bandwidth(5e5), LinkModel::unbounded()];
+        spec.network.ingress_bytes_per_sec = 8e6;
+        spec.network.ingress_discipline = IngressDiscipline::FairShare;
+        spec.validate().unwrap();
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.network, spec.network);
+        // A per-worker link list of the wrong arity is rejected.
+        spec.network.links.pop();
         assert!(spec.validate().is_err());
         assert!(ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).is_err());
     }

@@ -19,12 +19,20 @@
 //! the target duration with a sleep.
 //!
 //! **Timeline events** (`spec.timeline`, see `crate::cluster`) fire on the
-//! scaled wall clock from the same scheduler loop: speed/comm shifts
-//! mutate the shared [`ClusterState`], which workers re-read every
+//! scaled wall clock from the same scheduler loop: speed/comm/bandwidth
+//! shifts mutate the shared [`ClusterState`], which workers re-read every
 //! iteration (the per-step sleep pad tracks the live speed); a leaving
 //! worker's thread observes its `active` flag drop and exits; a joining
 //! worker's thread is spawned mid-run, skips the start barrier, and
 //! bootstraps from a consistent PS snapshot (the join-snapshot protocol).
+//!
+//! **Network model** (`spec.network`, see `crate::network`): each commit
+//! leg sleeps the scaled link transfer time of its actual wire size on
+//! top of the `O_i/2` propagation pad, and a worker whose link is inside
+//! a `CommBlackout` window holds its push until the blackout lifts (the
+//! scheduler then re-notifies the policy). The PS-ingress contention
+//! model is a simulator-side concept — here real thread scheduling plays
+//! that role.
 //!
 //! `time_scale` compresses virtual seconds into wall seconds (0.02 → a
 //! 60-second check period passes in 1.2 s) so examples finish quickly while
@@ -132,9 +140,11 @@ impl RealtimeEngine {
             .with_context(|| format!("loading artifacts for '{}'", spec.model))?;
         let available = probe.manifest.batch_sizes();
         // Batch assignment lives in ClusterState — the same source of
-        // truth the simulator reads (BatchTune sizing included).
+        // truth the simulator reads (BatchTune sizing and the network's
+        // per-worker links included).
         let cluster_state =
-            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available);
+            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
+                .with_network(&spec.network);
         let batch_sizes = cluster_state.batch_sizes.clone();
         let k_variants = probe.manifest.k_variants(cluster_state.b_default());
         let init = probe.init_params()?;
@@ -209,6 +219,8 @@ impl RealtimeEngine {
             let mut next_epoch = spec.sync.epoch_secs;
             let mut next_eval = 0.0f64;
             let mut next_timeline = 0usize;
+            // Blackout lift times still owed a policy re-notification.
+            let mut pending_lifts: Vec<f64> = Vec::new();
 
             loop {
                 let now_v = start.elapsed().as_secs_f64() / scale;
@@ -237,6 +249,12 @@ impl RealtimeEngine {
                     match delta {
                         ClusterDelta::None => continue,
                         ClusterDelta::Changed => {}
+                        ClusterDelta::Blackout { until } => {
+                            // Workers read `blackout_until` on their own
+                            // commit path; the scheduler only owes the
+                            // policy a nudge when the outage ends.
+                            pending_lifts.push(until);
+                        }
                         ClusterDelta::Left(wl) => {
                             // The thread notices its active flag and exits;
                             // mark its progress entry inactive + unblocked
@@ -271,6 +289,26 @@ impl RealtimeEngine {
                         }
                     }
                     shared.with_view(now_v, |p, v| p.on_cluster_change(v));
+                }
+
+                // Blackout lifts: re-notify the policy once connectivity
+                // is back so it can re-anchor (ADSP restarts its
+                // commit-rate search against the restored links). A lift
+                // overtaken by a longer overlapping outage stays silent —
+                // some worker is still dark and the later lift will fire.
+                let before = pending_lifts.len();
+                pending_lifts.retain(|&t| t > now_v);
+                if pending_lifts.len() != before {
+                    let still_dark = {
+                        let c = shared.cluster.lock().unwrap();
+                        c.blackout_until
+                            .iter()
+                            .zip(&c.active)
+                            .any(|(&until, &active)| active && until > now_v)
+                    };
+                    if !still_dark {
+                        shared.with_view(now_v, |p, v| p.on_cluster_change(v));
+                    }
                 }
 
                 // Scheduler ticks.
@@ -423,10 +461,12 @@ fn worker_loop(
     let mut data = make_source(&rt.manifest, spec.seed, w);
     let b = my_batch;
     let b_ref = spec.batch_size.max(1) as f64;
+    // Link-jitter stream, per worker, independent of the data streams.
+    let mut net_rng = crate::util::Rng::new(spec.seed ^ 0x4E45_5457 ^ ((w as u64) << 32));
 
     while !shared.stop.load(Ordering::Relaxed) {
         // Re-read the live cluster each round: timeline events may have
-        // shifted this worker's speed/comm or retired it.
+        // shifted this worker's speed/comm/link or retired it.
         let (v, o, active) = {
             let c = shared.cluster.lock().unwrap();
             (c.speeds[w], c.comms[w], c.active[w])
@@ -462,13 +502,10 @@ fn worker_loop(
                 metrics[w].compute_secs += step_v * k as f64;
             }
             Action::Commit => {
-                // Emulate the one-way trip, send, await the reply, emulate
-                // the way back.
-                std::thread::sleep(Duration::from_secs_f64(o / 2.0 * scale));
-                let (reply_tx, reply_rx) = mpsc::channel();
+                // Snapshot + sparsify first so the emulated sleeps cover
+                // network time only (mirroring the sim engine's
+                // accounting: 8 bytes per surviving entry on the wire).
                 let mut snapshot = std::mem::replace(&mut u, params.zeros_like());
-                // Top-k sparsification on the wire, mirroring the sim
-                // engine's accounting (8 bytes per surviving entry).
                 let dense_bytes = rt.manifest.bytes_per_commit as u64;
                 let up_bytes =
                     if spec.compress_topk > 0.0 && spec.compress_topk < 1.0 {
@@ -480,6 +517,25 @@ fn worker_loop(
                     let mut progress = shared.progress.lock().unwrap();
                     progress[w].local_since_commit = 0;
                 }
+                // Re-read the link and lift time *now* — a bandwidth
+                // change or outage may have started during the training
+                // chunk — then hold the push until connectivity returns
+                // (interruptible so a stopping run is not pinned by a
+                // long emulated outage).
+                let (link, blackout_until) = {
+                    let c = shared.cluster.lock().unwrap();
+                    (c.links[w].clone(), c.blackout_until[w])
+                };
+                let now_v = start.elapsed().as_secs_f64() / scale;
+                let blackout_wait = (blackout_until - now_v).max(0.0);
+                if blackout_wait > 0.0 {
+                    sleep_interruptible(blackout_wait * scale, &shared.stop);
+                }
+                // Push leg: propagation + link serialization of the wire
+                // size; then the reply; then the dense pull's way back.
+                let up_extra = link.transfer_secs_jittered(up_bytes, &mut net_rng);
+                std::thread::sleep(Duration::from_secs_f64((o / 2.0 + up_extra) * scale));
+                let (reply_tx, reply_rx) = mpsc::channel();
                 let msg = CommitMsg { worker: w, u: snapshot, up_bytes, reply: reply_tx };
                 if commit_tx.send(msg).is_err() {
                     break;
@@ -488,9 +544,10 @@ fn worker_loop(
                     Ok(fresh) => params = fresh,
                     Err(_) => break,
                 }
-                std::thread::sleep(Duration::from_secs_f64(o / 2.0 * scale));
+                let down_extra = link.transfer_secs_jittered(dense_bytes, &mut net_rng);
+                std::thread::sleep(Duration::from_secs_f64((o / 2.0 + down_extra) * scale));
                 let mut metrics = shared.metrics.lock().unwrap();
-                metrics[w].comm_secs += o;
+                metrics[w].comm_secs += o + blackout_wait + up_extra + down_extra;
             }
             Action::Block => {
                 // Poll; blocked time is charged in virtual units.
@@ -509,4 +566,17 @@ fn worker_loop(
         }
     }
     Ok(())
+}
+
+/// Sleep `wall_secs` in short slices, bailing early once `stop` is set —
+/// emulated blackouts can span most of a run and must not outlive it.
+fn sleep_interruptible(wall_secs: f64, stop: &AtomicBool) {
+    let deadline = Instant::now() + Duration::from_secs_f64(wall_secs.max(0.0));
+    while !stop.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep((deadline - now).min(Duration::from_millis(50)));
+    }
 }

@@ -10,10 +10,17 @@
 //! blocking search collapsed to whole-run candidates (the simulator has no
 //! mid-run state forking; the search-time accounting is identical in
 //! spirit: candidates' virtual time is the search cost).
+//!
+//! Series (c) re-expresses the paper's bandwidth axis on the
+//! [`crate::network::LinkModel`]: the same link code path the blackout
+//! scenarios (fig15) stress, here swept through shrinking per-worker
+//! bandwidth — commit transfer time grows with the actual payload bytes,
+//! so convergence time rises as the links starve.
 
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::network::LinkModel;
 use crate::sync::SyncModelKind;
 
 use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
@@ -93,6 +100,24 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             fmt(bw),
             fmt(t + search_time),
             fmt(loss),
+        ]);
+    }
+
+    // --- (c) per-link bandwidth sweep on the LinkModel path ----------------
+    // `0.0` = unbounded (the degenerate link): identical to series (a)'s
+    // ADSP row by construction, pinning the two code paths together.
+    for &(label, bandwidth) in
+        &[("unbounded", 0.0), ("2000kBps", 2e6), ("500kBps", 5e5)]
+    {
+        let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
+        spec.network.default_link = LinkModel::with_bandwidth(bandwidth);
+        let out = run_sim(spec)?;
+        table.push_row(vec![
+            format!("c_link_{label}"),
+            "adsp".into(),
+            fmt(out.bandwidth_bytes_per_sec() / 1e6),
+            fmt(out.convergence_time()),
+            fmt(out.final_loss),
         ]);
     }
 

@@ -26,8 +26,14 @@ use crate::sync::SyncModelKind;
 
 use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
 
+/// The sync models whose degradation the adaptability and comm-stress
+/// sweeps compare (also used by `fig15`).
 pub const SYNC_MODELS: [SyncModelKind; 3] =
     [SyncModelKind::Adsp, SyncModelKind::Ssp, SyncModelKind::Adacomm];
+
+/// The compute-side adaptability scenarios this figure sweeps. The
+/// communication-side `blackout` preset is fig15's subject.
+pub const ADAPTABILITY_SCENARIOS: [&str; 3] = ["slowdown", "straggler_burst", "churn"];
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let cluster = match scale {
@@ -40,7 +46,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         &["scenario", "sync", "baseline_time_s", "scenario_time_s", "degradation", "final_loss"],
     );
 
-    for &scenario in &scenarios::SCENARIO_NAMES {
+    for &scenario in &ADAPTABILITY_SCENARIOS {
         for kind in SYNC_MODELS {
             let base_spec = spec_for(scale, kind, cluster.clone());
             let horizon = base_spec.max_virtual_secs;

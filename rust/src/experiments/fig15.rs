@@ -1,0 +1,76 @@
+//! Fig. 15 (reproduction extension) — communication stress: blackout
+//! severity × synchronization model.
+//!
+//! The paper's Fig. 10 varies bandwidth; its adaptability story assumes
+//! links that *change* mid-training. This experiment scripts PS-link
+//! blackouts of growing severity through the `network`/`cluster`
+//! subsystems and measures each model's convergence-time degradation
+//! against its own blackout-free baseline:
+//!
+//! * `brief` — the slowest half of the cluster is offline for 10% of the
+//!   horizon;
+//! * `sustained` — the slowest half is offline for 25% of the horizon;
+//! * `total` — the *whole* cluster is offline for 25% of the horizon.
+//!
+//! Expected shape: ADSP degrades least at every severity. Its unaffected
+//! workers keep committing on their own timers; the affected ones keep
+//! training locally until their own commit deadline, and the policy
+//! re-anchors its commit target when the blackout lifts
+//! (`SyncPolicy::on_cluster_change`). SSP stalls once the silent
+//! workers pin the staleness bound, and ADACOMM's sync barrier holds
+//! every round hostage to the slowest link.
+
+use anyhow::Result;
+
+use crate::cluster::scenarios;
+use crate::config::profiles::ec2_cluster;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::fig14::SYNC_MODELS;
+
+/// The swept severities: (name, blackout duration as a fraction of the
+/// horizon, fraction of the cluster taken offline).
+pub const SEVERITIES: [(&str, f64, f64); 3] =
+    [("brief", 0.10, 0.5), ("sustained", 0.25, 0.5), ("total", 0.25, 1.0)];
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let cluster = match scale {
+        Scale::Bench => ec2_cluster(6, 2.0, 0.3),
+        Scale::Full => ec2_cluster(18, 1.0, 0.5),
+    };
+
+    let mut table = SeriesTable::new(
+        "fig15_comm_stress",
+        &["scenario", "sync", "baseline_time_s", "scenario_time_s", "degradation", "final_loss"],
+    );
+
+    for kind in SYNC_MODELS {
+        let base_spec = spec_for(scale, kind, cluster.clone());
+        let horizon = base_spec.max_virtual_secs;
+        let baseline = run_sim(base_spec.clone())?;
+        let t_base = baseline.convergence_time();
+
+        for &(name, dur_frac, worker_frac) in &SEVERITIES {
+            let mut spec = base_spec.clone();
+            spec.timeline = scenarios::blackout(
+                &spec.cluster,
+                0.2 * horizon,
+                dur_frac * horizon,
+                worker_frac,
+            );
+            let stressed = run_sim(spec)?;
+            let t_stress = stressed.convergence_time();
+            let degradation = if t_base > 0.0 { (t_stress - t_base) / t_base } else { 0.0 };
+            table.push_row(vec![
+                name.to_string(),
+                kind.name().to_string(),
+                fmt(t_base),
+                fmt(t_stress),
+                fmt(degradation),
+                fmt(stressed.final_loss),
+            ]);
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}

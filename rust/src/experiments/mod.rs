@@ -14,6 +14,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12_13;
 pub mod fig14;
+pub mod fig15;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -26,7 +27,7 @@ pub use common::{Scale, SeriesTable};
 
 use anyhow::Result;
 
-/// Run a figure by name ("fig1" … "fig13"); returns the printed table.
+/// Run a figure by name ("fig1" … "fig15"); returns the printed table.
 pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
     match name {
         "fig1" => fig1::run(scale),
@@ -42,11 +43,13 @@ pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
         "fig12" => fig12_13::run_rnn(scale),
         "fig13" => fig12_13::run_svm(scale),
         "fig14" => fig14::run(scale),
-        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig14)"),
+        "fig15" => fig15::run(scale),
+        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig15)"),
     }
 }
 
-pub const ALL_FIGURES: [&str; 13] = [
+/// Every figure `run_by_name` accepts, in `adsp experiment all` order.
+pub const ALL_FIGURES: [&str; 14] = [
     "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "fig14",
+    "fig13", "fig14", "fig15",
 ];

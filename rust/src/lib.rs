@@ -18,23 +18,37 @@
 //! Python never runs on the training path: the rust binary loads the HLO
 //! artifacts once via PJRT ([`runtime`]) and drives everything from there.
 //!
-//! See `DESIGN.md` for the full system inventory, the per-figure
-//! experiment index (§4), and the recorded paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory, `EXPERIMENTS.md` for
+//! the per-figure experiment index, and the root `README.md` for the
+//! quickstart.
+
+// Public-API doc coverage is enforced module by module; subsystems not
+// yet swept carry an explicit allow below (shrink the list, don't grow it).
+#![warn(missing_docs)]
 
 pub mod cluster;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod experiments;
+#[allow(missing_docs)]
 pub mod metrics;
+pub mod network;
 pub mod pserver;
+#[allow(missing_docs)]
 pub mod runtime;
 pub mod simulation;
 pub mod sync;
+#[allow(missing_docs)]
 pub mod util;
 
 pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline};
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+pub use network::{LinkModel, NetworkSpec};
 pub use pserver::ShardedParameterServer;
 pub use simulation::{SimEngine, SimOutcome};
 pub use sync::SyncModelKind;

@@ -25,8 +25,8 @@ USAGE:
              [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
              [--target-loss L] [--config FILE.json] [--realtime]
              [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
-             [--scenario NAME]
-  adsp experiment <fig1|fig3..fig14|all> [--full]
+             [--scenario NAME] [--link-bw BPS] [--link-latency SECS]
+  adsp experiment <fig1|fig3..fig15|all> [--full]
   adsp inspect <model>
   adsp list
 
@@ -50,10 +50,15 @@ TRAIN FLAGS:
   --ps-apply-secs T   modeled serial PS apply secs per commit in the
                       simulator, split across shards (default 0)
   --scenario NAME     scripted cluster dynamics preset applied on top of
-                      the cluster: slowdown | straggler_burst | churn
-                      (timeline events land at 20%/50% of --max-secs;
-                      a JSON --config may instead script its own
-                      \"timeline\" section)
+                      the cluster: slowdown | straggler_burst | churn |
+                      blackout (timeline events land at 20%/50% of
+                      --max-secs; a JSON --config may instead script its
+                      own \"timeline\" section)
+  --link-bw BPS       per-worker link bandwidth in bytes/s (default 0 =
+                      unbounded); commit transfer time then grows with
+                      the actual payload bytes (\"network\" section of a
+                      JSON --config for per-worker links / PS ingress)
+  --link-latency SECS per-transfer link latency in seconds (default 0)
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -140,6 +145,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.shards = args.get("shards", 1usize)?;
         s.pipeline_depth = args.get("pipeline-depth", 2usize)?;
         s.ps_apply_secs = args.get("ps-apply-secs", 0.0)?;
+        s.network.default_link.bandwidth_bytes_per_sec = args.get("link-bw", 0.0)?;
+        s.network.default_link.latency_secs = args.get("link-latency", 0.0)?;
         if let Some(name) = args.flags.get("scenario") {
             s.timeline =
                 adsp::cluster::scenarios::preset(name, &s.cluster, s.max_virtual_secs)?;
@@ -185,13 +192,17 @@ fn main() -> Result<()> {
     let rest = &argv[1..];
     match cmd {
         "train" => {
+            if rest.iter().any(|a| a == "--help" || a == "-h") {
+                print!("{USAGE}");
+                return Ok(());
+            }
             let args = Args::parse(rest, &["realtime"])?;
             cmd_train(&args)?;
         }
         "experiment" => {
             let args = Args::parse(rest, &["full"])?;
             let Some(name) = args.positional.first() else {
-                bail!("usage: adsp experiment <fig1|fig3..fig13|all> [--full]");
+                bail!("usage: adsp experiment <fig1|fig3..fig15|all> [--full]");
             };
             let scale = if args.has("full") { Scale::Full } else { Scale::Bench };
             if name == "all" {

@@ -1,0 +1,174 @@
+//! PS-ingress contention: concurrent commits share one aggregate pipe.
+//!
+//! Per-worker links bound each flow in isolation; the parameter server's
+//! own uplink is a shared resource. [`IngressQueue`] models it as a single
+//! server with an aggregate byte rate and one of two service disciplines:
+//!
+//! * **FIFO** — commits serialize in admission order: a commit arriving at
+//!   `t` starts service at `max(t, busy_until)` and occupies the pipe for
+//!   `bytes / capacity` seconds.
+//! * **Fair share** — processor-sharing approximation: a commit arriving
+//!   while `n` transfers are still in flight is served at `capacity /
+//!   (n + 1)`, i.e. its service time stretches by `n + 1`. Concurrency is
+//!   sampled once at admission (an event-level approximation of true
+//!   processor sharing; good enough for figure shapes, cheap enough for
+//!   millions of commits).
+//!
+//! Capacity `0.0` means unbounded: `admit` returns the arrival time
+//! unchanged and keeps no state, which preserves the pre-network timings
+//! bit for bit.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// How concurrent commits share the PS ingress pipe.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IngressDiscipline {
+    /// Commits serialize in admission order.
+    #[default]
+    Fifo,
+    /// Concurrent commits split the aggregate rate evenly.
+    FairShare,
+}
+
+impl IngressDiscipline {
+    /// The JSON / CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IngressDiscipline::Fifo => "fifo",
+            IngressDiscipline::FairShare => "fair_share",
+        }
+    }
+
+    /// Parse a JSON / CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(IngressDiscipline::Fifo),
+            "fair_share" => Ok(IngressDiscipline::FairShare),
+            other => bail!("unknown ingress discipline '{other}' (fifo | fair_share)"),
+        }
+    }
+
+    /// JSON string form.
+    pub fn to_json(&self) -> Json {
+        Json::str(self.name())
+    }
+}
+
+/// The shared ingress server state an engine carries across a run.
+#[derive(Clone, Debug)]
+pub struct IngressQueue {
+    /// Aggregate ingress rate in bytes per second; `0.0` = unbounded.
+    capacity_bytes_per_sec: f64,
+    discipline: IngressDiscipline,
+    /// FIFO: time the pipe frees up.
+    busy_until: f64,
+    /// Fair share: finish times of transfers still in flight.
+    in_flight: Vec<f64>,
+}
+
+impl IngressQueue {
+    /// A queue over an aggregate `capacity` (bytes/s; `0.0` = unbounded).
+    pub fn new(capacity_bytes_per_sec: f64, discipline: IngressDiscipline) -> Self {
+        IngressQueue {
+            capacity_bytes_per_sec,
+            discipline,
+            busy_until: 0.0,
+            in_flight: Vec::new(),
+        }
+    }
+
+    /// An unbounded queue — `admit` is the identity on arrival times.
+    pub fn unbounded() -> Self {
+        IngressQueue::new(0.0, IngressDiscipline::Fifo)
+    }
+
+    /// True when this queue never delays an arrival.
+    pub fn is_unbounded(&self) -> bool {
+        self.capacity_bytes_per_sec == 0.0
+    }
+
+    /// Admit a `bytes`-sized commit arriving at the ingress at `arrive`;
+    /// returns the time its last byte clears the pipe. Monotone:
+    /// `admit(t, b) >= t` always, with equality exactly when unbounded.
+    pub fn admit(&mut self, arrive: f64, bytes: u64) -> f64 {
+        if self.capacity_bytes_per_sec <= 0.0 {
+            return arrive;
+        }
+        let service = bytes as f64 / self.capacity_bytes_per_sec;
+        match self.discipline {
+            IngressDiscipline::Fifo => {
+                let start = self.busy_until.max(arrive);
+                self.busy_until = start + service;
+                self.busy_until
+            }
+            IngressDiscipline::FairShare => {
+                self.in_flight.retain(|&f| f > arrive);
+                let stretch = 1.0 + self.in_flight.len() as f64;
+                let finish = arrive + service * stretch;
+                self.in_flight.push(finish);
+                finish
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbounded_is_the_identity() {
+        let mut q = IngressQueue::unbounded();
+        assert!(q.is_unbounded());
+        for t in [0.0, 1.5, 0.25] {
+            // Out-of-order arrivals are fine: no state is kept.
+            assert_eq!(q.admit(t, u64::MAX), t);
+        }
+    }
+
+    #[test]
+    fn fifo_serializes_back_to_back_commits() {
+        let mut q = IngressQueue::new(1e6, IngressDiscipline::Fifo);
+        // Two 1 MB commits arriving together: 1 s and 2 s.
+        assert!((q.admit(10.0, 1_000_000) - 11.0).abs() < 1e-9);
+        assert!((q.admit(10.0, 1_000_000) - 12.0).abs() < 1e-9);
+        // A late commit after the pipe drained starts immediately.
+        assert!((q.admit(50.0, 500_000) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_share_stretches_with_concurrency() {
+        let mut q = IngressQueue::new(1e6, IngressDiscipline::FairShare);
+        let a = q.admit(0.0, 1_000_000); // alone: 1 s
+        assert!((a - 1.0).abs() < 1e-9);
+        let b = q.admit(0.5, 1_000_000); // shares with a: 2 s
+        assert!((b - 2.5).abs() < 1e-9);
+        // After everything drained, service is solo again.
+        let c = q.admit(10.0, 1_000_000);
+        assert!((c - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admit_never_precedes_arrival() {
+        for disc in [IngressDiscipline::Fifo, IngressDiscipline::FairShare] {
+            let mut q = IngressQueue::new(2e5, disc);
+            let mut rng = crate::util::Rng::new(11);
+            let mut t = 0.0;
+            for _ in 0..200 {
+                t += rng.next_f64();
+                let done = q.admit(t, (rng.next_u64() % 100_000) as u64);
+                assert!(done >= t, "{disc:?}: finished before arriving");
+            }
+        }
+    }
+
+    #[test]
+    fn discipline_names_roundtrip() {
+        for d in [IngressDiscipline::Fifo, IngressDiscipline::FairShare] {
+            assert_eq!(IngressDiscipline::parse(d.name()).unwrap(), d);
+        }
+        assert!(IngressDiscipline::parse("lifo").is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Per-worker link model: transfer time from payload bytes.
+//!
+//! The paper's Fig. 10 varies available bandwidth, and its adaptability
+//! story assumes commits cost real, changing network time. A [`LinkModel`]
+//! turns a commit's wire size (dense parameter bytes, or the sparsified
+//! size under `compress_topk`) into seconds:
+//!
+//! ```text
+//! transfer_secs(bytes) = latency_secs + bytes / bandwidth_bytes_per_sec
+//! ```
+//!
+//! with optional multiplicative jitter `U[1−j, 1+j]` per transfer. A
+//! *degenerate* link (zero latency, unbounded bandwidth, no jitter) adds
+//! exactly `0.0` seconds and draws no random numbers, which is what keeps
+//! the default network bit-identical to the pre-network static-comm path
+//! (pinned in `tests/integration.rs`).
+//!
+//! ```
+//! use adsp::network::LinkModel;
+//!
+//! // A 1 MB/s uplink with 50 ms latency moving a 500 kB commit:
+//! let link = LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.05, jitter: 0.0 };
+//! assert!((link.transfer_secs(500_000) - 0.55).abs() < 1e-12);
+//!
+//! // The degenerate link is free:
+//! assert_eq!(LinkModel::unbounded().transfer_secs(u64::MAX), 0.0);
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::util::{Json, Rng};
+
+/// One direction-agnostic worker↔PS link. The same model serves the
+/// upload (update push) and download (fresh-model pull) legs; the static
+/// per-worker `comm_secs` round trip from [`crate::config::WorkerSpec`]
+/// stays as the base propagation term and the link adds the
+/// payload-dependent part on top.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Link bandwidth in bytes per second; `0.0` means unbounded (the
+    /// payload-dependent term vanishes).
+    pub bandwidth_bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds (one way).
+    pub latency_secs: f64,
+    /// Multiplicative jitter amplitude in `[0, 1)`: each transfer is
+    /// scaled by `U[1−jitter, 1+jitter]`. `0.0` draws nothing, so
+    /// jitter-free links never consume randomness.
+    pub jitter: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel::unbounded()
+    }
+}
+
+impl LinkModel {
+    /// The degenerate link: unbounded bandwidth, zero latency, no jitter.
+    /// Adds exactly `0.0` seconds to every transfer.
+    pub fn unbounded() -> Self {
+        LinkModel { bandwidth_bytes_per_sec: 0.0, latency_secs: 0.0, jitter: 0.0 }
+    }
+
+    /// A bandwidth-only link (zero latency, no jitter).
+    pub fn with_bandwidth(bandwidth_bytes_per_sec: f64) -> Self {
+        LinkModel { bandwidth_bytes_per_sec, latency_secs: 0.0, jitter: 0.0 }
+    }
+
+    /// True when this link adds exactly zero time to every transfer.
+    pub fn is_degenerate(&self) -> bool {
+        self.bandwidth_bytes_per_sec == 0.0 && self.latency_secs == 0.0 && self.jitter == 0.0
+    }
+
+    /// Deterministic one-way transfer time for a `bytes`-sized payload.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        let bw = if self.bandwidth_bytes_per_sec > 0.0 {
+            bytes as f64 / self.bandwidth_bytes_per_sec
+        } else {
+            0.0
+        };
+        self.latency_secs + bw
+    }
+
+    /// Transfer time with the per-transfer jitter applied. Draws from
+    /// `rng` only when `jitter > 0`, so jitter-free links leave the
+    /// stream untouched (and the degenerate link returns exactly `0.0`).
+    pub fn transfer_secs_jittered(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        let base = self.transfer_secs(bytes);
+        if self.jitter > 0.0 {
+            base * (1.0 - self.jitter + 2.0 * self.jitter * rng.next_f64())
+        } else {
+            base
+        }
+    }
+
+    /// Reject non-finite or out-of-range parameters.
+    pub fn validate(&self) -> Result<()> {
+        if !self.bandwidth_bytes_per_sec.is_finite() || self.bandwidth_bytes_per_sec < 0.0 {
+            bail!("link bandwidth must be finite and >= 0 (0 = unbounded)");
+        }
+        if !self.latency_secs.is_finite() || self.latency_secs < 0.0 {
+            bail!("link latency must be finite and >= 0");
+        }
+        if !self.jitter.is_finite() || !(0.0..1.0).contains(&self.jitter) {
+            bail!("link jitter must be in [0, 1)");
+        }
+        Ok(())
+    }
+
+    /// JSON object form (the `network.default_link` / `network.links[i]`
+    /// entries of an experiment spec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bandwidth_bytes_per_sec", Json::num(self.bandwidth_bytes_per_sec)),
+            ("latency_secs", Json::num(self.latency_secs)),
+            ("jitter", Json::num(self.jitter)),
+        ])
+    }
+
+    /// Parse from JSON; absent keys default to the unbounded link's values.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let link = LinkModel {
+            bandwidth_bytes_per_sec: v.f64_or("bandwidth_bytes_per_sec", 0.0)?,
+            latency_secs: v.f64_or("latency_secs", 0.0)?,
+            jitter: v.f64_or("jitter", 0.0)?,
+        };
+        link.validate()?;
+        Ok(link)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degenerate_link_is_free_and_drawless() {
+        let link = LinkModel::unbounded();
+        assert!(link.is_degenerate());
+        assert_eq!(link.transfer_secs(0), 0.0);
+        assert_eq!(link.transfer_secs(1 << 40), 0.0);
+        let mut rng = Rng::new(7);
+        let before = rng.clone();
+        assert_eq!(link.transfer_secs_jittered(12345, &mut rng), 0.0);
+        // No draw happened.
+        assert_eq!(rng.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn transfer_time_is_latency_plus_serialization() {
+        let link = LinkModel { bandwidth_bytes_per_sec: 2e6, latency_secs: 0.1, jitter: 0.0 };
+        assert!((link.transfer_secs(1_000_000) - 0.6).abs() < 1e-12);
+        assert!((link.transfer_secs(0) - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn jitter_stays_inside_the_band() {
+        let link = LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.0, jitter: 0.2 };
+        let base = link.transfer_secs(1_000_000);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let t = link.transfer_secs_jittered(1_000_000, &mut rng);
+            assert!(t >= base * 0.8 - 1e-12 && t <= base * 1.2 + 1e-12, "jitter escaped: {t}");
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_links() {
+        let mut link = LinkModel::unbounded();
+        link.bandwidth_bytes_per_sec = -1.0;
+        assert!(link.validate().is_err());
+        link = LinkModel::unbounded();
+        link.latency_secs = f64::NAN;
+        assert!(link.validate().is_err());
+        link = LinkModel::unbounded();
+        link.jitter = 1.0;
+        assert!(link.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let link = LinkModel { bandwidth_bytes_per_sec: 5e5, latency_secs: 0.03, jitter: 0.1 };
+        let back = LinkModel::from_json(&Json::parse(&link.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, link);
+        // Absent keys mean the unbounded default.
+        let sparse = LinkModel::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(sparse.is_degenerate());
+    }
+}

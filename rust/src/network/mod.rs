@@ -1,0 +1,40 @@
+//! Heterogeneous communication model: links, contention, blackouts.
+//!
+//! The seed reproduction charged every commit a static per-worker round
+//! trip `O_i` — the right first-order model for the paper's testbed, but
+//! blind to the quantities its Fig. 10 and adaptability claims actually
+//! vary: *bandwidth*, *payload size*, and *time-varying* link quality
+//! (cf. Wang et al.'s budget-constrained aggregation and the fog-learning
+//! view of the edge uplink as the first-class bottleneck). This subsystem
+//! makes the communication path a first-class model shared by both
+//! engines:
+//!
+//! * [`link::LinkModel`] — per-worker bandwidth + latency + optional
+//!   jitter; transfer time is derived from the commit's actual wire size
+//!   (dense parameter bytes, or the `compress_topk`-sparsified size).
+//! * [`contention::IngressQueue`] — the PS's shared ingress pipe: an
+//!   aggregate byte rate with FIFO or fair-share service across
+//!   concurrent commits.
+//! * [`spec::NetworkSpec`] — the validated `network` section of an
+//!   [`crate::config::ExperimentSpec`], with JSON round-trip.
+//!
+//! Time-varying behaviour rides the cluster timeline
+//! ([`crate::cluster::ClusterEvent`]): `BandwidthChange` retunes a live
+//! link and `CommBlackout` takes a set of workers offline for a window —
+//! their commits defer until the blackout lifts, at which point every
+//! [`crate::sync::SyncPolicy`] is notified through `on_cluster_change`
+//! (ADSP re-anchors its commit target). The `blackout` scenario preset
+//! and the `fig15_comm_stress` experiment sweep exactly this.
+//!
+//! The *default* network is degenerate — unbounded links, zero latency,
+//! no ingress cap — and adds exactly `0.0` seconds everywhere, keeping
+//! every pre-network run bit-identical (pinned in
+//! `tests/integration.rs`).
+
+pub mod contention;
+pub mod link;
+pub mod spec;
+
+pub use contention::{IngressDiscipline, IngressQueue};
+pub use link::LinkModel;
+pub use spec::NetworkSpec;

@@ -1,0 +1,155 @@
+//! The validated `network` section of an experiment spec.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::contention::{IngressDiscipline, IngressQueue};
+use super::link::LinkModel;
+
+/// Communication model of one experiment: per-worker links plus the
+/// shared PS-ingress pipe. The default (`NetworkSpec::default()`) is fully
+/// degenerate — every link unbounded, no ingress cap — and reproduces the
+/// pre-network static-comm timings bit for bit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetworkSpec {
+    /// Link used by every worker without an explicit entry in `links`,
+    /// and by every worker joining mid-run through the timeline.
+    pub default_link: LinkModel,
+    /// Per-worker overrides; either empty (everyone uses `default_link`)
+    /// or exactly one entry per *initial* cluster worker.
+    pub links: Vec<LinkModel>,
+    /// Aggregate PS-ingress bandwidth in bytes/s; `0.0` = unbounded.
+    pub ingress_bytes_per_sec: f64,
+    /// How concurrent commits share the ingress pipe.
+    pub ingress_discipline: IngressDiscipline,
+}
+
+impl NetworkSpec {
+    /// The link worker `w` commits through (falls back to `default_link`
+    /// for joiners and when no per-worker overrides were given).
+    pub fn link_for(&self, w: usize) -> &LinkModel {
+        self.links.get(w).unwrap_or(&self.default_link)
+    }
+
+    /// True when this network adds exactly zero time anywhere — the
+    /// static-comm fast path both engines pin bit-identical.
+    pub fn is_static(&self) -> bool {
+        self.ingress_bytes_per_sec == 0.0
+            && self.default_link.is_degenerate()
+            && self.links.iter().all(LinkModel::is_degenerate)
+    }
+
+    /// A fresh ingress-queue state for one run.
+    pub fn ingress_queue(&self) -> IngressQueue {
+        IngressQueue::new(self.ingress_bytes_per_sec, self.ingress_discipline)
+    }
+
+    /// Check the section against the initial cluster size `m`.
+    pub fn validate(&self, m: usize) -> Result<()> {
+        self.default_link.validate().context("network.default_link")?;
+        if !self.links.is_empty() && self.links.len() != m {
+            bail!(
+                "network.links must be empty or have one entry per worker \
+                 (got {} links for {m} workers)",
+                self.links.len()
+            );
+        }
+        for (i, link) in self.links.iter().enumerate() {
+            link.validate().with_context(|| format!("network.links[{i}]"))?;
+        }
+        if !self.ingress_bytes_per_sec.is_finite() || self.ingress_bytes_per_sec < 0.0 {
+            bail!("network.ingress_bytes_per_sec must be finite and >= 0 (0 = unbounded)");
+        }
+        Ok(())
+    }
+
+    /// JSON object form (the `network` key of an experiment spec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("default_link", self.default_link.to_json()),
+            ("links", Json::Arr(self.links.iter().map(LinkModel::to_json).collect())),
+            ("ingress_bytes_per_sec", Json::num(self.ingress_bytes_per_sec)),
+            ("ingress_discipline", self.ingress_discipline.to_json()),
+        ])
+    }
+
+    /// Parse from JSON; absent keys default to the degenerate network.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let default_link = match v.get("default_link") {
+            Some(l) => LinkModel::from_json(l).context("network.default_link")?,
+            None => LinkModel::unbounded(),
+        };
+        let links = match v.get("links") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    LinkModel::from_json(l).with_context(|| format!("network.links[{i}]"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(NetworkSpec {
+            default_link,
+            links,
+            ingress_bytes_per_sec: v.f64_or("ingress_bytes_per_sec", 0.0)?,
+            ingress_discipline: IngressDiscipline::parse(
+                v.str_or("ingress_discipline", "fifo")?,
+            )?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_static() {
+        let net = NetworkSpec::default();
+        assert!(net.is_static());
+        assert!(net.validate(5).is_ok());
+        assert!(net.link_for(0).is_degenerate());
+        assert!(net.link_for(99).is_degenerate()); // joiners fall back
+    }
+
+    #[test]
+    fn per_worker_links_must_match_membership() {
+        let mut net = NetworkSpec::default();
+        net.links = vec![LinkModel::with_bandwidth(1e6); 2];
+        assert!(net.validate(2).is_ok());
+        assert!(net.validate(3).is_err());
+        assert!(!net.is_static());
+        assert_eq!(net.link_for(1).bandwidth_bytes_per_sec, 1e6);
+        // Index past the overrides → the default link.
+        assert!(net.link_for(2).is_degenerate());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let net = NetworkSpec {
+            default_link: LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.02, jitter: 0.0 },
+            links: vec![LinkModel::with_bandwidth(5e5), LinkModel::unbounded()],
+            ingress_bytes_per_sec: 4e6,
+            ingress_discipline: IngressDiscipline::FairShare,
+        };
+        let back = NetworkSpec::from_json(&Json::parse(&net.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, net);
+        // An empty object is the degenerate default.
+        let sparse = NetworkSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(sparse.is_static());
+    }
+
+    #[test]
+    fn validation_rejects_bad_sections() {
+        let mut net = NetworkSpec::default();
+        net.ingress_bytes_per_sec = -1.0;
+        assert!(net.validate(2).is_err());
+        let bad = Json::parse(r#"{"ingress_discipline": "lifo"}"#).unwrap();
+        assert!(NetworkSpec::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"default_link": {"jitter": 2.0}}"#).unwrap();
+        assert!(NetworkSpec::from_json(&bad).is_err());
+    }
+}

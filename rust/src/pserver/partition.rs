@@ -22,10 +22,12 @@ pub struct LeafSlice {
 }
 
 impl LeafSlice {
+    /// Number of elements in the slice.
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// True when the slice covers no elements.
     pub fn is_empty(&self) -> bool {
         self.start == self.end
     }
@@ -69,14 +71,17 @@ impl Partition {
         Self::new(params.leaves.iter().map(|l| l.len()).collect(), num_shards)
     }
 
+    /// Number of slabs `S`.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Total element count `N` across every leaf.
     pub fn total_numel(&self) -> usize {
         self.total
     }
 
+    /// The leaf layout this partition was derived from.
     pub fn leaf_lens(&self) -> &[usize] {
         &self.leaf_lens
     }

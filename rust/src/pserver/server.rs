@@ -39,6 +39,7 @@ pub struct ShardedParameterServer {
     pipeline_depth: usize,
     /// Total commits enqueued (== every shard's version at a consistent cut).
     pub commits: u64,
+    /// Evaluation samples recorded through [`ShardedParameterServer::evaluate`].
     pub loss_log: LossLog,
 }
 
@@ -84,14 +85,17 @@ impl ShardedParameterServer {
         }
     }
 
+    /// Number of shard threads `S`.
     pub fn num_shards(&self) -> usize {
         self.partition.num_shards()
     }
 
+    /// Commits in flight per shard before `apply` backpressures.
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
     }
 
+    /// The slab partition the server splits commits with.
     pub fn partition(&self) -> &Partition {
         &self.partition
     }

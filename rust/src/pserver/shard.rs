@@ -25,23 +25,29 @@ pub struct ShardState {
 }
 
 impl ShardState {
+    /// A shard over `global` (its slab of W), applying with global
+    /// learning rate `eta` and PS momentum `mu` (0 = plain SGD apply).
     pub fn new(global: Vec<f32>, eta: f32, mu: f32) -> Self {
         let velocity = vec![0.0; global.len()];
         ShardState { global, velocity, eta, mu, commits: 0, version: 0 }
     }
 
+    /// Elements in this shard's slab.
     pub fn len(&self) -> usize {
         self.global.len()
     }
 
+    /// True for a zero-length slab (more shards than parameters).
     pub fn is_empty(&self) -> bool {
         self.global.is_empty()
     }
 
+    /// The global learning rate η this shard applies with.
     pub fn eta(&self) -> f32 {
         self.eta
     }
 
+    /// The PS momentum μ this shard applies with (0 = plain SGD).
     pub fn mu(&self) -> f32 {
         self.mu
     }

@@ -3,9 +3,13 @@
 //! Event timeline per worker: `Ready` → (policy) → either
 //! * `Train{k}`: one XLA execute of the `k`-step scan artifact, next
 //!   `Ready` at `now + k·t_i`;
-//! * `Commit`: update snapshot travels `O_i/2` to the PS (`CommitArrive`,
-//!   where it is applied and the fresh-model snapshot is taken), then
-//!   `O_i/2` back (`Ready` with the pulled parameters);
+//! * `Commit`: update snapshot travels `O_i/2` plus the link-model
+//!   serialization of its wire size to the PS (`CommitArrive`), is
+//!   admitted to the shared ingress pipe in arrival order (`CommitApply`
+//!   once it clears; applied inline when uncontended), and the
+//!   fresh-model snapshot rides `O_i/2` plus the dense pull's link time
+//!   back (`Ready` with the pulled parameters). A blackout in force
+//!   defers the departure to its lift time;
 //! * `Block`: parked; re-polled after every state-changing event; on wake
 //!   the worker re-pulls the current global model (the barrier broadcast).
 //!
@@ -20,6 +24,7 @@ use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::{make_source, DataSource};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
+use crate::network::IngressQueue;
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{
     make_policy, Action, ClusterView, SyncModelKind, SyncPolicy, WorkerProgress,
@@ -29,13 +34,21 @@ use crate::sync::{
 enum EventKind {
     /// Worker is free to act (optionally installing pulled parameters).
     Ready(usize),
-    /// Worker's update snapshot reaches the PS.
+    /// Worker's update snapshot physically reaches the PS ingress; it is
+    /// admitted to the shared pipe here, in arrival order.
     CommitArrive(usize),
+    /// The update cleared the ingress pipe and is applied (only scheduled
+    /// when the ingress model actually delayed it).
+    CommitApply(usize),
     Checkpoint,
     Eval,
     EpochStart,
     /// The i-th `spec.timeline` event fires (speed/comm shift or churn).
     Cluster(usize),
+    /// A communication blackout lifts: the policy is re-notified so it
+    /// can re-anchor to the restored connectivity (no state to mutate —
+    /// `ClusterState::blackout_until` expires by the clock).
+    BlackoutLift,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -70,6 +83,10 @@ struct WorkerSim {
     in_flight: Option<ParamSet>,
     /// Compressed wire size of the in-flight update (None = dense).
     in_flight_bytes: Option<u64>,
+    /// Link-model extra seconds for the pull leg of the commit in flight
+    /// (drawn at commit time so the jitter stream stays deterministic;
+    /// exactly 0.0 on a degenerate link).
+    down_extra: f64,
     /// Parameters pulled from the PS, installed at the next Ready.
     pending_pull: Option<ParamSet>,
     metrics: WorkerMetrics,
@@ -80,20 +97,33 @@ struct WorkerSim {
 /// Everything a run produces (figure harnesses consume this).
 #[derive(Debug)]
 pub struct SimOutcome {
+    /// Model name the run trained.
     pub model: String,
+    /// Synchronization model the run used.
     pub sync: SyncModelKind,
+    /// The policy's diagnostic label (current C_target / τ / ...).
     pub sync_describe: String,
     /// Virtual time at which the convergence detector fired (None = ran to a cap).
     pub converged_at: Option<f64>,
+    /// Virtual time the run stopped at.
     pub end_time: f64,
+    /// Cumulative local training steps across every worker.
     pub total_steps: u64,
+    /// Commits applied at the PS.
     pub total_commits: u64,
+    /// Loss at the last evaluation.
     pub final_loss: f64,
+    /// Best loss seen at any evaluation.
     pub best_loss: f64,
+    /// Accuracy at the last evaluation.
     pub final_accuracy: f64,
+    /// Every (t, steps, loss, accuracy) evaluation sample.
     pub loss_log: LossLog,
+    /// Per-worker step/commit/byte/time accounting.
     pub workers: Vec<WorkerMetrics>,
+    /// Cluster-average compute/comm/blocked breakdown (Fig. 1).
     pub breakdown: Breakdown,
+    /// Total bytes moved over the network (up + down).
     pub bytes_total: u64,
     /// Real (host) seconds the simulation took.
     pub wall_secs: f64,
@@ -135,6 +165,8 @@ impl SimOutcome {
     }
 }
 
+/// The deterministic discrete-event engine driving one experiment
+/// (see the module docs and `simulation/mod.rs`).
 pub struct SimEngine {
     spec: ExperimentSpec,
     runtime: ModelRuntime,
@@ -173,6 +205,7 @@ pub struct SimEngine {
     /// Periodic checkpointing: save the global model here every
     /// `checkpoint_every` virtual seconds (None = off).
     pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Checkpoint cadence in virtual seconds (0 = only at run end).
     pub checkpoint_every: f64,
     last_checkpoint_save: f64,
     /// Virtual time at which the PS apply stage frees up. Commits serialize
@@ -183,6 +216,13 @@ pub struct SimEngine {
     /// for free. With `spec.ps_apply_secs == 0` this stays at 0 and the
     /// model degenerates to the seed's instant apply.
     ps_busy: f64,
+    /// Shared PS-ingress pipe (`spec.network`): concurrent commit uploads
+    /// queue here. Unbounded by default, adding zero delay.
+    ingress: IngressQueue,
+    /// Link-jitter RNG — separate from `fault_rng` so enabling network
+    /// jitter never perturbs the fault/step-jitter streams (and vice
+    /// versa). Degenerate links draw nothing.
+    net_rng: crate::util::Rng,
 }
 
 /// Extra per-shard overhead as a fraction of the split cost — the RPC and
@@ -198,6 +238,8 @@ pub fn shard_split_factor(s: usize) -> f64 {
 }
 
 impl SimEngine {
+    /// Validate `spec`, load the model's artifacts, and set up the
+    /// initial cluster, policy and event queue.
     pub fn new(spec: ExperimentSpec) -> Result<Self> {
         spec.validate()?;
         let runtime = ModelRuntime::load_by_name(&spec.model)
@@ -208,10 +250,12 @@ impl SimEngine {
         // `ClusterState` — the shared source of truth for both engines.
         let available = manifest.batch_sizes();
         let cluster =
-            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available);
+            ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
+                .with_network(&spec.network);
         let b_default = cluster.b_default();
 
         let spec_seed = spec.seed;
+        let spec_ingress = spec.network.ingress_queue();
         let policy = make_policy(&spec.sync, &spec.cluster);
         let global = runtime.init_params()?;
         let velocity = global.zeros_like();
@@ -224,6 +268,7 @@ impl SimEngine {
                 u: global.zeros_like(),
                 in_flight: None,
                 in_flight_bytes: None,
+                down_extra: 0.0,
                 pending_pull: None,
                 metrics: WorkerMetrics::default(),
                 block_start: None,
@@ -276,6 +321,8 @@ impl SimEngine {
             checkpoint_every: 0.0,
             last_checkpoint_save: 0.0,
             ps_busy: 0.0,
+            ingress: spec_ingress,
+            net_rng: crate::util::Rng::new(spec_seed ^ 0x4E45_5457), // "NETW"
         })
     }
 
@@ -296,6 +343,23 @@ impl SimEngine {
         (b / b_ref).max(1e-9) / self.cluster.speeds[w]
     }
 
+    /// Build the policy-facing [`ClusterView`] over the live state and
+    /// hand it to `f` along with the policy — the one place the view is
+    /// constructed (the split borrow keeps the policy mutable while the
+    /// view borrows the rest of the engine).
+    fn with_view<R>(&mut self, f: impl FnOnce(&mut dyn SyncPolicy, &ClusterView) -> R) -> R {
+        let view = ClusterView {
+            now: self.now,
+            workers: &self.progress,
+            speeds: &self.cluster.speeds,
+            comms: &self.cluster.comms,
+            k_variants: &self.k_variants,
+            last_eval: self.last_eval,
+            initial_loss: self.initial_loss,
+        };
+        f(self.policy.as_mut(), &view)
+    }
+
     /// Ask the policy what worker `w` should do and carry it out.
     fn drive_worker(&mut self, w: usize) -> Result<()> {
         if self.total_steps >= self.spec.max_total_steps {
@@ -304,18 +368,7 @@ impl SimEngine {
         if !self.cluster.active[w] {
             return Ok(()); // the worker left; its stale events are ignored
         }
-        let action = {
-            let view = ClusterView {
-                now: self.now,
-                workers: &self.progress,
-                speeds: &self.cluster.speeds,
-                comms: &self.cluster.comms,
-                k_variants: &self.k_variants,
-                last_eval: self.last_eval,
-                initial_loss: self.initial_loss,
-            };
-            self.policy.next_action(w, &view)
-        };
+        let action = self.with_view(|policy, view| policy.next_action(w, view));
         match action {
             Action::Train { k } => self.do_train(w, k),
             Action::Commit => self.do_commit(w),
@@ -379,7 +432,8 @@ impl SimEngine {
     }
 
     fn do_commit(&mut self, w: usize) -> Result<()> {
-        // Snapshot U and reset the accumulator; the snapshot travels O/2.
+        // Snapshot U and reset the accumulator; the snapshot travels O/2
+        // plus the link-model serialization of its actual wire size.
         let mut u = std::mem::replace(&mut self.workers[w].u, self.global.zeros_like());
         if self.spec.compress_topk > 0.0 && self.spec.compress_topk < 1.0 {
             let kept = native::topk_sparsify(&mut u, self.spec.compress_topk);
@@ -387,11 +441,33 @@ impl SimEngine {
             // arrival accounting via `in_flight_bytes`.
             self.workers[w].in_flight_bytes = Some(8 * kept as u64);
         }
+        let dense_bytes = self.runtime.manifest.bytes_per_commit as u64;
+        let up_bytes = self.workers[w].in_flight_bytes.unwrap_or(dense_bytes);
         self.workers[w].in_flight = Some(u);
         self.progress[w].local_since_commit = 0;
+
+        // Timing: [blackout gate] → O/2 + link(up bytes) → physical
+        // arrival (ingress admission happens *there*, so concurrent
+        // commits queue in true arrival order). The pull leg's link term
+        // is drawn now (deterministic jitter stream) and consumed after
+        // the apply. Every extra term is exactly 0.0 on the degenerate
+        // default network, keeping the static-comm event times and
+        // accounting bit-identical.
+        let depart = self.cluster.departure_time(w, self.now);
+        let blackout_wait = depart - self.now;
         let oneway = self.oneway_secs(w);
-        self.workers[w].metrics.comm_secs += 2.0 * oneway;
-        self.push_event(self.now + oneway, EventKind::CommitArrive(w));
+        let up_extra =
+            self.cluster.links[w].transfer_secs_jittered(up_bytes, &mut self.net_rng);
+        let down_extra =
+            self.cluster.links[w].transfer_secs_jittered(dense_bytes, &mut self.net_rng);
+        self.workers[w].down_extra = down_extra;
+        // Charge only the part inside the horizon (mirroring do_train's
+        // compute clamp) so a blackout spilling past the cap cannot push
+        // a worker's comm_secs beyond the run length.
+        let comm = blackout_wait + up_extra + down_extra + 2.0 * oneway;
+        self.workers[w].metrics.comm_secs +=
+            comm.min((self.spec.max_virtual_secs - self.now).max(0.0));
+        self.push_event(depart + oneway + up_extra, EventKind::CommitArrive(w));
         Ok(())
     }
 
@@ -408,13 +484,39 @@ impl SimEngine {
         self.ps_busy
     }
 
+    /// The update physically reached the PS: admit it to the shared
+    /// ingress pipe (in arrival order — events pop in time order) and
+    /// apply it now, or once it clears a contended pipe.
     fn on_commit_arrive(&mut self, w: usize) -> Result<()> {
         if !self.cluster.active[w] {
-            // The worker left while its commit was in flight: the update
-            // is lost with it (timeline churn semantics).
-            self.workers[w].in_flight = None;
-            self.workers[w].in_flight_bytes = None;
+            return self.drop_in_flight(w);
+        }
+        let up_bytes = self
+            .workers[w]
+            .in_flight_bytes
+            .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
+        let cleared = self.ingress.admit(self.now, up_bytes);
+        if cleared > self.now {
+            self.workers[w].metrics.comm_secs += (cleared - self.now)
+                .min((self.spec.max_virtual_secs - self.now).max(0.0));
+            self.push_event(cleared, EventKind::CommitApply(w));
             return Ok(());
+        }
+        self.on_commit_apply(w)
+    }
+
+    /// The worker left while its commit was in flight: the update is
+    /// lost with it (timeline churn semantics).
+    fn drop_in_flight(&mut self, w: usize) -> Result<()> {
+        self.workers[w].in_flight = None;
+        self.workers[w].in_flight_bytes = None;
+        self.workers[w].down_extra = 0.0;
+        Ok(())
+    }
+
+    fn on_commit_apply(&mut self, w: usize) -> Result<()> {
+        if !self.cluster.active[w] {
+            return self.drop_in_flight(w);
         }
         let u = self.workers[w].in_flight.take().expect("commit without in-flight update");
         let up_bytes = self
@@ -432,7 +534,8 @@ impl SimEngine {
             self.dropped_commits += 1;
             self.workers[w].pending_pull = Some(self.global.clone());
             let oneway = self.oneway_secs(w);
-            self.push_event(self.now + oneway, EventKind::Ready(w));
+            let down_extra = std::mem::take(&mut self.workers[w].down_extra);
+            self.push_event(self.now + oneway + down_extra, EventKind::Ready(w));
             return Ok(());
         }
         let eta = self.spec.eta();
@@ -458,25 +561,16 @@ impl SimEngine {
         self.workers[w].metrics.bytes_down += down_bytes;
         self.bytes_total += up_bytes + down_bytes;
 
-        {
-            let view = ClusterView {
-                now: self.now,
-                workers: &self.progress,
-                speeds: &self.cluster.speeds,
-                comms: &self.cluster.comms,
-                k_variants: &self.k_variants,
-                last_eval: self.last_eval,
-                initial_loss: self.initial_loss,
-            };
-            self.policy.on_commit_applied(w, &view);
-        }
+        self.with_view(|policy, view| policy.on_commit_applied(w, view));
 
         // Fresh model snapshot rides back to the worker once every shard
-        // has applied its slab (sharded apply occupancy + striped return).
+        // has applied its slab (sharded apply occupancy + striped return
+        // + the link-model serialization of the dense pull).
         let done = self.ps_apply_done();
         let oneway = self.oneway_secs(w);
+        let down_extra = std::mem::take(&mut self.workers[w].down_extra);
         self.workers[w].pending_pull = Some(self.global.clone());
-        self.push_event(done + oneway, EventKind::Ready(w));
+        self.push_event(done + oneway + down_extra, EventKind::Ready(w));
         Ok(())
     }
 
@@ -522,18 +616,7 @@ impl SimEngine {
         let blocked: Vec<usize> =
             (0..self.progress.len()).filter(|&w| self.progress[w].blocked).collect();
         for w in blocked {
-            let action = {
-                let view = ClusterView {
-                now: self.now,
-                workers: &self.progress,
-                speeds: &self.cluster.speeds,
-                comms: &self.cluster.comms,
-                k_variants: &self.k_variants,
-                last_eval: self.last_eval,
-                initial_loss: self.initial_loss,
-            };
-                self.policy.next_action(w, &view)
-            };
+            let action = self.with_view(|policy, view| policy.next_action(w, view));
             if action != Action::Block {
                 self.progress[w].blocked = false;
                 if let Some(start) = self.workers[w].block_start.take() {
@@ -564,6 +647,12 @@ impl SimEngine {
         match delta {
             ClusterDelta::None => return Ok(()),
             ClusterDelta::Changed => {}
+            ClusterDelta::Blackout { until } => {
+                // Notify the policy again when connectivity returns so it
+                // can re-anchor (ADSP restarts its commit-rate search on
+                // both edges of the outage).
+                self.push_event(until, EventKind::BlackoutLift);
+            }
             ClusterDelta::Joined(w) => {
                 // Join-snapshot protocol: the newcomer pulls the current
                 // consistent global model and starts its counters at the
@@ -574,6 +663,7 @@ impl SimEngine {
                     u: self.global.zeros_like(),
                     in_flight: None,
                     in_flight_bytes: None,
+                    down_extra: 0.0,
                     pending_pull: None,
                     metrics: WorkerMetrics::default(),
                     block_start: None,
@@ -596,16 +686,7 @@ impl SimEngine {
                 self.workers[w].pending_pull = None;
             }
         }
-        let view = ClusterView {
-            now: self.now,
-            workers: &self.progress,
-            speeds: &self.cluster.speeds,
-            comms: &self.cluster.comms,
-            k_variants: &self.k_variants,
-            last_eval: self.last_eval,
-            initial_loss: self.initial_loss,
-        };
-        self.policy.on_cluster_change(&view);
+        self.with_view(|policy, view| policy.on_cluster_change(view));
         Ok(())
     }
 
@@ -663,17 +744,11 @@ impl SimEngine {
                 EventKind::CommitArrive(w) => {
                     self.on_commit_arrive(w)?;
                 }
+                EventKind::CommitApply(w) => {
+                    self.on_commit_apply(w)?;
+                }
                 EventKind::Checkpoint => {
-                    let view = ClusterView {
-                        now: self.now,
-                        workers: &self.progress,
-                        speeds: &self.cluster.speeds,
-                        comms: &self.cluster.comms,
-                        k_variants: &self.k_variants,
-                        last_eval: self.last_eval,
-                        initial_loss: self.initial_loss,
-                    };
-                    self.policy.on_checkpoint(&view);
+                    self.with_view(|policy, view| policy.on_checkpoint(view));
                     let next = self.now + self.spec.sync.gamma;
                     self.push_event(next, EventKind::Checkpoint);
                 }
@@ -693,21 +768,28 @@ impl SimEngine {
                     self.push_event(self.now + self.spec.eval_interval_secs, EventKind::Eval);
                 }
                 EventKind::EpochStart => {
-                    let view = ClusterView {
-                        now: self.now,
-                        workers: &self.progress,
-                        speeds: &self.cluster.speeds,
-                        comms: &self.cluster.comms,
-                        k_variants: &self.k_variants,
-                        last_eval: self.last_eval,
-                        initial_loss: self.initial_loss,
-                    };
-                    self.policy.on_epoch_start(&view);
+                    self.with_view(|policy, view| policy.on_epoch_start(view));
                     let next = self.now + self.spec.sync.epoch_secs;
                     self.push_event(next, EventKind::EpochStart);
                 }
                 EventKind::Cluster(i) => {
                     self.on_cluster_event(i)?;
+                }
+                EventKind::BlackoutLift => {
+                    // A later overlapping blackout may have extended the
+                    // outage past this lift: only report restored
+                    // connectivity once no active worker is still dark
+                    // (the extension scheduled its own lift event).
+                    let now = self.now;
+                    let still_dark = self
+                        .cluster
+                        .blackout_until
+                        .iter()
+                        .zip(&self.cluster.active)
+                        .any(|(&until, &active)| active && until > now);
+                    if !still_dark {
+                        self.with_view(|policy, view| policy.on_cluster_change(view));
+                    }
                 }
             }
             self.wake_blocked()?;

@@ -4,11 +4,45 @@
 //!
 //! Gradients are **real** — every simulated training step executes the
 //! model's AOT-compiled `local_steps` artifact through PJRT — while *time*
-//! is virtual: worker i advances `1/vᵢ` seconds per step (batch-scaled) and
-//! `Oᵢ` per commit round trip. Everything the paper measures (waiting time,
+//! is virtual: worker i advances `1/vᵢ` seconds per step (batch-scaled)
+//! and `Oᵢ` plus the [`crate::network`] link-model transfer time per
+//! commit round trip. Everything the paper measures (waiting time,
 //! convergence time, commit balance, bandwidth) is a function of exactly
 //! these quantities, so figure shapes are preserved while runs stay
 //! deterministic and fast.
+//!
+//! Running one simulation end to end (needs `make artifacts` for the
+//! model's AOT bundle, hence `no_run`):
+//!
+//! ```no_run
+//! use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+//! use adsp::simulation::SimEngine;
+//! use adsp::sync::SyncModelKind;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // The paper's motivating 1:1:3 cluster: two fast edge devices and one
+//! // three-times-slower straggler.
+//! let cluster = ClusterSpec::new(vec![
+//!     WorkerSpec::new(1.0, 0.2),
+//!     WorkerSpec::new(1.0, 0.2),
+//!     WorkerSpec::new(1.0 / 3.0, 0.2),
+//! ]);
+//! let mut spec = ExperimentSpec::new(
+//!     "mlp_quick",
+//!     cluster,
+//!     SyncSpec::new(SyncModelKind::Adsp),
+//! );
+//! spec.batch_size = 32;
+//! spec.max_virtual_secs = 600.0;
+//! let outcome = SimEngine::new(spec)?.run()?;
+//! println!(
+//!     "converged at {:.0}s (virtual) after {} commits",
+//!     outcome.convergence_time(),
+//!     outcome.total_commits,
+//! );
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod engine;
 

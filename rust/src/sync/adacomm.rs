@@ -18,11 +18,13 @@ pub struct FixedAdacommPolicy {
 }
 
 impl FixedAdacommPolicy {
+    /// A fixed-τ policy over `m` workers (τ clamped to ≥ 1).
     pub fn new(m: usize, tau: u64) -> Self {
         assert!(tau >= 1);
         FixedAdacommPolicy { m, tau }
     }
 
+    /// The fixed per-round local-step count τ.
     pub fn tau(&self) -> u64 {
         self.tau
     }
@@ -84,6 +86,7 @@ pub struct AdacommPolicy {
 }
 
 impl AdacommPolicy {
+    /// An adaptive-τ policy over `m` workers starting from `tau0`.
     pub fn new(m: usize, tau0: u64) -> Self {
         assert!(tau0 >= 1);
         AdacommPolicy {
@@ -99,6 +102,7 @@ impl AdacommPolicy {
         }
     }
 
+    /// The current (adapted) per-round local-step count τ.
     pub fn tau(&self) -> u64 {
         self.tau
     }

@@ -53,6 +53,9 @@ enum SearchState {
     Settled { rate: u64 },
 }
 
+/// The paper's scheduler: per-worker commit timers paced by a shared
+/// target commit count, with an online epoch-wise commit-rate search
+/// (paper Alg. 1 + §4.2's reward fit).
 pub struct AdspPolicy {
     m: usize,
     gamma: f64,
@@ -74,6 +77,8 @@ pub struct AdspPolicy {
 }
 
 impl AdspPolicy {
+    /// Build the scheduler from the sync hyper-parameters and the initial
+    /// cluster (speeds/comms seed the ΔC assignment).
     pub fn new(spec: &SyncSpec, cluster: &ClusterSpec) -> Self {
         let m = cluster.m();
         let initial_rate = spec.fixed_delta_c.max(1);
@@ -96,6 +101,8 @@ impl AdspPolicy {
         }
     }
 
+    /// The commit rate currently in force (probing candidate or the
+    /// settled winner).
     pub fn current_rate(&self) -> u64 {
         match &self.search {
             SearchState::Probing { rate, .. } => *rate,
@@ -103,6 +110,7 @@ impl AdspPolicy {
         }
     }
 
+    /// The shared target commit count C_target workers pace toward.
     pub fn c_target(&self) -> f64 {
         self.c_target
     }

@@ -15,6 +15,9 @@ use crate::config::{ClusterSpec, SyncSpec};
 
 use super::{Action, ClusterView, SyncModelKind, SyncPolicy};
 
+/// ADSP⁺ (paper §5.3): commit after a fixed per-worker local-step count
+/// τᵢ — offline-searched when `tau_per_worker` is given, else derived
+/// from the no-waiting condition — never blocking.
 pub struct AdspPlusPolicy {
     m: usize,
     tau: Vec<u64>,
@@ -28,6 +31,8 @@ pub struct AdspPlusPolicy {
 }
 
 impl AdspPlusPolicy {
+    /// Build from the sync spec (`tau_per_worker` if complete, else the
+    /// no-waiting derivation over the cluster's speeds and comms).
     pub fn new(spec: &SyncSpec, cluster: &ClusterSpec) -> Self {
         let m = cluster.m();
         let explicit = spec.tau_per_worker.len() == m;
@@ -59,6 +64,7 @@ impl AdspPlusPolicy {
             .collect()
     }
 
+    /// The per-worker local-step counts τᵢ in force.
     pub fn tau(&self) -> &[u64] {
         &self.tau
     }

@@ -18,6 +18,7 @@ pub struct BspPolicy {
 }
 
 impl BspPolicy {
+    /// A full-barrier policy over `m` workers.
     pub fn new(m: usize) -> Self {
         BspPolicy { m }
     }
@@ -64,10 +65,12 @@ pub struct SspPolicy {
 }
 
 impl SspPolicy {
+    /// An SSP policy over `m` workers with staleness bound `s`.
     pub fn new(m: usize, s: u64) -> Self {
         SspPolicy { m, s }
     }
 
+    /// The staleness bound `s` (max lead over the slowest worker).
     pub fn staleness_bound(&self) -> u64 {
         self.s
     }
@@ -108,6 +111,7 @@ pub struct TapPolicy {
 }
 
 impl TapPolicy {
+    /// A never-waiting policy over `m` workers.
     pub fn new(m: usize) -> Self {
         TapPolicy { m }
     }

@@ -27,21 +27,31 @@ pub use adsp::{implicit_momentum, AdspPolicy};
 pub use adsp_plus::AdspPlusPolicy;
 pub use classic::{BspPolicy, SspPolicy, TapPolicy};
 
-/// Which synchronization model to run (CLI / TOML facing).
+/// Which synchronization model to run (CLI / JSON facing).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SyncModelKind {
+    /// Bulk Synchronous Parallel: full barrier every round.
     Bsp,
+    /// Stale Synchronous Parallel: block past the staleness bound.
     Ssp,
+    /// Totally Asynchronous Parallel: never waits.
     Tap,
+    /// ADACOMM with the adaptive τ rule.
     Adacomm,
+    /// ADACOMM with a fixed τ.
     FixedAdacomm,
+    /// The paper's scheduler (online commit-rate search, never blocks).
     Adsp,
+    /// ADSP⁺: offline per-worker τᵢ, never blocks.
     AdspPlus,
+    /// BSP with speed-proportional per-worker batch sizes.
     BatchTuneBsp,
+    /// Fixed ADACOMM with speed-proportional per-worker batch sizes.
     BatchTuneFixedAdacomm,
 }
 
 impl SyncModelKind {
+    /// Every model, in the order `adsp list` prints them.
     pub const ALL: [SyncModelKind; 9] = [
         SyncModelKind::Bsp,
         SyncModelKind::Ssp,
@@ -54,6 +64,7 @@ impl SyncModelKind {
         SyncModelKind::BatchTuneFixedAdacomm,
     ];
 
+    /// The CLI / JSON name.
     pub fn name(&self) -> &'static str {
         match self {
             SyncModelKind::Bsp => "bsp",
@@ -77,6 +88,7 @@ impl SyncModelKind {
         }
     }
 
+    /// True for the BatchTune wrappers (per-worker batch sizing).
     pub fn is_batchtune(&self) -> bool {
         matches!(self, SyncModelKind::BatchTuneBsp | SyncModelKind::BatchTuneFixedAdacomm)
     }
@@ -136,6 +148,7 @@ impl Default for WorkerProgress {
 pub struct ClusterView<'a> {
     /// Current (virtual) time in seconds.
     pub now: f64,
+    /// Per-worker progress counters (index-stable across churn).
     pub workers: &'a [WorkerProgress],
     /// v_i — steps per second at the reference batch size.
     pub speeds: &'a [f64],
@@ -161,14 +174,17 @@ impl ClusterView<'_> {
         self.workers.iter().filter(|w| w.active).count()
     }
 
+    /// Minimum step count over the active workers.
     pub fn min_steps(&self) -> u64 {
         self.workers.iter().filter(|w| w.active).map(|w| w.steps).min().unwrap_or(0)
     }
 
+    /// Minimum commit count over the active workers.
     pub fn min_commits(&self) -> u64 {
         self.workers.iter().filter(|w| w.active).map(|w| w.commits).min().unwrap_or(0)
     }
 
+    /// Maximum commit count over the active workers.
     pub fn max_commits(&self) -> u64 {
         self.workers.iter().filter(|w| w.active).map(|w| w.commits).max().unwrap_or(0)
     }
@@ -209,6 +225,7 @@ pub enum Action {
 /// Engine-agnostic synchronization policy. Implementations must be
 /// deterministic functions of their internal state and the [`ClusterView`].
 pub trait SyncPolicy: Send {
+    /// Which model this policy implements.
     fn kind(&self) -> SyncModelKind;
 
     /// Decide the next action for ready worker `w`.

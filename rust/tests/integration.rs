@@ -399,6 +399,138 @@ fn mid_run_slowdown_shifts_load_not_correctness() {
 }
 
 // ---------------------------------------------------------------------------
+// network model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_network_bit_identical_for_every_sync_model() {
+    // Acceptance pin: the link-model refactor must not perturb the
+    // static-comm path. A run with no `network` section, and a run whose
+    // network is *explicitly* degenerate (zero latency, unbounded
+    // bandwidth, no jitter, no ingress cap — per-worker entries
+    // included), must produce bit-identical loss logs and identical
+    // counters for every sync model.
+    require_artifacts!("mlp_quick");
+    use adsp::network::{LinkModel, NetworkSpec};
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let base = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        let mut degenerate = spec.clone();
+        degenerate.network = NetworkSpec {
+            default_link: LinkModel::unbounded(),
+            links: vec![LinkModel::unbounded(); spec.cluster.m()],
+            ingress_bytes_per_sec: 0.0,
+            ingress_discipline: adsp::network::IngressDiscipline::FairShare,
+        };
+        assert!(degenerate.network.is_static());
+        let same = SimEngine::new(degenerate).unwrap().run().unwrap();
+        assert_eq!(base.total_steps, same.total_steps, "{kind}: steps diverged");
+        assert_eq!(base.total_commits, same.total_commits, "{kind}: commits diverged");
+        assert_eq!(base.bytes_total, same.bytes_total, "{kind}: bytes diverged");
+        assert_eq!(
+            base.loss_log.samples.len(),
+            same.loss_log.samples.len(),
+            "{kind}: eval count diverged"
+        );
+        for (a, b) in base.loss_log.samples.iter().zip(&same.loss_log.samples) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{kind}: loss log diverged at t={}",
+                a.t
+            );
+        }
+        for (a, b) in base.workers.iter().zip(&same.workers) {
+            assert_eq!(
+                a.comm_secs.to_bits(),
+                b.comm_secs.to_bits(),
+                "{kind}: comm accounting diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn finite_links_slow_convergence_not_correctness() {
+    // A starved per-worker link must stretch commit time (more comm
+    // seconds per commit) without breaking training.
+    require_artifacts!("mlp_quick");
+    use adsp::network::LinkModel;
+    let spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    let free = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+    let mut starved = spec;
+    starved.network.default_link =
+        LinkModel { bandwidth_bytes_per_sec: 2e5, latency_secs: 0.05, jitter: 0.0 };
+    let slow = SimEngine::new(starved).unwrap().run().unwrap();
+    assert!(slow.total_steps > 0);
+    assert!(slow.best_loss < slow.loss_log.first_loss().unwrap(), "training regressed");
+    let per_commit = |o: &adsp::simulation::SimOutcome| {
+        let comm: f64 = o.workers.iter().map(|w| w.comm_secs).sum();
+        comm / o.total_commits.max(1) as f64
+    };
+    assert!(
+        per_commit(&slow) > per_commit(&free),
+        "finite link should cost comm time: {} vs {}",
+        per_commit(&slow),
+        per_commit(&free)
+    );
+}
+
+#[test]
+fn blackout_defers_commits_and_training_recovers() {
+    require_artifacts!("mlp_quick");
+    for kind in [SyncModelKind::Adsp, SyncModelKind::Ssp, SyncModelKind::Tap] {
+        let mut spec = tiny_spec("mlp_quick", kind);
+        // Workers 0 and 2 offline for 30–60s of the 120s run.
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 30.0,
+            duration: 30.0,
+            workers: vec![0, 2],
+        }]);
+        let out = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        assert!(!out.deadlocked, "{kind} deadlocked under blackout");
+        assert!(out.total_commits > 0, "{kind} never committed");
+        assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "{kind} regressed");
+        // The blackout actually cost the affected workers comm time.
+        let base = SimEngine::new(tiny_spec("mlp_quick", kind)).unwrap().run().unwrap();
+        let wait = |o: &adsp::simulation::SimOutcome| {
+            o.workers.iter().map(|w| w.comm_secs).sum::<f64>()
+        };
+        assert!(
+            wait(&out) > wait(&base),
+            "{kind}: blackout added no comm time ({} vs {})",
+            wait(&out),
+            wait(&base)
+        );
+    }
+}
+
+#[test]
+fn ingress_cap_queues_concurrent_commits() {
+    require_artifacts!("mlp_quick");
+    use adsp::network::IngressDiscipline;
+    // TAP commits every step, so a tight aggregate cap must show up as
+    // comm time for both disciplines.
+    for discipline in [IngressDiscipline::Fifo, IngressDiscipline::FairShare] {
+        let spec = tiny_spec("mlp_quick", SyncModelKind::Tap);
+        let free = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        let mut capped = spec;
+        capped.network.ingress_bytes_per_sec = 2e5;
+        capped.network.ingress_discipline = discipline;
+        let out = SimEngine::new(capped).unwrap().run().unwrap();
+        assert!(out.total_commits > 0);
+        let per_commit = |o: &adsp::simulation::SimOutcome| {
+            o.workers.iter().map(|w| w.comm_secs).sum::<f64>()
+                / o.total_commits.max(1) as f64
+        };
+        assert!(
+            per_commit(&out) > per_commit(&free),
+            "{discipline:?}: ingress cap added no delay"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // real-time engine
 // ---------------------------------------------------------------------------
 
@@ -454,6 +586,30 @@ fn realtime_engine_applies_timeline_churn() {
     assert!(out.workers[3].steps > 0, "joiner never trained");
     assert!(out.final_loss.is_finite());
     assert!(out.wall_secs < 30.0, "realtime churn run took too long: {}", out.wall_secs);
+}
+
+#[test]
+fn realtime_engine_sleeps_link_time_and_survives_blackout() {
+    // Wall-clock network model: finite links pad the commit legs and a
+    // short blackout holds pushes without wedging any thread.
+    require_artifacts!("mlp_quick");
+    use adsp::network::LinkModel;
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 1500;
+    spec.eval_interval_secs = 10.0;
+    spec.network.default_link =
+        LinkModel { bandwidth_bytes_per_sec: 5e6, latency_secs: 0.01, jitter: 0.0 };
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+        start: 30.0,
+        duration: 20.0,
+        workers: vec![0],
+    }]);
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert!(out.total_commits > 0, "no commits survived the blackout");
+    assert!(out.final_loss.is_finite());
+    assert!(out.wall_secs < 30.0, "realtime blackout run took too long: {}", out.wall_secs);
 }
 
 // ---------------------------------------------------------------------------

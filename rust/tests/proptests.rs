@@ -681,7 +681,7 @@ fn prop_cluster_events_preserve_invariants() {
         let mut t = 0.0;
         for _ in 0..30 {
             t += r.next_f64() * 10.0;
-            let ev = match r.below(4) {
+            let ev = match r.below(6) {
                 0 => ClusterEvent::SpeedChange {
                     t,
                     worker: r.below(state.m()),
@@ -696,7 +696,25 @@ fn prop_cluster_events_preserve_invariants() {
                     t,
                     spec: WorkerSpec::new(0.1 + 2.0 * r.next_f64(), 0.1 + 0.3 * r.next_f64()),
                 },
-                _ => ClusterEvent::WorkerLeave { t, worker: r.below(state.m()) },
+                3 => ClusterEvent::WorkerLeave { t, worker: r.below(state.m()) },
+                4 => ClusterEvent::BandwidthChange {
+                    t,
+                    worker: r.below(state.m()),
+                    bandwidth_bytes_per_sec: if r.below(3) == 0 {
+                        0.0
+                    } else {
+                        1e4 + 1e7 * r.next_f64()
+                    },
+                },
+                _ => ClusterEvent::CommBlackout {
+                    start: t,
+                    duration: 0.5 + 20.0 * r.next_f64(),
+                    workers: if r.below(2) == 0 {
+                        Vec::new()
+                    } else {
+                        vec![r.below(state.m())]
+                    },
+                },
             };
             let _ = state.apply_event(&ev); // invalid targets must error, not corrupt
             assert!(state.active_count() >= 1, "case {case}: membership emptied");
@@ -709,6 +727,16 @@ fn prop_cluster_events_preserve_invariants() {
             assert_eq!(state.comms.len(), m, "case {case}");
             assert_eq!(state.active.len(), m, "case {case}");
             assert_eq!(state.batch_sizes.len(), m, "case {case}");
+            assert_eq!(state.links.len(), m, "case {case}");
+            assert_eq!(state.blackout_until.len(), m, "case {case}");
+            assert!(
+                state.links.iter().map(|l| l.validate()).all(|r| r.is_ok()),
+                "case {case}: invalid link crept in"
+            );
+            assert!(
+                state.blackout_until.iter().all(|&b| b >= 0.0 && b.is_finite()),
+                "case {case}: bad blackout lift time"
+            );
         }
     }
 }
@@ -728,7 +756,7 @@ fn prop_timeline_json_roundtrips_through_spec() {
             t += 0.5 + r.next_f64() * 20.0;
             let alive: Vec<usize> =
                 (0..active.len()).filter(|&w| active[w]).collect();
-            match r.below(4) {
+            match r.below(6) {
                 0 => events.push(ClusterEvent::SpeedChange {
                     t,
                     worker: alive[r.below(alive.len())],
@@ -746,6 +774,20 @@ fn prop_timeline_json_roundtrips_through_spec() {
                     });
                     active.push(true);
                 }
+                3 => events.push(ClusterEvent::BandwidthChange {
+                    t,
+                    worker: alive[r.below(alive.len())],
+                    bandwidth_bytes_per_sec: 1e5 * (1.0 + r.below(100) as f64),
+                }),
+                4 => events.push(ClusterEvent::CommBlackout {
+                    start: t,
+                    duration: 0.5 + 30.0 * r.next_f64(),
+                    workers: if r.below(2) == 0 {
+                        Vec::new()
+                    } else {
+                        vec![alive[r.below(alive.len())]]
+                    },
+                }),
                 _ => {
                     if alive.len() > 1 {
                         let w = alive[r.below(alive.len())];
@@ -851,5 +893,134 @@ fn prop_sharded_apply_bit_identical_for_any_shard_count() {
             serial.global(),
             &format!("case {case} s={} mu={}", cp.shards, cp.mu),
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// network layer: links, contention, blackout specs
+// ---------------------------------------------------------------------------
+
+use adsp::network::{IngressDiscipline, IngressQueue, LinkModel, NetworkSpec};
+
+#[test]
+fn prop_transfer_time_monotone_in_bytes_and_inverse_in_bandwidth() {
+    // More bytes never transfer faster; more bandwidth never transfers
+    // slower (latency and jitter-free paths held fixed).
+    let mut rng = Rng::new(0x11A7);
+    for case in 0..300u64 {
+        let mut r = rng.split(case);
+        let latency = r.next_f64() * 0.5;
+        let bw_lo = 1e3 + 1e6 * r.next_f64();
+        let bw_hi = bw_lo * (1.0 + 4.0 * r.next_f64());
+        let bytes_a = r.next_u64() % 10_000_000;
+        let bytes_b = bytes_a + r.next_u64() % 10_000_000;
+        let slow = LinkModel { bandwidth_bytes_per_sec: bw_lo, latency_secs: latency, jitter: 0.0 };
+        let fast = LinkModel { bandwidth_bytes_per_sec: bw_hi, latency_secs: latency, jitter: 0.0 };
+        // Monotone in payload bytes.
+        assert!(
+            slow.transfer_secs(bytes_b) >= slow.transfer_secs(bytes_a),
+            "case {case}: {bytes_b} B transferred faster than {bytes_a} B"
+        );
+        // Inversely monotone in bandwidth.
+        assert!(
+            fast.transfer_secs(bytes_b) <= slow.transfer_secs(bytes_b),
+            "case {case}: more bandwidth made the transfer slower"
+        );
+        // The unbounded link lower-bounds everything at its latency.
+        let free = LinkModel { bandwidth_bytes_per_sec: 0.0, latency_secs: latency, jitter: 0.0 };
+        assert!(free.transfer_secs(bytes_b) <= fast.transfer_secs(bytes_b) + 1e-12);
+        assert!((free.transfer_secs(bytes_b) - latency).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_ingress_admission_is_sane_under_random_traffic() {
+    // For both disciplines: completions never precede arrivals, an
+    // unbounded queue is the identity, and FIFO completions are monotone
+    // in admission order (the pipe never reorders commits).
+    let mut rng = Rng::new(0x1264);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let capacity = 1e4 + 1e7 * r.next_f64();
+        let mut fifo = IngressQueue::new(capacity, IngressDiscipline::Fifo);
+        let mut fair = IngressQueue::new(capacity, IngressDiscipline::FairShare);
+        let mut open = IngressQueue::unbounded();
+        let mut t = 0.0;
+        let mut last_fifo_done = 0.0;
+        for _ in 0..50 {
+            t += r.next_f64();
+            let bytes = r.next_u64() % 5_000_000;
+            let f = fifo.admit(t, bytes);
+            assert!(f >= t, "case {case}: FIFO finished before arrival");
+            assert!(f >= last_fifo_done, "case {case}: FIFO reordered commits");
+            last_fifo_done = f;
+            let s = fair.admit(t, bytes);
+            assert!(s >= t, "case {case}: fair share finished before arrival");
+            assert!(
+                s >= t + bytes as f64 / capacity - 1e-9,
+                "case {case}: fair share beat the uncontended service time"
+            );
+            assert_eq!(open.admit(t, bytes), t, "case {case}: unbounded delayed a commit");
+        }
+    }
+}
+
+#[test]
+fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
+    // Random network sections + blackout-bearing timelines survive the
+    // ExperimentSpec JSON cycle exactly.
+    let mut rng = Rng::new(0xB1AC);
+    for case in 0..150u64 {
+        let mut r = rng.split(case);
+        let cluster = random_cluster(&mut r);
+        let m = cluster.m();
+        let mut spec =
+            ExperimentSpec::new("mlp_quick", cluster, SyncSpec::new(SyncModelKind::Adsp));
+        spec.network = NetworkSpec {
+            default_link: LinkModel {
+                bandwidth_bytes_per_sec: if r.below(3) == 0 { 0.0 } else { 1e4 + 1e7 * r.next_f64() },
+                latency_secs: 0.25 * r.next_f64(),
+                jitter: if r.below(2) == 0 { 0.0 } else { 0.5 * r.next_f64() },
+            },
+            links: if r.below(2) == 0 {
+                Vec::new()
+            } else {
+                (0..m)
+                    .map(|_| LinkModel::with_bandwidth(1e5 * (1.0 + r.below(50) as f64)))
+                    .collect()
+            },
+            ingress_bytes_per_sec: if r.below(2) == 0 { 0.0 } else { 1e6 + 1e8 * r.next_f64() },
+            ingress_discipline: if r.below(2) == 0 {
+                IngressDiscipline::Fifo
+            } else {
+                IngressDiscipline::FairShare
+            },
+        };
+        let mut events = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..r.below(6) {
+            t += 1.0 + 20.0 * r.next_f64();
+            events.push(ClusterEvent::CommBlackout {
+                start: t,
+                duration: 0.5 + 30.0 * r.next_f64(),
+                workers: match r.below(3) {
+                    0 => Vec::new(),
+                    1 => vec![r.below(m)],
+                    _ => (0..m).filter(|_| r.below(2) == 0).collect(),
+                },
+            });
+            t += 1.0;
+            events.push(ClusterEvent::BandwidthChange {
+                t,
+                worker: r.below(m),
+                bandwidth_bytes_per_sec: 1e5 * (1.0 + r.below(100) as f64),
+            });
+        }
+        spec.timeline = ClusterTimeline::new(events);
+        spec.validate().unwrap_or_else(|e| panic!("case {case}: generated invalid: {e}"));
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back.network, spec.network, "case {case}: network section drifted");
+        assert_eq!(back.timeline, spec.timeline, "case {case}: blackout timeline drifted");
     }
 }

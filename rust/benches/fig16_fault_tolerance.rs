@@ -1,0 +1,109 @@
+//! Bench harness for fig16 (reproduction extension): regenerates the
+//! fault-tolerance series at bench scale (crash rate × checkpoint interval
+//! × sync model; see `adsp::experiments::fig16`), asserts the headline
+//! shapes — ADSP's mean convergence-time degradation is the smallest, the
+//! checkpoint cost is visibly nonzero, and shorter intervals trade that
+//! overhead for less lost work — and times the checkpoint/restore hot path
+//! on the real shard pool. Full-size: `adsp experiment fig16 --full`.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use adsp::experiments::{self, Scale};
+use adsp::pserver::ShardedParameterServer;
+use adsp::runtime::ParamSet;
+use adsp::util::BenchHarness;
+
+fn main() {
+    // Checkpoint/restore hot path first — artifact-free, so CI exercises
+    // the consistent-cut machinery even when `make artifacts` never ran.
+    let h = BenchHarness::new("fig16").with_iters(3, 20);
+    h.run("pserver_checkpoint_restore_roundtrip", || {
+        let init = ParamSet { leaves: vec![vec![0.25f32; 40_000], vec![0.5f32; 8_192]] };
+        let mut ps = ShardedParameterServer::new(init.clone(), 0.2, 0.9, 4, 2);
+        let u = init.zeros_like();
+        for _ in 0..4 {
+            ps.apply(&u);
+        }
+        let ckpt = ps.checkpoint();
+        assert_eq!(ckpt.version, 4);
+        ps.apply(&u);
+        ps.restore(&ckpt);
+        let (v, _) = ps.versioned_snapshot();
+        assert_eq!(v, 4);
+        v
+    });
+
+    if !bench_common::artifacts_ready() {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let table = experiments::run_by_name("fig16", Scale::Bench).expect("fig16 failed");
+    table.print();
+    table.write_csv().expect("csv");
+    println!("[fig16 series regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+
+    // Every crash-count × interval × sync-model cell completed.
+    assert_eq!(table.rows.len(), 12, "2 crash counts x 2 intervals x 3 sync models");
+
+    let col = |name: &str| table.header.iter().position(|h| h == name).unwrap();
+    let (sync_i, ckpt_i) = (col("sync"), col("ckpt"));
+    let deg_i = col("degradation");
+    let wasted_i = col("wasted_steps");
+    let over_i = col("ckpt_overhead_s");
+    let f = |row: &Vec<String>, i: usize| -> f64 { row[i].parse().unwrap() };
+
+    // (1) Headline: ADSP's mean degradation over the whole sweep is
+    // strictly the smallest — it never blocks on crashed workers and
+    // re-anchors its commit target at every failure/recovery edge.
+    let mean_deg = |sync: &str| -> f64 {
+        let rows = table.filter_rows("sync", sync);
+        rows.iter().map(|r| f(r, deg_i)).sum::<f64>() / rows.len() as f64
+    };
+    let (adsp, ssp, adacomm) = (mean_deg("adsp"), mean_deg("ssp"), mean_deg("adacomm"));
+    assert!(
+        adsp < ssp,
+        "ADSP should degrade less than SSP under faults: {adsp:.4} vs {ssp:.4}"
+    );
+    assert!(
+        adsp < adacomm,
+        "ADSP should degrade less than ADACOMM under faults: {adsp:.4} vs {adacomm:.4}"
+    );
+
+    // (2) The checkpoint cost model is visibly nonzero in every cell.
+    for row in &table.rows {
+        assert!(
+            f(row, over_i) > 0.0,
+            "checkpoint overhead must be nonzero: {} / {}",
+            row[sync_i],
+            row[ckpt_i]
+        );
+    }
+
+    // (3) The trade-off: per sync model, the short interval pays more
+    // checkpoint overhead; in aggregate it loses less work to the shard
+    // failover (fewer commits past the last checkpoint roll back).
+    let agg = |ckpt: &str, i: usize| -> f64 {
+        table.filter_rows("ckpt", ckpt).iter().map(|r| f(r, i)).sum()
+    };
+    for sync in ["adsp", "ssp", "adacomm"] {
+        let per = |ckpt: &str| -> f64 {
+            table
+                .filter_rows("sync", sync)
+                .iter()
+                .filter(|r| r[ckpt_i] == ckpt)
+                .map(|r| f(r, over_i))
+                .sum()
+        };
+        assert!(
+            per("short") > per("long"),
+            "{sync}: short intervals should cost more checkpoint overhead"
+        );
+    }
+    assert!(
+        agg("short", wasted_i) <= agg("long", wasted_i),
+        "short intervals should waste no more work than long ones: {} vs {}",
+        agg("short", wasted_i),
+        agg("long", wasted_i)
+    );
+}

@@ -25,12 +25,24 @@ pub enum ClusterEvent {
     /// at `t` (`0.0` = unbounded) — a cell handover, a congested uplink
     /// recovering, a throttled plan kicking in.
     BandwidthChange { t: f64, worker: usize, bandwidth_bytes_per_sec: f64 },
-    /// The listed `workers` (empty = every worker active at `start`) lose
-    /// connectivity for `duration` seconds: commits issued during the
-    /// window defer until the blackout lifts, at which point policies are
-    /// re-notified through `on_cluster_change` (ADSP re-anchors its
-    /// commit target).
-    CommBlackout { start: f64, duration: f64, workers: Vec<usize> },
+    /// The listed `workers` — plus every active member of the named
+    /// `cell`, when one is given — lose connectivity for `duration`
+    /// seconds (both empty = every worker active at `start`): commits
+    /// issued during the window defer until the blackout lifts, at which
+    /// point policies are re-notified through `on_cluster_change` (ADSP
+    /// re-anchors its commit target). Cells are the `cell` labels on
+    /// [`WorkerSpec`], so one event can drop a correlated worker group.
+    CommBlackout { start: f64, duration: f64, workers: Vec<usize>, cell: Option<String> },
+    /// Worker `worker` crashes *uncleanly* at `t`: its in-flight commit is
+    /// dropped, its uncommitted local steps are lost, and it rejoins
+    /// `restart_after` seconds later through the join-snapshot path (model
+    /// from the PS's consistent state, counters at the active minimum).
+    WorkerCrash { t: f64, worker: usize, restart_after: f64 },
+    /// PS shard `shard` fails at `t`. Commits block until failover
+    /// completes `recover_after` seconds later by restoring the last
+    /// checkpoint — a consistent cut, so *every* shard rolls back together
+    /// and the updates applied past the checkpoint version are lost.
+    ShardFailure { t: f64, shard: usize, recover_after: f64 },
 }
 
 impl ClusterEvent {
@@ -41,7 +53,9 @@ impl ClusterEvent {
             | ClusterEvent::CommChange { t, .. }
             | ClusterEvent::WorkerJoin { t, .. }
             | ClusterEvent::WorkerLeave { t, .. }
-            | ClusterEvent::BandwidthChange { t, .. } => *t,
+            | ClusterEvent::BandwidthChange { t, .. }
+            | ClusterEvent::WorkerCrash { t, .. }
+            | ClusterEvent::ShardFailure { t, .. } => *t,
             ClusterEvent::CommBlackout { start, .. } => *start,
         }
     }
@@ -55,6 +69,8 @@ impl ClusterEvent {
             ClusterEvent::WorkerLeave { .. } => "leave",
             ClusterEvent::BandwidthChange { .. } => "bandwidth_change",
             ClusterEvent::CommBlackout { .. } => "blackout",
+            ClusterEvent::WorkerCrash { .. } => "crash",
+            ClusterEvent::ShardFailure { .. } => "shard_failure",
         }
     }
 
@@ -73,13 +89,19 @@ impl ClusterEvent {
                 ("worker", Json::num(*worker as f64)),
                 ("comm_secs", Json::num(*comm_secs)),
             ]),
-            ClusterEvent::WorkerJoin { t, spec } => Json::obj(vec![
-                ("kind", Json::str(self.kind_name())),
-                ("t", Json::num(*t)),
-                ("speed", Json::num(spec.speed)),
-                ("comm_secs", Json::num(spec.comm_secs)),
-                ("batch_size", Json::num(spec.batch_size as f64)),
-            ]),
+            ClusterEvent::WorkerJoin { t, spec } => {
+                let mut pairs = vec![
+                    ("kind", Json::str(self.kind_name())),
+                    ("t", Json::num(*t)),
+                    ("speed", Json::num(spec.speed)),
+                    ("comm_secs", Json::num(spec.comm_secs)),
+                    ("batch_size", Json::num(spec.batch_size as f64)),
+                ];
+                if !spec.cell.is_empty() {
+                    pairs.push(("cell", Json::str(spec.cell.clone())));
+                }
+                Json::obj(pairs)
+            }
             ClusterEvent::WorkerLeave { t, worker } => Json::obj(vec![
                 ("kind", Json::str(self.kind_name())),
                 ("t", Json::num(*t)),
@@ -93,14 +115,32 @@ impl ClusterEvent {
                     ("bandwidth_bytes_per_sec", Json::num(*bandwidth_bytes_per_sec)),
                 ])
             }
-            ClusterEvent::CommBlackout { start, duration, workers } => Json::obj(vec![
+            ClusterEvent::CommBlackout { start, duration, workers, cell } => {
+                let mut pairs = vec![
+                    ("kind", Json::str(self.kind_name())),
+                    ("t", Json::num(*start)),
+                    ("duration", Json::num(*duration)),
+                    (
+                        "workers",
+                        Json::Arr(workers.iter().map(|&w| Json::num(w as f64)).collect()),
+                    ),
+                ];
+                if let Some(c) = cell {
+                    pairs.push(("cell", Json::str(c.clone())));
+                }
+                Json::obj(pairs)
+            }
+            ClusterEvent::WorkerCrash { t, worker, restart_after } => Json::obj(vec![
                 ("kind", Json::str(self.kind_name())),
-                ("t", Json::num(*start)),
-                ("duration", Json::num(*duration)),
-                (
-                    "workers",
-                    Json::Arr(workers.iter().map(|&w| Json::num(w as f64)).collect()),
-                ),
+                ("t", Json::num(*t)),
+                ("worker", Json::num(*worker as f64)),
+                ("restart_after", Json::num(*restart_after)),
+            ]),
+            ClusterEvent::ShardFailure { t, shard, recover_after } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("shard", Json::num(*shard as f64)),
+                ("recover_after", Json::num(*recover_after)),
             ]),
         }
     }
@@ -126,6 +166,7 @@ impl ClusterEvent {
                     speed: v.req("speed")?.as_f64()?,
                     comm_secs: v.f64_or("comm_secs", 0.2)?,
                     batch_size: v.usize_or("batch_size", 0)?,
+                    cell: v.str_or("cell", "")?.to_string(),
                 },
             },
             "leave" => ClusterEvent::WorkerLeave { t, worker: v.req("worker")?.as_usize()? },
@@ -141,6 +182,17 @@ impl ClusterEvent {
                     Some(arr) => arr.usize_vec()?,
                     None => Vec::new(),
                 },
+                cell: v.get("cell").map(|c| c.as_str().map(str::to_string)).transpose()?,
+            },
+            "crash" => ClusterEvent::WorkerCrash {
+                t,
+                worker: v.req("worker")?.as_usize()?,
+                restart_after: v.req("restart_after")?.as_f64()?,
+            },
+            "shard_failure" => ClusterEvent::ShardFailure {
+                t,
+                shard: v.req("shard")?.as_usize()?,
+                recover_after: v.req("recover_after")?.as_f64()?,
             },
             other => bail!("unknown cluster event kind '{other}'"),
         })
@@ -153,14 +205,35 @@ mod tests {
 
     #[test]
     fn json_roundtrip_every_kind() {
+        let mut celled = WorkerSpec::new(2.5, 0.3);
+        celled.cell = "edge-a".to_string();
         let events = vec![
             ClusterEvent::SpeedChange { t: 60.0, worker: 2, speed: 0.25 },
             ClusterEvent::CommChange { t: 90.5, worker: 0, comm_secs: 1.5 },
             ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(1.5, 0.4) },
+            ClusterEvent::WorkerJoin { t: 130.0, spec: celled },
             ClusterEvent::WorkerLeave { t: 180.0, worker: 1 },
             ClusterEvent::BandwidthChange { t: 200.0, worker: 2, bandwidth_bytes_per_sec: 5e5 },
-            ClusterEvent::CommBlackout { start: 240.0, duration: 30.0, workers: vec![0, 2] },
-            ClusterEvent::CommBlackout { start: 300.0, duration: 10.0, workers: vec![] },
+            ClusterEvent::CommBlackout {
+                start: 240.0,
+                duration: 30.0,
+                workers: vec![0, 2],
+                cell: None,
+            },
+            ClusterEvent::CommBlackout {
+                start: 300.0,
+                duration: 10.0,
+                workers: vec![],
+                cell: None,
+            },
+            ClusterEvent::CommBlackout {
+                start: 320.0,
+                duration: 10.0,
+                workers: vec![1],
+                cell: Some("edge-a".to_string()),
+            },
+            ClusterEvent::WorkerCrash { t: 400.0, worker: 1, restart_after: 45.0 },
+            ClusterEvent::ShardFailure { t: 500.0, shard: 3, recover_after: 20.0 },
         ];
         for ev in events {
             let back = ClusterEvent::from_json(&Json::parse(&ev.to_json().dump()).unwrap())

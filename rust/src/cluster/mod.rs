@@ -7,8 +7,10 @@
 //! cluster a first-class, time-varying object shared by both engines:
 //!
 //! * [`event::ClusterEvent`] — one scripted change: a speed, comm-time
-//!   or link-bandwidth shift, a communication blackout, a worker joining,
-//!   or a worker leaving.
+//!   or link-bandwidth shift, a communication blackout (optionally
+//!   targeting a named worker *cell*), a worker joining or leaving, an
+//!   unclean worker crash, or a PS shard failure (see [`crate::fault`]
+//!   for the recovery semantics).
 //! * [`timeline::ClusterTimeline`] — a time-sorted script of events with
 //!   JSON round-trip (it rides inside `ExperimentSpec`) and validation
 //!   against the evolving membership.
@@ -17,8 +19,9 @@
 //!   windows. Both engines own one; it is the *single* source of truth for
 //!   the per-worker batch assignment (BatchTune included), which the seed
 //!   computed independently in each engine.
-//! * [`scenarios`] — the named presets swept by the `fig14_adaptability`
-//!   and `fig15_comm_stress` experiments and the CLI's `--scenario` flag.
+//! * [`scenarios`] — the named presets swept by the `fig14_adaptability`,
+//!   `fig15_comm_stress` and `fig16_fault_tolerance` experiments and the
+//!   CLI's `--scenario` flag (`--list-scenarios` prints the catalogue).
 //!
 //! Event semantics (see DESIGN.md §Timeline for the per-policy reaction
 //! table): events fire in virtual time in the simulator and on the scaled
@@ -38,7 +41,7 @@
 //! // it against a 2-worker cluster.
 //! let timeline = ClusterTimeline::new(vec![
 //!     ClusterEvent::SpeedChange { t: 60.0, worker: 0, speed: 0.25 },
-//!     ClusterEvent::CommBlackout { start: 120.0, duration: 30.0, workers: vec![1] },
+//!     ClusterEvent::CommBlackout { start: 120.0, duration: 30.0, workers: vec![1], cell: None },
 //! ]);
 //! assert_eq!(timeline.len(), 2);
 //! timeline.validate(2).expect("script is consistent");

@@ -15,8 +15,32 @@ use super::timeline::ClusterTimeline;
 /// Every preset [`preset`] accepts. The first three are the adaptability
 /// scenarios swept by `fig14_adaptability`; `blackout` is the
 /// communication-stress scenario swept (at several severities) by
-/// `fig15_comm_stress`.
-pub const SCENARIO_NAMES: [&str; 4] = ["slowdown", "straggler_burst", "churn", "blackout"];
+/// `fig15_comm_stress`; `crash_storm` is the fault-tolerance scenario
+/// swept (with checkpoint intervals) by `fig16_fault_tolerance`.
+pub const SCENARIO_NAMES: [&str; 5] =
+    ["slowdown", "straggler_burst", "churn", "blackout", "crash_storm"];
+
+/// One-line description per preset, in [`SCENARIO_NAMES`] order (the CLI's
+/// `--list-scenarios` table).
+pub const SCENARIO_DESCRIPTIONS: [(&str, &str); 5] = [
+    ("slowdown", "the fastest worker degrades 4x at 20% of the horizon"),
+    (
+        "straggler_burst",
+        "the slowest third degrades 8x from 20% to 50% of the horizon, then recovers",
+    ),
+    (
+        "churn",
+        "the 2 fastest workers leave at 20%; 2 mean-speed replacements join at 50% from a PS snapshot",
+    ),
+    (
+        "blackout",
+        "the slowest half loses its PS link from 20% to 50% of the horizon",
+    ),
+    (
+        "crash_storm",
+        "two correlated crash waves (cell groups) at 20% and 50%, each down 10% of the horizon, plus a correlated blackout on the surviving group",
+    ),
+];
 
 /// Build a preset by name. `horizon` is the run's `max_virtual_secs`;
 /// events land at 20% / 50% of it so every scenario has a settled
@@ -29,6 +53,7 @@ pub fn preset(name: &str, cluster: &ClusterSpec, horizon: f64) -> Result<Cluster
         "straggler_burst" => Ok(straggler_burst(cluster, t0, t1, 8.0)),
         "churn" => Ok(churn(cluster, t0, t1, 2)),
         "blackout" => Ok(blackout(cluster, t0, t1 - t0, 0.5)),
+        "crash_storm" => Ok(crash_storm(cluster, horizon)),
         other => bail!("unknown scenario '{other}' (try {SCENARIO_NAMES:?})"),
     }
 }
@@ -110,7 +135,63 @@ pub fn blackout(cluster: &ClusterSpec, t: f64, duration: f64, frac: f64) -> Clus
         start: t,
         duration: duration.max(f64::MIN_POSITIVE),
         workers: if hit == m { Vec::new() } else { order },
+        cell: None,
     }])
+}
+
+/// Correlated worker groups for the fault presets: the cluster's named
+/// cells (in first-appearance order) when any worker carries a `cell`
+/// label, else a deterministic round-robin split into `fallback` groups —
+/// so `crash_storm` means the same waves whether or not cells are named.
+pub fn cell_groups(cluster: &ClusterSpec, fallback: usize) -> Vec<Vec<usize>> {
+    let mut named: Vec<(String, Vec<usize>)> = Vec::new();
+    for (w, spec) in cluster.workers.iter().enumerate() {
+        if spec.cell.is_empty() {
+            continue;
+        }
+        match named.iter_mut().find(|(c, _)| *c == spec.cell) {
+            Some((_, members)) => members.push(w),
+            None => named.push((spec.cell.clone(), vec![w])),
+        }
+    }
+    if named.len() >= 2 {
+        return named.into_iter().map(|(_, members)| members).collect();
+    }
+    let k = fallback.clamp(1, cluster.m());
+    let mut groups = vec![Vec::new(); k];
+    for w in 0..cluster.m() {
+        groups[w % k].push(w);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
+/// Correlated crash waves: the first two cell groups crash together at
+/// 20% / 50% of the horizon (each member down for 10% of it), and the
+/// third group — the survivors of wave two — takes a correlated comm
+/// blackout alongside that wave. Unclean semantics throughout: in-flight
+/// commits are dropped, uncommitted local steps are lost, and restarts
+/// ride the join-snapshot path. Checkpoint cadence is the experiment's
+/// `fault` section (CLI `--checkpoint-every`), not the scenario's.
+pub fn crash_storm(cluster: &ClusterSpec, horizon: f64) -> ClusterTimeline {
+    let groups = cell_groups(cluster, 3);
+    let down = 0.1 * horizon;
+    let mut events = Vec::new();
+    for (wave, t) in [0.2 * horizon, 0.5 * horizon].into_iter().enumerate() {
+        let Some(group) = groups.get(wave) else { break };
+        for &w in group {
+            events.push(ClusterEvent::WorkerCrash { t, worker: w, restart_after: down });
+        }
+    }
+    if let Some(group) = groups.get(2) {
+        events.push(ClusterEvent::CommBlackout {
+            start: 0.5 * horizon,
+            duration: (0.08 * horizon).max(f64::MIN_POSITIVE),
+            workers: group.clone(),
+            cell: None,
+        });
+    }
+    ClusterTimeline::new(events)
 }
 
 #[cfg(test)]
@@ -177,7 +258,7 @@ mod tests {
         // Half of 4 workers = the two slowest (indices 3 and 0).
         let tl = blackout(&c, 100.0, 50.0, 0.5);
         match tl.events() {
-            [ClusterEvent::CommBlackout { start, duration, workers }] => {
+            [ClusterEvent::CommBlackout { start, duration, workers, cell: None }] => {
                 assert_eq!(*start, 100.0);
                 assert_eq!(*duration, 50.0);
                 assert_eq!(workers, &vec![0, 3]);
@@ -191,5 +272,49 @@ mod tests {
             all.events(),
             [ClusterEvent::CommBlackout { workers, .. }] if workers.is_empty()
         ));
+    }
+
+    #[test]
+    fn cell_groups_prefer_named_cells() {
+        let mut c = cluster();
+        // Without labels: round-robin thirds of 4 workers.
+        let rr = cell_groups(&c, 3);
+        assert_eq!(rr, vec![vec![0, 3], vec![1], vec![2]]);
+        // With labels: one group per named cell, in first-appearance order.
+        c.workers[0].cell = "north".into();
+        c.workers[2].cell = "south".into();
+        c.workers[3].cell = "north".into();
+        let named = cell_groups(&c, 3);
+        assert_eq!(named, vec![vec![0, 3], vec![2]]);
+        // A single named cell is not a grouping — fall back to round-robin.
+        c.workers[2].cell = "north".into();
+        c.workers[0].cell.clear();
+        c.workers[3].cell.clear();
+        assert_eq!(cell_groups(&c, 2).len(), 2);
+    }
+
+    #[test]
+    fn crash_storm_schedules_two_waves_and_a_blackout() {
+        let c = cluster();
+        let tl = crash_storm(&c, 600.0);
+        tl.validate(c.m()).unwrap();
+        let crashes: Vec<_> = tl
+            .events()
+            .iter()
+            .filter(|e| matches!(e, ClusterEvent::WorkerCrash { .. }))
+            .collect();
+        // Wave 1 = group {0, 3} at 120s, wave 2 = group {1} at 300s.
+        assert_eq!(crashes.len(), 3);
+        assert!(matches!(
+            crashes[0],
+            ClusterEvent::WorkerCrash { t, restart_after, .. }
+                if *t == 120.0 && *restart_after == 60.0
+        ));
+        assert!(tl.events().iter().any(|e| matches!(
+            e,
+            ClusterEvent::CommBlackout { start, workers, .. }
+                if *start == 300.0 && workers == &vec![2]
+        )));
+        assert!(tl.has_fault_events());
     }
 }

@@ -36,6 +36,24 @@ pub enum ClusterDelta {
         /// Virtual time the blackout lifts.
         until: f64,
     },
+    /// Worker `worker` crashed uncleanly; it restarts at `until`. The
+    /// engine drops its in-flight commit, loses its uncommitted local
+    /// steps, and schedules the join-snapshot restart.
+    Crashed {
+        /// The crashed worker (stays a member — `active` is untouched).
+        worker: usize,
+        /// Virtual time the worker restarts.
+        until: f64,
+    },
+    /// PS shard `shard` failed; failover completes at `until`. Commits
+    /// block meanwhile and the engine restores the last checkpoint (a
+    /// consistent cut — every shard rolls back together).
+    ShardDown {
+        /// The failed shard.
+        shard: usize,
+        /// Virtual time failover completes.
+        until: f64,
+    },
 }
 
 /// The live cluster: membership, speeds, comm times, batch sizes and
@@ -57,6 +75,17 @@ pub struct ClusterState {
     /// Virtual time each worker's current blackout lifts (`0.0` = none;
     /// commits issued before this defer their departure to it).
     pub blackout_until: Vec<f64>,
+    /// Virtual time each worker's current *crash* outage lifts (`0.0` =
+    /// up). A down worker stays a member (`active` true) but the engines
+    /// ignore its events and barriers skip it until restart.
+    pub down_until: Vec<f64>,
+    /// Per-worker cell labels (empty = ungrouped); cell-targeted
+    /// blackouts resolve against these.
+    pub cells: Vec<String>,
+    /// Virtual time each PS shard's failover completes (`0.0` = up).
+    /// Commits stripe across every shard, so any entry in the future
+    /// blocks all commit applies (see [`ClusterState::ps_down_until`]).
+    pub shard_down: Vec<f64>,
     /// The link handed to workers joining mid-run.
     default_link: LinkModel,
     b_default: usize,
@@ -101,6 +130,9 @@ impl ClusterState {
             active: vec![true; m],
             links: vec![LinkModel::unbounded(); m],
             blackout_until: vec![0.0; m],
+            down_until: vec![0.0; m],
+            cells: cluster.cells(),
+            shard_down: vec![0.0],
             default_link: LinkModel::unbounded(),
             b_default,
             available: available.to_vec(),
@@ -117,10 +149,29 @@ impl ClusterState {
         self
     }
 
+    /// Size the per-shard failover table to the experiment's shard count
+    /// (builder, like [`ClusterState::with_network`]).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shard_down = vec![0.0; shards.max(1)];
+        self
+    }
+
     /// The virtual time worker `w`'s commit may actually depart: `now`,
     /// unless a blackout is in force, in which case its lift time.
     pub fn departure_time(&self, w: usize, now: f64) -> f64 {
         now.max(self.blackout_until[w])
+    }
+
+    /// True while worker `w` is inside a crash outage (it stays a member,
+    /// but trains nothing and its queued events are stale).
+    pub fn is_down(&self, w: usize, now: f64) -> bool {
+        self.down_until[w] > now
+    }
+
+    /// The virtual time every PS shard is back up (`0.0` when none ever
+    /// failed). Commits stripe across all shards, so the max governs.
+    pub fn ps_down_until(&self) -> f64 {
+        self.shard_down.iter().cloned().fold(0.0, f64::max)
     }
 
     /// Total worker slots ever allocated (departed workers included).
@@ -157,25 +208,25 @@ impl ClusterState {
             .unwrap_or(&self.available[0])
     }
 
-    /// The progress entry for a worker joining at index `w` — the one
-    /// place the join-snapshot counter bootstrap lives: steps/commits
-    /// start at the *active minimum* so barrier and staleness models
-    /// treat the newcomer as a peer of the current round, not a round-0
-    /// straggler. `progress` is the engine's per-worker table *before*
-    /// the joiner is appended.
+    /// The progress entry for a worker joining (or restarting after a
+    /// crash) at index `w` — the one place the join-snapshot counter
+    /// bootstrap lives: steps/commits start at the *active minimum* so
+    /// barrier and staleness models treat the newcomer as a peer of the
+    /// current round, not a round-0 straggler. The minimum runs over the
+    /// progress table's own `active` flags, which the engines keep
+    /// current for leavers *and* crashed workers — a frozen, down peer
+    /// must not drag the bootstrap back to its stale counters. When no
+    /// peer is up (everyone crashed at once), the entry keeps `w`'s own
+    /// pre-outage counters rather than resetting to round 0.
     pub fn join_progress(&self, w: usize, progress: &[WorkerProgress]) -> WorkerProgress {
-        let amin = |f: fn(&WorkerProgress) -> u64| {
-            progress
-                .iter()
-                .zip(&self.active)
-                .filter(|(_, &a)| a)
-                .map(|(p, _)| f(p))
-                .min()
-                .unwrap_or(0)
+        let up = |p: &&WorkerProgress| p.active;
+        let amin = |f: fn(&WorkerProgress) -> u64, own: u64| {
+            progress.iter().filter(up).map(f).min().unwrap_or(own)
         };
+        let own = progress.get(w);
         WorkerProgress {
-            steps: amin(|p| p.steps),
-            commits: amin(|p| p.commits),
+            steps: amin(|p| p.steps, own.map(|p| p.steps).unwrap_or(0)),
+            commits: amin(|p| p.commits, own.map(|p| p.commits).unwrap_or(0)),
             batch_size: self.batch_sizes[w],
             ..Default::default()
         }
@@ -236,6 +287,8 @@ impl ClusterState {
                 self.active.push(true);
                 self.links.push(self.default_link.clone());
                 self.blackout_until.push(0.0);
+                self.down_until.push(0.0);
+                self.cells.push(spec.cell.clone());
                 Ok(ClusterDelta::Joined(self.m() - 1))
             }
             ClusterEvent::WorkerLeave { worker, .. } => {
@@ -257,12 +310,12 @@ impl ClusterState {
                 self.links[w].bandwidth_bytes_per_sec = *bandwidth_bytes_per_sec;
                 Ok(ClusterDelta::Changed)
             }
-            ClusterEvent::CommBlackout { start, duration, workers } => {
+            ClusterEvent::CommBlackout { start, duration, workers, cell } => {
                 if !duration.is_finite() || *duration <= 0.0 {
                     bail!("blackout duration must be positive, got {duration}");
                 }
                 let until = start + duration;
-                let targets: Vec<usize> = if workers.is_empty() {
+                let mut targets: Vec<usize> = if workers.is_empty() && cell.is_none() {
                     (0..self.m()).filter(|&w| self.active[w]).collect()
                 } else {
                     workers
@@ -270,6 +323,17 @@ impl ClusterState {
                         .map(|&w| self.check_worker(w))
                         .collect::<Result<_>>()?
                 };
+                if let Some(c) = cell {
+                    let members: Vec<usize> = (0..self.m())
+                        .filter(|&w| self.active[w] && self.cells[w] == *c)
+                        .collect();
+                    if members.is_empty() {
+                        bail!("blackout cell '{c}' matches no live worker");
+                    }
+                    targets.extend(members);
+                    targets.sort_unstable();
+                    targets.dedup();
+                }
                 let mut extended = false;
                 for w in targets {
                     if until > self.blackout_until[w] {
@@ -283,6 +347,42 @@ impl ClusterState {
                     return Ok(ClusterDelta::None);
                 }
                 Ok(ClusterDelta::Blackout { until })
+            }
+            ClusterEvent::WorkerCrash { t, worker, restart_after } => {
+                let w = self.check_worker(*worker)?;
+                if !restart_after.is_finite() || *restart_after <= 0.0 {
+                    bail!("crash restart_after must be positive, got {restart_after}");
+                }
+                if self.down_until[w] > *t {
+                    bail!(
+                        "worker {w} crashed at t={t} but is already down until {:.1}",
+                        self.down_until[w]
+                    );
+                }
+                let until = t + restart_after;
+                self.down_until[w] = until;
+                Ok(ClusterDelta::Crashed { worker: w, until })
+            }
+            ClusterEvent::ShardFailure { t, shard, recover_after } => {
+                if *shard >= self.shard_down.len() {
+                    bail!(
+                        "shard failure targets shard {shard} but only {} exist \
+                         (was `with_shards` applied?)",
+                        self.shard_down.len()
+                    );
+                }
+                if !recover_after.is_finite() || *recover_after <= 0.0 {
+                    bail!("shard recover_after must be positive, got {recover_after}");
+                }
+                if self.shard_down[*shard] > *t {
+                    bail!(
+                        "shard {shard} failed at t={t} but is already down until {:.1}",
+                        self.shard_down[*shard]
+                    );
+                }
+                let until = t + recover_after;
+                self.shard_down[*shard] = until;
+                Ok(ClusterDelta::ShardDown { shard: *shard, until })
             }
         }
     }
@@ -430,18 +530,32 @@ mod tests {
     #[test]
     fn blackout_extends_and_dedups() {
         let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
-        let ev = ClusterEvent::CommBlackout { start: 10.0, duration: 20.0, workers: vec![0, 2] };
+        let ev = ClusterEvent::CommBlackout {
+            start: 10.0,
+            duration: 20.0,
+            workers: vec![0, 2],
+            cell: None,
+        };
         assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::Blackout { until: 30.0 });
         assert_eq!(s.blackout_until, vec![30.0, 0.0, 30.0]);
         assert_eq!(s.departure_time(0, 12.0), 30.0);
         assert_eq!(s.departure_time(1, 12.0), 12.0);
         assert_eq!(s.departure_time(0, 45.0), 45.0);
         // A shorter overlapping blackout changes nothing observable.
-        let inner =
-            ClusterEvent::CommBlackout { start: 12.0, duration: 5.0, workers: vec![0] };
+        let inner = ClusterEvent::CommBlackout {
+            start: 12.0,
+            duration: 5.0,
+            workers: vec![0],
+            cell: None,
+        };
         assert_eq!(s.apply_event(&inner).unwrap(), ClusterDelta::None);
         // An empty worker list hits every active worker.
-        let all = ClusterEvent::CommBlackout { start: 40.0, duration: 10.0, workers: vec![] };
+        let all = ClusterEvent::CommBlackout {
+            start: 40.0,
+            duration: 10.0,
+            workers: vec![],
+            cell: None,
+        };
         assert_eq!(s.apply_event(&all).unwrap(), ClusterDelta::Blackout { until: 50.0 });
         assert_eq!(s.blackout_until, vec![50.0, 50.0, 50.0]);
         // Bad targets and durations are rejected.
@@ -449,16 +563,122 @@ mod tests {
             .apply_event(&ClusterEvent::CommBlackout {
                 start: 1.0,
                 duration: -2.0,
-                workers: vec![]
+                workers: vec![],
+                cell: None
             })
             .is_err());
         assert!(s
             .apply_event(&ClusterEvent::CommBlackout {
                 start: 1.0,
                 duration: 2.0,
-                workers: vec![7]
+                workers: vec![7],
+                cell: None
             })
             .is_err());
+    }
+
+    #[test]
+    fn crash_marks_down_and_rejects_overlap() {
+        let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
+        let ev = ClusterEvent::WorkerCrash { t: 10.0, worker: 1, restart_after: 20.0 };
+        assert_eq!(
+            s.apply_event(&ev).unwrap(),
+            ClusterDelta::Crashed { worker: 1, until: 30.0 }
+        );
+        // Down, but still a member: membership invariants see 3 workers.
+        assert!(s.is_down(1, 15.0));
+        assert!(!s.is_down(1, 30.0));
+        assert_eq!(s.active_count(), 3);
+        // Overlapping crash rejected; a later one accepted.
+        assert!(s
+            .apply_event(&ClusterEvent::WorkerCrash { t: 20.0, worker: 1, restart_after: 5.0 })
+            .is_err());
+        assert!(s
+            .apply_event(&ClusterEvent::WorkerCrash { t: 40.0, worker: 1, restart_after: 5.0 })
+            .is_ok());
+        // Bad restart windows and departed targets rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::WorkerCrash { t: 60.0, worker: 0, restart_after: 0.0 })
+            .is_err());
+        s.apply_event(&ClusterEvent::WorkerLeave { t: 61.0, worker: 0 }).unwrap();
+        assert!(s
+            .apply_event(&ClusterEvent::WorkerCrash { t: 62.0, worker: 0, restart_after: 5.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn shard_failure_tracks_ps_downtime() {
+        let mut s =
+            ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]).with_shards(4);
+        assert_eq!(s.ps_down_until(), 0.0);
+        let ev = ClusterEvent::ShardFailure { t: 10.0, shard: 2, recover_after: 15.0 };
+        assert_eq!(
+            s.apply_event(&ev).unwrap(),
+            ClusterDelta::ShardDown { shard: 2, until: 25.0 }
+        );
+        assert_eq!(s.ps_down_until(), 25.0);
+        // A different shard failing later extends the PS outage.
+        s.apply_event(&ClusterEvent::ShardFailure { t: 20.0, shard: 0, recover_after: 10.0 })
+            .unwrap();
+        assert_eq!(s.ps_down_until(), 30.0);
+        // Out-of-range shard, overlap, and bad windows rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::ShardFailure { t: 40.0, shard: 9, recover_after: 5.0 })
+            .is_err());
+        assert!(s
+            .apply_event(&ClusterEvent::ShardFailure { t: 22.0, shard: 2, recover_after: 5.0 })
+            .is_err());
+        assert!(s
+            .apply_event(&ClusterEvent::ShardFailure { t: 40.0, shard: 1, recover_after: -1.0 })
+            .is_err());
+    }
+
+    #[test]
+    fn cell_blackout_hits_the_named_group() {
+        let mut spec_cluster = cluster();
+        spec_cluster.workers[0].cell = "edge-a".to_string();
+        spec_cluster.workers[2].cell = "edge-a".to_string();
+        let mut s = ClusterState::new(&spec_cluster, SyncModelKind::Adsp, 32, &[32]);
+        let ev = ClusterEvent::CommBlackout {
+            start: 10.0,
+            duration: 20.0,
+            workers: vec![],
+            cell: Some("edge-a".to_string()),
+        };
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::Blackout { until: 30.0 });
+        // Only the cell members went dark.
+        assert_eq!(s.blackout_until, vec![30.0, 0.0, 30.0]);
+        // Explicit workers and a cell union.
+        let both = ClusterEvent::CommBlackout {
+            start: 40.0,
+            duration: 10.0,
+            workers: vec![1],
+            cell: Some("edge-a".to_string()),
+        };
+        assert_eq!(s.apply_event(&both).unwrap(), ClusterDelta::Blackout { until: 50.0 });
+        assert_eq!(s.blackout_until, vec![50.0, 50.0, 50.0]);
+        // Unknown cell rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::CommBlackout {
+                start: 60.0,
+                duration: 5.0,
+                workers: vec![],
+                cell: Some("edge-z".to_string()),
+            })
+            .is_err());
+        // A joiner carrying a cell label extends the group.
+        let mut joiner = WorkerSpec::new(1.0, 0.1);
+        joiner.cell = "edge-z".to_string();
+        s.apply_event(&ClusterEvent::WorkerJoin { t: 70.0, spec: joiner }).unwrap();
+        assert_eq!(s.cells[3], "edge-z");
+        assert!(s
+            .apply_event(&ClusterEvent::CommBlackout {
+                start: 80.0,
+                duration: 5.0,
+                workers: vec![],
+                cell: Some("edge-z".to_string()),
+            })
+            .is_ok());
     }
 
     #[test]

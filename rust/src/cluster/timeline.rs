@@ -43,17 +43,58 @@ impl ClusterTimeline {
         self.events.iter().filter(|e| matches!(e, ClusterEvent::WorkerJoin { .. })).count()
     }
 
+    /// Scripted unclean worker crashes (the real-time engine keeps its
+    /// commit channel open when threads must respawn mid-run).
+    pub fn crash_count(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ClusterEvent::WorkerCrash { .. })).count()
+    }
+
+    /// True when the script contains any fault event (worker crash or PS
+    /// shard failure) — engines then seed their checkpoint store so
+    /// failover always has a consistent cut to restore.
+    pub fn has_fault_events(&self) -> bool {
+        self.events.iter().any(|e| {
+            matches!(e, ClusterEvent::WorkerCrash { .. } | ClusterEvent::ShardFailure { .. })
+        })
+    }
+
     /// Check the script against the evolving membership it creates:
     /// * every event time is finite and ≥ 0;
     /// * speed/comm targets are positive / non-negative;
     /// * `worker` indices refer to a worker that exists *and is still
     ///   active* at that point of the script;
-    /// * no leave ever empties the cluster.
+    /// * no leave ever empties the cluster;
+    /// * crashes never overlap an existing outage on the same worker.
+    ///
+    /// Shard-range and cell-membership checks need the experiment's shard
+    /// count and cell labels — [`ClusterTimeline::validate_full`] (called
+    /// by `ExperimentSpec::validate`) performs them; this entry point
+    /// skips them, which standalone callers (scenario presets, benches)
+    /// rely on.
     pub fn validate(&self, initial_m: usize) -> Result<()> {
+        self.validate_full(initial_m, usize::MAX, &[])
+    }
+
+    /// Full validation. `shards = usize::MAX` skips the shard-range check
+    /// (unknown shard count); an empty `cells` slice skips cell-membership
+    /// checks, otherwise it must carry one label per initial worker
+    /// (empty string = ungrouped) and every cell-targeted blackout must
+    /// match at least one worker alive at that point of the script.
+    pub fn validate_full(&self, initial_m: usize, shards: usize, cells: &[String]) -> Result<()> {
         if initial_m == 0 {
             bail!("timeline validation needs a non-empty initial cluster");
         }
+        if !cells.is_empty() && cells.len() != initial_m {
+            bail!("cell list has {} entries for {} workers", cells.len(), initial_m);
+        }
+        let cells_known = !cells.is_empty();
+        let mut cell_of: Vec<String> =
+            if cells_known { cells.to_vec() } else { vec![String::new(); initial_m] };
         let mut active = vec![true; initial_m];
+        // Worker / shard outage lift times already scripted (crash overlap
+        // detection; 0.0 = none).
+        let mut worker_down = vec![0.0f64; initial_m];
+        let mut shard_down: Vec<(usize, f64)> = Vec::new();
         for (i, ev) in self.events.iter().enumerate() {
             let t = ev.t();
             if !t.is_finite() || t < 0.0 {
@@ -89,6 +130,8 @@ impl ClusterTimeline {
                         bail!("timeline event {i}: joining worker needs comm_secs >= 0");
                     }
                     active.push(true);
+                    worker_down.push(0.0);
+                    cell_of.push(spec.cell.clone());
                 }
                 ClusterEvent::WorkerLeave { worker, .. } => {
                     check_worker(*worker, &active)?;
@@ -106,13 +149,67 @@ impl ClusterTimeline {
                         );
                     }
                 }
-                ClusterEvent::CommBlackout { duration, workers, .. } => {
+                ClusterEvent::CommBlackout { duration, workers, cell, .. } => {
                     if !duration.is_finite() || *duration <= 0.0 {
                         bail!("timeline event {i}: blackout duration must be positive, got {duration}");
                     }
                     for &w in workers {
                         check_worker(w, &active)?;
                     }
+                    if let Some(c) = cell {
+                        if c.is_empty() {
+                            bail!("timeline event {i}: blackout cell name must be non-empty");
+                        }
+                        if cells_known {
+                            let hit = cell_of
+                                .iter()
+                                .zip(&active)
+                                .any(|(label, &a)| a && label == c);
+                            if !hit {
+                                bail!("timeline event {i}: blackout cell '{c}' matches no live worker");
+                            }
+                        }
+                    }
+                }
+                ClusterEvent::WorkerCrash { t, worker, restart_after } => {
+                    check_worker(*worker, &active)?;
+                    if !restart_after.is_finite() || *restart_after <= 0.0 {
+                        bail!(
+                            "timeline event {i}: crash restart_after must be positive, \
+                             got {restart_after}"
+                        );
+                    }
+                    if worker_down[*worker] > *t {
+                        bail!(
+                            "timeline event {i}: worker {worker} is already down until \
+                             {:.1} at t={t}",
+                            worker_down[*worker]
+                        );
+                    }
+                    worker_down[*worker] = t + restart_after;
+                }
+                ClusterEvent::ShardFailure { t, shard, recover_after } => {
+                    if shards != usize::MAX && *shard >= shards {
+                        bail!(
+                            "timeline event {i}: shard {shard} out of range (shards={shards})"
+                        );
+                    }
+                    if !recover_after.is_finite() || *recover_after <= 0.0 {
+                        bail!(
+                            "timeline event {i}: shard recover_after must be positive, \
+                             got {recover_after}"
+                        );
+                    }
+                    if let Some((_, until)) = shard_down.iter().find(|(s, _)| s == shard) {
+                        if *until > *t {
+                            bail!(
+                                "timeline event {i}: shard {shard} is already down until \
+                                 {until:.1} at t={t}"
+                            );
+                        }
+                    }
+                    shard_down.retain(|(s, _)| s != shard);
+                    shard_down.push((*shard, t + recover_after));
                 }
             }
         }
@@ -199,12 +296,14 @@ mod tests {
             start: 1.0,
             duration: 0.0,
             workers: vec![],
+            cell: None,
         }]);
         assert!(zb.validate(2).is_err());
         let mb = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
             start: 1.0,
             duration: 5.0,
             workers: vec![9],
+            cell: None,
         }]);
         assert!(mb.validate(2).is_err());
     }
@@ -215,10 +314,96 @@ mod tests {
             ev_speed(60.0, 1, 0.25),
             ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(2.0, 0.3) },
             ClusterEvent::WorkerLeave { t: 180.0, worker: 0 },
+            ClusterEvent::WorkerCrash { t: 200.0, worker: 1, restart_after: 30.0 },
+            ClusterEvent::ShardFailure { t: 260.0, shard: 0, recover_after: 10.0 },
         ]);
         let back = ClusterTimeline::from_json(&Json::parse(&tl.to_json().dump()).unwrap())
             .unwrap();
         assert_eq!(back, tl);
         assert_eq!(back.join_count(), 1);
+        assert_eq!(back.crash_count(), 1);
+        assert!(back.has_fault_events());
+    }
+
+    #[test]
+    fn validate_rejects_bad_fault_events() {
+        // Crash against a departed worker.
+        let ghost = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerLeave { t: 1.0, worker: 0 },
+            ClusterEvent::WorkerCrash { t: 2.0, worker: 0, restart_after: 5.0 },
+        ]);
+        assert!(ghost.validate(3).is_err());
+        // Crash against a worker that never exists.
+        let oob = ClusterTimeline::new(vec![ClusterEvent::WorkerCrash {
+            t: 1.0,
+            worker: 9,
+            restart_after: 5.0,
+        }]);
+        assert!(oob.validate(2).is_err());
+        // Non-positive restart window.
+        let zero = ClusterTimeline::new(vec![ClusterEvent::WorkerCrash {
+            t: 1.0,
+            worker: 0,
+            restart_after: 0.0,
+        }]);
+        assert!(zero.validate(2).is_err());
+        // Overlapping crashes on one worker; back-to-back ones are fine.
+        let overlap = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerCrash { t: 10.0, worker: 0, restart_after: 30.0 },
+            ClusterEvent::WorkerCrash { t: 20.0, worker: 0, restart_after: 5.0 },
+        ]);
+        assert!(overlap.validate(2).is_err());
+        let serial = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerCrash { t: 10.0, worker: 0, restart_after: 30.0 },
+            ClusterEvent::WorkerCrash { t: 50.0, worker: 0, restart_after: 5.0 },
+        ]);
+        assert!(serial.validate(2).is_ok());
+        // Shard range is only enforced when the shard count is known.
+        let shard9 = ClusterTimeline::new(vec![ClusterEvent::ShardFailure {
+            t: 1.0,
+            shard: 9,
+            recover_after: 5.0,
+        }]);
+        assert!(shard9.validate(2).is_ok());
+        assert!(shard9.validate_full(2, 4, &[]).is_err());
+        assert!(shard9.validate_full(2, 16, &[]).is_ok());
+        // Overlapping failures on one shard.
+        let shard_overlap = ClusterTimeline::new(vec![
+            ClusterEvent::ShardFailure { t: 10.0, shard: 1, recover_after: 30.0 },
+            ClusterEvent::ShardFailure { t: 20.0, shard: 1, recover_after: 5.0 },
+        ]);
+        assert!(shard_overlap.validate_full(2, 4, &[]).is_err());
+    }
+
+    #[test]
+    fn validate_checks_blackout_cells_when_known() {
+        let celled = |cell: &str| ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 10.0,
+            duration: 5.0,
+            workers: vec![],
+            cell: Some(cell.to_string()),
+        }]);
+        let cells = vec!["edge-a".to_string(), "edge-b".to_string(), String::new()];
+        assert!(celled("edge-a").validate_full(3, usize::MAX, &cells).is_ok());
+        assert!(celled("edge-z").validate_full(3, usize::MAX, &cells).is_err());
+        // Without cell labels the membership check is skipped...
+        assert!(celled("edge-z").validate(3).is_ok());
+        // ...but an empty cell name is always rejected.
+        assert!(celled("").validate(3).is_err());
+        // A join can introduce the cell a later blackout targets.
+        let mut joiner = WorkerSpec::new(1.0, 0.1);
+        joiner.cell = "edge-z".to_string();
+        let late = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerJoin { t: 5.0, spec: joiner },
+            ClusterEvent::CommBlackout {
+                start: 10.0,
+                duration: 5.0,
+                workers: vec![],
+                cell: Some("edge-z".to_string()),
+            },
+        ]);
+        assert!(late.validate_full(3, usize::MAX, &cells).is_ok());
+        // Arity mismatch between cells and the initial membership.
+        assert!(celled("edge-a").validate_full(2, usize::MAX, &cells).is_err());
     }
 }

@@ -7,6 +7,7 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::ClusterTimeline;
+use crate::fault::FaultSpec;
 use crate::network::NetworkSpec;
 use crate::sync::SyncModelKind;
 use crate::util::Json;
@@ -20,11 +21,15 @@ pub struct WorkerSpec {
     pub comm_secs: f64,
     /// Mini-batch size; 0 = use the experiment default.
     pub batch_size: usize,
+    /// Optional cell label grouping correlated workers (one radio cell,
+    /// one rack, one site). Empty = ungrouped. `CommBlackout` events may
+    /// target a cell by name to drop the whole group at once.
+    pub cell: String,
 }
 
 impl WorkerSpec {
     pub fn new(speed: f64, comm_secs: f64) -> Self {
-        WorkerSpec { speed, comm_secs, batch_size: 0 }
+        WorkerSpec { speed, comm_secs, batch_size: 0, cell: String::new() }
     }
 }
 
@@ -49,6 +54,11 @@ impl ClusterSpec {
 
     pub fn comms(&self) -> Vec<f64> {
         self.workers.iter().map(|w| w.comm_secs).collect()
+    }
+
+    /// Per-worker cell labels (empty string = ungrouped).
+    pub fn cells(&self) -> Vec<String> {
+        self.workers.iter().map(|w| w.cell.clone()).collect()
     }
 
     /// Heterogeneity degree H = mean(v) / min(v) (paper §5.2).
@@ -186,6 +196,11 @@ pub struct ExperimentSpec {
     /// bandwidth, zero latency) and bit-identical to the static-comm
     /// behaviour.
     pub network: NetworkSpec,
+    /// Fault-tolerance model (`fault` subsystem): the PS checkpoint
+    /// cadence and its cost model. Crash/failure *events* ride the
+    /// `timeline`. The default is degenerate (checkpointing off) and
+    /// bit-identical to the pre-fault behaviour.
+    pub fault: FaultSpec,
 }
 
 impl ExperimentSpec {
@@ -214,6 +229,7 @@ impl ExperimentSpec {
             ps_apply_secs: 0.0,
             timeline: ClusterTimeline::default(),
             network: NetworkSpec::default(),
+            fault: FaultSpec::default(),
         }
     }
 
@@ -257,6 +273,7 @@ impl ExperimentSpec {
                     speed: w.req("speed")?.as_f64()?,
                     comm_secs: w.f64_or("comm_secs", 0.2)?,
                     batch_size: w.usize_or("batch_size", 0)?,
+                    cell: w.str_or("cell", "")?.to_string(),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -302,6 +319,9 @@ impl ExperimentSpec {
         if let Some(n) = v.get("network") {
             spec.network = NetworkSpec::from_json(n).context("parsing network")?;
         }
+        if let Some(f) = v.get("fault") {
+            spec.fault = FaultSpec::from_json(f).context("parsing fault section")?;
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -318,11 +338,15 @@ impl ExperimentSpec {
                             .workers
                             .iter()
                             .map(|w| {
-                                Json::obj(vec![
+                                let mut pairs = vec![
                                     ("speed", Json::num(w.speed)),
                                     ("comm_secs", Json::num(w.comm_secs)),
                                     ("batch_size", Json::num(w.batch_size as f64)),
-                                ])
+                                ];
+                                if !w.cell.is_empty() {
+                                    pairs.push(("cell", Json::str(w.cell.clone())));
+                                }
+                                Json::obj(pairs)
                             })
                             .collect(),
                     ),
@@ -367,6 +391,7 @@ impl ExperimentSpec {
             ("ps_apply_secs", Json::num(self.ps_apply_secs)),
             ("timeline", self.timeline.to_json()),
             ("network", self.network.to_json()),
+            ("fault", self.fault.to_json()),
         ])
     }
 
@@ -405,7 +430,8 @@ impl ExperimentSpec {
         if self.ps_apply_secs < 0.0 {
             bail!("ps_apply_secs must be non-negative");
         }
-        self.timeline.validate(self.cluster.m())?;
+        self.fault.validate()?;
+        self.timeline.validate_full(self.cluster.m(), self.shards, &self.cluster.cells())?;
         self.network.validate(self.cluster.m())?;
         Ok(())
     }
@@ -533,6 +559,79 @@ mod tests {
         spec.network.links.pop();
         assert!(spec.validate().is_err());
         assert!(ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).is_err());
+    }
+
+    #[test]
+    fn fault_section_roundtrips_and_validates_through_spec() {
+        use crate::fault::{CheckpointPolicy, FaultSpec};
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.3)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        // Absent section stays degenerate through a round trip.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert!(back.fault.is_degenerate());
+        spec.fault = FaultSpec {
+            checkpoint: CheckpointPolicy::EveryCommits(25),
+            sink_bytes_per_sec: 2e5,
+            remote_sink: true,
+        };
+        spec.validate().unwrap();
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.fault, spec.fault);
+        // Invalid cadence rejected through the spec.
+        spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(-5.0);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn fault_events_validate_against_shards_and_cells_through_spec() {
+        use crate::cluster::ClusterEvent;
+        let mut workers = vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.3)];
+        workers[0].cell = "edge-a".to_string();
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(workers),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.shards = 4;
+        // Cells survive the worker-spec round trip.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.cluster.workers[0].cell, "edge-a");
+        assert_eq!(back.cluster.workers[1].cell, "");
+        // In-range shard failure + crash: fine.
+        spec.timeline = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerCrash { t: 10.0, worker: 1, restart_after: 5.0 },
+            ClusterEvent::ShardFailure { t: 20.0, shard: 3, recover_after: 5.0 },
+        ]);
+        spec.validate().unwrap();
+        assert_eq!(
+            ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap().timeline,
+            spec.timeline
+        );
+        // Out-of-range shard rejected against the spec's shard count.
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::ShardFailure {
+            t: 20.0,
+            shard: 4,
+            recover_after: 5.0,
+        }]);
+        assert!(spec.validate().is_err());
+        // A cell-targeted blackout resolves against the workers' labels.
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 10.0,
+            duration: 5.0,
+            workers: vec![],
+            cell: Some("edge-a".to_string()),
+        }]);
+        spec.validate().unwrap();
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CommBlackout {
+            start: 10.0,
+            duration: 5.0,
+            workers: vec![],
+            cell: Some("edge-z".to_string()),
+        }]);
+        assert!(spec.validate().is_err());
     }
 
     #[test]

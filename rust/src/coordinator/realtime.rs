@@ -47,6 +47,7 @@ use anyhow::{Context, Result};
 use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::make_source;
+use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::pserver::ShardedParameterServer;
 use crate::runtime::{native, ModelRuntime, ParamSet};
@@ -60,6 +61,13 @@ struct CommitMsg {
     /// Wire size of the pushed update (dense, or 8 bytes per surviving
     /// entry under `compress_topk`).
     up_bytes: u64,
+    /// The worker's crash generation at thread spawn (the realtime
+    /// analogue of the simulator's event incarnations): a commit pushed
+    /// before a crash carries the old generation and is dropped at drain
+    /// time even if the drain was paused (PS failover) across the whole
+    /// outage — without this, applying the stale commit would also revive
+    /// the pre-crash thread alongside its respawned successor.
+    generation: u64,
     reply: mpsc::Sender<ParamSet>,
 }
 
@@ -144,7 +152,8 @@ impl RealtimeEngine {
         // per-worker links included).
         let cluster_state =
             ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
-                .with_network(&spec.network);
+                .with_network(&spec.network)
+                .with_shards(spec.shards);
         let batch_sizes = cluster_state.batch_sizes.clone();
         let k_variants = probe.manifest.k_variants(cluster_state.b_default());
         let init = probe.init_params()?;
@@ -172,10 +181,20 @@ impl RealtimeEngine {
         });
 
         let (commit_tx, commit_rx) = mpsc::channel::<CommitMsg>();
-        // Joining workers need a sender after the initial handles drop;
-        // only keep one alive when the timeline can actually join (so the
-        // no-churn disconnect behaviour matches the seed exactly).
-        let join_tx = if spec.timeline.join_count() > 0 { Some(commit_tx.clone()) } else { None };
+        // Joining workers and crash-restarted workers need a sender after
+        // the initial handles drop; only keep one alive when the timeline
+        // can actually spawn a thread mid-run (so the no-churn disconnect
+        // behaviour matches the seed exactly).
+        let spawn_tx = if spec.timeline.join_count() > 0 || spec.timeline.crash_count() > 0 {
+            Some(commit_tx.clone())
+        } else {
+            None
+        };
+        // Fault subsystem: the checkpoint store, seeded with the initial
+        // model whenever a restore can happen (see the sim engine).
+        let fault_active =
+            !spec.fault.is_degenerate() || spec.timeline.has_fault_events();
+        let init_seed = if fault_active { Some(init.clone()) } else { None };
 
         let outcome = std::thread::scope(|scope| -> Result<RealtimeOutcome> {
             // ---------------- worker threads ----------------
@@ -184,7 +203,9 @@ impl RealtimeEngine {
                 let shared = shared.clone();
                 let commit_tx = commit_tx.clone();
                 scope.spawn(move || {
-                    if let Err(e) = worker_loop(w, &spec, scale, shared.clone(), commit_tx, None) {
+                    if let Err(e) =
+                        worker_loop(w, &spec, scale, shared.clone(), commit_tx, None, 0)
+                    {
                         // A failed worker must not strand the barrier/PS.
                         shared.stop.store(true, Ordering::SeqCst);
                         eprintln!("worker {w} failed: {e:#}");
@@ -221,6 +242,26 @@ impl RealtimeEngine {
             let mut next_timeline = 0usize;
             // Blackout lift times still owed a policy re-notification.
             let mut pending_lifts: Vec<f64> = Vec::new();
+            // Fault subsystem state: the checkpoint store (version-0 seed
+            // when faults are in play), the interval-policy tick, crashed
+            // workers awaiting their restart, and the PS failover window.
+            let mut ckpt_store = CheckpointStore::new(2);
+            if let Some(seed) = init_seed {
+                let velocity = seed.zeros_like();
+                ckpt_store.save(Checkpoint { version: 0, params: seed, velocity });
+            }
+            let mut next_ckpt_save = match spec.fault.checkpoint {
+                CheckpointPolicy::IntervalSecs(dt) => dt,
+                _ => f64::INFINITY,
+            };
+            let mut pending_restarts: Vec<(f64, usize)> = Vec::new();
+            let mut ps_down_until = 0.0f64;
+            let mut ps_recover_pending = false;
+            // Per-worker crash generation (bumped at every crash; joiners
+            // append at 0). Commit messages carry the generation their
+            // thread was spawned under; mismatches are pre-crash stragglers
+            // and are dropped, whatever the wall clock says.
+            let mut crash_gen: Vec<u64> = vec![0; m];
 
             loop {
                 let now_v = start.elapsed().as_secs_f64() / scale;
@@ -274,18 +315,51 @@ impl RealtimeEngine {
                                 progress.push(entry);
                                 shared.metrics.lock().unwrap().push(WorkerMetrics::default());
                             }
+                            crash_gen.push(0);
                             let boot = ps.snapshot();
                             let spec2 = spec.clone();
                             let shared2 = shared.clone();
-                            let tx = join_tx.clone().expect("join without join_tx");
+                            let tx = spawn_tx.clone().expect("join without spawn_tx");
                             scope.spawn(move || {
-                                if let Err(e) =
-                                    worker_loop(wj, &spec2, scale, shared2.clone(), tx, Some(boot))
-                                {
+                                if let Err(e) = worker_loop(
+                                    wj,
+                                    &spec2,
+                                    scale,
+                                    shared2.clone(),
+                                    tx,
+                                    Some(boot),
+                                    0,
+                                ) {
                                     shared2.stop.store(true, Ordering::SeqCst);
                                     eprintln!("joined worker {wj} failed: {e:#}");
                                 }
                             });
+                        }
+                        ClusterDelta::Crashed { worker: wc, until } => {
+                            // Unclean crash: the thread observes its
+                            // `down_until` and exits; its uncommitted work
+                            // dies with it, any commit in flight is dropped
+                            // by the drain filter below, and barriers stop
+                            // counting it until restart.
+                            {
+                                let mut progress = shared.progress.lock().unwrap();
+                                progress[wc].active = false;
+                                progress[wc].blocked = false;
+                                progress[wc].local_since_commit = 0;
+                            }
+                            crash_gen[wc] += 1;
+                            pending_restarts.push((until, wc));
+                        }
+                        ClusterDelta::ShardDown { shard: _, until } => {
+                            // Failover: restore every shard to the last
+                            // checkpointed cut (losing what was applied
+                            // past it) and hold the commit drain until the
+                            // recovery completes.
+                            if let Some(c) = ckpt_store.latest() {
+                                ps.restore(c);
+                            }
+                            ps_down_until = ps_down_until.max(until);
+                            ps_recover_pending = true;
                         }
                     }
                     shared.with_view(now_v, |p, v| p.on_cluster_change(v));
@@ -311,6 +385,57 @@ impl RealtimeEngine {
                     }
                 }
 
+                // Crash restarts: respawn each due worker from a
+                // consistent PS snapshot (the join-snapshot path) with
+                // counters bootstrapped to the active minimum, then
+                // re-notify the policy.
+                if !pending_restarts.is_empty() {
+                    let due: Vec<usize> = pending_restarts
+                        .iter()
+                        .filter(|&&(t, _)| t <= now_v)
+                        .map(|&(_, w)| w)
+                        .collect();
+                    pending_restarts.retain(|&(t, _)| t > now_v);
+                    for wr in due {
+                        {
+                            let cluster = shared.cluster.lock().unwrap();
+                            if !cluster.active[wr] {
+                                continue; // it left the cluster while down
+                            }
+                            let mut progress = shared.progress.lock().unwrap();
+                            let entry = cluster.join_progress(wr, &progress);
+                            progress[wr] = entry;
+                        }
+                        let boot = ps.snapshot();
+                        let spec2 = spec.clone();
+                        let shared2 = shared.clone();
+                        let tx = spawn_tx.clone().expect("restart without spawn_tx");
+                        let generation = crash_gen[wr];
+                        scope.spawn(move || {
+                            if let Err(e) = worker_loop(
+                                wr,
+                                &spec2,
+                                scale,
+                                shared2.clone(),
+                                tx,
+                                Some(boot),
+                                generation,
+                            ) {
+                                shared2.stop.store(true, Ordering::SeqCst);
+                                eprintln!("restarted worker {wr} failed: {e:#}");
+                            }
+                        });
+                        shared.with_view(now_v, |p, v| p.on_cluster_change(v));
+                    }
+                }
+
+                // PS failover completion: one policy re-notification once
+                // the recovery window closes (mirrors the blackout lift).
+                if ps_recover_pending && now_v >= ps_down_until {
+                    ps_recover_pending = false;
+                    shared.with_view(now_v, |p, v| p.on_cluster_change(v));
+                }
+
                 // Scheduler ticks.
                 if now_v >= next_eval {
                     let (x, y) = eval_source.eval_batch(eval_b);
@@ -333,6 +458,16 @@ impl RealtimeEngine {
                     shared.with_view(now_v, |p, v| p.on_epoch_start(v));
                     next_epoch += spec.sync.epoch_secs;
                 }
+                if let CheckpointPolicy::IntervalSecs(dt) = spec.fault.checkpoint {
+                    // Fault-subsystem checkpoint: a consistent versioned
+                    // cut of every shard (global + velocity). The explicit
+                    // byte-cost model is a simulator concept — here the
+                    // real wall time of the cut plays that role.
+                    if now_v >= next_ckpt_save {
+                        ckpt_store.save(ps.checkpoint());
+                        next_ckpt_save += dt;
+                    }
+                }
 
                 // Apply pending commits (bounded wait so ticks stay live).
                 // Sharded PS: drain up to one pipeline's worth per round so
@@ -342,6 +477,13 @@ impl RealtimeEngine {
                 // per round, snapshot right after it — the seed protocol.
                 let drain_limit =
                     if spec.shards > 1 { spec.pipeline_depth.max(1) } else { 1 };
+                if now_v < ps_down_until {
+                    // PS failover in progress: commits queue in the
+                    // channel and their workers block on replies until
+                    // the recovery window closes.
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
                 match commit_rx.recv_timeout(Duration::from_millis(2)) {
                     Ok(first) => {
                         let mut batch = vec![first];
@@ -351,13 +493,24 @@ impl RealtimeEngine {
                                 Err(_) => break,
                             }
                         }
-                        // A worker that left while its commit was in flight
-                        // loses it — the simulator's arrival-drop semantics.
-                        // (Dropping the msg drops its reply sender, so the
-                        // departed thread's recv fails and it exits.)
+                        // A worker that left — or crashed — while its
+                        // commit was in flight loses it, the simulator's
+                        // arrival-drop semantics: the generation check
+                        // catches pre-crash stragglers even when the
+                        // outage has already ended by drain time (e.g. a
+                        // PS failover paused the drain across it).
+                        // (Dropping the msg drops its reply sender, so
+                        // the departed thread's recv fails and it exits.)
                         let batch: Vec<CommitMsg> = {
                             let cluster = shared.cluster.lock().unwrap();
-                            batch.into_iter().filter(|m| cluster.active[m.worker]).collect()
+                            batch
+                                .into_iter()
+                                .filter(|m| {
+                                    cluster.active[m.worker]
+                                        && !cluster.is_down(m.worker, now_v)
+                                        && m.generation == crash_gen[m.worker]
+                                })
+                                .collect()
                         };
                         if batch.is_empty() {
                             continue;
@@ -382,6 +535,13 @@ impl RealtimeEngine {
                             shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
                             let _ = msg.reply.send(fresh.clone());
                         }
+                        if let CheckpointPolicy::EveryCommits(n) = spec.fault.checkpoint {
+                            let last_v =
+                                ckpt_store.latest().map(|c| c.version).unwrap_or(0);
+                            if ps.version() >= last_v + n {
+                                ckpt_store.save(ps.checkpoint());
+                            }
+                        }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -389,7 +549,7 @@ impl RealtimeEngine {
             }
 
             shared.stop.store(true, Ordering::SeqCst);
-            drop(join_tx);
+            drop(spawn_tx);
             // Drain outstanding commits so workers blocked on replies exit.
             while let Ok(msg) = commit_rx.recv_timeout(Duration::from_millis(200)) {
                 ps.apply(&msg.u);
@@ -399,7 +559,12 @@ impl RealtimeEngine {
 
             let end_virtual = start.elapsed().as_secs_f64() / scale;
             let workers = shared.metrics.lock().unwrap().clone();
-            let breakdown = Breakdown::from_workers(&workers);
+            // Members only, mirroring the simulator (identical to the
+            // plain average when nobody ever left).
+            let breakdown = {
+                let active = shared.cluster.lock().unwrap().active.clone();
+                Breakdown::from_active_workers(&workers, &active)
+            };
             let loss_log = std::mem::take(&mut ps.loss_log);
             Ok(RealtimeOutcome {
                 model: spec.model.clone(),
@@ -426,9 +591,14 @@ fn worker_loop(
     scale: f64,
     shared: Arc<Shared>,
     commit_tx: mpsc::Sender<CommitMsg>,
-    // `Some(snapshot)` for timeline joiners: start from the PS snapshot
-    // and skip the start barrier (the run is already underway).
+    // `Some(snapshot)` for timeline joiners and crash restarts: start
+    // from the PS snapshot and skip the start barrier (the run is
+    // already underway).
     boot: Option<ParamSet>,
+    // The crash generation this thread was spawned under (0 for initial
+    // workers and joiners; the post-crash value for restarts). Stamped
+    // on every commit so the scheduler can drop pre-crash stragglers.
+    generation: u64,
 ) -> Result<()> {
     // Each worker owns its own runtime (PJRT handles are not Send; on the
     // paper's testbed each worker is its own machine). An *initial* worker
@@ -466,16 +636,17 @@ fn worker_loop(
 
     while !shared.stop.load(Ordering::Relaxed) {
         // Re-read the live cluster each round: timeline events may have
-        // shifted this worker's speed/comm/link or retired it.
-        let (v, o, active) = {
+        // shifted this worker's speed/comm/link, retired it, or crashed
+        // it (the scheduler respawns a fresh thread at restart time).
+        let now_v = start.elapsed().as_secs_f64() / scale;
+        let (v, o, active, down) = {
             let c = shared.cluster.lock().unwrap();
-            (c.speeds[w], c.comms[w], c.active[w])
+            (c.speeds[w], c.comms[w], c.active[w], c.is_down(w, now_v))
         };
-        if !active {
-            break; // the worker left the cluster
+        if !active || down {
+            break; // the worker left the cluster, or crashed uncleanly
         }
         let step_v = (b as f64 / b_ref).max(1e-9) / v; // virtual secs per step
-        let now_v = start.elapsed().as_secs_f64() / scale;
         let action = shared.with_view(now_v, |p, view| p.next_action(w, view));
         match action {
             Action::Train { k } => {
@@ -536,7 +707,8 @@ fn worker_loop(
                 let up_extra = link.transfer_secs_jittered(up_bytes, &mut net_rng);
                 std::thread::sleep(Duration::from_secs_f64((o / 2.0 + up_extra) * scale));
                 let (reply_tx, reply_rx) = mpsc::channel();
-                let msg = CommitMsg { worker: w, u: snapshot, up_bytes, reply: reply_tx };
+                let msg =
+                    CommitMsg { worker: w, u: snapshot, up_bytes, generation, reply: reply_tx };
                 if commit_tx.send(msg).is_err() {
                     break;
                 }

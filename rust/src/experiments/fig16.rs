@@ -1,0 +1,132 @@
+//! Fig. 16 (reproduction extension) — fault tolerance: crash rate ×
+//! checkpoint interval × synchronization model.
+//!
+//! Edge devices fail *uncleanly*: a worker dies mid-commit, a PS shard
+//! loses its state. This experiment scripts both through the `fault`
+//! subsystem — a wave of `WorkerCrash` events (each dropping the victim's
+//! in-flight commit and uncommitted local steps, then restarting it via
+//! the join-snapshot path) plus one `ShardFailure` whose failover restores
+//! the last checkpoint, losing everything applied past it — and sweeps the
+//! checkpoint interval against the crash rate for each model. Reported per
+//! cell:
+//!
+//! * convergence-time degradation vs. the model's own fault-free baseline;
+//! * *wasted steps* — local work lost and recomputed (dropped commits,
+//!   crash-lost accumulators, rolled-back applies);
+//! * checkpoint count and the explicit checkpoint overhead (model bytes
+//!   through the sink-rate cost model; commits queue behind each write).
+//!
+//! Expected shape: ADSP degrades least at every crash rate — its survivors
+//! never block on the crashed workers, and it re-anchors its commit target
+//! at every crash, restart, and failover edge — while the barrier models
+//! stall on each membership change. Shorter checkpoint intervals pay more
+//! overhead but lose less work to the shard failover (the wasted-steps
+//! column shrinks): the classic checkpointing trade-off, asserted by the
+//! bench.
+
+use anyhow::Result;
+
+use crate::cluster::{ClusterEvent, ClusterTimeline};
+use crate::config::profiles::ec2_cluster;
+use crate::config::ClusterSpec;
+use crate::fault::CheckpointPolicy;
+
+use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::fig14::SYNC_MODELS;
+
+/// The swept crash counts (the "crash rate" axis).
+pub const CRASH_COUNTS: [usize; 2] = [1, 3];
+
+/// The swept checkpoint intervals as fractions of the horizon: `short`
+/// checkpoints often (more overhead, less lost work), `long` rarely.
+pub const CKPT_INTERVALS: [(&str, f64); 2] = [("short", 0.05), ("long", 0.25)];
+
+/// Scripted fault wave: `crashes` unclean worker crashes evenly spaced
+/// over the middle of the run (distinct workers, each down for 8% of the
+/// horizon) plus one PS shard failure at 60% whose failover restores the
+/// last checkpoint. Deterministic in `(cluster, horizon, crashes)`.
+pub fn fault_wave(cluster: &ClusterSpec, horizon: f64, crashes: usize) -> ClusterTimeline {
+    let m = cluster.m();
+    let n = crashes.clamp(1, m);
+    let mut events: Vec<ClusterEvent> = (0..n)
+        .map(|i| ClusterEvent::WorkerCrash {
+            t: 0.25 * horizon + (0.3 * horizon) * i as f64 / n as f64,
+            worker: i % m,
+            restart_after: 0.08 * horizon,
+        })
+        .collect();
+    events.push(ClusterEvent::ShardFailure {
+        t: 0.6 * horizon,
+        shard: 0,
+        recover_after: 0.05 * horizon,
+    });
+    ClusterTimeline::new(events)
+}
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let cluster = match scale {
+        Scale::Bench => ec2_cluster(6, 2.0, 0.3),
+        Scale::Full => ec2_cluster(18, 1.0, 0.5),
+    };
+    // Checkpoint-sink write rate: slow enough that the cost is visible in
+    // the overhead column, fast enough not to dominate the run. The bench
+    // model (`mlp_quick`) commits a few kB; the full model is ~MB-scale.
+    let sink_rate = match scale {
+        Scale::Bench => 4e3,
+        Scale::Full => 2e6,
+    };
+
+    let mut table = SeriesTable::new(
+        "fig16_fault_tolerance",
+        &[
+            "crashes",
+            "ckpt",
+            "ckpt_interval_s",
+            "sync",
+            "baseline_time_s",
+            "faulted_time_s",
+            "degradation",
+            "wasted_steps",
+            "lost_commits",
+            "checkpoints",
+            "ckpt_overhead_s",
+            "final_loss",
+        ],
+    );
+
+    for kind in SYNC_MODELS {
+        let base_spec = spec_for(scale, kind, cluster.clone());
+        let horizon = base_spec.max_virtual_secs;
+        let baseline = run_sim(base_spec.clone())?;
+        let t_base = baseline.convergence_time();
+
+        for &crashes in &CRASH_COUNTS {
+            for &(ckpt_name, frac) in &CKPT_INTERVALS {
+                let mut spec = base_spec.clone();
+                spec.timeline = fault_wave(&spec.cluster, horizon, crashes);
+                spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(frac * horizon);
+                spec.fault.sink_bytes_per_sec = sink_rate;
+                let faulted = run_sim(spec)?;
+                let t_fault = faulted.convergence_time();
+                let degradation =
+                    if t_base > 0.0 { (t_fault - t_base) / t_base } else { 0.0 };
+                table.push_row(vec![
+                    crashes.to_string(),
+                    ckpt_name.to_string(),
+                    fmt(frac * horizon),
+                    kind.name().to_string(),
+                    fmt(t_base),
+                    fmt(t_fault),
+                    fmt(degradation),
+                    faulted.wasted_steps.to_string(),
+                    faulted.lost_commits.to_string(),
+                    faulted.checkpoints_taken.to_string(),
+                    fmt(faulted.checkpoint_overhead_secs),
+                    fmt(faulted.final_loss),
+                ]);
+            }
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}

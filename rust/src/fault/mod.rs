@@ -1,0 +1,48 @@
+//! Fault-tolerance subsystem: checkpointing, crash/recovery, PS failover.
+//!
+//! ADSP targets edge systems whose devices are intrinsically unreliable,
+//! yet until this subsystem the repo only modeled *graceful* membership
+//! change (timeline churn): an unclean worker crash, a lost in-flight
+//! commit, or a failed PS shard had no representation, and the sharded PS
+//! had no durable state. Fog-learning surveys and resource-constrained FL
+//! (see PAPERS.md) treat device failure and recovery cost as first-order
+//! concerns; this module makes them first-class:
+//!
+//! * [`policy::CheckpointPolicy`] — when the PS checkpoints its global
+//!   state: never, every fixed interval of virtual seconds, or every N
+//!   applied commits.
+//! * [`spec::FaultSpec`] — the validated `fault` section of an
+//!   [`crate::config::ExperimentSpec`] (JSON round-trip): the checkpoint
+//!   policy plus an explicit *cost model* — checkpoint bytes (the model
+//!   size) are written either to a local sink at a configurable byte rate
+//!   or through the shared PS-ingress pipe (`remote_sink`), so shorter
+//!   intervals visibly trade overhead for less lost work.
+//! * [`store::Checkpoint`] / [`store::CheckpointStore`] — a versioned
+//!   consistent cut of the PS state (global model + velocity at a commit
+//!   version) and the bounded in-memory store engines restore from.
+//!
+//! Failure *events* ride the cluster timeline
+//! ([`crate::cluster::ClusterEvent`]): `WorkerCrash{t, worker,
+//! restart_after}` is an unclean crash — the in-flight commit is dropped,
+//! uncommitted local steps are lost, and the worker restarts after the
+//! outage via the join-snapshot path (model from the PS's consistent
+//! state, counters bootstrapped to the active minimum).
+//! `ShardFailure{t, shard, recover_after}` takes the PS down: commits
+//! block until failover restores the *whole* cut from the last checkpoint
+//! (restoring one slab at an older version than its peers would be
+//! inconsistent, so the recovery line rolls every shard back together),
+//! losing the updates applied past the checkpoint version. Both engines
+//! agree on what each failure mode loses — see DESIGN.md §Fault for the
+//! recovery protocol and the per-policy reaction table.
+//!
+//! The degenerate configuration — checkpointing off, no fault events —
+//! adds no events, seeds no store, and draws no randomness, keeping every
+//! pre-fault run bit-identical (pinned in `tests/integration.rs`).
+
+pub mod policy;
+pub mod spec;
+pub mod store;
+
+pub use policy::CheckpointPolicy;
+pub use spec::FaultSpec;
+pub use store::{Checkpoint, CheckpointStore};

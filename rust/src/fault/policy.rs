@@ -1,0 +1,106 @@
+//! When the parameter server checkpoints its state.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// The checkpoint cadence. `Off` is the degenerate default: no checkpoint
+/// is ever taken, no cost is ever charged, and runs are bit-identical to
+/// the pre-fault behaviour.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CheckpointPolicy {
+    /// Never checkpoint (a shard failure then reverts to initial params).
+    #[default]
+    Off,
+    /// Checkpoint every this-many virtual seconds.
+    IntervalSecs(f64),
+    /// Checkpoint after every this-many applied commits.
+    EveryCommits(u64),
+}
+
+impl CheckpointPolicy {
+    /// True for the degenerate no-checkpointing policy.
+    pub fn is_off(&self) -> bool {
+        matches!(self, CheckpointPolicy::Off)
+    }
+
+    /// Reject non-finite or non-positive cadences.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            CheckpointPolicy::Off => Ok(()),
+            CheckpointPolicy::IntervalSecs(dt) => {
+                if !dt.is_finite() || *dt <= 0.0 {
+                    bail!("checkpoint interval must be positive, got {dt}");
+                }
+                Ok(())
+            }
+            CheckpointPolicy::EveryCommits(n) => {
+                if *n == 0 {
+                    bail!("checkpoint commit count must be >= 1");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// JSON object form (the `fault.checkpoint` key of an experiment spec).
+    pub fn to_json(&self) -> Json {
+        match self {
+            CheckpointPolicy::Off => Json::obj(vec![("mode", Json::str("off"))]),
+            CheckpointPolicy::IntervalSecs(dt) => Json::obj(vec![
+                ("mode", Json::str("interval")),
+                ("secs", Json::num(*dt)),
+            ]),
+            CheckpointPolicy::EveryCommits(n) => Json::obj(vec![
+                ("mode", Json::str("commits")),
+                ("commits", Json::num(*n as f64)),
+            ]),
+        }
+    }
+
+    /// Parse from the JSON object form.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let policy = match v.req("mode")?.as_str()? {
+            "off" => CheckpointPolicy::Off,
+            "interval" => CheckpointPolicy::IntervalSecs(v.req("secs")?.as_f64()?),
+            "commits" => CheckpointPolicy::EveryCommits(v.req("commits")?.as_u64()?),
+            other => bail!("unknown checkpoint mode '{other}' (off | interval | commits)"),
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_off() {
+        assert!(CheckpointPolicy::default().is_off());
+        assert!(!CheckpointPolicy::IntervalSecs(30.0).is_off());
+    }
+
+    #[test]
+    fn json_roundtrip_every_mode() {
+        for p in [
+            CheckpointPolicy::Off,
+            CheckpointPolicy::IntervalSecs(45.5),
+            CheckpointPolicy::EveryCommits(64),
+        ] {
+            let back =
+                CheckpointPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_cadences() {
+        assert!(CheckpointPolicy::IntervalSecs(0.0).validate().is_err());
+        assert!(CheckpointPolicy::IntervalSecs(f64::NAN).validate().is_err());
+        assert!(CheckpointPolicy::EveryCommits(0).validate().is_err());
+        assert!(CheckpointPolicy::Off.validate().is_ok());
+        let bad = Json::parse(r#"{"mode":"hourly"}"#).unwrap();
+        assert!(CheckpointPolicy::from_json(&bad).is_err());
+    }
+}

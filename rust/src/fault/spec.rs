@@ -1,0 +1,101 @@
+//! The validated `fault` section of an experiment spec.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+use super::policy::CheckpointPolicy;
+
+/// Fault-tolerance configuration: the checkpoint cadence plus its explicit
+/// cost model. The default is degenerate — checkpointing off, zero cost —
+/// and bit-identical to the pre-fault behaviour (pinned in
+/// `tests/integration.rs`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// When the PS checkpoints its global state.
+    pub checkpoint: CheckpointPolicy,
+    /// Local checkpoint-sink write rate in bytes/s; `0.0` = unbounded (a
+    /// checkpoint is instantaneous). Ignored when `remote_sink` is set.
+    pub sink_bytes_per_sec: f64,
+    /// Write checkpoints through the shared PS-ingress pipe instead of a
+    /// local sink, so checkpoint traffic contends with commit uploads
+    /// (the remote-checkpoint cost model).
+    pub remote_sink: bool,
+}
+
+impl FaultSpec {
+    /// True for the degenerate configuration: no checkpointing, so the
+    /// engines schedule nothing, seed no store, and charge no cost.
+    pub fn is_degenerate(&self) -> bool {
+        self.checkpoint.is_off()
+    }
+
+    /// Reject invalid cadences and sink rates.
+    pub fn validate(&self) -> Result<()> {
+        self.checkpoint.validate()?;
+        if !self.sink_bytes_per_sec.is_finite() || self.sink_bytes_per_sec < 0.0 {
+            bail!("checkpoint sink rate must be finite and >= 0 (0 = unbounded)");
+        }
+        Ok(())
+    }
+
+    /// JSON object form (the `fault` key of an experiment spec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("checkpoint", self.checkpoint.to_json()),
+            ("sink_bytes_per_sec", Json::num(self.sink_bytes_per_sec)),
+            ("remote_sink", Json::Bool(self.remote_sink)),
+        ])
+    }
+
+    /// Parse from JSON; absent keys default to the degenerate config.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let spec = FaultSpec {
+            checkpoint: match v.get("checkpoint") {
+                Some(c) => CheckpointPolicy::from_json(c)?,
+                None => CheckpointPolicy::Off,
+            },
+            sink_bytes_per_sec: v.f64_or("sink_bytes_per_sec", 0.0)?,
+            remote_sink: v.get("remote_sink").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_degenerate() {
+        let spec = FaultSpec::default();
+        assert!(spec.is_degenerate());
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = FaultSpec {
+            checkpoint: CheckpointPolicy::IntervalSecs(30.0),
+            sink_bytes_per_sec: 5e4,
+            remote_sink: true,
+        };
+        let back = FaultSpec::from_json(&Json::parse(&spec.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, spec);
+        // An empty section is the degenerate default.
+        let sparse = FaultSpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(sparse.is_degenerate());
+    }
+
+    #[test]
+    fn validation_rejects_bad_sinks() {
+        let mut spec = FaultSpec { sink_bytes_per_sec: -1.0, ..Default::default() };
+        assert!(spec.validate().is_err());
+        spec.sink_bytes_per_sec = f64::INFINITY;
+        assert!(spec.validate().is_err());
+        spec.sink_bytes_per_sec = 0.0;
+        spec.checkpoint = CheckpointPolicy::EveryCommits(0);
+        assert!(spec.validate().is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Versioned checkpoints of the parameter-server state.
+
+use crate::runtime::ParamSet;
+
+/// One consistent cut of the PS: the global model and its velocity at a
+/// commit version. Taken per-shard through the shard FIFOs by
+/// [`crate::pserver::ShardedParameterServer::checkpoint`] (every shard
+/// reports the same version) and reassembled into whole-model form so a
+/// restore is a single consistent state regardless of the shard count it
+/// was taken under.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Commit version the cut was taken at (== commits applied so far).
+    pub version: u64,
+    /// The global model W at `version`.
+    pub params: ParamSet,
+    /// The PS velocity V at `version` (all-zero on the plain-SGD path).
+    pub velocity: ParamSet,
+}
+
+impl Checkpoint {
+    /// Checkpoint payload size: the model bytes that must reach the sink
+    /// (the velocity rides in the same write on the momentum path, but the
+    /// cost model charges the model size — see DESIGN.md §Fault).
+    pub fn bytes(&self) -> u64 {
+        (4 * self.params.total_numel()) as u64
+    }
+}
+
+/// Bounded in-memory checkpoint store: keeps the `keep_last` most recent
+/// checkpoints so failover can restore the latest consistent cut without
+/// holding every historical model in memory.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    keep_last: usize,
+    checkpoints: Vec<Checkpoint>,
+    /// Lifetime count of checkpoints saved (survives eviction).
+    pub saved: u64,
+    /// Lifetime checkpoint bytes written (survives eviction).
+    pub bytes_written: u64,
+}
+
+impl CheckpointStore {
+    /// A store retaining the `keep_last` (>= 1) most recent checkpoints.
+    pub fn new(keep_last: usize) -> Self {
+        CheckpointStore {
+            keep_last: keep_last.max(1),
+            checkpoints: Vec::new(),
+            saved: 0,
+            bytes_written: 0,
+        }
+    }
+
+    /// Save one checkpoint, evicting the oldest past `keep_last`. Versions
+    /// must be non-decreasing (the engines only move forward).
+    pub fn save(&mut self, ckpt: Checkpoint) {
+        debug_assert!(
+            self.checkpoints.last().map(|c| c.version <= ckpt.version).unwrap_or(true),
+            "checkpoint versions must be non-decreasing"
+        );
+        self.saved += 1;
+        self.bytes_written += ckpt.bytes();
+        self.checkpoints.push(ckpt);
+        if self.checkpoints.len() > self.keep_last {
+            self.checkpoints.remove(0);
+        }
+    }
+
+    /// The most recent checkpoint, if any was saved.
+    pub fn latest(&self) -> Option<&Checkpoint> {
+        self.checkpoints.last()
+    }
+
+    /// The most recent checkpoint at or before `version` (what a failover
+    /// that must not roll forward past `version` restores).
+    pub fn at_or_before(&self, version: u64) -> Option<&Checkpoint> {
+        self.checkpoints.iter().rev().find(|c| c.version <= version)
+    }
+
+    /// Checkpoints currently retained.
+    pub fn len(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    /// True when nothing has been saved (or everything was evicted).
+    pub fn is_empty(&self) -> bool {
+        self.checkpoints.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ckpt(version: u64, fill: f32) -> Checkpoint {
+        let params = ParamSet { leaves: vec![vec![fill; 8], vec![fill; 3]] };
+        let velocity = params.zeros_like();
+        Checkpoint { version, params, velocity }
+    }
+
+    #[test]
+    fn keeps_only_the_most_recent() {
+        let mut store = CheckpointStore::new(2);
+        assert!(store.is_empty());
+        for v in 1..=4 {
+            store.save(ckpt(v * 10, v as f32));
+        }
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.saved, 4);
+        assert_eq!(store.latest().unwrap().version, 40);
+        // Evicted versions are gone; retained ones resolve.
+        assert!(store.at_or_before(15).is_none());
+        assert_eq!(store.at_or_before(35).unwrap().version, 30);
+        assert_eq!(store.at_or_before(99).unwrap().version, 40);
+    }
+
+    #[test]
+    fn bytes_accounting_tracks_model_size() {
+        let mut store = CheckpointStore::new(1);
+        let c = ckpt(1, 0.5);
+        let bytes = c.bytes();
+        assert_eq!(bytes, 4 * 11);
+        store.save(c);
+        store.save(ckpt(2, 0.25));
+        assert_eq!(store.bytes_written, 2 * bytes);
+        assert_eq!(store.len(), 1);
+    }
+}

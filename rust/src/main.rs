@@ -25,8 +25,9 @@ USAGE:
              [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
              [--target-loss L] [--config FILE.json] [--realtime]
              [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
-             [--scenario NAME] [--link-bw BPS] [--link-latency SECS]
-  adsp experiment <fig1|fig3..fig15|all> [--full]
+             [--scenario NAME] [--list-scenarios] [--link-bw BPS]
+             [--link-latency SECS] [--checkpoint-every SECS]
+  adsp experiment <fig1|fig3..fig16|all> [--full]
   adsp inspect <model>
   adsp list
 
@@ -51,14 +52,21 @@ TRAIN FLAGS:
                       simulator, split across shards (default 0)
   --scenario NAME     scripted cluster dynamics preset applied on top of
                       the cluster: slowdown | straggler_burst | churn |
-                      blackout (timeline events land at 20%/50% of
-                      --max-secs; a JSON --config may instead script its
-                      own \"timeline\" section)
+                      blackout | crash_storm (timeline events land at
+                      20%/50% of --max-secs; a JSON --config may instead
+                      script its own \"timeline\" section)
+  --list-scenarios    print every --scenario preset with a one-line
+                      description, then exit
   --link-bw BPS       per-worker link bandwidth in bytes/s (default 0 =
                       unbounded); commit transfer time then grows with
                       the actual payload bytes (\"network\" section of a
                       JSON --config for per-worker links / PS ingress)
   --link-latency SECS per-transfer link latency in seconds (default 0)
+  --checkpoint-every SECS
+                      checkpoint the PS state every SECS virtual seconds
+                      (fault subsystem; 0 = off, the default — the
+                      \"fault\" section of a JSON --config also sets the
+                      sink rate / remote-sink cost model)
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -125,6 +133,13 @@ fn parse_cluster(workers: &str, comm: f64, seed: u64) -> Result<ClusterSpec> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.has("list-scenarios") {
+        println!("scenario presets (adsp train --scenario <name>):");
+        for (name, blurb) in adsp::cluster::scenarios::SCENARIO_DESCRIPTIONS {
+            println!("  {name:<16} {blurb}");
+        }
+        return Ok(());
+    }
     let spec = if let Some(path) = args.flags.get("config") {
         ExperimentSpec::load(std::path::Path::new(path))?
     } else {
@@ -147,6 +162,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.ps_apply_secs = args.get("ps-apply-secs", 0.0)?;
         s.network.default_link.bandwidth_bytes_per_sec = args.get("link-bw", 0.0)?;
         s.network.default_link.latency_secs = args.get("link-latency", 0.0)?;
+        let ckpt_every = args.get("checkpoint-every", 0.0)?;
+        if ckpt_every > 0.0 {
+            s.fault.checkpoint = adsp::fault::CheckpointPolicy::IntervalSecs(ckpt_every);
+        }
         if let Some(name) = args.flags.get("scenario") {
             s.timeline =
                 adsp::cluster::scenarios::preset(name, &s.cluster, s.max_virtual_secs)?;
@@ -196,7 +215,7 @@ fn main() -> Result<()> {
                 print!("{USAGE}");
                 return Ok(());
             }
-            let args = Args::parse(rest, &["realtime"])?;
+            let args = Args::parse(rest, &["realtime", "list-scenarios"])?;
             cmd_train(&args)?;
         }
         "experiment" => {
@@ -284,5 +303,11 @@ fn print_outcome_summary(out: &adsp::simulation::SimOutcome) {
         out.bandwidth_bytes_per_sec() / 1e6,
         out.bytes_total / 1_000_000
     );
+    if out.wasted_steps > 0 || out.checkpoints_taken > 0 {
+        println!(
+            "fault tolerance:  {} wasted steps | {} lost commits | {} checkpoints ({:.1}s overhead)",
+            out.wasted_steps, out.lost_commits, out.checkpoints_taken, out.checkpoint_overhead_secs
+        );
+    }
     println!("xla executions:   {}", out.xla_execs);
 }

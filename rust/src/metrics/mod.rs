@@ -39,8 +39,15 @@ pub struct Breakdown {
 }
 
 impl Breakdown {
+    /// Average the per-worker counters. An empty slice returns the
+    /// all-zero breakdown (never NaN) — fault/churn scenarios can close a
+    /// run with no counted workers, and downstream CSV/percentage math
+    /// must stay well-defined.
     pub fn from_workers(ws: &[WorkerMetrics]) -> Self {
-        let n = ws.len().max(1) as f64;
+        if ws.is_empty() {
+            return Breakdown::default();
+        }
+        let n = ws.len() as f64;
         Breakdown {
             avg_compute_secs: ws.iter().map(|w| w.compute_secs).sum::<f64>() / n,
             avg_waiting_secs: ws.iter().map(|w| w.waiting_secs()).sum::<f64>() / n,
@@ -49,7 +56,23 @@ impl Breakdown {
         }
     }
 
+    /// Average only the workers whose `active` flag is set (paired by
+    /// index; extra entries of either slice are ignored). A set with no
+    /// active workers — everyone left or crashed — returns the all-zero
+    /// breakdown instead of a 0/0 NaN.
+    pub fn from_active_workers(ws: &[WorkerMetrics], active: &[bool]) -> Self {
+        let kept: Vec<WorkerMetrics> = ws
+            .iter()
+            .zip(active)
+            .filter(|(_, &a)| a)
+            .map(|(w, _)| w.clone())
+            .collect();
+        Breakdown::from_workers(&kept)
+    }
+
     /// Fraction of total time spent waiting (Fig. 1's headline number).
+    /// A zero-time breakdown (empty/all-inactive worker set, or a run
+    /// that never started) reports `0.0`, never NaN.
     pub fn waiting_fraction(&self) -> f64 {
         let total = self.avg_compute_secs + self.avg_waiting_secs;
         if total <= 0.0 {
@@ -165,6 +188,29 @@ mod tests {
         assert!((b.avg_compute_secs - 15.0).abs() < 1e-12);
         assert!((b.avg_waiting_secs - 5.0).abs() < 1e-12);
         assert!((b.waiting_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_is_zero_not_nan_on_empty_or_inactive_sets() {
+        // Empty worker set: all-zero breakdown, 0.0 waiting fraction.
+        let empty = Breakdown::from_workers(&[]);
+        assert_eq!(empty.avg_compute_secs, 0.0);
+        assert_eq!(empty.avg_waiting_secs, 0.0);
+        assert!(!empty.waiting_fraction().is_nan());
+        assert_eq!(empty.waiting_fraction(), 0.0);
+        // All-inactive set: same.
+        let ws = vec![
+            WorkerMetrics { compute_secs: 10.0, comm_secs: 2.0, ..Default::default() },
+            WorkerMetrics { compute_secs: 20.0, blocked_secs: 4.0, ..Default::default() },
+        ];
+        let none = Breakdown::from_active_workers(&ws, &[false, false]);
+        assert_eq!(none.avg_compute_secs, 0.0);
+        assert_eq!(none.waiting_fraction(), 0.0);
+        assert!(!none.waiting_fraction().is_nan());
+        // A partially active set averages only the live workers.
+        let one = Breakdown::from_active_workers(&ws, &[false, true]);
+        assert!((one.avg_compute_secs - 20.0).abs() < 1e-12);
+        assert!((one.avg_blocked_secs - 4.0).abs() < 1e-12);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::fault::Checkpoint;
 use crate::metrics::LossLog;
 use crate::runtime::{Batch, ModelRuntime, ParamSet};
 
@@ -28,6 +29,11 @@ enum ShardMsg {
     Apply(Vec<f32>),
     /// Reply with `(version, global slab)` after all earlier messages.
     Read(mpsc::Sender<(u64, Vec<f32>)>),
+    /// Reply with `(version, global slab, velocity slab)` — the per-shard
+    /// leg of a checkpoint cut (rides the FIFO, so it is consistent).
+    Snapshot(mpsc::Sender<(u64, Vec<f32>, Vec<f32>)>),
+    /// Reset this shard to a checkpointed slab (failover restore).
+    Restore { version: u64, global: Vec<f32>, velocity: Vec<f32> },
 }
 
 /// Drop-in parallel replacement for `coordinator::ps::ParameterServer`;
@@ -69,6 +75,16 @@ impl ShardedParameterServer {
                         ShardMsg::Apply(u) => state.apply(&u),
                         ShardMsg::Read(reply) => {
                             let _ = reply.send((state.version, state.global.clone()));
+                        }
+                        ShardMsg::Snapshot(reply) => {
+                            let _ = reply.send((
+                                state.version,
+                                state.global.clone(),
+                                state.velocity.clone(),
+                            ));
+                        }
+                        ShardMsg::Restore { version, global, velocity } => {
+                            state.restore(global, velocity, version);
                         }
                     }
                 }
@@ -142,6 +158,54 @@ impl ShardedParameterServer {
     /// a barrier on all commits applied so far.
     pub fn snapshot(&self) -> ParamSet {
         self.versioned_snapshot().1
+    }
+
+    /// Take a versioned checkpoint: a consistent cut of every shard's
+    /// global *and* velocity slab at one commit version (the cut markers
+    /// ride the same FIFOs as applies, exactly like
+    /// [`ShardedParameterServer::versioned_snapshot`]).
+    pub fn checkpoint(&self) -> Checkpoint {
+        let rxs: Vec<mpsc::Receiver<(u64, Vec<f32>, Vec<f32>)>> = self
+            .txs
+            .iter()
+            .map(|tx| {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(ShardMsg::Snapshot(rtx)).expect("shard thread died");
+                rrx
+            })
+            .collect();
+        let mut globals = Vec::with_capacity(rxs.len());
+        let mut velocities = Vec::with_capacity(rxs.len());
+        let mut version = 0u64;
+        for (j, rrx) in rxs.into_iter().enumerate() {
+            let (v, global, velocity) = rrx.recv().expect("shard thread died");
+            debug_assert!(j == 0 || v == version, "inconsistent shard versions");
+            version = v;
+            globals.push(global);
+            velocities.push(velocity);
+        }
+        Checkpoint {
+            version,
+            params: self.partition.reassemble(&globals),
+            velocity: self.partition.reassemble(&velocities),
+        }
+    }
+
+    /// Failover restore: reset every shard to the checkpoint's slab of the
+    /// global model and velocity at the checkpoint's version — one
+    /// consistent recovery line for the whole server. Updates applied past
+    /// `ckpt.version` are lost, and the server's commit counter rolls back
+    /// with the cut so subsequent snapshots report the restored version.
+    pub fn restore(&mut self, ckpt: &Checkpoint) {
+        for (j, tx) in self.txs.iter().enumerate() {
+            tx.send(ShardMsg::Restore {
+                version: ckpt.version,
+                global: self.partition.extract(&ckpt.params, j),
+                velocity: self.partition.extract(&ckpt.velocity, j),
+            })
+            .expect("shard thread died");
+        }
+        self.commits = ckpt.version;
     }
 
     /// Evaluate the (gathered) global model and record the sample, exactly
@@ -259,6 +323,65 @@ mod tests {
         ps.apply(&set(vec![vec![1.0, 1.0]]));
         assert_eq!(snap.leaves[0], vec![1.0, 2.0]);
         assert_eq!(ps.snapshot().leaves[0], vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip_is_bit_identical() {
+        let lens = [5usize, 12, 3];
+        for (s, mu) in [(1usize, 0.0f32), (4, 0.9)] {
+            let init = wavy(&lens, 0.17);
+            let mut ps = ShardedParameterServer::new(init, 0.3, mu, s, 2);
+            for c in 0..5 {
+                ps.apply(&wavy(&lens, 0.05 * (c + 1) as f32));
+            }
+            let (v_at, snap_at) = ps.versioned_snapshot();
+            let ckpt = ps.checkpoint();
+            assert_eq!(ckpt.version, v_at);
+            assert_eq!(ckpt.params.max_abs_diff(&snap_at), 0.0);
+            // Diverge, then restore: state and version both roll back.
+            for c in 0..4 {
+                ps.apply(&wavy(&lens, 0.02 * (c + 1) as f32));
+            }
+            assert_ne!(ps.snapshot().max_abs_diff(&snap_at), 0.0);
+            ps.restore(&ckpt);
+            let (v_back, snap_back) = ps.versioned_snapshot();
+            assert_eq!(v_back, v_at, "s={s}");
+            assert_eq!(ps.version(), v_at, "s={s}");
+            for (a, b) in snap_back.leaves.iter().zip(snap_at.leaves.iter()) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "s={s} mu={mu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn restore_recovers_the_momentum_path() {
+        // Replay equivalence: (apply k, checkpoint, diverge, restore,
+        // apply u*) must equal a serial PS that saw (apply k, apply u*) —
+        // which only holds if the velocity was checkpointed and restored.
+        let lens = [7usize, 9];
+        let init = wavy(&lens, 0.23);
+        let mut serial = ParameterServer::new(init.clone(), 0.2, 0.9);
+        let mut sharded = ShardedParameterServer::new(init, 0.2, 0.9, 3, 2);
+        for c in 0..4 {
+            let u = wavy(&lens, 0.04 * (c + 1) as f32);
+            serial.apply(&u);
+            sharded.apply(&u);
+        }
+        let ckpt = sharded.checkpoint();
+        for c in 0..3 {
+            sharded.apply(&wavy(&lens, 0.3 + 0.01 * c as f32));
+        }
+        sharded.restore(&ckpt);
+        let u_star = wavy(&lens, 0.41);
+        serial.apply(&u_star);
+        sharded.apply(&u_star);
+        for (a, b) in sharded.snapshot().leaves.iter().zip(serial.global().leaves.iter()) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

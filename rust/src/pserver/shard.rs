@@ -71,6 +71,19 @@ impl ShardState {
         self.commits += 1;
         self.version += 1;
     }
+
+    /// Restore this shard's slab from a checkpoint cut: global, velocity
+    /// and version are reset together so every shard of the server lands
+    /// on the same consistent recovery line. The lifetime `commits`
+    /// counter is deliberately left alone — it counts applies performed,
+    /// including ones later rolled back.
+    pub fn restore(&mut self, global: Vec<f32>, velocity: Vec<f32>, version: u64) {
+        debug_assert_eq!(global.len(), self.global.len(), "restore slab length mismatch");
+        debug_assert_eq!(velocity.len(), self.velocity.len(), "restore velocity mismatch");
+        self.global = global;
+        self.velocity = velocity;
+        self.version = version;
+    }
 }
 
 #[cfg(test)]

@@ -23,6 +23,7 @@ use anyhow::{Context, Result};
 use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::{make_source, DataSource};
+use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::network::IngressQueue;
 use crate::runtime::{native, ModelRuntime, ParamSet};
@@ -49,6 +50,28 @@ enum EventKind {
     /// can re-anchor to the restored connectivity (no state to mutate —
     /// `ClusterState::blackout_until` expires by the clock).
     BlackoutLift,
+    /// Interval-policy checkpoint: save a consistent cut of the PS state
+    /// (`fault` subsystem; self-rescheduling like `Eval`).
+    CkptSave,
+    /// A crashed worker's outage ends: restart it through the
+    /// join-snapshot path (current global model, active-minimum counters).
+    WorkerRestart(usize),
+    /// PS failover completes: once no shard is still down, the policy is
+    /// re-notified so it can re-anchor (mirrors `BlackoutLift`).
+    PsRecover,
+}
+
+impl EventKind {
+    /// The worker a per-worker event belongs to (its incarnation gate).
+    fn worker(&self) -> Option<usize> {
+        match self {
+            EventKind::Ready(w)
+            | EventKind::CommitArrive(w)
+            | EventKind::CommitApply(w)
+            | EventKind::WorkerRestart(w) => Some(*w),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -56,6 +79,14 @@ struct Event {
     t: f64,
     seq: u64,
     kind: EventKind,
+    /// Worker incarnation the event was scheduled under. An unclean crash
+    /// bumps the worker's incarnation, so events queued before the crash
+    /// (a Ready landing after the restart, a commit leg of the dropped
+    /// update) are recognizably stale and ignored — without this, a
+    /// training chunk longer than the outage would leave two concurrent
+    /// Ready chains driving one worker after restart. `0` for events not
+    /// bound to a worker.
+    inc: u64,
 }
 
 impl PartialEq for Event {
@@ -83,6 +114,9 @@ struct WorkerSim {
     in_flight: Option<ParamSet>,
     /// Compressed wire size of the in-flight update (None = dense).
     in_flight_bytes: Option<u64>,
+    /// Local steps the in-flight update carries (wasted-work accounting:
+    /// a dropped commit loses exactly these steps).
+    in_flight_steps: u64,
     /// Link-model extra seconds for the pull leg of the commit in flight
     /// (drawn at commit time so the jitter stream stays deterministic;
     /// exactly 0.0 on a degenerate link).
@@ -137,6 +171,17 @@ pub struct SimOutcome {
     pub deadlocked: bool,
     /// Commits lost to failure injection (`spec.drop_commit_prob`).
     pub dropped_commits: u64,
+    /// Local steps whose work was lost and must be recomputed: steps in
+    /// dropped/lost commits, uncommitted steps at a crash, and steps in
+    /// commits rolled back by a PS failover (fig16's headline metric).
+    pub wasted_steps: u64,
+    /// Applied commits rolled back by PS failovers (past the checkpoint).
+    pub lost_commits: u64,
+    /// Checkpoints taken by the `fault` policy.
+    pub checkpoints_taken: u64,
+    /// Virtual seconds the PS spent writing checkpoints (the explicit
+    /// checkpoint cost model; commits queue behind these writes).
+    pub checkpoint_overhead_secs: f64,
 }
 
 impl SimOutcome {
@@ -223,6 +268,21 @@ pub struct SimEngine {
     /// jitter never perturbs the fault/step-jitter streams (and vice
     /// versa). Degenerate links draw nothing.
     net_rng: crate::util::Rng,
+    /// Per-worker incarnation counters (bumped by unclean crashes); see
+    /// [`Event::inc`].
+    incarnation: Vec<u64>,
+    /// Checkpoint store (`fault` subsystem). Seeded with the initial
+    /// model (version 0) whenever the run can need a restore, so a shard
+    /// failure before the first checkpoint reverts to initial params.
+    ckpt_store: CheckpointStore,
+    /// Commits applied since the last checkpoint (lost on failover).
+    commits_since_ckpt: u64,
+    /// Local steps carried by those commits (wasted on failover).
+    steps_since_ckpt: u64,
+    wasted_steps: u64,
+    lost_commits: u64,
+    checkpoints_taken: u64,
+    checkpoint_secs: f64,
 }
 
 /// Extra per-shard overhead as a fraction of the split cost — the RPC and
@@ -251,7 +311,8 @@ impl SimEngine {
         let available = manifest.batch_sizes();
         let cluster =
             ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
-                .with_network(&spec.network);
+                .with_network(&spec.network)
+                .with_shards(spec.shards);
         let b_default = cluster.b_default();
 
         let spec_seed = spec.seed;
@@ -268,6 +329,7 @@ impl SimEngine {
                 u: global.zeros_like(),
                 in_flight: None,
                 in_flight_bytes: None,
+                in_flight_steps: 0,
                 down_extra: 0.0,
                 pending_pull: None,
                 metrics: WorkerMetrics::default(),
@@ -289,6 +351,23 @@ impl SimEngine {
             spec.convergence_tol,
             spec.target_loss,
         );
+
+        // Seed the checkpoint store with the initial model whenever a
+        // restore can happen, so a shard failure before the first
+        // checkpoint has a consistent (version-0) cut to revert to. On a
+        // degenerate fault config this never runs — no store, no events,
+        // bit-identical to the pre-fault path.
+        let fault_active =
+            !spec.fault.is_degenerate() || spec.timeline.has_fault_events();
+        let mut ckpt_store = CheckpointStore::new(2);
+        if fault_active {
+            ckpt_store.save(Checkpoint {
+                version: 0,
+                params: global.clone(),
+                velocity: velocity.clone(),
+            });
+        }
+        let m = spec.cluster.m();
 
         Ok(SimEngine {
             spec,
@@ -323,6 +402,14 @@ impl SimEngine {
             ps_busy: 0.0,
             ingress: spec_ingress,
             net_rng: crate::util::Rng::new(spec_seed ^ 0x4E45_5457), // "NETW"
+            incarnation: vec![0; m],
+            ckpt_store,
+            commits_since_ckpt: 0,
+            steps_since_ckpt: 0,
+            wasted_steps: 0,
+            lost_commits: 0,
+            checkpoints_taken: 0,
+            checkpoint_secs: 0.0,
         })
     }
 
@@ -334,7 +421,8 @@ impl SimEngine {
 
     fn push_event(&mut self, t: f64, kind: EventKind) {
         self.seq += 1;
-        self.queue.push(Reverse(Event { t, seq: self.seq, kind }));
+        let inc = kind.worker().map(|w| self.incarnation[w]).unwrap_or(0);
+        self.queue.push(Reverse(Event { t, seq: self.seq, kind, inc }));
     }
 
     fn step_time(&self, w: usize) -> f64 {
@@ -367,6 +455,9 @@ impl SimEngine {
         }
         if !self.cluster.active[w] {
             return Ok(()); // the worker left; its stale events are ignored
+        }
+        if self.cluster.is_down(w, self.now) {
+            return Ok(()); // crashed; it restarts via WorkerRestart
         }
         let action = self.with_view(|policy, view| policy.next_action(w, view));
         match action {
@@ -444,6 +535,7 @@ impl SimEngine {
         let dense_bytes = self.runtime.manifest.bytes_per_commit as u64;
         let up_bytes = self.workers[w].in_flight_bytes.unwrap_or(dense_bytes);
         self.workers[w].in_flight = Some(u);
+        self.workers[w].in_flight_steps = self.progress[w].local_since_commit;
         self.progress[w].local_since_commit = 0;
 
         // Timing: [blackout gate] → O/2 + link(up bytes) → physical
@@ -477,7 +569,9 @@ impl SimEngine {
     /// `ps_apply_secs · split_factor(S)`.
     fn ps_apply_done(&mut self) -> f64 {
         let service = self.spec.ps_apply_secs * shard_split_factor(self.spec.shards);
-        if service <= 0.0 {
+        if service <= 0.0 && self.ps_busy <= self.now {
+            // Instant apply and nothing (e.g. a checkpoint write) queued
+            // ahead — the degenerate path, untouched.
             return self.now;
         }
         self.ps_busy = self.ps_busy.max(self.now) + service;
@@ -491,11 +585,17 @@ impl SimEngine {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
         }
+        if self.workers[w].in_flight.is_none() {
+            return Ok(()); // a crash already dropped this commit
+        }
         let up_bytes = self
             .workers[w]
             .in_flight_bytes
             .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
-        let cleared = self.ingress.admit(self.now, up_bytes);
+        // Admission clears the shared ingress pipe *and* any PS failover
+        // in progress — commits stripe across every shard, so one failed
+        // shard holds all applies until its recovery line is restored.
+        let cleared = self.ingress.admit(self.now, up_bytes).max(self.cluster.ps_down_until());
         if cleared > self.now {
             self.workers[w].metrics.comm_secs += (cleared - self.now)
                 .min((self.spec.max_virtual_secs - self.now).max(0.0));
@@ -505,9 +605,10 @@ impl SimEngine {
         self.on_commit_apply(w)
     }
 
-    /// The worker left while its commit was in flight: the update is
-    /// lost with it (timeline churn semantics).
+    /// The worker left (or crashed) while its commit was in flight: the
+    /// update is lost with it, and the steps it carried are wasted work.
     fn drop_in_flight(&mut self, w: usize) -> Result<()> {
+        self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
         self.workers[w].in_flight = None;
         self.workers[w].in_flight_bytes = None;
         self.workers[w].down_extra = 0.0;
@@ -517,6 +618,18 @@ impl SimEngine {
     fn on_commit_apply(&mut self, w: usize) -> Result<()> {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
+        }
+        if self.workers[w].in_flight.is_none() {
+            return Ok(()); // a crash already dropped this commit
+        }
+        // A shard failed after this apply was scheduled: hold the commit
+        // until failover completes (it then applies to the restored cut).
+        let ps_down = self.cluster.ps_down_until();
+        if ps_down > self.now {
+            self.workers[w].metrics.comm_secs += (ps_down - self.now)
+                .min((self.spec.max_virtual_secs - self.now).max(0.0));
+            self.push_event(ps_down, EventKind::CommitApply(w));
+            return Ok(());
         }
         let u = self.workers[w].in_flight.take().expect("commit without in-flight update");
         let up_bytes = self
@@ -532,6 +645,7 @@ impl SimEngine {
             // the paper's commit-count bookkeeping counts *applied* commits,
             // so c_i is not advanced.
             self.dropped_commits += 1;
+            self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
             self.workers[w].pending_pull = Some(self.global.clone());
             let oneway = self.oneway_secs(w);
             let down_extra = std::mem::take(&mut self.workers[w].down_extra);
@@ -560,6 +674,15 @@ impl SimEngine {
         self.workers[w].metrics.bytes_up += up_bytes;
         self.workers[w].metrics.bytes_down += down_bytes;
         self.bytes_total += up_bytes + down_bytes;
+        // Failover bookkeeping: everything applied past the last
+        // checkpoint is what a shard failure would lose.
+        self.commits_since_ckpt += 1;
+        self.steps_since_ckpt += std::mem::take(&mut self.workers[w].in_flight_steps);
+        if let CheckpointPolicy::EveryCommits(n) = self.spec.fault.checkpoint {
+            if self.commits_since_ckpt >= n {
+                self.do_checkpoint();
+            }
+        }
 
         self.with_view(|policy, view| policy.on_commit_applied(w, view));
 
@@ -663,6 +786,7 @@ impl SimEngine {
                     u: self.global.zeros_like(),
                     in_flight: None,
                     in_flight_bytes: None,
+                    in_flight_steps: 0,
                     down_extra: 0.0,
                     pending_pull: None,
                     metrics: WorkerMetrics::default(),
@@ -671,6 +795,7 @@ impl SimEngine {
                 });
                 let entry = self.cluster.join_progress(w, &self.progress);
                 self.progress.push(entry);
+                self.incarnation.push(0);
                 self.push_event(self.now, EventKind::Ready(w));
             }
             ClusterDelta::Left(w) => {
@@ -685,7 +810,82 @@ impl SimEngine {
                 }
                 self.workers[w].pending_pull = None;
             }
+            ClusterDelta::Crashed { worker: w, until } => {
+                // Unclean crash: the uncommitted accumulator and the
+                // in-flight commit are lost (wasted work), the worker
+                // disappears from barriers until restart, and every event
+                // queued under the old incarnation goes stale.
+                self.incarnation[w] += 1;
+                self.wasted_steps += self.progress[w].local_since_commit;
+                self.progress[w].local_since_commit = 0;
+                self.progress[w].active = false;
+                self.progress[w].blocked = false;
+                if let Some(start) = self.workers[w].block_start.take() {
+                    self.workers[w].metrics.blocked_secs += self.now - start;
+                }
+                self.workers[w].pending_pull = None;
+                self.drop_in_flight(w)?;
+                self.push_event(until, EventKind::WorkerRestart(w));
+            }
+            ClusterDelta::ShardDown { shard: _, until } => {
+                // Failover: every shard rolls back together to the last
+                // checkpoint (one consistent recovery line), losing the
+                // commits applied past it. Commits in flight block until
+                // `until` (see `on_commit_arrive`/`on_commit_apply`).
+                self.lost_commits += self.commits_since_ckpt;
+                self.wasted_steps += self.steps_since_ckpt;
+                self.commits_since_ckpt = 0;
+                self.steps_since_ckpt = 0;
+                if let Some(c) = self.ckpt_store.latest() {
+                    self.global = c.params.clone();
+                    self.velocity = c.velocity.clone();
+                }
+                self.push_event(until, EventKind::PsRecover);
+            }
         }
+        self.with_view(|policy, view| policy.on_cluster_change(view));
+        Ok(())
+    }
+
+    /// Periodic/threshold checkpoint: store a consistent cut of the PS
+    /// state and charge its explicit cost — the model bytes go to a local
+    /// sink at `fault.sink_bytes_per_sec`, or through the shared PS
+    /// ingress pipe when `fault.remote_sink` is set. Either way the PS
+    /// apply stage is busy until the write lands, so commits queue behind
+    /// it (the overhead shorter intervals pay for losing less work).
+    fn do_checkpoint(&mut self) {
+        let bytes = (4 * self.global.total_numel()) as u64;
+        let done = if self.spec.fault.remote_sink {
+            self.ingress.admit(self.now, bytes)
+        } else if self.spec.fault.sink_bytes_per_sec > 0.0 {
+            self.now + bytes as f64 / self.spec.fault.sink_bytes_per_sec
+        } else {
+            self.now
+        };
+        if done > self.now {
+            self.ps_busy = self.ps_busy.max(done);
+            self.checkpoint_secs += done - self.now;
+        }
+        self.ckpt_store.save(Checkpoint {
+            version: self.total_commits,
+            params: self.global.clone(),
+            velocity: self.velocity.clone(),
+        });
+        self.commits_since_ckpt = 0;
+        self.steps_since_ckpt = 0;
+        self.checkpoints_taken += 1;
+    }
+
+    /// Restart bootstrap for a crashed worker — the join-snapshot path:
+    /// counters at the active minimum, model freshly pulled from the PS's
+    /// consistent state (the restored checkpoint cut, after a failover).
+    fn on_worker_restart(&mut self, w: usize) -> Result<()> {
+        let entry = self.cluster.join_progress(w, &self.progress);
+        self.progress[w] = entry;
+        self.workers[w].params = self.global.clone();
+        self.workers[w].u = self.global.zeros_like();
+        self.workers[w].pending_pull = None;
+        self.push_event(self.now, EventKind::Ready(w));
         self.with_view(|policy, view| policy.on_cluster_change(view));
         Ok(())
     }
@@ -721,6 +921,9 @@ impl SimEngine {
         self.push_event(0.0, EventKind::Eval);
         self.push_event(self.spec.sync.gamma, EventKind::Checkpoint);
         self.push_event(self.spec.sync.epoch_secs, EventKind::EpochStart);
+        if let CheckpointPolicy::IntervalSecs(dt) = self.spec.fault.checkpoint {
+            self.push_event(dt, EventKind::CkptSave);
+        }
         for w in 0..self.workers.len() {
             self.push_event(0.0, EventKind::Ready(w));
         }
@@ -734,6 +937,13 @@ impl SimEngine {
                 break;
             }
             self.now = ev.t;
+            // Events scheduled before a worker's crash are stale after it
+            // (the restart opens a fresh incarnation with its own chain).
+            if let Some(w) = ev.kind.worker() {
+                if ev.inc != self.incarnation[w] {
+                    continue;
+                }
+            }
             match ev.kind {
                 EventKind::Ready(w) => {
                     if let Some(p) = self.workers[w].pending_pull.take() {
@@ -791,6 +1001,26 @@ impl SimEngine {
                         self.with_view(|policy, view| policy.on_cluster_change(view));
                     }
                 }
+                EventKind::CkptSave => {
+                    self.do_checkpoint();
+                    if let CheckpointPolicy::IntervalSecs(dt) = self.spec.fault.checkpoint {
+                        self.push_event(self.now + dt, EventKind::CkptSave);
+                    }
+                }
+                EventKind::WorkerRestart(w) => {
+                    // Skipped if the worker left while it was down, or if
+                    // a later outage extended past this restart.
+                    if self.cluster.active[w] && !self.cluster.is_down(w, self.now) {
+                        self.on_worker_restart(w)?;
+                    }
+                }
+                EventKind::PsRecover => {
+                    // Re-notify the policy once no shard is still down (a
+                    // later overlapping failure scheduled its own event).
+                    if self.cluster.ps_down_until() <= self.now {
+                        self.with_view(|policy, view| policy.on_cluster_change(view));
+                    }
+                }
             }
             self.wake_blocked()?;
             if self.total_steps >= self.spec.max_total_steps {
@@ -811,7 +1041,10 @@ impl SimEngine {
 
         let workers: Vec<WorkerMetrics> =
             self.workers.iter().map(|w| w.metrics.clone()).collect();
-        let breakdown = Breakdown::from_workers(&workers);
+        // Breakdown averages the *members* (leavers' clocks froze mid-run
+        // and would dilute the cluster average; crashed workers stay
+        // members). Identical to the plain average when nobody ever left.
+        let breakdown = Breakdown::from_active_workers(&workers, &self.cluster.active);
         let final_loss = self.loss_log.last_loss().unwrap_or(f64::NAN);
         let best_loss = self.loss_log.best_loss().unwrap_or(f64::NAN);
         let final_accuracy =
@@ -837,6 +1070,10 @@ impl SimEngine {
             xla_secs: self.runtime.execution_secs(),
             deadlocked: self.deadlocked,
             dropped_commits: self.dropped_commits,
+            wasted_steps: self.wasted_steps,
+            lost_commits: self.lost_commits,
+            checkpoints_taken: self.checkpoints_taken,
+            checkpoint_overhead_secs: self.checkpoint_secs,
         })
     }
 }

@@ -63,6 +63,30 @@ fn fig14_shape_adsp_adapts_best_to_slowdown() {
 }
 
 #[test]
+fn fig16_shape_adsp_tolerates_faults_best_and_checkpoints_cost() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts`");
+        return;
+    }
+    let table = experiments::run_by_name("fig16", Scale::Bench).unwrap();
+    assert_eq!(table.rows.len(), 12, "2 crash counts x 2 intervals x 3 sync models");
+    let col = |name: &str| table.header.iter().position(|h| h == name).unwrap();
+    let (deg_i, over_i) = (col("degradation"), col("ckpt_overhead_s"));
+    let mean_deg = |sync: &str| -> f64 {
+        let rows = table.filter_rows("sync", sync);
+        rows.iter().map(|r| r[deg_i].parse::<f64>().unwrap()).sum::<f64>() / rows.len() as f64
+    };
+    // Acceptance: ADSP's mean convergence-time degradation over the crash
+    // rate x checkpoint interval sweep is the smallest of the three.
+    assert!(mean_deg("adsp") < mean_deg("ssp"));
+    assert!(mean_deg("adsp") < mean_deg("adacomm"));
+    // The checkpoint cost model is visibly nonzero in every cell.
+    for row in &table.rows {
+        assert!(row[over_i].parse::<f64>().unwrap() > 0.0, "free checkpoint in {row:?}");
+    }
+}
+
+#[test]
 fn fig3_shape_momentum_decreases_with_rate() {
     if !have_artifacts() {
         eprintln!("SKIP: run `make artifacts`");

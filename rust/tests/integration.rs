@@ -486,6 +486,7 @@ fn blackout_defers_commits_and_training_recovers() {
             start: 30.0,
             duration: 30.0,
             workers: vec![0, 2],
+            cell: None,
         }]);
         let out = SimEngine::new(spec.clone()).unwrap().run().unwrap();
         assert!(!out.deadlocked, "{kind} deadlocked under blackout");
@@ -604,6 +605,7 @@ fn realtime_engine_sleeps_link_time_and_survives_blackout() {
         start: 30.0,
         duration: 20.0,
         workers: vec![0],
+        cell: None,
     }]);
     let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
     assert!(out.total_steps > 0, "no steps trained");
@@ -661,6 +663,196 @@ fn compression_reduces_bandwidth_and_still_learns() {
         "top-10% compression should cut upstream bytes: {per_commit_sparse} vs {per_commit_dense}"
     );
     assert!(sparse.best_loss < sparse.loss_log.first_loss().unwrap());
+}
+
+// ---------------------------------------------------------------------------
+// fault subsystem: crashes, shard failover, checkpoint policies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degenerate_fault_config_bit_identical_for_every_sync_model() {
+    // Acceptance pin: the fault subsystem must not perturb the pre-fault
+    // path. A run with the default (absent) fault section, and a run
+    // whose fault section is *explicitly* degenerate (checkpointing off,
+    // whatever the sink knobs say), must produce bit-identical loss logs
+    // and identical counters for every sync model.
+    require_artifacts!("mlp_quick");
+    use adsp::fault::{CheckpointPolicy, FaultSpec};
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let base = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        let mut degenerate = spec.clone();
+        degenerate.fault = FaultSpec {
+            checkpoint: CheckpointPolicy::Off,
+            sink_bytes_per_sec: 123.0, // irrelevant while checkpointing is off
+            remote_sink: true,
+        };
+        assert!(degenerate.fault.is_degenerate());
+        let same = SimEngine::new(degenerate).unwrap().run().unwrap();
+        assert_eq!(base.total_steps, same.total_steps, "{kind}: steps diverged");
+        assert_eq!(base.total_commits, same.total_commits, "{kind}: commits diverged");
+        assert_eq!(same.wasted_steps, 0, "{kind}: phantom wasted steps");
+        assert_eq!(same.checkpoints_taken, 0, "{kind}: phantom checkpoints");
+        assert_eq!(
+            base.loss_log.samples.len(),
+            same.loss_log.samples.len(),
+            "{kind}: eval count diverged"
+        );
+        for (a, b) in base.loss_log.samples.iter().zip(&same.loss_log.samples) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{kind}: loss log diverged at t={}",
+                a.t
+            );
+        }
+        for (a, b) in base.workers.iter().zip(&same.workers) {
+            assert_eq!(
+                a.comm_secs.to_bits(),
+                b.comm_secs.to_bits(),
+                "{kind}: comm accounting diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_crash_loses_work_then_recovers() {
+    // An unclean mid-run crash must cost wasted steps, keep the run
+    // deadlock-free for blocking and non-blocking policies alike, and let
+    // the restarted worker train again after its outage.
+    require_artifacts!("mlp_quick");
+    for kind in [SyncModelKind::Adsp, SyncModelKind::Ssp, SyncModelKind::Bsp] {
+        let mut spec = tiny_spec("mlp_quick", kind);
+        // Run to the horizon (no early convergence stop) so both scripted
+        // crashes actually fire.
+        spec.convergence_window = 10_000;
+        // Crash the straggler (never parked at a barrier, so it is
+        // mid-chunk or mid-commit with near-certainty) and later a fast
+        // worker, on disjoint outage windows.
+        spec.timeline = ClusterTimeline::new(vec![
+            ClusterEvent::WorkerCrash { t: 40.0, worker: 2, restart_after: 20.0 },
+            ClusterEvent::WorkerCrash { t: 75.0, worker: 0, restart_after: 20.0 },
+        ]);
+        let out = SimEngine::new(spec).unwrap().run().unwrap();
+        assert!(!out.deadlocked, "{kind} deadlocked across the crashes");
+        assert!(out.wasted_steps > 0, "{kind}: crashes wasted no work");
+        assert!(out.total_commits > 0, "{kind}: cluster stopped committing");
+        assert!(out.final_loss.is_finite(), "{kind} diverged");
+        assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "{kind} regressed");
+        // The victims stayed on the books across their restarts.
+        assert!(out.workers[2].steps > 0, "{kind}: crashed worker never trained");
+    }
+}
+
+#[test]
+fn shard_failure_rolls_back_to_checkpoint_and_recovers() {
+    require_artifacts!("mlp_quick");
+    use adsp::fault::CheckpointPolicy;
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    // Run to the horizon so the scripted failure and at least two interval
+    // checkpoints are guaranteed to fire.
+    spec.convergence_window = 10_000;
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::ShardFailure {
+        t: 70.0,
+        shard: 0,
+        recover_after: 15.0,
+    }]);
+    spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(25.0);
+    spec.fault.sink_bytes_per_sec = 5e4;
+    let out = SimEngine::new(spec).unwrap().run().unwrap();
+    assert!(out.checkpoints_taken >= 2, "interval policy never fired");
+    assert!(out.checkpoint_overhead_secs > 0.0, "checkpoint cost must be visible");
+    assert!(out.lost_commits > 0, "failover lost nothing — commits were applied before it");
+    assert!(out.wasted_steps > 0, "rolled-back commits must count as wasted work");
+    assert!(!out.deadlocked);
+    assert!(out.final_loss.is_finite());
+    assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training regressed");
+}
+
+#[test]
+fn commit_count_checkpoints_fire_and_shorter_intervals_cost_more() {
+    require_artifacts!("mlp_quick");
+    use adsp::fault::CheckpointPolicy;
+    // Commit-count policy fires as commits accumulate.
+    let mut by_commits = tiny_spec("mlp_quick", SyncModelKind::Tap);
+    by_commits.convergence_window = 10_000;
+    by_commits.fault.checkpoint = CheckpointPolicy::EveryCommits(20);
+    by_commits.fault.sink_bytes_per_sec = 1e5;
+    let out = SimEngine::new(by_commits).unwrap().run().unwrap();
+    assert!(out.checkpoints_taken > 0, "commit-count policy never fired");
+    assert!(out.total_commits >= 20 * out.checkpoints_taken);
+    // Interval policy: halving the interval at least doesn't reduce the
+    // checkpoint count, and costs at least as much overhead.
+    let run_interval = |secs: f64| {
+        let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+        spec.convergence_window = 10_000;
+        spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(secs);
+        spec.fault.sink_bytes_per_sec = 5e4;
+        SimEngine::new(spec).unwrap().run().unwrap()
+    };
+    let short = run_interval(15.0);
+    let long = run_interval(45.0);
+    assert!(short.checkpoints_taken > long.checkpoints_taken);
+    assert!(short.checkpoint_overhead_secs > long.checkpoint_overhead_secs);
+}
+
+#[test]
+fn crash_storm_scenario_runs_for_every_compared_model() {
+    require_artifacts!("mlp_quick");
+    for kind in [SyncModelKind::Adsp, SyncModelKind::Ssp, SyncModelKind::Adacomm] {
+        let mut spec = tiny_spec("mlp_quick", kind);
+        spec.convergence_window = 10_000;
+        spec.timeline =
+            scenarios::preset("crash_storm", &spec.cluster, spec.max_virtual_secs).unwrap();
+        let out = SimEngine::new(spec).unwrap().run().unwrap();
+        assert!(!out.deadlocked, "{kind} deadlocked in crash_storm");
+        assert!(out.wasted_steps > 0, "{kind}: storm wasted no work");
+        assert!(out.total_steps > 0 && out.final_loss.is_finite());
+    }
+}
+
+#[test]
+fn realtime_engine_survives_crash_and_restart() {
+    // Wall-clock crash semantics: the victim's thread exits, its commit
+    // in flight is dropped, and the scheduler respawns it from a PS
+    // snapshot after the outage.
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 150.0;
+    spec.max_total_steps = 2000;
+    spec.eval_interval_secs = 10.0;
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::WorkerCrash {
+        t: 40.0,
+        worker: 0,
+        restart_after: 30.0,
+    }]);
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert!(out.total_commits > 0, "no commits survived the crash");
+    assert!(out.final_loss.is_finite());
+    assert!(out.wall_secs < 30.0, "realtime crash run took too long: {}", out.wall_secs);
+}
+
+#[test]
+fn realtime_engine_restores_checkpoint_on_shard_failure() {
+    require_artifacts!("mlp_quick");
+    use adsp::fault::CheckpointPolicy;
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 1500;
+    spec.eval_interval_secs = 10.0;
+    spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(20.0);
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::ShardFailure {
+        t: 50.0,
+        shard: 0,
+        recover_after: 10.0,
+    }]);
+    let out = RealtimeEngine::new(spec, 0.01).run().unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert!(out.total_commits > 0, "no commits after failover");
+    assert!(out.final_loss.is_finite());
+    assert!(out.wall_secs < 30.0, "realtime failover run took too long: {}", out.wall_secs);
 }
 
 #[test]

@@ -661,6 +661,118 @@ fn prop_single_shard_apply_matches_parameter_server_exactly() {
 }
 
 // ---------------------------------------------------------------------------
+// Fault subsystem: checkpoint save→restore, fault-event validation
+// ---------------------------------------------------------------------------
+
+use adsp::fault::CheckpointStore;
+
+#[test]
+fn prop_checkpoint_restore_roundtrip_any_shard_count() {
+    // Acceptance invariant: a checkpoint taken at version v restores the
+    // server to *exactly* its state at v — bit-identical global AND
+    // velocity — for S = 1 and S > 1, momentum included. Velocity
+    // recovery is proven by replay equivalence against the serial PS.
+    let mut rng = Rng::new(0xC4EC);
+    for case in 0..80u64 {
+        let mut r = rng.split(case);
+        let cp = PserverCaseParams::draw(&mut r);
+        let init = cp.params();
+        let mut serial = ParameterServer::new(init.clone(), cp.eta, cp.mu);
+        let mut sharded =
+            ShardedParameterServer::new(init, cp.eta, cp.mu, cp.shards, cp.pipeline_depth);
+        for _ in 0..cp.commits {
+            let u = cp.random_update(&mut r);
+            serial.apply(&u);
+            sharded.apply(&u);
+        }
+        let (v_at, snap_at) = sharded.versioned_snapshot();
+        let ckpt = sharded.checkpoint();
+        assert_eq!(ckpt.version, v_at, "case {case}");
+        assert_bit_identical(&ckpt.params, &snap_at, &format!("case {case} ckpt cut"));
+        // Diverge past the checkpoint, then fail over.
+        for _ in 0..1 + r.below(5) {
+            sharded.apply(&cp.random_update(&mut r));
+        }
+        sharded.restore(&ckpt);
+        let (v_back, snap_back) = sharded.versioned_snapshot();
+        assert_eq!(v_back, v_at, "case {case}: version must roll back");
+        assert_bit_identical(
+            &snap_back,
+            &snap_at,
+            &format!("case {case} s={} mu={}", cp.shards, cp.mu),
+        );
+        // Replay equivalence: one more identical commit on the restored
+        // server and the serial reference must agree bit for bit — this
+        // fails if the velocity was not restored with the cut.
+        let u_star = cp.random_update(&mut r);
+        serial.apply(&u_star);
+        sharded.apply(&u_star);
+        assert_bit_identical(
+            &sharded.snapshot(),
+            serial.global(),
+            &format!("case {case} post-restore replay (mu={})", cp.mu),
+        );
+        // A store retains the cut it was handed.
+        let mut store = CheckpointStore::new(2);
+        store.save(ckpt);
+        assert_eq!(store.latest().unwrap().version, v_at, "case {case}");
+    }
+}
+
+#[test]
+fn prop_timeline_rejects_fault_events_on_departed_or_out_of_range() {
+    use adsp::cluster::ClusterEvent as Ev;
+    let mut rng = Rng::new(0xFA01);
+    for case in 0..150u64 {
+        let mut r = rng.split(case);
+        let cluster = random_cluster(&mut r);
+        let m = cluster.m();
+        let shards = 1 + r.below(8);
+        // A well-formed crash + failure script validates.
+        let ok = adsp::cluster::ClusterTimeline::new(vec![
+            Ev::WorkerCrash {
+                t: 10.0,
+                worker: r.below(m),
+                restart_after: 1.0 + 20.0 * r.next_f64(),
+            },
+            Ev::ShardFailure {
+                t: 50.0,
+                shard: r.below(shards),
+                recover_after: 1.0 + 10.0 * r.next_f64(),
+            },
+        ]);
+        ok.validate_full(m, shards, &[]).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // Crash against a departed worker is rejected (needs m >= 2 so
+        // the leave itself is legal).
+        if m >= 2 {
+            let w = r.below(m);
+            let ghost = adsp::cluster::ClusterTimeline::new(vec![
+                Ev::WorkerLeave { t: 5.0, worker: w },
+                Ev::WorkerCrash { t: 6.0, worker: w, restart_after: 5.0 },
+            ]);
+            assert!(ghost.validate(m).is_err(), "case {case}: departed crash accepted");
+        }
+        // Crash against an out-of-range worker is rejected.
+        let oob = adsp::cluster::ClusterTimeline::new(vec![Ev::WorkerCrash {
+            t: 5.0,
+            worker: m + r.below(4),
+            restart_after: 5.0,
+        }]);
+        assert!(oob.validate(m).is_err(), "case {case}: out-of-range crash accepted");
+        // Shard failures out of range are rejected exactly at the bound.
+        let bad_shard = adsp::cluster::ClusterTimeline::new(vec![Ev::ShardFailure {
+            t: 5.0,
+            shard: shards + r.below(4),
+            recover_after: 5.0,
+        }]);
+        assert!(
+            bad_shard.validate_full(m, shards, &[]).is_err(),
+            "case {case}: out-of-range shard accepted"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Dynamic cluster timelines (cluster subsystem)
 // ---------------------------------------------------------------------------
 
@@ -681,7 +793,7 @@ fn prop_cluster_events_preserve_invariants() {
         let mut t = 0.0;
         for _ in 0..30 {
             t += r.next_f64() * 10.0;
-            let ev = match r.below(6) {
+            let ev = match r.below(8) {
                 0 => ClusterEvent::SpeedChange {
                     t,
                     worker: r.below(state.m()),
@@ -706,7 +818,7 @@ fn prop_cluster_events_preserve_invariants() {
                         1e4 + 1e7 * r.next_f64()
                     },
                 },
-                _ => ClusterEvent::CommBlackout {
+                5 => ClusterEvent::CommBlackout {
                     start: t,
                     duration: 0.5 + 20.0 * r.next_f64(),
                     workers: if r.below(2) == 0 {
@@ -714,6 +826,17 @@ fn prop_cluster_events_preserve_invariants() {
                     } else {
                         vec![r.below(state.m())]
                     },
+                    cell: None,
+                },
+                6 => ClusterEvent::WorkerCrash {
+                    t,
+                    worker: r.below(state.m()),
+                    restart_after: 0.5 + 15.0 * r.next_f64(),
+                },
+                _ => ClusterEvent::ShardFailure {
+                    t,
+                    shard: 0,
+                    recover_after: 0.5 + 10.0 * r.next_f64(),
                 },
             };
             let _ = state.apply_event(&ev); // invalid targets must error, not corrupt
@@ -729,6 +852,16 @@ fn prop_cluster_events_preserve_invariants() {
             assert_eq!(state.batch_sizes.len(), m, "case {case}");
             assert_eq!(state.links.len(), m, "case {case}");
             assert_eq!(state.blackout_until.len(), m, "case {case}");
+            assert_eq!(state.down_until.len(), m, "case {case}");
+            assert_eq!(state.cells.len(), m, "case {case}");
+            assert!(
+                state.down_until.iter().all(|&d| d >= 0.0 && d.is_finite()),
+                "case {case}: bad crash lift time"
+            );
+            assert!(
+                state.shard_down.iter().all(|&d| d >= 0.0 && d.is_finite()),
+                "case {case}: bad shard recovery time"
+            );
             assert!(
                 state.links.iter().map(|l| l.validate()).all(|r| r.is_ok()),
                 "case {case}: invalid link crept in"
@@ -787,6 +920,7 @@ fn prop_timeline_json_roundtrips_through_spec() {
                     } else {
                         vec![alive[r.below(alive.len())]]
                     },
+                    cell: None,
                 }),
                 _ => {
                     if alive.len() > 1 {
@@ -1008,6 +1142,7 @@ fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
                     1 => vec![r.below(m)],
                     _ => (0..m).filter(|_| r.below(2) == 0).collect(),
                 },
+                cell: None,
             });
             t += 1.0;
             events.push(ClusterEvent::BandwidthChange {

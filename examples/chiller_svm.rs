@@ -7,7 +7,7 @@
 //! Run: `make artifacts && cargo run --release --example chiller_svm`
 
 use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
-use adsp::coordinator::RealtimeEngine;
+use adsp::run::{Backend, Run};
 use adsp::sync::SyncModelKind;
 
 fn main() -> anyhow::Result<()> {
@@ -34,7 +34,9 @@ fn main() -> anyhow::Result<()> {
     spec.target_loss = 0.3;
 
     // 0.01 wall-seconds per virtual second → the 300s run takes ~3s.
-    let out = RealtimeEngine::new(spec, 0.01).run()?;
+    let out = Run::from_spec(spec)
+        .backend(Backend::Realtime { time_scale: 0.01 })
+        .execute()?;
 
     println!("loss curve (virtual time, hinge loss):");
     for s in out.loss_log.samples.iter().step_by(2) {
@@ -51,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "final hinge loss {:.4}{}",
         out.final_loss,
-        out.converged_at_virtual
+        out.converged_at
             .map(|t| format!(", converged at {t:.0}s virtual"))
             .unwrap_or_default()
     );

@@ -17,7 +17,7 @@
 //! d=256 transformer at batch 16 × seq 64.)
 
 use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
-use adsp::simulation::SimEngine;
+use adsp::run::Run;
 use adsp::sync::SyncModelKind;
 
 fn main() -> anyhow::Result<()> {
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     println!("   vocab 512 (uniform CE ≈ 6.24), planted-bigram corpus\n");
 
     let t0 = std::time::Instant::now();
-    let out = SimEngine::new(spec)?.run()?;
+    let out = Run::from_spec(spec).execute()?;
 
     println!("loss curve (virtual time, token cross-entropy):");
     for s in &out.loss_log.samples {
@@ -60,14 +60,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     let first = out.loss_log.first_loss().unwrap_or(f64::NAN);
-    println!("\ntotal: {} steps, {} commits, {:.1}s wall", out.total_steps, out.total_commits, t0.elapsed().as_secs_f64());
+    println!(
+        "\ntotal: {} steps, {} commits, {:.1}s wall",
+        out.total_steps,
+        out.total_commits,
+        t0.elapsed().as_secs_f64()
+    );
     println!("loss: {first:.3} -> {:.3} (best {:.3})", out.final_loss, out.best_loss);
     println!("token accuracy: {:.1}%", 100.0 * out.final_accuracy);
     println!(
         "breakdown: {:.0}% compute / {:.0}% waiting; {} XLA execs",
         100.0 * (1.0 - out.breakdown.waiting_fraction()),
         100.0 * out.breakdown.waiting_fraction(),
-        out.xla_execs
+        out.xla_execs()
     );
 
     anyhow::ensure!(out.final_loss.is_finite(), "training diverged");

@@ -10,7 +10,7 @@
 //! Run: `make artifacts && cargo run --release --example edge_cnn`
 
 use adsp::config::{profiles, ExperimentSpec, SyncSpec};
-use adsp::simulation::SimEngine;
+use adsp::run::Run;
 use adsp::sync::SyncModelKind;
 
 fn main() -> anyhow::Result<()> {
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         spec.max_virtual_secs = 900.0;
         spec.max_total_steps = 600; // keep the demo 1-core-CPU-friendly
         spec.eval_interval_secs = 30.0;
-        let out = SimEngine::new(spec)?.run()?;
+        let out = Run::from_spec(spec).execute()?;
         println!(
             "{:<16} loss {:.3} -> {:.3}  acc {:.1}%  steps {:>5}  waiting {:>4.0}%  ({:.1}s wall)",
             kind.name(),

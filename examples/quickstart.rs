@@ -5,7 +5,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use adsp::config::{profiles, ExperimentSpec, SyncSpec};
-use adsp::simulation::SimEngine;
+use adsp::run::Run;
 use adsp::sync::SyncModelKind;
 
 fn spec(kind: SyncModelKind) -> ExperimentSpec {
@@ -25,7 +25,7 @@ fn spec(kind: SyncModelKind) -> ExperimentSpec {
 fn main() -> anyhow::Result<()> {
     println!("== ADSP quickstart: 3 heterogeneous workers, MLP on synthetic blobs ==\n");
     for kind in [SyncModelKind::Bsp, SyncModelKind::Adsp] {
-        let out = SimEngine::new(spec(kind))?.run()?;
+        let out = Run::from_spec(spec(kind)).execute()?;
         println!("--- {} ---", kind);
         println!(
             "  converged at {:.0}s (virtual), {} steps, {} commits",
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             100.0 * (1.0 - out.breakdown.waiting_fraction()),
             100.0 * out.breakdown.waiting_fraction()
         );
-        println!("  ({:.2}s wall, {} XLA executions)\n", out.wall_secs, out.xla_execs);
+        println!("  ({:.2}s wall, {} XLA executions)\n", out.wall_secs, out.xla_execs());
     }
     println!("ADSP eliminates the waiting time the straggler induces under BSP.");
     Ok(())

@@ -9,7 +9,7 @@
 //! Run: `make artifacts && cargo run --release --example rail_fatigue_rnn`
 
 use adsp::config::{profiles, ExperimentSpec, SyncSpec};
-use adsp::simulation::SimEngine;
+use adsp::run::Run;
 use adsp::sync::SyncModelKind;
 
 fn main() -> anyhow::Result<()> {
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         spec.max_total_steps = 1500;
         spec.eval_interval_secs = 20.0;
         spec.target_loss = 0.5;
-        let out = SimEngine::new(spec)?.run()?;
+        let out = Run::from_spec(spec).execute()?;
         println!("--- {} ---", kind);
         println!(
             "  fatigue-class loss {:.3} -> {:.3} | accuracy {:.1}%",

@@ -29,7 +29,8 @@ fn main() {
     let h = BenchHarness::new("fig1").with_iters(0, 3);
     h.run("adsp_3worker_run", || {
         let cluster = adsp::config::profiles::ratio_cluster(&[1.0, 1.0, 3.0], 2.0, 0.3);
-        let mut spec = adsp::experiments::common::bench_spec(adsp::sync::SyncModelKind::Adsp, cluster);
+        let mut spec =
+            adsp::experiments::common::bench_spec(adsp::sync::SyncModelKind::Adsp, cluster);
         spec.max_virtual_secs = 120.0;
         spec.max_total_steps = 2000;
         adsp::simulation::SimEngine::new(spec).unwrap().run().unwrap().total_steps

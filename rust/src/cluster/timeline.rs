@@ -151,7 +151,9 @@ impl ClusterTimeline {
                 }
                 ClusterEvent::CommBlackout { duration, workers, cell, .. } => {
                     if !duration.is_finite() || *duration <= 0.0 {
-                        bail!("timeline event {i}: blackout duration must be positive, got {duration}");
+                        bail!(
+                            "timeline event {i}: blackout duration must be positive, got {duration}"
+                        );
                     }
                     for &w in workers {
                         check_worker(w, &active)?;
@@ -166,7 +168,9 @@ impl ClusterTimeline {
                                 .zip(&active)
                                 .any(|(label, &a)| a && label == c);
                             if !hit {
-                                bail!("timeline event {i}: blackout cell '{c}' matches no live worker");
+                                bail!(
+                                    "timeline event {i}: blackout cell '{c}' matches no live worker"
+                                );
                             }
                         }
                     }

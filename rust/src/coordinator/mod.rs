@@ -16,4 +16,4 @@ pub mod ps;
 pub mod realtime;
 
 pub use ps::ParameterServer;
-pub use realtime::{RealtimeEngine, RealtimeOutcome};
+pub use realtime::RealtimeEngine;

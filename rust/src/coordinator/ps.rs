@@ -25,13 +25,26 @@ pub struct ParameterServer {
 impl ParameterServer {
     pub fn new(init: ParamSet, eta: f32, mu: f32) -> Self {
         let velocity = init.zeros_like();
-        ParameterServer { global: init, velocity, eta, mu, commits: 0, loss_log: LossLog::default() }
+        ParameterServer {
+            global: init,
+            velocity,
+            eta,
+            mu,
+            commits: 0,
+            loss_log: LossLog::default(),
+        }
     }
 
     /// Apply one commit `U`: `W ← W − η·U` (or the momentum form when μ>0).
     pub fn apply(&mut self, u: &ParamSet) {
         if self.mu > 0.0 {
-            native::apply_commit_momentum(&mut self.global, u, &mut self.velocity, self.eta, self.mu);
+            native::apply_commit_momentum(
+                &mut self.global,
+                u,
+                &mut self.velocity,
+                self.eta,
+                self.mu,
+            );
         } else {
             native::apply_commit(&mut self.global, u, self.eta);
         }

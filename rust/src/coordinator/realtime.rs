@@ -43,13 +43,14 @@ use std::sync::mpsc;
 use std::sync::{Arc, Barrier, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
-use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
+use crate::metrics::{Breakdown, ConvergenceDetector, WorkerMetrics};
 use crate::pserver::ShardedParameterServer;
+use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
 
@@ -61,6 +62,10 @@ struct CommitMsg {
     /// Wire size of the pushed update (dense, or 8 bytes per surviving
     /// entry under `compress_topk`).
     up_bytes: u64,
+    /// Local steps this update carries (wasted-work accounting: a commit
+    /// dropped at the drain filter loses exactly these steps, mirroring
+    /// the simulator's in-flight bookkeeping).
+    steps: u64,
     /// The worker's crash generation at thread spawn (the realtime
     /// analogue of the simulator's event incarnations): a commit pushed
     /// before a crash carries the old generation and is dropped at drain
@@ -69,21 +74,6 @@ struct CommitMsg {
     /// the pre-crash thread alongside its respawned successor.
     generation: u64,
     reply: mpsc::Sender<ParamSet>,
-}
-
-#[derive(Debug)]
-pub struct RealtimeOutcome {
-    pub model: String,
-    pub sync: String,
-    pub converged_at_virtual: Option<f64>,
-    pub end_virtual: f64,
-    pub wall_secs: f64,
-    pub total_steps: u64,
-    pub total_commits: u64,
-    pub final_loss: f64,
-    pub loss_log: LossLog,
-    pub workers: Vec<WorkerMetrics>,
-    pub breakdown: Breakdown,
 }
 
 pub struct RealtimeEngine {
@@ -137,9 +127,22 @@ impl RealtimeEngine {
         RealtimeEngine { spec, time_scale }
     }
 
-    pub fn run(self) -> Result<RealtimeOutcome> {
+    /// Run to convergence or a cap with no observer attached.
+    pub fn run(self) -> Result<RunReport> {
+        self.run_observed(&mut NoopObserver)
+    }
+
+    /// Run to convergence or a cap, streaming progress into `obs` from the
+    /// PS/scheduler thread (evals, applied commits, timeline events,
+    /// checkpoints — the same callback surface the simulator drives).
+    pub fn run_observed(self, obs: &mut dyn RunObserver) -> Result<RunReport> {
         let spec = self.spec.clone();
         spec.validate()?;
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            // A zero/negative scale would make the virtual clock NaN/Inf
+            // and every `now_v >= cap` comparison silently false.
+            bail!("time_scale must be positive and finite, got {}", self.time_scale);
+        }
         let scale = self.time_scale;
         let m = spec.cluster.m();
 
@@ -196,7 +199,7 @@ impl RealtimeEngine {
             !spec.fault.is_degenerate() || spec.timeline.has_fault_events();
         let init_seed = if fault_active { Some(init.clone()) } else { None };
 
-        let outcome = std::thread::scope(|scope| -> Result<RealtimeOutcome> {
+        let outcome = std::thread::scope(|scope| -> Result<RunReport> {
             // ---------------- worker threads ----------------
             for w in 0..m {
                 let spec = spec.clone();
@@ -257,6 +260,17 @@ impl RealtimeEngine {
             let mut pending_restarts: Vec<(f64, usize)> = Vec::new();
             let mut ps_down_until = 0.0f64;
             let mut ps_recover_pending = false;
+            // Fault/report counters the unified RunReport surfaces: lost
+            // local work (crashes, dropped in-flight commits, failover
+            // rollbacks), commits rolled back by failovers, checkpoints
+            // taken and their cost (here: the scaled wall time of the
+            // consistent cut — the realtime analogue of the simulator's
+            // explicit byte-cost model).
+            let mut wasted_steps = 0u64;
+            let mut lost_commits = 0u64;
+            let mut checkpoints_taken = 0u64;
+            let mut checkpoint_secs = 0.0f64;
+            let mut steps_since_ckpt = 0u64;
             // Per-worker crash generation (bumped at every crash; joiners
             // append at 0). Commit messages carry the generation their
             // thread was spawned under; mismatches are pre-crash stragglers
@@ -287,6 +301,9 @@ impl RealtimeEngine {
                                 .with_context(|| format!("timeline event at t={:.1}", ev.t()));
                         }
                     };
+                    // Observers see every scripted event, no-ops included
+                    // (read-only tap — cannot perturb the run).
+                    obs.on_cluster_event(now_v, ev);
                     match delta {
                         ClusterDelta::None => continue,
                         ClusterDelta::Changed => {}
@@ -345,6 +362,9 @@ impl RealtimeEngine {
                                 let mut progress = shared.progress.lock().unwrap();
                                 progress[wc].active = false;
                                 progress[wc].blocked = false;
+                                // The uncommitted accumulator dies with the
+                                // thread: wasted work, as in the simulator.
+                                wasted_steps += progress[wc].local_since_commit;
                                 progress[wc].local_since_commit = 0;
                             }
                             crash_gen[wc] += 1;
@@ -354,8 +374,13 @@ impl RealtimeEngine {
                             // Failover: restore every shard to the last
                             // checkpointed cut (losing what was applied
                             // past it) and hold the commit drain until the
-                            // recovery completes.
+                            // recovery completes. The commits past the cut
+                            // are lost, and the local steps they carried
+                            // are wasted work — the fig16 counters.
                             if let Some(c) = ckpt_store.latest() {
+                                lost_commits += ps.version().saturating_sub(c.version);
+                                wasted_steps += steps_since_ckpt;
+                                steps_since_ckpt = 0;
                                 ps.restore(c);
                             }
                             ps_down_until = ps_down_until.max(until);
@@ -440,10 +465,11 @@ impl RealtimeEngine {
                 if now_v >= next_eval {
                     let (x, y) = eval_source.eval_batch(eval_b);
                     let steps = shared.total_steps.load(Ordering::Relaxed);
-                    let (loss, _acc) = ps.evaluate(&rt, now_v, steps, &x, &y)?;
+                    let (loss, acc) = ps.evaluate(&rt, now_v, steps, &x, &y)?;
                     shared.initial_loss.lock().unwrap().get_or_insert(loss);
                     *shared.last_eval.lock().unwrap() = Some((now_v, loss));
                     shared.with_view(now_v, |p, _| p.on_eval(now_v, loss));
+                    obs.on_eval(now_v, steps, loss, acc);
                     if converged_at.is_none() && detector.push(loss) {
                         converged_at = Some(now_v);
                         break;
@@ -462,9 +488,20 @@ impl RealtimeEngine {
                     // Fault-subsystem checkpoint: a consistent versioned
                     // cut of every shard (global + velocity). The explicit
                     // byte-cost model is a simulator concept — here the
-                    // real wall time of the cut plays that role.
+                    // real wall time of the cut plays that role (reported
+                    // in virtual seconds through the time scale).
                     if now_v >= next_ckpt_save {
-                        ckpt_store.save(ps.checkpoint());
+                        take_checkpoint(
+                            &ps,
+                            &mut ckpt_store,
+                            scale,
+                            now_v,
+                            total_commits,
+                            &mut checkpoint_secs,
+                            &mut checkpoints_taken,
+                            &mut steps_since_ckpt,
+                            obs,
+                        );
                         next_ckpt_save += dt;
                     }
                 }
@@ -501,16 +538,22 @@ impl RealtimeEngine {
                         // PS failover paused the drain across it).
                         // (Dropping the msg drops its reply sender, so
                         // the departed thread's recv fails and it exits.)
+                        // The steps a dropped commit carried are wasted
+                        // work, as at the simulator's arrival drop.
                         let batch: Vec<CommitMsg> = {
                             let cluster = shared.cluster.lock().unwrap();
-                            batch
-                                .into_iter()
-                                .filter(|m| {
-                                    cluster.active[m.worker]
-                                        && !cluster.is_down(m.worker, now_v)
-                                        && m.generation == crash_gen[m.worker]
-                                })
-                                .collect()
+                            let mut kept = Vec::with_capacity(batch.len());
+                            for m in batch {
+                                let live = cluster.active[m.worker]
+                                    && !cluster.is_down(m.worker, now_v)
+                                    && m.generation == crash_gen[m.worker];
+                                if live {
+                                    kept.push(m);
+                                } else {
+                                    wasted_steps += m.steps;
+                                }
+                            }
+                            kept
                         };
                         if batch.is_empty() {
                             continue;
@@ -518,6 +561,7 @@ impl RealtimeEngine {
                         for msg in &batch {
                             ps.apply(&msg.u);
                             total_commits += 1;
+                            steps_since_ckpt += msg.steps;
                         }
                         let fresh = ps.snapshot();
                         let now_v = start.elapsed().as_secs_f64() / scale;
@@ -531,15 +575,30 @@ impl RealtimeEngine {
                                 metrics[msg.worker].bytes_down += bytes_per_commit;
                             }
                         }
-                        for msg in batch {
+                        // Stream the per-commit cumulative count, as the
+                        // simulator does (the batch was applied above, so
+                        // count back from the post-batch total).
+                        let commits_before = total_commits - batch.len() as u64;
+                        for (i, msg) in batch.into_iter().enumerate() {
                             shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
+                            obs.on_commit_applied(now_v, msg.worker, commits_before + i as u64 + 1);
                             let _ = msg.reply.send(fresh.clone());
                         }
                         if let CheckpointPolicy::EveryCommits(n) = spec.fault.checkpoint {
                             let last_v =
                                 ckpt_store.latest().map(|c| c.version).unwrap_or(0);
                             if ps.version() >= last_v + n {
-                                ckpt_store.save(ps.checkpoint());
+                                take_checkpoint(
+                                    &ps,
+                                    &mut ckpt_store,
+                                    scale,
+                                    now_v,
+                                    total_commits,
+                                    &mut checkpoint_secs,
+                                    &mut checkpoints_taken,
+                                    &mut steps_since_ckpt,
+                                    obs,
+                                );
                             }
                         }
                     }
@@ -565,24 +624,70 @@ impl RealtimeEngine {
                 let active = shared.cluster.lock().unwrap().active.clone();
                 Breakdown::from_active_workers(&workers, &active)
             };
+            let bytes_total = workers.iter().map(|w| w.bytes_up + w.bytes_down).sum();
+            let sync_describe = shared.policy.lock().unwrap().describe();
             let loss_log = std::mem::take(&mut ps.loss_log);
-            Ok(RealtimeOutcome {
+            Ok(RunReport {
                 model: spec.model.clone(),
-                sync: spec.sync.kind.name().to_string(),
-                converged_at_virtual: converged_at,
-                end_virtual,
+                sync: spec.sync.kind,
+                sync_describe,
+                converged_at,
+                end_time: end_virtual,
                 wall_secs: start.elapsed().as_secs_f64(),
                 total_steps: shared.total_steps.load(Ordering::Relaxed),
                 total_commits,
                 final_loss: loss_log.last_loss().unwrap_or(f64::NAN),
+                best_loss: loss_log.best_loss().unwrap_or(f64::NAN),
+                final_accuracy: loss_log
+                    .samples
+                    .last()
+                    .map(|s| s.accuracy)
+                    .unwrap_or(f64::NAN),
                 loss_log,
                 workers,
                 breakdown,
+                bytes_total,
+                wasted_steps,
+                lost_commits,
+                checkpoints_taken,
+                checkpoint_overhead_secs: checkpoint_secs,
+                engine: EngineStats::Realtime { time_scale: scale },
             })
         })?;
 
         Ok(outcome)
     }
+}
+
+/// One fault-subsystem checkpoint on the realtime PS: take the consistent
+/// cut, store it, charge its scaled wall time as the checkpoint cost, and
+/// reset the lost-work window. Shared by the interval tick and the
+/// commit-count trigger so their bookkeeping cannot drift apart.
+/// (`too_many_arguments` is in the crate-wide style allows.)
+///
+/// `report_version` is the run's cumulative applied-commit counter — the
+/// same monotone space the observer's commit stream and the simulator's
+/// `on_checkpoint` use. The stored cut keeps the PS's own (failover-
+/// rolled-back) version for recovery math; only the *stream* is pinned to
+/// the engine-agnostic counter.
+fn take_checkpoint(
+    ps: &ShardedParameterServer,
+    ckpt_store: &mut CheckpointStore,
+    scale: f64,
+    now_v: f64,
+    report_version: u64,
+    checkpoint_secs: &mut f64,
+    checkpoints_taken: &mut u64,
+    steps_since_ckpt: &mut u64,
+    obs: &mut dyn RunObserver,
+) {
+    let t0 = Instant::now();
+    let cut = ps.checkpoint();
+    ckpt_store.save(cut);
+    *checkpoint_secs += t0.elapsed().as_secs_f64() / scale;
+    *checkpoints_taken += 1;
+    *steps_since_ckpt = 0;
+    obs.on_checkpoint(now_v, report_version);
 }
 
 fn worker_loop(
@@ -684,10 +789,10 @@ fn worker_loop(
                     } else {
                         dense_bytes
                     };
-                {
+                let carried_steps = {
                     let mut progress = shared.progress.lock().unwrap();
-                    progress[w].local_since_commit = 0;
-                }
+                    std::mem::take(&mut progress[w].local_since_commit)
+                };
                 // Re-read the link and lift time *now* — a bandwidth
                 // change or outage may have started during the training
                 // chunk — then hold the push until connectivity returns
@@ -707,8 +812,14 @@ fn worker_loop(
                 let up_extra = link.transfer_secs_jittered(up_bytes, &mut net_rng);
                 std::thread::sleep(Duration::from_secs_f64((o / 2.0 + up_extra) * scale));
                 let (reply_tx, reply_rx) = mpsc::channel();
-                let msg =
-                    CommitMsg { worker: w, u: snapshot, up_bytes, generation, reply: reply_tx };
+                let msg = CommitMsg {
+                    worker: w,
+                    u: snapshot,
+                    up_bytes,
+                    steps: carried_steps,
+                    generation,
+                    reply: reply_tx,
+                };
                 if commit_tx.send(msg).is_err() {
                     break;
                 }

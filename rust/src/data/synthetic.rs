@@ -164,7 +164,13 @@ pub struct RailSequences {
 }
 
 impl RailSequences {
-    pub fn new(seq: usize, feat: usize, classes: usize, mut task_rng: Rng, worker_rng: Rng) -> Self {
+    pub fn new(
+        seq: usize,
+        feat: usize,
+        classes: usize,
+        mut task_rng: Rng,
+        worker_rng: Rng,
+    ) -> Self {
         let dynamics = (0..classes)
             .map(|c| {
                 let f = c as f32 / (classes.max(2) - 1) as f32;

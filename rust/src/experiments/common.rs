@@ -5,7 +5,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::config::{ClusterSpec, ExperimentSpec, SyncSpec};
-use crate::simulation::{SimEngine, SimOutcome};
+use crate::run::{Backend, Run, RunReport};
 use crate::sync::SyncModelKind;
 
 /// Experiment sizing.
@@ -145,14 +145,17 @@ pub fn spec_for(scale: Scale, kind: SyncModelKind, cluster: ClusterSpec) -> Expe
     }
 }
 
-/// Run one simulation.
-pub fn run_sim(spec: ExperimentSpec) -> Result<SimOutcome> {
-    SimEngine::new(spec)?.run()
+/// Run one experiment on the given backend through the unified run API.
+/// Figure drivers pass [`Backend::Sim`]; realtime cross-validation passes
+/// [`Backend::Realtime`] with a time scale.
+pub fn run(spec: ExperimentSpec, backend: Backend) -> Result<RunReport> {
+    Run::from_spec(spec).backend(backend).execute()
 }
 
-/// Downsample a loss log into at most `n` (t, loss) points for CSV series.
-pub fn downsample(outcome: &SimOutcome, n: usize) -> Vec<(f64, f64)> {
-    let s = &outcome.loss_log.samples;
+/// Downsample a report's loss log into at most `n` (t, loss) points for
+/// CSV series.
+pub fn downsample(report: &RunReport, n: usize) -> Vec<(f64, f64)> {
+    let s = &report.loss_log.samples;
     if s.is_empty() {
         return Vec::new();
     }

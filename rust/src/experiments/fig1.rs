@@ -8,9 +8,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (base_speed, comm) = match scale {
@@ -39,8 +40,8 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         SyncModelKind::Adsp,
     ] {
         let spec = spec_for(scale, kind, cluster.clone());
-        let out = run_sim(spec)?;
-        anyhow::ensure!(!out.deadlocked, "policy deadlock in {kind}");
+        let out = common::run(spec, Backend::Sim)?;
+        anyhow::ensure!(!out.deadlocked(), "policy deadlock in {kind}");
         let steps_per_worker =
             out.total_steps as f64 / out.workers.len().max(1) as f64;
         let time_per_step = if steps_per_worker > 0.0 {

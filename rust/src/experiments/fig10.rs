@@ -21,9 +21,10 @@ use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
 use crate::network::LinkModel;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (base_speed, comm) = match scale {
@@ -46,7 +47,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         SyncModelKind::Adsp,
     ] {
         let spec = spec_for(scale, kind, cluster.clone());
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             "a_bandwidth".into(),
             kind.name().to_string(),
@@ -57,7 +58,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
     }
 
     // --- (b) ADSP vs ADSP++ -------------------------------------------------
-    let adsp = run_sim(spec_for(scale, SyncModelKind::Adsp, cluster.clone()))?;
+    let adsp = common::run(spec_for(scale, SyncModelKind::Adsp, cluster.clone()), Backend::Sim)?;
     table.push_row(vec![
         "b_adsp".into(),
         "adsp".into(),
@@ -75,9 +76,9 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
             spec.eta_prime0 *= es;
             spec.sync.ps_momentum = mu;
-            let out = run_sim(spec)?;
+            let out = common::run(spec, Backend::Sim)?;
             search_time += out.end_time;
-            if best.map_or(true, |(t, _, _)| out.convergence_time() < t) {
+            if best.is_none_or(|(t, _, _)| out.convergence_time() < t) {
                 best = Some((
                     out.convergence_time(),
                     out.final_loss,
@@ -111,7 +112,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
     {
         let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
         spec.network.default_link = LinkModel::with_bandwidth(bandwidth);
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             format!("c_link_{label}"),
             "adsp".into(),

@@ -9,9 +9,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let cluster = match scale {
@@ -54,7 +55,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
                 spec.target_loss = 1.6;
             }
         }
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             kind.name().to_string(),
             fmt(out.convergence_time()),
@@ -94,7 +95,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
                 spec.ps_apply_secs = 0.5;
             }
         }
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             format!("{}_sharded_ps", SyncModelKind::Adsp.name()),
             fmt(out.convergence_time()),

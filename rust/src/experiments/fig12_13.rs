@@ -8,9 +8,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ec2_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{downsample, fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, downsample, fmt, spec_for, Scale, SeriesTable};
 
 const BASELINES: [SyncModelKind; 5] = [
     SyncModelKind::Bsp,
@@ -37,7 +38,7 @@ fn run_model(scale: Scale, model: &str, name: &str, target_loss: f64) -> Result<
         spec.model = model.to_string();
         spec.batch_size = 128;
         spec.target_loss = target_loss;
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         for (t, loss) in downsample(&out, 40) {
             curves.push_row(vec![kind.name().into(), fmt(t), fmt(loss)]);
         }

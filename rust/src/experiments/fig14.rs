@@ -22,9 +22,10 @@ use anyhow::Result;
 
 use crate::cluster::scenarios;
 use crate::config::profiles::ec2_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 /// The sync models whose degradation the adaptability and comm-stress
 /// sweeps compare (also used by `fig15`).
@@ -50,11 +51,11 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         for kind in SYNC_MODELS {
             let base_spec = spec_for(scale, kind, cluster.clone());
             let horizon = base_spec.max_virtual_secs;
-            let baseline = run_sim(base_spec.clone())?;
+            let baseline = common::run(base_spec.clone(), Backend::Sim)?;
 
             let mut spec = base_spec;
             spec.timeline = scenarios::preset(scenario, &spec.cluster, horizon)?;
-            let shifted = run_sim(spec)?;
+            let shifted = common::run(spec, Backend::Sim)?;
 
             let t_base = baseline.convergence_time();
             let t_shift = shifted.convergence_time();

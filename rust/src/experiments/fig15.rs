@@ -24,8 +24,9 @@ use anyhow::Result;
 
 use crate::cluster::scenarios;
 use crate::config::profiles::ec2_cluster;
+use crate::run::Backend;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 use super::fig14::SYNC_MODELS;
 
 /// The swept severities: (name, blackout duration as a fraction of the
@@ -47,7 +48,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
     for kind in SYNC_MODELS {
         let base_spec = spec_for(scale, kind, cluster.clone());
         let horizon = base_spec.max_virtual_secs;
-        let baseline = run_sim(base_spec.clone())?;
+        let baseline = common::run(base_spec.clone(), Backend::Sim)?;
         let t_base = baseline.convergence_time();
 
         for &(name, dur_frac, worker_frac) in &SEVERITIES {
@@ -58,7 +59,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
                 dur_frac * horizon,
                 worker_frac,
             );
-            let stressed = run_sim(spec)?;
+            let stressed = common::run(spec, Backend::Sim)?;
             let t_stress = stressed.convergence_time();
             let degradation = if t_base > 0.0 { (t_stress - t_base) / t_base } else { 0.0 };
             table.push_row(vec![

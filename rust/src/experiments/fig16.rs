@@ -30,8 +30,9 @@ use crate::cluster::{ClusterEvent, ClusterTimeline};
 use crate::config::profiles::ec2_cluster;
 use crate::config::ClusterSpec;
 use crate::fault::CheckpointPolicy;
+use crate::run::Backend;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 use super::fig14::SYNC_MODELS;
 
 /// The swept crash counts (the "crash rate" axis).
@@ -97,7 +98,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
     for kind in SYNC_MODELS {
         let base_spec = spec_for(scale, kind, cluster.clone());
         let horizon = base_spec.max_virtual_secs;
-        let baseline = run_sim(base_spec.clone())?;
+        let baseline = common::run(base_spec.clone(), Backend::Sim)?;
         let t_base = baseline.convergence_time();
 
         for &crashes in &CRASH_COUNTS {
@@ -106,7 +107,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
                 spec.timeline = fault_wave(&spec.cluster, horizon, crashes);
                 spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(frac * horizon);
                 spec.fault.sink_bytes_per_sec = sink_rate;
-                let faulted = run_sim(spec)?;
+                let faulted = common::run(spec, Backend::Sim)?;
                 let t_fault = faulted.convergence_time();
                 let degradation =
                     if t_base > 0.0 { (t_fault - t_base) / t_base } else { 0.0 };

@@ -11,9 +11,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::{implicit_momentum, SyncModelKind};
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (base_speed, comm) = match scale {
@@ -37,7 +38,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
         spec.sync.fixed_delta_c = dc;
         let gamma = spec.sync.gamma;
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         let mu = implicit_momentum(gamma, &vec![dc as f64; speeds.len()], &speeds);
         table.push_row(vec![
             "a_commit_rate".into(),
@@ -57,7 +58,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
         spec.sync.fixed_delta_c = 16; // fast commits → tiny implicit momentum
         spec.sync.ps_momentum = mu;
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             "c_explicit_momentum".into(),
             fmt(mu),

@@ -11,9 +11,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ec2_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{downsample, fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, downsample, fmt, spec_for, Scale, SeriesTable};
 
 pub const BASELINES: [SyncModelKind; 5] = [
     SyncModelKind::Bsp,
@@ -46,8 +47,8 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
 
     for kind in BASELINES {
         let spec = spec_for(scale, kind, cluster.clone());
-        let out = run_sim(spec)?;
-        anyhow::ensure!(!out.deadlocked, "policy deadlock in {kind}");
+        let out = common::run(spec, Backend::Sim)?;
+        anyhow::ensure!(!out.deadlocked(), "policy deadlock in {kind}");
         for (t, loss) in downsample(&out, 60) {
             curves.push_row(vec![kind.name().into(), fmt(t), fmt(loss)]);
         }

@@ -9,9 +9,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::{ec2_cluster, scale_speeds_to_heterogeneity};
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub const H_SWEEP: [f64; 4] = [1.1, 1.6, 2.3, 3.2];
 
@@ -43,7 +44,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         let mut times = std::collections::HashMap::new();
         for kind in [SyncModelKind::FixedAdacomm, SyncModelKind::Adsp] {
             let spec = spec_for(scale, kind, cluster.clone());
-            let out = run_sim(spec)?;
+            let out = common::run(spec, Backend::Sim)?;
             times.insert(kind, (out.convergence_time(), out.final_loss));
         }
         let (t_fixed, _) = times[&SyncModelKind::FixedAdacomm];

@@ -6,9 +6,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (base_speed, comm) = match scale {
@@ -36,7 +37,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             SyncModelKind::Adsp,
         ] {
             let spec = spec_for(scale, kind, cluster.clone());
-            let out = run_sim(spec)?;
+            let out = common::run(spec, Backend::Sim)?;
             table.push_row(vec![
                 fmt(d),
                 kind.name().to_string(),

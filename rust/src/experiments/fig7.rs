@@ -12,9 +12,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ec2_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (sizes, base_speed, comm): (&[usize], f64, f64) = match scale {
@@ -37,7 +38,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         let cluster = ec2_cluster(n, base_speed, comm);
         for kind in [SyncModelKind::FixedAdacomm, SyncModelKind::Adsp] {
             let spec = spec_for(scale, kind, cluster.clone());
-            let out = run_sim(spec)?;
+            let out = common::run(spec, Backend::Sim)?;
             table.push_row(vec![
                 n.to_string(),
                 kind.name().to_string(),
@@ -56,7 +57,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
         let mut spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
         spec.shards = s;
         spec.ps_apply_secs = apply_secs;
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             n.to_string(),
             format!("{}_sharded_ps", SyncModelKind::Adsp.name()),

@@ -9,9 +9,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub const TAU_SCALES: [f64; 4] = [0.4, 0.6, 0.8, 1.0];
 
@@ -29,7 +30,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
 
     // ADSP itself.
     let spec = spec_for(scale, SyncModelKind::Adsp, cluster.clone());
-    let adsp_out = run_sim(spec)?;
+    let adsp_out = common::run(spec, Backend::Sim)?;
     table.push_row(vec![
         "adsp".into(),
         "-".into(),
@@ -48,14 +49,14 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             crate::sync::AdspPlusPolicy::no_waiting_tau(&spec.sync, &cluster);
         spec.sync.tau_per_worker =
             base_tau.iter().map(|&t| ((t as f64 * f).round() as u64).max(1)).collect();
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         table.push_row(vec![
             "adsp_plus_candidate".into(),
             fmt(f),
             fmt(out.convergence_time()),
             fmt(out.final_loss),
         ]);
-        if best.map_or(true, |(_, t, _)| out.convergence_time() < t) {
+        if best.is_none_or(|(_, t, _)| out.convergence_time() < t) {
             best = Some((f, out.convergence_time(), out.final_loss));
         }
     }

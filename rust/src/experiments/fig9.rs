@@ -5,9 +5,10 @@
 use anyhow::Result;
 
 use crate::config::profiles::ratio_cluster;
+use crate::run::Backend;
 use crate::sync::SyncModelKind;
 
-use super::common::{fmt, run_sim, spec_for, Scale, SeriesTable};
+use super::common::{self, fmt, spec_for, Scale, SeriesTable};
 
 pub fn run(scale: Scale) -> Result<SeriesTable> {
     let (base_speed, comm) = match scale {
@@ -35,7 +36,7 @@ pub fn run(scale: Scale) -> Result<SeriesTable> {
             spec.batch_size = 32;
         }
         let b_ref = spec.batch_size;
-        let out = run_sim(spec)?;
+        let out = common::run(spec, Backend::Sim)?;
         let batches = if kind.is_batchtune() {
             let available = crate::runtime::ModelRuntime::load_by_name(&out.model)?
                 .manifest

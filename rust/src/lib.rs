@@ -7,8 +7,10 @@
 //!   parameter server, the heterogeneous-worker runtime, the ADSP scheduler
 //!   with its online commit-rate search, the full baseline zoo (BSP, SSP,
 //!   TAP, ADACOMM, Fixed ADACOMM, ADSP⁺, ADSP⁺⁺, BatchTune), a deterministic
-//!   discrete-event cluster simulator, a tokio real-time engine, and the
-//!   experiment harness regenerating every figure in the paper.
+//!   discrete-event cluster simulator and a wall-clock thread engine — both
+//!   behind the unified [`run`] API ([`run::Run`] builder, streaming
+//!   [`run::RunObserver`]s, one JSON-serializable [`run::RunReport`]) — and
+//!   the experiment harness regenerating every figure in the paper.
 //! * **Layer 2 (python/compile, build-time only)** — the jax model zoo whose
 //!   `local_steps` / `eval_step` / `apply_commit` graphs are AOT-lowered to
 //!   HLO-text artifacts.
@@ -51,6 +53,7 @@ pub mod fault;
 pub mod metrics;
 pub mod network;
 pub mod pserver;
+pub mod run;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod simulation;
@@ -63,5 +66,8 @@ pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use fault::{Checkpoint, CheckpointPolicy, CheckpointStore, FaultSpec};
 pub use network::{LinkModel, NetworkSpec};
 pub use pserver::ShardedParameterServer;
-pub use simulation::{SimEngine, SimOutcome};
+pub use run::{
+    Backend, EngineStats, NoopObserver, Run, RunBuilder, RunObserver, RunReport, TrainEngine,
+};
+pub use simulation::SimEngine;
 pub use sync::SyncModelKind;

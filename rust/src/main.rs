@@ -11,10 +11,9 @@ use std::str::FromStr;
 use anyhow::{bail, Context, Result};
 
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
-use adsp::coordinator::RealtimeEngine;
 use adsp::experiments::{self, Scale};
+use adsp::run::{Backend, EngineStats, Run, RunReport};
 use adsp::runtime::ModelRuntime;
-use adsp::simulation::SimEngine;
 use adsp::sync::SyncModelKind;
 
 const USAGE: &str = "\
@@ -25,8 +24,9 @@ USAGE:
              [--batch N] [--gamma SECS] [--max-secs S] [--max-steps N]
              [--target-loss L] [--config FILE.json] [--realtime]
              [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
-             [--scenario NAME] [--list-scenarios] [--link-bw BPS]
-             [--link-latency SECS] [--checkpoint-every SECS]
+             [--ps-apply-secs T] [--scenario NAME] [--list-scenarios]
+             [--link-bw BPS] [--link-latency SECS]
+             [--checkpoint-every SECS] [--out FILE.json]
   adsp experiment <fig1|fig3..fig16|all> [--full]
   adsp inspect <model>
   adsp list
@@ -67,6 +67,10 @@ TRAIN FLAGS:
                       (fault subsystem; 0 = off, the default — the
                       \"fault\" section of a JSON --config also sets the
                       sink rate / remote-sink cost model)
+  --out FILE.json     dump the run's full RunReport as JSON (loss log,
+                      per-worker metrics, breakdown, fault counters,
+                      engine stats) — the same schema for the simulator
+                      and --realtime runs
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -174,31 +178,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         s
     };
 
-    if args.has("realtime") {
-        let time_scale = args.get("time-scale", 0.02)?;
-        let out = RealtimeEngine::new(spec, time_scale).run()?;
-        println!("model:          {}", out.model);
-        println!("sync:           {}", out.sync);
-        println!(
-            "converged:      {}",
-            out.converged_at_virtual
-                .map(|t| format!("{t:.1}s virtual"))
-                .unwrap_or_else(|| "no (hit cap)".into())
-        );
-        println!("end:            {:.1}s virtual / {:.2}s wall", out.end_virtual, out.wall_secs);
-        println!("total steps:    {}", out.total_steps);
-        println!("total commits:  {}", out.total_commits);
-        println!("final loss:     {:.4}", out.final_loss);
-        println!(
-            "breakdown:      compute {:.1}s | comm {:.1}s | blocked {:.1}s",
-            out.breakdown.avg_compute_secs,
-            out.breakdown.avg_comm_secs,
-            out.breakdown.avg_blocked_secs
-        );
+    // The sim/realtime branch collapses into one backend selection: both
+    // engines run behind the Run builder and report the same RunReport.
+    let backend = if args.has("realtime") {
+        Backend::Realtime { time_scale: args.get("time-scale", 0.02)? }
     } else {
-        let out = SimEngine::new(spec)?.run()?;
-        print_outcome_summary(&out);
+        Backend::Sim
+    };
+    let report = Run::from_spec(spec).backend(backend).execute()?;
+    if let Some(path) = args.flags.get("out") {
+        std::fs::write(path, report.to_json().dump_pretty())
+            .with_context(|| format!("writing report to {path}"))?;
+        eprintln!("wrote {path}");
     }
+    print_report_summary(&report);
     Ok(())
 }
 
@@ -276,7 +269,8 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-fn print_outcome_summary(out: &adsp::simulation::SimOutcome) {
+fn print_report_summary(out: &RunReport) {
+    println!("backend:          {}", out.backend_name());
     println!("model:            {}", out.model);
     println!("sync:             {}", out.sync_describe);
     println!(
@@ -309,5 +303,10 @@ fn print_outcome_summary(out: &adsp::simulation::SimOutcome) {
             out.wasted_steps, out.lost_commits, out.checkpoints_taken, out.checkpoint_overhead_secs
         );
     }
-    println!("xla executions:   {}", out.xla_execs);
+    match out.engine {
+        EngineStats::Sim { xla_execs, .. } => println!("xla executions:   {xla_execs}"),
+        EngineStats::Realtime { time_scale } => {
+            println!("time scale:       {time_scale} wall secs per virtual sec")
+        }
+    }
 }

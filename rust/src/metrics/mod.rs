@@ -3,7 +3,9 @@
 //! paper's convergence detector (§5.2: stop when the loss variance over the
 //! last 10 evaluations is small enough).
 
-use crate::util::variance;
+use anyhow::Result;
+
+use crate::util::{variance, Json};
 
 /// Per-worker timing/traffic counters.
 #[derive(Clone, Debug, Default)]
@@ -26,6 +28,32 @@ impl WorkerMetrics {
     /// The paper's "waiting time": everything that is not computation.
     pub fn waiting_secs(&self) -> f64 {
         self.comm_secs + self.blocked_secs
+    }
+
+    /// JSON object form (one entry of `RunReport.workers`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("compute_secs", Json::num(self.compute_secs)),
+            ("comm_secs", Json::num(self.comm_secs)),
+            ("blocked_secs", Json::num(self.blocked_secs)),
+            ("steps", Json::num(self.steps as f64)),
+            ("commits", Json::num(self.commits as f64)),
+            ("bytes_up", Json::num(self.bytes_up as f64)),
+            ("bytes_down", Json::num(self.bytes_down as f64)),
+        ])
+    }
+
+    /// Parse one `RunReport.workers` entry back.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(WorkerMetrics {
+            compute_secs: v.req("compute_secs")?.as_f64()?,
+            comm_secs: v.req("comm_secs")?.as_f64()?,
+            blocked_secs: v.req("blocked_secs")?.as_f64()?,
+            steps: v.req("steps")?.as_u64()?,
+            commits: v.req("commits")?.as_u64()?,
+            bytes_up: v.req("bytes_up")?.as_u64()?,
+            bytes_down: v.req("bytes_down")?.as_u64()?,
+        })
     }
 }
 
@@ -81,6 +109,26 @@ impl Breakdown {
             self.avg_waiting_secs / total
         }
     }
+
+    /// JSON object form (`RunReport.breakdown`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("avg_compute_secs", Json::num(self.avg_compute_secs)),
+            ("avg_waiting_secs", Json::num(self.avg_waiting_secs)),
+            ("avg_comm_secs", Json::num(self.avg_comm_secs)),
+            ("avg_blocked_secs", Json::num(self.avg_blocked_secs)),
+        ])
+    }
+
+    /// Parse a `RunReport.breakdown` object back.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Breakdown {
+            avg_compute_secs: v.req("avg_compute_secs")?.as_f64()?,
+            avg_waiting_secs: v.req("avg_waiting_secs")?.as_f64()?,
+            avg_comm_secs: v.req("avg_comm_secs")?.as_f64()?,
+            avg_blocked_secs: v.req("avg_blocked_secs")?.as_f64()?,
+        })
+    }
 }
 
 /// One global-model evaluation sample.
@@ -121,6 +169,41 @@ impl LossLog {
     /// Min loss over the run.
     pub fn best_loss(&self) -> Option<f64> {
         self.samples.iter().map(|s| s.loss).min_by(f64::total_cmp)
+    }
+
+    /// JSON array form (`RunReport.loss_log`), one object per sample.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.samples
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("t", Json::num(s.t)),
+                        ("total_steps", Json::num(s.total_steps as f64)),
+                        ("loss", Json::num(s.loss)),
+                        ("accuracy", Json::num(s.accuracy)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse a `RunReport.loss_log` array back (a diverged run can log a
+    /// NaN loss, serialized as `null` — see [`Json::req_f64_or_nan`]).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let samples = v
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(LossSample {
+                    t: s.req("t")?.as_f64()?,
+                    total_steps: s.req("total_steps")?.as_u64()?,
+                    loss: s.req_f64_or_nan("loss")?,
+                    accuracy: s.req_f64_or_nan("accuracy")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LossLog { samples })
     }
 }
 
@@ -181,8 +264,18 @@ mod tests {
     #[test]
     fn breakdown_averages() {
         let ws = vec![
-            WorkerMetrics { compute_secs: 10.0, comm_secs: 2.0, blocked_secs: 8.0, ..Default::default() },
-            WorkerMetrics { compute_secs: 20.0, comm_secs: 0.0, blocked_secs: 0.0, ..Default::default() },
+            WorkerMetrics {
+                compute_secs: 10.0,
+                comm_secs: 2.0,
+                blocked_secs: 8.0,
+                ..Default::default()
+            },
+            WorkerMetrics {
+                compute_secs: 20.0,
+                comm_secs: 0.0,
+                blocked_secs: 0.0,
+                ..Default::default()
+            },
         ];
         let b = Breakdown::from_workers(&ws);
         assert!((b.avg_compute_secs - 15.0).abs() < 1e-12);

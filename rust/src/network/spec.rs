@@ -130,7 +130,11 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let net = NetworkSpec {
-            default_link: LinkModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.02, jitter: 0.0 },
+            default_link: LinkModel {
+                bandwidth_bytes_per_sec: 1e6,
+                latency_secs: 0.02,
+                jitter: 0.0,
+            },
             links: vec![LinkModel::with_bandwidth(5e5), LinkModel::unbounded()],
             ingress_bytes_per_sec: 4e6,
             ingress_discipline: IngressDiscipline::FairShare,

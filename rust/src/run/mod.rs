@@ -1,0 +1,229 @@
+//! The crate's front door: one builder-driven run API over both engines.
+//!
+//! [`Run::from_spec`] starts a [`RunBuilder`]; [`RunBuilder::backend`]
+//! picks the engine ([`Backend::Sim`] — the deterministic virtual-time
+//! simulator, the default — or [`Backend::Realtime`] — the wall-clock
+//! thread cluster); [`RunBuilder::observer`] attaches a streaming
+//! [`RunObserver`]; [`RunBuilder::execute`] runs to convergence or a cap
+//! and returns the engine-agnostic [`RunReport`]. Both engines implement
+//! the [`TrainEngine`] trait, so every consumer — the experiment
+//! harness, the CLI, benches, tests — drives them identically:
+//!
+//! ```no_run
+//! use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+//! use adsp::run::{Backend, Run};
+//! use adsp::sync::SyncModelKind;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // The paper's motivating 1:1:3 cluster: two fast edge devices and one
+//! // three-times-slower straggler.
+//! let cluster = ClusterSpec::new(vec![
+//!     WorkerSpec::new(1.0, 0.2),
+//!     WorkerSpec::new(1.0, 0.2),
+//!     WorkerSpec::new(1.0 / 3.0, 0.2),
+//! ]);
+//! let mut spec = ExperimentSpec::new(
+//!     "mlp_quick",
+//!     cluster,
+//!     SyncSpec::new(SyncModelKind::Adsp),
+//! );
+//! spec.batch_size = 32;
+//! spec.max_virtual_secs = 600.0;
+//!
+//! // Simulated run (the default backend):
+//! let report = Run::from_spec(spec.clone()).execute()?;
+//! println!(
+//!     "converged at {:.0}s (virtual) after {} commits",
+//!     report.convergence_time(),
+//!     report.total_commits,
+//! );
+//!
+//! // The same spec on the wall-clock engine, 100x compressed:
+//! let realtime = Run::from_spec(spec)
+//!     .backend(Backend::Realtime { time_scale: 0.01 })
+//!     .execute()?;
+//! assert_eq!(realtime.backend_name(), "realtime");
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Attaching a `Run` observer (or none at all) is pinned to leave the
+//! simulator's numeric outputs bit-identical — observers are read-only
+//! taps, verified by the acceptance tests in `tests/integration.rs`.
+
+mod observer;
+mod report;
+
+pub use observer::{NoopObserver, RunObserver};
+pub use report::{EngineStats, RunReport};
+
+use anyhow::Result;
+
+use crate::config::ExperimentSpec;
+use crate::coordinator::RealtimeEngine;
+use crate::simulation::SimEngine;
+
+/// Which engine a [`RunBuilder`] executes on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Backend {
+    /// The deterministic virtual-time discrete-event simulator
+    /// ([`SimEngine`]) — the default for experiments, benches and tests.
+    Sim,
+    /// The wall-clock thread cluster ([`RealtimeEngine`]): one OS thread
+    /// per worker, pacing itself with calibrated sleeps. `time_scale` is
+    /// wall seconds per virtual second (0.01 → a 600-second run takes
+    /// about 6 wall seconds, every rate ratio preserved).
+    Realtime {
+        /// Wall seconds per virtual second.
+        time_scale: f64,
+    },
+}
+
+impl Backend {
+    /// The backend tag reports carry ("sim" / "realtime").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Realtime { .. } => "realtime",
+        }
+    }
+}
+
+/// An engine that can execute one training run end to end. Implemented by
+/// [`SimEngine`] and [`RealtimeEngine`]; the [`RunBuilder`] constructs one
+/// from its [`Backend`] selection, so consumers never branch on engine.
+pub trait TrainEngine {
+    /// Run to convergence or a cap, streaming progress into `observer`
+    /// and returning the engine-agnostic report (whose
+    /// [`EngineStats`] carries the backend tag).
+    fn execute(self: Box<Self>, observer: &mut dyn RunObserver) -> Result<RunReport>;
+}
+
+impl TrainEngine for SimEngine {
+    fn execute(self: Box<Self>, observer: &mut dyn RunObserver) -> Result<RunReport> {
+        (*self).run_observed(observer)
+    }
+}
+
+impl TrainEngine for RealtimeEngine {
+    fn execute(self: Box<Self>, observer: &mut dyn RunObserver) -> Result<RunReport> {
+        (*self).run_observed(observer)
+    }
+}
+
+/// Entry point of the unified run API: `Run::from_spec(spec)` starts a
+/// [`RunBuilder`].
+pub struct Run;
+
+impl Run {
+    /// Build a run from a validated-on-execute [`ExperimentSpec`]. The
+    /// builder defaults to [`Backend::Sim`] with no observer.
+    pub fn from_spec(spec: ExperimentSpec) -> RunBuilder<'static> {
+        RunBuilder { spec, backend: Backend::Sim, observer: None }
+    }
+}
+
+/// Configures and executes one training run (see the module docs).
+pub struct RunBuilder<'a> {
+    spec: ExperimentSpec,
+    backend: Backend,
+    observer: Option<&'a mut dyn RunObserver>,
+}
+
+impl<'a> RunBuilder<'a> {
+    /// Select the engine (default: [`Backend::Sim`]).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a streaming observer. The caller keeps ownership, so the
+    /// observer can be inspected after [`RunBuilder::execute`] returns.
+    pub fn observer<'b>(self, observer: &'b mut dyn RunObserver) -> RunBuilder<'b>
+    where
+        'a: 'b,
+    {
+        RunBuilder { spec: self.spec, backend: self.backend, observer: Some(observer) }
+    }
+
+    /// Validate the spec, construct the selected engine, and run it.
+    pub fn execute(self) -> Result<RunReport> {
+        let engine: Box<dyn TrainEngine> = match self.backend {
+            Backend::Sim => Box::new(SimEngine::new(self.spec)?),
+            Backend::Realtime { time_scale } => {
+                Box::new(RealtimeEngine::new(self.spec, time_scale))
+            }
+        };
+        let mut noop = NoopObserver;
+        let observer: &mut dyn RunObserver = match self.observer {
+            Some(o) => o,
+            None => &mut noop,
+        };
+        engine.execute(observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, SyncSpec, WorkerSpec};
+    use crate::sync::SyncModelKind;
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(Backend::Sim.name(), "sim");
+        assert_eq!(Backend::Realtime { time_scale: 0.5 }.name(), "realtime");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_specs_at_execute() {
+        // The builder defers validation to execute(), where the engine
+        // constructor runs spec.validate(): an empty cluster must error,
+        // not panic, whatever backend was picked.
+        let spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        assert!(Run::from_spec(spec).execute().is_err());
+    }
+
+    #[test]
+    fn realtime_backend_rejects_nonpositive_time_scale() {
+        // A zero/negative/non-finite scale would corrupt the virtual
+        // clock; the engine must refuse it before touching artifacts.
+        for bad in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+            let spec = ExperimentSpec::new(
+                "mlp_quick",
+                ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+                SyncSpec::new(SyncModelKind::Tap),
+            );
+            let err = Run::from_spec(spec)
+                .backend(Backend::Realtime { time_scale: bad })
+                .execute()
+                .unwrap_err();
+            assert!(err.to_string().contains("time_scale"), "scale {bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn observer_lifetime_allows_post_run_inspection() {
+        // Compile-time shape check: a caller-owned observer outlives the
+        // builder and stays readable after execute() (the run itself errors
+        // here — no artifacts — which is fine for the borrow check).
+        struct Count(usize);
+        impl RunObserver for Count {
+            fn on_eval(&mut self, _t: f64, _s: u64, _l: f64, _a: f64) {
+                self.0 += 1;
+            }
+        }
+        let mut counter = Count(0);
+        let spec = ExperimentSpec::new(
+            "definitely_not_a_model",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+            SyncSpec::new(SyncModelKind::Tap),
+        );
+        let _ = Run::from_spec(spec).observer(&mut counter).execute();
+        assert_eq!(counter.0, 0);
+    }
+}

@@ -1,0 +1,44 @@
+//! Streaming run observation: the [`RunObserver`] callback surface both
+//! engines drive while a run executes.
+//!
+//! Observers are *read-only* taps: nothing an observer does can change the
+//! course of the run (no return values, no engine state exposed mutably),
+//! so attaching one is pinned to leave the simulator's numeric outputs
+//! bit-identical. The engines invoke the callbacks from their scheduling
+//! context — the event loop in the simulator, the PS/scheduler thread in
+//! the real-time engine — so implementations should return quickly.
+
+use crate::cluster::ClusterEvent;
+
+/// Callbacks streamed out of a training run while it executes. Every
+/// method has an empty default body; implement only what you need.
+///
+/// Times are virtual seconds from run start (the real-time engine converts
+/// through its `time_scale`), matching the units of
+/// [`RunReport`](super::RunReport).
+pub trait RunObserver {
+    /// A global-model evaluation sample was recorded: the loss/accuracy of
+    /// the PS model at virtual time `t` with `total_steps` cumulative
+    /// local steps behind it. Mirrors the entries of `RunReport.loss_log`.
+    fn on_eval(&mut self, _t: f64, _total_steps: u64, _loss: f64, _accuracy: f64) {}
+
+    /// Worker `worker`'s commit was applied at the parameter server;
+    /// `total_commits` is the run's cumulative applied-commit count.
+    fn on_commit_applied(&mut self, _t: f64, _worker: usize, _total_commits: u64) {}
+
+    /// A scripted timeline event fired — cluster shifts (speed/comm/churn/
+    /// blackout) and fault injections (crash, shard failure) alike.
+    fn on_cluster_event(&mut self, _t: f64, _event: &ClusterEvent) {}
+
+    /// The fault subsystem saved a PS checkpoint. `version` is the run's
+    /// cumulative applied-commit count at the cut — the same monotone
+    /// space as `on_commit_applied`'s `total_commits`, in both engines.
+    fn on_checkpoint(&mut self, _t: f64, _version: u64) {}
+}
+
+/// The default observer: ignores every callback. Runs built without an
+/// explicit observer stream into this, which is pinned to change nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopObserver;
+
+impl RunObserver for NoopObserver {}

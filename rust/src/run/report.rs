@@ -1,0 +1,383 @@
+//! [`RunReport`]: the engine-agnostic outcome of one training run.
+//!
+//! One report type serves both backends — the fields either engine cannot
+//! populate live in the [`EngineStats`] enum, not in permanently-empty
+//! top-level slots — and the whole thing round-trips through JSON
+//! (`adsp train --out report.json`), so sim-vs-realtime cross-validation
+//! and external tooling read one schema.
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::{Breakdown, LossLog, WorkerMetrics};
+use crate::sync::SyncModelKind;
+use crate::util::Json;
+
+/// Engine-specific extras of a [`RunReport`] — everything only one backend
+/// can measure. The JSON form is tagged with `"backend": "sim"/"realtime"`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EngineStats {
+    /// Produced by the discrete-event simulator.
+    Sim {
+        /// Number of XLA executions issued.
+        xla_execs: u64,
+        /// Wall seconds spent inside XLA — `wall_secs − xla_secs` is the
+        /// coordinator overhead (perf-pass metric; target < 15% of wall).
+        xla_secs: f64,
+        /// True if every worker sat blocked across several consecutive
+        /// evals (policy deadlock — must never happen; asserted in tests).
+        deadlocked: bool,
+        /// Commits lost to failure injection (`spec.drop_commit_prob`).
+        dropped_commits: u64,
+    },
+    /// Produced by the wall-clock thread engine.
+    Realtime {
+        /// Wall seconds per virtual second the run was scaled by.
+        time_scale: f64,
+    },
+}
+
+impl EngineStats {
+    /// The JSON `backend` tag ("sim" / "realtime").
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            EngineStats::Sim { .. } => "sim",
+            EngineStats::Realtime { .. } => "realtime",
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            EngineStats::Sim { xla_execs, xla_secs, deadlocked, dropped_commits } => {
+                Json::obj(vec![
+                    ("backend", Json::str("sim")),
+                    ("xla_execs", Json::num(xla_execs as f64)),
+                    ("xla_secs", Json::num(xla_secs)),
+                    ("deadlocked", Json::Bool(deadlocked)),
+                    ("dropped_commits", Json::num(dropped_commits as f64)),
+                ])
+            }
+            EngineStats::Realtime { time_scale } => Json::obj(vec![
+                ("backend", Json::str("realtime")),
+                ("time_scale", Json::num(time_scale)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<EngineStats> {
+        match v.req("backend")?.as_str()? {
+            "sim" => Ok(EngineStats::Sim {
+                xla_execs: v.req("xla_execs")?.as_u64()?,
+                xla_secs: v.req("xla_secs")?.as_f64()?,
+                deadlocked: v.req("deadlocked")?.as_bool()?,
+                dropped_commits: v.req("dropped_commits")?.as_u64()?,
+            }),
+            "realtime" => {
+                Ok(EngineStats::Realtime { time_scale: v.req("time_scale")?.as_f64()? })
+            }
+            other => bail!("unknown engine backend '{other}'"),
+        }
+    }
+}
+
+/// Everything a run produces, whichever engine produced it. Figure
+/// harnesses, the CLI, benches and tests all consume this one type; the
+/// engine-specific extras live in [`RunReport::engine`].
+///
+/// Counters are serialized as JSON numbers (exact below 2⁵³, far beyond
+/// any real run), and non-finite floats as `null` (JSON has no NaN),
+/// which parse back as NaN.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Model name the run trained.
+    pub model: String,
+    /// Synchronization model the run used.
+    pub sync: SyncModelKind,
+    /// The policy's diagnostic label (current C_target / τ / ...).
+    pub sync_describe: String,
+    /// Virtual time at which the convergence detector fired (None = ran
+    /// to a cap).
+    pub converged_at: Option<f64>,
+    /// Virtual time the run stopped at.
+    pub end_time: f64,
+    /// Real (host) seconds the run took.
+    pub wall_secs: f64,
+    /// Cumulative local training steps across every worker.
+    pub total_steps: u64,
+    /// Commits applied at the PS.
+    pub total_commits: u64,
+    /// Loss at the last evaluation.
+    pub final_loss: f64,
+    /// Best loss seen at any evaluation.
+    pub best_loss: f64,
+    /// Accuracy at the last evaluation.
+    pub final_accuracy: f64,
+    /// Every (t, steps, loss, accuracy) evaluation sample.
+    pub loss_log: LossLog,
+    /// Per-worker step/commit/byte/time accounting.
+    pub workers: Vec<WorkerMetrics>,
+    /// Cluster-average compute/comm/blocked breakdown (Fig. 1).
+    pub breakdown: Breakdown,
+    /// Total bytes moved over the network (up + down).
+    pub bytes_total: u64,
+    /// Local steps whose work was lost and must be recomputed: steps in
+    /// dropped/lost commits, uncommitted steps at a crash, and steps in
+    /// commits rolled back by a PS failover (fig16's headline metric).
+    pub wasted_steps: u64,
+    /// Applied commits rolled back by PS failovers (past the checkpoint).
+    pub lost_commits: u64,
+    /// Checkpoints taken by the `fault` policy.
+    pub checkpoints_taken: u64,
+    /// Virtual seconds the PS spent writing checkpoints (the simulator's
+    /// explicit cost model; the real-time engine measures the scaled wall
+    /// time of the consistent cut).
+    pub checkpoint_overhead_secs: f64,
+    /// Engine-specific extras (which backend ran, and what only it knows).
+    pub engine: EngineStats,
+}
+
+impl RunReport {
+    /// Convergence time: detector time, else the full run time.
+    pub fn convergence_time(&self) -> f64 {
+        self.converged_at.unwrap_or(self.end_time)
+    }
+
+    /// Bandwidth usage per virtual second (Fig. 10a).
+    pub fn bandwidth_bytes_per_sec(&self) -> f64 {
+        if self.end_time <= 0.0 {
+            0.0
+        } else {
+            self.bytes_total as f64 / self.end_time
+        }
+    }
+
+    /// Average per-step loss-decrease efficiency (Fig. 4d companion).
+    pub fn loss_drop_per_kstep(&self) -> f64 {
+        match (self.loss_log.first_loss(), self.loss_log.last_loss()) {
+            (Some(a), Some(b)) if self.total_steps > 0 => {
+                (a - b) / (self.total_steps as f64 / 1000.0)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Which backend produced this report ("sim" / "realtime").
+    pub fn backend_name(&self) -> &'static str {
+        self.engine.backend_name()
+    }
+
+    /// Simulator deadlock sentinel; always false for realtime reports.
+    pub fn deadlocked(&self) -> bool {
+        matches!(self.engine, EngineStats::Sim { deadlocked: true, .. })
+    }
+
+    /// Commits lost to the simulator's failure injection; 0 for realtime.
+    pub fn dropped_commits(&self) -> u64 {
+        match self.engine {
+            EngineStats::Sim { dropped_commits, .. } => dropped_commits,
+            EngineStats::Realtime { .. } => 0,
+        }
+    }
+
+    /// XLA executions issued (simulator reports only; 0 for realtime,
+    /// where each worker owns its own runtime).
+    pub fn xla_execs(&self) -> u64 {
+        match self.engine {
+            EngineStats::Sim { xla_execs, .. } => xla_execs,
+            EngineStats::Realtime { .. } => 0,
+        }
+    }
+
+    /// Wall seconds spent inside XLA (simulator reports only).
+    pub fn xla_secs(&self) -> f64 {
+        match self.engine {
+            EngineStats::Sim { xla_secs, .. } => xla_secs,
+            EngineStats::Realtime { .. } => 0.0,
+        }
+    }
+
+    /// JSON object form (`adsp train --out report.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("sync", Json::str(self.sync.name())),
+            ("sync_describe", Json::str(self.sync_describe.clone())),
+            ("converged_at", self.converged_at.map(Json::num).unwrap_or(Json::Null)),
+            ("end_time", Json::num(self.end_time)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+            ("total_commits", Json::num(self.total_commits as f64)),
+            ("final_loss", Json::num(self.final_loss)),
+            ("best_loss", Json::num(self.best_loss)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("loss_log", self.loss_log.to_json()),
+            ("workers", Json::Arr(self.workers.iter().map(|w| w.to_json()).collect())),
+            ("breakdown", self.breakdown.to_json()),
+            ("bytes_total", Json::num(self.bytes_total as f64)),
+            ("wasted_steps", Json::num(self.wasted_steps as f64)),
+            ("lost_commits", Json::num(self.lost_commits as f64)),
+            ("checkpoints_taken", Json::num(self.checkpoints_taken as f64)),
+            ("checkpoint_overhead_secs", Json::num(self.checkpoint_overhead_secs)),
+            ("engine", self.engine.to_json()),
+        ])
+    }
+
+    /// Parse a report back from its [`RunReport::to_json`] form.
+    pub fn from_json(v: &Json) -> Result<RunReport> {
+        let sync = v
+            .req("sync")?
+            .as_str()?
+            .parse::<SyncModelKind>()
+            .map_err(anyhow::Error::msg)?;
+        let converged_at = match v.req("converged_at")? {
+            Json::Null => None,
+            j => Some(j.as_f64()?),
+        };
+        Ok(RunReport {
+            model: v.req("model")?.as_str()?.to_string(),
+            sync,
+            sync_describe: v.req("sync_describe")?.as_str()?.to_string(),
+            converged_at,
+            end_time: v.req("end_time")?.as_f64()?,
+            wall_secs: v.req("wall_secs")?.as_f64()?,
+            total_steps: v.req("total_steps")?.as_u64()?,
+            total_commits: v.req("total_commits")?.as_u64()?,
+            final_loss: v.req_f64_or_nan("final_loss")?,
+            best_loss: v.req_f64_or_nan("best_loss")?,
+            final_accuracy: v.req_f64_or_nan("final_accuracy")?,
+            loss_log: LossLog::from_json(v.req("loss_log")?).context("parsing loss_log")?,
+            workers: v
+                .req("workers")?
+                .as_arr()?
+                .iter()
+                .map(WorkerMetrics::from_json)
+                .collect::<Result<_>>()
+                .context("parsing workers")?,
+            breakdown: Breakdown::from_json(v.req("breakdown")?).context("parsing breakdown")?,
+            bytes_total: v.req("bytes_total")?.as_u64()?,
+            wasted_steps: v.req("wasted_steps")?.as_u64()?,
+            lost_commits: v.req("lost_commits")?.as_u64()?,
+            checkpoints_taken: v.req("checkpoints_taken")?.as_u64()?,
+            checkpoint_overhead_secs: v.req("checkpoint_overhead_secs")?.as_f64()?,
+            engine: EngineStats::from_json(v.req("engine")?).context("parsing engine")?,
+        })
+    }
+
+    /// Parse a report from JSON text (the `--out report.json` dump).
+    pub fn from_json_str(text: &str) -> Result<RunReport> {
+        RunReport::from_json(&Json::parse(text).context("parsing run report JSON")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report(engine: EngineStats) -> RunReport {
+        let mut loss_log = LossLog::default();
+        loss_log.push(0.0, 0, 2.5, 0.1);
+        loss_log.push(10.0, 120, 1.25, 0.55);
+        RunReport {
+            model: "mlp_quick".into(),
+            sync: SyncModelKind::Adsp,
+            sync_describe: "adsp C_target=4".into(),
+            converged_at: Some(90.5),
+            end_time: 90.5,
+            wall_secs: 0.75,
+            total_steps: 120,
+            total_commits: 14,
+            final_loss: 1.25,
+            best_loss: 1.25,
+            final_accuracy: 0.55,
+            loss_log,
+            workers: vec![
+                WorkerMetrics {
+                    compute_secs: 80.0,
+                    comm_secs: 9.0,
+                    blocked_secs: 1.5,
+                    steps: 120,
+                    commits: 14,
+                    bytes_up: 1024,
+                    bytes_down: 2048,
+                },
+            ],
+            breakdown: Breakdown {
+                avg_compute_secs: 80.0,
+                avg_waiting_secs: 10.5,
+                avg_comm_secs: 9.0,
+                avg_blocked_secs: 1.5,
+            },
+            bytes_total: 3072,
+            wasted_steps: 3,
+            lost_commits: 1,
+            checkpoints_taken: 2,
+            checkpoint_overhead_secs: 0.25,
+            engine,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_both_backends() {
+        for engine in [
+            EngineStats::Sim {
+                xla_execs: 33,
+                xla_secs: 0.5,
+                deadlocked: false,
+                dropped_commits: 2,
+            },
+            EngineStats::Realtime { time_scale: 0.01 },
+        ] {
+            let report = sample_report(engine);
+            let text = report.to_json().dump_pretty();
+            let back = RunReport::from_json_str(&text).unwrap();
+            assert_eq!(back.to_json(), report.to_json());
+            assert_eq!(back.engine, report.engine);
+            assert_eq!(back.sync, SyncModelKind::Adsp);
+            assert_eq!(back.converged_at, Some(90.5));
+            assert_eq!(back.loss_log.samples.len(), 2);
+        }
+    }
+
+    #[test]
+    fn nan_fields_serialize_as_null_and_parse_back_as_nan() {
+        // A run with no evaluations reports NaN losses; JSON has no NaN,
+        // so they dump as null and must parse back as NaN (not an error).
+        let mut report = sample_report(EngineStats::Realtime { time_scale: 1.0 });
+        report.final_loss = f64::NAN;
+        report.best_loss = f64::NAN;
+        report.final_accuracy = f64::NAN;
+        let back = RunReport::from_json_str(&report.to_json().dump()).unwrap();
+        assert!(back.final_loss.is_nan());
+        assert!(back.best_loss.is_nan());
+        assert!(back.final_accuracy.is_nan());
+    }
+
+    #[test]
+    fn accessors_route_through_engine_stats() {
+        let sim = sample_report(EngineStats::Sim {
+            xla_execs: 7,
+            xla_secs: 0.2,
+            deadlocked: true,
+            dropped_commits: 5,
+        });
+        assert_eq!(sim.backend_name(), "sim");
+        assert!(sim.deadlocked());
+        assert_eq!(sim.dropped_commits(), 5);
+        assert_eq!(sim.xla_execs(), 7);
+        let rt = sample_report(EngineStats::Realtime { time_scale: 0.02 });
+        assert_eq!(rt.backend_name(), "realtime");
+        assert!(!rt.deadlocked());
+        assert_eq!(rt.dropped_commits(), 0);
+        assert_eq!(rt.xla_execs(), 0);
+    }
+
+    #[test]
+    fn helper_metrics_match_their_definitions() {
+        let mut report = sample_report(EngineStats::Realtime { time_scale: 1.0 });
+        assert_eq!(report.convergence_time(), 90.5);
+        report.converged_at = None;
+        assert_eq!(report.convergence_time(), report.end_time);
+        assert!((report.bandwidth_bytes_per_sec() - 3072.0 / 90.5).abs() < 1e-9);
+        // (2.5 - 1.25) loss over 0.12 ksteps.
+        assert!((report.loss_drop_per_kstep() - 1.25 / 0.12).abs() < 1e-9);
+    }
+}

@@ -136,7 +136,9 @@ impl Manifest {
                                 ("name", Json::str(p.name.clone())),
                                 (
                                     "shape",
-                                    Json::Arr(p.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                                    Json::Arr(
+                                        p.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                                    ),
                                 ),
                                 ("numel", Json::num(p.numel as f64)),
                             ])

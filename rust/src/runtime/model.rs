@@ -123,7 +123,9 @@ impl ModelRuntime {
         let variant = self
             .manifest
             .variant(k, b)
-            .with_context(|| format!("no local_steps variant k={k} b={b} for {}", self.manifest.model))?
+            .with_context(|| {
+                format!("no local_steps variant k={k} b={b} for {}", self.manifest.model)
+            })?
             .clone();
 
         let n = self.manifest.params.len();

@@ -41,7 +41,13 @@ pub fn apply_commit(w: &mut ParamSet, u: &ParamSet, eta: f32) {
 }
 
 /// `V ← mu·V − eta·U; W ← W + V` (momentum PS update, Fig. 3(c) sweep).
-pub fn apply_commit_momentum(w: &mut ParamSet, u: &ParamSet, vel: &mut ParamSet, eta: f32, mu: f32) {
+pub fn apply_commit_momentum(
+    w: &mut ParamSet,
+    u: &ParamSet,
+    vel: &mut ParamSet,
+    eta: f32,
+    mu: f32,
+) {
     for ((wl, ul), vl) in w.leaves.iter_mut().zip(&u.leaves).zip(&mut vel.leaves) {
         apply_commit_momentum_slice(wl, ul, vl, eta, mu);
     }

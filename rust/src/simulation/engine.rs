@@ -26,10 +26,9 @@ use crate::data::{make_source, DataSource};
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::network::IngressQueue;
+use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
-use crate::sync::{
-    make_policy, Action, ClusterView, SyncModelKind, SyncPolicy, WorkerProgress,
-};
+use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum EventKind {
@@ -126,88 +125,6 @@ struct WorkerSim {
     metrics: WorkerMetrics,
     block_start: Option<f64>,
     data: Box<dyn DataSource>,
-}
-
-/// Everything a run produces (figure harnesses consume this).
-#[derive(Debug)]
-pub struct SimOutcome {
-    /// Model name the run trained.
-    pub model: String,
-    /// Synchronization model the run used.
-    pub sync: SyncModelKind,
-    /// The policy's diagnostic label (current C_target / τ / ...).
-    pub sync_describe: String,
-    /// Virtual time at which the convergence detector fired (None = ran to a cap).
-    pub converged_at: Option<f64>,
-    /// Virtual time the run stopped at.
-    pub end_time: f64,
-    /// Cumulative local training steps across every worker.
-    pub total_steps: u64,
-    /// Commits applied at the PS.
-    pub total_commits: u64,
-    /// Loss at the last evaluation.
-    pub final_loss: f64,
-    /// Best loss seen at any evaluation.
-    pub best_loss: f64,
-    /// Accuracy at the last evaluation.
-    pub final_accuracy: f64,
-    /// Every (t, steps, loss, accuracy) evaluation sample.
-    pub loss_log: LossLog,
-    /// Per-worker step/commit/byte/time accounting.
-    pub workers: Vec<WorkerMetrics>,
-    /// Cluster-average compute/comm/blocked breakdown (Fig. 1).
-    pub breakdown: Breakdown,
-    /// Total bytes moved over the network (up + down).
-    pub bytes_total: u64,
-    /// Real (host) seconds the simulation took.
-    pub wall_secs: f64,
-    /// Number of XLA executions issued.
-    pub xla_execs: u64,
-    /// Wall seconds spent inside XLA — `wall_secs − xla_secs` is the L3
-    /// coordinator overhead (perf-pass metric; target < 15% of wall).
-    pub xla_secs: f64,
-    /// True if every worker sat blocked across several consecutive evals
-    /// (policy deadlock — must never happen; asserted in tests).
-    pub deadlocked: bool,
-    /// Commits lost to failure injection (`spec.drop_commit_prob`).
-    pub dropped_commits: u64,
-    /// Local steps whose work was lost and must be recomputed: steps in
-    /// dropped/lost commits, uncommitted steps at a crash, and steps in
-    /// commits rolled back by a PS failover (fig16's headline metric).
-    pub wasted_steps: u64,
-    /// Applied commits rolled back by PS failovers (past the checkpoint).
-    pub lost_commits: u64,
-    /// Checkpoints taken by the `fault` policy.
-    pub checkpoints_taken: u64,
-    /// Virtual seconds the PS spent writing checkpoints (the explicit
-    /// checkpoint cost model; commits queue behind these writes).
-    pub checkpoint_overhead_secs: f64,
-}
-
-impl SimOutcome {
-    /// Convergence time: detector time, else the full run time.
-    pub fn convergence_time(&self) -> f64 {
-        self.converged_at.unwrap_or(self.end_time)
-    }
-
-    /// Bandwidth usage per virtual second (Fig. 10a).
-    pub fn bandwidth_bytes_per_sec(&self) -> f64 {
-        if self.end_time <= 0.0 {
-            0.0
-        } else {
-            self.bytes_total as f64 / self.end_time
-        }
-    }
-
-    /// Average per-step loss-decrease efficiency (Fig. 4d companion).
-    pub fn loss_drop_per_kstep(&self) -> f64 {
-        match (self.loss_log.first_loss(), self.loss_log.last_loss()) {
-            (Some(a), Some(b)) if self.total_steps > 0 => {
-                (a - b) / (self.total_steps as f64 / 1000.0)
-            }
-            _ => 0.0,
-        }
-    }
 }
 
 /// The deterministic discrete-event engine driving one experiment
@@ -581,7 +498,7 @@ impl SimEngine {
     /// The update physically reached the PS: admit it to the shared
     /// ingress pipe (in arrival order — events pop in time order) and
     /// apply it now, or once it clears a contended pipe.
-    fn on_commit_arrive(&mut self, w: usize) -> Result<()> {
+    fn on_commit_arrive(&mut self, w: usize, obs: &mut dyn RunObserver) -> Result<()> {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
         }
@@ -602,7 +519,7 @@ impl SimEngine {
             self.push_event(cleared, EventKind::CommitApply(w));
             return Ok(());
         }
-        self.on_commit_apply(w)
+        self.on_commit_apply(w, obs)
     }
 
     /// The worker left (or crashed) while its commit was in flight: the
@@ -615,7 +532,7 @@ impl SimEngine {
         Ok(())
     }
 
-    fn on_commit_apply(&mut self, w: usize) -> Result<()> {
+    fn on_commit_apply(&mut self, w: usize, obs: &mut dyn RunObserver) -> Result<()> {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
         }
@@ -680,11 +597,12 @@ impl SimEngine {
         self.steps_since_ckpt += std::mem::take(&mut self.workers[w].in_flight_steps);
         if let CheckpointPolicy::EveryCommits(n) = self.spec.fault.checkpoint {
             if self.commits_since_ckpt >= n {
-                self.do_checkpoint();
+                self.do_checkpoint(obs);
             }
         }
 
         self.with_view(|policy, view| policy.on_commit_applied(w, view));
+        obs.on_commit_applied(self.now, w, self.total_commits);
 
         // Fresh model snapshot rides back to the worker once every shard
         // has applied its slab (sharded apply occupancy + striped return
@@ -697,12 +615,13 @@ impl SimEngine {
         Ok(())
     }
 
-    fn do_eval(&mut self) -> Result<()> {
+    fn do_eval(&mut self, obs: &mut dyn RunObserver) -> Result<()> {
         let eb = self.runtime.manifest.eval.b;
         let (x, y) = self.eval_source.eval_batch(eb);
         let (loss, acc) = self.runtime.eval(&self.global, &x, &y)?;
         let (loss, acc) = (loss as f64, acc as f64);
         self.loss_log.push(self.now, self.total_steps, loss, acc);
+        obs.on_eval(self.now, self.total_steps, loss, acc);
         if self.initial_loss.is_none() {
             self.initial_loss = Some(loss);
         }
@@ -761,12 +680,15 @@ impl SimEngine {
     /// translate the delta into engine bookkeeping, and notify the policy
     /// (skipped entirely for no-op events so they leave runs
     /// bit-identical).
-    fn on_cluster_event(&mut self, i: usize) -> Result<()> {
+    fn on_cluster_event(&mut self, i: usize, obs: &mut dyn RunObserver) -> Result<()> {
         let ev = self.spec.timeline.events()[i].clone();
         let delta = self
             .cluster
             .apply_event(&ev)
             .with_context(|| format!("timeline event {i} at t={:.1}", ev.t()))?;
+        // Observers see every scripted event, no-ops included (they are
+        // read-only taps, so this cannot perturb the bit-identity pins).
+        obs.on_cluster_event(self.now, &ev);
         match delta {
             ClusterDelta::None => return Ok(()),
             ClusterDelta::Changed => {}
@@ -853,7 +775,7 @@ impl SimEngine {
     /// ingress pipe when `fault.remote_sink` is set. Either way the PS
     /// apply stage is busy until the write lands, so commits queue behind
     /// it (the overhead shorter intervals pay for losing less work).
-    fn do_checkpoint(&mut self) {
+    fn do_checkpoint(&mut self, obs: &mut dyn RunObserver) {
         let bytes = (4 * self.global.total_numel()) as u64;
         let done = if self.spec.fault.remote_sink {
             self.ingress.admit(self.now, bytes)
@@ -874,6 +796,7 @@ impl SimEngine {
         self.commits_since_ckpt = 0;
         self.steps_since_ckpt = 0;
         self.checkpoints_taken += 1;
+        obs.on_checkpoint(self.now, self.total_commits);
     }
 
     /// Restart bootstrap for a crashed worker — the join-snapshot path:
@@ -903,8 +826,15 @@ impl SimEngine {
         Ok(())
     }
 
-    /// Run to convergence or a cap.
-    pub fn run(mut self) -> Result<SimOutcome> {
+    /// Run to convergence or a cap with no observer attached.
+    pub fn run(self) -> Result<RunReport> {
+        self.run_observed(&mut NoopObserver)
+    }
+
+    /// Run to convergence or a cap, streaming progress into `obs`.
+    /// Observers are read-only taps: the numeric outputs are bit-identical
+    /// whatever observer is attached (pinned in `tests/integration.rs`).
+    pub fn run_observed(mut self, obs: &mut dyn RunObserver) -> Result<RunReport> {
         let wall_start = std::time::Instant::now();
         let mut in_use: Vec<usize> = self.progress.iter().map(|p| p.batch_size).collect();
         // Workers joining later train too — compile their variants up front.
@@ -952,10 +882,10 @@ impl SimEngine {
                     self.drive_worker(w)?;
                 }
                 EventKind::CommitArrive(w) => {
-                    self.on_commit_arrive(w)?;
+                    self.on_commit_arrive(w, obs)?;
                 }
                 EventKind::CommitApply(w) => {
-                    self.on_commit_apply(w)?;
+                    self.on_commit_apply(w, obs)?;
                 }
                 EventKind::Checkpoint => {
                     self.with_view(|policy, view| policy.on_checkpoint(view));
@@ -963,7 +893,7 @@ impl SimEngine {
                     self.push_event(next, EventKind::Checkpoint);
                 }
                 EventKind::Eval => {
-                    self.do_eval()?;
+                    self.do_eval(obs)?;
                     if let Some(path) = self.checkpoint_path.clone() {
                         if self.checkpoint_every > 0.0
                             && self.now - self.last_checkpoint_save >= self.checkpoint_every
@@ -983,7 +913,7 @@ impl SimEngine {
                     self.push_event(next, EventKind::EpochStart);
                 }
                 EventKind::Cluster(i) => {
-                    self.on_cluster_event(i)?;
+                    self.on_cluster_event(i, obs)?;
                 }
                 EventKind::BlackoutLift => {
                     // A later overlapping blackout may have extended the
@@ -1002,7 +932,7 @@ impl SimEngine {
                     }
                 }
                 EventKind::CkptSave => {
-                    self.do_checkpoint();
+                    self.do_checkpoint(obs);
                     if let CheckpointPolicy::IntervalSecs(dt) = self.spec.fault.checkpoint {
                         self.push_event(self.now + dt, EventKind::CkptSave);
                     }
@@ -1050,12 +980,13 @@ impl SimEngine {
         let final_accuracy =
             self.loss_log.samples.last().map(|s| s.accuracy).unwrap_or(f64::NAN);
 
-        Ok(SimOutcome {
+        Ok(RunReport {
             model: self.spec.model.clone(),
             sync: self.spec.sync.kind,
             sync_describe: self.policy.describe(),
             converged_at: self.converged_at,
             end_time: self.now,
+            wall_secs: wall_start.elapsed().as_secs_f64(),
             total_steps: self.total_steps,
             total_commits: self.total_commits,
             final_loss,
@@ -1065,15 +996,16 @@ impl SimEngine {
             workers,
             breakdown,
             bytes_total: self.bytes_total,
-            wall_secs: wall_start.elapsed().as_secs_f64(),
-            xla_execs: self.runtime.executions(),
-            xla_secs: self.runtime.execution_secs(),
-            deadlocked: self.deadlocked,
-            dropped_commits: self.dropped_commits,
             wasted_steps: self.wasted_steps,
             lost_commits: self.lost_commits,
             checkpoints_taken: self.checkpoints_taken,
             checkpoint_overhead_secs: self.checkpoint_secs,
+            engine: EngineStats::Sim {
+                xla_execs: self.runtime.executions(),
+                xla_secs: self.runtime.execution_secs(),
+                deadlocked: self.deadlocked,
+                dropped_commits: self.dropped_commits,
+            },
         })
     }
 }

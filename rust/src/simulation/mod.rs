@@ -11,12 +11,12 @@
 //! these quantities, so figure shapes are preserved while runs stay
 //! deterministic and fast.
 //!
-//! Running one simulation end to end (needs `make artifacts` for the
-//! model's AOT bundle, hence `no_run`):
+//! Running one simulation end to end through the unified run API (needs
+//! `make artifacts` for the model's AOT bundle, hence `no_run`):
 //!
 //! ```no_run
 //! use adsp::config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
-//! use adsp::simulation::SimEngine;
+//! use adsp::run::{Backend, Run};
 //! use adsp::sync::SyncModelKind;
 //!
 //! # fn main() -> anyhow::Result<()> {
@@ -34,11 +34,11 @@
 //! );
 //! spec.batch_size = 32;
 //! spec.max_virtual_secs = 600.0;
-//! let outcome = SimEngine::new(spec)?.run()?;
+//! let report = Run::from_spec(spec).backend(Backend::Sim).execute()?;
 //! println!(
 //!     "converged at {:.0}s (virtual) after {} commits",
-//!     outcome.convergence_time(),
-//!     outcome.total_commits,
+//!     report.convergence_time(),
+//!     report.total_commits,
 //! );
 //! # Ok(())
 //! # }
@@ -46,4 +46,4 @@
 
 pub mod engine;
 
-pub use engine::{SimEngine, SimOutcome};
+pub use engine::SimEngine;

@@ -109,7 +109,7 @@ impl AdacommPolicy {
 
     fn retune(&mut self, loss: f64) {
         let l0 = *self.l0.get_or_insert(loss);
-        let decreased = self.last_tuned_loss.map_or(true, |prev| loss < prev);
+        let decreased = self.last_tuned_loss.is_none_or(|prev| loss < prev);
         if decreased {
             let ratio = (loss / l0).max(0.0);
             self.tau = ((self.tau0 as f64) * ratio.sqrt()).ceil().max(1.0) as u64;

@@ -45,7 +45,13 @@ pub fn fit_inverse_curve(samples: &[(f64, f64)]) -> Option<InverseCurveFit> {
     let l_max = samples.iter().map(|&(_, l)| l).fold(f64::NEG_INFINITY, f64::max);
     if l_max - l_min < 1e-12 {
         // Perfectly flat: return the flat curve directly (a1=0 ⇒ reward 0).
-        return Some(InverseCurveFit { a1: 0.0, a2: 1.0, a3: l_min - 1.0, sse: 0.0, converged: true });
+        return Some(InverseCurveFit {
+            a1: 0.0,
+            a2: 1.0,
+            a3: l_min - 1.0,
+            sse: 0.0,
+            converged: true,
+        });
     }
 
     // Seed: a3 slightly below the observed minimum; 1/(l0 - a3) = a2.
@@ -61,7 +67,7 @@ pub fn fit_inverse_curve(samples: &[(f64, f64)]) -> Option<InverseCurveFit> {
         let a2 = 1.0 / l0 - 0.0_f64.max(t0);
         let seed = [0.05, a2.max(1e-6), a3];
         if let Some(fit) = gauss_newton(samples, seed) {
-            if best.map_or(true, |b| fit.sse < b.sse) {
+            if best.is_none_or(|b| fit.sse < b.sse) {
                 best = Some(fit);
             }
         }

@@ -38,6 +38,16 @@ impl Json {
         }
     }
 
+    /// Required numeric field that may legitimately be non-finite: the
+    /// serializer writes NaN/Inf as `null` (JSON has no such literals),
+    /// so `null` reads back as NaN here instead of erroring.
+    pub fn req_f64_or_nan(&self, key: &str) -> Result<f64> {
+        match self.req(key)? {
+            Json::Null => Ok(f64::NAN),
+            j => j.as_f64(),
+        }
+    }
+
     pub fn as_u64(&self) -> Result<u64> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {

@@ -8,9 +8,11 @@ use adsp::cluster::{scenarios, ClusterEvent, ClusterTimeline};
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::coordinator::RealtimeEngine;
 use adsp::data::make_source;
+use adsp::run::{Backend, Run, RunObserver, RunReport};
 use adsp::runtime::{artifacts_root, native, ModelRuntime};
 use adsp::simulation::SimEngine;
 use adsp::sync::SyncModelKind;
+use adsp::util::Json;
 
 fn have_artifacts(model: &str) -> bool {
     artifacts_root().join(model).join("manifest.json").is_file()
@@ -185,7 +187,7 @@ fn every_sync_model_trains_without_deadlock() {
     for kind in SyncModelKind::ALL {
         let spec = tiny_spec("mlp_quick", kind);
         let out = SimEngine::new(spec).unwrap().run().unwrap();
-        assert!(!out.deadlocked, "{kind} deadlocked");
+        assert!(!out.deadlocked(), "{kind} deadlocked");
         assert!(out.total_steps > 0, "{kind} trained no steps");
         assert!(out.total_commits > 0, "{kind} committed nothing");
         let first = out.loss_log.first_loss().unwrap();
@@ -363,7 +365,7 @@ fn every_sync_model_survives_churn_timeline() {
         let mut spec = tiny_spec("mlp_quick", kind);
         spec.timeline = scenarios::churn(&spec.cluster, 30.0, 60.0, 1);
         let out = SimEngine::new(spec).unwrap().run().unwrap();
-        assert!(!out.deadlocked, "{kind} deadlocked under churn");
+        assert!(!out.deadlocked(), "{kind} deadlocked under churn");
         assert!(out.total_steps > 0, "{kind} trained no steps");
         assert!(out.final_loss.is_finite(), "{kind} diverged");
         // One leaver + one joiner: the metrics vector grew by one slot.
@@ -394,7 +396,7 @@ fn mid_run_slowdown_shifts_load_not_correctness() {
     let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
     spec.timeline = scenarios::slowdown(&spec.cluster, 30.0, 4.0);
     let out = SimEngine::new(spec).unwrap().run().unwrap();
-    assert!(!out.deadlocked);
+    assert!(!out.deadlocked());
     assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training regressed");
 }
 
@@ -464,7 +466,7 @@ fn finite_links_slow_convergence_not_correctness() {
     let slow = SimEngine::new(starved).unwrap().run().unwrap();
     assert!(slow.total_steps > 0);
     assert!(slow.best_loss < slow.loss_log.first_loss().unwrap(), "training regressed");
-    let per_commit = |o: &adsp::simulation::SimOutcome| {
+    let per_commit = |o: &adsp::run::RunReport| {
         let comm: f64 = o.workers.iter().map(|w| w.comm_secs).sum();
         comm / o.total_commits.max(1) as f64
     };
@@ -489,12 +491,12 @@ fn blackout_defers_commits_and_training_recovers() {
             cell: None,
         }]);
         let out = SimEngine::new(spec.clone()).unwrap().run().unwrap();
-        assert!(!out.deadlocked, "{kind} deadlocked under blackout");
+        assert!(!out.deadlocked(), "{kind} deadlocked under blackout");
         assert!(out.total_commits > 0, "{kind} never committed");
         assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "{kind} regressed");
         // The blackout actually cost the affected workers comm time.
         let base = SimEngine::new(tiny_spec("mlp_quick", kind)).unwrap().run().unwrap();
-        let wait = |o: &adsp::simulation::SimOutcome| {
+        let wait = |o: &adsp::run::RunReport| {
             o.workers.iter().map(|w| w.comm_secs).sum::<f64>()
         };
         assert!(
@@ -520,7 +522,7 @@ fn ingress_cap_queues_concurrent_commits() {
         capped.network.ingress_discipline = discipline;
         let out = SimEngine::new(capped).unwrap().run().unwrap();
         assert!(out.total_commits > 0);
-        let per_commit = |o: &adsp::simulation::SimOutcome| {
+        let per_commit = |o: &adsp::run::RunReport| {
             o.workers.iter().map(|w| w.comm_secs).sum::<f64>()
                 / o.total_commits.max(1) as f64
         };
@@ -626,7 +628,7 @@ fn step_jitter_changes_timing_not_data() {
     let base = SimEngine::new(spec.clone()).unwrap().run().unwrap();
     spec.step_jitter = 0.3;
     let jit = SimEngine::new(spec).unwrap().run().unwrap();
-    assert!(!jit.deadlocked);
+    assert!(!jit.deadlocked());
     assert!(jit.total_steps > 0);
     // Jitter shifts the step timeline.
     assert_ne!(base.total_steps, 0);
@@ -641,7 +643,7 @@ fn dropped_commits_slow_but_dont_break_training() {
     spec.max_virtual_secs = 90.0;
     spec.drop_commit_prob = 0.3;
     let out = SimEngine::new(spec).unwrap().run().unwrap();
-    assert!(out.dropped_commits > 0, "fault injection never fired");
+    assert!(out.dropped_commits() > 0, "fault injection never fired");
     assert!(out.total_commits > 0, "some commits must survive");
     assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training must still progress");
 }
@@ -735,7 +737,7 @@ fn worker_crash_loses_work_then_recovers() {
             ClusterEvent::WorkerCrash { t: 75.0, worker: 0, restart_after: 20.0 },
         ]);
         let out = SimEngine::new(spec).unwrap().run().unwrap();
-        assert!(!out.deadlocked, "{kind} deadlocked across the crashes");
+        assert!(!out.deadlocked(), "{kind} deadlocked across the crashes");
         assert!(out.wasted_steps > 0, "{kind}: crashes wasted no work");
         assert!(out.total_commits > 0, "{kind}: cluster stopped committing");
         assert!(out.final_loss.is_finite(), "{kind} diverged");
@@ -765,7 +767,7 @@ fn shard_failure_rolls_back_to_checkpoint_and_recovers() {
     assert!(out.checkpoint_overhead_secs > 0.0, "checkpoint cost must be visible");
     assert!(out.lost_commits > 0, "failover lost nothing — commits were applied before it");
     assert!(out.wasted_steps > 0, "rolled-back commits must count as wasted work");
-    assert!(!out.deadlocked);
+    assert!(!out.deadlocked());
     assert!(out.final_loss.is_finite());
     assert!(out.best_loss < out.loss_log.first_loss().unwrap(), "training regressed");
 }
@@ -806,7 +808,7 @@ fn crash_storm_scenario_runs_for_every_compared_model() {
         spec.timeline =
             scenarios::preset("crash_storm", &spec.cluster, spec.max_virtual_secs).unwrap();
         let out = SimEngine::new(spec).unwrap().run().unwrap();
-        assert!(!out.deadlocked, "{kind} deadlocked in crash_storm");
+        assert!(!out.deadlocked(), "{kind} deadlocked in crash_storm");
         assert!(out.wasted_steps > 0, "{kind}: storm wasted no work");
         assert!(out.total_steps > 0 && out.final_loss.is_finite());
     }
@@ -880,4 +882,233 @@ fn checkpoint_save_and_resume() {
         resumed_start < init_loss * 0.8,
         "resume should start from trained params: {resumed_start} vs init {init_loss}"
     );
+}
+
+// ---------------------------------------------------------------------------
+// unified run API: builder bit-identity, observer streaming, sim/realtime
+// report parity
+// ---------------------------------------------------------------------------
+
+/// Observer that counts every callback — used both to verify streaming and
+/// to prove an attached observer changes nothing.
+#[derive(Default)]
+struct CountingObserver {
+    evals: usize,
+    commits_applied: u64,
+    last_commit_count: u64,
+    cluster_events: usize,
+    checkpoints: u64,
+}
+
+impl RunObserver for CountingObserver {
+    fn on_eval(&mut self, _t: f64, _steps: u64, _loss: f64, _acc: f64) {
+        self.evals += 1;
+    }
+    fn on_commit_applied(&mut self, _t: f64, _worker: usize, total_commits: u64) {
+        self.commits_applied += 1;
+        self.last_commit_count = total_commits;
+    }
+    fn on_cluster_event(&mut self, _t: f64, _event: &ClusterEvent) {
+        self.cluster_events += 1;
+    }
+    fn on_checkpoint(&mut self, _t: f64, _version: u64) {
+        self.checkpoints += 1;
+    }
+}
+
+/// Bit-level equality of everything the simulator computes (the acceptance
+/// pin for the run-API migration: the builder path and an attached observer
+/// must not perturb a single bit of the report).
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.total_steps, b.total_steps, "{tag}: steps diverged");
+    assert_eq!(a.total_commits, b.total_commits, "{tag}: commits diverged");
+    assert_eq!(a.bytes_total, b.bytes_total, "{tag}: bytes diverged");
+    assert_eq!(a.end_time.to_bits(), b.end_time.to_bits(), "{tag}: end time diverged");
+    assert_eq!(
+        a.converged_at.map(f64::to_bits),
+        b.converged_at.map(f64::to_bits),
+        "{tag}: convergence time diverged"
+    );
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}: final loss");
+    assert_eq!(a.best_loss.to_bits(), b.best_loss.to_bits(), "{tag}: best loss");
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: final accuracy"
+    );
+    assert_eq!(a.wasted_steps, b.wasted_steps, "{tag}: wasted steps");
+    assert_eq!(a.lost_commits, b.lost_commits, "{tag}: lost commits");
+    assert_eq!(a.checkpoints_taken, b.checkpoints_taken, "{tag}: checkpoints");
+    assert_eq!(
+        a.checkpoint_overhead_secs.to_bits(),
+        b.checkpoint_overhead_secs.to_bits(),
+        "{tag}: checkpoint overhead"
+    );
+    assert_eq!(a.loss_log.samples.len(), b.loss_log.samples.len(), "{tag}: eval count");
+    for (x, y) in a.loss_log.samples.iter().zip(&b.loss_log.samples) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{tag}: eval time diverged");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{tag}: loss log diverged");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{tag}: accuracy log");
+        assert_eq!(x.total_steps, y.total_steps, "{tag}: step log diverged");
+    }
+    assert_eq!(a.workers.len(), b.workers.len(), "{tag}: worker count");
+    for (x, y) in a.workers.iter().zip(&b.workers) {
+        assert_eq!(x.steps, y.steps, "{tag}: worker steps");
+        assert_eq!(x.commits, y.commits, "{tag}: worker commits");
+        assert_eq!(x.bytes_up, y.bytes_up, "{tag}: worker bytes up");
+        assert_eq!(x.bytes_down, y.bytes_down, "{tag}: worker bytes down");
+        assert_eq!(x.compute_secs.to_bits(), y.compute_secs.to_bits(), "{tag}: compute");
+        assert_eq!(x.comm_secs.to_bits(), y.comm_secs.to_bits(), "{tag}: comm");
+        assert_eq!(x.blocked_secs.to_bits(), y.blocked_secs.to_bits(), "{tag}: blocked");
+    }
+    assert_eq!(a.sync, b.sync, "{tag}: sync kind");
+    assert_eq!(a.sync_describe, b.sync_describe, "{tag}: sync describe");
+}
+
+#[test]
+fn builder_sim_reports_bit_identical_to_direct_engine_for_all_policies() {
+    // The acceptance pin: for every sync policy, Backend::Sim through the
+    // Run builder reports bit-identically to the engine the pre-refactor
+    // run_sim path constructed directly — and attaching an observer (a
+    // read-only tap) changes nothing either, while its stream counts match
+    // the report's own counters.
+    require_artifacts!("mlp_quick");
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let direct = SimEngine::new(spec.clone()).unwrap().run().unwrap();
+        let built = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+        assert_reports_bit_identical(&direct, &built, kind.name());
+        assert_eq!(built.backend_name(), "sim");
+
+        let mut counter = CountingObserver::default();
+        let observed =
+            Run::from_spec(spec).observer(&mut counter).execute().unwrap();
+        assert_reports_bit_identical(&direct, &observed, kind.name());
+        assert_eq!(
+            counter.evals,
+            observed.loss_log.samples.len(),
+            "{kind}: observer missed evals"
+        );
+        assert_eq!(
+            counter.commits_applied, observed.total_commits,
+            "{kind}: observer missed commits"
+        );
+        assert_eq!(
+            counter.last_commit_count, observed.total_commits,
+            "{kind}: commit counter stream inconsistent"
+        );
+        assert_eq!(counter.cluster_events, 0, "{kind}: phantom cluster events");
+    }
+}
+
+#[test]
+fn observer_streams_cluster_events_and_checkpoints() {
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.convergence_window = 10_000; // run to the horizon
+    spec.timeline = ClusterTimeline::new(vec![
+        ClusterEvent::SpeedChange { t: 30.0, worker: 0, speed: 0.5 },
+        ClusterEvent::WorkerCrash { t: 60.0, worker: 2, restart_after: 15.0 },
+    ]);
+    spec.fault.checkpoint = adsp::fault::CheckpointPolicy::IntervalSecs(25.0);
+    let mut counter = CountingObserver::default();
+    let report = Run::from_spec(spec).observer(&mut counter).execute().unwrap();
+    assert_eq!(counter.cluster_events, 2, "both timeline events must stream");
+    assert_eq!(
+        counter.checkpoints, report.checkpoints_taken,
+        "checkpoint stream must match the report counter"
+    );
+    assert!(counter.checkpoints >= 2, "interval checkpoints never streamed");
+    assert_eq!(counter.evals, report.loss_log.samples.len());
+}
+
+#[test]
+fn sim_and_realtime_reports_populate_the_same_field_set() {
+    // Field-parity acceptance: the same spec through both backends yields
+    // reports with the identical JSON schema, and the realtime report has
+    // no permanently-empty fields (best_loss, accuracy, describe, bytes —
+    // the gaps the old RealtimeOutcome left).
+    require_artifacts!("mlp_quick");
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 1200;
+    spec.eval_interval_secs = 10.0;
+    let sim = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+    let rt = Run::from_spec(spec)
+        .backend(Backend::Realtime { time_scale: 0.01 })
+        .execute()
+        .unwrap();
+
+    let keys = |r: &RunReport| -> Vec<String> {
+        match r.to_json() {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => panic!("report JSON must be an object"),
+        }
+    };
+    assert_eq!(keys(&sim), keys(&rt), "sim and realtime schemas diverged");
+
+    assert_eq!(rt.backend_name(), "realtime");
+    assert_eq!(rt.sync, SyncModelKind::Adsp);
+    assert!(!rt.sync_describe.is_empty(), "realtime dropped sync_describe");
+    assert!(rt.best_loss.is_finite(), "realtime dropped best_loss");
+    assert!(rt.final_accuracy.is_finite(), "realtime dropped final accuracy");
+    assert!(rt.bytes_total > 0, "realtime dropped byte accounting");
+    assert!(rt.wall_secs > 0.0 && rt.end_time > 0.0);
+    assert!(!rt.workers.is_empty());
+    assert!(rt.wall_secs < 30.0, "realtime parity run took too long: {}", rt.wall_secs);
+}
+
+#[test]
+fn realtime_report_tracks_fault_counters() {
+    // Parity fix pin: the realtime engine must populate the fault counters
+    // the old outcome type dropped — checkpoints taken (with a measured
+    // overhead) and, across a crash + shard failure, lost work.
+    require_artifacts!("mlp_quick");
+    use adsp::fault::CheckpointPolicy;
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 150.0;
+    spec.max_total_steps = 2000;
+    spec.eval_interval_secs = 10.0;
+    spec.fault.checkpoint = CheckpointPolicy::IntervalSecs(20.0);
+    spec.timeline = ClusterTimeline::new(vec![
+        ClusterEvent::WorkerCrash { t: 40.0, worker: 2, restart_after: 20.0 },
+        ClusterEvent::ShardFailure { t: 90.0, shard: 0, recover_after: 10.0 },
+    ]);
+    let report = Run::from_spec(spec)
+        .backend(Backend::Realtime { time_scale: 0.01 })
+        .execute()
+        .unwrap();
+    assert!(report.checkpoints_taken >= 1, "interval checkpoints never counted");
+    assert!(
+        report.checkpoint_overhead_secs > 0.0,
+        "checkpoint cost must be measured"
+    );
+    // The crash loses uncommitted steps and the failover rolls back
+    // commits; thread timing makes the exact split nondeterministic, but
+    // the run as a whole must have lost *something*.
+    assert!(
+        report.wasted_steps + report.lost_commits > 0,
+        "crash + shard failure lost no work"
+    );
+    assert!(report.total_commits > 0 && report.final_loss.is_finite());
+    assert!(report.wall_secs < 30.0, "realtime fault run took too long");
+}
+
+#[test]
+fn run_report_json_dump_round_trips_through_files() {
+    // The `--out report.json` path: dump a real sim report, parse it back,
+    // and the JSON forms match exactly.
+    require_artifacts!("mlp_quick");
+    let report = Run::from_spec(tiny_spec("mlp_quick", SyncModelKind::Tap))
+        .execute()
+        .unwrap();
+    let dir = std::env::temp_dir().join("adsp_report_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("report.json");
+    std::fs::write(&path, report.to_json().dump_pretty()).unwrap();
+    let back = RunReport::from_json_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(back.to_json(), report.to_json(), "report JSON round trip drifted");
+    assert_eq!(back.backend_name(), "sim");
+    assert_eq!(back.total_steps, report.total_steps);
+    assert_eq!(back.loss_log.samples.len(), report.loss_log.samples.len());
 }

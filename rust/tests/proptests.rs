@@ -1112,7 +1112,11 @@ fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
             ExperimentSpec::new("mlp_quick", cluster, SyncSpec::new(SyncModelKind::Adsp));
         spec.network = NetworkSpec {
             default_link: LinkModel {
-                bandwidth_bytes_per_sec: if r.below(3) == 0 { 0.0 } else { 1e4 + 1e7 * r.next_f64() },
+                bandwidth_bytes_per_sec: if r.below(3) == 0 {
+                    0.0
+                } else {
+                    1e4 + 1e7 * r.next_f64()
+                },
                 latency_secs: 0.25 * r.next_f64(),
                 jitter: if r.below(2) == 0 { 0.0 } else { 0.5 * r.next_f64() },
             },
@@ -1157,5 +1161,132 @@ fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
             .unwrap_or_else(|e| panic!("case {case}: {e}"));
         assert_eq!(back.network, spec.network, "case {case}: network section drifted");
         assert_eq!(back.timeline, spec.timeline, "case {case}: blackout timeline drifted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// run report: randomized JSON round-trip
+// ---------------------------------------------------------------------------
+
+use adsp::metrics::{Breakdown, LossLog, WorkerMetrics};
+use adsp::run::{EngineStats, RunReport};
+
+/// A random, finite-valued report covering both engine variants, empty and
+/// populated logs, converged and capped runs.
+fn random_report(r: &mut Rng) -> RunReport {
+    let signed = |r: &mut Rng, scale: f64| (r.next_f64() - 0.5) * 2.0 * scale;
+    let m = r.below(5);
+    let workers: Vec<WorkerMetrics> = (0..m)
+        .map(|_| WorkerMetrics {
+            compute_secs: r.next_f64() * 500.0,
+            comm_secs: r.next_f64() * 50.0,
+            blocked_secs: r.next_f64() * 50.0,
+            steps: r.next_u64() >> 14, // < 2^50: exact as a JSON number
+            commits: r.next_u64() >> 14,
+            bytes_up: r.next_u64() >> 14,
+            bytes_down: r.next_u64() >> 14,
+        })
+        .collect();
+    let mut loss_log = LossLog::default();
+    for i in 0..r.below(12) {
+        loss_log.push(
+            i as f64 * (1.0 + r.next_f64()),
+            (i as u64) * 17,
+            signed(r, 10.0),
+            r.next_f64(),
+        );
+    }
+    let kind = SyncModelKind::ALL[r.below(SyncModelKind::ALL.len())];
+    let engine = if r.below(2) == 0 {
+        EngineStats::Sim {
+            xla_execs: r.next_u64() >> 14,
+            xla_secs: r.next_f64() * 100.0,
+            deadlocked: r.below(2) == 0,
+            dropped_commits: r.next_u64() >> 40,
+        }
+    } else {
+        EngineStats::Realtime { time_scale: 0.001 + r.next_f64() }
+    };
+    RunReport {
+        model: format!("model_{}", r.below(100)),
+        sync: kind,
+        sync_describe: format!("{} C_target={}", kind.name(), r.below(32)),
+        converged_at: if r.below(2) == 0 { Some(r.next_f64() * 3600.0) } else { None },
+        end_time: r.next_f64() * 3600.0,
+        wall_secs: r.next_f64() * 100.0,
+        total_steps: r.next_u64() >> 14,
+        total_commits: r.next_u64() >> 14,
+        final_loss: signed(r, 10.0),
+        best_loss: signed(r, 10.0),
+        final_accuracy: r.next_f64(),
+        loss_log,
+        workers,
+        breakdown: Breakdown {
+            avg_compute_secs: r.next_f64() * 500.0,
+            avg_waiting_secs: r.next_f64() * 100.0,
+            avg_comm_secs: r.next_f64() * 50.0,
+            avg_blocked_secs: r.next_f64() * 50.0,
+        },
+        bytes_total: r.next_u64() >> 14,
+        wasted_steps: r.next_u64() >> 40,
+        lost_commits: r.next_u64() >> 40,
+        checkpoints_taken: r.next_u64() >> 40,
+        checkpoint_overhead_secs: r.next_f64() * 60.0,
+        engine,
+    }
+}
+
+#[test]
+fn run_report_json_roundtrip_is_lossless() {
+    // Rust's f64 Display prints the shortest representation that parses
+    // back to the same bits, so dump → parse must be bit-lossless for
+    // every finite field, and structurally exact for everything else.
+    let mut rng = Rng::new(0x5EED_4E50); // "REPO(rt)" seed
+    for case in 0..300 {
+        let report = random_report(&mut rng);
+        let text = if case % 2 == 0 {
+            report.to_json().dump_pretty()
+        } else {
+            report.to_json().dump()
+        };
+        let back = RunReport::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e}"));
+        assert_eq!(
+            back.to_json(),
+            report.to_json(),
+            "case {case}: JSON round trip drifted"
+        );
+        assert_eq!(back.sync, report.sync, "case {case}");
+        assert_eq!(back.engine, report.engine, "case {case}: engine stats drifted");
+        assert_eq!(
+            back.end_time.to_bits(),
+            report.end_time.to_bits(),
+            "case {case}: end_time bits"
+        );
+        assert_eq!(
+            back.final_loss.to_bits(),
+            report.final_loss.to_bits(),
+            "case {case}: final_loss bits"
+        );
+        assert_eq!(
+            back.converged_at.map(f64::to_bits),
+            report.converged_at.map(f64::to_bits),
+            "case {case}: converged_at"
+        );
+        assert_eq!(back.workers.len(), report.workers.len(), "case {case}");
+        for (a, b) in back.workers.iter().zip(&report.workers) {
+            assert_eq!(a.compute_secs.to_bits(), b.compute_secs.to_bits(), "case {case}");
+            assert_eq!(a.steps, b.steps, "case {case}");
+            assert_eq!(a.bytes_up, b.bytes_up, "case {case}");
+        }
+        assert_eq!(
+            back.loss_log.samples.len(),
+            report.loss_log.samples.len(),
+            "case {case}"
+        );
+        for (a, b) in back.loss_log.samples.iter().zip(&report.loss_log.samples) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "case {case}: loss bits");
+            assert_eq!(a.t.to_bits(), b.t.to_bits(), "case {case}: t bits");
+        }
     }
 }

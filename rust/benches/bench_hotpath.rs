@@ -1,0 +1,101 @@
+//! Hot-path micro-benches behind the CI bench-regression gate.
+//!
+//! Artifact-free on purpose (no AOT models, no PJRT): every workload here
+//! is pure in-process Rust, so the bench runs on any checkout — including
+//! CI — and its `BENCH_hotpath.json` dump (set `ADSP_BENCH_JSON_DIR`) is
+//! diffed against the committed baseline in `benches/baselines/` by
+//! `tools/check_bench_regression.py`. Covered paths:
+//!
+//! * sharded-PS pipelined commit apply (the realtime engine's PS side),
+//! * the native dense commit-apply kernel (the simulator's PS arithmetic),
+//! * top-k sparsification (the compressed-commit wire path),
+//! * the observability registry and trace recorder (the tap hot loop —
+//!   regression here silently taxes every observed run).
+
+use adsp::obs::{MetricsRegistry, TraceRecorder};
+use adsp::pserver::ShardedParameterServer;
+use adsp::runtime::{native, ParamSet};
+use adsp::util::{BenchHarness, Json};
+
+/// Deterministic pseudo-weights (no RNG needed; values just need spread).
+fn wavy(lens: &[usize], phase: f32) -> ParamSet {
+    let mut i = 0.0f32;
+    ParamSet {
+        leaves: lens
+            .iter()
+            .map(|&n| {
+                (0..n)
+                    .map(|_| {
+                        i += 1.0;
+                        (i * phase).sin() * 0.01
+                    })
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let h = BenchHarness::new("hotpath").with_iters(2, 10);
+
+    // ---- sharded PS: pipelined commit apply + snapshot barrier ----
+    let ps_lens: Vec<usize> = vec![262_144, 131_072, 16_384, 1_024, 64];
+    let ps_init = wavy(&ps_lens, 0.37);
+    let ps_u = wavy(&ps_lens, 0.11);
+    const COMMITS: u64 = 16;
+    let mut ps = ShardedParameterServer::new(ps_init, 1e-3, 0.9, 2, 4);
+    h.run_throughput("sharded_ps_apply_s2", COMMITS, || {
+        for _ in 0..COMMITS {
+            ps.apply(&ps_u);
+        }
+        // Barrier: the snapshot drains every shard's pipeline.
+        ps.snapshot().num_leaves()
+    });
+
+    // ---- native dense apply: the simulator's PS arithmetic ----
+    let dense_lens: Vec<usize> = vec![786_432, 262_144, 4_096, 512];
+    let total: u64 = dense_lens.iter().map(|&n| n as u64).sum();
+    let mut w = wavy(&dense_lens, 0.29);
+    let u = wavy(&dense_lens, 0.13);
+    h.run_throughput("native_apply_commit_1m", total, || {
+        native::apply_commit(&mut w, &u, 1e-3);
+        w.num_leaves()
+    });
+
+    // ---- top-k sparsification: the compressed-commit wire path ----
+    let topk_lens: Vec<usize> = vec![262_144];
+    let topk_src = wavy(&topk_lens, 0.19);
+    h.run_throughput("topk_sparsify_256k_1pct", 262_144, || {
+        let mut v = topk_src.clone();
+        native::topk_sparsify(&mut v, 0.01)
+    });
+
+    // ---- observability registry: the tap hot loop ----
+    const OPS: u64 = 10_000;
+    h.run_throughput("metrics_registry_10k_ops", OPS, || {
+        let mut reg = MetricsRegistry::new();
+        for i in 0..OPS {
+            reg.inc("sim/events/commit_arrive");
+            reg.set_gauge("sim/event_queue_depth", i as f64);
+            reg.observe("sim/ps_apply_turnaround_secs", (i % 97) as f64 * 1e-4);
+        }
+        reg.counter("sim/events/commit_arrive")
+    });
+
+    // ---- trace recorder: bounded ring at capacity ----
+    const EVENTS: u64 = 10_000;
+    h.run_throughput("trace_record_10k_events", EVENTS, || {
+        let mut tr = TraceRecorder::new(4096);
+        for i in 0..EVENTS {
+            let t = i as f64 * 0.5;
+            let data = vec![("worker", Json::Num((i % 8) as f64))];
+            tr.record(t, t * 0.02, "commit", data);
+        }
+        tr.len()
+    });
+
+    if let Some(path) = h.write_json()? {
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}

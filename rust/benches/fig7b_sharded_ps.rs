@@ -69,7 +69,7 @@ fn main() {
 
     // Serial baseline: the old single-threaded apply loop.
     let mut ps0 = ParameterServer::new(init.clone(), eta, mu);
-    let stats = h.run("serial_ps_24_commits", || {
+    let stats = h.run_throughput("serial_ps_24_commits", COMMITS as u64, || {
         for _ in 0..COMMITS {
             ps0.apply(&u);
         }
@@ -82,7 +82,8 @@ fn main() {
 
     for s in [1usize, 2, 4, 8] {
         let mut ps = ShardedParameterServer::new(init.clone(), eta, mu, s, 4);
-        let stats = h.run(&format!("sharded_apply_24_commits_s{s}"), || {
+        let name = format!("sharded_apply_24_commits_s{s}");
+        let stats = h.run_throughput(&name, COMMITS as u64, || {
             for _ in 0..COMMITS {
                 ps.apply(&u);
             }
@@ -101,4 +102,9 @@ fn main() {
     // No hard monotonic-speedup assert: CI hosts may be single-core. On
     // multi-core hardware the throughput column rises with S (tentpole
     // acceptance criterion) — eyeball or plot the CSV line above.
+
+    // Machine-readable trajectory (no-op unless ADSP_BENCH_JSON_DIR set).
+    if let Ok(Some(path)) = h.write_json() {
+        println!("wrote {path:?}");
+    }
 }

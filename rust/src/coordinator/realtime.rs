@@ -49,10 +49,12 @@ use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, WorkerMetrics};
+use crate::obs::ObsHub;
 use crate::pserver::ShardedParameterServer;
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
+use crate::util::Json;
 
 /// A worker→PS message: the accumulated update plus a reply channel for the
 /// fresh global model.
@@ -80,6 +82,12 @@ pub struct RealtimeEngine {
     spec: ExperimentSpec,
     /// Wall seconds per virtual second.
     pub time_scale: f64,
+    /// Observability hub, if attached: metric taps fire from the
+    /// scheduler thread, the PS shard threads (apply latency / FIFO
+    /// depth) and the worker threads (commit RTT, blackout holds);
+    /// trace events come from the scheduler thread only so the stream
+    /// stays time-ordered without cross-thread coordination.
+    obs: Option<ObsHub>,
 }
 
 struct Shared {
@@ -100,6 +108,9 @@ struct Shared {
     /// order where both are held: `cluster` before `progress`.
     cluster: Mutex<ClusterState>,
     k_variants: Vec<usize>,
+    /// Observability hub clone for the worker threads (commit round-trip
+    /// latency, blackout hold time). `None` → every tap is a no-op.
+    obs: Option<ObsHub>,
 }
 
 impl Shared {
@@ -124,7 +135,15 @@ impl Shared {
 
 impl RealtimeEngine {
     pub fn new(spec: ExperimentSpec, time_scale: f64) -> Self {
-        RealtimeEngine { spec, time_scale }
+        RealtimeEngine { spec, time_scale, obs: None }
+    }
+
+    /// Attach an observability hub ([`ObsHub`]): counters, histograms and
+    /// trace events flow into the hub as the run executes, and the final
+    /// [`RunReport`] carries a metrics snapshot. Without a hub every tap
+    /// is a no-op.
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        self.obs = Some(hub);
     }
 
     /// Run to convergence or a cap with no observer attached.
@@ -144,6 +163,7 @@ impl RealtimeEngine {
             bail!("time_scale must be positive and finite, got {}", self.time_scale);
         }
         let scale = self.time_scale;
+        let hub = self.obs.clone();
         let m = spec.cluster.m();
 
         // Probe the manifest once on the main thread for batch variants.
@@ -181,6 +201,7 @@ impl RealtimeEngine {
             initial_loss: Mutex::new(None),
             cluster: Mutex::new(cluster_state),
             k_variants,
+            obs: hub.clone(),
         });
 
         let (commit_tx, commit_rx) = mpsc::channel::<CommitMsg>();
@@ -224,12 +245,21 @@ impl RealtimeEngine {
             shared.barrier.wait();
             let start = Instant::now();
             shared.start.set(start).expect("start set twice");
-            let mut ps = ShardedParameterServer::new(
+            if let Some(h) = &hub {
+                let data = vec![
+                    ("model", Json::Str(spec.model.clone())),
+                    ("sync", Json::Str(spec.sync.kind.name().to_string())),
+                    ("backend", Json::Str("realtime".to_string())),
+                ];
+                h.event(0.0, "run_start", data);
+            }
+            let mut ps = ShardedParameterServer::new_observed(
                 init,
                 spec.eta(),
                 spec.sync.ps_momentum as f32,
                 spec.shards,
                 spec.pipeline_depth,
+                hub.clone(),
             );
             let mut eval_source = make_source(&rt.manifest, spec.seed, 0);
             let mut detector = ConvergenceDetector::new(
@@ -304,6 +334,11 @@ impl RealtimeEngine {
                     // Observers see every scripted event, no-ops included
                     // (read-only tap — cannot perturb the run).
                     obs.on_cluster_event(now_v, ev);
+                    if let Some(h) = &hub {
+                        h.inc("cluster/events");
+                        let data = vec![("event", ev.to_json())];
+                        h.event(now_v, "cluster", data);
+                    }
                     match delta {
                         ClusterDelta::None => continue,
                         ClusterDelta::Changed => {}
@@ -369,6 +404,9 @@ impl RealtimeEngine {
                             }
                             crash_gen[wc] += 1;
                             pending_restarts.push((until, wc));
+                            if let Some(h) = &hub {
+                                h.inc("fault/worker_crashes");
+                            }
                         }
                         ClusterDelta::ShardDown { shard: _, until } => {
                             // Failover: restore every shard to the last
@@ -378,10 +416,18 @@ impl RealtimeEngine {
                             // are lost, and the local steps they carried
                             // are wasted work — the fig16 counters.
                             if let Some(c) = ckpt_store.latest() {
+                                if let Some(h) = &hub {
+                                    let rolled = ps.version().saturating_sub(c.version);
+                                    h.add("fault/failover_lost_commits", rolled);
+                                    h.add("fault/failover_wasted_steps", steps_since_ckpt);
+                                }
                                 lost_commits += ps.version().saturating_sub(c.version);
                                 wasted_steps += steps_since_ckpt;
                                 steps_since_ckpt = 0;
                                 ps.restore(c);
+                            }
+                            if let Some(h) = &hub {
+                                h.inc("fault/ps_failovers");
                             }
                             ps_down_until = ps_down_until.max(until);
                             ps_recover_pending = true;
@@ -406,6 +452,9 @@ impl RealtimeEngine {
                             .any(|(&until, &active)| active && until > now_v)
                     };
                     if !still_dark {
+                        if let Some(h) = &hub {
+                            h.event(now_v, "blackout_lift", vec![]);
+                        }
                         shared.with_view(now_v, |p, v| p.on_cluster_change(v));
                     }
                 }
@@ -450,6 +499,11 @@ impl RealtimeEngine {
                                 eprintln!("restarted worker {wr} failed: {e:#}");
                             }
                         });
+                        if let Some(h) = &hub {
+                            h.inc("fault/worker_restarts");
+                            let data = vec![("worker", Json::Num(wr as f64))];
+                            h.event(now_v, "worker_restart", data);
+                        }
                         shared.with_view(now_v, |p, v| p.on_cluster_change(v));
                     }
                 }
@@ -458,6 +512,10 @@ impl RealtimeEngine {
                 // the recovery window closes (mirrors the blackout lift).
                 if ps_recover_pending && now_v >= ps_down_until {
                     ps_recover_pending = false;
+                    if let Some(h) = &hub {
+                        h.inc("fault/ps_recoveries");
+                        h.event(now_v, "ps_recover", vec![]);
+                    }
                     shared.with_view(now_v, |p, v| p.on_cluster_change(v));
                 }
 
@@ -470,6 +528,11 @@ impl RealtimeEngine {
                     *shared.last_eval.lock().unwrap() = Some((now_v, loss));
                     shared.with_view(now_v, |p, _| p.on_eval(now_v, loss));
                     obs.on_eval(now_v, steps, loss, acc);
+                    if let Some(h) = &hub {
+                        h.inc("realtime/evals");
+                        let data = vec![("loss", Json::Num(loss)), ("acc", Json::Num(acc))];
+                        h.event(now_v, "eval", data);
+                    }
                     if converged_at.is_none() && detector.push(loss) {
                         converged_at = Some(now_v);
                         break;
@@ -501,6 +564,7 @@ impl RealtimeEngine {
                             &mut checkpoints_taken,
                             &mut steps_since_ckpt,
                             obs,
+                            hub.as_ref(),
                         );
                         next_ckpt_save += dt;
                     }
@@ -551,6 +615,9 @@ impl RealtimeEngine {
                                     kept.push(m);
                                 } else {
                                     wasted_steps += m.steps;
+                                    if let Some(h) = &hub {
+                                        h.inc("fault/dropped_commits");
+                                    }
                                 }
                             }
                             kept
@@ -575,6 +642,13 @@ impl RealtimeEngine {
                                 metrics[msg.worker].bytes_down += bytes_per_commit;
                             }
                         }
+                        if let Some(h) = &hub {
+                            for msg in &batch {
+                                h.add("net/bytes_up", msg.up_bytes);
+                                h.add("net/bytes_down", bytes_per_commit);
+                            }
+                            h.add("realtime/commits_applied", batch.len() as u64);
+                        }
                         // Stream the per-commit cumulative count, as the
                         // simulator does (the batch was applied above, so
                         // count back from the post-batch total).
@@ -582,6 +656,14 @@ impl RealtimeEngine {
                         for (i, msg) in batch.into_iter().enumerate() {
                             shared.with_view(now_v, |p, v| p.on_commit_applied(msg.worker, v));
                             obs.on_commit_applied(now_v, msg.worker, commits_before + i as u64 + 1);
+                            if let Some(h) = &hub {
+                                let total = commits_before + i as u64 + 1;
+                                let data = vec![
+                                    ("worker", Json::Num(msg.worker as f64)),
+                                    ("total", Json::Num(total as f64)),
+                                ];
+                                h.event(now_v, "commit", data);
+                            }
                             let _ = msg.reply.send(fresh.clone());
                         }
                         if let CheckpointPolicy::EveryCommits(n) = spec.fault.checkpoint {
@@ -598,6 +680,7 @@ impl RealtimeEngine {
                                     &mut checkpoints_taken,
                                     &mut steps_since_ckpt,
                                     obs,
+                                    hub.as_ref(),
                                 );
                             }
                         }
@@ -627,6 +710,16 @@ impl RealtimeEngine {
             let bytes_total = workers.iter().map(|w| w.bytes_up + w.bytes_down).sum();
             let sync_describe = shared.policy.lock().unwrap().describe();
             let loss_log = std::mem::take(&mut ps.loss_log);
+            if let Some(h) = &hub {
+                h.gauge("wall/realtime/run_secs", start.elapsed().as_secs_f64());
+                let steps = shared.total_steps.load(Ordering::Relaxed);
+                let data = vec![
+                    ("end_time", Json::Num(end_virtual)),
+                    ("commits", Json::Num(total_commits as f64)),
+                    ("steps", Json::Num(steps as f64)),
+                ];
+                h.event(end_virtual, "run_end", data);
+            }
             Ok(RunReport {
                 model: spec.model.clone(),
                 sync: spec.sync.kind,
@@ -651,6 +744,7 @@ impl RealtimeEngine {
                 lost_commits,
                 checkpoints_taken,
                 checkpoint_overhead_secs: checkpoint_secs,
+                metrics: hub.as_ref().and_then(|h| h.snapshot_metrics()),
                 engine: EngineStats::Realtime { time_scale: scale },
             })
         })?;
@@ -680,14 +774,22 @@ fn take_checkpoint(
     checkpoints_taken: &mut u64,
     steps_since_ckpt: &mut u64,
     obs: &mut dyn RunObserver,
+    hub: Option<&ObsHub>,
 ) {
     let t0 = Instant::now();
     let cut = ps.checkpoint();
     ckpt_store.save(cut);
-    *checkpoint_secs += t0.elapsed().as_secs_f64() / scale;
+    let spent = t0.elapsed().as_secs_f64() / scale;
+    *checkpoint_secs += spent;
     *checkpoints_taken += 1;
     *steps_since_ckpt = 0;
     obs.on_checkpoint(now_v, report_version);
+    if let Some(h) = hub {
+        h.inc("fault/checkpoints");
+        h.observe("fault/ckpt_save_secs", spent);
+        let data = vec![("version", Json::Num(report_version as f64))];
+        h.event(now_v, "checkpoint", data);
+    }
 }
 
 fn worker_loop(
@@ -805,6 +907,10 @@ fn worker_loop(
                 let now_v = start.elapsed().as_secs_f64() / scale;
                 let blackout_wait = (blackout_until - now_v).max(0.0);
                 if blackout_wait > 0.0 {
+                    if let Some(h) = &shared.obs {
+                        h.inc("net/blackout_holds");
+                        h.observe("realtime/blackout_hold_secs", blackout_wait);
+                    }
                     sleep_interruptible(blackout_wait * scale, &shared.stop);
                 }
                 // Push leg: propagation + link serialization of the wire
@@ -820,11 +926,18 @@ fn worker_loop(
                     generation,
                     reply: reply_tx,
                 };
+                let rtt_t0 = Instant::now();
                 if commit_tx.send(msg).is_err() {
                     break;
                 }
                 match reply_rx.recv_timeout(Duration::from_secs(30)) {
-                    Ok(fresh) => params = fresh,
+                    Ok(fresh) => {
+                        if let Some(h) = &shared.obs {
+                            let rtt = rtt_t0.elapsed().as_secs_f64() / scale;
+                            h.observe("realtime/commit_rtt_secs", rtt);
+                        }
+                        params = fresh;
+                    }
                     Err(_) => break,
                 }
                 let down_extra = link.transfer_secs_jittered(dense_bytes, &mut net_rng);

@@ -52,6 +52,7 @@ pub mod fault;
 #[allow(missing_docs)]
 pub mod metrics;
 pub mod network;
+pub mod obs;
 pub mod pserver;
 pub mod run;
 #[allow(missing_docs)]
@@ -65,6 +66,7 @@ pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline};
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use fault::{Checkpoint, CheckpointPolicy, CheckpointStore, FaultSpec};
 pub use network::{LinkModel, NetworkSpec};
+pub use obs::{MetricsRegistry, ObsConfig, ObsHub, TraceEvent, TraceRecorder};
 pub use pserver::ShardedParameterServer;
 pub use run::{
     Backend, EngineStats, NoopObserver, Run, RunBuilder, RunObserver, RunReport, TrainEngine,

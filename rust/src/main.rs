@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::experiments::{self, Scale};
+use adsp::obs::{ObsConfig, ObsHub, DEFAULT_TRACE_CAPACITY};
 use adsp::run::{Backend, EngineStats, Run, RunReport};
 use adsp::runtime::ModelRuntime;
 use adsp::sync::SyncModelKind;
@@ -27,6 +28,7 @@ USAGE:
              [--ps-apply-secs T] [--scenario NAME] [--list-scenarios]
              [--link-bw BPS] [--link-latency SECS]
              [--checkpoint-every SECS] [--out FILE.json]
+             [--metrics FILE.json] [--trace FILE.jsonl]
   adsp experiment <fig1|fig3..fig16|all> [--full]
   adsp inspect <model>
   adsp list
@@ -71,6 +73,14 @@ TRAIN FLAGS:
                       per-worker metrics, breakdown, fault counters,
                       engine stats) — the same schema for the simulator
                       and --realtime runs
+  --metrics FILE.json dump the observability metrics snapshot (named
+                      counters / gauges / histograms from every layer:
+                      sim events, PS shards, network, fault subsystem)
+                      as JSON; also embedded in the --out report under
+                      \"metrics\"
+  --trace FILE.jsonl  write the structured trace (one JSON object per
+                      line: virtual + wall timestamps, event kind, data)
+                      — bounded ring buffer, oldest events drop first
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -185,11 +195,38 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         Backend::Sim
     };
-    let report = Run::from_spec(spec).backend(backend).execute()?;
+    // Observability: either flag arms the hub; without them no tap code
+    // runs at all (the engines are pinned bit-identical in that case).
+    let metrics_path = args.flags.get("metrics").cloned();
+    let trace_path = args.flags.get("trace").cloned();
+    let hub = if metrics_path.is_some() || trace_path.is_some() {
+        let cfg = ObsConfig {
+            metrics: metrics_path.is_some(),
+            trace_capacity: trace_path.as_ref().map(|_| DEFAULT_TRACE_CAPACITY),
+        };
+        Some(ObsHub::new(cfg))
+    } else {
+        None
+    };
+    let mut run = Run::from_spec(spec).backend(backend);
+    if let Some(h) = &hub {
+        run = run.observability(h);
+    }
+    let report = run.execute()?;
     if let Some(path) = args.flags.get("out") {
         std::fs::write(path, report.to_json().dump_pretty())
             .with_context(|| format!("writing report to {path}"))?;
         eprintln!("wrote {path}");
+    }
+    if let (Some(path), Some(h)) = (&metrics_path, &hub) {
+        let snap = h.snapshot_metrics().unwrap_or_default();
+        std::fs::write(path, snap.to_json().dump_pretty())
+            .with_context(|| format!("writing metrics to {path}"))?;
+        eprintln!("wrote {path}");
+    }
+    if let (Some(path), Some(h)) = (&trace_path, &hub) {
+        let n = h.write_trace_jsonl(std::path::Path::new(path))?;
+        eprintln!("wrote {path} ({n} trace events)");
     }
     print_report_summary(&report);
     Ok(())

@@ -1,0 +1,235 @@
+//! Observability: the metrics registry, the structured trace recorder,
+//! and the [`ObsHub`] handle that wires both through every engine layer.
+//!
+//! The ADSP scheduler's whole premise is that it *measures* the cluster —
+//! per-worker speeds, commit rates, waiting time — and adapts to them.
+//! This module gives the reproduction the matching instrumentation plane:
+//!
+//! * [`MetricsRegistry`] — named counters, gauges, and fixed-bucket
+//!   [`Histogram`]s, snapshot-able to JSON (`RunReport.metrics`,
+//!   `--metrics out.json`).
+//! * [`TraceRecorder`] — a bounded JSONL event stream with virtual- and
+//!   wall-time stamps (`--trace out.jsonl`).
+//! * [`ObsHub`] — a cheaply cloneable handle bundling both behind one
+//!   `Option`-guarded tap surface. Engines hold an `Option<ObsHub>`;
+//!   when it is `None` (the default) no tap code runs at all, which is
+//!   how the "observability off is bit-identical" guarantee is kept (the
+//!   pin lives in `tests/integration.rs`). Taps are read-only: they never
+//!   draw randomness or mutate engine state.
+//!
+//! ```
+//! use adsp::obs::{ObsConfig, ObsHub};
+//!
+//! let hub = ObsHub::new(ObsConfig::full(1024));
+//! hub.inc("net/commits_sent");
+//! hub.observe("net/ingress_wait_secs", 0.25);
+//! hub.event(12.5, "eval", vec![("loss", adsp::util::Json::Num(1.73))]);
+//! let snap = hub.snapshot_metrics().unwrap();
+//! assert_eq!(snap.counter("net/commits_sent"), 1);
+//! assert_eq!(hub.trace_len(), 1);
+//! ```
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Histogram, MetricsRegistry, DEFAULT_LATENCY_BOUNDS};
+pub use trace::{TraceEvent, TraceRecorder, DEFAULT_TRACE_CAPACITY};
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// What an [`ObsHub`] collects. Both components are independent: a run
+/// can record metrics without tracing and vice versa.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsConfig {
+    /// Collect the metrics registry.
+    pub metrics: bool,
+    /// Record a trace with this ring capacity (`None` disables tracing).
+    pub trace_capacity: Option<usize>,
+}
+
+impl ObsConfig {
+    /// Metrics on, tracing off.
+    pub fn metrics_only() -> Self {
+        ObsConfig { metrics: true, trace_capacity: None }
+    }
+
+    /// Tracing on with ring capacity `capacity`, metrics off.
+    pub fn trace_only(capacity: usize) -> Self {
+        ObsConfig { metrics: false, trace_capacity: Some(capacity) }
+    }
+
+    /// Metrics and tracing both on.
+    pub fn full(trace_capacity: usize) -> Self {
+        ObsConfig { metrics: true, trace_capacity: Some(trace_capacity) }
+    }
+}
+
+#[derive(Debug)]
+struct ObsInner {
+    metrics: Option<Mutex<MetricsRegistry>>,
+    trace: Option<Mutex<TraceRecorder>>,
+    wall_start: Instant,
+}
+
+/// The shared observability handle: an `Arc` around the (optional)
+/// registry and recorder, so engines, parameter-server shard threads, and
+/// the caller that wants the post-run snapshot can all hold clones.
+///
+/// Every tap method is a no-op when the corresponding component was not
+/// enabled in the [`ObsConfig`], so `Option<ObsHub>::None` on an engine
+/// plus `ObsConfig` gating inside the hub give two layers of "off means
+/// off".
+#[derive(Clone, Debug)]
+pub struct ObsHub {
+    inner: Arc<ObsInner>,
+}
+
+impl ObsHub {
+    /// Create a hub collecting what `cfg` asks for. The wall clock for
+    /// trace `wall_s` stamps starts now.
+    pub fn new(cfg: ObsConfig) -> Self {
+        let metrics = if cfg.metrics { Some(Mutex::new(MetricsRegistry::new())) } else { None };
+        let trace = cfg.trace_capacity.map(|c| Mutex::new(TraceRecorder::new(c)));
+        ObsHub { inner: Arc::new(ObsInner { metrics, trace, wall_start: Instant::now() }) }
+    }
+
+    /// True when this hub collects metrics.
+    pub fn metrics_enabled(&self) -> bool {
+        self.inner.metrics.is_some()
+    }
+
+    /// True when this hub records a trace.
+    pub fn trace_enabled(&self) -> bool {
+        self.inner.trace.is_some()
+    }
+
+    /// Increment counter `name` by one.
+    pub fn inc(&self, name: &str) {
+        if let Some(m) = &self.inner.metrics {
+            m.lock().unwrap().inc(name);
+        }
+    }
+
+    /// Increment counter `name` by `delta`.
+    pub fn add(&self, name: &str, delta: u64) {
+        if let Some(m) = &self.inner.metrics {
+            m.lock().unwrap().add(name, delta);
+        }
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn gauge(&self, name: &str, v: f64) {
+        if let Some(m) = &self.inner.metrics {
+            m.lock().unwrap().set_gauge(name, v);
+        }
+    }
+
+    /// Raise gauge `name` to `v` if above its current value.
+    pub fn max_gauge(&self, name: &str, v: f64) {
+        if let Some(m) = &self.inner.metrics {
+            m.lock().unwrap().max_gauge(name, v);
+        }
+    }
+
+    /// Record one observation into histogram `name` (default latency
+    /// bounds).
+    pub fn observe(&self, name: &str, v: f64) {
+        if let Some(m) = &self.inner.metrics {
+            m.lock().unwrap().observe(name, v);
+        }
+    }
+
+    /// Record a trace event at virtual time `t`; the wall stamp is taken
+    /// from the hub's clock.
+    pub fn event(&self, t: f64, kind: &str, data: Vec<(&str, Json)>) {
+        if let Some(tr) = &self.inner.trace {
+            let wall_s = self.inner.wall_start.elapsed().as_secs_f64();
+            tr.lock().unwrap().record(t, wall_s, kind, data);
+        }
+    }
+
+    /// Wall seconds since the hub was created.
+    pub fn wall_secs(&self) -> f64 {
+        self.inner.wall_start.elapsed().as_secs_f64()
+    }
+
+    /// A copy of the current metrics registry, or `None` when metrics are
+    /// disabled.
+    pub fn snapshot_metrics(&self) -> Option<MetricsRegistry> {
+        self.inner.metrics.as_ref().map(|m| m.lock().unwrap().clone())
+    }
+
+    /// Number of trace events currently buffered (0 when tracing is
+    /// disabled).
+    pub fn trace_len(&self) -> usize {
+        match &self.inner.trace {
+            Some(tr) => tr.lock().unwrap().len(),
+            None => 0,
+        }
+    }
+
+    /// Run `f` against the trace recorder, or return `None` when tracing
+    /// is disabled.
+    pub fn with_trace<R>(&self, f: impl FnOnce(&TraceRecorder) -> R) -> Option<R> {
+        self.inner.trace.as_ref().map(|tr| f(&tr.lock().unwrap()))
+    }
+
+    /// The buffered trace as JSONL text, or `None` when tracing is
+    /// disabled.
+    pub fn trace_jsonl(&self) -> Option<String> {
+        self.with_trace(|tr| tr.to_jsonl())
+    }
+
+    /// Write the buffered trace to `path` as JSONL; returns the number of
+    /// events written (`Ok(0)` without error when tracing is disabled).
+    pub fn write_trace_jsonl(&self, path: &Path) -> Result<usize> {
+        match self.with_trace(|tr| tr.write_jsonl(path)) {
+            Some(res) => res,
+            None => Ok(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_components_are_inert() {
+        let hub = ObsHub::new(ObsConfig { metrics: false, trace_capacity: None });
+        hub.inc("x");
+        hub.observe("y", 1.0);
+        hub.event(0.0, "e", vec![]);
+        assert!(!hub.metrics_enabled());
+        assert!(!hub.trace_enabled());
+        assert!(hub.snapshot_metrics().is_none());
+        assert_eq!(hub.trace_len(), 0);
+        assert!(hub.trace_jsonl().is_none());
+    }
+
+    #[test]
+    fn clones_share_the_same_collectors() {
+        let hub = ObsHub::new(ObsConfig::full(64));
+        let clone = hub.clone();
+        clone.inc("shared");
+        clone.event(1.0, "tick", vec![]);
+        assert_eq!(hub.snapshot_metrics().unwrap().counter("shared"), 1);
+        assert_eq!(hub.trace_len(), 1);
+    }
+
+    #[test]
+    fn config_shorthands() {
+        let m = ObsHub::new(ObsConfig::metrics_only());
+        assert!(m.metrics_enabled() && !m.trace_enabled());
+        let t = ObsHub::new(ObsConfig::trace_only(8));
+        assert!(!t.metrics_enabled() && t.trace_enabled());
+        let f = ObsHub::new(ObsConfig::full(8));
+        assert!(f.metrics_enabled() && f.trace_enabled());
+    }
+}

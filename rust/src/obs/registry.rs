@@ -1,0 +1,371 @@
+//! The metrics registry: named counters, gauges, and fixed-bucket
+//! histograms, cheap enough to update from the engines' hot loops and
+//! snapshot-able to JSON for `RunReport.metrics` / `--metrics out.json`.
+//!
+//! ## Naming convention
+//!
+//! Metric names are `/`-separated paths grouped by subsystem
+//! (`sim/events/ready`, `net/bytes_up`, `ps/shard0/apply_secs`,
+//! `fault/checkpoints`). One namespace is special: every metric under
+//! `wall/` measures *host* time (e.g. per-event handling duration) and
+//! therefore varies run to run. Everything else is derived from virtual
+//! time and event counts only, so on the sim backend it is a pure
+//! function of the spec and seed — two same-seed sim runs produce
+//! bit-identical registries once `wall/` entries are stripped (see
+//! [`MetricsRegistry::deterministic_view`], pinned in
+//! `tests/integration.rs`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Default histogram bucket bounds (seconds): exponential decades from 1µs
+/// to 100s, matching the latency scales the engines observe (native kernel
+/// applies are micros, checkpoint saves are millis, blackout holds are
+/// whole seconds).
+pub const DEFAULT_LATENCY_BOUNDS: &[f64] =
+    &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0];
+
+/// A fixed-bucket histogram: `counts[i]` holds observations `<= bounds[i]`
+/// (first matching bucket wins), with one extra overflow bucket at the end
+/// for observations above every bound. Bounds are fixed at creation; the
+/// running `count` and `sum` support mean queries without re-walking
+/// buckets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Create an empty histogram over `bounds`, which must be finite and
+    /// strictly increasing (enforced by debug assertion; violating it only
+    /// degrades bucket placement, never panics in release).
+    pub fn new(bounds: &[f64]) -> Self {
+        debug_assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing: {bounds:?}"
+        );
+        Histogram { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], count: 0, sum: 0.0 }
+    }
+
+    /// Record one observation. Non-finite values land in the overflow
+    /// bucket and contribute 0.0 to the sum, so a stray NaN can never
+    /// poison the whole histogram.
+    pub fn observe(&mut self, v: f64) {
+        let idx = self.bounds.iter().position(|b| v <= *b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+        }
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all finite observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of finite observations, or 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// The upper bucket bounds this histogram was created with.
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts; `counts().len() == bounds().len() + 1` (the last
+    /// entry is the overflow bucket).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Serialize to `{"bounds": [...], "counts": [...], "count": N, "sum": S}`.
+    pub fn to_json(&self) -> Json {
+        let bounds: Vec<Json> = self.bounds.iter().map(|b| Json::Num(*b)).collect();
+        let counts: Vec<Json> = self.counts.iter().map(|c| Json::Num(*c as f64)).collect();
+        Json::obj(vec![
+            ("bounds", Json::Arr(bounds)),
+            ("counts", Json::Arr(counts)),
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+        ])
+    }
+
+    /// Parse the [`Histogram::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<Histogram> {
+        let bounds = v.req("bounds")?.f64_vec().context("histogram bounds")?;
+        let mut counts = Vec::new();
+        for c in v.req("counts")?.as_arr()? {
+            counts.push(c.as_u64().context("histogram counts")?);
+        }
+        if counts.len() != bounds.len() + 1 {
+            bail!(
+                "histogram shape mismatch: {} bounds need {} counts, got {}",
+                bounds.len(),
+                bounds.len() + 1,
+                counts.len()
+            );
+        }
+        let count = v.req("count")?.as_u64()?;
+        let sum = v.req("sum")?.as_f64()?;
+        Ok(Histogram { bounds, counts, count, sum })
+    }
+}
+
+/// The registry itself: three `BTreeMap`s (deterministic iteration and
+/// JSON key order) of monotone counters, last-write gauges, and
+/// fixed-bucket histograms. Cloneable and `PartialEq` so whole snapshots
+/// can be compared bit-for-bit in tests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    /// Increment counter `name` by one (created at zero on first touch).
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment counter `name` by `delta`.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set gauge `name` to `v` (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Raise gauge `name` to `v` if `v` exceeds its current value —
+    /// a running maximum (peak queue depth, peak backlog).
+    pub fn max_gauge(&mut self, name: &str, v: f64) {
+        let cur = self.gauges.entry(name.to_string()).or_insert(v);
+        if v > *cur {
+            *cur = v;
+        }
+    }
+
+    /// Record one observation into histogram `name`, creating it with
+    /// [`DEFAULT_LATENCY_BOUNDS`] on first touch.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.observe_with(name, v, DEFAULT_LATENCY_BOUNDS);
+    }
+
+    /// Record one observation into histogram `name`, creating it with
+    /// `bounds` on first touch (bounds of an existing histogram are never
+    /// changed).
+    pub fn observe_with(&mut self, name: &str, v: f64, bounds: &[f64]) {
+        let h = self.histograms.entry(name.to_string()).or_insert_with(|| Histogram::new(bounds));
+        h.observe(v);
+    }
+
+    /// Current value of counter `name` (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of gauge `name`, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// The histogram registered under `name`, if any.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// All counters, sorted by name.
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    /// All gauges, sorted by name.
+    pub fn gauges(&self) -> &BTreeMap<String, f64> {
+        &self.gauges
+    }
+
+    /// All histograms, sorted by name.
+    pub fn histograms(&self) -> &BTreeMap<String, Histogram> {
+        &self.histograms
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// A copy with every `wall/`-prefixed metric removed — the subset
+    /// that is deterministic for same-seed sim runs (see module docs).
+    pub fn deterministic_view(&self) -> MetricsRegistry {
+        let mut out = MetricsRegistry::new();
+        for (k, v) in &self.counters {
+            if !k.starts_with("wall/") {
+                out.counters.insert(k.clone(), *v);
+            }
+        }
+        for (k, v) in &self.gauges {
+            if !k.starts_with("wall/") {
+                out.gauges.insert(k.clone(), *v);
+            }
+        }
+        for (k, v) in &self.histograms {
+            if !k.starts_with("wall/") {
+                out.histograms.insert(k.clone(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Serialize to `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    ///
+    /// Counters serialize through f64 (the JSON number type here), which is
+    /// exact below 2^53 — far beyond any count an engine run produces.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
+        let mut histograms = BTreeMap::new();
+        for (k, v) in &self.histograms {
+            histograms.insert(k.clone(), v.to_json());
+        }
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Parse the [`MetricsRegistry::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<MetricsRegistry> {
+        fn obj_of<'a>(v: &'a Json, key: &str) -> Result<&'a BTreeMap<String, Json>> {
+            match v.req(key)? {
+                Json::Obj(m) => Ok(m),
+                other => bail!("metrics field '{key}' must be an object, got {other:?}"),
+            }
+        }
+        let mut out = MetricsRegistry::new();
+        for (k, c) in obj_of(v, "counters")? {
+            let c = c.as_u64().with_context(|| format!("counter '{k}'"))?;
+            out.counters.insert(k.clone(), c);
+        }
+        for (k, g) in obj_of(v, "gauges")? {
+            let g = g.as_f64().with_context(|| format!("gauge '{k}'"))?;
+            out.gauges.insert(k.clone(), g);
+        }
+        for (k, h) in obj_of(v, "histograms")? {
+            let h = Histogram::from_json(h).with_context(|| format!("histogram '{k}'"))?;
+            out.histograms.insert(k.clone(), h);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_place_observations_correctly() {
+        let mut h = Histogram::new(&[0.001, 0.01, 0.1]);
+        h.observe(0.0005); // bucket 0
+        h.observe(0.001); // inclusive upper bound -> still bucket 0
+        h.observe(0.05); // bucket 2
+        h.observe(5.0); // overflow
+        assert_eq!(h.counts(), &[2, 0, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 5.0515).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_tolerates_non_finite_observations() {
+        let mut h = Histogram::new(&[1.0]);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.counts(), &[0, 2]);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_counters_gauges_and_peaks() {
+        let mut m = MetricsRegistry::new();
+        m.inc("a");
+        m.add("a", 4);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("never_touched"), 0);
+        m.set_gauge("g", 2.0);
+        m.set_gauge("g", 1.0);
+        assert_eq!(m.gauge("g"), Some(1.0));
+        m.max_gauge("peak", 3.0);
+        m.max_gauge("peak", 2.0);
+        assert_eq!(m.gauge("peak"), Some(3.0));
+    }
+
+    #[test]
+    fn registry_json_round_trips() {
+        let mut m = MetricsRegistry::new();
+        m.add("sim/events/ready", 42);
+        m.set_gauge("sim/event_queue_depth", 7.0);
+        m.observe("net/ingress_wait_secs", 0.25);
+        m.observe_with("ps/shard0/apply_secs", 2.5, &[1.0, 2.0, 4.0]);
+        let back = MetricsRegistry::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // And again through text, to cover the parser path.
+        let text = m.to_json().dump();
+        let back2 = MetricsRegistry::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back2, m);
+    }
+
+    #[test]
+    fn deterministic_view_strips_wall_metrics_only() {
+        let mut m = MetricsRegistry::new();
+        m.inc("sim/events/ready");
+        m.inc("wall/sim/handle_count");
+        m.observe("wall/sim/handle_secs/ready", 0.001);
+        m.set_gauge("wall/run_secs", 1.5);
+        let det = m.deterministic_view();
+        assert_eq!(det.counter("sim/events/ready"), 1);
+        assert_eq!(det.counter("wall/sim/handle_count"), 0);
+        assert!(det.histogram("wall/sim/handle_secs/ready").is_none());
+        assert!(det.gauge("wall/run_secs").is_none());
+    }
+
+    #[test]
+    fn empty_registry_round_trips_and_reports_empty() {
+        let m = MetricsRegistry::new();
+        assert!(m.is_empty());
+        let back = MetricsRegistry::from_json(&m.to_json()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back, m);
+    }
+}

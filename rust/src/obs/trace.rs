@@ -1,0 +1,235 @@
+//! The structured trace recorder: a bounded ring buffer of timestamped
+//! events, dumped as JSONL (one JSON object per line) for `--trace
+//! out.jsonl`.
+//!
+//! ## Line schema
+//!
+//! ```json
+//! {"t": 12.5, "wall_s": 0.0031, "kind": "eval", "data": {"loss": 1.73}}
+//! ```
+//!
+//! * `t` — virtual seconds (engine clock). The recorder clamps `t` to be
+//!   monotonically non-decreasing at record time, so a dumped stream is
+//!   always sorted even if taps fire slightly out of order.
+//! * `wall_s` — host seconds since the recorder (hub) was created.
+//! * `kind` — a short event tag (`run_start`, `eval`, `commit`,
+//!   `cluster`, `checkpoint`, `blackout_lift`, `worker_restart`,
+//!   `ps_recover`, `run_end`).
+//! * `data` — kind-specific payload, a flat JSON object.
+//!
+//! The buffer is a fixed-capacity ring: when full, the *oldest* events are
+//! dropped and counted in [`TraceRecorder::dropped`], so a long run keeps
+//! its most recent window instead of growing without bound.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Default ring capacity used by the CLI and tests: 65536 events.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// One recorded trace event (see the module docs for the line schema).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Virtual-time stamp in seconds (monotone within a recorded stream).
+    pub t: f64,
+    /// Wall seconds since the recorder was created.
+    pub wall_s: f64,
+    /// Short event tag, e.g. `eval` or `commit`.
+    pub kind: String,
+    /// Kind-specific payload fields.
+    pub data: BTreeMap<String, Json>,
+}
+
+impl TraceEvent {
+    /// Serialize to the one-line JSON object form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t", Json::Num(self.t)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("kind", Json::str(self.kind.clone())),
+            ("data", Json::Obj(self.data.clone())),
+        ])
+    }
+
+    /// Parse one JSONL line's object back into an event.
+    pub fn from_json(v: &Json) -> Result<TraceEvent> {
+        let data = match v.req("data")? {
+            Json::Obj(m) => m.clone(),
+            other => bail!("trace event 'data' must be an object, got {other:?}"),
+        };
+        Ok(TraceEvent {
+            t: v.req("t")?.as_f64()?,
+            wall_s: v.req("wall_s")?.as_f64()?,
+            kind: v.req("kind")?.as_str()?.to_string(),
+            data,
+        })
+    }
+}
+
+/// Bounded ring buffer of [`TraceEvent`]s (see the module docs).
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    events: VecDeque<TraceEvent>,
+    capacity: usize,
+    dropped: u64,
+    last_t: f64,
+}
+
+impl TraceRecorder {
+    /// Create a recorder holding at most `capacity` events (clamped to at
+    /// least 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        TraceRecorder {
+            events: VecDeque::with_capacity(capacity.min(4096)),
+            capacity,
+            dropped: 0,
+            last_t: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one event. `t` is clamped up to the largest timestamp seen
+    /// so far, keeping the stream monotonically non-decreasing (a NaN `t`
+    /// also collapses to that running maximum). When the ring is full the
+    /// oldest event is dropped and counted.
+    pub fn record(&mut self, t: f64, wall_s: f64, kind: &str, data: Vec<(&str, Json)>) {
+        // f64::max ignores a NaN argument, so NaN -> last_t (or 0.0 on a
+        // NaN-first stream, since max(NaN, -inf) = -inf stays non-finite).
+        let mut t = t.max(self.last_t);
+        if !t.is_finite() {
+            t = if self.last_t.is_finite() { self.last_t } else { 0.0 };
+        }
+        self.last_t = t;
+        let mut map = BTreeMap::new();
+        for (k, v) in data {
+            map.insert(k.to_string(), v);
+        }
+        if self.events.len() == self.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(TraceEvent { t, wall_s, kind: kind.to_string(), data: map });
+    }
+
+    /// Number of events currently buffered.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// How many old events the ring has discarded to stay within capacity.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// The ring's fixed capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The buffered events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Dump the buffered events as JSONL text (one event per line, oldest
+    /// first, trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            let _ = writeln!(out, "{}", ev.to_json().dump());
+        }
+        out
+    }
+
+    /// Write [`TraceRecorder::to_jsonl`] to `path`; returns the number of
+    /// events written.
+    pub fn write_jsonl(&self, path: &Path) -> Result<usize> {
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        Ok(self.events.len())
+    }
+
+    /// Parse a JSONL trace stream back into events (blank lines are
+    /// skipped; any malformed line is an error naming its line number).
+    pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>> {
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).with_context(|| format!("trace line {}", i + 1))?;
+            let ev = TraceEvent::from_json(&v).with_context(|| format!("trace line {}", i + 1))?;
+            out.push(ev);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_round_trips_through_jsonl() {
+        let mut r = TraceRecorder::new(16);
+        r.record(0.0, 0.001, "run_start", vec![("model", Json::str("mlp_quick"))]);
+        r.record(1.5, 0.002, "eval", vec![("loss", Json::Num(1.73)), ("acc", Json::Num(0.4))]);
+        r.record(2.0, 0.003, "run_end", vec![("commits", Json::Num(12.0))]);
+        let text = r.to_jsonl();
+        assert_eq!(text.lines().count(), 3);
+        let back = TraceRecorder::parse_jsonl(&text).unwrap();
+        let orig: Vec<TraceEvent> = r.events().cloned().collect();
+        assert_eq!(back, orig);
+    }
+
+    #[test]
+    fn clamps_out_of_order_timestamps_monotone() {
+        let mut r = TraceRecorder::new(8);
+        r.record(5.0, 0.0, "a", vec![]);
+        r.record(3.0, 0.0, "b", vec![]); // out of order -> clamped to 5.0
+        r.record(7.0, 0.0, "c", vec![]);
+        r.record(f64::NAN, 0.0, "d", vec![]); // NaN -> running maximum
+        let ts: Vec<f64> = r.events().map(|e| e.t).collect();
+        assert_eq!(ts, vec![5.0, 5.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn nan_first_stream_starts_at_zero() {
+        let mut r = TraceRecorder::new(8);
+        r.record(f64::NAN, 0.0, "a", vec![]);
+        r.record(1.0, 0.0, "b", vec![]);
+        let ts: Vec<f64> = r.events().map(|e| e.t).collect();
+        assert_eq!(ts, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut r = TraceRecorder::new(3);
+        for i in 0..5 {
+            r.record(i as f64, 0.0, "tick", vec![("i", Json::Num(i as f64))]);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        let ts: Vec<f64> = r.events().map(|e| e.t).collect();
+        assert_eq!(ts, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn parse_skips_blank_lines_and_rejects_garbage() {
+        let good = "{\"t\": 1, \"wall_s\": 0.5, \"kind\": \"x\", \"data\": {}}\n\n";
+        assert_eq!(TraceRecorder::parse_jsonl(good).unwrap().len(), 1);
+        assert!(TraceRecorder::parse_jsonl("not json\n").is_err());
+        let bad_data = "{\"t\": 1, \"wall_s\": 0.5, \"kind\": \"x\", \"data\": 3}\n";
+        assert!(TraceRecorder::parse_jsonl(bad_data).is_err());
+    }
+}

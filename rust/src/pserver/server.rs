@@ -12,13 +12,15 @@
 //! reports the same version, and the reassembled model equals the serial
 //! PS applied to the same commit sequence, bit for bit.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use crate::fault::Checkpoint;
 use crate::metrics::LossLog;
+use crate::obs::ObsHub;
 use crate::runtime::{Batch, ModelRuntime, ParamSet};
 
 use super::partition::Partition;
@@ -47,6 +49,12 @@ pub struct ShardedParameterServer {
     pub commits: u64,
     /// Evaluation samples recorded through [`ShardedParameterServer::evaluate`].
     pub loss_log: LossLog,
+    /// Observability hub; `None` (the default) runs zero tap code.
+    obs: Option<ObsHub>,
+    /// Per-shard count of `Apply` messages enqueued but not yet applied —
+    /// the live FIFO depth each shard thread reports as a gauge. Only
+    /// maintained when `obs` is set.
+    pending: Vec<Arc<AtomicU64>>,
 }
 
 impl ShardedParameterServer {
@@ -60,19 +68,52 @@ impl ShardedParameterServer {
         num_shards: usize,
         pipeline_depth: usize,
     ) -> Self {
+        Self::new_observed(init, eta, mu, num_shards, pipeline_depth, None)
+    }
+
+    /// [`ShardedParameterServer::new`] with an observability hub attached:
+    /// each shard thread records its apply latency into a
+    /// `ps/shard<j>/apply_secs` histogram and its live FIFO depth into a
+    /// `ps/shard<j>/fifo_depth` gauge. With `obs = None` this is exactly
+    /// `new` — no timing, no atomics on the apply path.
+    pub fn new_observed(
+        init: ParamSet,
+        eta: f32,
+        mu: f32,
+        num_shards: usize,
+        pipeline_depth: usize,
+        obs: Option<ObsHub>,
+    ) -> Self {
         let partition = Partition::for_params(&init, num_shards);
         let depth = pipeline_depth.max(1);
         let s = partition.num_shards();
         let mut txs = Vec::with_capacity(s);
         let mut handles = Vec::with_capacity(s);
+        let mut pending = Vec::with_capacity(s);
+        for _ in 0..s {
+            pending.push(Arc::new(AtomicU64::new(0)));
+        }
         for j in 0..s {
             let slab = partition.extract(&init, j);
             let (tx, rx) = mpsc::sync_channel::<ShardMsg>(depth);
             let mut state = ShardState::new(slab, eta, mu);
+            let obs_j = obs.clone();
+            let pending_j = pending[j].clone();
+            let apply_name = format!("ps/shard{j}/apply_secs");
+            let depth_name = format!("ps/shard{j}/fifo_depth");
             handles.push(std::thread::spawn(move || {
                 while let Ok(msg) = rx.recv() {
                     match msg {
-                        ShardMsg::Apply(u) => state.apply(&u),
+                        ShardMsg::Apply(u) => match &obs_j {
+                            Some(h) => {
+                                let t0 = std::time::Instant::now();
+                                state.apply(&u);
+                                h.observe(&apply_name, t0.elapsed().as_secs_f64());
+                                let left = pending_j.fetch_sub(1, Ordering::SeqCst) - 1;
+                                h.gauge(&depth_name, left as f64);
+                            }
+                            None => state.apply(&u),
+                        },
                         ShardMsg::Read(reply) => {
                             let _ = reply.send((state.version, state.global.clone()));
                         }
@@ -98,6 +139,8 @@ impl ShardedParameterServer {
             pipeline_depth: depth,
             commits: 0,
             loss_log: LossLog::default(),
+            obs,
+            pending,
         }
     }
 
@@ -119,6 +162,14 @@ impl ShardedParameterServer {
     /// Enqueue one commit `U` on every shard and return; applies run on the
     /// shard threads. Blocks only when a shard's pipeline is full.
     pub fn apply(&mut self, u: &ParamSet) {
+        if let Some(h) = &self.obs {
+            h.inc("ps/commits");
+            for p in &self.pending {
+                p.fetch_add(1, Ordering::SeqCst);
+            }
+            let depth = self.pending[0].load(Ordering::SeqCst) as f64;
+            h.max_gauge("ps/fifo_depth_peak", depth);
+        }
         for (j, tx) in self.txs.iter().enumerate() {
             let slab = self.partition.extract(u, j);
             tx.send(ShardMsg::Apply(slab)).expect("shard thread died");

@@ -61,6 +61,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentSpec;
 use crate::coordinator::RealtimeEngine;
+use crate::obs::ObsHub;
 use crate::simulation::SimEngine;
 
 /// Which engine a [`RunBuilder`] executes on.
@@ -119,7 +120,7 @@ impl Run {
     /// Build a run from a validated-on-execute [`ExperimentSpec`]. The
     /// builder defaults to [`Backend::Sim`] with no observer.
     pub fn from_spec(spec: ExperimentSpec) -> RunBuilder<'static> {
-        RunBuilder { spec, backend: Backend::Sim, observer: None }
+        RunBuilder { spec, backend: Backend::Sim, observer: None, obs: None }
     }
 }
 
@@ -128,6 +129,7 @@ pub struct RunBuilder<'a> {
     spec: ExperimentSpec,
     backend: Backend,
     observer: Option<&'a mut dyn RunObserver>,
+    obs: Option<ObsHub>,
 }
 
 impl<'a> RunBuilder<'a> {
@@ -143,15 +145,41 @@ impl<'a> RunBuilder<'a> {
     where
         'a: 'b,
     {
-        RunBuilder { spec: self.spec, backend: self.backend, observer: Some(observer) }
+        RunBuilder {
+            spec: self.spec,
+            backend: self.backend,
+            observer: Some(observer),
+            obs: self.obs,
+        }
+    }
+
+    /// Attach an observability hub ([`ObsHub`]): the engine fills the
+    /// hub's metrics registry and trace ring as it runs, snapshots the
+    /// registry into [`RunReport::metrics`], and the caller's clone of
+    /// the hub keeps the trace readable after execution. Without a hub
+    /// (the default) no tap code runs and sim output stays bit-identical
+    /// — pinned in `tests/integration.rs`.
+    pub fn observability(mut self, hub: &ObsHub) -> Self {
+        self.obs = Some(hub.clone());
+        self
     }
 
     /// Validate the spec, construct the selected engine, and run it.
     pub fn execute(self) -> Result<RunReport> {
         let engine: Box<dyn TrainEngine> = match self.backend {
-            Backend::Sim => Box::new(SimEngine::new(self.spec)?),
+            Backend::Sim => {
+                let mut e = SimEngine::new(self.spec)?;
+                if let Some(hub) = &self.obs {
+                    e.attach_obs(hub.clone());
+                }
+                Box::new(e)
+            }
             Backend::Realtime { time_scale } => {
-                Box::new(RealtimeEngine::new(self.spec, time_scale))
+                let mut e = RealtimeEngine::new(self.spec, time_scale);
+                if let Some(hub) = &self.obs {
+                    e.attach_obs(hub.clone());
+                }
+                Box::new(e)
             }
         };
         let mut noop = NoopObserver;

@@ -9,6 +9,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{Breakdown, LossLog, WorkerMetrics};
+use crate::obs::MetricsRegistry;
 use crate::sync::SyncModelKind;
 use crate::util::Json;
 
@@ -131,6 +132,11 @@ pub struct RunReport {
     /// explicit cost model; the real-time engine measures the scaled wall
     /// time of the consistent cut).
     pub checkpoint_overhead_secs: f64,
+    /// Observability snapshot: the metrics registry collected when an
+    /// [`ObsHub`](crate::obs::ObsHub) was attached to the run, `None`
+    /// otherwise (serialized as JSON `null` so the report key set never
+    /// changes shape).
+    pub metrics: Option<MetricsRegistry>,
     /// Engine-specific extras (which backend ran, and what only it knows).
     pub engine: EngineStats,
 }
@@ -197,6 +203,10 @@ impl RunReport {
 
     /// JSON object form (`adsp train --out report.json`).
     pub fn to_json(&self) -> Json {
+        let metrics = match &self.metrics {
+            Some(m) => m.to_json(),
+            None => Json::Null,
+        };
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
             ("sync", Json::str(self.sync.name())),
@@ -217,6 +227,7 @@ impl RunReport {
             ("lost_commits", Json::num(self.lost_commits as f64)),
             ("checkpoints_taken", Json::num(self.checkpoints_taken as f64)),
             ("checkpoint_overhead_secs", Json::num(self.checkpoint_overhead_secs)),
+            ("metrics", metrics),
             ("engine", self.engine.to_json()),
         ])
     }
@@ -258,6 +269,12 @@ impl RunReport {
             lost_commits: v.req("lost_commits")?.as_u64()?,
             checkpoints_taken: v.req("checkpoints_taken")?.as_u64()?,
             checkpoint_overhead_secs: v.req("checkpoint_overhead_secs")?.as_f64()?,
+            // Absent (pre-observability dumps) and null both mean "no
+            // metrics were collected" — the field stays backward readable.
+            metrics: match v.get("metrics") {
+                None | Some(Json::Null) => None,
+                Some(j) => Some(MetricsRegistry::from_json(j).context("parsing metrics")?),
+            },
             engine: EngineStats::from_json(v.req("engine")?).context("parsing engine")?,
         })
     }
@@ -311,6 +328,7 @@ mod tests {
             lost_commits: 1,
             checkpoints_taken: 2,
             checkpoint_overhead_secs: 0.25,
+            metrics: None,
             engine,
         }
     }
@@ -335,6 +353,35 @@ mod tests {
             assert_eq!(back.converged_at, Some(90.5));
             assert_eq!(back.loss_log.samples.len(), 2);
         }
+    }
+
+    #[test]
+    fn metrics_section_round_trips_and_tolerates_absence() {
+        // Populated registries survive the dump/parse cycle bit-for-bit.
+        let mut report = sample_report(EngineStats::Realtime { time_scale: 1.0 });
+        let mut reg = MetricsRegistry::new();
+        reg.add("net/bytes_up", 1024);
+        reg.observe("ps/shard0/apply_secs", 0.002);
+        report.metrics = Some(reg.clone());
+        let back = RunReport::from_json_str(&report.to_json().dump()).unwrap();
+        assert_eq!(back.metrics, Some(reg));
+
+        // None dumps as null and parses back as None.
+        report.metrics = None;
+        let text = report.to_json().dump();
+        assert!(text.contains("\"metrics\":null"));
+        let back = RunReport::from_json_str(&text).unwrap();
+        assert!(back.metrics.is_none());
+
+        // Pre-observability dumps have no "metrics" key at all; they must
+        // still parse (backward compatibility for archived reports).
+        let mut obj = match report.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.remove("metrics");
+        let back = RunReport::from_json(&Json::Obj(obj)).unwrap();
+        assert!(back.metrics.is_none());
     }
 
     #[test]

@@ -26,9 +26,11 @@ use crate::data::{make_source, DataSource};
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
 use crate::network::IngressQueue;
+use crate::obs::ObsHub;
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
+use crate::util::Json;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum EventKind {
@@ -61,6 +63,24 @@ enum EventKind {
 }
 
 impl EventKind {
+    /// Short stable tag used for per-kind metric names
+    /// (`sim/events/<name>`, `wall/sim/handle_secs/<name>`).
+    fn name(&self) -> &'static str {
+        match self {
+            EventKind::Ready(_) => "ready",
+            EventKind::CommitArrive(_) => "commit_arrive",
+            EventKind::CommitApply(_) => "commit_apply",
+            EventKind::Checkpoint => "gamma_checkpoint",
+            EventKind::Eval => "eval",
+            EventKind::EpochStart => "epoch_start",
+            EventKind::Cluster(_) => "cluster",
+            EventKind::BlackoutLift => "blackout_lift",
+            EventKind::CkptSave => "ckpt_save",
+            EventKind::WorkerRestart(_) => "worker_restart",
+            EventKind::PsRecover => "ps_recover",
+        }
+    }
+
     /// The worker a per-worker event belongs to (its incarnation gate).
     fn worker(&self) -> Option<usize> {
         match self {
@@ -200,6 +220,11 @@ pub struct SimEngine {
     lost_commits: u64,
     checkpoints_taken: u64,
     checkpoint_secs: f64,
+    /// Observability hub ([`crate::obs`]). `None` — the default — runs
+    /// zero tap code, which is how the "observability off is
+    /// bit-identical" pin is kept. Taps are read-only: they never draw
+    /// randomness or mutate engine state.
+    obs: Option<ObsHub>,
 }
 
 /// Extra per-shard overhead as a fraction of the split cost — the RPC and
@@ -327,7 +352,16 @@ impl SimEngine {
             lost_commits: 0,
             checkpoints_taken: 0,
             checkpoint_secs: 0.0,
+            obs: None,
         })
+    }
+
+    /// Attach an observability hub: the run fills its metrics registry
+    /// and trace ring, and snapshots the registry into
+    /// [`RunReport::metrics`]. Attaching a hub never changes the run's
+    /// numeric outputs (pinned in `tests/integration.rs`).
+    pub fn attach_obs(&mut self, hub: ObsHub) {
+        self.obs = Some(hub);
     }
 
     /// One-way commit transfer time for worker `w`: the dense update is
@@ -476,6 +510,14 @@ impl SimEngine {
         let comm = blackout_wait + up_extra + down_extra + 2.0 * oneway;
         self.workers[w].metrics.comm_secs +=
             comm.min((self.spec.max_virtual_secs - self.now).max(0.0));
+        if let Some(h) = self.obs.clone() {
+            h.inc("net/commits_sent");
+            h.observe("net/commit_comm_secs", comm);
+            if blackout_wait > 0.0 {
+                h.inc("net/blackout_holds");
+                h.observe("net/blackout_hold_secs", blackout_wait);
+            }
+        }
         self.push_event(depart + oneway + up_extra, EventKind::CommitArrive(w));
         Ok(())
     }
@@ -513,6 +555,13 @@ impl SimEngine {
         // in progress — commits stripe across every shard, so one failed
         // shard holds all applies until its recovery line is restored.
         let cleared = self.ingress.admit(self.now, up_bytes).max(self.cluster.ps_down_until());
+        if let Some(h) = self.obs.clone() {
+            h.inc("net/ingress_admissions");
+            if cleared > self.now {
+                h.inc("net/ingress_delays");
+                h.observe("net/ingress_wait_secs", cleared - self.now);
+            }
+        }
         if cleared > self.now {
             self.workers[w].metrics.comm_secs += (cleared - self.now)
                 .min((self.spec.max_virtual_secs - self.now).max(0.0));
@@ -525,6 +574,11 @@ impl SimEngine {
     /// The worker left (or crashed) while its commit was in flight: the
     /// update is lost with it, and the steps it carried are wasted work.
     fn drop_in_flight(&mut self, w: usize) -> Result<()> {
+        if self.workers[w].in_flight.is_some() {
+            if let Some(h) = self.obs.clone() {
+                h.inc("fault/inflight_drops");
+            }
+        }
         self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
         self.workers[w].in_flight = None;
         self.workers[w].in_flight_bytes = None;
@@ -562,6 +616,9 @@ impl SimEngine {
             // the paper's commit-count bookkeeping counts *applied* commits,
             // so c_i is not advanced.
             self.dropped_commits += 1;
+            if let Some(h) = self.obs.clone() {
+                h.inc("fault/dropped_commits");
+            }
             self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
             self.workers[w].pending_pull = Some(self.global.clone());
             let oneway = self.oneway_secs(w);
@@ -591,6 +648,10 @@ impl SimEngine {
         self.workers[w].metrics.bytes_up += up_bytes;
         self.workers[w].metrics.bytes_down += down_bytes;
         self.bytes_total += up_bytes + down_bytes;
+        if let Some(h) = self.obs.clone() {
+            h.add("net/bytes_up", up_bytes);
+            h.add("net/bytes_down", down_bytes);
+        }
         // Failover bookkeeping: everything applied past the last
         // checkpoint is what a shard failure would lose.
         self.commits_since_ckpt += 1;
@@ -608,6 +669,13 @@ impl SimEngine {
         // has applied its slab (sharded apply occupancy + striped return
         // + the link-model serialization of the dense pull).
         let done = self.ps_apply_done();
+        if let Some(h) = self.obs.clone() {
+            h.observe("sim/ps_apply_turnaround_secs", done - self.now);
+            h.max_gauge("sim/ps_backlog_secs_peak", (self.ps_busy - self.now).max(0.0));
+            let total = self.total_commits as f64;
+            let data = vec![("worker", Json::Num(w as f64)), ("total", Json::Num(total))];
+            h.event(self.now, "commit", data);
+        }
         let oneway = self.oneway_secs(w);
         let down_extra = std::mem::take(&mut self.workers[w].down_extra);
         self.workers[w].pending_pull = Some(self.global.clone());
@@ -622,6 +690,11 @@ impl SimEngine {
         let (loss, acc) = (loss as f64, acc as f64);
         self.loss_log.push(self.now, self.total_steps, loss, acc);
         obs.on_eval(self.now, self.total_steps, loss, acc);
+        if let Some(h) = self.obs.clone() {
+            h.inc("sim/evals");
+            let data = vec![("loss", Json::Num(loss)), ("acc", Json::Num(acc))];
+            h.event(self.now, "eval", data);
+        }
         if self.initial_loss.is_none() {
             self.initial_loss = Some(loss);
         }
@@ -689,6 +762,10 @@ impl SimEngine {
         // Observers see every scripted event, no-ops included (they are
         // read-only taps, so this cannot perturb the bit-identity pins).
         obs.on_cluster_event(self.now, &ev);
+        if let Some(h) = self.obs.clone() {
+            h.inc("cluster/events");
+            h.event(self.now, "cluster", vec![("event", ev.to_json())]);
+        }
         match delta {
             ClusterDelta::None => return Ok(()),
             ClusterDelta::Changed => {}
@@ -738,6 +815,9 @@ impl SimEngine {
                 // disappears from barriers until restart, and every event
                 // queued under the old incarnation goes stale.
                 self.incarnation[w] += 1;
+                if let Some(h) = self.obs.clone() {
+                    h.inc("fault/worker_crashes");
+                }
                 self.wasted_steps += self.progress[w].local_since_commit;
                 self.progress[w].local_since_commit = 0;
                 self.progress[w].active = false;
@@ -754,6 +834,11 @@ impl SimEngine {
                 // checkpoint (one consistent recovery line), losing the
                 // commits applied past it. Commits in flight block until
                 // `until` (see `on_commit_arrive`/`on_commit_apply`).
+                if let Some(h) = self.obs.clone() {
+                    h.inc("fault/ps_failovers");
+                    h.add("fault/failover_lost_commits", self.commits_since_ckpt);
+                    h.add("fault/failover_wasted_steps", self.steps_since_ckpt);
+                }
                 self.lost_commits += self.commits_since_ckpt;
                 self.wasted_steps += self.steps_since_ckpt;
                 self.commits_since_ckpt = 0;
@@ -797,12 +882,22 @@ impl SimEngine {
         self.steps_since_ckpt = 0;
         self.checkpoints_taken += 1;
         obs.on_checkpoint(self.now, self.total_commits);
+        if let Some(h) = self.obs.clone() {
+            h.inc("fault/checkpoints");
+            h.observe("fault/ckpt_save_secs", (done - self.now).max(0.0));
+            let data = vec![("version", Json::Num(self.total_commits as f64))];
+            h.event(self.now, "checkpoint", data);
+        }
     }
 
     /// Restart bootstrap for a crashed worker — the join-snapshot path:
     /// counters at the active minimum, model freshly pulled from the PS's
     /// consistent state (the restored checkpoint cut, after a failover).
     fn on_worker_restart(&mut self, w: usize) -> Result<()> {
+        if let Some(h) = self.obs.clone() {
+            h.inc("fault/worker_restarts");
+            h.event(self.now, "worker_restart", vec![("worker", Json::Num(w as f64))]);
+        }
         let entry = self.cluster.join_progress(w, &self.progress);
         self.progress[w] = entry;
         self.workers[w].params = self.global.clone();
@@ -847,6 +942,16 @@ impl SimEngine {
         in_use.dedup();
         self.runtime.warmup_for(&in_use).context("compiling artifacts")?;
 
+        let hub = self.obs.clone();
+        if let Some(h) = &hub {
+            let data = vec![
+                ("model", Json::str(self.spec.model.clone())),
+                ("sync", Json::str(self.spec.sync.kind.name())),
+                ("backend", Json::str("sim")),
+            ];
+            h.event(0.0, "run_start", data);
+        }
+
         // Initial schedule.
         self.push_event(0.0, EventKind::Eval);
         self.push_event(self.spec.sync.gamma, EventKind::Checkpoint);
@@ -874,6 +979,7 @@ impl SimEngine {
                     continue;
                 }
             }
+            let handle_t0 = hub.as_ref().map(|_| std::time::Instant::now());
             match ev.kind {
                 EventKind::Ready(w) => {
                     if let Some(p) = self.workers[w].pending_pull.take() {
@@ -928,6 +1034,9 @@ impl SimEngine {
                         .zip(&self.cluster.active)
                         .any(|(&until, &active)| active && until > now);
                     if !still_dark {
+                        if let Some(h) = &hub {
+                            h.event(self.now, "blackout_lift", vec![]);
+                        }
                         self.with_view(|policy, view| policy.on_cluster_change(view));
                     }
                 }
@@ -948,9 +1057,24 @@ impl SimEngine {
                     // Re-notify the policy once no shard is still down (a
                     // later overlapping failure scheduled its own event).
                     if self.cluster.ps_down_until() <= self.now {
+                        if let Some(h) = &hub {
+                            h.inc("fault/ps_recoveries");
+                            h.event(self.now, "ps_recover", vec![]);
+                        }
                         self.with_view(|policy, view| policy.on_cluster_change(view));
                     }
                 }
+            }
+            if let Some(h) = &hub {
+                let name = ev.kind.name();
+                h.inc(&format!("sim/events/{name}"));
+                if let Some(t0) = handle_t0 {
+                    let spent = t0.elapsed().as_secs_f64();
+                    h.observe(&format!("wall/sim/handle_secs/{name}"), spent);
+                }
+                let depth = self.queue.len() as f64;
+                h.gauge("sim/event_queue_depth", depth);
+                h.max_gauge("sim/event_queue_depth_peak", depth);
             }
             self.wake_blocked()?;
             if self.total_steps >= self.spec.max_total_steps {
@@ -980,6 +1104,16 @@ impl SimEngine {
         let final_accuracy =
             self.loss_log.samples.last().map(|s| s.accuracy).unwrap_or(f64::NAN);
 
+        if let Some(h) = &hub {
+            h.gauge("wall/sim/run_secs", wall_start.elapsed().as_secs_f64());
+            let data = vec![
+                ("end_time", Json::Num(self.now)),
+                ("commits", Json::Num(self.total_commits as f64)),
+                ("steps", Json::Num(self.total_steps as f64)),
+            ];
+            h.event(self.now, "run_end", data);
+        }
+
         Ok(RunReport {
             model: self.spec.model.clone(),
             sync: self.spec.sync.kind,
@@ -1000,6 +1134,7 @@ impl SimEngine {
             lost_commits: self.lost_commits,
             checkpoints_taken: self.checkpoints_taken,
             checkpoint_overhead_secs: self.checkpoint_secs,
+            metrics: hub.as_ref().and_then(|h| h.snapshot_metrics()),
             engine: EngineStats::Sim {
                 xla_execs: self.runtime.executions(),
                 xla_secs: self.runtime.execution_secs(),

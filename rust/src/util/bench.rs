@@ -7,13 +7,29 @@
 //! ```text
 //! bench fig4/local_steps_k16 ... 20 iters  min 1.234ms  mean 1.301ms  p50 1.280ms  p95 1.402ms
 //! ```
+//!
+//! Every result is also collected on the harness; [`BenchHarness::write_json`]
+//! dumps the whole group as `BENCH_<group>.json` (throughput, wall time,
+//! peak RSS) into `$ADSP_BENCH_JSON_DIR` when that variable is set — the
+//! machine-readable trajectory CI's bench-regression job diffs against the
+//! committed baselines in `rust/benches/baselines/`.
 
+use std::cell::RefCell;
+use std::path::PathBuf;
 use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
 
 pub struct BenchHarness {
     group: String,
     warmup: usize,
     iters: usize,
+    started: Instant,
+    /// Every stat this harness produced, in run order (interior mutability
+    /// so `run(&self, ..)` call sites stay unchanged).
+    results: RefCell<Vec<BenchResult>>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +39,38 @@ pub struct BenchStats {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+}
+
+/// One named bench plus the work units a single iteration processes
+/// (commits applied, parameters touched, ops — whatever the bench counts;
+/// 0 when it has no natural unit and throughput is meaningless).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub units_per_iter: u64,
+    pub stats: BenchStats,
+}
+
+impl BenchResult {
+    /// Units per second at the best iteration — the least noisy summary on
+    /// shared CI runners (mean folds in scheduler hiccups). 0.0 when the
+    /// bench declared no units.
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.units_per_iter == 0 || self.stats.min_s <= 0.0 {
+            return 0.0;
+        }
+        self.units_per_iter as f64 / self.stats.min_s
+    }
+}
+
+/// Index of the `pct`-th percentile in a sorted sample of `n` items,
+/// clamped into bounds — `n = 1` must index 0 for every percentile, and
+/// p95 of small samples must not run past the end.
+fn percentile_index(n: usize, pct: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    (n * pct / 100).min(n - 1)
 }
 
 fn fmt_secs(s: f64) -> String {
@@ -37,9 +85,36 @@ fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Peak resident set size of this process in bytes. Primary source is the
+/// kernel's own high-water mark (`VmHWM` in `/proc/self/status`, in kB);
+/// if that is unreadable, fall back to the *current* RSS from
+/// `/proc/self/statm` (pages × 4096). `None` on non-Linux systems — the
+/// bench JSON then carries `"peak_rss_bytes": null`.
+pub fn peak_rss_bytes() -> Option<u64> {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb = rest.trim().trim_end_matches("kB").trim();
+                if let Ok(kb) = kb.parse::<u64>() {
+                    return Some(kb * 1024);
+                }
+            }
+        }
+    }
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let rss_pages = statm.split_whitespace().nth(1)?.parse::<u64>().ok()?;
+    Some(rss_pages * 4096)
+}
+
 impl BenchHarness {
     pub fn new(group: &str) -> Self {
-        BenchHarness { group: group.to_string(), warmup: 2, iters: 10 }
+        BenchHarness {
+            group: group.to_string(),
+            warmup: 2,
+            iters: 10,
+            started: Instant::now(),
+            results: RefCell::new(Vec::new()),
+        }
     }
 
     pub fn with_iters(mut self, warmup: usize, iters: usize) -> Self {
@@ -49,7 +124,19 @@ impl BenchHarness {
     }
 
     /// Time `f` and print one result line; returns the stats.
-    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> BenchStats {
+    pub fn run<R>(&self, name: &str, f: impl FnMut() -> R) -> BenchStats {
+        self.run_throughput(name, 0, f)
+    }
+
+    /// Time `f` like [`BenchHarness::run`], declaring that one iteration
+    /// processes `units_per_iter` work units so the JSON dump can report
+    /// a throughput (units / best-iteration seconds).
+    pub fn run_throughput<R>(
+        &self,
+        name: &str,
+        units_per_iter: u64,
+        mut f: impl FnMut() -> R,
+    ) -> BenchStats {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -60,12 +147,13 @@ impl BenchHarness {
             times.push(t0.elapsed().as_secs_f64());
         }
         times.sort_by(f64::total_cmp);
+        let n = times.len();
         let stats = BenchStats {
             iters: self.iters,
             min_s: times[0],
-            mean_s: times.iter().sum::<f64>() / times.len() as f64,
-            p50_s: times[times.len() / 2],
-            p95_s: times[(times.len() * 95 / 100).min(times.len() - 1)],
+            mean_s: times.iter().sum::<f64>() / n as f64,
+            p50_s: times[percentile_index(n, 50)],
+            p95_s: times[percentile_index(n, 95)],
         };
         println!(
             "bench {}/{} ... {} iters  min {}  mean {}  p50 {}  p95 {}",
@@ -77,7 +165,56 @@ impl BenchHarness {
             fmt_secs(stats.p50_s),
             fmt_secs(stats.p95_s),
         );
+        let result = BenchResult { name: name.to_string(), units_per_iter, stats };
+        self.results.borrow_mut().push(result);
         stats
+    }
+
+    /// The whole group as one JSON document (the `BENCH_<group>.json`
+    /// schema): group name, harness wall time, peak RSS (null when
+    /// unavailable), and one entry per bench with its timing stats,
+    /// declared units, and derived throughput.
+    pub fn to_json(&self) -> Json {
+        let mut entries = Vec::new();
+        for r in self.results.borrow().iter() {
+            entries.push(Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("iters", Json::Num(r.stats.iters as f64)),
+                ("min_s", Json::Num(r.stats.min_s)),
+                ("mean_s", Json::Num(r.stats.mean_s)),
+                ("p50_s", Json::Num(r.stats.p50_s)),
+                ("p95_s", Json::Num(r.stats.p95_s)),
+                ("units_per_iter", Json::Num(r.units_per_iter as f64)),
+                ("throughput_per_sec", Json::Num(r.throughput_per_sec())),
+            ]));
+        }
+        let peak = match peak_rss_bytes() {
+            Some(b) => Json::Num(b as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("group", Json::str(self.group.clone())),
+            ("wall_secs", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("peak_rss_bytes", peak),
+            ("results", Json::Arr(entries)),
+        ])
+    }
+
+    /// Write `BENCH_<group>.json` into `$ADSP_BENCH_JSON_DIR` and return
+    /// its path. A no-op returning `Ok(None)` when the variable is unset,
+    /// so plain `cargo bench` runs never touch the filesystem.
+    pub fn write_json(&self) -> Result<Option<PathBuf>> {
+        let Some(dir) = std::env::var_os("ADSP_BENCH_JSON_DIR") else {
+            return Ok(None);
+        };
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bench JSON dir {dir:?}"))?;
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        std::fs::write(&path, self.to_json().dump_pretty())
+            .with_context(|| format!("writing bench JSON {path:?}"))?;
+        Ok(Some(path))
     }
 }
 
@@ -106,5 +243,64 @@ mod tests {
         assert!(fmt_secs(2.5e-5).ends_with("us"));
         assert!(fmt_secs(2.5e-3).ends_with("ms"));
         assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn percentile_index_stays_in_bounds() {
+        // One sample: every percentile is that sample.
+        assert_eq!(percentile_index(1, 50), 0);
+        assert_eq!(percentile_index(1, 95), 0);
+        // Two samples: p50 picks the upper one, p95 must clamp to 1 (the
+        // unclamped 2*95/100 = 1 here, but 0-padding mistakes would panic).
+        assert_eq!(percentile_index(2, 50), 1);
+        assert_eq!(percentile_index(2, 95), 1);
+        // Twenty samples: the indices the harness historically produced.
+        assert_eq!(percentile_index(20, 50), 10);
+        assert_eq!(percentile_index(20, 95), 19);
+        // Degenerate zero-length input cannot underflow.
+        assert_eq!(percentile_index(0, 95), 0);
+    }
+
+    #[test]
+    fn single_iter_run_does_not_panic_and_percentiles_coincide() {
+        let h = BenchHarness::new("test").with_iters(0, 1);
+        let s = h.run("one_iter", || 42u32);
+        assert_eq!(s.iters, 1);
+        assert_eq!(s.min_s, s.p50_s);
+        assert_eq!(s.p50_s, s.p95_s);
+    }
+
+    #[test]
+    fn two_iter_run_keeps_p95_in_bounds() {
+        let h = BenchHarness::new("test").with_iters(0, 2);
+        let s = h.run("two_iters", || 42u32);
+        assert_eq!(s.iters, 2);
+        assert!(s.min_s <= s.p95_s);
+    }
+
+    #[test]
+    fn throughput_and_json_schema() {
+        let h = BenchHarness::new("unit_json").with_iters(0, 3);
+        h.run_throughput("work", 1000, || {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        });
+        h.run("unitless", || 7u8);
+        let j = h.to_json();
+        assert_eq!(j.get("group").and_then(|g| g.as_str().ok()), Some("unit_json"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        let tp = results[0].get("throughput_per_sec").unwrap().as_f64().unwrap();
+        // 1000 units over >= 100us of sleep: positive and under 10M/s.
+        assert!(tp > 0.0 && tp < 1e7, "throughput {tp}");
+        let tp2 = results[1].get("throughput_per_sec").unwrap().as_f64().unwrap();
+        assert_eq!(tp2, 0.0);
+    }
+
+    #[test]
+    fn peak_rss_is_plausible_on_linux() {
+        if let Some(b) = peak_rss_bytes() {
+            // More than one page, less than a terabyte.
+            assert!(b > 4096 && b < (1 << 40), "peak rss {b}");
+        }
     }
 }

@@ -1112,3 +1112,126 @@ fn run_report_json_dump_round_trips_through_files() {
     assert_eq!(back.total_steps, report.total_steps);
     assert_eq!(back.loss_log.samples.len(), report.loss_log.samples.len());
 }
+
+// ---------------------------------------------------------------------------
+// observability subsystem
+// ---------------------------------------------------------------------------
+
+#[test]
+fn obs_disabled_and_enabled_sim_runs_bit_identical_for_all_policies() {
+    // The observability acceptance pin: attaching a full ObsHub (metrics +
+    // trace) must not perturb one bit of the simulator's output for any
+    // sync policy — taps never draw RNG and never touch engine state. The
+    // observed run must additionally populate RunReport::metrics and the
+    // trace ring, with the eval counter agreeing with the loss log.
+    require_artifacts!("mlp_quick");
+    use adsp::obs::{ObsConfig, ObsHub};
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("mlp_quick", kind);
+        let plain = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+        assert!(plain.metrics.is_none(), "{kind}: metrics without a hub");
+
+        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096) });
+        let observed = Run::from_spec(spec)
+            .backend(Backend::Sim)
+            .observability(&hub)
+            .execute()
+            .unwrap();
+        assert_reports_bit_identical(&plain, &observed, kind.name());
+
+        let metrics = observed.metrics.as_ref().expect("observed run lost its metrics");
+        assert_eq!(
+            metrics.counter("sim/evals"),
+            observed.loss_log.samples.len() as u64,
+            "{kind}: eval counter disagrees with the loss log"
+        );
+        assert!(
+            metrics.counter("net/commits_sent") >= observed.total_commits,
+            "{kind}: sent fewer commits than were applied"
+        );
+        assert!(hub.trace_len() > 0, "{kind}: trace ring stayed empty");
+    }
+}
+
+#[test]
+fn same_seed_sim_runs_produce_identical_metrics_snapshots() {
+    // Determinism of the metrics themselves: two same-seed sim runs must
+    // produce bit-equal deterministic views (counters, gauges, histogram
+    // buckets) — only the wall/ namespace may differ between runs. The
+    // snapshot must also survive a JSON round trip unchanged.
+    require_artifacts!("mlp_quick");
+    use adsp::obs::{MetricsRegistry, ObsConfig, ObsHub};
+    let run_once = || {
+        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: None });
+        let report = Run::from_spec(tiny_spec("mlp_quick", SyncModelKind::Adsp))
+            .backend(Backend::Sim)
+            .observability(&hub)
+            .execute()
+            .unwrap();
+        report.metrics.expect("metrics missing")
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(
+        a.deterministic_view(),
+        b.deterministic_view(),
+        "same-seed runs disagree outside wall/"
+    );
+    let back = MetricsRegistry::from_json(&a.to_json()).unwrap();
+    assert_eq!(back, a, "metrics snapshot JSON round trip drifted");
+    // The wall/ namespace exists (handling time is recorded) but is
+    // stripped from the deterministic view.
+    assert!(a.deterministic_view().histograms().keys().all(|k| !k.starts_with("wall/")));
+}
+
+#[test]
+fn realtime_run_populates_metrics_and_trace() {
+    // The realtime engine feeds the same hub surface: per-shard PS apply
+    // histograms, commit round-trip latency, byte counters, and a
+    // time-ordered trace stream bracketed by run_start / run_end.
+    require_artifacts!("mlp_quick");
+    use adsp::obs::{ObsConfig, ObsHub, TraceRecorder};
+    let mut spec = tiny_spec("mlp_quick", SyncModelKind::Adsp);
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 1200;
+    spec.eval_interval_secs = 10.0;
+    spec.shards = 2;
+    let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096) });
+    let report = Run::from_spec(spec)
+        .backend(Backend::Realtime { time_scale: 0.01 })
+        .observability(&hub)
+        .execute()
+        .unwrap();
+
+    let metrics = report.metrics.as_ref().expect("realtime run lost its metrics");
+    assert_eq!(
+        metrics.counter("realtime/evals"),
+        report.loss_log.samples.len() as u64,
+        "eval counter disagrees with the loss log"
+    );
+    assert_eq!(
+        metrics.counter("realtime/commits_applied"),
+        report.total_commits,
+        "commit counter disagrees with the report"
+    );
+    let rtt = metrics.histogram("realtime/commit_rtt_secs").expect("no commit RTT histogram");
+    assert!(rtt.count() > 0 && rtt.sum() > 0.0, "commit RTT never observed");
+    let shard0 = metrics.histogram("ps/shard0/apply_secs").expect("no shard apply histogram");
+    assert!(shard0.count() > 0, "shard 0 never timed an apply");
+    assert!(metrics.counter("ps/commits") > 0, "PS commit counter empty");
+
+    // Trace: write, parse back, and check ordering + bracketing.
+    let dir = std::env::temp_dir().join("adsp_obs_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("realtime_trace.jsonl");
+    let n = hub.write_trace_jsonl(&path).unwrap();
+    assert!(n > 0, "trace file empty");
+    let events = TraceRecorder::parse_jsonl(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(events.len(), n);
+    assert_eq!(events.first().unwrap().kind, "run_start");
+    assert_eq!(events.last().unwrap().kind, "run_end");
+    for pair in events.windows(2) {
+        assert!(pair[0].t <= pair[1].t, "trace not time-ordered: {} > {}", pair[0].t, pair[1].t);
+    }
+    assert!(report.wall_secs < 30.0, "realtime obs run took too long");
+}

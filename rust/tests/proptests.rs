@@ -1169,7 +1169,28 @@ fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
 // ---------------------------------------------------------------------------
 
 use adsp::metrics::{Breakdown, LossLog, WorkerMetrics};
+use adsp::obs::MetricsRegistry;
 use adsp::run::{EngineStats, RunReport};
+
+/// A random metrics registry with finite gauges only — the serializer
+/// writes NaN/Inf as JSON `null`, which by design cannot round-trip, so
+/// randomized round-trip cases stay in the finite domain.
+fn random_registry(r: &mut Rng) -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    for i in 0..r.below(6) {
+        reg.add(&format!("c/val{i}"), r.next_u64() >> 14);
+    }
+    for i in 0..r.below(4) {
+        reg.set_gauge(&format!("g/val{i}"), (r.next_f64() - 0.5) * 1e6);
+    }
+    for i in 0..r.below(3) {
+        let name = format!("h/val{i}");
+        for _ in 0..r.below(40) {
+            reg.observe(&name, r.next_f64() * 10.0);
+        }
+    }
+    reg
+}
 
 /// A random, finite-valued report covering both engine variants, empty and
 /// populated logs, converged and capped runs.
@@ -1232,6 +1253,7 @@ fn random_report(r: &mut Rng) -> RunReport {
         lost_commits: r.next_u64() >> 40,
         checkpoints_taken: r.next_u64() >> 40,
         checkpoint_overhead_secs: r.next_f64() * 60.0,
+        metrics: if r.below(3) == 0 { None } else { Some(random_registry(r)) },
         engine,
     }
 }
@@ -1288,5 +1310,83 @@ fn run_report_json_roundtrip_is_lossless() {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "case {case}: loss bits");
             assert_eq!(a.t.to_bits(), b.t.to_bits(), "case {case}: t bits");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// observability: randomized trace + registry round trips
+// ---------------------------------------------------------------------------
+
+use adsp::obs::{TraceEvent, TraceRecorder};
+
+#[test]
+fn prop_trace_jsonl_roundtrip_is_lossless_and_time_ordered() {
+    // Random event streams — out-of-order stamps, occasional NaN, small
+    // ring capacities — must (a) come out monotonically time-ordered,
+    // (b) respect the capacity with exact dropped accounting, and
+    // (c) survive the JSONL dump → parse cycle bit-exactly.
+    let mut rng = Rng::new(0x7_2ACE);
+    let kinds = ["commit", "eval", "cluster", "checkpoint", "run_end"];
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let capacity = 1 + r.below(24);
+        let total = r.below(64);
+        let mut tr = TraceRecorder::new(capacity);
+        for i in 0..total {
+            // Mostly increasing, sometimes jumping backwards, rarely NaN.
+            let t = match r.below(10) {
+                0 => f64::NAN,
+                1..=2 => r.next_f64() * 5.0, // may land before last_t
+                _ => i as f64 + r.next_f64(),
+            };
+            let data = vec![("i", Json::Num(i as f64))];
+            tr.record(t, r.next_f64() * 3.0, kinds[r.below(kinds.len())], data);
+        }
+        assert!(tr.len() <= capacity, "case {case}: ring overflowed");
+        assert_eq!(
+            tr.len() as u64 + tr.dropped(),
+            total as u64,
+            "case {case}: dropped accounting broken"
+        );
+        let events: Vec<TraceEvent> = tr.events().cloned().collect();
+        for pair in events.windows(2) {
+            assert!(
+                pair[0].t <= pair[1].t,
+                "case {case}: stream not monotone ({} > {})",
+                pair[0].t,
+                pair[1].t
+            );
+            assert!(pair[0].t.is_finite(), "case {case}: non-finite stamp survived");
+        }
+        let back = TraceRecorder::parse_jsonl(&tr.to_jsonl())
+            .unwrap_or_else(|e| panic!("case {case}: parse failed: {e}"));
+        assert_eq!(back, events, "case {case}: JSONL round trip drifted");
+        for (a, b) in back.iter().zip(&events) {
+            assert_eq!(a.t.to_bits(), b.t.to_bits(), "case {case}: t bits");
+            assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "case {case}: wall_s bits");
+        }
+    }
+}
+
+#[test]
+fn prop_metrics_registry_json_roundtrip_is_lossless() {
+    // Registry snapshots (counters, finite gauges, histograms on the
+    // default latency buckets) survive the JSON cycle exactly — the
+    // contract behind comparing two runs' dumped `--metrics` files.
+    let mut rng = Rng::new(0x0B5_0B5);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let reg = random_registry(&mut r);
+        let text = if case % 2 == 0 {
+            reg.to_json().dump_pretty()
+        } else {
+            reg.to_json().dump()
+        };
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let back = MetricsRegistry::from_json(&parsed)
+            .unwrap_or_else(|e| panic!("case {case}: from_json failed: {e}"));
+        assert_eq!(back, reg, "case {case}: registry round trip drifted");
+        // The deterministic view of a wall/-free registry is itself.
+        assert_eq!(reg.deterministic_view(), reg, "case {case}: view dropped entries");
     }
 }

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Diff freshly-emitted BENCH_*.json files against committed baselines.
+
+Benches built on `adsp::util::BenchHarness` dump one JSON document per
+group (`BENCH_<group>.json`, schema 1) when `ADSP_BENCH_JSON_DIR` is set.
+This checker compares the `throughput_per_sec` of every baseline entry
+with declared work units (`units_per_iter > 0`) against the current run:
+
+  * FAIL  current < baseline * (1 - tolerance)      (throughput regression)
+  * FAIL  a baseline bench is missing from the run  (silently dropped)
+  * WARN  current > baseline * 4                    (stale-floor baseline —
+          refresh it with --update so the gate regains teeth)
+
+Baselines in this repo start as conservative LOW floors (committed before
+any CI measurement existed), so WARNs are expected until the first
+--update lands; FAILs always mean something real.
+
+Usage:
+  check_bench_regression.py --baseline-dir rust/benches/baselines \
+      --current-dir /tmp/adsp-bench [--tolerance 0.25] [--update]
+"""
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+
+def load_results(path):
+    """name -> result dict for one BENCH_*.json document."""
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != 1:
+        sys.exit(f"{path}: unsupported bench schema {doc.get('schema')!r}")
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", required=True, type=pathlib.Path)
+    ap.add_argument("--current-dir", required=True, type=pathlib.Path)
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional throughput drop below baseline (default 0.25)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the current BENCH_*.json files over the baselines and exit",
+    )
+    args = ap.parse_args()
+
+    baselines = sorted(args.baseline_dir.glob("BENCH_*.json"))
+    if not baselines:
+        sys.exit(f"no BENCH_*.json baselines under {args.baseline_dir}")
+
+    if args.update:
+        for base in baselines:
+            cur = args.current_dir / base.name
+            if cur.exists():
+                shutil.copyfile(cur, base)
+                print(f"updated {base} from {cur}")
+            else:
+                print(f"WARN: no current file for {base.name}; baseline kept")
+        return
+
+    failures = []
+    warnings = []
+    checked = 0
+    for base in baselines:
+        cur_path = args.current_dir / base.name
+        if not cur_path.exists():
+            failures.append(f"{base.name}: no current run emitted (bench dropped?)")
+            continue
+        base_results = load_results(base)
+        cur_results = load_results(cur_path)
+        for name, b in sorted(base_results.items()):
+            floor_tp = b.get("throughput_per_sec", 0.0)
+            if b.get("units_per_iter", 0) <= 0 or floor_tp <= 0.0:
+                continue  # no declared units: nothing comparable
+            c = cur_results.get(name)
+            if c is None:
+                failures.append(f"{base.name}/{name}: missing from current run")
+                continue
+            cur_tp = c.get("throughput_per_sec", 0.0)
+            checked += 1
+            floor = floor_tp * (1.0 - args.tolerance)
+            verdict = "ok"
+            if cur_tp < floor:
+                failures.append(
+                    f"{base.name}/{name}: {cur_tp:.3g}/s < floor {floor:.3g}/s "
+                    f"(baseline {floor_tp:.3g}/s, tolerance {args.tolerance:.0%})"
+                )
+                verdict = "FAIL"
+            elif cur_tp > floor_tp * 4.0:
+                warnings.append(
+                    f"{base.name}/{name}: {cur_tp:.3g}/s is >4x the baseline "
+                    f"{floor_tp:.3g}/s — refresh the floor with --update"
+                )
+                verdict = "warn (stale floor)"
+            print(
+                f"{base.name}/{name}: baseline {floor_tp:.3g}/s "
+                f"current {cur_tp:.3g}/s ... {verdict}"
+            )
+
+    for w in warnings:
+        print(f"WARN: {w}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    if checked == 0:
+        sys.exit("no comparable bench entries found — gate is vacuous")
+    print(f"bench regression gate passed ({checked} entries checked)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+//! Fleet-scale scheduler bench behind the CI bench-regression gate.
+//!
+//! Runs the fig17 cohort experiment (`fleet_proxy` model — artifact-free,
+//! loss a pure function of the step counter) at increasing populations and
+//! reports scheduler throughput in events/sec. The event count per run is
+//! deterministic (same spec + seed → same trace), so it is learned from
+//! one probe run and then passed to the harness as `units_per_iter`.
+//!
+//! Guards the PR's scaling claim directly: ADSP at 10k workers must hold
+//! at least half the events/sec of 1k workers (the indexed event queue is
+//! O(log n); worker state is struct-of-arrays — throughput should be
+//! near-flat, and a 2× collapse means a hot-path regression).
+//!
+//! `ADSP_BENCH_FLEET_MAX` caps the largest population (CI sets 10000 to
+//! bound runtime); the 1k rung always runs.
+
+use adsp::experiments::fig17::fleet_spec;
+use adsp::run::{Backend, Run, RunReport};
+use adsp::sync::SyncModelKind;
+use adsp::util::BenchHarness;
+
+fn run_fleet(n: usize) -> RunReport {
+    Run::from_spec(fleet_spec(SyncModelKind::Adsp, n))
+        .backend(Backend::Sim)
+        .execute()
+        .expect("fleet sim run failed")
+}
+
+fn main() -> anyhow::Result<()> {
+    let h = BenchHarness::new("fleet").with_iters(1, 3);
+
+    let mut pops: Vec<usize> = vec![1_000, 10_000, 100_000];
+    if let Some(cap) =
+        std::env::var("ADSP_BENCH_FLEET_MAX").ok().and_then(|s| s.trim().parse::<usize>().ok())
+    {
+        pops.retain(|&n| n <= cap.max(1_000));
+    }
+
+    let mut events_per_sec: Vec<(usize, f64)> = Vec::new();
+    for &n in &pops {
+        let events = run_fleet(n).events_processed();
+        assert!(events > 0, "fleet run at n={n} processed no events");
+        let label = format!("fleet_adsp_{}k_events", n / 1_000);
+        let stats = h.run_throughput(&label, events, || run_fleet(n).total_steps);
+        events_per_sec.push((n, events as f64 / stats.min_s));
+    }
+
+    // The scaling claim: 10k within 2× of 1k (skipped when the cap hides
+    // either rung).
+    let at = |n: usize| events_per_sec.iter().find(|&&(p, _)| p == n).map(|&(_, t)| t);
+    if let (Some(t1k), Some(t10k)) = (at(1_000), at(10_000)) {
+        assert!(
+            t10k >= t1k / 2.0,
+            "fleet throughput collapsed: 10k workers ran {t10k:.0} events/s \
+             vs {t1k:.0} events/s at 1k (> 2x drop)"
+        );
+        println!("scaling 1k -> 10k: {t1k:.0} -> {t10k:.0} events/s");
+    }
+
+    if let Some(path) = h.write_json()? {
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}

@@ -38,6 +38,13 @@ pub enum ClusterEvent {
     /// `restart_after` seconds later through the join-snapshot path (model
     /// from the PS's consistent state, counters at the active minimum).
     WorkerCrash { t: f64, worker: usize, restart_after: f64 },
+    /// Every active member of the named `cell` crashes uncleanly at `t`
+    /// and rejoins `restart_after` seconds later — the cohort analogue of
+    /// [`ClusterEvent::WorkerCrash`]. Engines never see this variant:
+    /// `ExperimentSpec::expanded` rewrites it into one `WorkerCrash` per
+    /// cell member (in ascending worker order) once cohort membership is
+    /// known, so the simulation hot path stays free of label lookups.
+    CellCrash { t: f64, cell: String, restart_after: f64 },
     /// PS shard `shard` fails at `t`. Commits block until failover
     /// completes `recover_after` seconds later by restoring the last
     /// checkpoint — a consistent cut, so *every* shard rolls back together
@@ -55,6 +62,7 @@ impl ClusterEvent {
             | ClusterEvent::WorkerLeave { t, .. }
             | ClusterEvent::BandwidthChange { t, .. }
             | ClusterEvent::WorkerCrash { t, .. }
+            | ClusterEvent::CellCrash { t, .. }
             | ClusterEvent::ShardFailure { t, .. } => *t,
             ClusterEvent::CommBlackout { start, .. } => *start,
         }
@@ -70,6 +78,7 @@ impl ClusterEvent {
             ClusterEvent::BandwidthChange { .. } => "bandwidth_change",
             ClusterEvent::CommBlackout { .. } => "blackout",
             ClusterEvent::WorkerCrash { .. } => "crash",
+            ClusterEvent::CellCrash { .. } => "cell_crash",
             ClusterEvent::ShardFailure { .. } => "shard_failure",
         }
     }
@@ -136,6 +145,12 @@ impl ClusterEvent {
                 ("worker", Json::num(*worker as f64)),
                 ("restart_after", Json::num(*restart_after)),
             ]),
+            ClusterEvent::CellCrash { t, cell, restart_after } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("cell", Json::str(cell.clone())),
+                ("restart_after", Json::num(*restart_after)),
+            ]),
             ClusterEvent::ShardFailure { t, shard, recover_after } => Json::obj(vec![
                 ("kind", Json::str(self.kind_name())),
                 ("t", Json::num(*t)),
@@ -189,6 +204,11 @@ impl ClusterEvent {
                 worker: v.req("worker")?.as_usize()?,
                 restart_after: v.req("restart_after")?.as_f64()?,
             },
+            "cell_crash" => ClusterEvent::CellCrash {
+                t,
+                cell: v.req("cell")?.as_str()?.to_string(),
+                restart_after: v.req("restart_after")?.as_f64()?,
+            },
             "shard_failure" => ClusterEvent::ShardFailure {
                 t,
                 shard: v.req("shard")?.as_usize()?,
@@ -233,6 +253,11 @@ mod tests {
                 cell: Some("edge-a".to_string()),
             },
             ClusterEvent::WorkerCrash { t: 400.0, worker: 1, restart_after: 45.0 },
+            ClusterEvent::CellCrash {
+                t: 450.0,
+                cell: "edge-a".to_string(),
+                restart_after: 15.0,
+            },
             ClusterEvent::ShardFailure { t: 500.0, shard: 3, recover_after: 20.0 },
         ];
         for ev in events {

@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ClusterSpec, WorkerSpec};
 use crate::network::{LinkModel, NetworkSpec};
-use crate::sync::{assign_batchtune_sizes, SyncModelKind, WorkerProgress};
+use crate::sync::{assign_batchtune_sizes, SyncModelKind, WorkerProgress, WorkerSlabs};
 
 use super::event::ClusterEvent;
 
@@ -218,18 +218,18 @@ impl ClusterState {
     /// must not drag the bootstrap back to its stale counters. When no
     /// peer is up (everyone crashed at once), the entry keeps `w`'s own
     /// pre-outage counters rather than resetting to round 0.
-    pub fn join_progress(&self, w: usize, progress: &[WorkerProgress]) -> WorkerProgress {
-        let up = |p: &&WorkerProgress| p.active;
-        let amin = |f: fn(&WorkerProgress) -> u64, own: u64| {
-            progress.iter().filter(up).map(f).min().unwrap_or(own)
+    pub fn join_progress(&self, w: usize, progress: &WorkerSlabs) -> WorkerProgress {
+        // The slab's cached active-filtered minima make this O(1) — no
+        // population scan even on a fleet-scale join.
+        let own = |f: fn(&WorkerSlabs, usize) -> u64| {
+            if w < progress.len() { f(progress, w) } else { 0 }
         };
-        let own = progress.get(w);
-        WorkerProgress {
-            steps: amin(|p| p.steps, own.map(|p| p.steps).unwrap_or(0)),
-            commits: amin(|p| p.commits, own.map(|p| p.commits).unwrap_or(0)),
-            batch_size: self.batch_sizes[w],
-            ..Default::default()
-        }
+        let (steps, commits) = if progress.active_count() > 0 {
+            (progress.min_steps(), progress.min_commits())
+        } else {
+            (own(WorkerSlabs::steps), own(WorkerSlabs::commits))
+        };
+        WorkerProgress { steps, commits, batch_size: self.batch_sizes[w], ..Default::default() }
     }
 
     /// Heterogeneity degree H = mean(v)/min(v) over the *active* workers.
@@ -363,6 +363,12 @@ impl ClusterState {
                 self.down_until[w] = until;
                 Ok(ClusterDelta::Crashed { worker: w, until })
             }
+            ClusterEvent::CellCrash { cell, .. } => {
+                bail!(
+                    "cell_crash '{cell}' reached the live cluster unexpanded; run the spec \
+                     through ExperimentSpec::expanded first"
+                );
+            }
             ClusterEvent::ShardFailure { t, shard, recover_after } => {
                 if *shard >= self.shard_down.len() {
                     bail!(
@@ -483,15 +489,15 @@ mod tests {
     #[test]
     fn join_progress_bootstraps_to_active_minimum() {
         let mut s = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
-        let mut progress = vec![WorkerProgress::default(); 3];
-        progress[0].steps = 50;
-        progress[0].commits = 5;
-        progress[1].steps = 80;
-        progress[1].commits = 7;
-        progress[2].steps = 10; // straggler…
-        progress[2].commits = 1;
+        let mut progress = WorkerSlabs::from_records(&vec![WorkerProgress::default(); 3]);
+        progress.set_steps(0, 50);
+        progress.set_commits(0, 5);
+        progress.set_steps(1, 80);
+        progress.set_commits(1, 7);
+        progress.set_steps(2, 10); // straggler…
+        progress.set_commits(2, 1);
         s.apply_event(&ClusterEvent::WorkerLeave { t: 0.0, worker: 2 }).unwrap();
-        progress[2].active = false; // …left
+        progress.set_active(2, false); // …left
         let j = s
             .apply_event(&ClusterEvent::WorkerJoin { t: 1.0, spec: WorkerSpec::new(1.0, 0.1) })
             .unwrap();

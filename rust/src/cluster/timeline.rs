@@ -44,9 +44,16 @@ impl ClusterTimeline {
     }
 
     /// Scripted unclean worker crashes (the real-time engine keeps its
-    /// commit channel open when threads must respawn mid-run).
+    /// commit channel open when threads must respawn mid-run). An
+    /// unexpanded [`ClusterEvent::CellCrash`] counts once — it becomes at
+    /// least one worker crash after cohort expansion.
     pub fn crash_count(&self) -> usize {
-        self.events.iter().filter(|e| matches!(e, ClusterEvent::WorkerCrash { .. })).count()
+        self.events
+            .iter()
+            .filter(|e| {
+                matches!(e, ClusterEvent::WorkerCrash { .. } | ClusterEvent::CellCrash { .. })
+            })
+            .count()
     }
 
     /// True when the script contains any fault event (worker crash or PS
@@ -54,7 +61,12 @@ impl ClusterTimeline {
     /// failover always has a consistent cut to restore.
     pub fn has_fault_events(&self) -> bool {
         self.events.iter().any(|e| {
-            matches!(e, ClusterEvent::WorkerCrash { .. } | ClusterEvent::ShardFailure { .. })
+            matches!(
+                e,
+                ClusterEvent::WorkerCrash { .. }
+                    | ClusterEvent::CellCrash { .. }
+                    | ClusterEvent::ShardFailure { .. }
+            )
         })
     }
 
@@ -192,6 +204,14 @@ impl ClusterTimeline {
                     }
                     worker_down[*worker] = t + restart_after;
                 }
+                ClusterEvent::CellCrash { cell, .. } => {
+                    // Engines require the per-worker form; expansion happens
+                    // in `ExperimentSpec::expanded` before validation runs.
+                    bail!(
+                        "timeline event {i}: cell_crash '{cell}' must be expanded to \
+                         per-worker crashes (run the spec through ExperimentSpec::expanded)"
+                    );
+                }
                 ClusterEvent::ShardFailure { t, shard, recover_after } => {
                     if shards != usize::MAX && *shard >= shards {
                         bail!(
@@ -319,14 +339,30 @@ mod tests {
             ClusterEvent::WorkerJoin { t: 120.0, spec: WorkerSpec::new(2.0, 0.3) },
             ClusterEvent::WorkerLeave { t: 180.0, worker: 0 },
             ClusterEvent::WorkerCrash { t: 200.0, worker: 1, restart_after: 30.0 },
+            ClusterEvent::CellCrash {
+                t: 240.0,
+                cell: "edge-a".to_string(),
+                restart_after: 20.0,
+            },
             ClusterEvent::ShardFailure { t: 260.0, shard: 0, recover_after: 10.0 },
         ]);
         let back = ClusterTimeline::from_json(&Json::parse(&tl.to_json().dump()).unwrap())
             .unwrap();
         assert_eq!(back, tl);
         assert_eq!(back.join_count(), 1);
-        assert_eq!(back.crash_count(), 1);
+        assert_eq!(back.crash_count(), 2);
         assert!(back.has_fault_events());
+    }
+
+    #[test]
+    fn validate_rejects_unexpanded_cell_crash() {
+        let tl = ClusterTimeline::new(vec![ClusterEvent::CellCrash {
+            t: 10.0,
+            cell: "edge-a".to_string(),
+            restart_after: 5.0,
+        }]);
+        let err = tl.validate(3).unwrap_err().to_string();
+        assert!(err.contains("must be expanded"), "got: {err}");
     }
 
     #[test]

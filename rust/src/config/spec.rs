@@ -6,11 +6,16 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::ClusterTimeline;
+use crate::cluster::{ClusterEvent, ClusterTimeline};
 use crate::fault::FaultSpec;
 use crate::network::NetworkSpec;
 use crate::sync::SyncModelKind;
-use crate::util::Json;
+use crate::util::{Json, Rng};
+
+/// Domain separator for the cohort-expansion RNG stream (see
+/// [`ExperimentSpec::expanded`]): independent of the data, jitter and
+/// network streams so adding a cohort never perturbs them.
+const COHORT_STREAM: u64 = 0xC0_4027;
 
 /// One edge worker: relative training speed and communication overhead.
 #[derive(Clone, Debug, PartialEq)]
@@ -33,15 +38,185 @@ impl WorkerSpec {
     }
 }
 
-/// The emulated cluster: one PS + workers.
+/// A sampling distribution for one cohort attribute (speed, comm time).
+/// A bare JSON number is a point mass; the other shapes are tagged
+/// objects (`{"kind": "uniform", ...}` / `{"kind": "lognormal", ...}`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Dist {
+    /// Every member gets exactly this value — a degenerate cohort with
+    /// point distributions expands to workers identical to hand-written
+    /// [`WorkerSpec`]s (the bit-identity pin in the integration tests).
+    Point(f64),
+    /// Uniform on `[lo, hi]`.
+    Uniform { lo: f64, hi: f64 },
+    /// Log-normal parameterized by its median (`exp(mu)`) and the shape
+    /// `sigma` — the natural fit for edge-device speed populations, which
+    /// are multiplicative (a device is 2× or ½× the median, not ±x).
+    LogNormal { median: f64, sigma: f64 },
+}
+
+impl Dist {
+    /// Draw one value. `Point` never touches the RNG stream, so adding a
+    /// fixed attribute to a cohort does not shift the other draws.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Dist::Point(x) => x,
+            Dist::Uniform { lo, hi } => lo + (hi - lo) * rng.next_f64(),
+            Dist::LogNormal { median, sigma } => median * (sigma * rng.normal()).exp(),
+        }
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        match *self {
+            Dist::Point(x) => {
+                if !x.is_finite() {
+                    bail!("cohort {what}: point value must be finite");
+                }
+            }
+            Dist::Uniform { lo, hi } => {
+                if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                    bail!("cohort {what}: uniform needs finite lo <= hi, got [{lo}, {hi}]");
+                }
+            }
+            Dist::LogNormal { median, sigma } => {
+                if !(median > 0.0) || !median.is_finite() {
+                    bail!("cohort {what}: lognormal median must be positive, got {median}");
+                }
+                if !(sigma >= 0.0) || !sigma.is_finite() {
+                    bail!("cohort {what}: lognormal sigma must be >= 0, got {sigma}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON form: a bare number for `Point`, a tagged object otherwise.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            Dist::Point(x) => Json::num(x),
+            Dist::Uniform { lo, hi } => Json::obj(vec![
+                ("kind", Json::str("uniform")),
+                ("lo", Json::num(lo)),
+                ("hi", Json::num(hi)),
+            ]),
+            Dist::LogNormal { median, sigma } => Json::obj(vec![
+                ("kind", Json::str("lognormal")),
+                ("median", Json::num(median)),
+                ("sigma", Json::num(sigma)),
+            ]),
+        }
+    }
+
+    /// Parse the [`Dist::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<Dist> {
+        if let Json::Num(x) = v {
+            return Ok(Dist::Point(*x));
+        }
+        Ok(match v.req("kind")?.as_str()? {
+            "point" => Dist::Point(v.req("value")?.as_f64()?),
+            "uniform" => {
+                Dist::Uniform { lo: v.req("lo")?.as_f64()?, hi: v.req("hi")?.as_f64()? }
+            }
+            "lognormal" => Dist::LogNormal {
+                median: v.req("median")?.as_f64()?,
+                sigma: v.req("sigma")?.as_f64()?,
+            },
+            other => bail!("unknown distribution kind '{other}'"),
+        })
+    }
+}
+
+/// A fleet cohort: `count` workers drawn from shared distributions
+/// instead of written out one JSON object each — the only way a 1M-device
+/// spec stays human-sized. [`ExperimentSpec::expanded`] turns each cohort
+/// into `count` explicit [`WorkerSpec`]s deterministically per seed, so
+/// every engine and validation layer downstream still sees plain workers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CohortSpec {
+    /// Members to expand (must be positive).
+    pub count: usize,
+    /// Training-speed distribution (steps/s at the reference batch).
+    pub speed: Dist,
+    /// Commit round-trip O_i distribution (seconds).
+    pub comm_secs: Dist,
+    /// Mini-batch size for every member; 0 = the experiment default.
+    pub batch_size: usize,
+    /// Cell labels dealt round-robin across members (member `i` gets
+    /// `cells[i % cells.len()]`); empty = ungrouped. Cell-targeted
+    /// blackout/crash events can then drop one slice of the cohort.
+    pub cells: Vec<String>,
+}
+
+impl CohortSpec {
+    /// A cohort of `count` members drawn from `speed` and `comm_secs`.
+    pub fn new(count: usize, speed: Dist, comm_secs: Dist) -> Self {
+        CohortSpec { count, speed, comm_secs, batch_size: 0, cells: Vec::new() }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.count == 0 {
+            bail!("cohort count must be positive");
+        }
+        self.speed.validate("speed")?;
+        self.comm_secs.validate("comm_secs")?;
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("count", Json::num(self.count as f64)),
+            ("speed", self.speed.to_json()),
+            ("comm_secs", self.comm_secs.to_json()),
+            ("batch_size", Json::num(self.batch_size as f64)),
+        ];
+        if !self.cells.is_empty() {
+            pairs.push((
+                "cells",
+                Json::Arr(self.cells.iter().map(|c| Json::str(c.clone())).collect()),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<CohortSpec> {
+        Ok(CohortSpec {
+            count: v.req("count")?.as_usize()?,
+            speed: Dist::from_json(v.req("speed")?).context("parsing cohort speed")?,
+            comm_secs: match v.get("comm_secs") {
+                Some(d) => Dist::from_json(d).context("parsing cohort comm_secs")?,
+                None => Dist::Point(0.2),
+            },
+            batch_size: v.usize_or("batch_size", 0)?,
+            cells: match v.get("cells") {
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(|c| Ok(c.as_str()?.to_string()))
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            },
+        })
+    }
+}
+
+/// The emulated cluster: one PS + workers (explicit and/or cohorts).
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
     pub workers: Vec<WorkerSpec>,
+    /// Fleet cohorts, expanded into explicit workers (appended after
+    /// `workers`, in declaration order) by [`ExperimentSpec::expanded`].
+    pub cohorts: Vec<CohortSpec>,
 }
 
 impl ClusterSpec {
     pub fn new(workers: Vec<WorkerSpec>) -> Self {
-        ClusterSpec { workers }
+        ClusterSpec { workers, cohorts: Vec::new() }
+    }
+
+    /// Builder: attach fleet cohorts to expand at run time.
+    pub fn with_cohorts(mut self, cohorts: Vec<CohortSpec>) -> Self {
+        self.cohorts = cohorts;
+        self
     }
 
     pub fn m(&self) -> usize {
@@ -201,6 +376,11 @@ pub struct ExperimentSpec {
     /// `timeline`. The default is degenerate (checkpointing off) and
     /// bit-identical to the pre-fault behaviour.
     pub fault: FaultSpec,
+    /// Largest population for which the report materializes the
+    /// per-worker `workers` vector; above it the report carries only the
+    /// streaming aggregates (`breakdown`, `bytes_total`, totals), keeping
+    /// fleet-scale runs O(1) in report memory. Default 4096.
+    pub worker_metrics_cap: usize,
 }
 
 impl ExperimentSpec {
@@ -230,6 +410,7 @@ impl ExperimentSpec {
             timeline: ClusterTimeline::default(),
             network: NetworkSpec::default(),
             fault: FaultSpec::default(),
+            worker_metrics_cap: 4096,
         }
     }
 
@@ -263,21 +444,32 @@ impl ExperimentSpec {
         let v = Json::parse(text).context("parsing experiment JSON")?;
         let model = v.req("model")?.as_str()?.to_string();
 
-        let workers = v
-            .req("cluster")?
-            .req("workers")?
-            .as_arr()?
-            .iter()
-            .map(|w| {
-                Ok(WorkerSpec {
-                    speed: w.req("speed")?.as_f64()?,
-                    comm_secs: w.f64_or("comm_secs", 0.2)?,
-                    batch_size: w.usize_or("batch_size", 0)?,
-                    cell: w.str_or("cell", "")?.to_string(),
+        let cj = v.req("cluster")?;
+        // "workers" may be absent when the cluster is cohorts-only.
+        let workers = match cj.get("workers") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|w| {
+                    Ok(WorkerSpec {
+                        speed: w.req("speed")?.as_f64()?,
+                        comm_secs: w.f64_or("comm_secs", 0.2)?,
+                        batch_size: w.usize_or("batch_size", 0)?,
+                        cell: w.str_or("cell", "")?.to_string(),
+                    })
                 })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        let cluster = ClusterSpec::new(workers);
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let mut cluster = ClusterSpec::new(workers);
+        if let Some(coj) = cj.get("cohorts") {
+            cluster.cohorts = coj
+                .as_arr()?
+                .iter()
+                .map(CohortSpec::from_json)
+                .collect::<Result<_>>()
+                .context("parsing cohorts")?;
+        }
 
         let sj = v.req("sync")?;
         let kind = SyncModelKind::from_str(sj.req("kind")?.as_str()?)
@@ -322,6 +514,8 @@ impl ExperimentSpec {
         if let Some(f) = v.get("fault") {
             spec.fault = FaultSpec::from_json(f).context("parsing fault section")?;
         }
+        spec.worker_metrics_cap =
+            v.usize_or("worker_metrics_cap", spec.worker_metrics_cap)?;
         spec.validate()?;
         Ok(spec)
     }
@@ -329,9 +523,8 @@ impl ExperimentSpec {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
-            (
-                "cluster",
-                Json::obj(vec![(
+            ("cluster", {
+                let mut pairs = vec![(
                     "workers",
                     Json::Arr(
                         self.cluster
@@ -350,8 +543,17 @@ impl ExperimentSpec {
                             })
                             .collect(),
                     ),
-                )]),
-            ),
+                )];
+                if !self.cluster.cohorts.is_empty() {
+                    pairs.push((
+                        "cohorts",
+                        Json::Arr(
+                            self.cluster.cohorts.iter().map(|c| c.to_json()).collect(),
+                        ),
+                    ));
+                }
+                Json::obj(pairs)
+            }),
             (
                 "sync",
                 Json::obj(vec![
@@ -392,6 +594,7 @@ impl ExperimentSpec {
             ("timeline", self.timeline.to_json()),
             ("network", self.network.to_json()),
             ("fault", self.fault.to_json()),
+            ("worker_metrics_cap", Json::num(self.worker_metrics_cap as f64)),
         ])
     }
 
@@ -399,7 +602,89 @@ impl ExperimentSpec {
         Self::from_json_str(&std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?)
     }
 
+    /// Expand cohorts (and cell-targeted crash events) into their explicit
+    /// per-worker form. `None` = nothing to expand: the spec already is
+    /// its own expansion, and callers keep it untouched — the zero-cost
+    /// path every pre-cohort spec takes.
+    ///
+    /// Expansion is deterministic per `seed`: each cohort draws from its
+    /// own RNG stream (`seed ^ COHORT_STREAM`, split by cohort index), so
+    /// a cohort's members never depend on how many explicit workers or
+    /// earlier cohorts the spec has. Members are appended after the
+    /// explicit workers in cohort order; member `i` takes cell
+    /// `cells[i % cells.len()]`. A [`ClusterEvent::CellCrash`] is
+    /// rewritten into one `WorkerCrash` per member of the named cell (in
+    /// ascending worker order, same fire time), so the engines' hot paths
+    /// never do label lookups.
+    pub fn expanded(&self) -> Result<Option<ExperimentSpec>> {
+        let has_cell_crash = self
+            .timeline
+            .events()
+            .iter()
+            .any(|e| matches!(e, ClusterEvent::CellCrash { .. }));
+        if self.cluster.cohorts.is_empty() && !has_cell_crash {
+            return Ok(None);
+        }
+        let mut spec = self.clone();
+        let cohorts = std::mem::take(&mut spec.cluster.cohorts);
+        spec.cluster.workers.reserve(cohorts.iter().map(|c| c.count).sum());
+        for (ci, cohort) in cohorts.iter().enumerate() {
+            cohort.validate()?;
+            let mut rng = Rng::new(self.seed ^ COHORT_STREAM).split(ci as u64 + 1);
+            for i in 0..cohort.count {
+                // Fixed draw order (speed, then comm) so adding point
+                // attributes later cannot silently reshuffle the fleet.
+                let speed = cohort.speed.sample(&mut rng);
+                let comm_secs = cohort.comm_secs.sample(&mut rng);
+                let cell = if cohort.cells.is_empty() {
+                    String::new()
+                } else {
+                    cohort.cells[i % cohort.cells.len()].clone()
+                };
+                spec.cluster.workers.push(WorkerSpec {
+                    speed,
+                    comm_secs,
+                    batch_size: cohort.batch_size,
+                    cell,
+                });
+            }
+        }
+        if has_cell_crash {
+            let cells = spec.cluster.cells();
+            let mut events = Vec::with_capacity(spec.timeline.len());
+            for ev in spec.timeline.events() {
+                match ev {
+                    ClusterEvent::CellCrash { t, cell, restart_after } => {
+                        let before = events.len();
+                        for (w, c) in cells.iter().enumerate() {
+                            if c == cell {
+                                events.push(ClusterEvent::WorkerCrash {
+                                    t: *t,
+                                    worker: w,
+                                    restart_after: *restart_after,
+                                });
+                            }
+                        }
+                        if events.len() == before {
+                            bail!("cell_crash at t={t} targets cell '{cell}' with no members");
+                        }
+                    }
+                    other => events.push(other.clone()),
+                }
+            }
+            // The stable sort in `new` keeps same-t members ascending.
+            spec.timeline = ClusterTimeline::new(events);
+        }
+        Ok(Some(spec))
+    }
+
     pub fn validate(&self) -> Result<()> {
+        // A spec with cohorts or cell-targeted events is judged by what
+        // it expands to (the expansion has neither, so this recurses at
+        // most once).
+        if let Some(expanded) = self.expanded()? {
+            return expanded.validate();
+        }
         if self.cluster.workers.is_empty() {
             bail!("cluster has no workers");
         }
@@ -632,6 +917,156 @@ mod tests {
             cell: Some("edge-z".to_string()),
         }]);
         assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn cohorts_roundtrip_and_expand_deterministically() {
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2)]).with_cohorts(vec![
+                CohortSpec {
+                    count: 50,
+                    speed: Dist::LogNormal { median: 1.0, sigma: 0.5 },
+                    comm_secs: Dist::Uniform { lo: 0.1, hi: 0.5 },
+                    batch_size: 64,
+                    cells: vec!["cell-a".into(), "cell-b".into()],
+                },
+                CohortSpec::new(10, Dist::Point(2.0), Dist::Point(0.3)),
+            ]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.seed = 7;
+        // Cohorts survive the JSON round trip un-expanded.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.cluster.cohorts, spec.cluster.cohorts);
+        assert_eq!(back.cluster.workers.len(), 1);
+        // Expansion appends exactly count members after the explicit
+        // worker, deals cells round-robin, and is deterministic per seed.
+        let ex1 = spec.expanded().unwrap().unwrap();
+        let ex2 = back.expanded().unwrap().unwrap();
+        assert!(ex1.cluster.cohorts.is_empty());
+        assert_eq!(ex1.cluster.m(), 61);
+        assert_eq!(ex1.cluster.workers[1].cell, "cell-a");
+        assert_eq!(ex1.cluster.workers[2].cell, "cell-b");
+        assert_eq!(ex1.cluster.workers[3].cell, "cell-a");
+        assert_eq!(ex1.cluster.workers[51].cell, "");
+        for (a, b) in ex1.cluster.workers.iter().zip(&ex2.cluster.workers) {
+            assert_eq!(a, b);
+        }
+        assert!(ex1.cluster.workers[1..=50].iter().all(|w| w.speed > 0.0));
+        assert!((ex1.cluster.workers[51].speed - 2.0).abs() < 1e-12);
+        // A different seed draws a different fleet.
+        spec.seed = 8;
+        let ex3 = spec.expanded().unwrap().unwrap();
+        assert!(ex1
+            .cluster
+            .workers
+            .iter()
+            .zip(&ex3.cluster.workers)
+            .any(|(a, b)| a.speed != b.speed));
+        // An already-explicit spec has nothing to expand.
+        assert!(ex1.expanded().unwrap().is_none());
+        ex1.validate().unwrap();
+    }
+
+    #[test]
+    fn cell_crash_expands_to_member_crashes() {
+        use crate::cluster::ClusterEvent;
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2)]).with_cohorts(vec![
+                CohortSpec {
+                    count: 4,
+                    speed: Dist::Point(1.0),
+                    comm_secs: Dist::Point(0.2),
+                    batch_size: 0,
+                    cells: vec!["edge-a".into(), "edge-b".into()],
+                },
+            ]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CellCrash {
+            t: 30.0,
+            cell: "edge-a".to_string(),
+            restart_after: 10.0,
+        }]);
+        spec.validate().unwrap();
+        let ex = spec.expanded().unwrap().unwrap();
+        // Members 1 and 3 (cells dealt a,b,a,b after the explicit worker).
+        assert_eq!(
+            ex.timeline.events(),
+            &[
+                ClusterEvent::WorkerCrash { t: 30.0, worker: 1, restart_after: 10.0 },
+                ClusterEvent::WorkerCrash { t: 30.0, worker: 3, restart_after: 10.0 },
+            ]
+        );
+        // A cell with no members is rejected.
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CellCrash {
+            t: 30.0,
+            cell: "edge-z".to_string(),
+            restart_after: 10.0,
+        }]);
+        assert!(spec.expanded().is_err());
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn cohort_validation_rejects_bad_shapes() {
+        let base = |cohort| {
+            let mut s = ExperimentSpec::new(
+                "m",
+                ClusterSpec::new(vec![]).with_cohorts(vec![cohort]),
+                SyncSpec::new(SyncModelKind::Adsp),
+            );
+            s.seed = 1;
+            s
+        };
+        // Zero count.
+        let spec = base(CohortSpec::new(0, Dist::Point(1.0), Dist::Point(0.2)));
+        assert!(spec.validate().is_err());
+        // Uniform with lo > hi.
+        let spec =
+            base(CohortSpec::new(3, Dist::Uniform { lo: 2.0, hi: 1.0 }, Dist::Point(0.2)));
+        assert!(spec.validate().is_err());
+        // Lognormal with non-positive median.
+        let spec = base(CohortSpec::new(
+            3,
+            Dist::LogNormal { median: 0.0, sigma: 0.5 },
+            Dist::Point(0.2),
+        ));
+        assert!(spec.validate().is_err());
+        // Speeds sampled <= 0 are caught by the expanded validation.
+        let spec =
+            base(CohortSpec::new(3, Dist::Uniform { lo: -1.0, hi: -0.5 }, Dist::Point(0.2)));
+        assert!(spec.validate().is_err());
+        // A cohorts-only cluster (no explicit workers) is fine.
+        let spec = base(CohortSpec::new(3, Dist::Point(1.0), Dist::Point(0.2)));
+        spec.validate().unwrap();
+        // And parses from cohorts-only JSON with no "workers" key.
+        let text = r#"{
+  "model": "mlp_quick",
+  "cluster": { "cohorts": [ {"count": 4, "speed": 1.0} ] },
+  "sync": { "kind": "adsp" }
+}"#;
+        let parsed = ExperimentSpec::from_json_str(text).unwrap();
+        assert_eq!(parsed.cluster.cohorts.len(), 1);
+        assert_eq!(parsed.cluster.cohorts[0].speed, Dist::Point(1.0));
+        assert_eq!(parsed.cluster.cohorts[0].comm_secs, Dist::Point(0.2));
+        assert_eq!(parsed.expanded().unwrap().unwrap().cluster.m(), 4);
+    }
+
+    #[test]
+    fn worker_metrics_cap_roundtrips_with_default() {
+        let spec = ExperimentSpec::new(
+            "m",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.1)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        assert_eq!(spec.worker_metrics_cap, 4096);
+        let mut spec = spec;
+        spec.worker_metrics_cap = 128;
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.worker_metrics_cap, 128);
     }
 
     #[test]

@@ -53,7 +53,7 @@ use crate::obs::ObsHub;
 use crate::pserver::ShardedParameterServer;
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
-use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
+use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress, WorkerSlabs};
 use crate::util::Json;
 
 /// A worker→PS message: the accumulated update plus a reply channel for the
@@ -97,7 +97,9 @@ struct Shared {
     /// All initial threads rendezvous here after loading their runtimes
     /// (workers joining via the timeline skip it).
     barrier: Barrier,
-    progress: Mutex<Vec<WorkerProgress>>,
+    /// Struct-of-arrays worker counters (the same [`WorkerSlabs`] the
+    /// simulator uses), so policy barrier math stays O(1) under the lock.
+    progress: Mutex<WorkerSlabs>,
     policy: Mutex<Box<dyn SyncPolicy>>,
     metrics: Mutex<Vec<WorkerMetrics>>,
     stop: AtomicBool,
@@ -155,7 +157,13 @@ impl RealtimeEngine {
     /// PS/scheduler thread (evals, applied commits, timeline events,
     /// checkpoints — the same callback surface the simulator drives).
     pub fn run_observed(self, obs: &mut dyn RunObserver) -> Result<RunReport> {
+        // Cohort specs (and cell-targeted events) expand to explicit
+        // workers before any thread is spawned — same hook as the sim.
         let spec = self.spec.clone();
+        let spec = match spec.expanded()? {
+            Some(expanded) => expanded,
+            None => spec,
+        };
         spec.validate()?;
         if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
             // A zero/negative scale would make the virtual clock NaN/Inf
@@ -187,12 +195,13 @@ impl RealtimeEngine {
         let shared = Arc::new(Shared {
             start: OnceLock::new(),
             barrier: Barrier::new(m + 1),
-            progress: Mutex::new(
-                batch_sizes
-                    .iter()
-                    .map(|&b| WorkerProgress { batch_size: b, ..Default::default() })
-                    .collect(),
-            ),
+            progress: Mutex::new({
+                let mut slabs = WorkerSlabs::new();
+                for &b in &batch_sizes {
+                    slabs.push(WorkerProgress { batch_size: b, ..Default::default() });
+                }
+                slabs
+            }),
             policy: Mutex::new(make_policy(&spec.sync, &spec.cluster)),
             metrics: Mutex::new(vec![WorkerMetrics::default(); m]),
             stop: AtomicBool::new(false),
@@ -353,8 +362,8 @@ impl RealtimeEngine {
                             // mark its progress entry inactive + unblocked
                             // right away so barriers stop counting it.
                             let mut progress = shared.progress.lock().unwrap();
-                            progress[wl].active = false;
-                            progress[wl].blocked = false;
+                            progress.set_blocked(wl, false);
+                            progress.set_active(wl, false);
                         }
                         ClusterDelta::Joined(wj) => {
                             // Join-snapshot protocol: bootstrap counters to
@@ -395,12 +404,12 @@ impl RealtimeEngine {
                             // counting it until restart.
                             {
                                 let mut progress = shared.progress.lock().unwrap();
-                                progress[wc].active = false;
-                                progress[wc].blocked = false;
+                                progress.set_blocked(wc, false);
+                                progress.set_active(wc, false);
                                 // The uncommitted accumulator dies with the
                                 // thread: wasted work, as in the simulator.
-                                wasted_steps += progress[wc].local_since_commit;
-                                progress[wc].local_since_commit = 0;
+                                wasted_steps += progress.local_since_commit[wc];
+                                progress.local_since_commit[wc] = 0;
                             }
                             crash_gen[wc] += 1;
                             pending_restarts.push((until, wc));
@@ -478,7 +487,7 @@ impl RealtimeEngine {
                             }
                             let mut progress = shared.progress.lock().unwrap();
                             let entry = cluster.join_progress(wr, &progress);
-                            progress[wr] = entry;
+                            progress.set_record(wr, entry);
                         }
                         let boot = ps.snapshot();
                         let spec2 = spec.clone();
@@ -636,7 +645,7 @@ impl RealtimeEngine {
                             let mut progress = shared.progress.lock().unwrap();
                             let mut metrics = shared.metrics.lock().unwrap();
                             for msg in &batch {
-                                progress[msg.worker].commits += 1;
+                                progress.bump_commits(msg.worker);
                                 metrics[msg.worker].commits += 1;
                                 metrics[msg.worker].bytes_up += msg.up_bytes;
                                 metrics[msg.worker].bytes_down += bytes_per_commit;
@@ -700,14 +709,25 @@ impl RealtimeEngine {
             }
 
             let end_virtual = start.elapsed().as_secs_f64() / scale;
-            let workers = shared.metrics.lock().unwrap().clone();
-            // Members only, mirroring the simulator (identical to the
-            // plain average when nobody ever left).
-            let breakdown = {
-                let active = shared.cluster.lock().unwrap().active.clone();
-                Breakdown::from_active_workers(&workers, &active)
+            // Aggregates come from one streaming pass over the metrics
+            // slab; the per-worker vector itself is only materialized into
+            // the report under `worker_metrics_cap` (members only for the
+            // breakdown, mirroring the simulator — identical to the plain
+            // average when nobody ever left).
+            let active = shared.cluster.lock().unwrap().active.clone();
+            let (workers, breakdown, bytes_total) = {
+                let metrics = shared.metrics.lock().unwrap();
+                let breakdown = Breakdown::from_active_workers(&metrics, &active);
+                let bytes_total =
+                    metrics.iter().map(|w| w.bytes_up + w.bytes_down).sum();
+                let workers: Vec<WorkerMetrics> =
+                    if metrics.len() <= spec.worker_metrics_cap {
+                        metrics.clone()
+                    } else {
+                        Vec::new()
+                    };
+                (workers, breakdown, bytes_total)
             };
-            let bytes_total = workers.iter().map(|w| w.bytes_up + w.bytes_down).sum();
             let sync_describe = shared.policy.lock().unwrap().describe();
             let loss_log = std::mem::take(&mut ps.loss_log);
             if let Some(h) = &hub {
@@ -812,7 +832,7 @@ fn worker_loop(
     // must still hit the barrier on load failure or the PS would wait
     // forever; joiners never touch the barrier.
     let initial = boot.is_none();
-    let my_batch = shared.progress.lock().unwrap()[w].batch_size;
+    let my_batch = shared.progress.lock().unwrap().batch_size[w];
     let rt = match ModelRuntime::load_by_name(&spec.model).and_then(|rt| {
         rt.warmup_for(&[my_batch])?;
         Ok(rt)
@@ -871,8 +891,8 @@ fn worker_loop(
                 }
                 {
                     let mut progress = shared.progress.lock().unwrap();
-                    progress[w].steps += k;
-                    progress[w].local_since_commit += k;
+                    progress.bump_steps(w, k);
+                    progress.local_since_commit[w] += k;
                 }
                 shared.total_steps.fetch_add(k, Ordering::Relaxed);
                 let mut metrics = shared.metrics.lock().unwrap();
@@ -893,7 +913,7 @@ fn worker_loop(
                     };
                 let carried_steps = {
                     let mut progress = shared.progress.lock().unwrap();
-                    std::mem::take(&mut progress[w].local_since_commit)
+                    std::mem::take(&mut progress.local_since_commit[w])
                 };
                 // Re-read the link and lift time *now* — a bandwidth
                 // change or outage may have started during the training
@@ -949,12 +969,12 @@ fn worker_loop(
                 // Poll; blocked time is charged in virtual units.
                 {
                     let mut progress = shared.progress.lock().unwrap();
-                    progress[w].blocked = true;
+                    progress.set_blocked(w, true);
                 }
                 std::thread::sleep(Duration::from_secs_f64((0.05 * scale).max(0.0005)));
                 {
                     let mut progress = shared.progress.lock().unwrap();
-                    progress[w].blocked = false;
+                    progress.set_blocked(w, false);
                 }
                 let mut metrics = shared.metrics.lock().unwrap();
                 metrics[w].blocked_secs += 0.05;

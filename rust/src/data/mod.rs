@@ -45,6 +45,8 @@ pub fn make_source(
         ));
     }
     match name {
+        // The fleet-scale proxy runtime ignores batch contents entirely.
+        "fleet_proxy" => Box::new(synthetic::FleetProxy),
         "mlp_quick" => Box::new(synthetic::Blobs::new(
             manifest.x_shape[0],
             manifest.num_classes,

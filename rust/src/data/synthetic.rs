@@ -336,6 +336,26 @@ impl DataSource for BigramLm {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fleet-scale placeholder batches (fleet_proxy)
+// ---------------------------------------------------------------------------
+
+/// Zero-filled placeholder batches for the `fleet_proxy` synthetic runtime,
+/// which never reads the data — only the batch *dims* matter (the runtime
+/// takes `k` and `b` from them). Holding no RNG or task state keeps the
+/// per-worker cost of a million sources at a few bytes each.
+pub struct FleetProxy;
+
+impl DataSource for FleetProxy {
+    fn sample_batch(&mut self, k: usize, b: usize) -> (Batch, Batch) {
+        (Batch::f32(vec![k, b, 1], vec![0.0; k * b]), Batch::i32(vec![k, b], vec![0; k * b]))
+    }
+
+    fn eval_batch(&mut self, b: usize) -> (Batch, Batch) {
+        (Batch::f32(vec![b, 1], vec![0.0; b]), Batch::i32(vec![b], vec![0; b]))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

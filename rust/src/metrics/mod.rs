@@ -87,15 +87,38 @@ impl Breakdown {
     /// Average only the workers whose `active` flag is set (paired by
     /// index; extra entries of either slice are ignored). A set with no
     /// active workers — everyone left or crashed — returns the all-zero
-    /// breakdown instead of a 0/0 NaN.
+    /// breakdown instead of a 0/0 NaN. One pass, no materialized copy of
+    /// the kept workers: at fleet scale the old clone-then-average was an
+    /// O(workers) allocation on the report path.
     pub fn from_active_workers(ws: &[WorkerMetrics], active: &[bool]) -> Self {
-        let kept: Vec<WorkerMetrics> = ws
-            .iter()
-            .zip(active)
-            .filter(|(_, &a)| a)
-            .map(|(w, _)| w.clone())
-            .collect();
-        Breakdown::from_workers(&kept)
+        Breakdown::accumulate(
+            ws.iter().zip(active).filter(|(_, &a)| a).map(|(w, _)| {
+                (w.compute_secs, w.comm_secs, w.blocked_secs)
+            }),
+        )
+    }
+
+    /// Streaming core shared by every construction path: fold
+    /// `(compute, comm, blocked)` triples into sums, then divide once.
+    /// Empty input → all-zero breakdown.
+    fn accumulate(iter: impl Iterator<Item = (f64, f64, f64)>) -> Self {
+        let (mut n, mut compute, mut comm, mut blocked) = (0usize, 0.0, 0.0, 0.0);
+        for (cp, cm, bl) in iter {
+            n += 1;
+            compute += cp;
+            comm += cm;
+            blocked += bl;
+        }
+        if n == 0 {
+            return Breakdown::default();
+        }
+        let nf = n as f64;
+        Breakdown {
+            avg_compute_secs: compute / nf,
+            avg_waiting_secs: (comm + blocked) / nf,
+            avg_comm_secs: comm / nf,
+            avg_blocked_secs: blocked / nf,
+        }
     }
 
     /// Fraction of total time spent waiting (Fig. 1's headline number).
@@ -128,6 +151,100 @@ impl Breakdown {
             avg_comm_secs: v.req("avg_comm_secs")?.as_f64()?,
             avg_blocked_secs: v.req("avg_blocked_secs")?.as_f64()?,
         })
+    }
+}
+
+/// Struct-of-arrays store of the per-worker counters behind
+/// [`WorkerMetrics`]. The engines accumulate into these lanes directly on
+/// the hot path; the AoS [`WorkerMetrics`] records exist only at the
+/// report boundary ([`MetricsSlab::materialize`]) and are opt-in above the
+/// spec's `worker_metrics_cap` — a 1M-device run aggregates straight from
+/// the lanes ([`MetricsSlab::breakdown_active`]) without ever building a
+/// million small structs.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSlab {
+    /// Seconds spent computing gradients, per worker.
+    pub compute_secs: Vec<f64>,
+    /// Seconds spent communicating, per worker.
+    pub comm_secs: Vec<f64>,
+    /// Seconds spent blocked at barriers, per worker.
+    pub blocked_secs: Vec<f64>,
+    /// Local steps, per worker.
+    pub steps: Vec<u64>,
+    /// Applied commits, per worker.
+    pub commits: Vec<u64>,
+    /// Bytes pushed to the PS, per worker.
+    pub bytes_up: Vec<u64>,
+    /// Bytes pulled from the PS, per worker.
+    pub bytes_down: Vec<u64>,
+}
+
+impl MetricsSlab {
+    /// Zeroed lanes for `n` workers.
+    pub fn with_len(n: usize) -> Self {
+        MetricsSlab {
+            compute_secs: vec![0.0; n],
+            comm_secs: vec![0.0; n],
+            blocked_secs: vec![0.0; n],
+            steps: vec![0; n],
+            commits: vec![0; n],
+            bytes_up: vec![0; n],
+            bytes_down: vec![0; n],
+        }
+    }
+
+    /// Workers tracked.
+    pub fn len(&self) -> usize {
+        self.compute_secs.len()
+    }
+
+    /// True when no worker is tracked.
+    pub fn is_empty(&self) -> bool {
+        self.compute_secs.is_empty()
+    }
+
+    /// Append a zeroed worker (a mid-run joiner).
+    pub fn push_default(&mut self) {
+        self.compute_secs.push(0.0);
+        self.comm_secs.push(0.0);
+        self.blocked_secs.push(0.0);
+        self.steps.push(0);
+        self.commits.push(0);
+        self.bytes_up.push(0);
+        self.bytes_down.push(0);
+    }
+
+    /// Materialize one worker's counters as an AoS record.
+    pub fn worker(&self, w: usize) -> WorkerMetrics {
+        WorkerMetrics {
+            compute_secs: self.compute_secs[w],
+            comm_secs: self.comm_secs[w],
+            blocked_secs: self.blocked_secs[w],
+            steps: self.steps[w],
+            commits: self.commits[w],
+            bytes_up: self.bytes_up[w],
+            bytes_down: self.bytes_down[w],
+        }
+    }
+
+    /// Materialize every worker — the O(workers) form reports only emit
+    /// below the `worker_metrics_cap` population threshold.
+    pub fn materialize(&self) -> Vec<WorkerMetrics> {
+        (0..self.len()).map(|w| self.worker(w)).collect()
+    }
+
+    /// One-pass [`Breakdown`] over the workers whose `active` flag is set
+    /// (paired by index, like [`Breakdown::from_active_workers`]); no
+    /// intermediate `WorkerMetrics` are built.
+    pub fn breakdown_active(&self, active: &[bool]) -> Breakdown {
+        Breakdown::accumulate((0..self.len()).zip(active).filter(|(_, &a)| a).map(
+            |(w, _)| (self.compute_secs[w], self.comm_secs[w], self.blocked_secs[w]),
+        ))
+    }
+
+    /// Total bytes moved in both directions (`RunReport` bandwidth line).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_up.iter().sum::<u64>() + self.bytes_down.iter().sum::<u64>()
     }
 }
 
@@ -304,6 +421,34 @@ mod tests {
         let one = Breakdown::from_active_workers(&ws, &[false, true]);
         assert!((one.avg_compute_secs - 20.0).abs() < 1e-12);
         assert!((one.avg_blocked_secs - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slab_matches_materialized_breakdown() {
+        let mut slab = MetricsSlab::with_len(3);
+        slab.compute_secs[0] = 10.0;
+        slab.comm_secs[0] = 2.0;
+        slab.blocked_secs[0] = 8.0;
+        slab.compute_secs[1] = 20.0;
+        slab.steps[1] = 7;
+        slab.bytes_up[1] = 100;
+        slab.bytes_down[2] = 50;
+        let active = [true, true, false];
+        let via_slab = slab.breakdown_active(&active);
+        let via_aos = Breakdown::from_active_workers(&slab.materialize(), &active);
+        assert_eq!(via_slab.avg_compute_secs, via_aos.avg_compute_secs);
+        assert_eq!(via_slab.avg_waiting_secs, via_aos.avg_waiting_secs);
+        assert_eq!(via_slab.avg_comm_secs, via_aos.avg_comm_secs);
+        assert_eq!(via_slab.avg_blocked_secs, via_aos.avg_blocked_secs);
+        assert_eq!(slab.bytes_total(), 150);
+        assert_eq!(slab.worker(1).steps, 7);
+        slab.push_default();
+        assert_eq!(slab.len(), 4);
+        assert_eq!(slab.worker(3).compute_secs, 0.0);
+        // No active workers → zero, never NaN.
+        let none = slab.breakdown_active(&[false; 4]);
+        assert_eq!(none.avg_compute_secs, 0.0);
+        assert!(!none.waiting_fraction().is_nan());
     }
 
     #[test]

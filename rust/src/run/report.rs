@@ -29,6 +29,9 @@ pub enum EngineStats {
         deadlocked: bool,
         /// Commits lost to failure injection (`spec.drop_commit_prob`).
         dropped_commits: u64,
+        /// Scheduler events handled (stale-cancelled events excluded) —
+        /// the numerator of the fleet-scale events/sec throughput metric.
+        events_processed: u64,
     },
     /// Produced by the wall-clock thread engine.
     Realtime {
@@ -48,15 +51,20 @@ impl EngineStats {
 
     fn to_json(self) -> Json {
         match self {
-            EngineStats::Sim { xla_execs, xla_secs, deadlocked, dropped_commits } => {
-                Json::obj(vec![
-                    ("backend", Json::str("sim")),
-                    ("xla_execs", Json::num(xla_execs as f64)),
-                    ("xla_secs", Json::num(xla_secs)),
-                    ("deadlocked", Json::Bool(deadlocked)),
-                    ("dropped_commits", Json::num(dropped_commits as f64)),
-                ])
-            }
+            EngineStats::Sim {
+                xla_execs,
+                xla_secs,
+                deadlocked,
+                dropped_commits,
+                events_processed,
+            } => Json::obj(vec![
+                ("backend", Json::str("sim")),
+                ("xla_execs", Json::num(xla_execs as f64)),
+                ("xla_secs", Json::num(xla_secs)),
+                ("deadlocked", Json::Bool(deadlocked)),
+                ("dropped_commits", Json::num(dropped_commits as f64)),
+                ("events_processed", Json::num(events_processed as f64)),
+            ]),
             EngineStats::Realtime { time_scale } => Json::obj(vec![
                 ("backend", Json::str("realtime")),
                 ("time_scale", Json::num(time_scale)),
@@ -71,6 +79,8 @@ impl EngineStats {
                 xla_secs: v.req("xla_secs")?.as_f64()?,
                 deadlocked: v.req("deadlocked")?.as_bool()?,
                 dropped_commits: v.req("dropped_commits")?.as_u64()?,
+                // Absent in pre-fleet-scale dumps: default to 0.
+                events_processed: v.u64_or("events_processed", 0)?,
             }),
             "realtime" => {
                 Ok(EngineStats::Realtime { time_scale: v.req("time_scale")?.as_f64()? })
@@ -180,6 +190,15 @@ impl RunReport {
     pub fn dropped_commits(&self) -> u64 {
         match self.engine {
             EngineStats::Sim { dropped_commits, .. } => dropped_commits,
+            EngineStats::Realtime { .. } => 0,
+        }
+    }
+
+    /// Scheduler events the simulator handled (0 for realtime reports,
+    /// which have no discrete event loop).
+    pub fn events_processed(&self) -> u64 {
+        match self.engine {
+            EngineStats::Sim { events_processed, .. } => events_processed,
             EngineStats::Realtime { .. } => 0,
         }
     }
@@ -341,6 +360,7 @@ mod tests {
                 xla_secs: 0.5,
                 deadlocked: false,
                 dropped_commits: 2,
+                events_processed: 480,
             },
             EngineStats::Realtime { time_scale: 0.01 },
         ] {
@@ -385,6 +405,28 @@ mod tests {
     }
 
     #[test]
+    fn sim_engine_stats_parse_without_events_processed() {
+        // Pre-fleet-scale sim dumps have no "events_processed" key; they
+        // must still parse, defaulting the counter to 0.
+        let v = Json::parse(
+            r#"{"backend":"sim","xla_execs":3,"xla_secs":0.1,
+                "deadlocked":false,"dropped_commits":0}"#,
+        )
+        .unwrap();
+        let stats = EngineStats::from_json(&v).unwrap();
+        assert_eq!(
+            stats,
+            EngineStats::Sim {
+                xla_execs: 3,
+                xla_secs: 0.1,
+                deadlocked: false,
+                dropped_commits: 0,
+                events_processed: 0,
+            }
+        );
+    }
+
+    #[test]
     fn nan_fields_serialize_as_null_and_parse_back_as_nan() {
         // A run with no evaluations reports NaN losses; JSON has no NaN,
         // so they dump as null and must parse back as NaN (not an error).
@@ -405,11 +447,13 @@ mod tests {
             xla_secs: 0.2,
             deadlocked: true,
             dropped_commits: 5,
+            events_processed: 99,
         });
         assert_eq!(sim.backend_name(), "sim");
         assert!(sim.deadlocked());
         assert_eq!(sim.dropped_commits(), 5);
         assert_eq!(sim.xla_execs(), 7);
+        assert_eq!(sim.events_processed(), 99);
         let rt = sample_report(EngineStats::Realtime { time_scale: 0.02 });
         assert_eq!(rt.backend_name(), "realtime");
         assert!(!rt.deadlocked());

@@ -12,15 +12,39 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use super::manifest::Manifest;
+use super::manifest::{EvalMeta, Manifest, StepVariant};
 use super::tensor::{f32_literal, Batch, ParamSet};
 
+/// Where a runtime's step math actually happens.
+enum Backend {
+    /// The real thing: compiled PJRT/XLA artifacts from `make artifacts`.
+    Pjrt {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    },
+    /// The fleet-scale proxy (`load_by_name("fleet_proxy")`): no XLA, an
+    /// empty parameter set, and an analytic loss curve driven by the step
+    /// counter. Tensor math is O(1) per call, so 10⁶-worker scheduler
+    /// sweeps measure the event loop, not the linear algebra — and need
+    /// no artifacts on disk.
+    Synthetic {
+        /// Total local steps taken through this runtime (the loss clock).
+        steps: RefCell<u64>,
+    },
+}
+
+/// The fleet proxy's analytic loss: strictly decreasing in total steps,
+/// bounded in (0, 2], deterministic — two identical event sequences log
+/// identical losses.
+fn synthetic_loss(total_steps: u64) -> f32 {
+    (2.0 / (1.0 + total_steps as f64 / 1000.0)) as f32
+}
+
 pub struct ModelRuntime {
-    client: xla::PjRtClient,
+    backend: Backend,
     pub manifest: Manifest,
-    dir: PathBuf,
-    execs: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Running count of XLA executions (profiling aid for the perf pass).
+    /// Running count of executions (profiling aid for the perf pass).
     pub exec_count: RefCell<u64>,
     /// Cumulative wall time spent inside XLA execute + result marshalling
     /// (everything else is L3 coordinator overhead).
@@ -34,36 +58,84 @@ impl ModelRuntime {
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(ModelRuntime {
-            client,
+            backend: Backend::Pjrt { client, dir, execs: RefCell::new(HashMap::new()) },
             manifest,
-            dir,
-            execs: RefCell::new(HashMap::new()),
             exec_count: RefCell::new(0),
             exec_secs: RefCell::new(0.0),
         })
     }
 
-    /// Load by model name from the default artifacts root.
+    /// Load by model name from the default artifacts root. The reserved
+    /// name `fleet_proxy` builds the synthetic fleet-scale runtime
+    /// instead (no artifacts required).
     pub fn load_by_name(model: &str) -> Result<Self> {
+        if model == "fleet_proxy" {
+            return Ok(Self::fleet_proxy());
+        }
         Self::load(super::artifacts_root().join(model))
     }
 
+    /// The synthetic fleet-scale runtime (see [`Backend::Synthetic`]).
+    /// Its hand-built manifest mirrors the real artifact contract — k ∈
+    /// {16, 4, 1} at one batch size, a 1-KiB commit payload — but `file`
+    /// fields are empty and never touched (`Manifest::validate` only runs
+    /// in [`ModelRuntime::load`]).
+    pub fn fleet_proxy() -> Self {
+        let manifest = Manifest {
+            model: "fleet_proxy".into(),
+            seed: 0,
+            params: Vec::new(),
+            total_param_numel: 0,
+            bytes_per_commit: 1024,
+            x_shape: vec![1],
+            x_dtype: "f32".into(),
+            y_shape: vec![],
+            y_dtype: "i32".into(),
+            num_classes: 2,
+            local_steps: vec![
+                StepVariant { k: 16, b: 32, file: String::new() },
+                StepVariant { k: 4, b: 32, file: String::new() },
+                StepVariant { k: 1, b: 32, file: String::new() },
+            ],
+            eval: EvalMeta { b: 32, file: String::new() },
+            apply: String::new(),
+            apply_momentum: String::new(),
+            init_params: String::new(),
+            init_params_sha256: String::new(),
+            jax_version: String::new(),
+        };
+        ModelRuntime {
+            backend: Backend::Synthetic { steps: RefCell::new(0) },
+            manifest,
+            exec_count: RefCell::new(0),
+            exec_secs: RefCell::new(0.0),
+        }
+    }
+
     pub fn init_params(&self) -> Result<ParamSet> {
-        ParamSet::load(&self.manifest, &self.dir)
+        match &self.backend {
+            Backend::Pjrt { dir, .. } => ParamSet::load(&self.manifest, dir),
+            Backend::Synthetic { .. } => Ok(ParamSet { leaves: Vec::new() }),
+        }
     }
 
     fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.execs.borrow().get(file) {
+        let (client, dir, execs) = match &self.backend {
+            Backend::Pjrt { client, dir, execs } => (client, dir, execs),
+            Backend::Synthetic { .. } => {
+                bail!("synthetic runtime '{}' has no artifacts", self.manifest.model)
+            }
+        };
+        if let Some(exe) = execs.borrow().get(file) {
             return Ok(exe.clone());
         }
-        let path = self.dir.join(file);
+        let path = dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
-        );
-        self.execs.borrow_mut().insert(file.to_string(), exe.clone());
+        let exe =
+            Rc::new(client.compile(&comp).with_context(|| format!("compiling {file}"))?);
+        execs.borrow_mut().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -77,6 +149,9 @@ impl ModelRuntime {
     /// play) plus eval/apply. On a 1-core host this cuts cluster start-up by
     /// the unused-variant compile time (see DESIGN.md §Perf).
     pub fn warmup_for(&self, batch_sizes: &[usize]) -> Result<()> {
+        if matches!(self.backend, Backend::Synthetic { .. }) {
+            return Ok(());
+        }
         let files: Vec<String> = self
             .manifest
             .local_steps
@@ -120,6 +195,18 @@ impl ModelRuntime {
         eta_prime: f32,
     ) -> Result<Vec<f32>> {
         let (k, b) = (xs.dims[0], xs.dims[1]);
+        if let Backend::Synthetic { steps } = &self.backend {
+            // Params stay empty; only the loss clock advances (one tick
+            // per fused step, so losses are per-step like the real thing).
+            *self.exec_count.borrow_mut() += 1;
+            let mut total = steps.borrow_mut();
+            let mut losses = Vec::with_capacity(k);
+            for _ in 0..k {
+                *total += 1;
+                losses.push(synthetic_loss(*total));
+            }
+            return Ok(losses);
+        }
         let variant = self
             .manifest
             .variant(k, b)
@@ -171,6 +258,12 @@ impl ModelRuntime {
 
     /// Evaluate `(loss, accuracy)` on one eval batch.
     pub fn eval(&self, params: &ParamSet, x: &Batch, y: &Batch) -> Result<(f32, f32)> {
+        if let Backend::Synthetic { steps } = &self.backend {
+            *self.exec_count.borrow_mut() += 1;
+            let loss = synthetic_loss(*steps.borrow());
+            let acc = (1.0 - loss / 2.0).clamp(0.0, 1.0);
+            return Ok((loss, acc));
+        }
         let mut args = params.to_literals(&self.manifest)?;
         args.push(x.to_literal()?);
         args.push(y.to_literal()?);
@@ -188,6 +281,10 @@ impl ModelRuntime {
     /// PS commit apply (paper Alg. 2 PS line 4): `W ← W − eta·U`, via the
     /// Pallas `apply_commit` artifact.
     pub fn apply_commit(&self, w: &mut ParamSet, u: &ParamSet, eta: f32) -> Result<()> {
+        if matches!(self.backend, Backend::Synthetic { .. }) {
+            *self.exec_count.borrow_mut() += 1;
+            return Ok(()); // the proxy's parameter set is empty
+        }
         let n = self.manifest.params.len();
         let mut args = Vec::with_capacity(2 * n + 1);
         args.extend(w.to_literals(&self.manifest)?);
@@ -212,6 +309,10 @@ impl ModelRuntime {
         eta: f32,
         mu: f32,
     ) -> Result<()> {
+        if matches!(self.backend, Backend::Synthetic { .. }) {
+            *self.exec_count.borrow_mut() += 1;
+            return Ok(());
+        }
         let n = self.manifest.params.len();
         let mut args = Vec::with_capacity(3 * n + 2);
         args.extend(w.to_literals(&self.manifest)?);
@@ -239,5 +340,39 @@ impl ModelRuntime {
     /// Total seconds spent inside XLA (execute + host marshalling).
     pub fn execution_secs(&self) -> f64 {
         *self.exec_secs.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_proxy_runs_without_artifacts() {
+        let rt = ModelRuntime::load_by_name("fleet_proxy").unwrap();
+        assert_eq!(rt.manifest.model, "fleet_proxy");
+        assert_eq!(rt.manifest.batch_sizes(), vec![32]);
+        assert_eq!(rt.manifest.k_variants(32), vec![16, 4, 1]);
+        rt.warmup().unwrap();
+        let mut params = rt.init_params().unwrap();
+        assert!(params.leaves.is_empty());
+        let mut u = params.zeros_like();
+        let xs = Batch::f32(vec![4, 32, 1], vec![0.0; 4 * 32]);
+        let ys = Batch::i32(vec![4, 32], vec![0; 4 * 32]);
+        let losses = rt.local_steps(&mut params, &mut u, &xs, &ys, 0.1).unwrap();
+        assert_eq!(losses.len(), 4);
+        // Strictly decreasing and repeatable across runtimes.
+        assert!(losses.windows(2).all(|w| w[1] < w[0]));
+        let rt2 = ModelRuntime::load_by_name("fleet_proxy").unwrap();
+        let mut p2 = rt2.init_params().unwrap();
+        let mut u2 = p2.zeros_like();
+        let l2 = rt2.local_steps(&mut p2, &mut u2, &xs, &ys, 0.5).unwrap();
+        assert_eq!(losses, l2);
+        // Eval tracks the same loss clock; apply is a no-op.
+        let (loss, acc) = rt.eval(&params, &xs, &ys).unwrap();
+        assert!((loss - *losses.last().unwrap()).abs() < 1e-6);
+        assert!((0.0..=1.0).contains(&acc));
+        rt.apply_commit(&mut params, &u, 0.1).unwrap();
+        assert!(rt.executions() >= 3);
     }
 }

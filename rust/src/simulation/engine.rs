@@ -16,21 +16,20 @@
 //! The scheduler's `Checkpoint` (every Γ), `Eval` (every eval interval) and
 //! `EpochStart` events drive the policy callbacks.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use anyhow::{Context, Result};
 use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::{make_source, DataSource};
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
-use crate::metrics::{Breakdown, ConvergenceDetector, LossLog, WorkerMetrics};
+use crate::metrics::{ConvergenceDetector, LossLog, MetricsSlab, WorkerMetrics};
 use crate::network::IngressQueue;
 use crate::obs::ObsHub;
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
-use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress};
+use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress, WorkerSlabs};
 use crate::util::Json;
+
+use super::queue::{Handle, IndexedEventQueue};
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum EventKind {
@@ -93,58 +92,69 @@ impl EventKind {
     }
 }
 
-#[derive(Clone, Copy, Debug)]
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-    /// Worker incarnation the event was scheduled under. An unclean crash
-    /// bumps the worker's incarnation, so events queued before the crash
-    /// (a Ready landing after the restart, a commit leg of the dropped
-    /// update) are recognizably stale and ignored — without this, a
-    /// training chunk longer than the outage would leave two concurrent
-    /// Ready chains driving one worker after restart. `0` for events not
-    /// bound to a worker.
-    inc: u64,
-}
+/// The queue payload: the event plus the worker incarnation it was
+/// scheduled under. An unclean crash bumps the worker's incarnation, so
+/// events queued before the crash (a Ready landing after the restart, a
+/// commit leg of the dropped update) are recognizably stale and ignored —
+/// without this, a training chunk longer than the outage would leave two
+/// concurrent Ready chains driving one worker after restart. `0` for
+/// events not bound to a worker. Crashes *cancel* their stale events
+/// outright through the indexed queue; the incarnation gate stays as the
+/// backstop for any handle the per-worker tracking let go of.
+type QueuedEvent = (EventKind, u64);
 
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Min-heap via Reverse: earlier time first, then FIFO sequence.
-        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
-    }
-}
-
-struct WorkerSim {
-    params: ParamSet,
-    u: ParamSet,
+/// Struct-of-arrays lanes of per-worker simulation state (the old
+/// `Vec<WorkerSim>` of structs). Each event handler touches one or two
+/// lanes of one worker; at fleet scale the AoS layout dragged every
+/// worker's full record through cache for each touch, and the metrics
+/// struct inside it forced O(workers) `WorkerMetrics` clones at closeout.
+struct WorkerLanes {
+    params: Vec<ParamSet>,
+    u: Vec<ParamSet>,
     /// Update snapshot in flight to the PS.
-    in_flight: Option<ParamSet>,
+    in_flight: Vec<Option<ParamSet>>,
     /// Compressed wire size of the in-flight update (None = dense).
-    in_flight_bytes: Option<u64>,
+    in_flight_bytes: Vec<Option<u64>>,
     /// Local steps the in-flight update carries (wasted-work accounting:
     /// a dropped commit loses exactly these steps).
-    in_flight_steps: u64,
+    in_flight_steps: Vec<u64>,
     /// Link-model extra seconds for the pull leg of the commit in flight
     /// (drawn at commit time so the jitter stream stays deterministic;
     /// exactly 0.0 on a degenerate link).
-    down_extra: f64,
+    down_extra: Vec<f64>,
     /// Parameters pulled from the PS, installed at the next Ready.
-    pending_pull: Option<ParamSet>,
-    metrics: WorkerMetrics,
-    block_start: Option<f64>,
-    data: Box<dyn DataSource>,
+    pending_pull: Vec<Option<ParamSet>>,
+    block_start: Vec<Option<f64>>,
+    data: Vec<Box<dyn DataSource>>,
+}
+
+impl WorkerLanes {
+    fn with_capacity(n: usize) -> Self {
+        WorkerLanes {
+            params: Vec::with_capacity(n),
+            u: Vec::with_capacity(n),
+            in_flight: Vec::with_capacity(n),
+            in_flight_bytes: Vec::with_capacity(n),
+            in_flight_steps: Vec::with_capacity(n),
+            down_extra: Vec::with_capacity(n),
+            pending_pull: Vec::with_capacity(n),
+            block_start: Vec::with_capacity(n),
+            data: Vec::with_capacity(n),
+        }
+    }
+
+    /// Append one worker with fresh (zero/None) transient lanes.
+    fn push(&mut self, params: ParamSet, u: ParamSet, data: Box<dyn DataSource>) {
+        self.params.push(params);
+        self.u.push(u);
+        self.in_flight.push(None);
+        self.in_flight_bytes.push(None);
+        self.in_flight_steps.push(0);
+        self.down_extra.push(0.0);
+        self.pending_pull.push(None);
+        self.block_start.push(None);
+        self.data.push(data);
+    }
 }
 
 /// The deterministic discrete-event engine driving one experiment
@@ -155,15 +165,23 @@ pub struct SimEngine {
     policy: Box<dyn SyncPolicy>,
     global: ParamSet,
     velocity: ParamSet,
-    workers: Vec<WorkerSim>,
-    progress: Vec<WorkerProgress>,
+    lanes: WorkerLanes,
+    progress: WorkerSlabs,
+    metrics: MetricsSlab,
     /// Live membership/speeds/comms/batch sizes — the single source of
     /// truth both engines share (see `crate::cluster`). Timeline events
     /// mutate it mid-run; an empty timeline leaves it frozen.
     cluster: ClusterState,
     k_variants: Vec<usize>,
-    queue: BinaryHeap<Reverse<Event>>,
-    seq: u64,
+    queue: IndexedEventQueue<QueuedEvent>,
+    /// Queue handles of each worker's outstanding events, so a crash can
+    /// cancel the stale incarnation's chain in O(log n) per event instead
+    /// of leaving tombstones for the pop loop to skip. Pruned lazily on
+    /// push (a worker has at most a couple of live events at a time).
+    pending_events: Vec<Vec<Handle>>,
+    /// Events actually handled (stale/cancelled ones excluded) — the
+    /// denominator of the fleet bench's events/sec.
+    events_processed: u64,
     now: f64,
     total_steps: u64,
     total_commits: u64,
@@ -241,8 +259,14 @@ pub fn shard_split_factor(s: usize) -> f64 {
 
 impl SimEngine {
     /// Validate `spec`, load the model's artifacts, and set up the
-    /// initial cluster, policy and event queue.
+    /// initial cluster, policy and event queue. A spec with cohorts (or
+    /// cell-targeted crash events) is expanded to its explicit per-worker
+    /// form first.
     pub fn new(spec: ExperimentSpec) -> Result<Self> {
+        let spec = match spec.expanded()? {
+            Some(expanded) => expanded,
+            None => spec,
+        };
         spec.validate()?;
         let runtime = ModelRuntime::load_by_name(&spec.model)
             .with_context(|| format!("loading artifacts for model '{}'", spec.model))?;
@@ -263,26 +287,16 @@ impl SimEngine {
         let global = runtime.init_params()?;
         let velocity = global.zeros_like();
 
-        let mut workers = Vec::with_capacity(spec.cluster.m());
-        let mut progress = Vec::with_capacity(spec.cluster.m());
+        let mut lanes = WorkerLanes::with_capacity(spec.cluster.m());
+        let mut progress = WorkerSlabs::new();
         for w in 0..spec.cluster.m() {
-            workers.push(WorkerSim {
-                params: global.clone(),
-                u: global.zeros_like(),
-                in_flight: None,
-                in_flight_bytes: None,
-                in_flight_steps: 0,
-                down_extra: 0.0,
-                pending_pull: None,
-                metrics: WorkerMetrics::default(),
-                block_start: None,
-                data: make_source(manifest, spec.seed, w),
-            });
+            lanes.push(global.clone(), global.zeros_like(), make_source(manifest, spec.seed, w));
             progress.push(WorkerProgress {
                 batch_size: cluster.batch_sizes[w],
                 ..Default::default()
             });
         }
+        let metrics = MetricsSlab::with_len(spec.cluster.m());
 
         // k-variants for the default batch; BatchTune workers may have a
         // different per-batch variant set — the engine re-clamps at Train.
@@ -317,12 +331,14 @@ impl SimEngine {
             policy,
             global,
             velocity,
-            workers,
+            lanes,
             progress,
+            metrics,
             cluster,
             k_variants,
-            queue: BinaryHeap::new(),
-            seq: 0,
+            queue: IndexedEventQueue::new(),
+            pending_events: vec![Vec::new(); m],
+            events_processed: 0,
             now: 0.0,
             total_steps: 0,
             total_commits: 0,
@@ -371,13 +387,24 @@ impl SimEngine {
     }
 
     fn push_event(&mut self, t: f64, kind: EventKind) {
-        self.seq += 1;
         let inc = kind.worker().map(|w| self.incarnation[w]).unwrap_or(0);
-        self.queue.push(Reverse(Event { t, seq: self.seq, kind, inc }));
+        let handle = self.queue.push(t, (kind, inc));
+        if let Some(w) = kind.worker() {
+            // Track the handle so a crash can cancel this worker's chain.
+            // A worker holds at most ~2 live events (one Ready/commit leg
+            // plus a possible restart), so pruning dead handles on push
+            // keeps the list O(1) without a removal hook in the pop path.
+            let tracked = &mut self.pending_events[w];
+            if tracked.len() >= 4 {
+                let queue = &self.queue;
+                tracked.retain(|&h| queue.is_live(h));
+            }
+            tracked.push(handle);
+        }
     }
 
     fn step_time(&self, w: usize) -> f64 {
-        let b = self.progress[w].batch_size as f64;
+        let b = self.progress.batch_size[w] as f64;
         let b_ref = self.spec.batch_size as f64;
         (b / b_ref).max(1e-9) / self.cluster.speeds[w]
     }
@@ -415,15 +442,15 @@ impl SimEngine {
             Action::Train { k } => self.do_train(w, k),
             Action::Commit => self.do_commit(w),
             Action::Block => {
-                self.progress[w].blocked = true;
-                self.workers[w].block_start = Some(self.now);
+                self.progress.set_blocked(w, true);
+                self.lanes.block_start[w] = Some(self.now);
                 Ok(())
             }
         }
     }
 
     fn do_train(&mut self, w: usize, k: u64) -> Result<()> {
-        let b = self.progress[w].batch_size;
+        let b = self.progress.batch_size[w];
         // Re-clamp to this worker's batch variants and the step budget.
         let ks = self.runtime.manifest.k_variants(b);
         let mut k = k.max(1);
@@ -446,11 +473,10 @@ impl SimEngine {
         }
 
         let eta_prime = self.spec.eta_prime_at(self.now);
-        let (xs, ys) = self.workers[w].data.sample_batch(k as usize, b);
-        let wk = &mut self.workers[w];
+        let (xs, ys) = self.lanes.data[w].sample_batch(k as usize, b);
         let losses = self
             .runtime
-            .local_steps(&mut wk.params, &mut wk.u, &xs, &ys, eta_prime)
+            .local_steps(&mut self.lanes.params[w], &mut self.lanes.u[w], &xs, &ys, eta_prime)
             .with_context(|| format!("worker {w} local_steps k={k} b={b}"))?;
         debug_assert_eq!(losses.len(), k as usize);
 
@@ -460,13 +486,13 @@ impl SimEngine {
             let j = self.spec.step_jitter;
             dt *= 1.0 - j + 2.0 * j * self.fault_rng.next_f64();
         }
-        self.progress[w].steps += k;
-        self.progress[w].local_since_commit += k;
+        self.progress.bump_steps(w, k);
+        self.progress.local_since_commit[w] += k;
         self.total_steps += k;
-        self.workers[w].metrics.steps += k;
+        self.metrics.steps[w] += k;
         // Charge only the part of the chunk inside the horizon so breakdown
         // fractions stay exact at the cap.
-        self.workers[w].metrics.compute_secs +=
+        self.metrics.compute_secs[w] +=
             dt.min((self.spec.max_virtual_secs - self.now).max(0.0));
         let t_next = self.now + dt;
         self.push_event(t_next, EventKind::Ready(w));
@@ -476,18 +502,18 @@ impl SimEngine {
     fn do_commit(&mut self, w: usize) -> Result<()> {
         // Snapshot U and reset the accumulator; the snapshot travels O/2
         // plus the link-model serialization of its actual wire size.
-        let mut u = std::mem::replace(&mut self.workers[w].u, self.global.zeros_like());
+        let mut u = std::mem::replace(&mut self.lanes.u[w], self.global.zeros_like());
         if self.spec.compress_topk > 0.0 && self.spec.compress_topk < 1.0 {
             let kept = native::topk_sparsify(&mut u, self.spec.compress_topk);
             // Sparse encoding: 8 bytes per surviving entry, recorded at the
             // arrival accounting via `in_flight_bytes`.
-            self.workers[w].in_flight_bytes = Some(8 * kept as u64);
+            self.lanes.in_flight_bytes[w] = Some(8 * kept as u64);
         }
         let dense_bytes = self.runtime.manifest.bytes_per_commit as u64;
-        let up_bytes = self.workers[w].in_flight_bytes.unwrap_or(dense_bytes);
-        self.workers[w].in_flight = Some(u);
-        self.workers[w].in_flight_steps = self.progress[w].local_since_commit;
-        self.progress[w].local_since_commit = 0;
+        let up_bytes = self.lanes.in_flight_bytes[w].unwrap_or(dense_bytes);
+        self.lanes.in_flight[w] = Some(u);
+        self.lanes.in_flight_steps[w] = self.progress.local_since_commit[w];
+        self.progress.local_since_commit[w] = 0;
 
         // Timing: [blackout gate] → O/2 + link(up bytes) → physical
         // arrival (ingress admission happens *there*, so concurrent
@@ -503,12 +529,12 @@ impl SimEngine {
             self.cluster.links[w].transfer_secs_jittered(up_bytes, &mut self.net_rng);
         let down_extra =
             self.cluster.links[w].transfer_secs_jittered(dense_bytes, &mut self.net_rng);
-        self.workers[w].down_extra = down_extra;
+        self.lanes.down_extra[w] = down_extra;
         // Charge only the part inside the horizon (mirroring do_train's
         // compute clamp) so a blackout spilling past the cap cannot push
         // a worker's comm_secs beyond the run length.
         let comm = blackout_wait + up_extra + down_extra + 2.0 * oneway;
-        self.workers[w].metrics.comm_secs +=
+        self.metrics.comm_secs[w] +=
             comm.min((self.spec.max_virtual_secs - self.now).max(0.0));
         if let Some(h) = self.obs.clone() {
             h.inc("net/commits_sent");
@@ -544,12 +570,12 @@ impl SimEngine {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
         }
-        if self.workers[w].in_flight.is_none() {
+        if self.lanes.in_flight[w].is_none() {
             return Ok(()); // a crash already dropped this commit
         }
         let up_bytes = self
-            .workers[w]
-            .in_flight_bytes
+            .lanes
+            .in_flight_bytes[w]
             .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
         // Admission clears the shared ingress pipe *and* any PS failover
         // in progress — commits stripe across every shard, so one failed
@@ -563,7 +589,7 @@ impl SimEngine {
             }
         }
         if cleared > self.now {
-            self.workers[w].metrics.comm_secs += (cleared - self.now)
+            self.metrics.comm_secs[w] += (cleared - self.now)
                 .min((self.spec.max_virtual_secs - self.now).max(0.0));
             self.push_event(cleared, EventKind::CommitApply(w));
             return Ok(());
@@ -574,15 +600,15 @@ impl SimEngine {
     /// The worker left (or crashed) while its commit was in flight: the
     /// update is lost with it, and the steps it carried are wasted work.
     fn drop_in_flight(&mut self, w: usize) -> Result<()> {
-        if self.workers[w].in_flight.is_some() {
+        if self.lanes.in_flight[w].is_some() {
             if let Some(h) = self.obs.clone() {
                 h.inc("fault/inflight_drops");
             }
         }
-        self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
-        self.workers[w].in_flight = None;
-        self.workers[w].in_flight_bytes = None;
-        self.workers[w].down_extra = 0.0;
+        self.wasted_steps += std::mem::take(&mut self.lanes.in_flight_steps[w]);
+        self.lanes.in_flight[w] = None;
+        self.lanes.in_flight_bytes[w] = None;
+        self.lanes.down_extra[w] = 0.0;
         Ok(())
     }
 
@@ -590,22 +616,22 @@ impl SimEngine {
         if !self.cluster.active[w] {
             return self.drop_in_flight(w);
         }
-        if self.workers[w].in_flight.is_none() {
+        if self.lanes.in_flight[w].is_none() {
             return Ok(()); // a crash already dropped this commit
         }
         // A shard failed after this apply was scheduled: hold the commit
         // until failover completes (it then applies to the restored cut).
         let ps_down = self.cluster.ps_down_until();
         if ps_down > self.now {
-            self.workers[w].metrics.comm_secs += (ps_down - self.now)
+            self.metrics.comm_secs[w] += (ps_down - self.now)
                 .min((self.spec.max_virtual_secs - self.now).max(0.0));
             self.push_event(ps_down, EventKind::CommitApply(w));
             return Ok(());
         }
-        let u = self.workers[w].in_flight.take().expect("commit without in-flight update");
+        let u = self.lanes.in_flight[w].take().expect("commit without in-flight update");
         let up_bytes = self
-            .workers[w]
-            .in_flight_bytes
+            .lanes
+            .in_flight_bytes[w]
             .take()
             .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
         if self.spec.drop_commit_prob > 0.0
@@ -619,10 +645,10 @@ impl SimEngine {
             if let Some(h) = self.obs.clone() {
                 h.inc("fault/dropped_commits");
             }
-            self.wasted_steps += std::mem::take(&mut self.workers[w].in_flight_steps);
-            self.workers[w].pending_pull = Some(self.global.clone());
+            self.wasted_steps += std::mem::take(&mut self.lanes.in_flight_steps[w]);
+            self.lanes.pending_pull[w] = Some(self.global.clone());
             let oneway = self.oneway_secs(w);
-            let down_extra = std::mem::take(&mut self.workers[w].down_extra);
+            let down_extra = std::mem::take(&mut self.lanes.down_extra[w]);
             self.push_event(self.now + oneway + down_extra, EventKind::Ready(w));
             return Ok(());
         }
@@ -641,12 +667,12 @@ impl SimEngine {
             native::apply_commit(&mut self.global, &u, eta);
         }
 
-        self.progress[w].commits += 1;
+        self.progress.bump_commits(w);
         self.total_commits += 1;
         let down_bytes = self.runtime.manifest.bytes_per_commit as u64;
-        self.workers[w].metrics.commits += 1;
-        self.workers[w].metrics.bytes_up += up_bytes;
-        self.workers[w].metrics.bytes_down += down_bytes;
+        self.metrics.commits[w] += 1;
+        self.metrics.bytes_up[w] += up_bytes;
+        self.metrics.bytes_down[w] += down_bytes;
         self.bytes_total += up_bytes + down_bytes;
         if let Some(h) = self.obs.clone() {
             h.add("net/bytes_up", up_bytes);
@@ -655,7 +681,7 @@ impl SimEngine {
         // Failover bookkeeping: everything applied past the last
         // checkpoint is what a shard failure would lose.
         self.commits_since_ckpt += 1;
-        self.steps_since_ckpt += std::mem::take(&mut self.workers[w].in_flight_steps);
+        self.steps_since_ckpt += std::mem::take(&mut self.lanes.in_flight_steps[w]);
         if let CheckpointPolicy::EveryCommits(n) = self.spec.fault.checkpoint {
             if self.commits_since_ckpt >= n {
                 self.do_checkpoint(obs);
@@ -677,8 +703,8 @@ impl SimEngine {
             h.event(self.now, "commit", data);
         }
         let oneway = self.oneway_secs(w);
-        let down_extra = std::mem::take(&mut self.workers[w].down_extra);
-        self.workers[w].pending_pull = Some(self.global.clone());
+        let down_extra = std::mem::take(&mut self.lanes.down_extra[w]);
+        self.lanes.pending_pull[w] = Some(self.global.clone());
         self.push_event(done + oneway + down_extra, EventKind::Ready(w));
         Ok(())
     }
@@ -704,16 +730,10 @@ impl SimEngine {
             self.converged_at = Some(self.now);
         }
         // Deadlock sentinel: every *active* worker blocked across several
-        // evals (departed workers are never blocked).
-        let mut any_active = false;
-        let mut all_blocked = true;
-        for (p, &a) in self.progress.iter().zip(&self.cluster.active) {
-            if a {
-                any_active = true;
-                all_blocked &= p.blocked;
-            }
-        }
-        let all_blocked = any_active && all_blocked;
+        // evals. The slab keeps blocked ⊆ active (leave/crash clears the
+        // flag), so the O(1) count comparison replaces the population scan.
+        let active = self.progress.active_count();
+        let all_blocked = active > 0 && self.progress.blocked_count() == active;
         if all_blocked {
             self.deadlock_evals += 1;
             if self.deadlock_evals >= 3 {
@@ -726,19 +746,27 @@ impl SimEngine {
     }
 
     /// Re-poll blocked workers after a state change; wake those whose policy
-    /// now returns something other than Block.
+    /// now returns something other than Block. The `blocked_count` fast
+    /// path makes this O(1) per event for never-blocking policies
+    /// (ADSP/TAP/ADSP⁺) — the dominant cost of the old per-event full-m
+    /// scan at fleet scale. Workers that block are re-polled in ascending
+    /// index order, exactly like the old collected list.
     fn wake_blocked(&mut self) -> Result<()> {
-        let blocked: Vec<usize> =
-            (0..self.progress.len()).filter(|&w| self.progress[w].blocked).collect();
-        for w in blocked {
+        if self.progress.blocked_count() == 0 {
+            return Ok(());
+        }
+        for w in 0..self.progress.len() {
+            if !self.progress.is_blocked(w) {
+                continue;
+            }
             let action = self.with_view(|policy, view| policy.next_action(w, view));
             if action != Action::Block {
-                self.progress[w].blocked = false;
-                if let Some(start) = self.workers[w].block_start.take() {
-                    self.workers[w].metrics.blocked_secs += self.now - start;
+                self.progress.set_blocked(w, false);
+                if let Some(start) = self.lanes.block_start[w].take() {
+                    self.metrics.blocked_secs[w] += self.now - start;
                 }
                 // Barrier release broadcast: wake with the current model.
-                self.workers[w].params = self.global.clone();
+                self.lanes.params[w] = self.global.clone();
                 match action {
                     Action::Train { k } => self.do_train(w, k)?,
                     Action::Commit => self.do_commit(w)?,
@@ -780,21 +808,16 @@ impl SimEngine {
                 // consistent global model and starts its counters at the
                 // active minimum so barrier/staleness models treat it as
                 // a peer of the current round, not a round-0 straggler.
-                self.workers.push(WorkerSim {
-                    params: self.global.clone(),
-                    u: self.global.zeros_like(),
-                    in_flight: None,
-                    in_flight_bytes: None,
-                    in_flight_steps: 0,
-                    down_extra: 0.0,
-                    pending_pull: None,
-                    metrics: WorkerMetrics::default(),
-                    block_start: None,
-                    data: make_source(&self.runtime.manifest, self.spec.seed, w),
-                });
+                self.lanes.push(
+                    self.global.clone(),
+                    self.global.zeros_like(),
+                    make_source(&self.runtime.manifest, self.spec.seed, w),
+                );
+                self.metrics.push_default();
                 let entry = self.cluster.join_progress(w, &self.progress);
                 self.progress.push(entry);
                 self.incarnation.push(0);
+                self.pending_events.push(Vec::new());
                 self.push_event(self.now, EventKind::Ready(w));
             }
             ClusterDelta::Left(w) => {
@@ -802,30 +825,36 @@ impl SimEngine {
                 // view the policies read (barriers stop counting it),
                 // stop blocked-time accounting; queued events for it will
                 // be ignored and any in-flight commit dropped at arrival.
-                self.progress[w].active = false;
-                self.progress[w].blocked = false;
-                if let Some(start) = self.workers[w].block_start.take() {
-                    self.workers[w].metrics.blocked_secs += self.now - start;
+                self.progress.set_blocked(w, false);
+                self.progress.set_active(w, false);
+                if let Some(start) = self.lanes.block_start[w].take() {
+                    self.metrics.blocked_secs[w] += self.now - start;
                 }
-                self.workers[w].pending_pull = None;
+                self.lanes.pending_pull[w] = None;
             }
             ClusterDelta::Crashed { worker: w, until } => {
                 // Unclean crash: the uncommitted accumulator and the
                 // in-flight commit are lost (wasted work), the worker
                 // disappears from barriers until restart, and every event
-                // queued under the old incarnation goes stale.
+                // queued under the old incarnation goes stale. The stale
+                // chain is cancelled outright through the indexed queue —
+                // O(log n) each — rather than left as tombstones for the
+                // pop loop to skip; the incarnation gate stays as backstop.
                 self.incarnation[w] += 1;
+                for h in std::mem::take(&mut self.pending_events[w]) {
+                    self.queue.cancel(h);
+                }
                 if let Some(h) = self.obs.clone() {
                     h.inc("fault/worker_crashes");
                 }
-                self.wasted_steps += self.progress[w].local_since_commit;
-                self.progress[w].local_since_commit = 0;
-                self.progress[w].active = false;
-                self.progress[w].blocked = false;
-                if let Some(start) = self.workers[w].block_start.take() {
-                    self.workers[w].metrics.blocked_secs += self.now - start;
+                self.wasted_steps += self.progress.local_since_commit[w];
+                self.progress.local_since_commit[w] = 0;
+                self.progress.set_blocked(w, false);
+                self.progress.set_active(w, false);
+                if let Some(start) = self.lanes.block_start[w].take() {
+                    self.metrics.blocked_secs[w] += self.now - start;
                 }
-                self.workers[w].pending_pull = None;
+                self.lanes.pending_pull[w] = None;
                 self.drop_in_flight(w)?;
                 self.push_event(until, EventKind::WorkerRestart(w));
             }
@@ -899,10 +928,10 @@ impl SimEngine {
             h.event(self.now, "worker_restart", vec![("worker", Json::Num(w as f64))]);
         }
         let entry = self.cluster.join_progress(w, &self.progress);
-        self.progress[w] = entry;
-        self.workers[w].params = self.global.clone();
-        self.workers[w].u = self.global.zeros_like();
-        self.workers[w].pending_pull = None;
+        self.progress.set_record(w, entry);
+        self.lanes.params[w] = self.global.clone();
+        self.lanes.u[w] = self.global.zeros_like();
+        self.lanes.pending_pull[w] = None;
         self.push_event(self.now, EventKind::Ready(w));
         self.with_view(|policy, view| policy.on_cluster_change(view));
         Ok(())
@@ -914,8 +943,8 @@ impl SimEngine {
         let bytes = std::fs::read(path)
             .with_context(|| format!("reading checkpoint {path:?}"))?;
         let params = ParamSet::from_bytes(&self.runtime.manifest, &bytes)?;
-        for w in &mut self.workers {
-            w.params = params.clone();
+        for p in &mut self.lanes.params {
+            *p = params.clone();
         }
         self.global = params;
         Ok(())
@@ -931,7 +960,7 @@ impl SimEngine {
     /// whatever observer is attached (pinned in `tests/integration.rs`).
     pub fn run_observed(mut self, obs: &mut dyn RunObserver) -> Result<RunReport> {
         let wall_start = std::time::Instant::now();
-        let mut in_use: Vec<usize> = self.progress.iter().map(|p| p.batch_size).collect();
+        let mut in_use: Vec<usize> = self.progress.batch_size.clone();
         // Workers joining later train too — compile their variants up front.
         for ev in self.spec.timeline.events() {
             if let crate::cluster::ClusterEvent::WorkerJoin { spec, .. } = ev {
@@ -959,7 +988,7 @@ impl SimEngine {
         if let CheckpointPolicy::IntervalSecs(dt) = self.spec.fault.checkpoint {
             self.push_event(dt, EventKind::CkptSave);
         }
-        for w in 0..self.workers.len() {
+        for w in 0..self.progress.len() {
             self.push_event(0.0, EventKind::Ready(w));
         }
         for i in 0..self.spec.timeline.len() {
@@ -967,23 +996,27 @@ impl SimEngine {
             self.push_event(t, EventKind::Cluster(i));
         }
 
-        while let Some(Reverse(ev)) = self.queue.pop() {
-            if ev.t > self.spec.max_virtual_secs {
+        while let Some((t, (kind, inc))) = self.queue.pop() {
+            if t > self.spec.max_virtual_secs {
                 break;
             }
-            self.now = ev.t;
+            self.now = t;
             // Events scheduled before a worker's crash are stale after it
             // (the restart opens a fresh incarnation with its own chain).
-            if let Some(w) = ev.kind.worker() {
-                if ev.inc != self.incarnation[w] {
+            // Crashes cancel their chain through the queue, so this gate
+            // almost never fires — it remains for handles the per-worker
+            // tracking pruned before the crash.
+            if let Some(w) = kind.worker() {
+                if inc != self.incarnation[w] {
                     continue;
                 }
             }
+            self.events_processed += 1;
             let handle_t0 = hub.as_ref().map(|_| std::time::Instant::now());
-            match ev.kind {
+            match kind {
                 EventKind::Ready(w) => {
-                    if let Some(p) = self.workers[w].pending_pull.take() {
-                        self.workers[w].params = p;
+                    if let Some(p) = self.lanes.pending_pull[w].take() {
+                        self.lanes.params[w] = p;
                     }
                     self.drive_worker(w)?;
                 }
@@ -1066,7 +1099,7 @@ impl SimEngine {
                 }
             }
             if let Some(h) = &hub {
-                let name = ev.kind.name();
+                let name = kind.name();
                 h.inc(&format!("sim/events/{name}"));
                 if let Some(t0) = handle_t0 {
                     let spent = t0.elapsed().as_secs_f64();
@@ -1083,9 +1116,9 @@ impl SimEngine {
         }
 
         // Close out blocked-time accounting.
-        for w in 0..self.workers.len() {
-            if let Some(start) = self.workers[w].block_start.take() {
-                self.workers[w].metrics.blocked_secs += self.now - start;
+        for w in 0..self.progress.len() {
+            if let Some(start) = self.lanes.block_start[w].take() {
+                self.metrics.blocked_secs[w] += self.now - start;
             }
         }
 
@@ -1093,12 +1126,19 @@ impl SimEngine {
             self.global.save(path)?;
         }
 
-        let workers: Vec<WorkerMetrics> =
-            self.workers.iter().map(|w| w.metrics.clone()).collect();
+        // Per-worker metric records are opt-in below the population
+        // threshold: a fleet-scale run reports the streaming breakdown and
+        // totals without materializing O(workers) `WorkerMetrics`.
+        let workers: Vec<WorkerMetrics> = if self.progress.len() <= self.spec.worker_metrics_cap
+        {
+            self.metrics.materialize()
+        } else {
+            Vec::new()
+        };
         // Breakdown averages the *members* (leavers' clocks froze mid-run
         // and would dilute the cluster average; crashed workers stay
         // members). Identical to the plain average when nobody ever left.
-        let breakdown = Breakdown::from_active_workers(&workers, &self.cluster.active);
+        let breakdown = self.metrics.breakdown_active(&self.cluster.active);
         let final_loss = self.loss_log.last_loss().unwrap_or(f64::NAN);
         let best_loss = self.loss_log.best_loss().unwrap_or(f64::NAN);
         let final_accuracy =
@@ -1140,6 +1180,7 @@ impl SimEngine {
                 xla_secs: self.runtime.execution_secs(),
                 deadlocked: self.deadlocked,
                 dropped_commits: self.dropped_commits,
+                events_processed: self.events_processed,
             },
         })
     }

@@ -45,5 +45,7 @@
 //! ```
 
 pub mod engine;
+pub mod queue;
 
 pub use engine::SimEngine;
+pub use queue::IndexedEventQueue;

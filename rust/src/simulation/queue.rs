@@ -1,0 +1,369 @@
+//! Indexed event queue for the discrete-event engine.
+//!
+//! A binary min-heap over `(t, seq)` — identical ordering to the old
+//! `BinaryHeap<Reverse<Event>>` (`f64::total_cmp` on time, then insertion
+//! sequence) — except that every entry lives in a stable slot addressed by
+//! a generation-checked [`Handle`], so a scheduled event can be *cancelled*
+//! or *rescheduled* in O(log n) instead of tombstoning the heap and
+//! re-scanning on pop. `seq` is assigned internally at push time in call
+//! order, so a push-then-pop trace is bit-identical to the old heap's.
+//!
+//! ```
+//! use adsp::simulation::IndexedEventQueue;
+//!
+//! let mut q = IndexedEventQueue::new();
+//! let a = q.push(2.0, "late");
+//! let _b = q.push(1.0, "early");
+//! q.reschedule(a, 0.5); // moved ahead of "early"
+//! assert_eq!(q.pop(), Some((0.5, "late")));
+//! assert_eq!(q.pop(), Some((1.0, "early")));
+//! assert_eq!(q.pop(), None);
+//! ```
+
+/// Stable, generation-checked address of a scheduled event. Copyable;
+/// stays invalid after the event pops, cancels, or is superseded by a new
+/// event reusing its slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Handle {
+    slot: u32,
+    generation: u32,
+}
+
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    /// `None` while the slot sits on the free list.
+    payload: Option<T>,
+    /// Position of this slot inside `heap` (valid while payload is Some).
+    pos: u32,
+    generation: u32,
+}
+
+/// A slot-indexed binary min-heap keyed on `(t, seq)`.
+pub struct IndexedEventQueue<T> {
+    entries: Vec<Entry<T>>,
+    /// Heap array of slot indices.
+    heap: Vec<u32>,
+    free: Vec<u32>,
+    seq: u64,
+}
+
+impl<T> Default for IndexedEventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> IndexedEventQueue<T> {
+    /// An empty queue.
+    pub fn new() -> Self {
+        IndexedEventQueue { entries: Vec::new(), heap: Vec::new(), free: Vec::new(), seq: 0 }
+    }
+
+    /// Scheduled events currently in the queue.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing is scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at time `t`; ties at equal `t` pop in push order.
+    pub fn push(&mut self, t: f64, payload: T) -> Handle {
+        self.seq += 1;
+        let seq = self.seq;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let e = &mut self.entries[s as usize];
+                e.t = t;
+                e.seq = seq;
+                e.payload = Some(payload);
+                s
+            }
+            None => {
+                let s = self.entries.len() as u32;
+                self.entries.push(Entry {
+                    t,
+                    seq,
+                    payload: Some(payload),
+                    pos: 0,
+                    generation: 0,
+                });
+                s
+            }
+        };
+        let pos = self.heap.len() as u32;
+        self.entries[slot as usize].pos = pos;
+        self.heap.push(slot);
+        self.sift_up(pos as usize);
+        Handle { slot, generation: self.entries[slot as usize].generation }
+    }
+
+    /// Pop the earliest event (smallest `(t, seq)`).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let slot = *self.heap.first()?;
+        self.remove_at(0);
+        let e = &mut self.entries[slot as usize];
+        Some((e.t, e.payload.take().expect("heap slot without payload")))
+    }
+
+    /// Cancel a scheduled event; returns its payload, or `None` when the
+    /// handle is stale (already popped / cancelled / slot reused).
+    pub fn cancel(&mut self, h: Handle) -> Option<T> {
+        if !self.is_live(h) {
+            return None;
+        }
+        let pos = self.entries[h.slot as usize].pos as usize;
+        self.remove_at(pos);
+        self.entries[h.slot as usize].payload.take()
+    }
+
+    /// Move a scheduled event to time `t`, re-keyed with a fresh sequence
+    /// number (it pops after anything already scheduled at exactly `t`).
+    /// Returns false when the handle is stale.
+    pub fn reschedule(&mut self, h: Handle, t: f64) -> bool {
+        if !self.is_live(h) {
+            return false;
+        }
+        self.seq += 1;
+        let e = &mut self.entries[h.slot as usize];
+        e.t = t;
+        e.seq = self.seq;
+        let pos = e.pos as usize;
+        // The key changed arbitrarily: restore heap order in both
+        // directions (only one of the two moves).
+        self.sift_up(pos);
+        self.sift_down(self.entries[h.slot as usize].pos as usize);
+        true
+    }
+
+    /// True while `h` still addresses the event it was returned for.
+    pub fn is_live(&self, h: Handle) -> bool {
+        self.entries
+            .get(h.slot as usize)
+            .is_some_and(|e| e.generation == h.generation && e.payload.is_some())
+    }
+
+    /// Detach heap position `pos`, retiring its slot to the free list.
+    fn remove_at(&mut self, pos: usize) {
+        let slot = self.heap[pos];
+        let last = self.heap.pop().expect("remove_at on empty heap");
+        self.entries[slot as usize].generation = self.entries[slot as usize].generation.wrapping_add(1);
+        self.free.push(slot);
+        if pos < self.heap.len() {
+            self.heap[pos] = last;
+            self.entries[last as usize].pos = pos as u32;
+            self.sift_up(pos);
+            self.sift_down(self.entries[last as usize].pos as usize);
+        }
+    }
+
+    /// Strict `(t, seq)` ordering between two heap slots.
+    fn less(&self, a: u32, b: u32) -> bool {
+        let (ea, eb) = (&self.entries[a as usize], &self.entries[b as usize]);
+        match ea.t.total_cmp(&eb.t) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => ea.seq < eb.seq,
+        }
+    }
+
+    fn sift_up(&mut self, mut pos: usize) {
+        while pos > 0 {
+            let parent = (pos - 1) / 2;
+            if !self.less(self.heap[pos], self.heap[parent]) {
+                break;
+            }
+            self.heap.swap(pos, parent);
+            self.entries[self.heap[pos] as usize].pos = pos as u32;
+            self.entries[self.heap[parent] as usize].pos = parent as u32;
+            pos = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut pos: usize) {
+        loop {
+            let (l, r) = (2 * pos + 1, 2 * pos + 2);
+            let mut best = pos;
+            if l < self.heap.len() && self.less(self.heap[l], self.heap[best]) {
+                best = l;
+            }
+            if r < self.heap.len() && self.less(self.heap[r], self.heap[best]) {
+                best = r;
+            }
+            if best == pos {
+                break;
+            }
+            self.heap.swap(pos, best);
+            self.entries[self.heap[pos] as usize].pos = pos as u32;
+            self.entries[self.heap[best] as usize].pos = best as u32;
+            pos = best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pops_in_time_then_push_order() {
+        let mut q = IndexedEventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a1");
+        q.push(2.0, "b");
+        q.push(1.0, "a2"); // same t: push order breaks the tie
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.pop(), Some((1.0, "a1")));
+        assert_eq!(q.pop(), Some((1.0, "a2")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancel_removes_and_invalidates_handle() {
+        let mut q = IndexedEventQueue::new();
+        let a = q.push(1.0, 1u32);
+        let b = q.push(2.0, 2u32);
+        assert_eq!(q.cancel(a), Some(1));
+        assert_eq!(q.cancel(a), None, "double cancel is a no-op");
+        assert!(!q.is_live(a));
+        assert!(q.is_live(b));
+        assert_eq!(q.pop(), Some((2.0, 2)));
+        assert!(!q.is_live(b), "pop invalidates the handle too");
+    }
+
+    #[test]
+    fn stale_handle_does_not_hit_reused_slot() {
+        let mut q = IndexedEventQueue::new();
+        let a = q.push(1.0, "old");
+        assert_eq!(q.pop(), Some((1.0, "old")));
+        // The freed slot is reused by the next push.
+        let b = q.push(5.0, "new");
+        assert_eq!(b.slot, a.slot);
+        assert!(!q.is_live(a));
+        assert_eq!(q.cancel(a), None, "stale cancel must not kill the new event");
+        assert!(!q.reschedule(a, 0.0));
+        assert_eq!(q.pop(), Some((5.0, "new")));
+    }
+
+    #[test]
+    fn reschedule_moves_both_directions() {
+        let mut q = IndexedEventQueue::new();
+        let a = q.push(5.0, "a");
+        q.push(3.0, "b");
+        let c = q.push(1.0, "c");
+        assert!(q.reschedule(a, 0.5)); // 5.0 → front
+        assert!(q.reschedule(c, 9.0)); // 1.0 → back
+        assert_eq!(q.pop(), Some((0.5, "a")));
+        assert_eq!(q.pop(), Some((3.0, "b")));
+        assert_eq!(q.pop(), Some((9.0, "c")));
+    }
+
+    #[test]
+    fn reschedule_to_equal_time_pops_after_existing() {
+        let mut q = IndexedEventQueue::new();
+        q.push(1.0, "first");
+        let late = q.push(4.0, "moved");
+        assert!(q.reschedule(late, 1.0));
+        // Fresh seq on reschedule → pops after the event already at t=1.
+        assert_eq!(q.pop(), Some((1.0, "first")));
+        assert_eq!(q.pop(), Some((1.0, "moved")));
+    }
+
+    /// Reference check: random push/pop interleavings against
+    /// `BinaryHeap<Reverse<(t, seq)>>` must agree exactly.
+    #[test]
+    fn matches_binary_heap_reference_on_random_traffic() {
+        use std::cmp::Reverse;
+
+        #[derive(PartialEq)]
+        struct Key(f64, u64);
+        impl Eq for Key {}
+        impl PartialOrd for Key {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Key {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+            }
+        }
+
+        let mut rng = Rng::new(0x0E0E);
+        for case in 0..50u64 {
+            let mut r = rng.split(case);
+            let mut q = IndexedEventQueue::new();
+            let mut reference = std::collections::BinaryHeap::new();
+            let mut seq = 0u64;
+            for _ in 0..400 {
+                if r.below(3) < 2 || reference.is_empty() {
+                    let t = (r.below(50) as f64) * 0.25; // collisions likely
+                    let id = seq;
+                    q.push(t, id);
+                    seq += 1;
+                    reference.push(Reverse((Key(t, id), id)));
+                } else {
+                    let got = q.pop();
+                    let want = reference.pop().map(|Reverse((Key(t, _), id))| (t, id));
+                    assert_eq!(got, want, "case {case}: pop order diverged");
+                }
+            }
+            while let Some(Reverse((Key(t, _), id))) = reference.pop() {
+                assert_eq!(q.pop(), Some((t, id)), "case {case}: drain diverged");
+            }
+            assert_eq!(q.pop(), None, "case {case}: queue should be drained");
+        }
+    }
+
+    /// Randomized cancel/reschedule against a shadow model (sorted scan).
+    #[test]
+    fn cancel_and_reschedule_agree_with_shadow_model() {
+        let mut rng = Rng::new(0xCA4C);
+        for case in 0..40u64 {
+            let mut r = rng.split(case);
+            let mut q = IndexedEventQueue::new();
+            // Shadow: id → (t, order_key); popped set tracks removal.
+            let mut live: Vec<(Handle, f64, u64, u64)> = Vec::new(); // handle, t, seq-ish, id
+            let mut order = 0u64;
+            let mut next_id = 0u64;
+            for _ in 0..300 {
+                match r.below(4) {
+                    0 | 1 => {
+                        let t = (r.below(40) as f64) * 0.5;
+                        order += 1;
+                        let h = q.push(t, next_id);
+                        live.push((h, t, order, next_id));
+                        next_id += 1;
+                    }
+                    2 if !live.is_empty() => {
+                        let i = r.below(live.len());
+                        let (h, _, _, id) = live.swap_remove(i);
+                        assert_eq!(q.cancel(h), Some(id), "case {case}: live cancel");
+                    }
+                    3 if !live.is_empty() => {
+                        let i = r.below(live.len());
+                        let t = (r.below(40) as f64) * 0.5;
+                        order += 1;
+                        assert!(q.reschedule(live[i].0, t), "case {case}");
+                        live[i].1 = t;
+                        live[i].2 = order;
+                    }
+                    _ => {}
+                }
+            }
+            // Drain: pops must come out in (t, order) order with matching ids.
+            live.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.2.cmp(&b.2)));
+            for (_, t, _, id) in live {
+                assert_eq!(q.pop(), Some((t, id)), "case {case}: drain order");
+            }
+            assert!(q.is_empty(), "case {case}");
+        }
+    }
+}

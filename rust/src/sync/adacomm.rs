@@ -31,18 +31,17 @@ impl FixedAdacommPolicy {
 }
 
 fn adacomm_next_action(tau: u64, w: usize, view: &ClusterView) -> Action {
-    let me = &view.workers[w];
-    if me.local_since_commit >= tau {
+    let local = view.workers.local_since_commit[w];
+    if local >= tau {
         return Action::Commit;
     }
-    if me.local_since_commit == 0 && me.commits > view.min_commits() {
+    if local == 0 && view.workers.commits(w) > view.min_commits() {
         // Finished my round and others haven't: barrier.
         return Action::Block;
     }
     // Train the remaining steps of this round, chunked to available scan
     // variants so the whole τ-block can run in few executes.
-    let remaining = tau - me.local_since_commit;
-    Action::Train { k: view.clamp_k(remaining) }
+    Action::Train { k: view.clamp_k(tau - local) }
 }
 
 impl SyncPolicy for FixedAdacommPolicy {
@@ -165,9 +164,9 @@ impl SyncPolicy for AdacommPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sync::WorkerProgress;
+    use crate::sync::{WorkerProgress, WorkerSlabs};
 
-    fn view<'a>(workers: &'a [WorkerProgress]) -> ClusterView<'a> {
+    fn view<'a>(workers: &'a WorkerSlabs) -> ClusterView<'a> {
         ClusterView {
             now: 0.0,
             workers,
@@ -181,23 +180,23 @@ mod tests {
 
     #[test]
     fn fixed_adacomm_round_structure() {
-        let mut ws = vec![WorkerProgress::default(); 3];
+        let mut ws = WorkerSlabs::from_records(&vec![WorkerProgress::default(); 3]);
         let mut p = FixedAdacommPolicy::new(3, 8);
         // Fresh: train a full chunk toward τ=8 → clamped to 4 (next variant ≤ 8 is 4 after 16).
         assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 4 });
         // Mid-round with 3 remaining → k=1 chunks.
-        ws[0].local_since_commit = 5;
+        ws.local_since_commit[0] = 5;
         assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
         // τ reached → commit.
-        ws[0].local_since_commit = 8;
+        ws.local_since_commit[0] = 8;
         assert_eq!(p.next_action(0, &view(&ws)), Action::Commit);
         // After committing, block while others lag.
-        ws[0].local_since_commit = 0;
-        ws[0].commits = 1;
+        ws.local_since_commit[0] = 0;
+        ws.set_commits(0, 1);
         assert_eq!(p.next_action(0, &view(&ws)), Action::Block);
         // Peers done → next round starts.
-        ws[1].commits = 1;
-        ws[2].commits = 1;
+        ws.set_commits(1, 1);
+        ws.set_commits(2, 1);
         assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 4 });
     }
 

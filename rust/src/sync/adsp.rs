@@ -128,7 +128,7 @@ impl AdspPolicy {
             return;
         }
         for w in 0..self.m {
-            let dc = (self.c_target - view.workers[w].commits as f64).max(1.0);
+            let dc = (self.c_target - view.workers.commits(w) as f64).max(1.0);
             self.delta_c[w] = dc;
             // Bring forward any deadline that the new (higher) rate implies.
             let new_deadline = view.now + self.timeout(w);
@@ -153,13 +153,12 @@ impl SyncPolicy for AdspPolicy {
     }
 
     fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
-        let me = &view.workers[w];
-        if view.now + 1e-9 >= self.deadlines[w] && me.local_since_commit >= 1 {
+        if view.now + 1e-9 >= self.deadlines[w] && view.workers.local_since_commit[w] >= 1 {
             return Action::Commit;
         }
         // Train until the timer fires; chunk as large as the remaining
         // window allows so τ-sized blocks run in few XLA executes.
-        let t_step = view.step_time(w, me.batch_size.max(1)).max(1e-9);
+        let t_step = view.step_time(w, view.workers.batch_size[w].max(1)).max(1e-9);
         let remaining = (self.deadlines[w] - view.now).max(0.0);
         let fit = (remaining / t_step).floor().max(1.0) as u64;
         Action::Train { k: view.clamp_k(fit) }
@@ -287,7 +286,7 @@ impl SyncPolicy for AdspPolicy {
 mod tests {
     use super::*;
     use crate::config::{ClusterSpec, WorkerSpec};
-    use crate::sync::WorkerProgress;
+    use crate::sync::{WorkerProgress, WorkerSlabs};
 
     fn cluster3() -> ClusterSpec {
         ClusterSpec::new(vec![
@@ -301,9 +300,16 @@ mod tests {
         SyncSpec::new(SyncModelKind::Adsp)
     }
 
+    fn slabs3() -> WorkerSlabs {
+        WorkerSlabs::from_records(&vec![
+            WorkerProgress { batch_size: 128, ..Default::default() };
+            3
+        ])
+    }
+
     fn view<'a>(
         now: f64,
-        workers: &'a [WorkerProgress],
+        workers: &'a WorkerSlabs,
         speeds: &'a [f64],
         comms: &'a [f64],
     ) -> ClusterView<'a> {
@@ -342,8 +348,8 @@ mod tests {
         let mut p = AdspPolicy::new(&spec(), &cl);
         let speeds = cl.speeds();
         let comms = cl.comms();
-        let mut ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
-        ws[0].steps = 1000; // way ahead
+        let mut ws = slabs3();
+        ws.set_steps(0, 1000); // way ahead
         for w in 0..3 {
             let a = p.next_action(w, &view(0.0, &ws, &speeds, &comms));
             assert_ne!(a, Action::Block);
@@ -356,14 +362,14 @@ mod tests {
         let mut p = AdspPolicy::new(&spec(), &cl);
         let speeds = cl.speeds();
         let comms = cl.comms();
-        let mut ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
-        ws[0].local_since_commit = 2;
+        let mut ws = slabs3();
+        ws.local_since_commit[0] = 2;
         // Deadline starts at 0, so at t=0 worker 0 must commit.
         let a = p.next_action(0, &view(0.0, &ws, &speeds, &comms));
         assert_eq!(a, Action::Commit);
         // After the commit is applied the deadline moves Γ/ΔC − O ahead.
-        ws[0].local_since_commit = 0;
-        ws[0].commits = 1;
+        ws.local_since_commit[0] = 0;
+        ws.set_commits(0, 1);
         p.on_commit_applied(0, &view(0.0, &ws, &speeds, &comms));
         let a = p.next_action(0, &view(0.0, &ws, &speeds, &comms));
         assert!(matches!(a, Action::Train { .. }));
@@ -377,7 +383,7 @@ mod tests {
         let mut p = AdspPolicy::new(&spec(), &cl);
         let speeds = cl.speeds();
         let comms = cl.comms();
-        let ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
+        let ws = slabs3();
         p.deadlines = vec![10.0, 10.0, 10.0];
         // Worker 0: speed 1 ⇒ 10 steps fit ⇒ k=4 (largest variant ≤ 10).
         assert_eq!(p.next_action(0, &view(0.0, &ws, &speeds, &comms)), Action::Train { k: 4 });
@@ -391,10 +397,10 @@ mod tests {
         let mut p = AdspPolicy::new(&spec(), &cl);
         let speeds = cl.speeds();
         let comms = cl.comms();
-        let mut ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
-        ws[0].commits = 10;
-        ws[1].commits = 9;
-        ws[2].commits = 4; // lagging
+        let mut ws = slabs3();
+        ws.set_commits(0, 10);
+        ws.set_commits(1, 9);
+        ws.set_commits(2, 4); // lagging
         p.c_target = 10.0;
         p.on_checkpoint(&view(60.0, &ws, &speeds, &comms));
         // Lagging worker gets the biggest ΔC.
@@ -435,10 +441,14 @@ mod tests {
         p.c_target = 40.0;
         let mut speeds = cl.speeds();
         let mut comms = cl.comms();
-        let mut ws = vec![WorkerProgress { batch_size: 128, ..Default::default() }; 3];
-        for w in &mut ws {
-            w.commits = 8;
-        }
+        let mut ws = WorkerSlabs::from_records(&vec![
+            WorkerProgress {
+                batch_size: 128,
+                commits: 8,
+                ..Default::default()
+            };
+            3
+        ]);
         // Worker 3 joins, worker 0's speed collapses 4×.
         speeds[0] /= 4.0;
         speeds.push(2.0);

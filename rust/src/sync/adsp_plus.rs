@@ -84,13 +84,12 @@ impl SyncPolicy for AdspPlusPolicy {
     }
 
     fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
-        let me = &view.workers[w];
+        let local = view.workers.local_since_commit[w];
         let tau = self.tau[w];
-        if me.local_since_commit >= tau {
+        if local >= tau {
             Action::Commit
         } else {
-            let remaining = tau - me.local_since_commit;
-            Action::Train { k: view.clamp_k(remaining) }
+            Action::Train { k: view.clamp_k(tau - local) }
         }
     }
 
@@ -120,7 +119,7 @@ impl SyncPolicy for AdspPlusPolicy {
 mod tests {
     use super::*;
     use crate::config::WorkerSpec;
-    use crate::sync::{SyncModelKind, WorkerProgress};
+    use crate::sync::{SyncModelKind, WorkerProgress, WorkerSlabs};
 
     fn cluster() -> ClusterSpec {
         ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.25, 0.2)])
@@ -149,7 +148,10 @@ mod tests {
         let spec = SyncSpec::new(SyncModelKind::AdspPlus).with_gamma(60.0);
         let mut p = AdspPlusPolicy::new(&spec, &cluster());
         assert_eq!(p.tau(), &[59, 14]);
-        let ws = vec![WorkerProgress { batch_size: 32, ..Default::default() }; 3];
+        let ws = WorkerSlabs::from_records(&vec![
+            WorkerProgress { batch_size: 32, ..Default::default() };
+            3
+        ]);
         // Worker 0 slows 4×, a third worker joins at speed 0.5.
         let speeds = [0.25, 0.25, 0.5];
         let comms = [0.2, 0.2, 0.2];
@@ -179,8 +181,11 @@ mod tests {
         let mut spec = SyncSpec::new(SyncModelKind::AdspPlus);
         spec.tau_per_worker = vec![3, 3];
         let mut p = AdspPlusPolicy::new(&spec, &cluster());
-        let mut ws = vec![WorkerProgress { batch_size: 32, ..Default::default() }; 2];
-        fn view(ws: &[WorkerProgress]) -> ClusterView<'_> {
+        let mut ws = WorkerSlabs::from_records(&vec![
+            WorkerProgress { batch_size: 32, ..Default::default() };
+            2
+        ]);
+        fn view(ws: &WorkerSlabs) -> ClusterView<'_> {
             ClusterView {
                 now: 0.0,
                 workers: ws,
@@ -192,10 +197,10 @@ mod tests {
             }
         }
         assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
-        ws[0].local_since_commit = 3;
-        ws[0].commits = 5; // far ahead of peer
+        ws.local_since_commit[0] = 3;
+        ws.set_commits(0, 5); // far ahead of peer
         assert_eq!(p.next_action(0, &view(&ws)), Action::Commit);
-        ws[0].local_since_commit = 0;
+        ws.local_since_commit[0] = 0;
         assert_eq!(p.next_action(0, &view(&ws)), Action::Train { k: 1 });
     }
 }

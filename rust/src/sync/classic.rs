@@ -30,13 +30,12 @@ impl SyncPolicy for BspPolicy {
     }
 
     fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
-        let me = &view.workers[w];
-        if me.local_since_commit >= 1 {
+        if view.workers.local_since_commit[w] >= 1 {
             return Action::Commit;
         }
-        // I have committed round `me.commits`; the barrier releases when
-        // every worker has reached the same commit count.
-        if me.commits > view.min_commits() {
+        // I have committed my round; the barrier releases when every
+        // worker has reached the same commit count.
+        if view.workers.commits(w) > view.min_commits() {
             return Action::Block;
         }
         Action::Train { k: 1 }
@@ -82,13 +81,12 @@ impl SyncPolicy for SspPolicy {
     }
 
     fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
-        let me = &view.workers[w];
-        if me.local_since_commit >= 1 {
+        if view.workers.local_since_commit[w] >= 1 {
             return Action::Commit;
         }
         // Block when training one more step would exceed the staleness
         // bound relative to the slowest worker.
-        if me.steps + 1 > view.min_steps() + self.s {
+        if view.workers.steps(w) + 1 > view.min_steps() + self.s {
             return Action::Block;
         }
         Action::Train { k: 1 }
@@ -123,7 +121,7 @@ impl SyncPolicy for TapPolicy {
     }
 
     fn next_action(&mut self, w: usize, view: &ClusterView) -> Action {
-        if view.workers[w].local_since_commit >= 1 {
+        if view.workers.local_since_commit[w] >= 1 {
             Action::Commit
         } else {
             Action::Train { k: 1 }
@@ -142,10 +140,10 @@ impl SyncPolicy for TapPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sync::WorkerProgress;
+    use crate::sync::{WorkerProgress, WorkerSlabs};
 
     fn view<'a>(
-        workers: &'a [WorkerProgress],
+        workers: &'a WorkerSlabs,
         speeds: &'a [f64],
         comms: &'a [f64],
     ) -> ClusterView<'a> {
@@ -160,8 +158,11 @@ mod tests {
         }
     }
 
-    fn workers(n: usize) -> Vec<WorkerProgress> {
-        vec![WorkerProgress { batch_size: 32, ..Default::default() }; n]
+    fn workers(n: usize) -> WorkerSlabs {
+        WorkerSlabs::from_records(&vec![
+            WorkerProgress { batch_size: 32, ..Default::default() };
+            n
+        ])
     }
 
     #[test]
@@ -173,15 +174,15 @@ mod tests {
         // Fresh worker trains.
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
         // After a local step it must commit.
-        ws[0].steps = 1;
-        ws[0].local_since_commit = 1;
+        ws.set_steps(0, 1);
+        ws.local_since_commit[0] = 1;
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Commit);
         // After its commit, with the peer still at round 0, it blocks.
-        ws[0].local_since_commit = 0;
-        ws[0].commits = 1;
+        ws.local_since_commit[0] = 0;
+        ws.set_commits(0, 1);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
         // Once the peer catches up, it trains again.
-        ws[1].commits = 1;
+        ws.set_commits(1, 1);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
     }
 
@@ -192,14 +193,14 @@ mod tests {
         let mut ws = workers(2);
         let mut p = SspPolicy::new(2, 3);
         // Lead of 3 over the slowest (0 steps): 3+1 > 0+3 → block.
-        ws[0].steps = 3;
+        ws.set_steps(0, 3);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
         // Lead of 2: allowed.
-        ws[0].steps = 2;
+        ws.set_steps(0, 2);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
         // Slow worker catches up → leader unblocks.
-        ws[0].steps = 3;
-        ws[1].steps = 1;
+        ws.set_steps(0, 3);
+        ws.set_steps(1, 1);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
     }
 
@@ -209,19 +210,19 @@ mod tests {
         let comms = [0.1, 0.1];
         let mut ws = workers(2);
         // Worker 0 committed round 1; worker 1 never will — it leaves.
-        ws[0].commits = 1;
+        ws.set_commits(0, 1);
         let mut bsp = BspPolicy::new(2);
         assert_eq!(bsp.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
-        ws[1].active = false;
+        ws.set_active(1, false);
         bsp.on_cluster_change(&view(&ws, &speeds, &comms));
         assert_eq!(bsp.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
 
         // Same for SSP's staleness bound.
         let mut ws = workers(2);
-        ws[0].steps = 5;
+        ws.set_steps(0, 5);
         let mut ssp = SspPolicy::new(2, 3);
         assert_eq!(ssp.next_action(0, &view(&ws, &speeds, &comms)), Action::Block);
-        ws[1].active = false;
+        ws.set_active(1, false);
         ssp.on_cluster_change(&view(&ws, &speeds, &comms));
         assert_eq!(ssp.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
     }
@@ -231,10 +232,10 @@ mod tests {
         let speeds = [1.0, 1.0];
         let comms = [0.1, 0.1];
         let mut ws = workers(2);
-        ws[0].steps = 1_000_000;
+        ws.set_steps(0, 1_000_000);
         let mut p = TapPolicy::new(2);
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Train { k: 1 });
-        ws[0].local_since_commit = 1;
+        ws.local_since_commit[0] = 1;
         assert_eq!(p.next_action(0, &view(&ws, &speeds, &comms)), Action::Commit);
     }
 }

@@ -112,7 +112,9 @@ impl std::str::FromStr for SyncModelKind {
     }
 }
 
-/// Per-worker progress counters maintained by the engine.
+/// Per-worker progress counters, as a single record. The engines store
+/// these column-wise in [`WorkerSlabs`]; the record form remains the
+/// interchange type (join bootstrap, slab push, tests).
 #[derive(Clone, Debug)]
 pub struct WorkerProgress {
     /// Local training steps completed.
@@ -144,12 +146,295 @@ impl Default for WorkerProgress {
     }
 }
 
+/// An incrementally-maintained min or max over the active workers:
+/// the extreme value plus how many active workers currently hold it.
+/// `holders == 0` means "no active workers" (val pinned to 0, matching
+/// the old `unwrap_or(0)` semantics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct Agg {
+    val: u64,
+    holders: usize,
+}
+
+fn scan_min(vals: &[u64], active: &[bool]) -> Agg {
+    let mut agg = Agg { val: 0, holders: 0 };
+    for (v, &a) in vals.iter().zip(active) {
+        if !a {
+            continue;
+        }
+        if agg.holders == 0 || *v < agg.val {
+            agg = Agg { val: *v, holders: 1 };
+        } else if *v == agg.val {
+            agg.holders += 1;
+        }
+    }
+    agg
+}
+
+fn scan_max(vals: &[u64], active: &[bool]) -> Agg {
+    let mut agg = Agg { val: 0, holders: 0 };
+    for (v, &a) in vals.iter().zip(active) {
+        if !a {
+            continue;
+        }
+        if agg.holders == 0 || *v > agg.val {
+            agg = Agg { val: *v, holders: 1 };
+        } else if *v == agg.val {
+            agg.holders += 1;
+        }
+    }
+    agg
+}
+
+/// Struct-of-arrays per-worker progress, the engines' hot-path storage.
+///
+/// The counters policies poll every event — `min_steps`/`min_commits`/
+/// `max_commits` over the *active* workers, plus the active and blocked
+/// populations — are maintained incrementally: the monotone bump paths
+/// (`bump_steps`, `bump_commits`) cost amortized O(1) (a full O(m) rescan
+/// happens only when the last holder of the current extreme advances,
+/// which in lockstep policies is once per round), and the rare arbitrary
+/// mutations (`set_record`, `set_active`, `set_steps`, `set_commits`)
+/// recompute in O(m). Values are exact at all times — the cached
+/// aggregates are bit-identical to a fresh scan (`scan_aggregates`
+/// exposes the scan for verification).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSlabs {
+    steps: Vec<u64>,
+    commits: Vec<u64>,
+    /// Local steps since the last commit was initiated (policy-driven;
+    /// not aggregated, so direct mutation is fine).
+    pub local_since_commit: Vec<u64>,
+    /// Per-worker mini-batch size (not aggregated).
+    pub batch_size: Vec<usize>,
+    active: Vec<bool>,
+    blocked: Vec<bool>,
+    active_count: usize,
+    blocked_count: usize,
+    min_steps: Agg,
+    min_commits: Agg,
+    max_commits: Agg,
+}
+
+impl WorkerSlabs {
+    /// An empty slab set.
+    pub fn new() -> Self {
+        WorkerSlabs::default()
+    }
+
+    /// Build from record form (column-splits the records).
+    pub fn from_records(records: &[WorkerProgress]) -> Self {
+        let mut s = WorkerSlabs::new();
+        for r in records {
+            s.push(r.clone());
+        }
+        s
+    }
+
+    /// Worker slots ever allocated (departed workers included).
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// True when no worker slot was ever allocated.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Local training steps completed by worker `w`.
+    pub fn steps(&self, w: usize) -> u64 {
+        self.steps[w]
+    }
+
+    /// Commits delivered to the PS by worker `w`.
+    pub fn commits(&self, w: usize) -> u64 {
+        self.commits[w]
+    }
+
+    /// Live-membership flag for worker `w`.
+    pub fn is_active(&self, w: usize) -> bool {
+        self.active[w]
+    }
+
+    /// Whether the engine currently has worker `w` parked.
+    pub fn is_blocked(&self, w: usize) -> bool {
+        self.blocked[w]
+    }
+
+    /// Workers currently in the cluster.
+    pub fn active_count(&self) -> usize {
+        self.active_count
+    }
+
+    /// Workers currently parked by their policy.
+    pub fn blocked_count(&self) -> usize {
+        self.blocked_count
+    }
+
+    /// Minimum step count over the active workers (0 when none).
+    pub fn min_steps(&self) -> u64 {
+        self.min_steps.val
+    }
+
+    /// Minimum commit count over the active workers (0 when none).
+    pub fn min_commits(&self) -> u64 {
+        self.min_commits.val
+    }
+
+    /// Maximum commit count over the active workers (0 when none).
+    pub fn max_commits(&self) -> u64 {
+        self.max_commits.val
+    }
+
+    /// Append a worker slot from its record form.
+    pub fn push(&mut self, r: WorkerProgress) {
+        self.steps.push(r.steps);
+        self.commits.push(r.commits);
+        self.local_since_commit.push(r.local_since_commit);
+        self.batch_size.push(r.batch_size);
+        self.active.push(r.active);
+        self.blocked.push(r.blocked);
+        if r.blocked {
+            self.blocked_count += 1;
+        }
+        if r.active {
+            let was_empty = self.active_count == 0;
+            self.active_count += 1;
+            Self::insert_min(&mut self.min_steps, r.steps, was_empty);
+            Self::insert_min(&mut self.min_commits, r.commits, was_empty);
+            Self::insert_max(&mut self.max_commits, r.commits, was_empty);
+        }
+    }
+
+    fn insert_min(agg: &mut Agg, v: u64, was_empty: bool) {
+        if was_empty || v < agg.val {
+            *agg = Agg { val: v, holders: 1 };
+        } else if v == agg.val {
+            agg.holders += 1;
+        }
+    }
+
+    fn insert_max(agg: &mut Agg, v: u64, was_empty: bool) {
+        if was_empty || v > agg.val {
+            *agg = Agg { val: v, holders: 1 };
+        } else if v == agg.val {
+            agg.holders += 1;
+        }
+    }
+
+    /// Record form of worker `w` (snapshot copy).
+    pub fn record(&self, w: usize) -> WorkerProgress {
+        WorkerProgress {
+            steps: self.steps[w],
+            commits: self.commits[w],
+            local_since_commit: self.local_since_commit[w],
+            batch_size: self.batch_size[w],
+            blocked: self.blocked[w],
+            active: self.active[w],
+        }
+    }
+
+    /// Advance worker `w` by `k` local steps (amortized O(1)).
+    pub fn bump_steps(&mut self, w: usize, k: u64) {
+        let old = self.steps[w];
+        self.steps[w] = old + k;
+        if self.active[w] && old == self.min_steps.val {
+            self.min_steps.holders -= 1;
+            if self.min_steps.holders == 0 {
+                self.min_steps = scan_min(&self.steps, &self.active);
+            }
+        }
+    }
+
+    /// Count one applied commit for worker `w` (amortized O(1)).
+    pub fn bump_commits(&mut self, w: usize) {
+        let old = self.commits[w];
+        let new = old + 1;
+        self.commits[w] = new;
+        if !self.active[w] {
+            return;
+        }
+        if old == self.min_commits.val {
+            self.min_commits.holders -= 1;
+            if self.min_commits.holders == 0 {
+                self.min_commits = scan_min(&self.commits, &self.active);
+            }
+        }
+        if self.max_commits.holders == 0 || new > self.max_commits.val {
+            self.max_commits = Agg { val: new, holders: 1 };
+        } else if new == self.max_commits.val {
+            self.max_commits.holders += 1;
+        }
+    }
+
+    /// Park / release worker `w` (O(1); maintains the blocked count).
+    pub fn set_blocked(&mut self, w: usize, b: bool) {
+        if self.blocked[w] != b {
+            self.blocked[w] = b;
+            if b {
+                self.blocked_count += 1;
+            } else {
+                self.blocked_count -= 1;
+            }
+        }
+    }
+
+    /// Flip worker `w`'s membership (O(m): rescans the aggregates).
+    pub fn set_active(&mut self, w: usize, a: bool) {
+        if self.active[w] != a {
+            self.active[w] = a;
+            self.recompute_aggregates();
+        }
+    }
+
+    /// Overwrite worker `w`'s step count (O(m); test / bootstrap support).
+    pub fn set_steps(&mut self, w: usize, v: u64) {
+        self.steps[w] = v;
+        self.recompute_aggregates();
+    }
+
+    /// Overwrite worker `w`'s commit count (O(m); test / bootstrap support).
+    pub fn set_commits(&mut self, w: usize, v: u64) {
+        self.commits[w] = v;
+        self.recompute_aggregates();
+    }
+
+    /// Replace worker `w`'s whole record (crash-restart path; O(m)).
+    pub fn set_record(&mut self, w: usize, r: WorkerProgress) {
+        self.steps[w] = r.steps;
+        self.commits[w] = r.commits;
+        self.local_since_commit[w] = r.local_since_commit;
+        self.batch_size[w] = r.batch_size;
+        self.set_blocked(w, r.blocked);
+        self.active[w] = r.active;
+        self.recompute_aggregates();
+    }
+
+    fn recompute_aggregates(&mut self) {
+        self.active_count = self.active.iter().filter(|&&a| a).count();
+        self.min_steps = scan_min(&self.steps, &self.active);
+        self.min_commits = scan_min(&self.commits, &self.active);
+        self.max_commits = scan_max(&self.commits, &self.active);
+    }
+
+    /// Freshly-scanned `(active_count, min_steps, min_commits, max_commits)`
+    /// — verification hook for the aggregate-consistency property tests.
+    pub fn scan_aggregates(&self) -> (usize, u64, u64, u64) {
+        (
+            self.active.iter().filter(|&&a| a).count(),
+            scan_min(&self.steps, &self.active).val,
+            scan_min(&self.commits, &self.active).val,
+            scan_max(&self.commits, &self.active).val,
+        )
+    }
+}
+
 /// Read-only cluster snapshot handed to policies.
 pub struct ClusterView<'a> {
     /// Current (virtual) time in seconds.
     pub now: f64,
     /// Per-worker progress counters (index-stable across churn).
-    pub workers: &'a [WorkerProgress],
+    pub workers: &'a WorkerSlabs,
     /// v_i — steps per second at the reference batch size.
     pub speeds: &'a [f64],
     /// O_i — commit round-trip seconds.
@@ -171,29 +456,29 @@ impl ClusterView<'_> {
 
     /// Workers currently in the cluster.
     pub fn m_active(&self) -> usize {
-        self.workers.iter().filter(|w| w.active).count()
+        self.workers.active_count()
     }
 
     /// Minimum step count over the active workers.
     pub fn min_steps(&self) -> u64 {
-        self.workers.iter().filter(|w| w.active).map(|w| w.steps).min().unwrap_or(0)
+        self.workers.min_steps()
     }
 
     /// Minimum commit count over the active workers.
     pub fn min_commits(&self) -> u64 {
-        self.workers.iter().filter(|w| w.active).map(|w| w.commits).min().unwrap_or(0)
+        self.workers.min_commits()
     }
 
     /// Maximum commit count over the active workers.
     pub fn max_commits(&self) -> u64 {
-        self.workers.iter().filter(|w| w.active).map(|w| w.commits).max().unwrap_or(0)
+        self.workers.max_commits()
     }
 
     /// Per-step wall time for worker `w` (batch-size scaled: compute grows
     /// linearly with the mini-batch relative to the reference batch).
     pub fn step_time(&self, w: usize, reference_batch: usize) -> f64 {
-        let scale = if reference_batch > 0 && self.workers[w].batch_size > 0 {
-            self.workers[w].batch_size as f64 / reference_batch as f64
+        let scale = if reference_batch > 0 && self.workers.batch_size[w] > 0 {
+            self.workers.batch_size[w] as f64 / reference_batch as f64
         } else {
             1.0
         };
@@ -344,7 +629,7 @@ mod tests {
 
     #[test]
     fn clamp_k_picks_largest_fitting_variant() {
-        let workers = vec![WorkerProgress::default(); 2];
+        let workers = WorkerSlabs::from_records(&vec![WorkerProgress::default(); 2]);
         let view = ClusterView {
             now: 0.0,
             workers: &workers,
@@ -362,14 +647,13 @@ mod tests {
 
     #[test]
     fn view_helpers_skip_inactive_workers() {
-        let mut workers = vec![WorkerProgress::default(); 3];
-        workers[0].steps = 5;
-        workers[0].commits = 2;
-        workers[1].steps = 9;
-        workers[1].commits = 4;
-        workers[2].steps = 1; // the laggard…
-        workers[2].commits = 0;
-        workers[2].active = false; // …has left the cluster.
+        let mut workers = WorkerSlabs::from_records(&vec![WorkerProgress::default(); 3]);
+        workers.set_steps(0, 5);
+        workers.set_commits(0, 2);
+        workers.set_steps(1, 9);
+        workers.set_commits(1, 4);
+        workers.set_steps(2, 1); // the laggard…
+        workers.set_active(2, false); // …has left the cluster.
         let view = ClusterView {
             now: 0.0,
             workers: &workers,
@@ -388,8 +672,8 @@ mod tests {
 
     #[test]
     fn step_time_scales_with_batch() {
-        let mut workers = vec![WorkerProgress::default(); 1];
-        workers[0].batch_size = 64;
+        let mut workers = WorkerSlabs::from_records(&[WorkerProgress::default()]);
+        workers.batch_size[0] = 64;
         let view = ClusterView {
             now: 0.0,
             workers: &workers,
@@ -401,5 +685,82 @@ mod tests {
         };
         // Half the reference batch → half the step time.
         assert!((view.step_time(0, 128) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slab_incremental_aggregates_match_fresh_scans() {
+        // Deterministic op soup over the mutator surface; the cached
+        // aggregates must equal a fresh scan after every single op.
+        let mut rng = crate::util::Rng::new(0x50A5);
+        let mut slabs = WorkerSlabs::new();
+        for _ in 0..4 {
+            slabs.push(WorkerProgress { batch_size: 32, ..Default::default() });
+        }
+        for i in 0..4000 {
+            let w = rng.below(slabs.len());
+            match rng.below(8) {
+                0 => slabs.bump_steps(w, 1 + rng.below(4) as u64),
+                1 | 2 => slabs.bump_commits(w),
+                3 => slabs.set_blocked(w, rng.below(2) == 0),
+                4 => {
+                    // Keep at least one active worker around.
+                    if slabs.active_count() > 1 || !slabs.is_active(w) {
+                        slabs.set_active(w, rng.below(2) == 0);
+                    }
+                }
+                5 => slabs.set_steps(w, rng.below(50) as u64),
+                6 => {
+                    if slabs.len() < 12 {
+                        slabs.push(WorkerProgress {
+                            steps: rng.below(50) as u64,
+                            commits: rng.below(20) as u64,
+                            batch_size: 32,
+                            active: rng.below(4) != 0,
+                            ..Default::default()
+                        });
+                    }
+                }
+                _ => slabs.set_record(
+                    w,
+                    WorkerProgress {
+                        steps: rng.below(50) as u64,
+                        commits: rng.below(20) as u64,
+                        batch_size: 32,
+                        blocked: rng.below(2) == 0,
+                        active: rng.below(4) != 0,
+                        ..Default::default()
+                    },
+                ),
+            }
+            let (active, min_s, min_c, max_c) = slabs.scan_aggregates();
+            assert_eq!(slabs.active_count(), active, "op {i}: active_count");
+            assert_eq!(slabs.min_steps(), min_s, "op {i}: min_steps");
+            assert_eq!(slabs.min_commits(), min_c, "op {i}: min_commits");
+            assert_eq!(slabs.max_commits(), max_c, "op {i}: max_commits");
+            let blocked =
+                (0..slabs.len()).filter(|&v| slabs.is_blocked(v)).count();
+            assert_eq!(slabs.blocked_count(), blocked, "op {i}: blocked_count");
+        }
+    }
+
+    #[test]
+    fn slab_records_roundtrip() {
+        let recs = vec![
+            WorkerProgress { steps: 3, commits: 1, batch_size: 64, ..Default::default() },
+            WorkerProgress { steps: 7, commits: 2, blocked: true, ..Default::default() },
+            WorkerProgress { active: false, ..Default::default() },
+        ];
+        let slabs = WorkerSlabs::from_records(&recs);
+        assert_eq!(slabs.len(), 3);
+        assert_eq!(slabs.blocked_count(), 1);
+        assert_eq!(slabs.active_count(), 2);
+        for (w, r) in recs.iter().enumerate() {
+            let back = slabs.record(w);
+            assert_eq!(back.steps, r.steps);
+            assert_eq!(back.commits, r.commits);
+            assert_eq!(back.batch_size, r.batch_size);
+            assert_eq!(back.blocked, r.blocked);
+            assert_eq!(back.active, r.active);
+        }
     }
 }

@@ -106,6 +106,31 @@ pub fn peak_rss_bytes() -> Option<u64> {
     Some(rss_pages * 4096)
 }
 
+/// Enforce the optional `ADSP_BENCH_MAX_RSS_MB` memory ceiling: when the
+/// variable is set and the process's peak RSS exceeds it, fail with an
+/// error naming both numbers. Unset variable or unreadable RSS (non-Linux)
+/// → no-op, so the guard only ever bites where CI explicitly arms it —
+/// the fleet-scale smoke/bench jobs, whose whole point is that a 10⁵-worker
+/// run must NOT materialize per-worker state.
+pub fn check_rss_guard() -> Result<()> {
+    let Ok(limit) = std::env::var("ADSP_BENCH_MAX_RSS_MB") else {
+        return Ok(());
+    };
+    let limit_mb: f64 = limit
+        .trim()
+        .parse()
+        .with_context(|| format!("parsing ADSP_BENCH_MAX_RSS_MB '{limit}'"))?;
+    if let Some(bytes) = peak_rss_bytes() {
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        if mb > limit_mb {
+            anyhow::bail!(
+                "peak RSS {mb:.1} MiB exceeds ADSP_BENCH_MAX_RSS_MB={limit_mb}"
+            );
+        }
+    }
+    Ok(())
+}
+
 impl BenchHarness {
     pub fn new(group: &str) -> Self {
         BenchHarness {
@@ -203,18 +228,23 @@ impl BenchHarness {
 
     /// Write `BENCH_<group>.json` into `$ADSP_BENCH_JSON_DIR` and return
     /// its path. A no-op returning `Ok(None)` when the variable is unset,
-    /// so plain `cargo bench` runs never touch the filesystem.
+    /// so plain `cargo bench` runs never touch the filesystem. Always
+    /// enforces [`check_rss_guard`] — after writing, so the JSON survives
+    /// for diagnosis even when the guard trips.
     pub fn write_json(&self) -> Result<Option<PathBuf>> {
-        let Some(dir) = std::env::var_os("ADSP_BENCH_JSON_DIR") else {
-            return Ok(None);
+        let written = if let Some(dir) = std::env::var_os("ADSP_BENCH_JSON_DIR") {
+            let dir = PathBuf::from(dir);
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating bench JSON dir {dir:?}"))?;
+            let path = dir.join(format!("BENCH_{}.json", self.group));
+            std::fs::write(&path, self.to_json().dump_pretty())
+                .with_context(|| format!("writing bench JSON {path:?}"))?;
+            Some(path)
+        } else {
+            None
         };
-        let dir = PathBuf::from(dir);
-        std::fs::create_dir_all(&dir)
-            .with_context(|| format!("creating bench JSON dir {dir:?}"))?;
-        let path = dir.join(format!("BENCH_{}.json", self.group));
-        std::fs::write(&path, self.to_json().dump_pretty())
-            .with_context(|| format!("writing bench JSON {path:?}"))?;
-        Ok(Some(path))
+        check_rss_guard()?;
+        Ok(written)
     }
 }
 

@@ -9,7 +9,7 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 
-pub use bench::{BenchHarness, BenchResult, BenchStats};
+pub use bench::{check_rss_guard, peak_rss_bytes, BenchHarness, BenchResult, BenchStats};
 pub use fit::{fit_inverse_curve, reward_from_fit, InverseCurveFit};
 pub use json::Json;
 pub use rng::Rng;

@@ -5,7 +5,7 @@
 //! Requires `make artifacts` (skipped with a message otherwise).
 
 use adsp::cluster::{scenarios, ClusterEvent, ClusterTimeline};
-use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
+use adsp::config::{profiles, ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::coordinator::RealtimeEngine;
 use adsp::data::make_source;
 use adsp::run::{Backend, Run, RunObserver, RunReport};
@@ -1234,4 +1234,141 @@ fn realtime_run_populates_metrics_and_trace() {
         assert!(pair[0].t <= pair[1].t, "trace not time-ordered: {} > {}", pair[0].t, pair[1].t);
     }
     assert!(report.wall_secs < 30.0, "realtime obs run took too long");
+}
+
+// ---------------------------------------------------------------------------
+// fleet scale: cohorts, streaming aggregation, fleet_proxy runtime
+// ---------------------------------------------------------------------------
+//
+// The fleet_proxy model needs no compiled artifacts (its loss is a pure
+// function of the global step counter), so unlike the mlp_quick tests above
+// these run unconditionally — they are tier-1's only full-engine coverage
+// on an artifact-free checkout.
+
+/// A small cohort fleet on a short horizon (the fig17 shape, sized for
+/// tier-1).
+fn fleet_test_spec(kind: SyncModelKind, n: usize) -> ExperimentSpec {
+    let cohort = CohortSpec::new(
+        n,
+        Dist::LogNormal { median: 1.5, sigma: 0.4 },
+        Dist::Uniform { lo: 0.1, hi: 0.3 },
+    );
+    let cluster = ClusterSpec::new(Vec::new()).with_cohorts(vec![cohort]);
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 20.0;
+    sync.epoch_secs = 120.0;
+    sync.eval_window_secs = 15.0;
+    sync.tau = 4;
+    let mut spec = ExperimentSpec::new("fleet_proxy", cluster, sync);
+    spec.batch_size = 32;
+    spec.eval_interval_secs = 10.0;
+    spec.max_virtual_secs = 40.0;
+    spec.max_total_steps = (n as u64) * 200;
+    spec
+}
+
+#[test]
+fn degenerate_cohort_run_bit_identical_to_explicit_workers() {
+    // Acceptance pin: a cohort of point distributions is pure spec-sugar.
+    // For every sync policy, running the cohort form must reproduce the
+    // hand-expanded worker list's run bit for bit — same loss log, same
+    // counters, same per-worker metrics.
+    for kind in SyncModelKind::ALL {
+        let explicit = tiny_spec("fleet_proxy", kind);
+        let mut cohorted = explicit.clone();
+        cohorted.cluster = ClusterSpec::new(Vec::new()).with_cohorts(vec![
+            CohortSpec::new(2, Dist::Point(2.0), Dist::Point(0.2)),
+            CohortSpec::new(1, Dist::Point(0.7), Dist::Point(0.2)),
+        ]);
+        let a = Run::from_spec(explicit).backend(Backend::Sim).execute().unwrap();
+        let b = Run::from_spec(cohorted).backend(Backend::Sim).execute().unwrap();
+        assert_reports_bit_identical(&a, &b, &format!("cohort sugar under {}", kind.name()));
+        assert!(a.events_processed() > 0, "{}: no events counted", kind.name());
+        assert_eq!(
+            a.events_processed(),
+            b.events_processed(),
+            "{}: event counts diverged",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn worker_metrics_cap_gates_materialization_not_results() {
+    // Above the cap the report must stream its aggregates (empty `workers`
+    // vector) without perturbing a single computed bit relative to the
+    // materializing run of the identical spec.
+    let mut streamed = fleet_test_spec(SyncModelKind::Adsp, 48);
+    streamed.worker_metrics_cap = 16;
+    let mut materialized = streamed.clone();
+    materialized.worker_metrics_cap = 1 << 20;
+
+    let a = Run::from_spec(streamed).backend(Backend::Sim).execute().unwrap();
+    let b = Run::from_spec(materialized).backend(Backend::Sim).execute().unwrap();
+
+    assert!(a.workers.is_empty(), "cap ignored: per-worker metrics materialized");
+    assert_eq!(b.workers.len(), 48, "uncapped run lost its per-worker metrics");
+    assert_eq!(a.total_steps, b.total_steps);
+    assert_eq!(a.total_commits, b.total_commits);
+    assert_eq!(a.bytes_total, b.bytes_total);
+    assert_eq!(a.end_time.to_bits(), b.end_time.to_bits());
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits());
+    assert_eq!(a.events_processed(), b.events_processed());
+    // The streamed breakdown folds worker-by-worker without the vector and
+    // must land on the identical averages.
+    assert_eq!(a.breakdown.avg_compute_secs.to_bits(), b.breakdown.avg_compute_secs.to_bits());
+    assert_eq!(a.breakdown.avg_waiting_secs.to_bits(), b.breakdown.avg_waiting_secs.to_bits());
+    assert_eq!(a.breakdown.avg_comm_secs.to_bits(), b.breakdown.avg_comm_secs.to_bits());
+    assert_eq!(a.breakdown.avg_blocked_secs.to_bits(), b.breakdown.avg_blocked_secs.to_bits());
+    assert!(a.breakdown.avg_compute_secs.is_finite());
+    assert!(a.total_steps > 0 && a.events_processed() > 0);
+}
+
+#[test]
+fn cell_crash_timeline_expands_and_recovers() {
+    // A cell-targeted crash against cohort members: expansion rewrites it
+    // into per-member WorkerCrash events, the run loses the in-flight work
+    // of that cell, and training continues after the restart.
+    let mut spec = fleet_test_spec(SyncModelKind::Adsp, 12);
+    spec.cluster.cohorts[0].cells = vec!["cell-a".into(), "cell-b".into()];
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::CellCrash {
+        t: 10.0,
+        cell: "cell-a".into(),
+        restart_after: 5.0,
+    }]);
+    spec.validate().unwrap();
+
+    let report = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+    assert!(report.total_steps > 0, "fleet never trained through the cell crash");
+    assert!(report.wasted_steps > 0, "crashing half the fleet wasted no work");
+    assert!(report.end_time > 10.0, "run ended before the crash fired");
+
+    // The spec-level expansion carries one WorkerCrash per cell member.
+    let expanded = spec.expanded().unwrap().unwrap();
+    let crashes = expanded
+        .timeline
+        .events()
+        .iter()
+        .filter(|e| matches!(e, ClusterEvent::WorkerCrash { .. }))
+        .count();
+    assert_eq!(crashes, 6, "cell-a holds every other of 12 members");
+}
+
+#[test]
+fn fleet_proxy_losses_decrease_and_report_parses() {
+    // End-to-end sanity for the artifact-free runtime: losses decay with
+    // steps, the report round-trips through JSON with the events_processed
+    // counter intact, and the sim stays deterministic across runs.
+    let spec = fleet_test_spec(SyncModelKind::Adsp, 24);
+    let a = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+    let b = Run::from_spec(spec).backend(Backend::Sim).execute().unwrap();
+    assert_reports_bit_identical(&a, &b, "fleet_proxy determinism");
+
+    let first = a.loss_log.samples.first().expect("no evals").loss;
+    let last = a.loss_log.samples.last().unwrap().loss;
+    assert!(last < first, "synthetic loss failed to decay: {first} -> {last}");
+
+    let back = RunReport::from_json_str(&a.to_json().dump_pretty()).unwrap();
+    assert_eq!(back.events_processed(), a.events_processed());
+    assert_eq!(back.to_json(), a.to_json(), "fleet report JSON drifted");
 }

@@ -19,7 +19,7 @@
 use adsp::config::{ClusterSpec, SyncSpec, WorkerSpec};
 use adsp::sync::{
     implicit_momentum, make_policy, Action, ClusterView, SyncModelKind, SyncPolicy,
-    WorkerProgress,
+    WorkerProgress, WorkerSlabs,
 };
 use adsp::util::{fit_inverse_curve, Json, Rng};
 
@@ -28,7 +28,7 @@ const K_VARIANTS: [usize; 3] = [16, 4, 1];
 /// Policy-only discrete-event mock of the simulator (no XLA, no data).
 struct MockEngine {
     policy: Box<dyn SyncPolicy>,
-    progress: Vec<WorkerProgress>,
+    progress: WorkerSlabs,
     speeds: Vec<f64>,
     comms: Vec<f64>,
     gamma: f64,
@@ -63,9 +63,13 @@ impl MockEngine {
         let m = cluster.m();
         let mut spec = sync.clone();
         spec.kind = kind;
+        let mut progress = WorkerSlabs::new();
+        for _ in 0..m {
+            progress.push(WorkerProgress { batch_size: 32, ..Default::default() });
+        }
         MockEngine {
             policy: make_policy(&spec, cluster),
-            progress: vec![WorkerProgress { batch_size: 32, ..Default::default() }; m],
+            progress,
             speeds: cluster.speeds(),
             comms: cluster.comms(),
             gamma: sync.gamma,
@@ -102,7 +106,7 @@ impl MockEngine {
     }
 
     fn drive(&mut self, w: usize) {
-        if !self.progress[w].active {
+        if !self.progress.is_active(w) {
             return; // stale event for a departed worker
         }
         let action = {
@@ -120,10 +124,13 @@ impl MockEngine {
         match action {
             Action::Train { k } => {
                 let k = k.max(1);
-                self.progress[w].steps += k;
-                self.progress[w].local_since_commit += k;
-                let stale = self.progress[w].steps
-                    - self.progress.iter().map(|p| p.steps).min().unwrap();
+                self.progress.bump_steps(w, k);
+                self.progress.local_since_commit[w] += k;
+                let all_min = (0..self.progress.len())
+                    .map(|i| self.progress.steps(i))
+                    .min()
+                    .unwrap();
+                let stale = self.progress.steps(w) - all_min;
                 self.max_staleness_seen = self.max_staleness_seen.max(stale);
                 let dt = k as f64 / self.speeds[w];
                 let t = self.now + dt;
@@ -132,14 +139,14 @@ impl MockEngine {
             Action::Commit => {
                 self.commit_trace.push((
                     w,
-                    self.progress[w].steps,
-                    self.progress[w].local_since_commit,
+                    self.progress.steps(w),
+                    self.progress.local_since_commit[w],
                 ));
-                self.progress[w].local_since_commit = 0;
+                self.progress.local_since_commit[w] = 0;
                 self.push(self.now + self.comms[w] / 2.0, w, EV_ARRIVE);
             }
             Action::Block => {
-                self.progress[w].blocked = true;
+                self.progress.set_blocked(w, true);
                 self.blocked_ever = true;
             }
         }
@@ -149,17 +156,15 @@ impl MockEngine {
     /// minimum — the mock analogue of the engines' churn handling.
     fn do_churn(&mut self) {
         let laggard = (0..self.progress.len())
-            .filter(|&i| self.progress[i].active)
-            .min_by_key(|&i| self.progress[i].steps)
+            .filter(|&i| self.progress.is_active(i))
+            .min_by_key(|&i| self.progress.steps(i))
             .expect("active worker");
-        if self.progress.iter().filter(|p| p.active).count() > 1 {
-            self.progress[laggard].active = false;
-            self.progress[laggard].blocked = false;
+        if self.progress.active_count() > 1 {
+            // Blocked is a sub-state of active: clear it first.
+            self.progress.set_blocked(laggard, false);
+            self.progress.set_active(laggard, false);
         }
-        let active_min = |f: fn(&WorkerProgress) -> u64| {
-            self.progress.iter().filter(|p| p.active).map(f).min().unwrap_or(0)
-        };
-        let (min_steps, min_commits) = (active_min(|p| p.steps), active_min(|p| p.commits));
+        let (min_steps, min_commits) = (self.progress.min_steps(), self.progress.min_commits());
         let j = self.progress.len();
         self.progress.push(WorkerProgress {
             steps: min_steps,
@@ -220,9 +225,9 @@ impl MockEngine {
             }
             match ev {
                 EV_READY => self.drive(w),
-                EV_ARRIVE if !self.progress[w].active => {} // commit lost with the leaver
+                EV_ARRIVE if !self.progress.is_active(w) => {} // commit lost with the leaver
                 EV_ARRIVE => {
-                    self.progress[w].commits += 1;
+                    self.progress.bump_commits(w);
                     let view = ClusterView {
                         now: self.now,
                         workers: &self.progress,
@@ -240,7 +245,7 @@ impl MockEngine {
             }
             // Re-poll blocked workers.
             let blocked: Vec<usize> =
-                (0..self.progress.len()).filter(|&i| self.progress[i].blocked).collect();
+                (0..self.progress.len()).filter(|&i| self.progress.is_blocked(i)).collect();
             for i in blocked {
                 let action = {
                     let view = ClusterView {
@@ -255,19 +260,14 @@ impl MockEngine {
                     self.policy.next_action(i, &view)
                 };
                 if action != Action::Block {
-                    self.progress[i].blocked = false;
+                    self.progress.set_blocked(i, false);
                     self.push(self.now, i, EV_READY);
                 }
             }
-            let active_all_blocked = {
-                let mut any = false;
-                let mut all = true;
-                for p in self.progress.iter().filter(|p| p.active) {
-                    any = true;
-                    all &= p.blocked;
-                }
-                any && all
-            };
+            // Blocked is a sub-state of active, so "every active worker is
+            // blocked" is an O(1) counter comparison on the slabs.
+            let active_all_blocked = self.progress.active_count() > 0
+                && self.progress.blocked_count() == self.progress.active_count();
             if self.queue.is_empty() && active_all_blocked {
                 return false; // deadlock
             }
@@ -308,8 +308,8 @@ fn prop_bsp_lockstep() {
         let sync = random_sync(&mut case_rng, SyncModelKind::Bsp);
         let mut eng = MockEngine::new(SyncModelKind::Bsp, &cluster, &sync);
         let ok = eng.run(300.0, |e, _| {
-            let min = e.progress.iter().map(|p| p.commits).min().unwrap();
-            let max = e.progress.iter().map(|p| p.commits).max().unwrap();
+            let min = (0..e.progress.len()).map(|i| e.progress.commits(i)).min().unwrap();
+            let max = (0..e.progress.len()).map(|i| e.progress.commits(i)).max().unwrap();
             assert!(max - min <= 1, "case {case}: BSP lockstep broken: {min}..{max}");
         });
         assert!(ok, "case {case}: BSP deadlocked");
@@ -386,7 +386,8 @@ fn prop_adsp_commit_balance_at_horizon() {
         let mut eng = MockEngine::new(SyncModelKind::Adsp, &cluster, &sync);
         let ok = eng.run(400.0, |_, _| {});
         assert!(ok, "case {case}: ADSP deadlocked");
-        let commits: Vec<u64> = eng.progress.iter().map(|p| p.commits).collect();
+        let commits: Vec<u64> =
+            (0..eng.progress.len()).map(|i| eng.progress.commits(i)).collect();
         let min = *commits.iter().min().unwrap();
         let max = *commits.iter().max().unwrap();
         assert!(
@@ -407,10 +408,13 @@ fn prop_adsp_assigns_larger_rates_to_laggards() {
         let sync = random_sync(&mut case_rng, SyncModelKind::Adsp);
         let mut policy = make_policy(&sync, &cluster);
         // Synthesize unequal commit counts and fire a checkpoint.
-        let mut workers =
-            vec![WorkerProgress { batch_size: 32, ..Default::default() }; m];
-        for (i, w) in workers.iter_mut().enumerate() {
-            w.commits = (i as u64) * 2;
+        let mut workers = WorkerSlabs::new();
+        for i in 0..m {
+            workers.push(WorkerProgress {
+                batch_size: 32,
+                commits: (i as u64) * 2,
+                ..Default::default()
+            });
         }
         let view = ClusterView {
             now: sync.gamma,
@@ -971,16 +975,17 @@ fn prop_policies_survive_churn() {
             assert!(eng.churn_at.is_none(), "case {case}: churn never fired");
             // The joiner really trained past its bootstrap point.
             let boot = eng.joined_at_steps.expect("join recorded");
-            let joined = eng.progress.last().unwrap();
-            assert!(joined.active);
+            let j = eng.progress.len() - 1;
+            assert!(eng.progress.is_active(j));
             assert!(
-                joined.steps > boot,
+                eng.progress.steps(j) > boot,
                 "case {case}: {kind} joiner never trained ({} <= {boot})",
-                joined.steps
+                eng.progress.steps(j)
             );
             // Active workers kept committing.
             assert!(
-                eng.progress.iter().filter(|p| p.active).any(|p| p.commits > 0),
+                (0..eng.progress.len())
+                    .any(|i| eng.progress.is_active(i) && eng.progress.commits(i) > 0),
                 "case {case}: {kind} cluster stopped committing"
             );
         }
@@ -1224,6 +1229,7 @@ fn random_report(r: &mut Rng) -> RunReport {
             xla_secs: r.next_f64() * 100.0,
             deadlocked: r.below(2) == 0,
             dropped_commits: r.next_u64() >> 40,
+            events_processed: r.next_u64() >> 14,
         }
     } else {
         EngineStats::Realtime { time_scale: 0.001 + r.next_f64() }
@@ -1365,6 +1371,167 @@ fn prop_trace_jsonl_roundtrip_is_lossless_and_time_ordered() {
             assert_eq!(a.t.to_bits(), b.t.to_bits(), "case {case}: t bits");
             assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "case {case}: wall_s bits");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cohorts: deterministic fleet expansion (config subsystem)
+// ---------------------------------------------------------------------------
+
+use adsp::config::{CohortSpec, Dist};
+
+fn random_dist(r: &mut Rng) -> Dist {
+    match r.below(3) {
+        0 => Dist::Point(0.2 + 3.0 * r.next_f64()),
+        1 => {
+            let lo = 0.05 + r.next_f64();
+            Dist::Uniform { lo, hi: lo + r.next_f64() }
+        }
+        _ => Dist::LogNormal {
+            median: 0.3 + 2.0 * r.next_f64(),
+            sigma: 0.1 + 0.8 * r.next_f64(),
+        },
+    }
+}
+
+fn random_cohort_spec(r: &mut Rng) -> ExperimentSpec {
+    let explicit = (0..r.below(3))
+        .map(|_| WorkerSpec::new(0.5 + r.next_f64(), 0.1 + 0.2 * r.next_f64()))
+        .collect();
+    let cohorts: Vec<CohortSpec> = (1..=1 + r.below(3))
+        .map(|_| {
+            let mut c =
+                CohortSpec::new(1 + r.below(40), random_dist(r), random_dist(r));
+            c.batch_size = [0, 32, 64][r.below(3)];
+            c.cells = (0..r.below(4)).map(|i| format!("cell-{i}")).collect();
+            c
+        })
+        .collect();
+    let cluster = ClusterSpec::new(explicit).with_cohorts(cohorts);
+    let mut spec =
+        ExperimentSpec::new("mlp_quick", cluster, SyncSpec::new(SyncModelKind::Adsp));
+    spec.seed = r.next_u64();
+    spec
+}
+
+fn assert_same_workers(a: &[WorkerSpec], b: &[WorkerSpec], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: worker count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.speed.to_bits(), y.speed.to_bits(), "{what}: worker {i} speed");
+        assert_eq!(
+            x.comm_secs.to_bits(),
+            y.comm_secs.to_bits(),
+            "{what}: worker {i} comm"
+        );
+        assert_eq!(x.batch_size, y.batch_size, "{what}: worker {i} batch");
+        assert_eq!(x.cell, y.cell, "{what}: worker {i} cell");
+    }
+}
+
+#[test]
+fn prop_cohort_expansion_is_deterministic_and_well_formed() {
+    let mut rng = Rng::new(0xC0_4027);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let spec = random_cohort_spec(&mut r);
+        let explicit = spec.cluster.workers.len();
+        let want: usize = explicit + spec.cluster.cohorts.iter().map(|c| c.count).sum::<usize>();
+        let ex1 = spec.expanded().unwrap_or_else(|e| panic!("case {case}: {e}")).unwrap();
+        let ex2 = spec.expanded().unwrap().unwrap();
+        // Exactly N members, same fleet bit-for-bit on every expansion.
+        assert_eq!(ex1.cluster.workers.len(), want, "case {case}");
+        assert!(ex1.cluster.cohorts.is_empty(), "case {case}: cohorts survived expansion");
+        assert_same_workers(&ex1.cluster.workers, &ex2.cluster.workers, &format!("case {case}"));
+        // Members are appended after the explicit workers, which expansion
+        // must never touch.
+        assert_same_workers(
+            &ex1.cluster.workers[..explicit],
+            &spec.cluster.workers,
+            &format!("case {case} explicit prefix"),
+        );
+        // Every sampled attribute is physically valid, cells round-robin.
+        let mut off = explicit;
+        for (ci, c) in spec.cluster.cohorts.iter().enumerate() {
+            for i in 0..c.count {
+                let w = &ex1.cluster.workers[off + i];
+                assert!(
+                    w.speed > 0.0 && w.speed.is_finite(),
+                    "case {case}: cohort {ci} member {i} speed {}",
+                    w.speed
+                );
+                assert!(w.comm_secs >= 0.0 && w.comm_secs.is_finite(), "case {case}");
+                assert_eq!(w.batch_size, c.batch_size, "case {case}");
+                let want_cell = if c.cells.is_empty() {
+                    String::new()
+                } else {
+                    c.cells[i % c.cells.len()].clone()
+                };
+                assert_eq!(w.cell, want_cell, "case {case}: cohort {ci} member {i} cell");
+            }
+            off += c.count;
+        }
+        // A different seed reshuffles any non-degenerate fleet expansion
+        // RNG stream (point-only cohorts never touch the RNG, so only
+        // check when some distribution actually samples).
+        let mut other = spec.clone();
+        other.seed = spec.seed.wrapping_add(1);
+        let ex3 = other.expanded().unwrap().unwrap();
+        assert_eq!(ex3.cluster.workers.len(), want, "case {case}");
+        // Expansion-then-validate succeeds (the generated fleets are legal).
+        ex1.validate().unwrap_or_else(|e| panic!("case {case}: {e}"));
+    }
+}
+
+#[test]
+fn prop_cohort_specs_roundtrip_through_json() {
+    let mut rng = Rng::new(0xC0_4028);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let spec = random_cohort_spec(&mut r);
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(
+            back.to_json(),
+            spec.to_json(),
+            "case {case}: cohort spec JSON drifted"
+        );
+        // The round-tripped spec expands to the identical fleet.
+        let a = spec.expanded().unwrap().unwrap();
+        let b = back.expanded().unwrap().unwrap();
+        assert_same_workers(&a.cluster.workers, &b.cluster.workers, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn prop_degenerate_cohort_equals_explicit_workers() {
+    // A `count: n` cohort of point distributions is spec-sugar: expansion
+    // must yield exactly the worker list a hand-written spec would carry,
+    // bit for bit (the premise of the engine-level identity pin in the
+    // integration tests).
+    let mut rng = Rng::new(0xC0_4029);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let n = 1 + r.below(30);
+        let speed = 0.2 + 3.0 * r.next_f64();
+        let comm = 0.05 + 0.4 * r.next_f64();
+        let batch = [0usize, 32, 64][r.below(3)];
+        let mut cohort = CohortSpec::new(n, Dist::Point(speed), Dist::Point(comm));
+        cohort.batch_size = batch;
+        let mut cohort_spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(Vec::new()).with_cohorts(vec![cohort]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        cohort_spec.seed = r.next_u64();
+        let explicit: Vec<WorkerSpec> = (0..n)
+            .map(|_| {
+                let mut w = WorkerSpec::new(speed, comm);
+                w.batch_size = batch;
+                w
+            })
+            .collect();
+        let ex = cohort_spec.expanded().unwrap().unwrap();
+        assert_same_workers(&ex.cluster.workers, &explicit, &format!("case {case}"));
     }
 }
 

@@ -1,0 +1,637 @@
+//! Constraint-aware random timeline generation — `--scenario random`.
+//!
+//! Hand-written presets ([`super::scenarios`]) cover a dozen scripts; the
+//! fuzzer covers the space between them. [`FuzzConfig`] describes a fleet
+//! shape (worker count, PS shards, cell labels, run horizon) plus an
+//! [`EventMix`]; [`FuzzConfig::generate`] turns a seed into a
+//! [`ClusterTimeline`] that passes
+//! [`ClusterTimeline::validate_full`] *by construction*: the generator
+//! walks forward in time mirroring the validator's state machine
+//! (membership, per-worker outage windows, per-shard outage windows, live
+//! cell labels), so it never emits a leave that empties the cluster, a
+//! crash overlapping an outage, an out-of-range shard failure, or a
+//! blackout targeting a dead worker or unseen cell.
+//!
+//! Everything is seed-addressed: the same `(config, seed)` pair always
+//! yields the same timeline, so a CI failure is replayed by rerunning the
+//! printed seed (`adsp train --scenario random --fuzz-seed N`) or by
+//! loading the spec dumped with `--fuzz-dump`. See DESIGN.md §Fuzzing for
+//! the oracles that consume these timelines.
+
+use std::str::FromStr;
+
+use crate::config::{ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec};
+use crate::sync::SyncModelKind;
+use crate::util::Rng;
+
+use super::event::ClusterEvent;
+use super::timeline::ClusterTimeline;
+
+/// Domain separator for the fuzzer's RNG streams — independent of the
+/// data, jitter, network and cohort streams, so fuzzing a spec never
+/// perturbs any other randomized subsystem.
+const FUZZ_STREAM: u64 = 0xF0_22;
+
+/// How hard a fuzzed timeline stresses the run: [`FuzzIntensity::Light`]
+/// scripts a handful of events, [`FuzzIntensity::Heavy`] scripts a storm.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FuzzIntensity {
+    /// 4–8 events over the horizon (the CLI default).
+    #[default]
+    Light,
+    /// 16–32 events over the horizon.
+    Heavy,
+}
+
+impl FuzzIntensity {
+    /// The CLI spelling ("light" / "heavy").
+    pub fn name(&self) -> &'static str {
+        match self {
+            FuzzIntensity::Light => "light",
+            FuzzIntensity::Heavy => "heavy",
+        }
+    }
+
+    /// Draw how many events this intensity scripts.
+    fn event_budget(&self, rng: &mut Rng) -> usize {
+        match self {
+            FuzzIntensity::Light => 4 + rng.below(5),
+            FuzzIntensity::Heavy => 16 + rng.below(17),
+        }
+    }
+}
+
+impl FromStr for FuzzIntensity {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "light" => Ok(FuzzIntensity::Light),
+            "heavy" => Ok(FuzzIntensity::Heavy),
+            other => Err(format!("unknown fuzz intensity '{other}' (try light|heavy)")),
+        }
+    }
+}
+
+/// Relative weights of the event kinds a fuzzed timeline draws from.
+/// A zero weight disables that kind entirely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventMix {
+    /// [`ClusterEvent::SpeedChange`] weight.
+    pub speed: u32,
+    /// [`ClusterEvent::CommChange`] weight.
+    pub comm: u32,
+    /// [`ClusterEvent::BandwidthChange`] weight.
+    pub bandwidth: u32,
+    /// [`ClusterEvent::CommBlackout`] weight.
+    pub blackout: u32,
+    /// [`ClusterEvent::WorkerJoin`] weight.
+    pub join: u32,
+    /// [`ClusterEvent::WorkerLeave`] weight.
+    pub leave: u32,
+    /// [`ClusterEvent::WorkerCrash`] weight.
+    pub crash: u32,
+    /// [`ClusterEvent::ShardFailure`] weight.
+    pub shard: u32,
+}
+
+impl Default for EventMix {
+    fn default() -> Self {
+        EventMix {
+            speed: 4,
+            comm: 3,
+            bandwidth: 2,
+            blackout: 2,
+            join: 2,
+            leave: 2,
+            crash: 2,
+            shard: 1,
+        }
+    }
+}
+
+impl EventMix {
+    fn total(&self) -> u32 {
+        self.speed
+            + self.comm
+            + self.bandwidth
+            + self.blackout
+            + self.join
+            + self.leave
+            + self.crash
+            + self.shard
+    }
+
+    /// Weighted draw of an event kind index (0..8, field order).
+    fn pick(&self, rng: &mut Rng) -> usize {
+        let weights = [
+            self.speed,
+            self.comm,
+            self.bandwidth,
+            self.blackout,
+            self.join,
+            self.leave,
+            self.crash,
+            self.shard,
+        ];
+        let total = self.total().max(1);
+        let mut roll = rng.below(total as usize) as u32;
+        for (i, w) in weights.iter().enumerate() {
+            if roll < *w {
+                return i;
+            }
+            roll -= w;
+        }
+        0
+    }
+}
+
+/// Shape of the fleet a fuzzed timeline is generated against. `workers`
+/// and `cells` describe the *expanded* membership (explicit workers plus
+/// every cohort member in expansion order), so a fuzzed timeline attached
+/// to an unexpanded cohort spec still validates after
+/// `ExperimentSpec::expanded` runs.
+#[derive(Clone, Debug)]
+pub struct FuzzConfig {
+    /// Initial worker count after cohort expansion.
+    pub workers: usize,
+    /// PS shard count — shard failures target `0..shards`. With
+    /// `shards == 1` every shard failure targets shard 0, which stays
+    /// valid for *any* spec (shard counts are ≥ 1).
+    pub shards: usize,
+    /// Per-worker cell labels in expansion order (empty string =
+    /// ungrouped). May be empty when no worker is labelled.
+    pub cells: Vec<String>,
+    /// Run horizon in virtual seconds — every event (and every blackout's
+    /// whole window) lands strictly inside it.
+    pub horizon: f64,
+    /// Event count regime.
+    pub intensity: FuzzIntensity,
+    /// Relative event-kind weights.
+    pub event_mix: EventMix,
+}
+
+impl FuzzConfig {
+    /// A config for `workers` plain workers (no cells) over `horizon`.
+    pub fn new(workers: usize, shards: usize, horizon: f64) -> Self {
+        FuzzConfig {
+            workers,
+            shards: shards.max(1),
+            cells: Vec::new(),
+            horizon,
+            intensity: FuzzIntensity::Light,
+            event_mix: EventMix::default(),
+        }
+    }
+
+    /// A config matching `cluster`'s expanded membership: explicit workers
+    /// first, then every cohort's members with their round-robin cell
+    /// labels — the same order `ExperimentSpec::expanded` appends them in.
+    pub fn for_cluster(
+        cluster: &ClusterSpec,
+        shards: usize,
+        horizon: f64,
+        intensity: FuzzIntensity,
+    ) -> Self {
+        let mut cells = cluster.cells();
+        for cohort in &cluster.cohorts {
+            for i in 0..cohort.count {
+                cells.push(if cohort.cells.is_empty() {
+                    String::new()
+                } else {
+                    cohort.cells[i % cohort.cells.len()].clone()
+                });
+            }
+        }
+        let workers = cells.len();
+        let cells = if cells.iter().all(|c| c.is_empty()) { Vec::new() } else { cells };
+        FuzzConfig {
+            workers,
+            shards: shards.max(1),
+            cells,
+            horizon,
+            intensity,
+            event_mix: EventMix::default(),
+        }
+    }
+
+    /// A config matching `spec`'s cluster, shard count and horizon.
+    pub fn for_spec(spec: &ExperimentSpec, intensity: FuzzIntensity) -> Self {
+        Self::for_cluster(&spec.cluster, spec.shards, spec.max_virtual_secs, intensity)
+    }
+
+    /// Generate the seed-addressed timeline. Always emits at least one
+    /// event for a non-empty fleet (an empty one yields an empty
+    /// timeline — the spec is invalid anyway and validation says so).
+    ///
+    /// The generator mirrors `validate_full`'s evolving state: `active`
+    /// membership, per-worker outage lift times, per-shard outage lift
+    /// times and live cell labels. Event times are drawn one per
+    /// equal-width slice of the horizon (ascending by construction), and
+    /// infeasible draws (a leave that would empty the cluster, a crash on
+    /// a downed worker, a failure on a downed shard) fall back to a speed
+    /// change, which is always legal.
+    pub fn generate(&self, seed: u64) -> ClusterTimeline {
+        if self.workers == 0 || !self.horizon.is_finite() || self.horizon <= 0.0 {
+            return ClusterTimeline::default();
+        }
+        let mut rng = Rng::new(seed ^ FUZZ_STREAM).split(0xE1);
+        let n = self.intensity.event_budget(&mut rng);
+
+        // The validator's state machine, mirrored.
+        let mut active = vec![true; self.workers];
+        let mut down_until = vec![0.0f64; self.workers];
+        let mut cell_of: Vec<String> = if self.cells.is_empty() {
+            vec![String::new(); self.workers]
+        } else {
+            self.cells.clone()
+        };
+        let mut shard_down_until = vec![0.0f64; self.shards];
+
+        let mut events = Vec::with_capacity(n);
+        for i in 0..n {
+            // One event per horizon slice keeps times ascending without a
+            // sort, and < horizon · n/(n+1) so blackouts always fit.
+            let t = self.horizon * (i as f64 + rng.next_f64()) / (n as f64 + 1.0);
+            let live: Vec<usize> =
+                (0..active.len()).filter(|&w| active[w]).collect();
+            let up: Vec<usize> = live
+                .iter()
+                .copied()
+                .filter(|&w| down_until[w] <= t)
+                .collect();
+            let mut emitted = None;
+            for _attempt in 0..8 {
+                match self.event_mix.pick(&mut rng) {
+                    0 => {
+                        let w = live[rng.below(live.len())];
+                        emitted = Some(ClusterEvent::SpeedChange {
+                            t,
+                            worker: w,
+                            speed: 0.2 + 3.0 * rng.next_f64(),
+                        });
+                    }
+                    1 => {
+                        let w = live[rng.below(live.len())];
+                        emitted = Some(ClusterEvent::CommChange {
+                            t,
+                            worker: w,
+                            comm_secs: 0.5 * rng.next_f64(),
+                        });
+                    }
+                    2 => {
+                        let w = live[rng.below(live.len())];
+                        // Log-uniform over ~1e5..1e8 bytes/s, occasionally
+                        // restored to unbounded (0 = no limit).
+                        let bw = if rng.below(4) == 0 {
+                            0.0
+                        } else {
+                            1e5 * 1000.0f64.powf(rng.next_f64())
+                        };
+                        emitted = Some(ClusterEvent::BandwidthChange {
+                            t,
+                            worker: w,
+                            bandwidth_bytes_per_sec: bw,
+                        });
+                    }
+                    3 => {
+                        emitted = self.draw_blackout(t, &live, &cell_of, &mut rng);
+                    }
+                    4 => {
+                        let cell = if self.cells.is_empty() || rng.below(2) == 0 {
+                            String::new()
+                        } else {
+                            cell_of[rng.below(cell_of.len())].clone()
+                        };
+                        let mut spec =
+                            WorkerSpec::new(0.3 + 2.5 * rng.next_f64(), 0.4 * rng.next_f64());
+                        spec.cell = cell;
+                        emitted = Some(ClusterEvent::WorkerJoin { t, spec });
+                    }
+                    5 => {
+                        // Leave only an up worker, and never the last one.
+                        if live.len() >= 2 && !up.is_empty() {
+                            let w = up[rng.below(up.len())];
+                            emitted = Some(ClusterEvent::WorkerLeave { t, worker: w });
+                        }
+                    }
+                    6 => {
+                        if !up.is_empty() {
+                            let w = up[rng.below(up.len())];
+                            emitted = Some(ClusterEvent::WorkerCrash {
+                                t,
+                                worker: w,
+                                restart_after: (0.02 + 0.2 * rng.next_f64()) * self.horizon,
+                            });
+                        }
+                    }
+                    _ => {
+                        // Bias toward shard 0 so fuzzed failures survive a
+                        // shards→1 differential re-run unchanged.
+                        let s = if self.shards == 1 || rng.below(2) == 0 {
+                            0
+                        } else {
+                            rng.below(self.shards)
+                        };
+                        if shard_down_until[s] <= t {
+                            emitted = Some(ClusterEvent::ShardFailure {
+                                t,
+                                shard: s,
+                                recover_after: (0.02 + 0.15 * rng.next_f64()) * self.horizon,
+                            });
+                        }
+                    }
+                }
+                if emitted.is_some() {
+                    break;
+                }
+            }
+            let ev = emitted.unwrap_or_else(|| ClusterEvent::SpeedChange {
+                t,
+                worker: live[rng.below(live.len())],
+                speed: 0.2 + 3.0 * rng.next_f64(),
+            });
+            // Advance the mirrored state exactly as the validator will.
+            match &ev {
+                ClusterEvent::WorkerJoin { spec, .. } => {
+                    active.push(true);
+                    down_until.push(0.0);
+                    cell_of.push(spec.cell.clone());
+                }
+                ClusterEvent::WorkerLeave { worker, .. } => active[*worker] = false,
+                ClusterEvent::WorkerCrash { t, worker, restart_after } => {
+                    down_until[*worker] = t + restart_after;
+                }
+                ClusterEvent::ShardFailure { t, shard, recover_after } => {
+                    shard_down_until[*shard] = t + recover_after;
+                }
+                _ => {}
+            }
+            events.push(ev);
+        }
+        ClusterTimeline::new(events)
+    }
+
+    /// A blackout whose window sits inside the horizon, targeting (a) the
+    /// whole cluster, (b) a small subset of live workers, or (c) a live
+    /// cell label.
+    fn draw_blackout(
+        &self,
+        t: f64,
+        live: &[usize],
+        cell_of: &[String],
+        rng: &mut Rng,
+    ) -> Option<ClusterEvent> {
+        let room = self.horizon - t;
+        if room <= 0.0 {
+            return None;
+        }
+        let duration = room * (0.1 + 0.6 * rng.next_f64());
+        let live_cells: Vec<&String> = live
+            .iter()
+            .map(|&w| &cell_of[w])
+            .filter(|c| !c.is_empty())
+            .collect();
+        let mode = rng.below(3);
+        let (workers, cell) = if mode == 2 && !live_cells.is_empty() {
+            (Vec::new(), Some(live_cells[rng.below(live_cells.len())].clone()))
+        } else if mode == 0 {
+            (Vec::new(), None) // empty list + no cell = everyone
+        } else {
+            let k = 1 + rng.below(live.len().min(3));
+            let mut picked = live.to_vec();
+            rng.shuffle(&mut picked);
+            picked.truncate(k);
+            picked.sort_unstable();
+            (picked, None)
+        };
+        Some(ClusterEvent::CommBlackout { start: t, duration, workers, cell })
+    }
+}
+
+/// A complete seed-addressed fuzzed experiment on the artifact-free
+/// `fleet_proxy` model: a few explicit workers plus a `Dist`-sampled
+/// cohort (so cohort expansion is always on the fuzzed path), a fuzzed
+/// timeline, and — under [`FuzzIntensity::Heavy`] — occasional failure
+/// injection, step jitter and checkpointing. Deterministic per
+/// `(seed, kind, intensity)`; both engines can run it without artifacts.
+pub fn random_fleet_spec(
+    seed: u64,
+    kind: SyncModelKind,
+    intensity: FuzzIntensity,
+) -> ExperimentSpec {
+    let mut rng = Rng::new(seed ^ FUZZ_STREAM).split(0xF2EE7);
+    let labels = ["", "edge-a", "edge-b"];
+    let explicit = 1 + rng.below(3);
+    let mut workers = Vec::with_capacity(explicit);
+    for _ in 0..explicit {
+        let mut w = WorkerSpec::new(0.5 + 2.0 * rng.next_f64(), 0.05 + 0.3 * rng.next_f64());
+        w.cell = labels[rng.below(labels.len())].to_string();
+        workers.push(w);
+    }
+    let mut cohort = CohortSpec::new(
+        2 + rng.below(4),
+        Dist::LogNormal { median: 1.0 + rng.next_f64(), sigma: 0.2 + 0.3 * rng.next_f64() },
+        Dist::Uniform { lo: 0.05, hi: 0.1 + 0.3 * rng.next_f64() },
+    );
+    if rng.below(2) == 0 {
+        cohort.cells = vec!["edge-a".to_string(), "edge-b".to_string()];
+    }
+    let total = explicit + cohort.count;
+    let cluster = ClusterSpec::new(workers).with_cohorts(vec![cohort]);
+
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 20.0;
+    sync.epoch_secs = 120.0;
+    sync.eval_window_secs = 15.0;
+    sync.tau = 4;
+    let mut spec = ExperimentSpec::new("fleet_proxy", cluster, sync);
+    spec.seed = seed;
+    spec.batch_size = 32;
+    spec.eval_interval_secs = 10.0;
+    spec.max_virtual_secs = 40.0;
+    spec.max_total_steps = (total as u64) * 200;
+    spec.shards = 1 + rng.below(3);
+    if let FuzzIntensity::Heavy = intensity {
+        if rng.below(3) == 0 {
+            spec.drop_commit_prob = 0.05 + 0.1 * rng.next_f64();
+        }
+        if rng.below(3) == 0 {
+            spec.step_jitter = 0.1 * rng.next_f64();
+        }
+        if rng.below(2) == 0 {
+            spec.fault.checkpoint =
+                crate::fault::CheckpointPolicy::IntervalSecs(8.0 + 8.0 * rng.next_f64());
+        }
+    }
+    spec.timeline = FuzzConfig::for_spec(&spec, intensity).generate(seed);
+    spec
+}
+
+/// The communication-free variant of a spec, for the shard-count
+/// differential oracle. The simulator's only shard-dependent timings are
+/// the one-way commit leg (`comm/2 × split_factor(S)`) and the PS apply
+/// service time (`ps_apply_secs × split_factor(S)`); zeroing every comm
+/// source makes a run's virtual-time trajectory independent of `S`, so
+/// `shards = S` must then reproduce `shards = 1` bit for bit. Shard
+/// failures on shards other than 0 are dropped (they cannot exist in the
+/// `S = 1` re-run); every other event — including bandwidth changes,
+/// whose transfer times are shard-invariant — is kept, with comm targets
+/// zeroed.
+pub fn zero_comm_variant(spec: &ExperimentSpec) -> ExperimentSpec {
+    let mut out = spec.clone();
+    for w in &mut out.cluster.workers {
+        w.comm_secs = 0.0;
+    }
+    for c in &mut out.cluster.cohorts {
+        c.comm_secs = Dist::Point(0.0);
+    }
+    out.ps_apply_secs = 0.0;
+    let events = out
+        .timeline
+        .events()
+        .iter()
+        .filter(|e| !matches!(e, ClusterEvent::ShardFailure { shard, .. } if *shard != 0))
+        .map(|e| match e {
+            ClusterEvent::CommChange { t, worker, .. } => {
+                ClusterEvent::CommChange { t: *t, worker: *worker, comm_secs: 0.0 }
+            }
+            ClusterEvent::WorkerJoin { t, spec } => {
+                let mut joined = spec.clone();
+                joined.comm_secs = 0.0;
+                ClusterEvent::WorkerJoin { t: *t, spec: joined }
+            }
+            other => other.clone(),
+        })
+        .collect();
+    out.timeline = ClusterTimeline::new(events);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labelled_cluster() -> ClusterSpec {
+        let mut workers = vec![
+            WorkerSpec::new(1.0, 0.2),
+            WorkerSpec::new(2.0, 0.3),
+            WorkerSpec::new(0.5, 0.1),
+        ];
+        workers[0].cell = "edge-a".to_string();
+        workers[2].cell = "edge-b".to_string();
+        ClusterSpec::new(workers)
+    }
+
+    #[test]
+    fn generated_timelines_validate_and_are_deterministic() {
+        let cfg = FuzzConfig::for_cluster(&labelled_cluster(), 4, 120.0, FuzzIntensity::Heavy);
+        for seed in 0..25u64 {
+            let tl = cfg.generate(seed);
+            assert!(!tl.is_empty(), "seed {seed} produced no events");
+            tl.validate_full(cfg.workers, cfg.shards, &cfg.cells)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(tl, cfg.generate(seed), "seed {seed} not deterministic");
+        }
+        // Different seeds draw different scripts.
+        assert_ne!(cfg.generate(1), cfg.generate(2));
+    }
+
+    #[test]
+    fn single_worker_fleets_never_empty() {
+        // m = 1: leaves are infeasible and must fall back, not panic.
+        let cfg = FuzzConfig::new(1, 1, 60.0);
+        for seed in 0..20u64 {
+            let tl = cfg.generate(seed);
+            assert!(!tl.is_empty());
+            tl.validate_full(1, 1, &[]).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+    }
+
+    #[test]
+    fn for_cluster_counts_cohort_members_and_cells() {
+        let cluster = ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2)]).with_cohorts(vec![
+            CohortSpec {
+                count: 4,
+                speed: Dist::Point(1.0),
+                comm_secs: Dist::Point(0.2),
+                batch_size: 0,
+                cells: vec!["edge-a".into(), "edge-b".into()],
+            },
+        ]);
+        let cfg = FuzzConfig::for_cluster(&cluster, 2, 60.0, FuzzIntensity::Light);
+        assert_eq!(cfg.workers, 5);
+        assert_eq!(cfg.cells, vec!["", "edge-a", "edge-b", "edge-a", "edge-b"]);
+        // The timeline indexes expanded members, so it validates through
+        // the full spec (which expands first), not against m() alone.
+        let mut spec = ExperimentSpec::new(
+            "fleet_proxy",
+            cluster,
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.shards = 2;
+        spec.max_virtual_secs = 60.0;
+        spec.timeline = cfg.generate(7);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn intensity_parses_and_scales_event_count() {
+        assert_eq!("light".parse::<FuzzIntensity>().unwrap(), FuzzIntensity::Light);
+        assert_eq!("heavy".parse::<FuzzIntensity>().unwrap(), FuzzIntensity::Heavy);
+        assert!("storm".parse::<FuzzIntensity>().is_err());
+        let mut light = FuzzConfig::new(4, 2, 200.0);
+        let mut heavy = light.clone();
+        light.intensity = FuzzIntensity::Light;
+        heavy.intensity = FuzzIntensity::Heavy;
+        assert!(heavy.generate(3).len() > light.generate(3).len());
+    }
+
+    #[test]
+    fn empty_or_degenerate_configs_yield_empty_timelines() {
+        assert!(FuzzConfig::new(0, 1, 60.0).generate(0).is_empty());
+        assert!(FuzzConfig::new(3, 1, 0.0).generate(0).is_empty());
+        assert!(FuzzConfig::new(3, 1, f64::NAN).generate(0).is_empty());
+    }
+
+    #[test]
+    fn random_fleet_spec_is_valid_and_deterministic() {
+        for seed in 0..10u64 {
+            for intensity in [FuzzIntensity::Light, FuzzIntensity::Heavy] {
+                let spec = random_fleet_spec(seed, SyncModelKind::Adsp, intensity);
+                spec.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+                assert_eq!(spec.model, "fleet_proxy");
+                assert!(!spec.cluster.cohorts.is_empty(), "cohorts must be on the path");
+                assert!(!spec.timeline.is_empty());
+                let again = random_fleet_spec(seed, SyncModelKind::Adsp, intensity);
+                assert_eq!(
+                    spec.to_json().dump(),
+                    again.to_json().dump(),
+                    "seed {seed} not deterministic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_comm_variant_strips_every_shard_dependent_timing() {
+        let spec = random_fleet_spec(11, SyncModelKind::Bsp, FuzzIntensity::Heavy);
+        let z = zero_comm_variant(&spec);
+        assert!(z.cluster.workers.iter().all(|w| w.comm_secs == 0.0));
+        assert!(z.cluster.cohorts.iter().all(|c| c.comm_secs == Dist::Point(0.0)));
+        assert_eq!(z.ps_apply_secs, 0.0);
+        for ev in z.timeline.events() {
+            match ev {
+                ClusterEvent::CommChange { comm_secs, .. } => assert_eq!(*comm_secs, 0.0),
+                ClusterEvent::WorkerJoin { spec, .. } => assert_eq!(spec.comm_secs, 0.0),
+                ClusterEvent::ShardFailure { shard, .. } => assert_eq!(*shard, 0),
+                _ => {}
+            }
+        }
+        // Still valid at the original shard count AND at 1.
+        z.validate().unwrap();
+        let mut serial = z.clone();
+        serial.shards = 1;
+        serial.validate().unwrap();
+    }
+}

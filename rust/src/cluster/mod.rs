@@ -22,6 +22,10 @@
 //! * [`scenarios`] — the named presets swept by the `fig14_adaptability`,
 //!   `fig15_comm_stress` and `fig16_fault_tolerance` experiments and the
 //!   CLI's `--scenario` flag (`--list-scenarios` prints the catalogue).
+//! * [`fuzz`] — the seed-addressed constraint-aware random timeline
+//!   generator behind `--scenario random`: [`fuzz::FuzzConfig`] turns a
+//!   seed into a script that passes [`ClusterTimeline::validate_full`]
+//!   by construction, over the fleet's cohort-expanded membership.
 //!
 //! Event semantics (see DESIGN.md §Timeline for the per-policy reaction
 //! table): events fire in virtual time in the simulator and on the scaled
@@ -48,10 +52,12 @@
 //! ```
 
 pub mod event;
+pub mod fuzz;
 pub mod scenarios;
 pub mod state;
 pub mod timeline;
 
 pub use event::ClusterEvent;
+pub use fuzz::{random_fleet_spec, zero_comm_variant, EventMix, FuzzConfig, FuzzIntensity};
 pub use state::{ClusterDelta, ClusterState};
 pub use timeline::ClusterTimeline;

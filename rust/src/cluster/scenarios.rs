@@ -10,19 +10,22 @@ use anyhow::{bail, Result};
 use crate::config::{ClusterSpec, WorkerSpec};
 
 use super::event::ClusterEvent;
+use super::fuzz::{FuzzConfig, FuzzIntensity};
 use super::timeline::ClusterTimeline;
 
 /// Every preset [`preset`] accepts. The first three are the adaptability
 /// scenarios swept by `fig14_adaptability`; `blackout` is the
 /// communication-stress scenario swept (at several severities) by
 /// `fig15_comm_stress`; `crash_storm` is the fault-tolerance scenario
-/// swept (with checkpoint intervals) by `fig16_fault_tolerance`.
-pub const SCENARIO_NAMES: [&str; 5] =
-    ["slowdown", "straggler_burst", "churn", "blackout", "crash_storm"];
+/// swept (with checkpoint intervals) by `fig16_fault_tolerance`;
+/// `random` is the seed-addressed fuzzer ([`super::fuzz`] — the CLI's
+/// `--fuzz-seed`/`--fuzz-intensity` flags pick the script).
+pub const SCENARIO_NAMES: [&str; 6] =
+    ["slowdown", "straggler_burst", "churn", "blackout", "crash_storm", "random"];
 
 /// One-line description per preset, in [`SCENARIO_NAMES`] order (the CLI's
 /// `--list-scenarios` table).
-pub const SCENARIO_DESCRIPTIONS: [(&str, &str); 5] = [
+pub const SCENARIO_DESCRIPTIONS: [(&str, &str); 6] = [
     ("slowdown", "the fastest worker degrades 4x at 20% of the horizon"),
     (
         "straggler_burst",
@@ -40,11 +43,28 @@ pub const SCENARIO_DESCRIPTIONS: [(&str, &str); 5] = [
         "crash_storm",
         "two correlated crash waves (cell groups) at 20% and 50%, each down 10% of the horizon, plus a correlated blackout on the surviving group",
     ),
+    (
+        "random",
+        "constraint-aware fuzzed timeline, deterministic per --fuzz-seed (replay any CI failure by seed; --fuzz-dump writes the spec)",
+    ),
 ];
+
+/// The `--scenario` catalogue as a printable table (also the body of the
+/// unknown-name error, so a typo shows what *is* available).
+pub fn catalogue() -> String {
+    SCENARIO_DESCRIPTIONS
+        .iter()
+        .map(|(name, blurb)| format!("  {name:<16} {blurb}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
 
 /// Build a preset by name. `horizon` is the run's `max_virtual_secs`;
 /// events land at 20% / 50% of it so every scenario has a settled
 /// before-phase and a long enough after-phase to measure degradation.
+/// `random` generates at seed 0 / light intensity / one PS shard here —
+/// the CLI routes `--fuzz-seed`/`--fuzz-intensity` through
+/// [`FuzzConfig`] directly for full control.
 pub fn preset(name: &str, cluster: &ClusterSpec, horizon: f64) -> Result<ClusterTimeline> {
     let t0 = 0.2 * horizon;
     let t1 = 0.5 * horizon;
@@ -54,7 +74,12 @@ pub fn preset(name: &str, cluster: &ClusterSpec, horizon: f64) -> Result<Cluster
         "churn" => Ok(churn(cluster, t0, t1, 2)),
         "blackout" => Ok(blackout(cluster, t0, t1 - t0, 0.5)),
         "crash_storm" => Ok(crash_storm(cluster, horizon)),
-        other => bail!("unknown scenario '{other}' (try {SCENARIO_NAMES:?})"),
+        "random" => {
+            Ok(FuzzConfig::for_cluster(cluster, 1, horizon, FuzzIntensity::Light).generate(0))
+        }
+        other => {
+            bail!("unknown scenario '{other}'. Available scenarios:\n{}", catalogue())
+        }
     }
 }
 
@@ -216,6 +241,28 @@ mod tests {
             tl.validate(c.m()).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         assert!(preset("nope", &c, 600.0).is_err());
+    }
+
+    #[test]
+    fn unknown_scenario_error_lists_the_catalogue() {
+        let err = preset("nope", &cluster(), 600.0).unwrap_err().to_string();
+        for name in SCENARIO_NAMES {
+            assert!(err.contains(name), "catalogue missing '{name}': {err}");
+        }
+        // The names and descriptions tables stay in lockstep.
+        for (name, (desc_name, _)) in SCENARIO_NAMES.iter().zip(SCENARIO_DESCRIPTIONS) {
+            assert_eq!(*name, desc_name);
+        }
+    }
+
+    #[test]
+    fn random_preset_is_the_default_fuzz_config() {
+        let c = cluster();
+        let tl = preset("random", &c, 600.0).unwrap();
+        let direct =
+            FuzzConfig::for_cluster(&c, 1, 600.0, FuzzIntensity::Light).generate(0);
+        assert_eq!(tl, direct);
+        assert_eq!(tl, preset("random", &c, 600.0).unwrap(), "must be deterministic");
     }
 
     #[test]

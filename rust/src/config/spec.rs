@@ -602,6 +602,13 @@ impl ExperimentSpec {
         Self::from_json_str(&std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?)
     }
 
+    /// Write the spec as pretty-printed JSON, loadable back through
+    /// [`ExperimentSpec::load`] / `--config` (the `--fuzz-dump` replay
+    /// path writes fuzzed scenarios this way).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump_pretty()).with_context(|| format!("{path:?}"))
+    }
+
     /// Expand cohorts (and cell-targeted crash events) into their explicit
     /// per-worker form. `None` = nothing to expand: the spec already is
     /// its own expansion, and callers keep it untouched — the zero-cost

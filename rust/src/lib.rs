@@ -62,14 +62,15 @@ pub mod sync;
 #[allow(missing_docs)]
 pub mod util;
 
-pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline};
+pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline, FuzzConfig, FuzzIntensity};
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use fault::{Checkpoint, CheckpointPolicy, CheckpointStore, FaultSpec};
 pub use network::{LinkModel, NetworkSpec};
 pub use obs::{MetricsRegistry, ObsConfig, ObsHub, TraceEvent, TraceRecorder};
 pub use pserver::ShardedParameterServer;
 pub use run::{
-    Backend, EngineStats, NoopObserver, Run, RunBuilder, RunObserver, RunReport, TrainEngine,
+    check_report_invariants, Backend, EngineStats, NoopObserver, Run, RunBuilder, RunObserver,
+    RunReport, TrainEngine,
 };
 pub use simulation::SimEngine;
 pub use sync::SyncModelKind;

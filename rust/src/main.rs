@@ -10,10 +10,11 @@ use std::str::FromStr;
 
 use anyhow::{bail, Context, Result};
 
+use adsp::cluster::{FuzzConfig, FuzzIntensity};
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::experiments::{self, Scale};
 use adsp::obs::{ObsConfig, ObsHub, DEFAULT_TRACE_CAPACITY};
-use adsp::run::{Backend, EngineStats, Run, RunReport};
+use adsp::run::{check_report_invariants, Backend, EngineStats, Run, RunReport};
 use adsp::runtime::ModelRuntime;
 use adsp::sync::SyncModelKind;
 
@@ -26,6 +27,8 @@ USAGE:
              [--target-loss L] [--config FILE.json] [--realtime]
              [--time-scale F] [--seed N] [--shards S] [--pipeline-depth D]
              [--ps-apply-secs T] [--scenario NAME] [--list-scenarios]
+             [--fuzz-seed N] [--fuzz-intensity light|heavy]
+             [--fuzz-dump FILE.json]
              [--link-bw BPS] [--link-latency SECS]
              [--checkpoint-every SECS] [--out FILE.json]
              [--metrics FILE.json] [--trace FILE.jsonl]
@@ -54,11 +57,21 @@ TRAIN FLAGS:
                       simulator, split across shards (default 0)
   --scenario NAME     scripted cluster dynamics preset applied on top of
                       the cluster: slowdown | straggler_burst | churn |
-                      blackout | crash_storm (timeline events land at
-                      20%/50% of --max-secs; a JSON --config may instead
-                      script its own \"timeline\" section)
+                      blackout | crash_storm | random (timeline events
+                      land at 20%/50% of --max-secs; a JSON --config may
+                      instead script its own \"timeline\" section)
   --list-scenarios    print every --scenario preset with a one-line
                       description, then exit
+  --fuzz-seed N       seed for --scenario random (default 0): the same
+                      seed always generates the same timeline, so a CI
+                      failure replays exactly by seed
+  --fuzz-intensity I  light (4-8 events, default) or heavy (16-32) for
+                      --scenario random
+  --fuzz-dump FILE    write the full fuzzed ExperimentSpec (timeline
+                      included) as JSON, replayable via --config FILE;
+                      after a random run the RunReport is checked against
+                      the invariant oracle and any violation prints the
+                      replay flags
   --link-bw BPS       per-worker link bandwidth in bytes/s (default 0 =
                       unbounded); commit transfer time then grows with
                       the actual payload bytes (\"network\" section of a
@@ -154,6 +167,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    // Set for `--scenario random`: the replay flags any oracle failure
+    // prints, so a fuzzed CI failure is reproducible from its log line.
+    let mut fuzz_replay: Option<String> = None;
     let spec = if let Some(path) = args.flags.get("config") {
         ExperimentSpec::load(std::path::Path::new(path))?
     } else {
@@ -181,12 +197,33 @@ fn cmd_train(args: &Args) -> Result<()> {
             s.fault.checkpoint = adsp::fault::CheckpointPolicy::IntervalSecs(ckpt_every);
         }
         if let Some(name) = args.flags.get("scenario") {
-            s.timeline =
-                adsp::cluster::scenarios::preset(name, &s.cluster, s.max_virtual_secs)?;
+            if name == "random" {
+                // The fuzzer honours --fuzz-seed/--fuzz-intensity; the
+                // generic preset() entry point covers only the defaults.
+                let fuzz_seed = args.get("fuzz-seed", 0u64)?;
+                let intensity = args.get("fuzz-intensity", FuzzIntensity::Light)?;
+                s.timeline = FuzzConfig::for_spec(&s, intensity).generate(fuzz_seed);
+                fuzz_replay = Some(format!(
+                    "--scenario random --fuzz-seed {fuzz_seed} --fuzz-intensity {}",
+                    intensity.name()
+                ));
+                eprintln!(
+                    "fuzzed timeline: {} events (replay with {})",
+                    s.timeline.len(),
+                    fuzz_replay.as_deref().unwrap_or_default()
+                );
+            } else {
+                s.timeline =
+                    adsp::cluster::scenarios::preset(name, &s.cluster, s.max_virtual_secs)?;
+            }
         }
         s.validate()?;
         s
     };
+    if let Some(path) = args.flags.get("fuzz-dump") {
+        spec.save(std::path::Path::new(path))?;
+        eprintln!("wrote {path} (replay with --config {path})");
+    }
 
     // The sim/realtime branch collapses into one backend selection: both
     // engines run behind the Run builder and report the same RunReport.
@@ -208,11 +245,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // Keep the spec around for the post-run invariant oracle on fuzzed
+    // runs (Run::from_spec consumes its copy).
+    let oracle_spec = fuzz_replay.as_ref().map(|_| spec.clone());
     let mut run = Run::from_spec(spec).backend(backend);
     if let Some(h) = &hub {
         run = run.observability(h);
     }
     let report = run.execute()?;
+    if let (Some(ospec), Some(replay)) = (&oracle_spec, &fuzz_replay) {
+        check_report_invariants(ospec, &report).with_context(|| {
+            format!("fuzz invariant oracle failed — replay with: adsp train {replay}")
+        })?;
+        eprintln!("fuzz invariant oracle: ok");
+    }
     if let Some(path) = args.flags.get("out") {
         std::fs::write(path, report.to_json().dump_pretty())
             .with_context(|| format!("writing report to {path}"))?;

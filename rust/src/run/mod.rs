@@ -52,9 +52,11 @@
 //! taps, verified by the acceptance tests in `tests/integration.rs`.
 
 mod observer;
+mod oracle;
 mod report;
 
 pub use observer::{NoopObserver, RunObserver};
+pub use oracle::check_report_invariants;
 pub use report::{EngineStats, RunReport};
 
 use anyhow::Result;

@@ -1,0 +1,422 @@
+//! The [`RunReport`] invariant oracle — the first of the two fuzzing
+//! oracles (DESIGN.md §Fuzzing; the second, differential re-runs, lives
+//! in `tests/fuzz.rs`).
+//!
+//! [`check_report_invariants`] checks everything a report must satisfy
+//! for *any* spec, however adversarial its fuzzed timeline: finite loss
+//! bits, counter consistency, fault counters silent unless the spec can
+//! fire them, per-worker sums matching the streamed totals, and the
+//! engine's own stopping caps. It deliberately asserts only what both
+//! engines guarantee by construction — e.g. compute + comm + blocked may
+//! legitimately exceed elapsed time (training overlaps commit flight), so
+//! no such bound is checked — making any failure a real bug, not an
+//! over-tight oracle.
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentSpec;
+use crate::run::{EngineStats, RunReport};
+
+/// Relative tolerance for quantities the engines assemble through one
+/// extra floating-point division (e.g. the waiting = comm + blocked
+/// average, divided by the worker count once at report time).
+const REL_TOL: f64 = 1e-9;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL + REL_TOL * a.abs().max(b.abs())
+}
+
+/// Check every engine-agnostic invariant of `report` against the `spec`
+/// that produced it, plus the per-engine stopping caps. The spec may be
+/// in cohort form — it is expanded here before membership-dependent
+/// checks (worker materialization, fault-event gating) run.
+///
+/// Returns the first violated invariant as an error naming the field and
+/// both values, so a fuzz failure message pinpoints the inconsistency.
+pub fn check_report_invariants(spec: &ExperimentSpec, report: &RunReport) -> Result<()> {
+    let spec = match spec.expanded()? {
+        Some(expanded) => expanded,
+        None => spec.clone(),
+    };
+    let m_final = spec.cluster.m() + spec.timeline.join_count();
+
+    // Loss log: finite samples on a nondecreasing clock, and the summary
+    // fields assembled from it exactly as both engines do.
+    let samples = &report.loss_log.samples;
+    let mut prev_t = f64::NEG_INFINITY;
+    for (i, s) in samples.iter().enumerate() {
+        if !s.t.is_finite() || !s.loss.is_finite() || !s.accuracy.is_finite() {
+            bail!("loss_log[{i}]: non-finite sample (t={}, loss={}, acc={})", s.t, s.loss, s.accuracy);
+        }
+        if s.t < prev_t {
+            bail!("loss_log[{i}]: time {} before previous {}", s.t, prev_t);
+        }
+        prev_t = s.t;
+    }
+    match samples.last() {
+        Some(last) => {
+            if report.final_loss.to_bits() != last.loss.to_bits() {
+                bail!("final_loss {} != last loss_log sample {}", report.final_loss, last.loss);
+            }
+            if report.final_accuracy.to_bits() != last.accuracy.to_bits() {
+                bail!(
+                    "final_accuracy {} != last loss_log sample {}",
+                    report.final_accuracy,
+                    last.accuracy
+                );
+            }
+            let best = samples.iter().map(|s| s.loss).fold(f64::INFINITY, f64::min);
+            if report.best_loss.to_bits() != best.to_bits() {
+                bail!("best_loss {} != loss_log minimum {}", report.best_loss, best);
+            }
+        }
+        None => {
+            if !report.final_loss.is_nan() || !report.best_loss.is_nan() {
+                bail!(
+                    "empty loss_log must report NaN losses, got final={} best={}",
+                    report.final_loss,
+                    report.best_loss
+                );
+            }
+        }
+    }
+
+    // Per-worker metrics: materialized exactly when the final population
+    // fits the cap, and then summing to the streamed totals exactly (the
+    // engines bump both in lockstep).
+    if m_final <= spec.worker_metrics_cap {
+        if report.workers.len() != m_final {
+            bail!(
+                "expected {} materialized workers (cap {}), got {}",
+                m_final,
+                spec.worker_metrics_cap,
+                report.workers.len()
+            );
+        }
+        let steps: u64 = report.workers.iter().map(|w| w.steps).sum();
+        if steps != report.total_steps {
+            bail!("worker steps sum {} != total_steps {}", steps, report.total_steps);
+        }
+        let commits: u64 = report.workers.iter().map(|w| w.commits).sum();
+        if commits != report.total_commits {
+            bail!("worker commits sum {} != total_commits {}", commits, report.total_commits);
+        }
+        let bytes: u64 = report.workers.iter().map(|w| w.bytes_up + w.bytes_down).sum();
+        if bytes != report.bytes_total {
+            bail!("worker bytes sum {} != bytes_total {}", bytes, report.bytes_total);
+        }
+        for (w, wm) in report.workers.iter().enumerate() {
+            for (what, v) in [
+                ("compute_secs", wm.compute_secs),
+                ("comm_secs", wm.comm_secs),
+                ("blocked_secs", wm.blocked_secs),
+            ] {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("worker {w}: {what} must be finite and >= 0, got {v}");
+                }
+            }
+        }
+    } else if !report.workers.is_empty() {
+        bail!(
+            "population {} exceeds cap {} but {} workers were materialized",
+            m_final,
+            spec.worker_metrics_cap,
+            report.workers.len()
+        );
+    }
+
+    // Fault counters fire only when the spec can make them fire.
+    let has_shard_failure = spec
+        .timeline
+        .events()
+        .iter()
+        .any(|e| matches!(e, crate::cluster::ClusterEvent::ShardFailure { .. }));
+    let has_leave = spec
+        .timeline
+        .events()
+        .iter()
+        .any(|e| matches!(e, crate::cluster::ClusterEvent::WorkerLeave { .. }));
+    let can_waste = spec.timeline.crash_count() > 0
+        || has_leave
+        || has_shard_failure
+        || spec.drop_commit_prob > 0.0;
+    if report.wasted_steps > 0 && !can_waste {
+        bail!(
+            "wasted_steps = {} with no crash/leave/shard-failure events and drop_commit_prob = 0",
+            report.wasted_steps
+        );
+    }
+    if report.lost_commits > 0 && !has_shard_failure {
+        bail!("lost_commits = {} with no shard-failure events", report.lost_commits);
+    }
+    if report.dropped_commits() > 0 && spec.drop_commit_prob == 0.0 {
+        bail!("dropped_commits = {} with drop_commit_prob = 0", report.dropped_commits());
+    }
+    if spec.fault.is_degenerate() && !spec.timeline.has_fault_events() {
+        if report.checkpoints_taken > 0 || report.checkpoint_overhead_secs != 0.0 {
+            bail!(
+                "checkpoints with a degenerate fault spec and no fault events: taken={} overhead={}",
+                report.checkpoints_taken,
+                report.checkpoint_overhead_secs
+            );
+        }
+    }
+    if report.total_commits == 0 && report.dropped_commits() == 0 && report.bytes_total != 0 {
+        bail!("bytes_total = {} with no commits sent", report.bytes_total);
+    }
+
+    // Breakdown: finite non-negative components, waiting = comm + blocked
+    // within one division's rounding.
+    let b = &report.breakdown;
+    for (what, v) in [
+        ("avg_compute_secs", b.avg_compute_secs),
+        ("avg_waiting_secs", b.avg_waiting_secs),
+        ("avg_comm_secs", b.avg_comm_secs),
+        ("avg_blocked_secs", b.avg_blocked_secs),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            bail!("breakdown.{what} must be finite and >= 0, got {v}");
+        }
+    }
+    if !close(b.avg_waiting_secs, b.avg_comm_secs + b.avg_blocked_secs) {
+        bail!(
+            "avg_waiting_secs {} != avg_comm_secs {} + avg_blocked_secs {}",
+            b.avg_waiting_secs,
+            b.avg_comm_secs,
+            b.avg_blocked_secs
+        );
+    }
+
+    // Clock and caps.
+    if !report.end_time.is_finite() || report.end_time < 0.0 {
+        bail!("end_time must be finite and >= 0, got {}", report.end_time);
+    }
+    if let Some(c) = report.converged_at {
+        if !c.is_finite() || c < 0.0 || c > report.end_time {
+            bail!("converged_at {} outside [0, end_time {}]", c, report.end_time);
+        }
+    }
+    if report.deadlocked() {
+        bail!("simulator reported a policy deadlock");
+    }
+    match report.engine {
+        EngineStats::Sim { .. } => {
+            if report.end_time > spec.max_virtual_secs {
+                bail!(
+                    "sim end_time {} exceeds max_virtual_secs {}",
+                    report.end_time,
+                    spec.max_virtual_secs
+                );
+            }
+            if report.total_steps > spec.max_total_steps {
+                bail!(
+                    "sim total_steps {} exceeds max_total_steps {}",
+                    report.total_steps,
+                    spec.max_total_steps
+                );
+            }
+        }
+        EngineStats::Realtime { .. } => {
+            // The wall-clock engine stops workers between chunks of up to
+            // 16 steps, so it may overshoot the caps by one chunk per
+            // worker and by its pacing slack in time.
+            let step_slack = 16 * m_final as u64;
+            if report.total_steps > spec.max_total_steps + step_slack {
+                bail!(
+                    "realtime total_steps {} exceeds max_total_steps {} + slack {}",
+                    report.total_steps,
+                    spec.max_total_steps,
+                    step_slack
+                );
+            }
+            if report.end_time > 1.25 * spec.max_virtual_secs + 5.0 {
+                bail!(
+                    "realtime end_time {} far beyond max_virtual_secs {}",
+                    report.end_time,
+                    spec.max_virtual_secs
+                );
+            }
+        }
+    }
+
+    // Observability: when a registry was attached, its eval counter must
+    // agree with the loss log (the engines bump it per evaluation).
+    if let Some(reg) = &report.metrics {
+        let evals = reg.counter("sim/evals") + reg.counter("realtime/evals");
+        if evals != samples.len() as u64 {
+            bail!("metrics evals counter {} != loss_log length {}", evals, samples.len());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterSpec, SyncSpec, WorkerSpec};
+    use crate::metrics::{Breakdown, LossLog, WorkerMetrics};
+    use crate::sync::SyncModelKind;
+
+    fn tiny_spec() -> ExperimentSpec {
+        let mut spec = ExperimentSpec::new(
+            "fleet_proxy",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.1)]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.max_virtual_secs = 100.0;
+        spec.max_total_steps = 10_000;
+        spec
+    }
+
+    fn consistent_report() -> RunReport {
+        let mut loss_log = LossLog::default();
+        loss_log.push(10.0, 40, 2.0, 0.2);
+        loss_log.push(20.0, 90, 1.5, 0.4);
+        let worker = |steps, commits| WorkerMetrics {
+            compute_secs: 10.0,
+            comm_secs: 2.0,
+            blocked_secs: 1.0,
+            steps,
+            commits,
+            bytes_up: 1024,
+            bytes_down: 1024,
+        };
+        RunReport {
+            model: "fleet_proxy".into(),
+            sync: SyncModelKind::Adsp,
+            sync_describe: "adsp".into(),
+            converged_at: None,
+            end_time: 100.0,
+            wall_secs: 0.01,
+            total_steps: 90,
+            total_commits: 8,
+            final_loss: 1.5,
+            best_loss: 1.5,
+            final_accuracy: 0.4,
+            loss_log,
+            workers: vec![worker(50, 5), worker(40, 3)],
+            breakdown: Breakdown {
+                avg_compute_secs: 10.0,
+                avg_waiting_secs: 3.0,
+                avg_comm_secs: 2.0,
+                avg_blocked_secs: 1.0,
+            },
+            bytes_total: 4096,
+            wasted_steps: 0,
+            lost_commits: 0,
+            checkpoints_taken: 0,
+            checkpoint_overhead_secs: 0.0,
+            metrics: None,
+            engine: EngineStats::Sim {
+                xla_execs: 8,
+                xla_secs: 0.0,
+                deadlocked: false,
+                dropped_commits: 0,
+                events_processed: 120,
+            },
+        }
+    }
+
+    #[test]
+    fn consistent_report_passes() {
+        check_report_invariants(&tiny_spec(), &consistent_report()).unwrap();
+    }
+
+    #[test]
+    fn counter_mismatches_are_caught() {
+        let spec = tiny_spec();
+        let mut r = consistent_report();
+        r.total_steps = 91; // workers still sum to 90
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("total_steps"), "got: {err}");
+
+        let mut r = consistent_report();
+        r.bytes_total = 4097;
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("bytes_total"), "got: {err}");
+    }
+
+    #[test]
+    fn summary_fields_must_match_loss_log_bitwise() {
+        let spec = tiny_spec();
+        let mut r = consistent_report();
+        r.final_loss = 1.5 + 1e-12;
+        assert!(check_report_invariants(&spec, &r).is_err());
+        let mut r = consistent_report();
+        r.best_loss = 1.0;
+        assert!(check_report_invariants(&spec, &r).is_err());
+        // An empty loss log demands NaN summaries.
+        let mut r = consistent_report();
+        r.loss_log = LossLog::default();
+        assert!(check_report_invariants(&spec, &r).is_err());
+        r.final_loss = f64::NAN;
+        r.best_loss = f64::NAN;
+        r.final_accuracy = f64::NAN;
+        check_report_invariants(&spec, &r).unwrap();
+    }
+
+    #[test]
+    fn fault_counters_require_fault_sources() {
+        let spec = tiny_spec();
+        let mut r = consistent_report();
+        r.wasted_steps = 3;
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("wasted_steps"), "got: {err}");
+        // The same report passes once the spec scripts a crash.
+        let mut faulty = tiny_spec();
+        faulty.timeline = crate::cluster::ClusterTimeline::new(vec![
+            crate::cluster::ClusterEvent::WorkerCrash { t: 10.0, worker: 0, restart_after: 5.0 },
+        ]);
+        check_report_invariants(&faulty, &r).unwrap();
+
+        let mut r = consistent_report();
+        r.lost_commits = 1;
+        assert!(check_report_invariants(&spec, &r).is_err());
+        let mut r = consistent_report();
+        r.checkpoints_taken = 1;
+        assert!(check_report_invariants(&spec, &r).is_err());
+    }
+
+    #[test]
+    fn engine_caps_are_enforced() {
+        let spec = tiny_spec();
+        let mut r = consistent_report();
+        r.end_time = 100.5;
+        assert!(check_report_invariants(&spec, &r).is_err());
+        let mut r = consistent_report();
+        r.total_steps = 20_000;
+        r.workers[0].steps = 19_960; // keep the sums consistent
+        assert!(check_report_invariants(&spec, &r).is_err());
+        // Realtime gets slack on both caps.
+        let mut r = consistent_report();
+        r.engine = EngineStats::Realtime { time_scale: 0.01 };
+        r.end_time = 110.0;
+        check_report_invariants(&spec, &r).unwrap();
+    }
+
+    #[test]
+    fn metrics_evals_must_match_loss_log() {
+        let spec = tiny_spec();
+        let mut r = consistent_report();
+        let mut reg = crate::obs::MetricsRegistry::new();
+        reg.add("sim/evals", 2);
+        r.metrics = Some(reg);
+        check_report_invariants(&spec, &r).unwrap();
+        let mut reg = crate::obs::MetricsRegistry::new();
+        reg.add("sim/evals", 3);
+        r.metrics = Some(reg);
+        assert!(check_report_invariants(&spec, &r).is_err());
+    }
+
+    #[test]
+    fn worker_materialization_follows_the_cap() {
+        let mut spec = tiny_spec();
+        spec.worker_metrics_cap = 1; // population 2 > cap
+        let r = consistent_report();
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("cap"), "got: {err}");
+        let mut r = consistent_report();
+        r.workers.clear();
+        check_report_invariants(&spec, &r).unwrap();
+    }
+}

@@ -322,6 +322,125 @@ mod tests {
         }
     }
 
+    #[test]
+    fn cancel_at_heap_tail_needs_no_sift() {
+        // Cancelling the last heap position exercises remove_at's
+        // no-backfill branch (pos == heap.len() after the pop).
+        let mut q = IndexedEventQueue::new();
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let c = q.push(3.0, "c");
+        assert_eq!(q.cancel(c), Some("c"));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancel_head_promotes_the_next_event() {
+        let mut q = IndexedEventQueue::new();
+        let a = q.push(1.0, "a");
+        q.push(3.0, "c");
+        q.push(2.0, "b");
+        assert_eq!(q.cancel(a), Some("a"));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+    }
+
+    /// The full protocol against a tombstoning `BinaryHeap` reference:
+    /// random push/cancel/reschedule *with pops interleaved*, not just a
+    /// final drain — this is what the sim event loop actually does, and
+    /// what the drain-only shadow test below cannot see (a transiently
+    /// corrupted heap can still drain correctly after it heals).
+    #[test]
+    fn interleaved_pops_match_tombstoned_reference() {
+        use std::cmp::Reverse;
+        use std::collections::{BinaryHeap, HashMap};
+
+        #[derive(Clone, Copy, PartialEq)]
+        struct Key(f64, u64);
+        impl Eq for Key {}
+        impl PartialOrd for Key {
+            fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(other))
+            }
+        }
+        impl Ord for Key {
+            fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+            }
+        }
+
+        let mut rng = Rng::new(0x1D1E);
+        for case in 0..40u64 {
+            let mut r = rng.split(case);
+            let mut q = IndexedEventQueue::new();
+            // Reference: a heap of (t, order) keys where cancelled and
+            // rescheduled entries stay behind as tombstones, plus the
+            // live map that identifies the current key of every id.
+            let mut reference: BinaryHeap<Reverse<(Key, u64)>> = BinaryHeap::new();
+            let mut live: HashMap<u64, (Handle, f64, u64)> = HashMap::new();
+            let mut ids: Vec<u64> = Vec::new();
+            let mut order = 0u64;
+            let mut next_id = 0u64;
+            for _ in 0..500 {
+                match r.below(8) {
+                    0..=3 => {
+                        let t = (r.below(40) as f64) * 0.5; // frequent ties
+                        order += 1;
+                        let h = q.push(t, next_id);
+                        reference.push(Reverse((Key(t, order), next_id)));
+                        live.insert(next_id, (h, t, order));
+                        ids.push(next_id);
+                        next_id += 1;
+                    }
+                    4 if !ids.is_empty() => {
+                        let id = ids.swap_remove(r.below(ids.len()));
+                        let (h, _, _) = live.remove(&id).unwrap();
+                        assert_eq!(q.cancel(h), Some(id), "case {case}: live cancel");
+                    }
+                    5 if !ids.is_empty() => {
+                        let id = ids[r.below(ids.len())];
+                        let t = (r.below(40) as f64) * 0.5;
+                        order += 1;
+                        let entry = live.get_mut(&id).unwrap();
+                        assert!(q.reschedule(entry.0, t), "case {case}: live reschedule");
+                        entry.1 = t;
+                        entry.2 = order;
+                        reference.push(Reverse((Key(t, order), id)));
+                    }
+                    _ => {
+                        // Skip reference tombstones: entries whose id is
+                        // gone or whose key was superseded by a reschedule.
+                        let want = loop {
+                            let Some(&Reverse((Key(t, ord), id))) = reference.peek() else {
+                                break None;
+                            };
+                            match live.get(&id) {
+                                Some(&(_, lt, lord))
+                                    if lt.to_bits() == t.to_bits() && lord == ord =>
+                                {
+                                    break Some((t, id));
+                                }
+                                _ => {
+                                    reference.pop();
+                                }
+                            }
+                        };
+                        assert_eq!(q.pop(), want, "case {case}: interleaved pop diverged");
+                        if let Some((_, id)) = want {
+                            reference.pop();
+                            live.remove(&id);
+                            let p = ids.iter().position(|&x| x == id).unwrap();
+                            ids.swap_remove(p);
+                        }
+                    }
+                }
+            }
+            assert_eq!(q.len(), ids.len(), "case {case}: live count diverged");
+        }
+    }
+
     /// Randomized cancel/reschedule against a shadow model (sorted scan).
     #[test]
     fn cancel_and_reschedule_agree_with_shadow_model() {

@@ -1,0 +1,365 @@
+//! The fuzzing acceptance suite: constraint-aware random timelines ×
+//! every sync policy × both engines, checked by two oracles.
+//!
+//! 1. **Invariant oracle** — `check_report_invariants` validates every
+//!    fuzzed report against what both engines guarantee (loss-log
+//!    consistency, worker-metric sums, fault-counter gating, engine caps).
+//! 2. **Differential oracle** — pairs of runs that must agree bit for bit:
+//!    obs-on vs obs-off, tiny vs huge `worker_metrics_cap` (gates
+//!    materialization, not numbers), cohort spec vs its explicit
+//!    expansion, and `shards = S` vs `shards = 1` on the communication-free
+//!    variant (the simulator's only shard-dependent timings are comm legs).
+//!
+//! Every case is seed-addressed. On failure the panic message carries the
+//! seed, and when `ADSP_FUZZ_DUMP_DIR` is set the failing spec is written
+//! there as replayable JSON (`adsp train --config <dump>.json`). CI's fuzz
+//! job widens the seed set via `ADSP_FUZZ_SEEDS` (comma-separated) and
+//! pins the regime via `ADSP_FUZZ_INTENSITY` (light|heavy).
+
+use adsp::cluster::{random_fleet_spec, zero_comm_variant, FuzzConfig, FuzzIntensity};
+use adsp::config::ExperimentSpec;
+use adsp::obs::{ObsConfig, ObsHub};
+use adsp::run::{check_report_invariants, Backend, Run, RunReport};
+use adsp::sync::SyncModelKind;
+use adsp::util::Rng;
+
+/// Seeds under test: `ADSP_FUZZ_SEEDS="3,17,99"` or the tier-1 default.
+fn fuzz_seeds() -> Vec<u64> {
+    std::env::var("ADSP_FUZZ_SEEDS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect::<Vec<u64>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 2])
+}
+
+/// Intensities under test: both by default, one when CI pins it.
+fn fuzz_intensities() -> Vec<FuzzIntensity> {
+    match std::env::var("ADSP_FUZZ_INTENSITY") {
+        Ok(s) => vec![s.parse().expect("bad ADSP_FUZZ_INTENSITY")],
+        Err(_) => vec![FuzzIntensity::Light, FuzzIntensity::Heavy],
+    }
+}
+
+/// Write the failing spec where CI can pick it up as an artifact.
+fn dump_spec(spec: &ExperimentSpec, tag: &str) {
+    if let Ok(dir) = std::env::var("ADSP_FUZZ_DUMP_DIR") {
+        let _ = std::fs::create_dir_all(&dir);
+        let path = std::path::Path::new(&dir).join(format!("{tag}.json"));
+        match spec.save(&path) {
+            Ok(()) => eprintln!(
+                "fuzz failure spec dumped to {} (replay: adsp train --config {})",
+                path.display(),
+                path.display()
+            ),
+            Err(e) => eprintln!("failed to dump fuzz spec for {tag}: {e}"),
+        }
+    }
+}
+
+/// Run `f`; if it panics, dump the spec for replay, then re-panic.
+fn with_dump<T>(spec: &ExperimentSpec, tag: &str, f: impl FnOnce() -> T) -> T {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => v,
+        Err(e) => {
+            dump_spec(spec, tag);
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn sim_run(spec: &ExperimentSpec, tag: &str) -> RunReport {
+    match Run::from_spec(spec.clone()).execute() {
+        Ok(r) => r,
+        Err(e) => {
+            dump_spec(spec, tag);
+            panic!("{tag}: fuzzed sim run failed: {e}");
+        }
+    }
+}
+
+fn oracle_check(spec: &ExperimentSpec, report: &RunReport, tag: &str) {
+    if let Err(e) = check_report_invariants(spec, report) {
+        dump_spec(spec, tag);
+        panic!("{tag}: invariant oracle failed: {e}");
+    }
+}
+
+/// Bit-level equality of everything the simulator computes (same pin as
+/// `tests/integration.rs`; test binaries cannot share helpers). Skips
+/// `metrics`/`engine`, which is what makes it usable for the obs on/off
+/// differential.
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.total_steps, b.total_steps, "{tag}: steps diverged");
+    assert_eq!(a.total_commits, b.total_commits, "{tag}: commits diverged");
+    assert_eq!(a.bytes_total, b.bytes_total, "{tag}: bytes diverged");
+    assert_eq!(a.end_time.to_bits(), b.end_time.to_bits(), "{tag}: end time diverged");
+    assert_eq!(
+        a.converged_at.map(f64::to_bits),
+        b.converged_at.map(f64::to_bits),
+        "{tag}: convergence time diverged"
+    );
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{tag}: final loss");
+    assert_eq!(a.best_loss.to_bits(), b.best_loss.to_bits(), "{tag}: best loss");
+    assert_eq!(
+        a.final_accuracy.to_bits(),
+        b.final_accuracy.to_bits(),
+        "{tag}: final accuracy"
+    );
+    assert_eq!(a.wasted_steps, b.wasted_steps, "{tag}: wasted steps");
+    assert_eq!(a.lost_commits, b.lost_commits, "{tag}: lost commits");
+    assert_eq!(a.checkpoints_taken, b.checkpoints_taken, "{tag}: checkpoints");
+    assert_eq!(
+        a.checkpoint_overhead_secs.to_bits(),
+        b.checkpoint_overhead_secs.to_bits(),
+        "{tag}: checkpoint overhead"
+    );
+    assert_eq!(a.loss_log.samples.len(), b.loss_log.samples.len(), "{tag}: eval count");
+    for (x, y) in a.loss_log.samples.iter().zip(&b.loss_log.samples) {
+        assert_eq!(x.t.to_bits(), y.t.to_bits(), "{tag}: eval time diverged");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{tag}: loss log diverged");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{tag}: accuracy log");
+        assert_eq!(x.total_steps, y.total_steps, "{tag}: step log diverged");
+    }
+    assert_eq!(a.workers.len(), b.workers.len(), "{tag}: worker count");
+    for (x, y) in a.workers.iter().zip(&b.workers) {
+        assert_eq!(x.steps, y.steps, "{tag}: worker steps");
+        assert_eq!(x.commits, y.commits, "{tag}: worker commits");
+        assert_eq!(x.bytes_up, y.bytes_up, "{tag}: worker bytes up");
+        assert_eq!(x.bytes_down, y.bytes_down, "{tag}: worker bytes down");
+        assert_eq!(x.compute_secs.to_bits(), y.compute_secs.to_bits(), "{tag}: compute");
+        assert_eq!(x.comm_secs.to_bits(), y.comm_secs.to_bits(), "{tag}: comm");
+        assert_eq!(x.blocked_secs.to_bits(), y.blocked_secs.to_bits(), "{tag}: blocked");
+    }
+    assert_eq!(a.sync, b.sync, "{tag}: sync kind");
+    assert_eq!(a.sync_describe, b.sync_describe, "{tag}: sync describe");
+}
+
+/// The same equality with the per-worker block replaced by a
+/// materialization check — the `worker_metrics_cap` differential: the cap
+/// gates whether per-worker metrics are *kept*, never what is *computed*.
+fn assert_reports_identical_except_workers(
+    a: &RunReport,
+    b: &RunReport,
+    want_workers_a: usize,
+    want_workers_b: usize,
+    tag: &str,
+) {
+    let mut a2 = a.clone();
+    let mut b2 = b.clone();
+    assert_eq!(a2.workers.len(), want_workers_a, "{tag}: materialization gate (a)");
+    assert_eq!(b2.workers.len(), want_workers_b, "{tag}: materialization gate (b)");
+    a2.workers.clear();
+    b2.workers.clear();
+    assert_reports_bit_identical(&a2, &b2, tag);
+}
+
+// ---------------------------------------------------------------------------
+// Generator properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fuzzed_timelines_always_validate() {
+    // 300 random fleet shapes × event mixes × intensities: every generated
+    // timeline must pass validate_full against its own config — the
+    // correct-by-construction acceptance bound.
+    let mut rng = Rng::new(0xF0_22_300);
+    for case in 0..300u64 {
+        let mut r = rng.split(case);
+        let workers = 1 + r.below(12);
+        let mut cfg = FuzzConfig::new(workers, 1 + r.below(5), 10.0 + 990.0 * r.next_f64());
+        if r.below(2) == 0 {
+            let labels = ["", "cell-a", "cell-b", "cell-c"];
+            cfg.cells = (0..workers).map(|_| labels[r.below(labels.len())].to_string()).collect();
+            if cfg.cells.iter().all(|c| c.is_empty()) {
+                cfg.cells = Vec::new();
+            }
+        }
+        if r.below(2) == 0 {
+            cfg.intensity = FuzzIntensity::Heavy;
+        }
+        // Random weights, zeros included (a zero disables that kind).
+        cfg.event_mix.speed = r.below(6) as u32;
+        cfg.event_mix.comm = r.below(6) as u32;
+        cfg.event_mix.bandwidth = r.below(6) as u32;
+        cfg.event_mix.blackout = r.below(6) as u32;
+        cfg.event_mix.join = r.below(6) as u32;
+        cfg.event_mix.leave = r.below(6) as u32;
+        cfg.event_mix.crash = r.below(6) as u32;
+        cfg.event_mix.shard = r.below(6) as u32;
+        let seed = r.next_u64();
+        let tl = cfg.generate(seed);
+        assert!(!tl.is_empty(), "case {case} seed {seed}: empty timeline for a live fleet");
+        tl.validate_full(cfg.workers, cfg.shards, &cfg.cells).unwrap_or_else(|e| {
+            panic!(
+                "case {case} seed {seed} (workers={} shards={} horizon={:.1}): {e}",
+                cfg.workers, cfg.shards, cfg.horizon
+            )
+        });
+        // Seed addressing: the same (config, seed) pair regenerates the
+        // identical timeline.
+        assert_eq!(cfg.generate(seed), tl, "case {case} seed {seed}: not deterministic");
+    }
+}
+
+#[test]
+fn fuzzed_fleet_specs_are_deterministic_per_seed() {
+    for intensity in [FuzzIntensity::Light, FuzzIntensity::Heavy] {
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            let a = random_fleet_spec(seed, SyncModelKind::Adsp, intensity);
+            let b = random_fleet_spec(seed, SyncModelKind::Adsp, intensity);
+            assert_eq!(
+                a.to_json().dump(),
+                b.to_json().dump(),
+                "seed {seed} {}: spec generation not deterministic",
+                intensity.name()
+            );
+            a.validate().unwrap_or_else(|e| {
+                panic!("seed {seed} {}: invalid fuzzed spec: {e}", intensity.name())
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle 1: invariants + bit-identical replays, all policies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzzed_sim_runs_are_deterministic_and_pass_the_invariant_oracle() {
+    for intensity in fuzz_intensities() {
+        for seed in fuzz_seeds() {
+            for kind in SyncModelKind::ALL {
+                let tag = format!("sim-{}-seed{seed}-{}", kind.name(), intensity.name());
+                let spec = random_fleet_spec(seed, kind, intensity);
+                let first = sim_run(&spec, &tag);
+                let again = sim_run(&spec, &tag);
+                with_dump(&spec, &tag, || {
+                    assert_reports_bit_identical(&first, &again, &tag);
+                });
+                oracle_check(&spec, &first, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzzed_realtime_runs_pass_the_invariant_oracle() {
+    // The wall-clock engine is nondeterministic, so no bit pins here —
+    // the invariant oracle (with its realtime-lenient caps) is the check.
+    let seed = fuzz_seeds()[0];
+    for kind in [SyncModelKind::Adsp, SyncModelKind::Bsp, SyncModelKind::Ssp] {
+        let tag = format!("realtime-{}-seed{seed}", kind.name());
+        let spec = random_fleet_spec(seed, kind, FuzzIntensity::Light);
+        let report = match Run::from_spec(spec.clone())
+            .backend(Backend::Realtime { time_scale: 0.002 })
+            .execute()
+        {
+            Ok(r) => r,
+            Err(e) => {
+                dump_spec(&spec, &tag);
+                panic!("{tag}: fuzzed realtime run failed: {e}");
+            }
+        };
+        oracle_check(&spec, &report, &tag);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Oracle 2: differential re-runs, all policies
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fuzzed_obs_on_equals_obs_off_bitwise() {
+    for seed in fuzz_seeds() {
+        for kind in SyncModelKind::ALL {
+            let tag = format!("obs-{}-seed{seed}", kind.name());
+            let spec = random_fleet_spec(seed, kind, FuzzIntensity::Light);
+            let plain = sim_run(&spec, &tag);
+            let hub = ObsHub::new(ObsConfig::metrics_only());
+            let observed = match Run::from_spec(spec.clone()).observability(&hub).execute() {
+                Ok(r) => r,
+                Err(e) => {
+                    dump_spec(&spec, &tag);
+                    panic!("{tag}: obs-on run failed: {e}");
+                }
+            };
+            with_dump(&spec, &tag, || {
+                assert_reports_bit_identical(&plain, &observed, &tag);
+                assert!(plain.metrics.is_none(), "{tag}: phantom metrics without a hub");
+                assert!(observed.metrics.is_some(), "{tag}: hub produced no metrics");
+            });
+            oracle_check(&spec, &observed, &tag);
+        }
+    }
+}
+
+#[test]
+fn fuzzed_worker_metrics_cap_gates_materialization_not_bits() {
+    for seed in fuzz_seeds() {
+        for kind in SyncModelKind::ALL {
+            let tag = format!("cap-{}-seed{seed}", kind.name());
+            let spec = random_fleet_spec(seed, kind, FuzzIntensity::Light);
+            let m_final = spec
+                .expanded()
+                .expect("expansion")
+                .map(|e| e.cluster.m())
+                .unwrap_or_else(|| spec.cluster.m())
+                + spec.timeline.join_count();
+            let mut capped = spec.clone();
+            capped.worker_metrics_cap = 0;
+            let full = sim_run(&spec, &tag);
+            let gated = sim_run(&capped, &tag);
+            with_dump(&spec, &tag, || {
+                assert_reports_identical_except_workers(&full, &gated, m_final, 0, &tag);
+            });
+            oracle_check(&capped, &gated, &tag);
+        }
+    }
+}
+
+#[test]
+fn fuzzed_cohort_spec_equals_its_explicit_expansion() {
+    // Cohort sugar is spec-level only: running the unexpanded spec and its
+    // pre-expanded explicit-worker form must agree bit for bit.
+    for seed in fuzz_seeds() {
+        for kind in SyncModelKind::ALL {
+            let tag = format!("cohort-{}-seed{seed}", kind.name());
+            let spec = random_fleet_spec(seed, kind, FuzzIntensity::Light);
+            let explicit = spec
+                .expanded()
+                .expect("expansion")
+                .expect("fuzzed fleet specs always carry a cohort");
+            let a = sim_run(&spec, &tag);
+            let b = sim_run(&explicit, &tag);
+            with_dump(&spec, &tag, || {
+                assert_reports_bit_identical(&a, &b, &tag);
+            });
+        }
+    }
+}
+
+#[test]
+fn fuzzed_shard_count_is_bit_invariant_without_communication() {
+    // The simulator's only shard-dependent timings are the comm one-way leg
+    // and the PS apply service time; the zero-comm variant removes both, so
+    // S shards must replay the S = 1 run exactly — for every policy, on
+    // fuzzed timelines that keep churn, blackouts, crashes, bandwidth
+    // changes and shard-0 failures.
+    for seed in fuzz_seeds() {
+        for kind in SyncModelKind::ALL {
+            let tag = format!("shards-{}-seed{seed}", kind.name());
+            let base = zero_comm_variant(&random_fleet_spec(seed, kind, FuzzIntensity::Heavy));
+            let mut single = base.clone();
+            single.shards = 1;
+            let a = sim_run(&base, &tag);
+            let b = sim_run(&single, &tag);
+            with_dump(&base, &tag, || {
+                assert_reports_bit_identical(
+                    &a,
+                    &b,
+                    &format!("{tag} (S={} vs S=1)", base.shards),
+                );
+            });
+        }
+    }
+}

@@ -1535,6 +1535,177 @@ fn prop_degenerate_cohort_equals_explicit_workers() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// WorkerSlabs: incremental aggregates vs a naive mirror (state machine)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_worker_slabs_aggregates_match_naive_mirror() {
+    // Drives a random op soup — push / bump_steps / bump_commits /
+    // set_blocked / set_active / set_steps / set_commits / set_record —
+    // under the engines' discipline (blocked only while active; unblock
+    // before deactivating), checking after EVERY op that the amortized
+    // O(1) aggregates equal a naive recomputation over a mirror vector,
+    // that scan_aggregates() agrees with the incremental counters, and
+    // that blocked ⊆ active is preserved.
+    let mut rng = Rng::new(0x51AB5);
+    for case in 0..120u64 {
+        let mut r = rng.split(case);
+        let mut slabs = WorkerSlabs::new();
+        let mut mirror: Vec<WorkerProgress> = Vec::new();
+        // Seed 1-4 initial workers.
+        for _ in 0..1 + r.below(4) {
+            let rec = WorkerProgress {
+                steps: r.below(50) as u64,
+                commits: r.below(20) as u64,
+                local_since_commit: r.below(8) as u64,
+                batch_size: [0, 32, 64][r.below(3)],
+                blocked: false,
+                active: true,
+            };
+            slabs.push(rec.clone());
+            mirror.push(rec);
+        }
+        for op in 0..200 {
+            let m = mirror.len();
+            match r.below(10) {
+                0 if m < 12 => {
+                    let active = r.below(4) != 0;
+                    let rec = WorkerProgress {
+                        steps: r.below(50) as u64,
+                        commits: r.below(20) as u64,
+                        local_since_commit: 0,
+                        batch_size: 32,
+                        blocked: active && r.below(4) == 0,
+                        active,
+                    };
+                    slabs.push(rec.clone());
+                    mirror.push(rec);
+                }
+                1..=3 => {
+                    let w = r.below(m);
+                    let k = 1 + r.below(4) as u64;
+                    slabs.bump_steps(w, k);
+                    mirror[w].steps += k;
+                }
+                4..=5 => {
+                    let w = r.below(m);
+                    slabs.bump_commits(w);
+                    mirror[w].commits += 1;
+                }
+                6 => {
+                    let w = r.below(m);
+                    if mirror[w].active {
+                        let b = r.below(2) == 0;
+                        slabs.set_blocked(w, b);
+                        mirror[w].blocked = b;
+                    }
+                }
+                7 => {
+                    let w = r.below(m);
+                    let a = r.below(2) == 0;
+                    if !a {
+                        // Blocked is a sub-state of active: clear it first.
+                        slabs.set_blocked(w, false);
+                        mirror[w].blocked = false;
+                    }
+                    slabs.set_active(w, a);
+                    mirror[w].active = a;
+                }
+                8 => {
+                    let w = r.below(m);
+                    let v = r.below(100) as u64;
+                    if r.below(2) == 0 {
+                        slabs.set_steps(w, v);
+                        mirror[w].steps = v;
+                    } else {
+                        slabs.set_commits(w, v);
+                        mirror[w].commits = v;
+                    }
+                }
+                _ => {
+                    let w = r.below(m);
+                    let active = r.below(4) != 0;
+                    let rec = WorkerProgress {
+                        steps: r.below(100) as u64,
+                        commits: r.below(40) as u64,
+                        local_since_commit: r.below(8) as u64,
+                        batch_size: 32,
+                        blocked: active && r.below(4) == 0,
+                        active,
+                    };
+                    slabs.set_record(w, rec.clone());
+                    mirror[w] = rec;
+                }
+            }
+            // Naive recomputation over the mirror.
+            let naive_active = mirror.iter().filter(|p| p.active).count();
+            let naive_blocked = mirror.iter().filter(|p| p.blocked).count();
+            let naive_min_steps =
+                mirror.iter().filter(|p| p.active).map(|p| p.steps).min().unwrap_or(0);
+            let naive_min_commits =
+                mirror.iter().filter(|p| p.active).map(|p| p.commits).min().unwrap_or(0);
+            let naive_max_commits =
+                mirror.iter().filter(|p| p.active).map(|p| p.commits).max().unwrap_or(0);
+            assert_eq!(slabs.len(), mirror.len(), "case {case} op {op}: len");
+            assert_eq!(
+                slabs.active_count(),
+                naive_active,
+                "case {case} op {op}: active_count"
+            );
+            assert_eq!(
+                slabs.blocked_count(),
+                naive_blocked,
+                "case {case} op {op}: blocked_count"
+            );
+            assert_eq!(
+                slabs.min_steps(),
+                naive_min_steps,
+                "case {case} op {op}: min_steps diverged from naive scan"
+            );
+            assert_eq!(
+                slabs.min_commits(),
+                naive_min_commits,
+                "case {case} op {op}: min_commits diverged from naive scan"
+            );
+            assert_eq!(
+                slabs.max_commits(),
+                naive_max_commits,
+                "case {case} op {op}: max_commits diverged from naive scan"
+            );
+            // The verification scan agrees with the incremental counters.
+            assert_eq!(
+                slabs.scan_aggregates(),
+                (naive_active, naive_min_steps, naive_min_commits, naive_max_commits),
+                "case {case} op {op}: scan_aggregates disagrees"
+            );
+            // Discipline held: blocked ⊆ active, and per-slot state mirrors.
+            for w in 0..mirror.len() {
+                if slabs.is_blocked(w) {
+                    assert!(slabs.is_active(w), "case {case} op {op}: blocked ⊄ active");
+                }
+                assert_eq!(slabs.is_active(w), mirror[w].active, "case {case} op {op}");
+                assert_eq!(slabs.is_blocked(w), mirror[w].blocked, "case {case} op {op}");
+                assert_eq!(slabs.steps(w), mirror[w].steps, "case {case} op {op}");
+                assert_eq!(slabs.commits(w), mirror[w].commits, "case {case} op {op}");
+                let rec = slabs.record(w);
+                assert_eq!(rec.steps, mirror[w].steps, "case {case} op {op}: record");
+                assert_eq!(rec.commits, mirror[w].commits, "case {case} op {op}: record");
+                assert_eq!(
+                    rec.local_since_commit, mirror[w].local_since_commit,
+                    "case {case} op {op}: record"
+                );
+                assert_eq!(rec.batch_size, mirror[w].batch_size, "case {case} op {op}");
+            }
+        }
+        // Rebuilding from records reproduces the same aggregates.
+        let rebuilt = WorkerSlabs::from_records(&mirror);
+        assert_eq!(rebuilt.scan_aggregates(), slabs.scan_aggregates(), "case {case}");
+        assert_eq!(rebuilt.active_count(), slabs.active_count(), "case {case}");
+        assert_eq!(rebuilt.blocked_count(), slabs.blocked_count(), "case {case}");
+    }
+}
+
 #[test]
 fn prop_metrics_registry_json_roundtrip_is_lossless() {
     // Registry snapshots (counters, finite gauges, histograms on the

@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Unit tests for check_bench_regression.py (stdlib unittest, no cargo).
+
+Run directly (CI bench-regression job does):
+  python3 tools/test_check_bench_regression.py
+"""
+
+import contextlib
+import importlib.util
+import io
+import json
+import pathlib
+import sys
+import tempfile
+import unittest
+
+_HERE = pathlib.Path(__file__).resolve().parent
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench_regression", _HERE / "check_bench_regression.py"
+)
+checker = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(checker)
+
+
+def bench_doc(entries):
+    """A schema-1 BENCH_*.json document from (name, tp, units) triples."""
+    return {
+        "schema": 1,
+        "results": [
+            {"name": n, "throughput_per_sec": tp, "units_per_iter": units}
+            for (n, tp, units) in entries
+        ],
+    }
+
+
+class CheckerCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        root = pathlib.Path(self._tmp.name)
+        self.baseline_dir = root / "baselines"
+        self.current_dir = root / "current"
+        self.baseline_dir.mkdir()
+        self.current_dir.mkdir()
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, directory, name, entries):
+        path = directory / name
+        path.write_text(json.dumps(bench_doc(entries)))
+        return path
+
+    def run_checker(self, *extra):
+        """Run main(); returns (exit_code_or_None, stdout, stderr)."""
+        argv = [
+            "check_bench_regression.py",
+            "--baseline-dir",
+            str(self.baseline_dir),
+            "--current-dir",
+            str(self.current_dir),
+            *extra,
+        ]
+        out, err = io.StringIO(), io.StringIO()
+        old_argv = sys.argv
+        sys.argv = argv
+        code = None
+        try:
+            with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+                try:
+                    checker.main()
+                except SystemExit as e:
+                    code = e.code
+        finally:
+            sys.argv = old_argv
+        return code, out.getvalue(), err.getvalue()
+
+    def test_exactly_at_floor_passes(self):
+        # The gate is strict `<`: landing exactly on baseline*(1-tolerance)
+        # must pass (0.25 of 100.0 is exact in binary floats).
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 75.0, 64)])
+        code, out, err = self.run_checker("--tolerance", "0.25")
+        self.assertIsNone(code, f"exact-floor run failed: {err}")
+        self.assertIn("1 entries checked", out)
+        self.assertIn("... ok", out)
+
+    def test_just_below_floor_fails(self):
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 74.999, 64)])
+        code, _, err = self.run_checker("--tolerance", "0.25")
+        self.assertEqual(code, 1)
+        self.assertIn("FAIL", err)
+        self.assertIn("sweep", err)
+
+    def test_above_4x_warns_but_passes(self):
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 401.0, 64)])
+        code, out, _ = self.run_checker()
+        self.assertIsNone(code, "stale-floor warn must not fail the gate")
+        self.assertIn("WARN", out)
+        self.assertIn("--update", out)
+
+    def test_exactly_4x_does_not_warn(self):
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 400.0, 64)])
+        code, out, _ = self.run_checker()
+        self.assertIsNone(code)
+        self.assertNotIn("WARN", out)
+
+    def test_missing_bench_name_fails(self):
+        self.write(
+            self.baseline_dir,
+            "BENCH_hotpath.json",
+            [("sweep", 100.0, 64), ("dropped", 50.0, 8)],
+        )
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        code, _, err = self.run_checker()
+        self.assertEqual(code, 1)
+        self.assertIn("dropped", err)
+        self.assertIn("missing from current run", err)
+
+    def test_missing_current_file_fails(self):
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        code, _, err = self.run_checker()
+        self.assertEqual(code, 1)
+        self.assertIn("no current run emitted", err)
+
+    def test_unitless_entries_make_the_gate_vacuous(self):
+        # Entries without declared work units are skipped; a run where
+        # nothing was comparable must exit nonzero, not silently pass.
+        self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 0)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 100.0, 0)])
+        code, _, _ = self.run_checker()
+        self.assertIsNotNone(code)
+        self.assertIn("vacuous", str(code))
+
+    def test_update_rewrites_baseline_from_current(self):
+        base = self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 250.0, 64)])
+        code, out, _ = self.run_checker("--update")
+        self.assertIsNone(code)
+        self.assertIn("updated", out)
+        rewritten = json.loads(base.read_text())
+        self.assertEqual(rewritten["results"][0]["throughput_per_sec"], 250.0)
+        # The refreshed floor now gates at the new level: the old
+        # throughput breaches it.
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        code, _, err = self.run_checker("--tolerance", "0.25")
+        self.assertEqual(code, 1, "old throughput must now breach the refreshed floor")
+        self.assertIn("FAIL", err)
+
+    def test_update_keeps_baseline_when_current_missing(self):
+        base = self.write(self.baseline_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        before = base.read_text()
+        code, out, _ = self.run_checker("--update")
+        self.assertIsNone(code)
+        self.assertIn("baseline kept", out)
+        self.assertEqual(base.read_text(), before)
+
+    def test_bad_schema_is_rejected(self):
+        path = self.baseline_dir / "BENCH_hotpath.json"
+        path.write_text(json.dumps({"schema": 2, "results": []}))
+        self.write(self.current_dir, "BENCH_hotpath.json", [("sweep", 100.0, 64)])
+        code, _, _ = self.run_checker()
+        self.assertIsNotNone(code)
+        self.assertIn("unsupported bench schema", str(code))
+
+
+if __name__ == "__main__":
+    unittest.main()

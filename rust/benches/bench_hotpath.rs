@@ -12,7 +12,10 @@
 //! * the observability registry and trace recorder (the tap hot loop —
 //!   regression here silently taxes every observed run).
 
-use adsp::obs::{MetricsRegistry, TraceRecorder};
+use adsp::obs::{
+    MetricsRegistry, ObsConfig, ObsHub, Span, SpanId, SpanPhase, SpanState, SpanTrack,
+    TraceRecorder,
+};
 use adsp::pserver::ShardedParameterServer;
 use adsp::runtime::{native, ParamSet};
 use adsp::util::{BenchHarness, Json};
@@ -92,6 +95,29 @@ fn main() -> anyhow::Result<()> {
             tr.record(t, t * 0.02, "commit", data);
         }
         tr.len()
+    });
+
+    // ---- lineage spans: the span-emit tap at ring capacity ----
+    // Every span is one id allocation + field serialization + a ring
+    // insert through the hub; a regression here taxes every `--spans`
+    // run, so the floor pins span-on emit throughput.
+    const SPANS: u64 = 10_000;
+    let hub = ObsHub::new(ObsConfig { metrics: false, trace_capacity: Some(4096), spans: true });
+    h.run_throughput("span_record_10k", SPANS, || {
+        for i in 0..SPANS {
+            let t = i as f64 * 1e-3;
+            hub.record_span(&Span {
+                id: hub.next_span_id(),
+                parent: if i % 4 == 0 { None } else { Some(SpanId(i)) },
+                track: SpanTrack::Worker((i % 8) as usize),
+                commit: i / 8,
+                phase: SpanPhase::Compute,
+                state: SpanState::Completed,
+                t0: t,
+                t1: t + 5e-4,
+            });
+        }
+        hub.trace_len()
     });
 
     if let Some(path) = h.write_json()? {

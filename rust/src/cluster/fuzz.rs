@@ -21,6 +21,7 @@
 use std::str::FromStr;
 
 use crate::config::{ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec};
+use crate::network::{IngressDiscipline, LinkModel, NetworkSpec};
 use crate::sync::SyncModelKind;
 use crate::util::Rng;
 
@@ -372,6 +373,48 @@ impl FuzzConfig {
         ClusterTimeline::new(events)
     }
 
+    /// Seed-addressed random [`NetworkSpec`] for this fleet shape: a drawn
+    /// default link, per-worker link overrides for half the seeds (sized
+    /// to the *expanded* membership — the count validation sees after
+    /// cohort expansion), and a bounded PS-ingress pipe under a random
+    /// discipline for half the seeds. Deterministic per `(config, seed)`,
+    /// on an RNG stream independent of [`FuzzConfig::generate`]'s.
+    pub fn generate_network(&self, seed: u64) -> NetworkSpec {
+        fn draw_link(rng: &mut Rng) -> LinkModel {
+            LinkModel {
+                // Unbounded a quarter of the time; otherwise log-uniform
+                // over ~1e5..1e8 bytes/s (the BandwidthChange fuzz range).
+                bandwidth_bytes_per_sec: if rng.below(4) == 0 {
+                    0.0
+                } else {
+                    1e5 * 1000.0f64.powf(rng.next_f64())
+                },
+                latency_secs: 0.05 * rng.next_f64(),
+                jitter: if rng.below(2) == 0 { 0.0 } else { 0.3 * rng.next_f64() },
+            }
+        }
+        let mut rng = Rng::new(seed ^ FUZZ_STREAM).split(0x9E7);
+        let default_link = draw_link(&mut rng);
+        let links = if rng.below(2) == 0 {
+            (0..self.workers).map(|_| draw_link(&mut rng)).collect()
+        } else {
+            Vec::new()
+        };
+        let (ingress_bytes_per_sec, ingress_discipline) = if rng.below(2) == 0 {
+            // Log-uniform over ~1e6..1e8 bytes/s aggregate.
+            let cap = 1e6 * 100.0f64.powf(rng.next_f64());
+            let disc = if rng.below(2) == 0 {
+                IngressDiscipline::Fifo
+            } else {
+                IngressDiscipline::FairShare
+            };
+            (cap, disc)
+        } else {
+            (0.0, IngressDiscipline::Fifo)
+        };
+        NetworkSpec { default_link, links, ingress_bytes_per_sec, ingress_discipline }
+    }
+
     /// A blackout whose window sits inside the horizon, targeting (a) the
     /// whole cluster, (b) a small subset of live workers, or (c) a live
     /// cell label.
@@ -463,6 +506,12 @@ pub fn random_fleet_spec(
             spec.fault.checkpoint =
                 crate::fault::CheckpointPolicy::IntervalSecs(8.0 + 8.0 * rng.next_f64());
         }
+    }
+    // Half the fuzzed fleets also draw a random network — per-worker
+    // links plus a possibly bounded PS ingress — so the contention model
+    // rides the whole fuzz matrix, not just hand-written configs.
+    if rng.below(2) == 0 {
+        spec.network = FuzzConfig::for_spec(&spec, intensity).generate_network(seed);
     }
     spec.timeline = FuzzConfig::for_spec(&spec, intensity).generate(seed);
     spec
@@ -592,6 +641,33 @@ mod tests {
         assert!(FuzzConfig::new(0, 1, 60.0).generate(0).is_empty());
         assert!(FuzzConfig::new(3, 1, 0.0).generate(0).is_empty());
         assert!(FuzzConfig::new(3, 1, f64::NAN).generate(0).is_empty());
+    }
+
+    #[test]
+    fn generated_networks_validate_and_are_deterministic() {
+        let cfg = FuzzConfig::for_cluster(&labelled_cluster(), 2, 120.0, FuzzIntensity::Light);
+        let mut saw_links = false;
+        let mut saw_ingress = false;
+        for seed in 0..40u64 {
+            let net = cfg.generate_network(seed);
+            net.validate(cfg.workers).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert!(net.links.is_empty() || net.links.len() == cfg.workers);
+            saw_links |= !net.links.is_empty();
+            saw_ingress |= net.ingress_bytes_per_sec > 0.0;
+            assert_eq!(net, cfg.generate_network(seed), "seed {seed} not deterministic");
+        }
+        assert!(saw_links, "no seed in 0..40 drew per-worker links");
+        assert!(saw_ingress, "no seed in 0..40 drew a bounded ingress");
+    }
+
+    #[test]
+    fn random_fleet_spec_sometimes_draws_a_network() {
+        let drew = (0..40u64).any(|seed| {
+            let spec = random_fleet_spec(seed, SyncModelKind::Adsp, FuzzIntensity::Light);
+            spec.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            !spec.network.is_static()
+        });
+        assert!(drew, "no seed in 0..40 attached a non-static network");
     }
 
     #[test]

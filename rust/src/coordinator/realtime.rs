@@ -49,7 +49,9 @@ use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{Breakdown, ConvergenceDetector, WorkerMetrics};
-use crate::obs::ObsHub;
+use crate::obs::{
+    AttributionLedger, ObsHub, Span, SpanId, SpanPhase, SpanState, SpanTrack, TimeClass,
+};
 use crate::pserver::ShardedParameterServer;
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
@@ -113,6 +115,13 @@ struct Shared {
     /// Observability hub clone for the worker threads (commit round-trip
     /// latency, blackout hold time). `None` → every tap is a no-op.
     obs: Option<ObsHub>,
+    /// Always-on waiting-time ledger (`obs::attribution`): worker threads
+    /// charge their own compute/network/wait intervals on the scaled
+    /// virtual clock; the scheduler charges crash downtime and appends
+    /// lanes for joiners. Frontier clamping inside the ledger makes the
+    /// racy multi-thread charges safe — overlaps collapse instead of
+    /// double-counting.
+    attr: Mutex<AttributionLedger>,
 }
 
 impl Shared {
@@ -211,6 +220,10 @@ impl RealtimeEngine {
             cluster: Mutex::new(cluster_state),
             k_variants,
             obs: hub.clone(),
+            // Unbounded horizon: the wall clock may legitimately overshoot
+            // `max_virtual_secs` by the pacing slack, and every charge is
+            // bracketed by real clock reads anyway.
+            attr: Mutex::new(AttributionLedger::new(m, f64::INFINITY)),
         });
 
         let (commit_tx, commit_rx) = mpsc::channel::<CommitMsg>();
@@ -254,6 +267,12 @@ impl RealtimeEngine {
             shared.barrier.wait();
             let start = Instant::now();
             shared.start.set(start).expect("start set twice");
+            if let Some(h) = &hub {
+                // PS shard threads have no `start` handle; the hub's
+                // virtual clock lets them timestamp apply spans on the
+                // same scaled timeline as everyone else.
+                h.set_virtual_clock(start, scale);
+            }
             if let Some(h) = &hub {
                 let data = vec![
                     ("model", Json::Str(spec.model.clone())),
@@ -375,6 +394,9 @@ impl RealtimeEngine {
                                 let entry = cluster.join_progress(wj, &progress);
                                 progress.push(entry);
                                 shared.metrics.lock().unwrap().push(WorkerMetrics::default());
+                                // New attribution lane; pre-join time
+                                // finalizes as idle.
+                                shared.attr.lock().unwrap().push_worker(now_v);
                             }
                             crash_gen.push(0);
                             let boot = ps.snapshot();
@@ -413,6 +435,12 @@ impl RealtimeEngine {
                             }
                             crash_gen[wc] += 1;
                             pending_restarts.push((until, wc));
+                            shared.attr.lock().unwrap().charge(
+                                wc,
+                                TimeClass::Down,
+                                now_v,
+                                until,
+                            );
                             if let Some(h) = &hub {
                                 h.inc("fault/worker_crashes");
                             }
@@ -765,6 +793,9 @@ impl RealtimeEngine {
                 checkpoints_taken,
                 checkpoint_overhead_secs: checkpoint_secs,
                 metrics: hub.as_ref().and_then(|h| h.snapshot_metrics()),
+                attribution: Some(
+                    shared.attr.lock().unwrap().finalize(end_virtual, spec.worker_metrics_cap),
+                ),
                 engine: EngineStats::Realtime { time_scale: scale },
             })
         })?;
@@ -810,6 +841,37 @@ fn take_checkpoint(
         let data = vec![("version", Json::Num(report_version as f64))];
         h.event(now_v, "checkpoint", data);
     }
+}
+
+/// Record one worker-track lineage span when the hub has spans armed;
+/// returns the new span's id so the caller can chain the next phase's
+/// parent link. (`too_many_arguments` is in the crate-wide style allows.)
+fn emit_worker_span(
+    hub: Option<&ObsHub>,
+    w: usize,
+    commit: u64,
+    parent: Option<SpanId>,
+    phase: SpanPhase,
+    state: SpanState,
+    t0: f64,
+    t1: f64,
+) -> Option<SpanId> {
+    let h = hub?;
+    if !h.spans_enabled() {
+        return None;
+    }
+    let id = h.next_span_id();
+    h.record_span(&Span {
+        id,
+        parent,
+        track: SpanTrack::Worker(w),
+        commit,
+        phase,
+        state,
+        t0,
+        t1,
+    });
+    Some(id)
 }
 
 fn worker_loop(
@@ -860,6 +922,12 @@ fn worker_loop(
     let b_ref = spec.batch_size.max(1) as f64;
     // Link-jitter stream, per worker, independent of the data streams.
     let mut net_rng = crate::util::Rng::new(spec.seed ^ 0x4E45_5457 ^ ((w as u64) << 32));
+    // Commit-lineage state: where this worker's current compute stretch
+    // began, and a per-thread commit number. The generation offset keeps
+    // (worker, commit) unique across crash respawns so lineages from
+    // different incarnations never merge.
+    let mut span_anchor = start.elapsed().as_secs_f64() / scale;
+    let mut commit_seq: u64 = generation << 32;
 
     while !shared.stop.load(Ordering::Relaxed) {
         // Re-read the live cluster each round: timeline events may have
@@ -895,11 +963,25 @@ fn worker_loop(
                     progress.local_since_commit[w] += k;
                 }
                 shared.total_steps.fetch_add(k, Ordering::Relaxed);
+                let t1_v = start.elapsed().as_secs_f64() / scale;
+                shared.attr.lock().unwrap().charge(w, TimeClass::Compute, now_v, t1_v);
                 let mut metrics = shared.metrics.lock().unwrap();
                 metrics[w].steps += k;
                 metrics[w].compute_secs += step_v * k as f64;
             }
             Action::Commit => {
+                let arm_t0 = start.elapsed().as_secs_f64() / scale;
+                commit_seq += 1;
+                let mut parent = emit_worker_span(
+                    shared.obs.as_ref(),
+                    w,
+                    commit_seq,
+                    None,
+                    SpanPhase::Compute,
+                    SpanState::Completed,
+                    span_anchor,
+                    arm_t0,
+                );
                 // Snapshot + sparsify first so the emulated sleeps cover
                 // network time only (mirroring the sim engine's
                 // accounting: 8 bytes per surviving entry on the wire).
@@ -915,6 +997,19 @@ fn worker_loop(
                     let mut progress = shared.progress.lock().unwrap();
                     std::mem::take(&mut progress.local_since_commit[w])
                 };
+                let ser_end = start.elapsed().as_secs_f64() / scale;
+                shared.attr.lock().unwrap().charge(w, TimeClass::Serialize, arm_t0, ser_end);
+                parent = emit_worker_span(
+                    shared.obs.as_ref(),
+                    w,
+                    commit_seq,
+                    parent,
+                    SpanPhase::Serialize,
+                    SpanState::Completed,
+                    arm_t0,
+                    ser_end,
+                )
+                .or(parent);
                 // Re-read the link and lift time *now* — a bandwidth
                 // change or outage may have started during the training
                 // chunk — then hold the push until connectivity returns
@@ -932,11 +1027,38 @@ fn worker_loop(
                         h.observe("realtime/blackout_hold_secs", blackout_wait);
                     }
                     sleep_interruptible(blackout_wait * scale, &shared.stop);
+                    let lifted = start.elapsed().as_secs_f64() / scale;
+                    shared.attr.lock().unwrap().charge(w, TimeClass::Blackout, now_v, lifted);
+                    parent = emit_worker_span(
+                        shared.obs.as_ref(),
+                        w,
+                        commit_seq,
+                        parent,
+                        SpanPhase::BlackoutHold,
+                        SpanState::HeldBlackout,
+                        now_v,
+                        lifted,
+                    )
+                    .or(parent);
                 }
                 // Push leg: propagation + link serialization of the wire
                 // size; then the reply; then the dense pull's way back.
                 let up_extra = link.transfer_secs_jittered(up_bytes, &mut net_rng);
+                let up_t0 = start.elapsed().as_secs_f64() / scale;
                 std::thread::sleep(Duration::from_secs_f64((o / 2.0 + up_extra) * scale));
+                let up_t1 = start.elapsed().as_secs_f64() / scale;
+                shared.attr.lock().unwrap().charge(w, TimeClass::Network, up_t0, up_t1);
+                parent = emit_worker_span(
+                    shared.obs.as_ref(),
+                    w,
+                    commit_seq,
+                    parent,
+                    SpanPhase::Uplink,
+                    SpanState::Completed,
+                    up_t0,
+                    up_t1,
+                )
+                .or(parent);
                 let (reply_tx, reply_rx) = mpsc::channel();
                 let msg = CommitMsg {
                     worker: w,
@@ -947,21 +1069,58 @@ fn worker_loop(
                     reply: reply_tx,
                 };
                 let rtt_t0 = Instant::now();
+                let rtt_t0_v = start.elapsed().as_secs_f64() / scale;
                 if commit_tx.send(msg).is_err() {
                     break;
                 }
                 match reply_rx.recv_timeout(Duration::from_secs(30)) {
                     Ok(fresh) => {
+                        let rtt_t1_v = start.elapsed().as_secs_f64() / scale;
                         if let Some(h) = &shared.obs {
                             let rtt = rtt_t0.elapsed().as_secs_f64() / scale;
                             h.observe("realtime/commit_rtt_secs", rtt);
                         }
+                        // The whole send→reply round trip is PS wait from
+                        // this worker's point of view (queueing, failover
+                        // holds, the apply itself — the shard threads
+                        // publish their own apply spans on shard tracks).
+                        shared.attr.lock().unwrap().charge(
+                            w,
+                            TimeClass::PsWait,
+                            rtt_t0_v,
+                            rtt_t1_v,
+                        );
+                        parent = emit_worker_span(
+                            shared.obs.as_ref(),
+                            w,
+                            commit_seq,
+                            parent,
+                            SpanPhase::PsWait,
+                            SpanState::Completed,
+                            rtt_t0_v,
+                            rtt_t1_v,
+                        )
+                        .or(parent);
                         params = fresh;
                     }
                     Err(_) => break,
                 }
                 let down_extra = link.transfer_secs_jittered(dense_bytes, &mut net_rng);
+                let down_t0 = start.elapsed().as_secs_f64() / scale;
                 std::thread::sleep(Duration::from_secs_f64((o / 2.0 + down_extra) * scale));
+                let down_t1 = start.elapsed().as_secs_f64() / scale;
+                shared.attr.lock().unwrap().charge(w, TimeClass::Network, down_t0, down_t1);
+                emit_worker_span(
+                    shared.obs.as_ref(),
+                    w,
+                    commit_seq,
+                    parent,
+                    SpanPhase::Downlink,
+                    SpanState::Completed,
+                    down_t0,
+                    down_t1,
+                );
+                span_anchor = down_t1;
                 let mut metrics = shared.metrics.lock().unwrap();
                 metrics[w].comm_secs += o + blackout_wait + up_extra + down_extra;
             }
@@ -976,6 +1135,9 @@ fn worker_loop(
                     let mut progress = shared.progress.lock().unwrap();
                     progress.set_blocked(w, false);
                 }
+                let t1_v = start.elapsed().as_secs_f64() / scale;
+                shared.attr.lock().unwrap().charge(w, TimeClass::BarrierWait, now_v, t1_v);
+                span_anchor = t1_v;
                 let mut metrics = shared.metrics.lock().unwrap();
                 metrics[w].blocked_secs += 0.05;
             }

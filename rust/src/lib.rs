@@ -66,7 +66,10 @@ pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline, FuzzConfig, FuzzI
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use fault::{Checkpoint, CheckpointPolicy, CheckpointStore, FaultSpec};
 pub use network::{LinkModel, NetworkSpec};
-pub use obs::{MetricsRegistry, ObsConfig, ObsHub, TraceEvent, TraceRecorder};
+pub use obs::{
+    AttributionLedger, AttributionReport, CommitLineage, MetricsRegistry, ObsConfig, ObsHub, Span,
+    SpanId, SpanPhase, SpanState, SpanTrack, TimeClass, TraceEvent, TraceRecorder,
+};
 pub use pserver::ShardedParameterServer;
 pub use run::{
     check_report_invariants, Backend, EngineStats, NoopObserver, Run, RunBuilder, RunObserver,

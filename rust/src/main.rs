@@ -3,6 +3,7 @@
 //!
 //! * `adsp train [flags]`       — run one training job (sim or real-time).
 //! * `adsp experiment <fig>`    — regenerate a paper figure (CSV + stdout).
+//! * `adsp analyze <file>`      — waiting-time breakdown of a report or trace.
 //! * `adsp inspect <model>`     — show a model artifact's manifest.
 //! * `adsp list`                — list models / sync policies / experiments.
 
@@ -13,7 +14,10 @@ use anyhow::{bail, Context, Result};
 use adsp::cluster::{FuzzConfig, FuzzIntensity};
 use adsp::config::{profiles, ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 use adsp::experiments::{self, Scale};
-use adsp::obs::{ObsConfig, ObsHub, DEFAULT_TRACE_CAPACITY};
+use adsp::obs::{
+    export, CommitLineage, ObsConfig, ObsHub, Span, SpanPhase, TimeClass, TraceEvent,
+    TraceRecorder, DEFAULT_TRACE_CAPACITY,
+};
 use adsp::run::{check_report_invariants, Backend, EngineStats, Run, RunReport};
 use adsp::runtime::ModelRuntime;
 use adsp::sync::SyncModelKind;
@@ -31,8 +35,9 @@ USAGE:
              [--fuzz-dump FILE.json]
              [--link-bw BPS] [--link-latency SECS]
              [--checkpoint-every SECS] [--out FILE.json]
-             [--metrics FILE.json] [--trace FILE.jsonl]
+             [--metrics FILE.json] [--trace FILE.jsonl] [--spans]
   adsp experiment <fig1|fig3..fig17|all> [--full]
+  adsp analyze <report.json|trace.jsonl> [--chrome FILE.json]
   adsp inspect <model>
   adsp list
 
@@ -94,6 +99,20 @@ TRAIN FLAGS:
   --trace FILE.jsonl  write the structured trace (one JSON object per
                       line: virtual + wall timestamps, event kind, data)
                       — bounded ring buffer, oldest events drop first
+  --spans             also record commit-lineage spans in the trace (one
+                      causal chain per commit: compute → serialize →
+                      uplink → ingress/ps wait → apply → downlink, plus
+                      terminal states for crash-dropped and blackout-held
+                      commits); requires --trace
+
+ANALYZE:
+  adsp analyze report.json   print the per-class waiting-time attribution
+                             table (always present in --out reports)
+  adsp analyze trace.jsonl   aggregate lineage spans per phase and print
+                             the slowest commit's causal chain; with
+                             --chrome FILE.json also export the trace as
+                             Chrome trace-event JSON (load in
+                             ui.perfetto.dev or chrome://tracing)
 ";
 
 /// Tiny flag parser: --key value pairs plus boolean switches.
@@ -236,10 +255,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     // runs at all (the engines are pinned bit-identical in that case).
     let metrics_path = args.flags.get("metrics").cloned();
     let trace_path = args.flags.get("trace").cloned();
+    let spans = args.has("spans");
+    if spans && trace_path.is_none() {
+        bail!("--spans requires --trace FILE.jsonl (spans ride the trace ring)");
+    }
     let hub = if metrics_path.is_some() || trace_path.is_some() {
         let cfg = ObsConfig {
             metrics: metrics_path.is_some(),
             trace_capacity: trace_path.as_ref().map(|_| DEFAULT_TRACE_CAPACITY),
+            spans,
         };
         Some(ObsHub::new(cfg))
     } else {
@@ -273,6 +297,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let (Some(path), Some(h)) = (&trace_path, &hub) {
         let n = h.write_trace_jsonl(std::path::Path::new(path))?;
         eprintln!("wrote {path} ({n} trace events)");
+        let dropped = h.trace_dropped();
+        if dropped > 0 {
+            eprintln!(
+                "warning: trace ring overflowed — {dropped} oldest events were dropped \
+                 (capacity {DEFAULT_TRACE_CAPACITY}); the file holds the run's tail"
+            );
+        }
     }
     print_report_summary(&report);
     Ok(())
@@ -291,8 +322,12 @@ fn main() -> Result<()> {
                 print!("{USAGE}");
                 return Ok(());
             }
-            let args = Args::parse(rest, &["realtime", "list-scenarios"])?;
+            let args = Args::parse(rest, &["realtime", "list-scenarios", "spans"])?;
             cmd_train(&args)?;
+        }
+        "analyze" => {
+            let args = Args::parse(rest, &[])?;
+            cmd_analyze(&args)?;
         }
         "experiment" => {
             let args = Args::parse(rest, &["full"])?;
@@ -352,6 +387,124 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// `adsp analyze`: the waiting-time attribution table of a `--out` report,
+/// or the per-phase span aggregate + slowest-commit critical path of a
+/// `--trace --spans` JSONL (optionally converted to Chrome trace-event
+/// JSON via `--chrome`). Input kind is detected by parsing: a full
+/// RunReport wins, anything else must be a trace.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!("usage: adsp analyze <report.json|trace.jsonl> [--chrome FILE.json]");
+    };
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    if let Ok(report) = RunReport::from_json_str(&text) {
+        if args.flags.contains_key("chrome") {
+            bail!("--chrome converts a trace.jsonl, not a report — pass the --trace file");
+        }
+        return analyze_report(&report);
+    }
+    let events = TraceRecorder::parse_jsonl(&text)
+        .with_context(|| format!("{path} is neither a RunReport JSON nor a trace JSONL"))?;
+    if let Some(out) = args.flags.get("chrome") {
+        let n = export::write_chrome_trace(std::path::Path::new(out), &events)?;
+        eprintln!(
+            "wrote {out} ({n} events — load in ui.perfetto.dev or chrome://tracing)"
+        );
+    }
+    analyze_trace(&events)
+}
+
+fn analyze_report(report: &RunReport) -> Result<()> {
+    let Some(a) = &report.attribution else {
+        bail!("report has no attribution section (pre-attribution dump?)");
+    };
+    println!(
+        "waiting-time attribution — {} on {} ({} workers, {:.1}s virtual)",
+        report.sync_describe, report.model, a.num_workers, a.duration
+    );
+    println!("  {:<13} {:>13} {:>8}", "class", "worker-secs", "share");
+    for c in TimeClass::ALL {
+        println!("  {:<13} {:>12.1}s {:>7.1}%", c.name(), a.total_secs(c), 100.0 * a.share(c));
+    }
+    println!(
+        "compute {:.1}% | waiting {:.1}% | sync stall (barrier_wait + ps_wait) {:.1}%",
+        100.0 * a.share(TimeClass::Compute),
+        100.0 * a.waiting_share(),
+        100.0 * a.sync_stall_share()
+    );
+    if !a.workers.is_empty() && a.duration > 0.0 {
+        let waits: Vec<f64> = a
+            .workers
+            .iter()
+            .map(|row| {
+                TimeClass::ALL
+                    .iter()
+                    .filter(|c| c.is_waiting())
+                    .map(|c| row[c.index()])
+                    .sum()
+            })
+            .collect();
+        if let Some((w, secs)) =
+            waits.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1))
+        {
+            println!(
+                "worst waiter: worker {w} at {:.1}% waiting ({secs:.1}s)",
+                100.0 * secs / a.duration
+            );
+        }
+    }
+    Ok(())
+}
+
+fn analyze_trace(events: &[TraceEvent]) -> Result<()> {
+    let spans: Vec<Span> =
+        events.iter().filter_map(|e| Span::from_trace_event(e).ok()).collect();
+    if spans.is_empty() {
+        bail!(
+            "no lineage spans in this trace — record one with: \
+             adsp train --trace t.jsonl --spans"
+        );
+    }
+    println!("{} trace events, {} lineage spans", events.len(), spans.len());
+    println!("  {:<14} {:>8} {:>14}", "phase", "spans", "total-secs");
+    for phase in SpanPhase::ALL {
+        let (n, secs) = spans
+            .iter()
+            .filter(|s| s.phase == phase)
+            .fold((0u64, 0.0f64), |(n, t), s| (n + 1, t + s.duration()));
+        if n > 0 {
+            println!("  {:<14} {:>8} {:>13.3}s", phase.name(), n, secs);
+        }
+    }
+    let lineages = CommitLineage::collect(&spans);
+    let Some(slowest) =
+        lineages.iter().max_by(|x, y| x.duration().total_cmp(&y.duration()))
+    else {
+        println!("no worker-track commit lineages (shard-only trace)");
+        return Ok(());
+    };
+    println!(
+        "critical path — slowest commit: worker {} commit {} \
+         ({:.3}s end to end, {:.3}s waiting)",
+        slowest.worker,
+        slowest.commit,
+        slowest.duration(),
+        slowest.wait_secs()
+    );
+    for s in &slowest.spans {
+        println!(
+            "  {:>10.3}s → {:<10.3}s {:<14} {:>9.3}s [{}]",
+            s.t0,
+            s.t1,
+            s.phase.name(),
+            s.duration(),
+            s.state.name()
+        );
+    }
+    Ok(())
+}
+
 fn print_report_summary(out: &RunReport) {
     println!("backend:          {}", out.backend_name());
     println!("model:            {}", out.model);
@@ -380,6 +533,15 @@ fn print_report_summary(out: &RunReport) {
         out.bandwidth_bytes_per_sec() / 1e6,
         out.bytes_total / 1_000_000
     );
+    if let Some(a) = &out.attribution {
+        println!(
+            "attribution:      compute {:.0}% | waiting {:.0}% (sync stall {:.1}%) | idle+down {:.0}% — `adsp analyze` for the table",
+            100.0 * a.share(TimeClass::Compute),
+            100.0 * a.waiting_share(),
+            100.0 * a.sync_stall_share(),
+            100.0 * (a.share(TimeClass::Idle) + a.share(TimeClass::Down)),
+        );
+    }
     if out.wasted_steps > 0 || out.checkpoints_taken > 0 {
         println!(
             "fault tolerance:  {} wasted steps | {} lost commits | {} checkpoints ({:.1}s overhead)",

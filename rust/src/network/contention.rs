@@ -20,6 +20,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::{ObsHub, Span, SpanCtx, SpanId, SpanPhase, SpanState, SpanTrack};
 use crate::util::Json;
 
 /// How concurrent commits share the PS ingress pipe.
@@ -112,6 +113,41 @@ impl IngressQueue {
             }
         }
     }
+
+    /// [`IngressQueue::admit`] plus commit-lineage tracing: when the pipe
+    /// actually delays the commit and `hub` has spans armed, the queue
+    /// emits the `ingress_wait` span itself under `ctx`'s lineage
+    /// coordinates and returns its id (the next span's parent). Identical
+    /// admission times to `admit` in every case — tracing reads, never
+    /// steers.
+    pub fn admit_observed(
+        &mut self,
+        arrive: f64,
+        bytes: u64,
+        hub: Option<&ObsHub>,
+        ctx: Option<SpanCtx>,
+    ) -> (f64, Option<SpanId>) {
+        let cleared = self.admit(arrive, bytes);
+        if cleared > arrive {
+            if let (Some(h), Some(ctx)) = (hub, ctx) {
+                if h.spans_enabled() {
+                    let id = h.next_span_id();
+                    h.record_span(&Span {
+                        id,
+                        parent: ctx.parent,
+                        track: SpanTrack::Worker(ctx.worker),
+                        commit: ctx.commit,
+                        phase: SpanPhase::IngressWait,
+                        state: SpanState::Completed,
+                        t0: arrive,
+                        t1: cleared,
+                    });
+                    return (cleared, Some(id));
+                }
+            }
+        }
+        (cleared, None)
+    }
 }
 
 #[cfg(test)]
@@ -162,6 +198,37 @@ mod tests {
                 assert!(done >= t, "{disc:?}: finished before arriving");
             }
         }
+    }
+
+    #[test]
+    fn observed_admission_matches_plain_and_emits_span() {
+        use crate::obs::ObsConfig;
+        let mut q = IngressQueue::new(1e6, IngressDiscipline::Fifo);
+        let mut plain = q.clone();
+        let hub = ObsHub::new(ObsConfig::trace_only(16).with_spans());
+        let ctx = SpanCtx { worker: 2, commit: 3, parent: None };
+        let (t1, id) = q.admit_observed(10.0, 1_000_000, Some(&hub), Some(ctx));
+        assert_eq!(t1, plain.admit(10.0, 1_000_000));
+        assert!(id.is_some());
+        let span = hub
+            .with_trace(|tr| Span::from_trace_event(tr.events().next().unwrap()).unwrap())
+            .unwrap();
+        assert_eq!(span.id, id.unwrap());
+        assert_eq!(span.t0, 10.0);
+        assert_eq!(span.t1, t1);
+        assert_eq!(span.phase, SpanPhase::IngressWait);
+        assert_eq!(span.track, SpanTrack::Worker(2));
+        // Unbounded pipe: no delay, no span.
+        let mut u = IngressQueue::unbounded();
+        let (t2, id2) = u.admit_observed(5.0, 1_000, Some(&hub), Some(ctx));
+        assert_eq!(t2, 5.0);
+        assert!(id2.is_none());
+        // No hub: identical admission time, nothing emitted.
+        let mut q2 = IngressQueue::new(1e6, IngressDiscipline::Fifo);
+        let (t3, id3) = q2.admit_observed(10.0, 1_000_000, None, Some(ctx));
+        assert!((t3 - 11.0).abs() < 1e-9);
+        assert!(id3.is_none());
+        assert_eq!(hub.trace_len(), 1);
     }
 
     #[test]

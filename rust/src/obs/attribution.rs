@@ -1,0 +1,432 @@
+//! Per-worker waiting-time attribution.
+//!
+//! The [`AttributionLedger`] classifies every simulated (or scaled-wall)
+//! second of every worker into one of nine [`TimeClass`]es — compute,
+//! serialize, network, ingress_wait, ps_wait, barrier_wait, blackout,
+//! down, idle — turning the paper's headline claim ("ADSP eliminates the
+//! significant waiting time of existing parameter-synchronization
+//! models") into a first-class, oracle-checked measurement.
+//!
+//! Conservation holds *by construction*: each worker has a time
+//! `frontier`, and a charge interval `[t0, t1)` is first clamped to
+//! `[max(t0, frontier), min(t1, horizon))` before being added, so
+//! charges can never overlap or run past the horizon and the frontier
+//! only moves forward. At [`AttributionLedger::finalize`] the residual
+//! `duration - frontier[w]` becomes the worker's `idle` time, which makes
+//! `sum(classes) == duration` exact up to f64 rounding for every worker —
+//! the invariant `run::check_report_invariants` enforces on every run and
+//! every fuzz seed.
+//!
+//! The ledger is *always on* in both engines (it is pure deterministic
+//! f64 arithmetic on times the engine already computed — no RNG draws, no
+//! `ObsHub` required), so `RunReport.attribution` is present whether or
+//! not observability is armed and the obs-on/off bit-identity contract is
+//! untouched. Storage is struct-of-arrays like `metrics::MetricsSlab`
+//! (one `f64` lane per charged class + the frontier lane, ~72 B/worker),
+//! and [`AttributionLedger::finalize`] aggregates the fleet total
+//! streamingly, materializing per-worker rows only under
+//! `worker_metrics_cap` — the same gating the metrics path uses at fleet
+//! scale.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// Number of attribution classes (including the derived `idle`).
+pub const NUM_CLASSES: usize = 9;
+
+/// Number of classes charged explicitly (everything but `idle`).
+pub const NUM_CHARGED: usize = 8;
+
+/// What a worker-second was spent on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeClass {
+    /// Local gradient computation.
+    Compute = 0,
+    /// Snapshot + top-k sparsification ahead of a push (realtime engine
+    /// only; the simulator folds it into the link transfer).
+    Serialize = 1,
+    /// Link transit, up or down.
+    Network = 2,
+    /// Queued at the shared PS-ingress pipe.
+    IngressWait = 3,
+    /// Waiting on the parameter server (FIFO slot, failover hold, RTT).
+    PsWait = 4,
+    /// Blocked by the sync policy (BSP barrier, SSP staleness bound).
+    BarrierWait = 5,
+    /// Push held by a connectivity blackout.
+    Blackout = 6,
+    /// Crashed / not yet restarted.
+    Down = 7,
+    /// Residual: converged early, ran out of steps, or otherwise
+    /// unaccounted (derived at finalize, never charged directly).
+    Idle = 8,
+}
+
+impl TimeClass {
+    /// Every class, `idle` last.
+    pub const ALL: [TimeClass; NUM_CLASSES] = [
+        TimeClass::Compute,
+        TimeClass::Serialize,
+        TimeClass::Network,
+        TimeClass::IngressWait,
+        TimeClass::PsWait,
+        TimeClass::BarrierWait,
+        TimeClass::Blackout,
+        TimeClass::Down,
+        TimeClass::Idle,
+    ];
+
+    /// The classes engines charge explicitly (`idle` is derived).
+    pub const CHARGED: [TimeClass; NUM_CHARGED] = [
+        TimeClass::Compute,
+        TimeClass::Serialize,
+        TimeClass::Network,
+        TimeClass::IngressWait,
+        TimeClass::PsWait,
+        TimeClass::BarrierWait,
+        TimeClass::Blackout,
+        TimeClass::Down,
+    ];
+
+    /// The JSON / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimeClass::Compute => "compute",
+            TimeClass::Serialize => "serialize",
+            TimeClass::Network => "network",
+            TimeClass::IngressWait => "ingress_wait",
+            TimeClass::PsWait => "ps_wait",
+            TimeClass::BarrierWait => "barrier_wait",
+            TimeClass::Blackout => "blackout",
+            TimeClass::Down => "down",
+            TimeClass::Idle => "idle",
+        }
+    }
+
+    /// Parse a [`TimeClass::name`] back.
+    pub fn parse(s: &str) -> Result<Self> {
+        for c in TimeClass::ALL {
+            if c.name() == s {
+                return Ok(c);
+            }
+        }
+        bail!("unknown attribution class '{s}'")
+    }
+
+    /// Lane index (`idle` = 8).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    /// True for the classes the paper counts as *waiting* (neither
+    /// useful compute nor being dead/idle): serialize, network,
+    /// ingress_wait, ps_wait, barrier_wait, blackout.
+    pub fn is_waiting(&self) -> bool {
+        !matches!(self, TimeClass::Compute | TimeClass::Down | TimeClass::Idle)
+    }
+}
+
+/// Streaming per-worker time ledger with a monotone charge frontier.
+#[derive(Clone, Debug)]
+pub struct AttributionLedger {
+    /// Charge ceiling in virtual seconds (`f64::INFINITY` = unbounded).
+    horizon: f64,
+    /// SoA: one lane per charged class, each `lanes[c][w]`.
+    lanes: [Vec<f64>; NUM_CHARGED],
+    /// Per-worker charge frontier: end of the latest charged interval.
+    frontier: Vec<f64>,
+}
+
+impl AttributionLedger {
+    /// A ledger for `n` workers. `horizon` caps every charge (pass the
+    /// run's `max_virtual_secs`; non-finite or non-positive values mean
+    /// unbounded).
+    pub fn new(n: usize, horizon: f64) -> Self {
+        let horizon = if horizon.is_finite() && horizon > 0.0 { horizon } else { f64::INFINITY };
+        AttributionLedger {
+            horizon,
+            lanes: std::array::from_fn(|_| vec![0.0; n]),
+            frontier: vec![0.0; n],
+        }
+    }
+
+    /// Number of workers tracked.
+    pub fn len(&self) -> usize {
+        self.frontier.len()
+    }
+
+    /// True when no workers are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.frontier.is_empty()
+    }
+
+    /// Append one more worker lane (joins mid-run start idle-up-to-now;
+    /// their frontier starts at `t0` so pre-join time finalizes as idle —
+    /// pass `0.0` to backfill from the run start instead).
+    pub fn push_worker(&mut self, t0: f64) {
+        for lane in &mut self.lanes {
+            lane.push(0.0);
+        }
+        self.frontier.push(t0.max(0.0));
+    }
+
+    /// The charge frontier of worker `w` (end of its last charge).
+    pub fn frontier(&self, w: usize) -> f64 {
+        self.frontier[w]
+    }
+
+    /// Charge `[t0, t1)` on worker `w` to `class`. The interval is
+    /// clamped to `[max(t0, frontier), min(t1, horizon))`; empty or
+    /// non-finite intervals are ignored. `class` must not be
+    /// [`TimeClass::Idle`] (idle is derived at finalize).
+    pub fn charge(&mut self, w: usize, class: TimeClass, t0: f64, t1: f64) {
+        debug_assert!(class != TimeClass::Idle, "idle is derived, never charged");
+        if !t0.is_finite() || t1.is_nan() {
+            return;
+        }
+        let lo = t0.max(self.frontier[w]);
+        let hi = t1.min(self.horizon);
+        if hi > lo {
+            self.lanes[class.index()][w] += hi - lo;
+            self.frontier[w] = hi;
+        }
+    }
+
+    /// Fold the ledger into an [`AttributionReport`]. `end_time` is the
+    /// run's end (virtual seconds); the report duration is
+    /// `max(end_time, max frontier)` so idle is never negative even when
+    /// horizon-clamped charges run past an early finish. Per-worker rows
+    /// are materialized only when `len() <= cap` (mirror of
+    /// `worker_metrics_cap`); the fleet `total` row always streams over
+    /// every worker.
+    pub fn finalize(&self, end_time: f64, cap: usize) -> AttributionReport {
+        let n = self.len();
+        let mut duration = end_time.max(0.0);
+        for &f in &self.frontier {
+            duration = duration.max(f);
+        }
+        let mut total = [0.0f64; NUM_CLASSES];
+        for w in 0..n {
+            for c in 0..NUM_CHARGED {
+                total[c] += self.lanes[c][w];
+            }
+            total[TimeClass::Idle.index()] += duration - self.frontier[w];
+        }
+        let workers = if n <= cap {
+            (0..n)
+                .map(|w| {
+                    let mut row = [0.0f64; NUM_CLASSES];
+                    for c in 0..NUM_CHARGED {
+                        row[c] = self.lanes[c][w];
+                    }
+                    row[TimeClass::Idle.index()] = duration - self.frontier[w];
+                    row
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        AttributionReport { duration, num_workers: n, total, workers }
+    }
+}
+
+/// Finalized attribution: fleet totals plus (cap-gated) per-worker rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttributionReport {
+    /// Run duration every worker is conserved against (virtual seconds).
+    pub duration: f64,
+    /// Fleet size the totals stream over.
+    pub num_workers: usize,
+    /// Fleet totals per class (`sum == num_workers * duration`).
+    pub total: [f64; NUM_CLASSES],
+    /// Per-worker rows, `TimeClass::ALL` order; empty above the
+    /// materialization cap.
+    pub workers: Vec<[f64; NUM_CLASSES]>,
+}
+
+impl AttributionReport {
+    /// Seconds the fleet spent in `class`.
+    pub fn total_secs(&self, class: TimeClass) -> f64 {
+        self.total[class.index()]
+    }
+
+    /// Share of all worker-time spent in `class`, in `[0, 1]`.
+    pub fn share(&self, class: TimeClass) -> f64 {
+        let denom = self.duration * self.num_workers as f64;
+        if denom > 0.0 {
+            self.total[class.index()] / denom
+        } else {
+            0.0
+        }
+    }
+
+    /// Share of all worker-time spent waiting (see
+    /// [`TimeClass::is_waiting`]).
+    pub fn waiting_share(&self) -> f64 {
+        TimeClass::ALL.iter().filter(|c| c.is_waiting()).map(|c| self.share(*c)).sum()
+    }
+
+    /// Share spent in `barrier_wait + ps_wait` — the synchronization
+    /// stall ADSP is designed to eliminate (the CI fig5 gate).
+    pub fn sync_stall_share(&self) -> f64 {
+        self.share(TimeClass::BarrierWait) + self.share(TimeClass::PsWait)
+    }
+
+    /// JSON form: `{duration, num_workers, total: {class: secs, ...},
+    /// workers: [{class: secs, ...}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let row_json = |row: &[f64; NUM_CLASSES]| {
+            Json::Obj(
+                TimeClass::ALL
+                    .iter()
+                    .map(|c| (c.name().to_string(), Json::num(row[c.index()])))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("duration", Json::num(self.duration)),
+            ("num_workers", Json::num(self.num_workers as f64)),
+            ("total", row_json(&self.total)),
+            ("workers", Json::Arr(self.workers.iter().map(row_json).collect())),
+        ])
+    }
+
+    /// Parse the [`AttributionReport::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let parse_row = |v: &Json| -> Result<[f64; NUM_CLASSES]> {
+            let mut row = [0.0f64; NUM_CLASSES];
+            for c in TimeClass::ALL {
+                row[c.index()] = v
+                    .get(c.name())
+                    .ok_or_else(|| anyhow::anyhow!("attribution row missing '{}'", c.name()))?
+                    .as_f64()?;
+            }
+            Ok(row)
+        };
+        let workers = match v.get("workers") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(Json::Arr(rows)) => rows.iter().map(parse_row).collect::<Result<Vec<_>>>()?,
+            Some(other) => bail!("attribution 'workers' is not an array: {other:?}"),
+        };
+        Ok(AttributionReport {
+            duration: v
+                .get("duration")
+                .ok_or_else(|| anyhow::anyhow!("attribution missing 'duration'"))?
+                .as_f64()?,
+            num_workers: v
+                .get("num_workers")
+                .ok_or_else(|| anyhow::anyhow!("attribution missing 'num_workers'"))?
+                .as_u64()? as usize,
+            total: parse_row(
+                v.get("total").ok_or_else(|| anyhow::anyhow!("attribution missing 'total'"))?,
+            )?,
+            workers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_names_roundtrip() {
+        for c in TimeClass::ALL {
+            assert_eq!(TimeClass::parse(c.name()).unwrap().index(), c.index());
+        }
+        assert!(TimeClass::parse("sleeping").is_err());
+        assert!(!TimeClass::Compute.is_waiting());
+        assert!(TimeClass::PsWait.is_waiting());
+        assert!(!TimeClass::Idle.is_waiting());
+        assert!(!TimeClass::Down.is_waiting());
+    }
+
+    #[test]
+    fn charges_clamp_to_frontier_and_horizon() {
+        let mut led = AttributionLedger::new(1, 10.0);
+        led.charge(0, TimeClass::Compute, 0.0, 4.0);
+        // Overlapping charge: only the uncovered tail lands.
+        led.charge(0, TimeClass::Network, 2.0, 6.0);
+        // Fully covered charge: ignored.
+        led.charge(0, TimeClass::PsWait, 1.0, 5.0);
+        // Past-horizon charge: clamped to the horizon.
+        led.charge(0, TimeClass::BarrierWait, 6.0, 25.0);
+        // Beyond-horizon charge: ignored entirely.
+        led.charge(0, TimeClass::Down, 12.0, 30.0);
+        // Non-finite charges are ignored.
+        led.charge(0, TimeClass::Compute, f64::NAN, 99.0);
+        let rep = led.finalize(10.0, 16);
+        assert_eq!(rep.num_workers, 1);
+        assert_eq!(rep.duration, 10.0);
+        let row = rep.workers[0];
+        assert_eq!(row[TimeClass::Compute.index()], 4.0);
+        assert_eq!(row[TimeClass::Network.index()], 2.0);
+        assert_eq!(row[TimeClass::PsWait.index()], 0.0);
+        assert_eq!(row[TimeClass::BarrierWait.index()], 4.0);
+        assert_eq!(row[TimeClass::Idle.index()], 0.0);
+        let sum: f64 = row.iter().sum();
+        assert!((sum - rep.duration).abs() < 1e-12, "row sum {sum} != {}", rep.duration);
+    }
+
+    #[test]
+    fn finalize_extends_duration_to_max_frontier() {
+        // A charge past end_time (horizon-clamped upfront charging in the
+        // sim can do this on early convergence) stretches the duration so
+        // idle never goes negative.
+        let mut led = AttributionLedger::new(2, f64::INFINITY);
+        led.charge(0, TimeClass::Compute, 0.0, 12.0);
+        led.charge(1, TimeClass::Compute, 0.0, 5.0);
+        let rep = led.finalize(8.0, 16);
+        assert_eq!(rep.duration, 12.0);
+        assert_eq!(rep.workers[0][TimeClass::Idle.index()], 0.0);
+        assert_eq!(rep.workers[1][TimeClass::Idle.index()], 7.0);
+        let total_sum: f64 = rep.total.iter().sum();
+        assert!((total_sum - rep.duration * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_gates_worker_rows_not_totals() {
+        let mut led = AttributionLedger::new(8, 100.0);
+        for w in 0..8 {
+            led.charge(w, TimeClass::Compute, 0.0, 10.0);
+        }
+        let gated = led.finalize(10.0, 4);
+        assert!(gated.workers.is_empty());
+        assert_eq!(gated.total_secs(TimeClass::Compute), 80.0);
+        let full = led.finalize(10.0, 8);
+        assert_eq!(full.workers.len(), 8);
+        assert_eq!(full.total, gated.total);
+    }
+
+    #[test]
+    fn push_worker_starts_frontier_at_join() {
+        let mut led = AttributionLedger::new(0, 20.0);
+        led.push_worker(0.0);
+        led.push_worker(5.0);
+        led.charge(1, TimeClass::Compute, 0.0, 8.0);
+        let rep = led.finalize(20.0, 8);
+        // The late joiner's pre-join window [0,5) never gets charged.
+        assert_eq!(rep.workers[1][TimeClass::Compute.index()], 3.0);
+        assert_eq!(rep.workers[1][TimeClass::Idle.index()], 12.0);
+    }
+
+    #[test]
+    fn shares_and_json_roundtrip() {
+        let mut led = AttributionLedger::new(2, 10.0);
+        led.charge(0, TimeClass::Compute, 0.0, 6.0);
+        led.charge(0, TimeClass::PsWait, 6.0, 10.0);
+        led.charge(1, TimeClass::Compute, 0.0, 8.0);
+        led.charge(1, TimeClass::BarrierWait, 8.0, 9.0);
+        let rep = led.finalize(10.0, 8);
+        assert!((rep.share(TimeClass::Compute) - 0.7).abs() < 1e-12);
+        assert!((rep.sync_stall_share() - 0.25).abs() < 1e-12);
+        assert!((rep.waiting_share() - 0.25).abs() < 1e-12);
+        let back = AttributionReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back, rep);
+        // Workers omitted (cap-gated) still round-trips.
+        let gated = led.finalize(10.0, 0);
+        let back2 = AttributionReport::from_json(&gated.to_json()).unwrap();
+        assert_eq!(back2, gated);
+    }
+}

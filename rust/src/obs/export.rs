@@ -1,0 +1,200 @@
+//! Chrome trace-event JSON export.
+//!
+//! Converts a recorded [`TraceEvent`] stream into the Chrome trace-event
+//! format (the JSON-object flavor: `{"traceEvents": [...]}`), loadable in
+//! Perfetto (<https://ui.perfetto.dev>) or `chrome://tracing`. Lineage
+//! spans (`kind = "span"`) become `ph: "X"` *complete* events with
+//! microsecond `ts`/`dur` on one track per worker and one per PS shard;
+//! every other trace event becomes a `ph: "i"` *instant* event on a
+//! shared "run" track, so evals, cluster events, and checkpoints line up
+//! against the commit lifecycles that surround them. Track names are
+//! emitted as `thread_name` metadata events.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+use super::span::{Span, SpanTrack};
+use super::trace::TraceEvent;
+
+/// Chrome `tid` of the shared instant-event track.
+pub const RUN_TID: u64 = 0;
+
+/// Chrome `tid` of worker `w`'s track (`RUN_TID` is reserved).
+pub fn worker_tid(w: usize) -> u64 {
+    1 + w as u64
+}
+
+/// Chrome `tid` of PS shard `s`'s track (offset far above any worker).
+pub fn shard_tid(s: usize) -> u64 {
+    1_000_000 + s as u64
+}
+
+/// Convert a trace stream into a Chrome trace-event JSON document.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    tracks.insert(RUN_TID, "run".to_string());
+    let mut body: Vec<Json> = Vec::with_capacity(events.len());
+    for ev in events {
+        match Span::from_trace_event(ev) {
+            Ok(span) => {
+                let (tid, label) = match span.track {
+                    SpanTrack::Worker(w) => (worker_tid(w), format!("worker {w}")),
+                    SpanTrack::Shard(s) => (shard_tid(s), format!("ps shard {s}")),
+                };
+                tracks.entry(tid).or_insert(label);
+                body.push(Json::obj(vec![
+                    ("name", Json::str(span.phase.name())),
+                    ("cat", Json::str("span")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(span.t0 * 1e6)),
+                    ("dur", Json::num(span.duration() * 1e6)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(tid as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("span", Json::num(span.id.raw() as f64)),
+                            (
+                                "parent",
+                                match span.parent {
+                                    Some(p) => Json::num(p.raw() as f64),
+                                    None => Json::Null,
+                                },
+                            ),
+                            ("commit", Json::num(span.commit as f64)),
+                            ("state", Json::str(span.state.name())),
+                        ]),
+                    ),
+                ]));
+            }
+            Err(_) => {
+                body.push(Json::obj(vec![
+                    ("name", Json::str(ev.kind.clone())),
+                    ("cat", Json::str("event")),
+                    ("ph", Json::str("i")),
+                    ("s", Json::str("t")),
+                    ("ts", Json::num(ev.t * 1e6)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(RUN_TID as f64)),
+                    ("args", Json::Obj(ev.data.clone())),
+                ]));
+            }
+        }
+    }
+    let mut all: Vec<Json> = tracks
+        .iter()
+        .map(|(tid, label)| {
+            Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(*tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(label.clone()))])),
+            ])
+        })
+        .collect();
+    all.extend(body);
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(all)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Number of non-metadata entries [`chrome_trace_json`] emits for
+/// `events` — exactly one per input event (the round-trip contract the
+/// golden test pins).
+pub fn chrome_event_count(doc: &Json) -> Result<usize> {
+    let evs = doc
+        .get("traceEvents")
+        .ok_or_else(|| anyhow::anyhow!("missing 'traceEvents'"))?
+        .as_arr()?;
+    let mut n = 0usize;
+    for e in evs {
+        if e.req("ph")?.as_str()? != "M" {
+            n += 1;
+        }
+    }
+    Ok(n)
+}
+
+/// Write [`chrome_trace_json`] to `path`; returns the number of
+/// non-metadata trace entries written.
+pub fn write_chrome_trace(path: &Path, events: &[TraceEvent]) -> Result<usize> {
+    let doc = chrome_trace_json(events);
+    std::fs::write(path, doc.dump())
+        .with_context(|| format!("writing chrome trace to {}", path.display()))?;
+    chrome_event_count(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::{SpanId, SpanPhase, SpanState};
+    use super::*;
+
+    fn span_event(id: u64, w: usize, phase: SpanPhase, t0: f64, t1: f64) -> TraceEvent {
+        let s = Span {
+            id: SpanId(id),
+            parent: None,
+            track: SpanTrack::Worker(w),
+            commit: 1,
+            phase,
+            state: SpanState::Completed,
+            t0,
+            t1,
+        };
+        TraceEvent {
+            t: t1,
+            wall_s: 0.0,
+            kind: "span".to_string(),
+            data: s.to_trace_data().into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn export_is_valid_json_and_round_trips_event_count() {
+        let mut events = vec![TraceEvent {
+            t: 0.0,
+            wall_s: 0.0,
+            kind: "run_start".to_string(),
+            data: BTreeMap::new(),
+        }];
+        events.push(span_event(1, 0, SpanPhase::Compute, 0.0, 1.0));
+        events.push(span_event(2, 1, SpanPhase::Uplink, 1.0, 1.25));
+        let shard = Span {
+            id: SpanId(3),
+            parent: None,
+            track: SpanTrack::Shard(0),
+            commit: 0,
+            phase: SpanPhase::Apply,
+            state: SpanState::Completed,
+            t0: 1.25,
+            t1: 1.3,
+        };
+        events.push(TraceEvent {
+            t: 1.3,
+            wall_s: 0.0,
+            kind: "span".to_string(),
+            data: shard.to_trace_data().into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        });
+        let doc = chrome_trace_json(&events);
+        // Valid JSON: dump -> parse round trip.
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(chrome_event_count(&parsed).unwrap(), events.len());
+        // Tracks: run + worker 0 + worker 1 + shard 0 = 4 metadata events.
+        let all = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let meta: Vec<&Json> =
+            all.iter().filter(|e| e.req("ph").unwrap().as_str().unwrap() == "M").collect();
+        assert_eq!(meta.len(), 4);
+        // Complete events carry microsecond ts/dur.
+        let x = all
+            .iter()
+            .find(|e| e.req("ph").unwrap().as_str().unwrap() == "X")
+            .expect("no complete event");
+        assert_eq!(x.req("ts").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(x.req("dur").unwrap().as_f64().unwrap(), 1e6);
+    }
+}

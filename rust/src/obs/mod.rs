@@ -29,13 +29,19 @@
 //! assert_eq!(hub.trace_len(), 1);
 //! ```
 
+pub mod attribution;
+pub mod export;
 pub mod registry;
+pub mod span;
 pub mod trace;
 
+pub use attribution::{AttributionLedger, AttributionReport, TimeClass};
 pub use registry::{Histogram, MetricsRegistry, DEFAULT_LATENCY_BOUNDS};
+pub use span::{CommitLineage, Span, SpanCtx, SpanId, SpanPhase, SpanState, SpanTrack};
 pub use trace::{TraceEvent, TraceRecorder, DEFAULT_TRACE_CAPACITY};
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -43,37 +49,57 @@ use anyhow::Result;
 
 use crate::util::json::Json;
 
-/// What an [`ObsHub`] collects. Both components are independent: a run
-/// can record metrics without tracing and vice versa.
+/// What an [`ObsHub`] collects. The components are independent: a run
+/// can record metrics without tracing and vice versa. Spans ride the
+/// trace ring, so `spans` only takes effect when `trace_capacity` is set.
 #[derive(Clone, Copy, Debug)]
 pub struct ObsConfig {
     /// Collect the metrics registry.
     pub metrics: bool,
     /// Record a trace with this ring capacity (`None` disables tracing).
     pub trace_capacity: Option<usize>,
+    /// Emit commit-lineage spans into the trace (requires tracing).
+    pub spans: bool,
 }
 
 impl ObsConfig {
     /// Metrics on, tracing off.
     pub fn metrics_only() -> Self {
-        ObsConfig { metrics: true, trace_capacity: None }
+        ObsConfig { metrics: true, trace_capacity: None, spans: false }
     }
 
     /// Tracing on with ring capacity `capacity`, metrics off.
     pub fn trace_only(capacity: usize) -> Self {
-        ObsConfig { metrics: false, trace_capacity: Some(capacity) }
+        ObsConfig { metrics: false, trace_capacity: Some(capacity), spans: false }
     }
 
     /// Metrics and tracing both on.
     pub fn full(trace_capacity: usize) -> Self {
-        ObsConfig { metrics: true, trace_capacity: Some(trace_capacity) }
+        ObsConfig { metrics: true, trace_capacity: Some(trace_capacity), spans: false }
     }
+
+    /// Also emit commit-lineage spans (no-op unless tracing is on).
+    pub fn with_spans(mut self) -> Self {
+        self.spans = true;
+        self
+    }
+}
+
+/// Maps host `Instant`s to virtual seconds for taps that only see wall
+/// time (the realtime engine's PS shard threads).
+#[derive(Clone, Copy, Debug)]
+struct VirtualClock {
+    start: Instant,
+    scale: f64,
 }
 
 #[derive(Debug)]
 struct ObsInner {
     metrics: Option<Mutex<MetricsRegistry>>,
     trace: Option<Mutex<TraceRecorder>>,
+    spans: bool,
+    span_ids: AtomicU64,
+    clock: Mutex<Option<VirtualClock>>,
     wall_start: Instant,
 }
 
@@ -96,7 +122,16 @@ impl ObsHub {
     pub fn new(cfg: ObsConfig) -> Self {
         let metrics = if cfg.metrics { Some(Mutex::new(MetricsRegistry::new())) } else { None };
         let trace = cfg.trace_capacity.map(|c| Mutex::new(TraceRecorder::new(c)));
-        ObsHub { inner: Arc::new(ObsInner { metrics, trace, wall_start: Instant::now() }) }
+        ObsHub {
+            inner: Arc::new(ObsInner {
+                metrics,
+                trace,
+                spans: cfg.spans,
+                span_ids: AtomicU64::new(0),
+                clock: Mutex::new(None),
+                wall_start: Instant::now(),
+            }),
+        }
     }
 
     /// True when this hub collects metrics.
@@ -107,6 +142,45 @@ impl ObsHub {
     /// True when this hub records a trace.
     pub fn trace_enabled(&self) -> bool {
         self.inner.trace.is_some()
+    }
+
+    /// True when this hub emits commit-lineage spans (spans ride the
+    /// trace ring, so this requires tracing to be on too).
+    pub fn spans_enabled(&self) -> bool {
+        self.inner.spans && self.inner.trace.is_some()
+    }
+
+    /// Allocate the next process-unique span id (ids start at 1).
+    pub fn next_span_id(&self) -> SpanId {
+        SpanId(self.inner.span_ids.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+
+    /// Record `span` as a `kind = "span"` trace event stamped at the
+    /// span's *end* time (so the recorder's monotone clamp holds). No-op
+    /// unless [`ObsHub::spans_enabled`].
+    pub fn record_span(&self, span: &Span) {
+        if self.spans_enabled() {
+            self.event(span.t1, "span", span.to_trace_data());
+        }
+    }
+
+    /// Arm the virtual clock: virtual time is defined as
+    /// `start.elapsed() / scale` from this call on. The realtime engine
+    /// sets this so wall-clock-only taps (PS shard threads) can stamp
+    /// spans in virtual seconds; the simulator never arms it.
+    pub fn set_virtual_clock(&self, start: Instant, scale: f64) {
+        let scale = if scale.is_finite() && scale > 0.0 { scale } else { 1.0 };
+        *self.inner.clock.lock().unwrap() = Some(VirtualClock { start, scale });
+    }
+
+    /// Current virtual time per the armed clock, or `None` when no engine
+    /// has armed it.
+    pub fn virtual_now(&self) -> Option<f64> {
+        self.inner
+            .clock
+            .lock()
+            .unwrap()
+            .map(|c| c.start.elapsed().as_secs_f64() / c.scale)
     }
 
     /// Increment counter `name` by one.
@@ -160,9 +234,18 @@ impl ObsHub {
     }
 
     /// A copy of the current metrics registry, or `None` when metrics are
-    /// disabled.
+    /// disabled. When the trace ring has overflowed, the snapshot carries
+    /// a `trace/dropped_events` counter so truncation is visible in
+    /// `RunReport.metrics` instead of silent.
     pub fn snapshot_metrics(&self) -> Option<MetricsRegistry> {
-        self.inner.metrics.as_ref().map(|m| m.lock().unwrap().clone())
+        self.inner.metrics.as_ref().map(|m| {
+            let mut snap = m.lock().unwrap().clone();
+            let dropped = self.trace_dropped();
+            if dropped > 0 {
+                snap.add("trace/dropped_events", dropped);
+            }
+            snap
+        })
     }
 
     /// Number of trace events currently buffered (0 when tracing is
@@ -170,6 +253,15 @@ impl ObsHub {
     pub fn trace_len(&self) -> usize {
         match &self.inner.trace {
             Some(tr) => tr.lock().unwrap().len(),
+            None => 0,
+        }
+    }
+
+    /// How many events the trace ring has discarded to stay within its
+    /// capacity (0 when tracing is disabled).
+    pub fn trace_dropped(&self) -> u64 {
+        match &self.inner.trace {
+            Some(tr) => tr.lock().unwrap().dropped(),
             None => 0,
         }
     }
@@ -202,7 +294,7 @@ mod tests {
 
     #[test]
     fn disabled_components_are_inert() {
-        let hub = ObsHub::new(ObsConfig { metrics: false, trace_capacity: None });
+        let hub = ObsHub::new(ObsConfig { metrics: false, trace_capacity: None, spans: false });
         hub.inc("x");
         hub.observe("y", 1.0);
         hub.event(0.0, "e", vec![]);
@@ -210,7 +302,60 @@ mod tests {
         assert!(!hub.trace_enabled());
         assert!(hub.snapshot_metrics().is_none());
         assert_eq!(hub.trace_len(), 0);
+        assert_eq!(hub.trace_dropped(), 0);
         assert!(hub.trace_jsonl().is_none());
+    }
+
+    #[test]
+    fn spans_require_tracing_and_ride_the_ring() {
+        // Spans asked for without a trace ring: inert.
+        let no_trace = ObsHub::new(ObsConfig::metrics_only().with_spans());
+        assert!(!no_trace.spans_enabled());
+        let hub = ObsHub::new(ObsConfig::full(64).with_spans());
+        assert!(hub.spans_enabled());
+        let a = hub.next_span_id();
+        let b = hub.next_span_id();
+        assert_eq!(a.raw() + 1, b.raw());
+        let s = Span {
+            id: a,
+            parent: None,
+            track: SpanTrack::Worker(0),
+            commit: 1,
+            phase: SpanPhase::Compute,
+            state: SpanState::Completed,
+            t0: 0.0,
+            t1: 2.0,
+        };
+        hub.record_span(&s);
+        assert_eq!(hub.trace_len(), 1);
+        let back = hub
+            .with_trace(|tr| Span::from_trace_event(tr.events().next().unwrap()).unwrap())
+            .unwrap();
+        assert_eq!(back, s);
+        // Without the spans flag, record_span is a no-op.
+        let plain = ObsHub::new(ObsConfig::full(64));
+        plain.record_span(&s);
+        assert_eq!(plain.trace_len(), 0);
+    }
+
+    #[test]
+    fn virtual_clock_is_opt_in() {
+        let hub = ObsHub::new(ObsConfig::trace_only(8));
+        assert!(hub.virtual_now().is_none());
+        hub.set_virtual_clock(Instant::now(), 0.5);
+        let v = hub.virtual_now().unwrap();
+        assert!(v >= 0.0);
+    }
+
+    #[test]
+    fn trace_overflow_surfaces_in_metrics_snapshot() {
+        let hub = ObsHub::new(ObsConfig::full(2));
+        for i in 0..5 {
+            hub.event(i as f64, "tick", vec![]);
+        }
+        assert_eq!(hub.trace_dropped(), 3);
+        let snap = hub.snapshot_metrics().unwrap();
+        assert_eq!(snap.counter("trace/dropped_events"), 3);
     }
 
     #[test]

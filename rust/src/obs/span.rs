@@ -1,0 +1,431 @@
+//! Causal commit-lineage spans.
+//!
+//! A *span* is one timed phase of a commit's lifecycle — worker compute,
+//! serialize/compress, blackout hold, link transit (uplink), PS-ingress
+//! queue wait, shard FIFO wait + apply, snapshot/downlink — linked to its
+//! predecessor through `parent`, so the whole chain from "worker finished
+//! its local chunk" to "worker holds the fresh model" is reconstructible
+//! from the flat trace stream. Spans ride the existing bounded
+//! [`TraceRecorder`](super::TraceRecorder) ring as events of kind
+//! `"span"` (recorded at their *end* time, so the recorder's monotone
+//! clamp never mangles them), which keeps the obs-off contract intact:
+//! no hub, or a hub without spans armed, records nothing and perturbs
+//! nothing.
+//!
+//! Terminal states distinguish the paths a commit can die on:
+//! [`SpanState::DroppedCrash`] (its worker crashed with the commit in
+//! flight), [`SpanState::DroppedFault`] (the injected arrival-drop fired)
+//! and [`SpanState::HeldBlackout`] (the push sat out a connectivity
+//! blackout — non-fatal, but worth seeing on the track).
+//!
+//! [`CommitLineage`] regroups a flat span list into per-commit chains —
+//! the structure `adsp analyze` walks to print the critical path of the
+//! slowest commit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+use super::trace::TraceEvent;
+
+/// Process-unique span identifier (monotonically allocated by
+/// [`super::ObsHub::next_span_id`]; ids start at 1 so 0 can mean "no
+/// parent" in compact encodings).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    /// The raw id.
+    pub fn raw(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Which lifecycle phase a span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanPhase {
+    /// Local training between two commits.
+    Compute,
+    /// Snapshot + top-k sparsification before the push (zero-width in the
+    /// simulator, which folds serialization into the link transfer).
+    Serialize,
+    /// The push held by a connectivity blackout.
+    BlackoutHold,
+    /// Link transit of the update toward the PS.
+    Uplink,
+    /// Queued at the shared PS-ingress pipe.
+    IngressWait,
+    /// Waiting for the PS apply slot (shard FIFO / failover hold).
+    PsWait,
+    /// The PS apply itself.
+    Apply,
+    /// Fresh-model pull back to the worker.
+    Downlink,
+}
+
+impl SpanPhase {
+    /// Every phase, lifecycle order.
+    pub const ALL: [SpanPhase; 8] = [
+        SpanPhase::Compute,
+        SpanPhase::Serialize,
+        SpanPhase::BlackoutHold,
+        SpanPhase::Uplink,
+        SpanPhase::IngressWait,
+        SpanPhase::PsWait,
+        SpanPhase::Apply,
+        SpanPhase::Downlink,
+    ];
+
+    /// The JSON / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanPhase::Compute => "compute",
+            SpanPhase::Serialize => "serialize",
+            SpanPhase::BlackoutHold => "blackout_hold",
+            SpanPhase::Uplink => "uplink",
+            SpanPhase::IngressWait => "ingress_wait",
+            SpanPhase::PsWait => "ps_wait",
+            SpanPhase::Apply => "apply",
+            SpanPhase::Downlink => "downlink",
+        }
+    }
+
+    /// Parse a [`SpanPhase::name`] back.
+    pub fn parse(s: &str) -> Result<Self> {
+        for p in SpanPhase::ALL {
+            if p.name() == s {
+                return Ok(p);
+            }
+        }
+        bail!("unknown span phase '{s}'")
+    }
+}
+
+/// How the span ended.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpanState {
+    /// Ran to completion.
+    #[default]
+    Completed,
+    /// Push held by a blackout window (the hold itself, not a failure).
+    HeldBlackout,
+    /// Commit died with its crashing worker.
+    DroppedCrash,
+    /// Commit dropped by injected fault (`drop_commit_prob`).
+    DroppedFault,
+}
+
+impl SpanState {
+    /// The JSON / display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanState::Completed => "completed",
+            SpanState::HeldBlackout => "held_blackout",
+            SpanState::DroppedCrash => "dropped_crash",
+            SpanState::DroppedFault => "dropped_fault",
+        }
+    }
+
+    /// Parse a [`SpanState::name`] back.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "completed" => Ok(SpanState::Completed),
+            "held_blackout" => Ok(SpanState::HeldBlackout),
+            "dropped_crash" => Ok(SpanState::DroppedCrash),
+            "dropped_fault" => Ok(SpanState::DroppedFault),
+            other => bail!("unknown span state '{other}'"),
+        }
+    }
+
+    /// True for the states that end a lineage without a completed apply.
+    pub fn is_terminal_failure(&self) -> bool {
+        matches!(self, SpanState::DroppedCrash | SpanState::DroppedFault)
+    }
+}
+
+/// Which timeline track a span renders on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanTrack {
+    /// A worker-side phase (compute, serialize, transit, waits).
+    Worker(usize),
+    /// A PS-shard-side phase (the apply service itself).
+    Shard(usize),
+}
+
+/// One timed phase of a commit lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Process-unique id.
+    pub id: SpanId,
+    /// The preceding span of the same lineage, if any.
+    pub parent: Option<SpanId>,
+    /// The track this span renders on.
+    pub track: SpanTrack,
+    /// Per-worker commit sequence number the span belongs to (1-based;
+    /// `0` = not tied to a specific commit).
+    pub commit: u64,
+    /// Lifecycle phase.
+    pub phase: SpanPhase,
+    /// How the phase ended.
+    pub state: SpanState,
+    /// Start, in virtual seconds.
+    pub t0: f64,
+    /// End, in virtual seconds (`t1 >= t0`).
+    pub t1: f64,
+}
+
+impl Span {
+    /// Span length in seconds (never negative).
+    pub fn duration(&self) -> f64 {
+        (self.t1 - self.t0).max(0.0)
+    }
+
+    /// The `data` payload of the `kind = "span"` trace event this span is
+    /// recorded as.
+    pub fn to_trace_data(&self) -> Vec<(&'static str, Json)> {
+        let mut data = vec![
+            ("span", Json::num(self.id.0 as f64)),
+            (
+                "parent",
+                match self.parent {
+                    Some(p) => Json::num(p.0 as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("commit", Json::num(self.commit as f64)),
+            ("phase", Json::str(self.phase.name())),
+            ("state", Json::str(self.state.name())),
+            ("t0", Json::num(self.t0)),
+            ("t1", Json::num(self.t1)),
+        ];
+        match self.track {
+            SpanTrack::Worker(w) => data.push(("worker", Json::num(w as f64))),
+            SpanTrack::Shard(s) => data.push(("shard", Json::num(s as f64))),
+        }
+        data
+    }
+
+    /// Parse a `kind = "span"` trace event back into a span. Returns an
+    /// error for non-span events or malformed payloads.
+    pub fn from_trace_event(ev: &TraceEvent) -> Result<Self> {
+        if ev.kind != "span" {
+            bail!("not a span event (kind = '{}')", ev.kind);
+        }
+        Self::from_data(&ev.data)
+    }
+
+    /// Parse the `data` map of a span trace event.
+    pub fn from_data(data: &BTreeMap<String, Json>) -> Result<Self> {
+        let get = |k: &str| -> Result<&Json> {
+            data.get(k).ok_or_else(|| anyhow::anyhow!("span event missing '{k}'"))
+        };
+        let parent = match data.get("parent") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(SpanId(v.as_u64()?)),
+        };
+        let track = if let Some(w) = data.get("worker") {
+            SpanTrack::Worker(w.as_u64()? as usize)
+        } else if let Some(s) = data.get("shard") {
+            SpanTrack::Shard(s.as_u64()? as usize)
+        } else {
+            bail!("span event names neither 'worker' nor 'shard'");
+        };
+        Ok(Span {
+            id: SpanId(get("span")?.as_u64()?),
+            parent,
+            track,
+            commit: get("commit")?.as_u64()?,
+            phase: SpanPhase::parse(get("phase")?.as_str()?)?,
+            state: SpanState::parse(get("state")?.as_str()?)?,
+            t0: get("t0")?.as_f64()?,
+            t1: get("t1")?.as_f64()?,
+        })
+    }
+}
+
+/// The lineage coordinates an engine hands to a component that emits a
+/// span on its behalf (e.g. `IngressQueue::admit_observed`): which
+/// worker/commit the span belongs to and which span precedes it.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanCtx {
+    /// The committing worker.
+    pub worker: usize,
+    /// Its per-worker commit sequence number.
+    pub commit: u64,
+    /// The previous span of the chain, if any.
+    pub parent: Option<SpanId>,
+}
+
+/// One commit's reconstructed span chain: every span sharing the same
+/// `(worker, commit)` key, in `t0` order.
+#[derive(Clone, Debug)]
+pub struct CommitLineage {
+    /// The committing worker.
+    pub worker: usize,
+    /// Its per-worker commit sequence number.
+    pub commit: u64,
+    /// The chain, ascending by start time.
+    pub spans: Vec<Span>,
+}
+
+impl CommitLineage {
+    /// Group worker-track spans with `commit > 0` into per-commit chains
+    /// (shard-track spans carry no lineage key and are skipped). Chains
+    /// come back sorted by `(worker, commit)`.
+    pub fn collect(spans: &[Span]) -> Vec<CommitLineage> {
+        let mut by_key: BTreeMap<(usize, u64), Vec<Span>> = BTreeMap::new();
+        for s in spans {
+            if let SpanTrack::Worker(w) = s.track {
+                if s.commit > 0 {
+                    by_key.entry((w, s.commit)).or_default().push(s.clone());
+                }
+            }
+        }
+        by_key
+            .into_iter()
+            .map(|((worker, commit), mut spans)| {
+                spans.sort_by(|a, b| a.t0.total_cmp(&b.t0));
+                CommitLineage { worker, commit, spans }
+            })
+            .collect()
+    }
+
+    /// Chain start time.
+    pub fn t0(&self) -> f64 {
+        self.spans.first().map(|s| s.t0).unwrap_or(0.0)
+    }
+
+    /// Chain end time.
+    pub fn t1(&self) -> f64 {
+        self.spans.iter().map(|s| s.t1).fold(self.t0(), f64::max)
+    }
+
+    /// End-to-end lifecycle length.
+    pub fn duration(&self) -> f64 {
+        (self.t1() - self.t0()).max(0.0)
+    }
+
+    /// Seconds of the chain spent *not* computing (everything from
+    /// serialize onward — the paper's per-commit waiting time).
+    pub fn wait_secs(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| s.phase != SpanPhase::Compute)
+            .map(Span::duration)
+            .sum()
+    }
+
+    /// True when any span ended in a terminal failure state.
+    pub fn failed(&self) -> bool {
+        self.spans.iter().any(|s| s.state.is_terminal_failure())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, parent: Option<u64>, w: usize, commit: u64, phase: SpanPhase) -> Span {
+        Span {
+            id: SpanId(id),
+            parent: parent.map(SpanId),
+            track: SpanTrack::Worker(w),
+            commit,
+            phase,
+            state: SpanState::Completed,
+            t0: id as f64,
+            t1: id as f64 + 1.0,
+        }
+    }
+
+    #[test]
+    fn phase_and_state_names_roundtrip() {
+        for p in SpanPhase::ALL {
+            assert_eq!(SpanPhase::parse(p.name()).unwrap(), p);
+        }
+        for s in [
+            SpanState::Completed,
+            SpanState::HeldBlackout,
+            SpanState::DroppedCrash,
+            SpanState::DroppedFault,
+        ] {
+            assert_eq!(SpanState::parse(s.name()).unwrap(), s);
+        }
+        assert!(SpanPhase::parse("nope").is_err());
+        assert!(SpanState::parse("nope").is_err());
+    }
+
+    #[test]
+    fn span_trace_data_roundtrip() {
+        let mut s = span(7, Some(6), 3, 2, SpanPhase::Uplink);
+        s.state = SpanState::DroppedCrash;
+        let ev = TraceEvent {
+            t: s.t1,
+            wall_s: 0.0,
+            kind: "span".to_string(),
+            data: s.to_trace_data().into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        };
+        let back = Span::from_trace_event(&ev).unwrap();
+        assert_eq!(back, s);
+        // Shard track + no parent.
+        let shard = Span {
+            id: SpanId(9),
+            parent: None,
+            track: SpanTrack::Shard(1),
+            commit: 0,
+            phase: SpanPhase::Apply,
+            state: SpanState::Completed,
+            t0: 1.0,
+            t1: 1.5,
+        };
+        let ev2 = TraceEvent {
+            t: shard.t1,
+            wall_s: 0.0,
+            kind: "span".to_string(),
+            data: shard.to_trace_data().into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        };
+        assert_eq!(Span::from_trace_event(&ev2).unwrap(), shard);
+        // Non-span events are rejected.
+        let other = TraceEvent {
+            t: 0.0,
+            wall_s: 0.0,
+            kind: "eval".to_string(),
+            data: BTreeMap::new(),
+        };
+        assert!(Span::from_trace_event(&other).is_err());
+    }
+
+    #[test]
+    fn lineage_groups_and_measures() {
+        let spans = vec![
+            span(1, None, 0, 1, SpanPhase::Compute),
+            span(2, Some(1), 0, 1, SpanPhase::Uplink),
+            span(3, Some(2), 0, 1, SpanPhase::Downlink),
+            span(4, None, 1, 1, SpanPhase::Compute),
+            // Shard spans and commit-0 spans carry no lineage key.
+            Span {
+                id: SpanId(5),
+                parent: None,
+                track: SpanTrack::Shard(0),
+                commit: 0,
+                phase: SpanPhase::Apply,
+                state: SpanState::Completed,
+                t0: 0.0,
+                t1: 0.1,
+            },
+        ];
+        let chains = CommitLineage::collect(&spans);
+        assert_eq!(chains.len(), 2);
+        let c0 = &chains[0];
+        assert_eq!((c0.worker, c0.commit), (0, 1));
+        assert_eq!(c0.spans.len(), 3);
+        assert_eq!(c0.t0(), 1.0);
+        assert_eq!(c0.t1(), 4.0);
+        assert!((c0.duration() - 3.0).abs() < 1e-12);
+        // Uplink + downlink wait, compute excluded.
+        assert!((c0.wait_secs() - 2.0).abs() < 1e-12);
+        assert!(!c0.failed());
+    }
+}

@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::fault::Checkpoint;
 use crate::metrics::LossLog;
-use crate::obs::ObsHub;
+use crate::obs::{ObsHub, Span, SpanPhase, SpanState, SpanTrack};
 use crate::runtime::{Batch, ModelRuntime, ParamSet};
 
 use super::partition::Partition;
@@ -106,9 +106,28 @@ impl ShardedParameterServer {
                     match msg {
                         ShardMsg::Apply(u) => match &obs_j {
                             Some(h) => {
+                                // The hub's virtual clock (armed by the
+                                // realtime engine) puts this shard-track
+                                // span on the same scaled timeline as the
+                                // worker-side lineage spans.
+                                let v0 = if h.spans_enabled() { h.virtual_now() } else { None };
                                 let t0 = std::time::Instant::now();
                                 state.apply(&u);
                                 h.observe(&apply_name, t0.elapsed().as_secs_f64());
+                                if let Some(a) = v0 {
+                                    if let Some(b) = h.virtual_now() {
+                                        h.record_span(&Span {
+                                            id: h.next_span_id(),
+                                            parent: None,
+                                            track: SpanTrack::Shard(j),
+                                            commit: state.version,
+                                            phase: SpanPhase::Apply,
+                                            state: SpanState::Completed,
+                                            t0: a,
+                                            t1: b,
+                                        });
+                                    }
+                                }
                                 let left = pending_j.fetch_sub(1, Ordering::SeqCst) - 1;
                                 h.gauge(&depth_name, left as f64);
                             }

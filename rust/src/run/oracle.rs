@@ -247,6 +247,59 @@ pub fn check_report_invariants(spec: &ExperimentSpec, report: &RunReport) -> Res
             bail!("metrics evals counter {} != loss_log length {}", evals, samples.len());
         }
     }
+
+    // Attribution conservation: every worker's nine classes must sum to
+    // the report duration (ledger frontiers make this hold by
+    // construction — a violation means an engine charged outside the
+    // ledger). Absent only in pre-attribution dumps.
+    if let Some(a) = &report.attribution {
+        if !a.duration.is_finite() || a.duration < 0.0 {
+            bail!("attribution duration must be finite and >= 0, got {}", a.duration);
+        }
+        if a.duration < report.end_time && !close(a.duration, report.end_time) {
+            bail!("attribution duration {} below end_time {}", a.duration, report.end_time);
+        }
+        if a.num_workers != m_final {
+            bail!("attribution covers {} workers, expected {}", a.num_workers, m_final);
+        }
+        let expect_rows = if m_final <= spec.worker_metrics_cap { m_final } else { 0 };
+        if a.workers.len() != expect_rows {
+            bail!(
+                "attribution materialized {} worker rows, expected {} (cap {})",
+                a.workers.len(),
+                expect_rows,
+                spec.worker_metrics_cap
+            );
+        }
+        for v in &a.total {
+            if !v.is_finite() || *v < 0.0 {
+                bail!("attribution total has a non-finite or negative entry {v}");
+            }
+        }
+        for (w, row) in a.workers.iter().enumerate() {
+            for v in row {
+                if !v.is_finite() || *v < 0.0 {
+                    bail!("attribution worker {w} has a non-finite or negative entry {v}");
+                }
+            }
+            let sum: f64 = row.iter().sum();
+            if !close(sum, a.duration) {
+                bail!(
+                    "attribution worker {w} classes sum to {} != duration {} (conservation)",
+                    sum,
+                    a.duration
+                );
+            }
+        }
+        let total_sum: f64 = a.total.iter().sum();
+        if !close(total_sum, a.duration * m_final as f64) {
+            bail!(
+                "attribution total sums to {} != num_workers * duration {} (conservation)",
+                total_sum,
+                a.duration * m_final as f64
+            );
+        }
+    }
     Ok(())
 }
 
@@ -266,6 +319,17 @@ mod tests {
         spec.max_virtual_secs = 100.0;
         spec.max_total_steps = 10_000;
         spec
+    }
+
+    fn sample_attribution() -> crate::obs::AttributionReport {
+        use crate::obs::{AttributionLedger, TimeClass};
+        // Two workers, conserved against the 100 s run by construction.
+        let mut led = AttributionLedger::new(2, 100.0);
+        led.charge(0, TimeClass::Compute, 0.0, 10.0);
+        led.charge(0, TimeClass::PsWait, 10.0, 13.0);
+        led.charge(1, TimeClass::Compute, 0.0, 10.0);
+        led.charge(1, TimeClass::BarrierWait, 10.0, 11.0);
+        led.finalize(100.0, 4096)
     }
 
     fn consistent_report() -> RunReport {
@@ -307,6 +371,7 @@ mod tests {
             checkpoints_taken: 0,
             checkpoint_overhead_secs: 0.0,
             metrics: None,
+            attribution: Some(sample_attribution()),
             engine: EngineStats::Sim {
                 xla_execs: 8,
                 xla_secs: 0.0,
@@ -417,6 +482,44 @@ mod tests {
         assert!(err.contains("cap"), "got: {err}");
         let mut r = consistent_report();
         r.workers.clear();
+        // Attribution row materialization is gated by the same cap.
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("attribution"), "got: {err}");
+        r.attribution.as_mut().unwrap().workers.clear();
+        check_report_invariants(&spec, &r).unwrap();
+    }
+
+    #[test]
+    fn attribution_conservation_violations_are_caught() {
+        let spec = tiny_spec();
+        // A doctored worker row that no longer sums to the duration.
+        let mut r = consistent_report();
+        r.attribution.as_mut().unwrap().workers[0][0] += 0.5;
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("conservation"), "got: {err}");
+
+        // A doctored fleet total.
+        let mut r = consistent_report();
+        let a = r.attribution.as_mut().unwrap();
+        a.total[0] += 1.0;
+        // Keep the worker rows consistent so the total check is the one
+        // that fires.
+        a.workers[0][0] += 1.0;
+        a.workers[0][8] -= 1.0;
+        let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
+        assert!(err.contains("conservation") || err.contains("negative"), "got: {err}");
+
+        // Duration must reach end_time and cover the right fleet size.
+        let mut r = consistent_report();
+        r.attribution.as_mut().unwrap().duration = 50.0;
+        assert!(check_report_invariants(&spec, &r).is_err());
+        let mut r = consistent_report();
+        r.attribution.as_mut().unwrap().num_workers = 3;
+        assert!(check_report_invariants(&spec, &r).is_err());
+
+        // Pre-attribution dumps (None) still pass all other checks.
+        let mut r = consistent_report();
+        r.attribution = None;
         check_report_invariants(&spec, &r).unwrap();
     }
 }

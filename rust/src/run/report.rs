@@ -9,7 +9,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::metrics::{Breakdown, LossLog, WorkerMetrics};
-use crate::obs::MetricsRegistry;
+use crate::obs::{AttributionReport, MetricsRegistry};
 use crate::sync::SyncModelKind;
 use crate::util::Json;
 
@@ -147,6 +147,12 @@ pub struct RunReport {
     /// otherwise (serialized as JSON `null` so the report key set never
     /// changes shape).
     pub metrics: Option<MetricsRegistry>,
+    /// Per-worker waiting-time attribution
+    /// ([`crate::obs::attribution`]): always populated by both engines
+    /// (it needs no hub), `None` only when parsing pre-attribution dumps.
+    /// Every worker's classes sum to `attribution.duration` — the
+    /// conservation invariant `run::check_report_invariants` enforces.
+    pub attribution: Option<AttributionReport>,
     /// Engine-specific extras (which backend ran, and what only it knows).
     pub engine: EngineStats,
 }
@@ -247,6 +253,13 @@ impl RunReport {
             ("checkpoints_taken", Json::num(self.checkpoints_taken as f64)),
             ("checkpoint_overhead_secs", Json::num(self.checkpoint_overhead_secs)),
             ("metrics", metrics),
+            (
+                "attribution",
+                match &self.attribution {
+                    Some(a) => a.to_json(),
+                    None => Json::Null,
+                },
+            ),
             ("engine", self.engine.to_json()),
         ])
     }
@@ -293,6 +306,14 @@ impl RunReport {
             metrics: match v.get("metrics") {
                 None | Some(Json::Null) => None,
                 Some(j) => Some(MetricsRegistry::from_json(j).context("parsing metrics")?),
+            },
+            // Same backward-compatibility contract as `metrics`: absent
+            // (pre-attribution dumps) and null both parse as None.
+            attribution: match v.get("attribution") {
+                None | Some(Json::Null) => None,
+                Some(j) => {
+                    Some(AttributionReport::from_json(j).context("parsing attribution")?)
+                }
             },
             engine: EngineStats::from_json(v.req("engine")?).context("parsing engine")?,
         })
@@ -348,6 +369,7 @@ mod tests {
             checkpoints_taken: 2,
             checkpoint_overhead_secs: 0.25,
             metrics: None,
+            attribution: None,
             engine,
         }
     }
@@ -402,6 +424,35 @@ mod tests {
         obj.remove("metrics");
         let back = RunReport::from_json(&Json::Obj(obj)).unwrap();
         assert!(back.metrics.is_none());
+    }
+
+    #[test]
+    fn attribution_section_round_trips_and_tolerates_absence() {
+        use crate::obs::{AttributionLedger, TimeClass};
+        // A populated ledger survives the dump/parse cycle bit-for-bit.
+        let mut report = sample_report(EngineStats::Realtime { time_scale: 1.0 });
+        let mut ledger = AttributionLedger::new(1, 100.0);
+        ledger.charge(0, TimeClass::Compute, 0.0, 80.0);
+        ledger.charge(0, TimeClass::PsWait, 80.0, 90.5);
+        let attr = ledger.finalize(90.5, 4096);
+        report.attribution = Some(attr.clone());
+        let back = RunReport::from_json_str(&report.to_json().dump()).unwrap();
+        assert_eq!(back.attribution.unwrap().to_json(), attr.to_json());
+
+        // None dumps as null and parses back as None.
+        report.attribution = None;
+        let text = report.to_json().dump();
+        assert!(text.contains("\"attribution\":null"));
+        assert!(RunReport::from_json_str(&text).unwrap().attribution.is_none());
+
+        // Pre-attribution dumps have no "attribution" key; still parse.
+        let mut obj = match report.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        obj.remove("attribution");
+        let back = RunReport::from_json(&Json::Obj(obj)).unwrap();
+        assert!(back.attribution.is_none());
     }
 
     #[test]

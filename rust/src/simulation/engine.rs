@@ -23,7 +23,9 @@ use crate::data::{make_source, DataSource};
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
 use crate::metrics::{ConvergenceDetector, LossLog, MetricsSlab, WorkerMetrics};
 use crate::network::IngressQueue;
-use crate::obs::ObsHub;
+use crate::obs::{
+    AttributionLedger, ObsHub, Span, SpanCtx, SpanId, SpanPhase, SpanState, SpanTrack, TimeClass,
+};
 use crate::run::{EngineStats, NoopObserver, RunObserver, RunReport};
 use crate::runtime::{native, ModelRuntime, ParamSet};
 use crate::sync::{make_policy, Action, ClusterView, SyncPolicy, WorkerProgress, WorkerSlabs};
@@ -157,6 +159,32 @@ impl WorkerLanes {
     }
 }
 
+/// Per-worker commit-lineage chain state, armed only when the attached
+/// hub has spans enabled (`None` — the default — runs zero span code, so
+/// the obs-off bit-identity pin extends to spans for free; spans never
+/// draw randomness or steer the engine).
+struct SpanChains {
+    /// Last span id of the current chain (the next span's parent).
+    last: Vec<Option<SpanId>>,
+    /// Per-worker 1-based commit sequence number.
+    seq: Vec<u64>,
+    /// Start of the current compute stretch (run start, last pull
+    /// install, wake-from-block, or restart).
+    anchor: Vec<f64>,
+}
+
+impl SpanChains {
+    fn new(n: usize) -> Self {
+        SpanChains { last: vec![None; n], seq: vec![0; n], anchor: vec![0.0; n] }
+    }
+
+    fn push_worker(&mut self, t0: f64) {
+        self.last.push(None);
+        self.seq.push(0);
+        self.anchor.push(t0);
+    }
+}
+
 /// The deterministic discrete-event engine driving one experiment
 /// (see the module docs and `simulation/mod.rs`).
 pub struct SimEngine {
@@ -243,6 +271,14 @@ pub struct SimEngine {
     /// bit-identical" pin is kept. Taps are read-only: they never draw
     /// randomness or mutate engine state.
     obs: Option<ObsHub>,
+    /// Waiting-time attribution ([`crate::obs::attribution`]): always on —
+    /// pure deterministic f64 bookkeeping over times the engine already
+    /// computed, no RNG, no hub required — so `RunReport.attribution` is
+    /// present whether or not observability is armed.
+    attr: AttributionLedger,
+    /// Commit-lineage span state; armed in `run_observed` iff the hub has
+    /// spans enabled.
+    chains: Option<SpanChains>,
 }
 
 /// Extra per-shard overhead as a fraction of the split cost — the RPC and
@@ -324,6 +360,7 @@ impl SimEngine {
             });
         }
         let m = spec.cluster.m();
+        let horizon = spec.max_virtual_secs;
 
         Ok(SimEngine {
             spec,
@@ -369,7 +406,28 @@ impl SimEngine {
             checkpoints_taken: 0,
             checkpoint_secs: 0.0,
             obs: None,
+            attr: AttributionLedger::new(m, horizon),
+            chains: None,
         })
+    }
+
+    /// Emit one lineage span for worker `w` and thread the chain's parent
+    /// link. No-op when spans are unarmed.
+    fn emit_span(&mut self, w: usize, phase: SpanPhase, state: SpanState, t0: f64, t1: f64) {
+        let Some(chains) = &mut self.chains else { return };
+        let Some(h) = &self.obs else { return };
+        let id = h.next_span_id();
+        h.record_span(&Span {
+            id,
+            parent: chains.last[w],
+            track: SpanTrack::Worker(w),
+            commit: chains.seq[w],
+            phase,
+            state,
+            t0,
+            t1,
+        });
+        chains.last[w] = Some(id);
     }
 
     /// Attach an observability hub: the run fills its metrics registry
@@ -494,6 +552,7 @@ impl SimEngine {
         // fractions stay exact at the cap.
         self.metrics.compute_secs[w] +=
             dt.min((self.spec.max_virtual_secs - self.now).max(0.0));
+        self.attr.charge(w, TimeClass::Compute, self.now, self.now + dt);
         let t_next = self.now + dt;
         self.push_event(t_next, EventKind::Ready(w));
         Ok(())
@@ -536,6 +595,28 @@ impl SimEngine {
         let comm = blackout_wait + up_extra + down_extra + 2.0 * oneway;
         self.metrics.comm_secs[w] +=
             comm.min((self.spec.max_virtual_secs - self.now).max(0.0));
+        let arrive = depart + oneway + up_extra;
+        // Attribution: the hold is blackout time, the uplink leg is
+        // network time (the downlink leg is charged when it happens).
+        self.attr.charge(w, TimeClass::Blackout, self.now, depart);
+        self.attr.charge(w, TimeClass::Network, depart, arrive);
+        // Lineage: close the compute stretch and open commit chain
+        // `seq + 1` — compute → serialize (zero-width in the sim) →
+        // [blackout hold] → uplink.
+        if self.chains.is_some() {
+            let (anchor, now) = {
+                let c = self.chains.as_mut().expect("checked above");
+                c.seq[w] += 1;
+                c.last[w] = None;
+                (c.anchor[w], self.now)
+            };
+            self.emit_span(w, SpanPhase::Compute, SpanState::Completed, anchor, now);
+            self.emit_span(w, SpanPhase::Serialize, SpanState::Completed, now, now);
+            if blackout_wait > 0.0 {
+                self.emit_span(w, SpanPhase::BlackoutHold, SpanState::HeldBlackout, now, depart);
+            }
+            self.emit_span(w, SpanPhase::Uplink, SpanState::Completed, depart, arrive);
+        }
         if let Some(h) = self.obs.clone() {
             h.inc("net/commits_sent");
             h.observe("net/commit_comm_secs", comm);
@@ -544,7 +625,7 @@ impl SimEngine {
                 h.observe("net/blackout_hold_secs", blackout_wait);
             }
         }
-        self.push_event(depart + oneway + up_extra, EventKind::CommitArrive(w));
+        self.push_event(arrive, EventKind::CommitArrive(w));
         Ok(())
     }
 
@@ -580,7 +661,22 @@ impl SimEngine {
         // Admission clears the shared ingress pipe *and* any PS failover
         // in progress — commits stripe across every shard, so one failed
         // shard holds all applies until its recovery line is restored.
-        let cleared = self.ingress.admit(self.now, up_bytes).max(self.cluster.ps_down_until());
+        // The queue emits the `ingress_wait` span itself when it delays
+        // the commit (and spans are armed).
+        let ctx = self
+            .chains
+            .as_ref()
+            .map(|c| SpanCtx { worker: w, commit: c.seq[w], parent: c.last[w] });
+        let (ingress_clear, span_id) =
+            self.ingress.admit_observed(self.now, up_bytes, self.obs.as_ref(), ctx);
+        if let (Some(c), Some(id)) = (self.chains.as_mut(), span_id) {
+            c.last[w] = Some(id);
+        }
+        let cleared = ingress_clear.max(self.cluster.ps_down_until());
+        // Attribution: pipe time is ingress_wait; a failover hold past it
+        // is ps_wait.
+        self.attr.charge(w, TimeClass::IngressWait, self.now, ingress_clear);
+        self.attr.charge(w, TimeClass::PsWait, ingress_clear.max(self.now), cleared);
         if let Some(h) = self.obs.clone() {
             h.inc("net/ingress_admissions");
             if cleared > self.now {
@@ -604,6 +700,11 @@ impl SimEngine {
             if let Some(h) = self.obs.clone() {
                 h.inc("fault/inflight_drops");
             }
+            // Terminal lineage state: the commit died with its worker.
+            self.emit_span(w, SpanPhase::Uplink, SpanState::DroppedCrash, self.now, self.now);
+            if let Some(c) = self.chains.as_mut() {
+                c.last[w] = None;
+            }
         }
         self.wasted_steps += std::mem::take(&mut self.lanes.in_flight_steps[w]);
         self.lanes.in_flight[w] = None;
@@ -625,6 +726,7 @@ impl SimEngine {
         if ps_down > self.now {
             self.metrics.comm_secs[w] += (ps_down - self.now)
                 .min((self.spec.max_virtual_secs - self.now).max(0.0));
+            self.attr.charge(w, TimeClass::PsWait, self.now, ps_down);
             self.push_event(ps_down, EventKind::CommitApply(w));
             return Ok(());
         }
@@ -649,7 +751,17 @@ impl SimEngine {
             self.lanes.pending_pull[w] = Some(self.global.clone());
             let oneway = self.oneway_secs(w);
             let down_extra = std::mem::take(&mut self.lanes.down_extra[w]);
-            self.push_event(self.now + oneway + down_extra, EventKind::Ready(w));
+            let ready = self.now + oneway + down_extra;
+            // The pull of the (unchanged) model still rides the link.
+            self.attr.charge(w, TimeClass::Network, self.now, ready);
+            // Terminal lineage state, then the pull leg closes the chain.
+            self.emit_span(w, SpanPhase::Apply, SpanState::DroppedFault, self.now, self.now);
+            self.emit_span(w, SpanPhase::Downlink, SpanState::Completed, self.now, ready);
+            if let Some(c) = self.chains.as_mut() {
+                c.last[w] = None;
+                c.anchor[w] = ready;
+            }
+            self.push_event(ready, EventKind::Ready(w));
             return Ok(());
         }
         let eta = self.spec.eta();
@@ -694,6 +806,7 @@ impl SimEngine {
         // Fresh model snapshot rides back to the worker once every shard
         // has applied its slab (sharded apply occupancy + striped return
         // + the link-model serialization of the dense pull).
+        let ps_busy_before = self.ps_busy;
         let done = self.ps_apply_done();
         if let Some(h) = self.obs.clone() {
             h.observe("sim/ps_apply_turnaround_secs", done - self.now);
@@ -704,8 +817,25 @@ impl SimEngine {
         }
         let oneway = self.oneway_secs(w);
         let down_extra = std::mem::take(&mut self.lanes.down_extra[w]);
+        let ready = done + oneway + down_extra;
+        // Attribution: waiting for the apply slot + the apply itself is
+        // PS time from the worker's perspective; the pull leg is network.
+        self.attr.charge(w, TimeClass::PsWait, self.now, done);
+        self.attr.charge(w, TimeClass::Network, done, ready);
+        // Lineage: shard FIFO wait → apply → downlink closes the chain.
+        if self.chains.is_some() {
+            let apply_start = if done > self.now { ps_busy_before.max(self.now) } else { done };
+            if apply_start > self.now {
+                self.emit_span(w, SpanPhase::PsWait, SpanState::Completed, self.now, apply_start);
+            }
+            self.emit_span(w, SpanPhase::Apply, SpanState::Completed, apply_start, done);
+            self.emit_span(w, SpanPhase::Downlink, SpanState::Completed, done, ready);
+            let c = self.chains.as_mut().expect("checked above");
+            c.last[w] = None;
+            c.anchor[w] = ready;
+        }
         self.lanes.pending_pull[w] = Some(self.global.clone());
-        self.push_event(done + oneway + down_extra, EventKind::Ready(w));
+        self.push_event(ready, EventKind::Ready(w));
         Ok(())
     }
 
@@ -764,6 +894,11 @@ impl SimEngine {
                 self.progress.set_blocked(w, false);
                 if let Some(start) = self.lanes.block_start[w].take() {
                     self.metrics.blocked_secs[w] += self.now - start;
+                    self.attr.charge(w, TimeClass::BarrierWait, start, self.now);
+                }
+                if let Some(c) = self.chains.as_mut() {
+                    // Compute resumes at the wake, not at the block.
+                    c.anchor[w] = self.now;
                 }
                 // Barrier release broadcast: wake with the current model.
                 self.lanes.params[w] = self.global.clone();
@@ -814,6 +949,10 @@ impl SimEngine {
                     make_source(&self.runtime.manifest, self.spec.seed, w),
                 );
                 self.metrics.push_default();
+                self.attr.push_worker(self.now);
+                if let Some(c) = self.chains.as_mut() {
+                    c.push_worker(self.now);
+                }
                 let entry = self.cluster.join_progress(w, &self.progress);
                 self.progress.push(entry);
                 self.incarnation.push(0);
@@ -829,6 +968,7 @@ impl SimEngine {
                 self.progress.set_active(w, false);
                 if let Some(start) = self.lanes.block_start[w].take() {
                     self.metrics.blocked_secs[w] += self.now - start;
+                    self.attr.charge(w, TimeClass::BarrierWait, start, self.now);
                 }
                 self.lanes.pending_pull[w] = None;
             }
@@ -853,9 +993,13 @@ impl SimEngine {
                 self.progress.set_active(w, false);
                 if let Some(start) = self.lanes.block_start[w].take() {
                     self.metrics.blocked_secs[w] += self.now - start;
+                    self.attr.charge(w, TimeClass::BarrierWait, start, self.now);
                 }
                 self.lanes.pending_pull[w] = None;
                 self.drop_in_flight(w)?;
+                // The outage itself is down time (the ledger trims any
+                // overlap with charges the cancelled chain already made).
+                self.attr.charge(w, TimeClass::Down, self.now, until);
                 self.push_event(until, EventKind::WorkerRestart(w));
             }
             ClusterDelta::ShardDown { shard: _, until } => {
@@ -932,6 +1076,10 @@ impl SimEngine {
         self.lanes.params[w] = self.global.clone();
         self.lanes.u[w] = self.global.zeros_like();
         self.lanes.pending_pull[w] = None;
+        if let Some(c) = self.chains.as_mut() {
+            c.last[w] = None;
+            c.anchor[w] = self.now;
+        }
         self.push_event(self.now, EventKind::Ready(w));
         self.with_view(|policy, view| policy.on_cluster_change(view));
         Ok(())
@@ -972,6 +1120,9 @@ impl SimEngine {
         self.runtime.warmup_for(&in_use).context("compiling artifacts")?;
 
         let hub = self.obs.clone();
+        if hub.as_ref().is_some_and(|h| h.spans_enabled()) {
+            self.chains = Some(SpanChains::new(self.progress.len()));
+        }
         if let Some(h) = &hub {
             let data = vec![
                 ("model", Json::str(self.spec.model.clone())),
@@ -1119,6 +1270,7 @@ impl SimEngine {
         for w in 0..self.progress.len() {
             if let Some(start) = self.lanes.block_start[w].take() {
                 self.metrics.blocked_secs[w] += self.now - start;
+                self.attr.charge(w, TimeClass::BarrierWait, start, self.now);
             }
         }
 
@@ -1175,6 +1327,7 @@ impl SimEngine {
             checkpoints_taken: self.checkpoints_taken,
             checkpoint_overhead_secs: self.checkpoint_secs,
             metrics: hub.as_ref().and_then(|h| h.snapshot_metrics()),
+            attribution: Some(self.attr.finalize(self.now, self.spec.worker_metrics_cap)),
             engine: EngineStats::Sim {
                 xla_execs: self.runtime.executions(),
                 xla_secs: self.runtime.execution_secs(),

@@ -1131,7 +1131,7 @@ fn obs_disabled_and_enabled_sim_runs_bit_identical_for_all_policies() {
         let plain = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
         assert!(plain.metrics.is_none(), "{kind}: metrics without a hub");
 
-        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096) });
+        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096), spans: false });
         let observed = Run::from_spec(spec)
             .backend(Backend::Sim)
             .observability(&hub)
@@ -1162,7 +1162,7 @@ fn same_seed_sim_runs_produce_identical_metrics_snapshots() {
     require_artifacts!("mlp_quick");
     use adsp::obs::{MetricsRegistry, ObsConfig, ObsHub};
     let run_once = || {
-        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: None });
+        let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: None, spans: false });
         let report = Run::from_spec(tiny_spec("mlp_quick", SyncModelKind::Adsp))
             .backend(Backend::Sim)
             .observability(&hub)
@@ -1196,7 +1196,7 @@ fn realtime_run_populates_metrics_and_trace() {
     spec.max_total_steps = 1200;
     spec.eval_interval_secs = 10.0;
     spec.shards = 2;
-    let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096) });
+    let hub = ObsHub::new(ObsConfig { metrics: true, trace_capacity: Some(4096), spans: false });
     let report = Run::from_spec(spec)
         .backend(Backend::Realtime { time_scale: 0.01 })
         .observability(&hub)
@@ -1234,6 +1234,83 @@ fn realtime_run_populates_metrics_and_trace() {
         assert!(pair[0].t <= pair[1].t, "trace not time-ordered: {} > {}", pair[0].t, pair[1].t);
     }
     assert!(report.wall_secs < 30.0, "realtime obs run took too long");
+}
+
+#[test]
+fn span_enabled_sim_runs_stay_bit_identical_for_all_policies() {
+    // The lineage tap extends the obs acceptance pin: arming spans (which
+    // ride the trace ring) must not perturb one bit of the simulator's
+    // output — including the attribution ledger — while the trace gains
+    // parent-linked spans that assemble into complete commit lineages.
+    // fleet_proxy needs no artifacts, so this runs on every checkout.
+    use adsp::obs::{CommitLineage, ObsConfig, ObsHub, Span, SpanPhase};
+    for kind in SyncModelKind::ALL {
+        let spec = tiny_spec("fleet_proxy", kind);
+        let plain = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+        let hub =
+            ObsHub::new(ObsConfig { metrics: false, trace_capacity: Some(1 << 16), spans: true });
+        let traced = Run::from_spec(spec)
+            .backend(Backend::Sim)
+            .observability(&hub)
+            .execute()
+            .unwrap();
+        assert_reports_bit_identical(&plain, &traced, kind.name());
+        assert_eq!(
+            plain.attribution.as_ref().map(|a| a.to_json()),
+            traced.attribution.as_ref().map(|a| a.to_json()),
+            "{kind}: span tap perturbed the attribution ledger"
+        );
+
+        let spans: Vec<Span> = hub
+            .with_trace(|tr| {
+                tr.events()
+                    .filter(|e| e.kind == "span")
+                    .map(|e| Span::from_trace_event(e).unwrap())
+                    .collect()
+            })
+            .unwrap();
+        assert!(!spans.is_empty(), "{kind}: spans armed but none recorded");
+        let has = |p: SpanPhase| spans.iter().any(|s| s.phase == p);
+        assert!(has(SpanPhase::Compute), "{kind}: no compute spans");
+        assert!(has(SpanPhase::Uplink), "{kind}: no uplink spans");
+        assert!(has(SpanPhase::Apply), "{kind}: no apply spans");
+        let lineages = CommitLineage::collect(&spans);
+        assert!(!lineages.is_empty(), "{kind}: no commit lineages assembled");
+        for l in &lineages {
+            assert!(l.t1() >= l.t0(), "{kind}: lineage runs backwards");
+            assert!(l.wait_secs() >= 0.0, "{kind}: negative lineage wait");
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_export_round_trips_through_a_real_run() {
+    // End-to-end Perfetto path: record a span-enabled run, export with
+    // `write_chrome_trace`, and the file must parse as trace-event JSON
+    // whose non-metadata entry count equals the recorded event count.
+    use adsp::obs::{export, ObsConfig, ObsHub};
+    let hub =
+        ObsHub::new(ObsConfig { metrics: false, trace_capacity: Some(1 << 16), spans: true });
+    let report = Run::from_spec(tiny_spec("fleet_proxy", SyncModelKind::Adsp))
+        .backend(Backend::Sim)
+        .observability(&hub)
+        .execute()
+        .unwrap();
+    assert!(report.total_commits > 0, "run produced no commits to trace");
+    let events: Vec<_> = hub.with_trace(|tr| tr.events().cloned().collect::<Vec<_>>()).unwrap();
+    assert!(!events.is_empty());
+
+    let dir = std::env::temp_dir().join("adsp_chrome_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.chrome.json");
+    let written = export::write_chrome_trace(&path, &events).unwrap();
+    assert_eq!(written, events.len(), "exporter dropped or invented entries");
+    let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(
+        export::chrome_event_count(&back).unwrap(),
+        events.len(),
+        "chrome trace event count did not round-trip"
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -1174,7 +1174,7 @@ fn prop_blackout_and_network_sections_roundtrip_through_spec_json() {
 // ---------------------------------------------------------------------------
 
 use adsp::metrics::{Breakdown, LossLog, WorkerMetrics};
-use adsp::obs::MetricsRegistry;
+use adsp::obs::{AttributionLedger, MetricsRegistry, TimeClass};
 use adsp::run::{EngineStats, RunReport};
 
 /// A random metrics registry with finite gauges only — the serializer
@@ -1195,6 +1195,25 @@ fn random_registry(r: &mut Rng) -> MetricsRegistry {
         }
     }
     reg
+}
+
+/// A random attribution section built through the ledger itself, so it is
+/// conservation-consistent by construction (random charges, idle gaps,
+/// sometimes streamed above the cap).
+fn random_attribution(r: &mut Rng) -> adsp::obs::AttributionReport {
+    let m = 1 + r.below(4);
+    let horizon = 50.0 + 200.0 * r.next_f64();
+    let mut ledger = AttributionLedger::new(m, horizon);
+    for w in 0..m {
+        let mut t = 0.0;
+        while t < horizon {
+            let dt = 0.5 + 5.0 * r.next_f64();
+            let class = TimeClass::CHARGED[r.below(TimeClass::CHARGED.len())];
+            ledger.charge(w, class, t, t + dt);
+            t += dt + r.next_f64(); // leave occasional idle gaps
+        }
+    }
+    ledger.finalize(horizon, if r.below(4) == 0 { 0 } else { 1 << 20 })
 }
 
 /// A random, finite-valued report covering both engine variants, empty and
@@ -1260,6 +1279,7 @@ fn random_report(r: &mut Rng) -> RunReport {
         checkpoints_taken: r.next_u64() >> 40,
         checkpoint_overhead_secs: r.next_f64() * 60.0,
         metrics: if r.below(3) == 0 { None } else { Some(random_registry(r)) },
+        attribution: if r.below(3) == 0 { None } else { Some(random_attribution(r)) },
         engine,
     }
 }
@@ -1727,4 +1747,95 @@ fn prop_metrics_registry_json_roundtrip_is_lossless() {
         // The deterministic view of a wall/-free registry is itself.
         assert_eq!(reg.deterministic_view(), reg, "case {case}: view dropped entries");
     }
+}
+
+// ---------------------------------------------------------------------------
+// attribution: the time ledger conserves every second
+// ---------------------------------------------------------------------------
+
+use adsp::cluster::{random_fleet_spec, FuzzIntensity};
+use adsp::run::{check_report_invariants, Backend, Run};
+
+fn assert_conserves(rep: &adsp::obs::AttributionReport, what: &str) {
+    let tol = |x: f64| 1e-9 * x.abs().max(1.0);
+    assert!(rep.duration.is_finite() && rep.duration >= 0.0, "{what}: bad duration");
+    for (w, row) in rep.workers.iter().enumerate() {
+        for (c, v) in row.iter().enumerate() {
+            assert!(v.is_finite() && *v >= 0.0, "{what}: worker {w} class {c} = {v}");
+        }
+        let sum: f64 = row.iter().sum();
+        assert!(
+            (sum - rep.duration).abs() <= tol(rep.duration),
+            "{what}: worker {w} sums to {sum} != duration {}",
+            rep.duration
+        );
+    }
+    let total: f64 = rep.total.iter().sum();
+    let want = rep.duration * rep.num_workers as f64;
+    assert!(
+        (total - want).abs() <= tol(want),
+        "{what}: total sums to {total} != m * duration {want}"
+    );
+}
+
+#[test]
+fn prop_attribution_ledger_conserves_under_adversarial_charges() {
+    // Charge soups the engines never produce — overlapping intervals,
+    // reversed endpoints, spans beyond the horizon, duplicate classes —
+    // must still come out conserving: the frontier clamp eats overlaps,
+    // the horizon clamp eats overshoot, and idle absorbs the rest, so
+    // every worker row sums exactly to the run duration.
+    let mut rng = Rng::new(0xA77_2);
+    for case in 0..200u64 {
+        let mut r = rng.split(case);
+        let m = 1 + r.below(6);
+        let horizon = 10.0 + 100.0 * r.next_f64();
+        let mut ledger = AttributionLedger::new(m, horizon);
+        for _ in 0..r.below(80) {
+            let w = r.below(m);
+            let class = TimeClass::CHARGED[r.below(TimeClass::CHARGED.len())];
+            let a = r.next_f64() * horizon * 1.3 - 0.1 * horizon; // may be < 0
+            let b = a + (r.next_f64() - 0.2) * 20.0; // may be < a
+            ledger.charge(w, class, a, b);
+        }
+        let end_time = r.next_f64() * horizon * 1.2;
+        let rep = ledger.finalize(end_time, if r.below(5) == 0 { 0 } else { 1 << 20 });
+        assert!(rep.duration >= end_time - 1e-12, "case {case}: duration below end_time");
+        assert_conserves(&rep, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn prop_sim_attribution_conserves_under_random_timelines() {
+    // The engine-level guarantee behind `adsp analyze`: for every sync
+    // policy, on fuzzed fleets with churn / crashes / blackouts / random
+    // networks, the report's attribution section classifies every
+    // simulated second into exactly one class — checked here via the
+    // oracle (which enforces row-sum == duration) plus a direct
+    // conservation pass over the materialized rows.
+    let mut case = 0u64;
+    for kind in SyncModelKind::ALL {
+        for intensity in [FuzzIntensity::Light, FuzzIntensity::Heavy] {
+            for s in 0..12u64 {
+                case += 1;
+                let seed = 0xA77 + case * 7919 + s;
+                let spec = random_fleet_spec(seed, kind, intensity);
+                let report = Run::from_spec(spec.clone())
+                    .backend(Backend::Sim)
+                    .execute()
+                    .unwrap_or_else(|e| panic!("seed {seed} {kind}: run failed: {e}"));
+                check_report_invariants(&spec, &report)
+                    .unwrap_or_else(|e| panic!("seed {seed} {kind}: oracle: {e}"));
+                let a = report.attribution.as_ref().unwrap_or_else(|| {
+                    panic!("seed {seed} {kind}: sim run missing attribution")
+                });
+                assert_conserves(a, &format!("seed {seed} {kind}"));
+                assert!(
+                    a.duration >= report.end_time - 1e-12,
+                    "seed {seed} {kind}: attribution horizon short of the run"
+                );
+            }
+        }
+    }
+    assert_eq!(case, 9 * 2 * 12, "policy × intensity × seed grid drifted");
 }

@@ -21,6 +21,7 @@ use adsp::obs::{
 use adsp::run::{check_report_invariants, Backend, EngineStats, Run, RunReport};
 use adsp::runtime::ModelRuntime;
 use adsp::sync::SyncModelKind;
+use adsp::util::Json;
 
 const USAGE: &str = "\
 adsp — ADSP: distributed ML through heterogeneous edge systems (AAAI 2020)
@@ -390,15 +391,21 @@ fn main() -> Result<()> {
 /// `adsp analyze`: the waiting-time attribution table of a `--out` report,
 /// or the per-phase span aggregate + slowest-commit critical path of a
 /// `--trace --spans` JSONL (optionally converted to Chrome trace-event
-/// JSON via `--chrome`). Input kind is detected by parsing: a full
-/// RunReport wins, anything else must be a trace.
+/// JSON via `--chrome`). Input kind is detected by shape — a single JSON
+/// object with an `"engine"` section is a report — so a malformed report
+/// surfaces its own parse error instead of falling through to the trace
+/// parser.
 fn cmd_analyze(args: &Args) -> Result<()> {
     let Some(path) = args.positional.first() else {
         bail!("usage: adsp analyze <report.json|trace.jsonl> [--chrome FILE.json]");
     };
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    if let Ok(report) = RunReport::from_json_str(&text) {
+    let looks_like_report =
+        matches!(Json::parse(&text), Ok(v) if v.get("engine").is_some());
+    if looks_like_report {
+        let report = RunReport::from_json_str(&text)
+            .with_context(|| format!("{path} looks like a run report but failed to parse"))?;
         if args.flags.contains_key("chrome") {
             bail!("--chrome converts a trace.jsonl, not a report — pass the --trace file");
         }

@@ -12,7 +12,9 @@
 //! `[max(t0, frontier), min(t1, horizon))` before being added, so
 //! charges can never overlap or run past the horizon and the frontier
 //! only moves forward. At [`AttributionLedger::finalize`] the residual
-//! `duration - frontier[w]` becomes the worker's `idle` time, which makes
+//! `duration - sum(charged lanes)` becomes the worker's `idle` time —
+//! covering interior gaps between charges, a mid-run joiner's pre-join
+//! window, and the tail past the last charge alike — which makes
 //! `sum(classes) == duration` exact up to f64 rounding for every worker —
 //! the invariant `run::check_report_invariants` enforces on every run and
 //! every fuzz seed.
@@ -206,21 +208,31 @@ impl AttributionLedger {
         for &f in &self.frontier {
             duration = duration.max(f);
         }
+        // Idle is `duration - sum(charged lanes)`, NOT `duration -
+        // frontier`: charges that start ahead of the frontier (or a
+        // mid-run joiner's pre-join window) leave gaps the frontier has
+        // skipped over, and those gaps must finalize as idle or worker
+        // rows would sum to less than the duration. The charged sum is
+        // always <= frontier <= duration, so idle stays non-negative.
         let mut total = [0.0f64; NUM_CLASSES];
         for w in 0..n {
+            let mut charged = 0.0f64;
             for c in 0..NUM_CHARGED {
                 total[c] += self.lanes[c][w];
+                charged += self.lanes[c][w];
             }
-            total[TimeClass::Idle.index()] += duration - self.frontier[w];
+            total[TimeClass::Idle.index()] += (duration - charged).max(0.0);
         }
         let workers = if n <= cap {
             (0..n)
                 .map(|w| {
                     let mut row = [0.0f64; NUM_CLASSES];
+                    let mut charged = 0.0f64;
                     for c in 0..NUM_CHARGED {
                         row[c] = self.lanes[c][w];
+                        charged += self.lanes[c][w];
                     }
-                    row[TimeClass::Idle.index()] = duration - self.frontier[w];
+                    row[TimeClass::Idle.index()] = (duration - charged).max(0.0);
                     row
                 })
                 .collect()
@@ -406,9 +418,33 @@ mod tests {
         led.push_worker(5.0);
         led.charge(1, TimeClass::Compute, 0.0, 8.0);
         let rep = led.finalize(20.0, 8);
-        // The late joiner's pre-join window [0,5) never gets charged.
+        // The late joiner's pre-join window [0,5) never gets charged; it
+        // finalizes as idle along with the post-charge tail [8,20), so
+        // the row still conserves.
         assert_eq!(rep.workers[1][TimeClass::Compute.index()], 3.0);
-        assert_eq!(rep.workers[1][TimeClass::Idle.index()], 12.0);
+        assert_eq!(rep.workers[1][TimeClass::Idle.index()], 17.0);
+        assert_eq!(rep.workers[0][TimeClass::Idle.index()], 20.0);
+        for row in &rep.workers {
+            let sum: f64 = row.iter().sum();
+            assert!((sum - rep.duration).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn interior_gaps_finalize_as_idle() {
+        // A charge starting ahead of the frontier skips [2,6); the gap
+        // must land in idle, not vanish.
+        let mut led = AttributionLedger::new(1, 20.0);
+        led.charge(0, TimeClass::Compute, 0.0, 2.0);
+        led.charge(0, TimeClass::Network, 6.0, 9.0);
+        let rep = led.finalize(10.0, 8);
+        let row = rep.workers[0];
+        assert_eq!(row[TimeClass::Compute.index()], 2.0);
+        assert_eq!(row[TimeClass::Network.index()], 3.0);
+        // idle = gap [2,6) + tail [9,10) = 5.
+        assert_eq!(row[TimeClass::Idle.index()], 5.0);
+        let sum: f64 = row.iter().sum();
+        assert!((sum - rep.duration).abs() < 1e-12);
     }
 
     #[test]

@@ -116,11 +116,16 @@ impl ShardedParameterServer {
                                 h.observe(&apply_name, t0.elapsed().as_secs_f64());
                                 if let Some(a) = v0 {
                                     if let Some(b) = h.virtual_now() {
+                                        // `commit` is the *per-worker*
+                                        // commit sequence number; the
+                                        // global PS version doesn't fit
+                                        // that convention, so shard spans
+                                        // use 0 ("not tied to a commit").
                                         h.record_span(&Span {
                                             id: h.next_span_id(),
                                             parent: None,
                                             track: SpanTrack::Shard(j),
-                                            commit: state.version,
+                                            commit: 0,
                                             phase: SpanPhase::Apply,
                                             state: SpanState::Completed,
                                             t0: a,

@@ -249,9 +249,10 @@ pub fn check_report_invariants(spec: &ExperimentSpec, report: &RunReport) -> Res
     }
 
     // Attribution conservation: every worker's nine classes must sum to
-    // the report duration (ledger frontiers make this hold by
-    // construction — a violation means an engine charged outside the
-    // ledger). Absent only in pre-attribution dumps.
+    // the report duration (the ledger derives idle as duration minus the
+    // charged lanes, so this holds by construction — a violation means an
+    // engine charged outside the ledger). Absent only in pre-attribution
+    // dumps.
     if let Some(a) = &report.attribution {
         if !a.duration.is_finite() || a.duration < 0.0 {
             bail!("attribution duration must be finite and >= 0, got {}", a.duration);

@@ -1,0 +1,59 @@
+//! Fog-tier scheduler bench behind the CI bench-regression gate.
+//!
+//! Runs the fig18 ingress-stress experiment (`fleet_proxy`, artifact-free)
+//! at a fixed 1k-member fleet twice — flat, and with one aggregator per
+//! cell combining every 8 member commits — and reports scheduler
+//! throughput in events/sec for each. The event count per run is
+//! deterministic (same spec + seed → same trace), so it is learned from a
+//! probe run and passed to the harness as `units_per_iter`.
+//!
+//! Guards the tier's hot-path cost: the aggregator path adds arrival /
+//! flush / apply events per member commit, but it must stay within 4× of
+//! the flat scheduler's events/sec — a larger gap means the fog tier's
+//! bookkeeping (buffer maps, flush queues) regressed into the hot path.
+//!
+//! `ADSP_BENCH_HIER_WORKERS` overrides the population (CI keeps the
+//! default; local profiling can push it up).
+
+use adsp::experiments::fig18::hier_spec;
+use adsp::run::{Backend, Run, RunReport};
+use adsp::sync::SyncModelKind;
+use adsp::util::BenchHarness;
+
+fn run_tier(n: usize, hierarchical: bool) -> RunReport {
+    Run::from_spec(hier_spec(SyncModelKind::Adsp, n, hierarchical))
+        .backend(Backend::Sim)
+        .execute()
+        .expect("fig18 sim run failed")
+}
+
+fn main() -> anyhow::Result<()> {
+    let h = BenchHarness::new("hierarchy").with_iters(1, 3);
+
+    let n: usize = std::env::var("ADSP_BENCH_HIER_WORKERS")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(1_000);
+
+    let mut events_per_sec: Vec<f64> = Vec::new();
+    for (hierarchical, label) in [(false, "hier_flat_1k_events"), (true, "hier_fog_1k_events")] {
+        let probe = run_tier(n, hierarchical);
+        let events = probe.events_processed();
+        assert!(events > 0, "{label}: run processed no events");
+        assert!(probe.total_commits > 0, "{label}: run never committed");
+        let stats = h.run_throughput(label, events, || run_tier(n, hierarchical).total_steps);
+        events_per_sec.push(events as f64 / stats.min_s);
+    }
+
+    let (flat, fog) = (events_per_sec[0], events_per_sec[1]);
+    assert!(
+        fog >= flat / 4.0,
+        "fog tier scheduler overhead exploded: {fog:.0} events/s vs {flat:.0} flat (> 4x drop)"
+    );
+    println!("flat -> fog at n={n}: {flat:.0} -> {fog:.0} events/s");
+
+    if let Some(path) = h.write_json()? {
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}

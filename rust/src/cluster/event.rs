@@ -45,6 +45,15 @@ pub enum ClusterEvent {
     /// cell member (in ascending worker order) once cohort membership is
     /// known, so the simulation hot path stays free of label lookups.
     CellCrash { t: f64, cell: String, restart_after: f64 },
+    /// The edge aggregator serving `cell` crashes at `t` and recovers
+    /// `restart_after` seconds later (hierarchical runs only — see
+    /// `HierarchySpec`). The crash is a cell-wide outage: buffered and
+    /// in-flight combined commits are lost (their member steps counted
+    /// into `wasted_steps` exactly once) and the cell's members stall or
+    /// fall back to the flat path per the spec's `AggDownMode` until the
+    /// aggregator returns. Sync policies are notified through
+    /// `on_cluster_change` at both the crash and the recovery.
+    AggregatorCrash { t: f64, cell: String, restart_after: f64 },
     /// PS shard `shard` fails at `t`. Commits block until failover
     /// completes `recover_after` seconds later by restoring the last
     /// checkpoint — a consistent cut, so *every* shard rolls back together
@@ -63,6 +72,7 @@ impl ClusterEvent {
             | ClusterEvent::BandwidthChange { t, .. }
             | ClusterEvent::WorkerCrash { t, .. }
             | ClusterEvent::CellCrash { t, .. }
+            | ClusterEvent::AggregatorCrash { t, .. }
             | ClusterEvent::ShardFailure { t, .. } => *t,
             ClusterEvent::CommBlackout { start, .. } => *start,
         }
@@ -79,6 +89,7 @@ impl ClusterEvent {
             ClusterEvent::CommBlackout { .. } => "blackout",
             ClusterEvent::WorkerCrash { .. } => "crash",
             ClusterEvent::CellCrash { .. } => "cell_crash",
+            ClusterEvent::AggregatorCrash { .. } => "aggregator_crash",
             ClusterEvent::ShardFailure { .. } => "shard_failure",
         }
     }
@@ -151,6 +162,12 @@ impl ClusterEvent {
                 ("cell", Json::str(cell.clone())),
                 ("restart_after", Json::num(*restart_after)),
             ]),
+            ClusterEvent::AggregatorCrash { t, cell, restart_after } => Json::obj(vec![
+                ("kind", Json::str(self.kind_name())),
+                ("t", Json::num(*t)),
+                ("cell", Json::str(cell.clone())),
+                ("restart_after", Json::num(*restart_after)),
+            ]),
             ClusterEvent::ShardFailure { t, shard, recover_after } => Json::obj(vec![
                 ("kind", Json::str(self.kind_name())),
                 ("t", Json::num(*t)),
@@ -209,6 +226,11 @@ impl ClusterEvent {
                 cell: v.req("cell")?.as_str()?.to_string(),
                 restart_after: v.req("restart_after")?.as_f64()?,
             },
+            "aggregator_crash" => ClusterEvent::AggregatorCrash {
+                t,
+                cell: v.req("cell")?.as_str()?.to_string(),
+                restart_after: v.req("restart_after")?.as_f64()?,
+            },
             "shard_failure" => ClusterEvent::ShardFailure {
                 t,
                 shard: v.req("shard")?.as_usize()?,
@@ -257,6 +279,11 @@ mod tests {
                 t: 450.0,
                 cell: "edge-a".to_string(),
                 restart_after: 15.0,
+            },
+            ClusterEvent::AggregatorCrash {
+                t: 470.0,
+                cell: "edge-a".to_string(),
+                restart_after: 25.0,
             },
             ClusterEvent::ShardFailure { t: 500.0, shard: 3, recover_after: 20.0 },
         ];

@@ -20,7 +20,10 @@
 
 use std::str::FromStr;
 
-use crate::config::{ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec};
+use crate::config::{
+    ClusterSpec, CohortLinkDist, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec,
+};
+use crate::hierarchy::{AggDownMode, CellAggSpec, FlushPolicy, HierarchySpec};
 use crate::network::{IngressDiscipline, LinkModel, NetworkSpec};
 use crate::sync::SyncModelKind;
 use crate::util::Rng;
@@ -94,6 +97,12 @@ pub struct EventMix {
     pub crash: u32,
     /// [`ClusterEvent::ShardFailure`] weight.
     pub shard: u32,
+    /// [`ClusterEvent::AggregatorCrash`] weight. Defaults to 0 because the
+    /// event is only valid against a spec whose `hierarchy` section
+    /// configures an aggregator for the crashed cell — hierarchy-aware
+    /// callers ([`random_fleet_spec`], tests) turn it on after attaching a
+    /// [`FuzzConfig::generate_hierarchy`] section.
+    pub agg_crash: u32,
 }
 
 impl Default for EventMix {
@@ -107,6 +116,7 @@ impl Default for EventMix {
             leave: 2,
             crash: 2,
             shard: 1,
+            agg_crash: 0,
         }
     }
 }
@@ -121,9 +131,10 @@ impl EventMix {
             + self.leave
             + self.crash
             + self.shard
+            + self.agg_crash
     }
 
-    /// Weighted draw of an event kind index (0..8, field order).
+    /// Weighted draw of an event kind index (0..9, field order).
     fn pick(&self, rng: &mut Rng) -> usize {
         let weights = [
             self.speed,
@@ -134,6 +145,7 @@ impl EventMix {
             self.leave,
             self.crash,
             self.shard,
+            self.agg_crash,
         ];
         let total = self.total().max(1);
         let mut roll = rng.below(total as usize) as u32;
@@ -248,6 +260,16 @@ impl FuzzConfig {
             self.cells.clone()
         };
         let mut shard_down_until = vec![0.0f64; self.shards];
+        // Distinct non-empty labels (first-seen order) — the cells a
+        // `generate_hierarchy` section aggregates, hence the only legal
+        // aggregator-crash targets.
+        let mut agg_labels: Vec<String> = Vec::new();
+        for c in &cell_of {
+            if !c.is_empty() && !agg_labels.contains(c) {
+                agg_labels.push(c.clone());
+            }
+        }
+        let mut agg_down: Vec<f64> = vec![0.0; agg_labels.len()];
 
         let mut events = Vec::with_capacity(n);
         for i in 0..n {
@@ -326,7 +348,7 @@ impl FuzzConfig {
                             });
                         }
                     }
-                    _ => {
+                    7 => {
                         // Bias toward shard 0 so fuzzed failures survive a
                         // shards→1 differential re-run unchanged.
                         let s = if self.shards == 1 || rng.below(2) == 0 {
@@ -340,6 +362,21 @@ impl FuzzConfig {
                                 shard: s,
                                 recover_after: (0.02 + 0.15 * rng.next_f64()) * self.horizon,
                             });
+                        }
+                    }
+                    _ => {
+                        // Aggregator crash on a labelled cell with no
+                        // outstanding outage (reachable only through a
+                        // non-zero `agg_crash` weight).
+                        if !agg_labels.is_empty() {
+                            let a = rng.below(agg_labels.len());
+                            if agg_down[a] <= t {
+                                emitted = Some(ClusterEvent::AggregatorCrash {
+                                    t,
+                                    cell: agg_labels[a].clone(),
+                                    restart_after: (0.02 + 0.15 * rng.next_f64()) * self.horizon,
+                                });
+                            }
                         }
                     }
                 }
@@ -366,6 +403,10 @@ impl FuzzConfig {
                 ClusterEvent::ShardFailure { t, shard, recover_after } => {
                     shard_down_until[*shard] = t + recover_after;
                 }
+                ClusterEvent::AggregatorCrash { t, cell, restart_after } => {
+                    let a = agg_labels.iter().position(|l| l == cell).unwrap();
+                    agg_down[a] = t + restart_after;
+                }
                 _ => {}
             }
             events.push(ev);
@@ -380,19 +421,6 @@ impl FuzzConfig {
     /// discipline for half the seeds. Deterministic per `(config, seed)`,
     /// on an RNG stream independent of [`FuzzConfig::generate`]'s.
     pub fn generate_network(&self, seed: u64) -> NetworkSpec {
-        fn draw_link(rng: &mut Rng) -> LinkModel {
-            LinkModel {
-                // Unbounded a quarter of the time; otherwise log-uniform
-                // over ~1e5..1e8 bytes/s (the BandwidthChange fuzz range).
-                bandwidth_bytes_per_sec: if rng.below(4) == 0 {
-                    0.0
-                } else {
-                    1e5 * 1000.0f64.powf(rng.next_f64())
-                },
-                latency_secs: 0.05 * rng.next_f64(),
-                jitter: if rng.below(2) == 0 { 0.0 } else { 0.3 * rng.next_f64() },
-            }
-        }
         let mut rng = Rng::new(seed ^ FUZZ_STREAM).split(0x9E7);
         let default_link = draw_link(&mut rng);
         let links = if rng.below(2) == 0 {
@@ -413,6 +441,56 @@ impl FuzzConfig {
             (0.0, IngressDiscipline::Fifo)
         };
         NetworkSpec { default_link, links, ingress_bytes_per_sec, ingress_discipline }
+    }
+
+    /// Seed-addressed random `hierarchy` section for this fleet shape: one
+    /// aggregator per distinct non-empty cell label (first-seen order —
+    /// the same order [`FuzzConfig::generate`] derives its legal
+    /// aggregator-crash targets in), random trunk links, overheads and
+    /// flush policies with per-cell overrides for some cells, and a drawn
+    /// passthrough flag and outage mode. Degenerate (no aggregators) when
+    /// the fleet has no labelled cells. Deterministic per
+    /// `(config, seed)`, on an RNG stream independent of the timeline's
+    /// and the network's.
+    pub fn generate_hierarchy(&self, seed: u64) -> HierarchySpec {
+        fn draw_flush(rng: &mut Rng, horizon: f64) -> FlushPolicy {
+            match rng.below(3) {
+                0 => FlushPolicy::EveryK(1 + rng.below(6)),
+                1 => FlushPolicy::IntervalSecs((0.01 + 0.1 * rng.next_f64()) * horizon),
+                // Log-uniform trunk budget over ~1e5..1e8 bytes/s.
+                _ => FlushPolicy::AdaptiveBudget {
+                    bytes_per_sec: 1e5 * 1000.0f64.powf(rng.next_f64()),
+                },
+            }
+        }
+        let mut h = HierarchySpec::default();
+        for c in &self.cells {
+            if !c.is_empty() && !h.cells.iter().any(|e| e.cell == *c) {
+                h.cells.push(CellAggSpec::new(c));
+            }
+        }
+        if h.cells.is_empty() || !self.horizon.is_finite() || self.horizon <= 0.0 {
+            return HierarchySpec::default();
+        }
+        let mut rng = Rng::new(seed ^ FUZZ_STREAM).split(0xA66);
+        h.default_link = draw_link(&mut rng);
+        h.default_comm_secs = 0.2 * rng.next_f64();
+        h.default_flush = Some(draw_flush(&mut rng, self.horizon));
+        h.passthrough = rng.below(4) == 0;
+        h.on_agg_down =
+            if rng.below(2) == 0 { AggDownMode::Stall } else { AggDownMode::Direct };
+        for i in 0..h.cells.len() {
+            if rng.below(2) == 0 {
+                h.cells[i].link = Some(draw_link(&mut rng));
+            }
+            if rng.below(3) == 0 {
+                h.cells[i].comm_secs = Some(0.3 * rng.next_f64());
+            }
+            if rng.below(3) == 0 {
+                h.cells[i].flush = Some(draw_flush(&mut rng, self.horizon));
+            }
+        }
+        h
     }
 
     /// A blackout whose window sits inside the horizon, targeting (a) the
@@ -449,6 +527,22 @@ impl FuzzConfig {
             (picked, None)
         };
         Some(ClusterEvent::CommBlackout { start: t, duration, workers, cell })
+    }
+}
+
+/// One random link draw, shared by the network and hierarchy generators:
+/// unbounded a quarter of the time; otherwise log-uniform bandwidth over
+/// ~1e5..1e8 bytes/s (the BandwidthChange fuzz range) with small latency
+/// and occasional jitter.
+fn draw_link(rng: &mut Rng) -> LinkModel {
+    LinkModel {
+        bandwidth_bytes_per_sec: if rng.below(4) == 0 {
+            0.0
+        } else {
+            1e5 * 1000.0f64.powf(rng.next_f64())
+        },
+        latency_secs: 0.05 * rng.next_f64(),
+        jitter: if rng.below(2) == 0 { 0.0 } else { 0.3 * rng.next_f64() },
     }
 }
 
@@ -513,13 +607,38 @@ pub fn random_fleet_spec(
     if rng.below(2) == 0 {
         spec.network = FuzzConfig::for_spec(&spec, intensity).generate_network(seed);
     }
-    spec.timeline = FuzzConfig::for_spec(&spec, intensity).generate(seed);
+    // A third draw cohort link *distributions* — but only when the network
+    // draw left no per-worker link table, since cohort expansion insists
+    // any existing table covers exactly the explicit workers.
+    if spec.network.links.is_empty() && rng.below(3) == 0 {
+        spec.cluster.cohorts[0].link = Some(CohortLinkDist {
+            bandwidth_bytes_per_sec: Dist::LogNormal {
+                median: 1e5 * 1000.0f64.powf(rng.next_f64()),
+                sigma: 0.2 + 0.3 * rng.next_f64(),
+            },
+            latency_secs: Dist::Uniform { lo: 0.0, hi: 0.01 + 0.04 * rng.next_f64() },
+            jitter: if rng.below(2) == 0 { 0.0 } else { 0.3 * rng.next_f64() },
+        });
+    }
+    // A third get a fog tier over the fleet's labelled cells (when any),
+    // with aggregator crashes joining the event mix. Every hierarchy draw
+    // comes after every pre-existing draw on this stream, so seeds that
+    // skip the tier reproduce their pre-fog spec unchanged.
+    let mut cfg = FuzzConfig::for_spec(&spec, intensity);
+    if rng.below(3) == 0 {
+        spec.hierarchy = cfg.generate_hierarchy(seed);
+        if spec.hierarchy.enabled() {
+            cfg.event_mix.agg_crash = 2;
+        }
+    }
+    spec.timeline = cfg.generate(seed);
     spec
 }
 
 /// The communication-free variant of a spec, for the shard-count
 /// differential oracle. The simulator's only shard-dependent timings are
-/// the one-way commit leg (`comm/2 × split_factor(S)`) and the PS apply
+/// the one-way commit leg (`comm/2 × split_factor(S)` — the aggregator
+/// trunk's propagation leg is striped the same way) and the PS apply
 /// service time (`ps_apply_secs × split_factor(S)`); zeroing every comm
 /// source makes a run's virtual-time trajectory independent of `S`, so
 /// `shards = S` must then reproduce `shards = 1` bit for bit. Shard
@@ -536,6 +655,12 @@ pub fn zero_comm_variant(spec: &ExperimentSpec) -> ExperimentSpec {
         c.comm_secs = Dist::Point(0.0);
     }
     out.ps_apply_secs = 0.0;
+    // Trunk link transfer times are shard-invariant (like worker
+    // bandwidth) and stay; only the propagation overhead is striped.
+    out.hierarchy.default_comm_secs = 0.0;
+    for c in &mut out.hierarchy.cells {
+        c.comm_secs = None;
+    }
     let events = out
         .timeline
         .events()
@@ -606,6 +731,7 @@ mod tests {
                 comm_secs: Dist::Point(0.2),
                 batch_size: 0,
                 cells: vec!["edge-a".into(), "edge-b".into()],
+                link: None,
             },
         ]);
         let cfg = FuzzConfig::for_cluster(&cluster, 2, 60.0, FuzzIntensity::Light);
@@ -690,12 +816,70 @@ mod tests {
     }
 
     #[test]
+    fn generated_hierarchies_validate_and_enable_agg_crashes() {
+        let mut cfg = FuzzConfig::for_cluster(&labelled_cluster(), 2, 120.0, FuzzIntensity::Heavy);
+        cfg.event_mix.agg_crash = 6; // loud, so seeds actually draw one
+        let mut saw_crash = false;
+        let mut saw_passthrough = false;
+        for seed in 0..30u64 {
+            let h = cfg.generate_hierarchy(seed);
+            assert!(h.enabled(), "seed {seed}: labelled fleet must aggregate");
+            h.validate(&cfg.cells).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            assert_eq!(h, cfg.generate_hierarchy(seed), "seed {seed} not deterministic");
+            saw_passthrough |= h.passthrough;
+            let tl = cfg.generate(seed);
+            tl.validate_full(cfg.workers, cfg.shards, &cfg.cells)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            for ev in tl.events() {
+                if let ClusterEvent::AggregatorCrash { cell, .. } = ev {
+                    saw_crash = true;
+                    assert!(
+                        h.cells.iter().any(|c| c.cell == *cell),
+                        "seed {seed}: crash targets unaggregated cell '{cell}'"
+                    );
+                }
+            }
+        }
+        assert!(saw_crash, "no seed in 0..30 drew an aggregator crash");
+        assert!(saw_passthrough, "no seed in 0..30 drew a passthrough tier");
+        // Unlabelled fleets get the degenerate section and, with the
+        // weight still on, never a crash event (it falls back).
+        let mut flat = FuzzConfig::new(3, 1, 60.0);
+        flat.event_mix.agg_crash = 6;
+        assert!(!flat.generate_hierarchy(1).enabled());
+        for seed in 0..10u64 {
+            assert!(!flat.generate(seed).has_aggregator_crash());
+        }
+    }
+
+    #[test]
+    fn random_fleet_spec_sometimes_draws_a_hierarchy() {
+        let mut saw_hier = false;
+        let mut saw_cohort_link = false;
+        for seed in 0..60u64 {
+            let spec = random_fleet_spec(seed, SyncModelKind::Adsp, FuzzIntensity::Light);
+            spec.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            if spec.hierarchy.enabled() {
+                saw_hier = true;
+            } else {
+                // Tier off ⇒ no aggregator crashes can be scripted.
+                assert!(!spec.timeline.has_aggregator_crash(), "seed {seed}");
+            }
+            saw_cohort_link |= spec.cluster.cohorts[0].link.is_some();
+        }
+        assert!(saw_hier, "no seed in 0..60 attached a hierarchy section");
+        assert!(saw_cohort_link, "no seed in 0..60 drew cohort link dists");
+    }
+
+    #[test]
     fn zero_comm_variant_strips_every_shard_dependent_timing() {
         let spec = random_fleet_spec(11, SyncModelKind::Bsp, FuzzIntensity::Heavy);
         let z = zero_comm_variant(&spec);
         assert!(z.cluster.workers.iter().all(|w| w.comm_secs == 0.0));
         assert!(z.cluster.cohorts.iter().all(|c| c.comm_secs == Dist::Point(0.0)));
         assert_eq!(z.ps_apply_secs, 0.0);
+        assert_eq!(z.hierarchy.default_comm_secs, 0.0);
+        assert!(z.hierarchy.cells.iter().all(|c| c.comm_secs.is_none()));
         for ev in z.timeline.events() {
             match ev {
                 ClusterEvent::CommChange { comm_secs, .. } => assert_eq!(*comm_secs, 0.0),

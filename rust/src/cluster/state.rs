@@ -10,6 +10,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::{ClusterSpec, WorkerSpec};
+use crate::hierarchy::HierarchySpec;
 use crate::network::{LinkModel, NetworkSpec};
 use crate::sync::{assign_batchtune_sizes, SyncModelKind, WorkerProgress, WorkerSlabs};
 
@@ -43,6 +44,16 @@ pub enum ClusterDelta {
         /// The crashed worker (stays a member — `active` is untouched).
         worker: usize,
         /// Virtual time the worker restarts.
+        until: f64,
+    },
+    /// Edge aggregator `agg` crashed; it recovers at `until`. The engine
+    /// drops the aggregator's buffered and in-flight combined commits
+    /// (wasting their member steps exactly once) and stalls or reroutes
+    /// the cell's members per the hierarchy spec's `AggDownMode`.
+    AggDown {
+        /// Index into the hierarchy spec's aggregator list.
+        agg: usize,
+        /// Virtual time the aggregator recovers.
         until: f64,
     },
     /// PS shard `shard` failed; failover completes at `until`. Commits
@@ -86,6 +97,14 @@ pub struct ClusterState {
     /// Commits stripe across every shard, so any entry in the future
     /// blocks all commit applies (see [`ClusterState::ps_down_until`]).
     pub shard_down: Vec<f64>,
+    /// Cell label per configured edge aggregator (empty = no hierarchy;
+    /// indices match the hierarchy spec's aggregator list).
+    pub agg_cells: Vec<String>,
+    /// Virtual time each aggregator's current outage lifts (`0.0` = up).
+    pub agg_down_until: Vec<f64>,
+    /// Which aggregator routes each worker's commits (`None` = the flat
+    /// worker→PS path; maintained across joins).
+    pub agg_of: Vec<Option<usize>>,
     /// The link handed to workers joining mid-run.
     default_link: LinkModel,
     b_default: usize,
@@ -133,6 +152,9 @@ impl ClusterState {
             down_until: vec![0.0; m],
             cells: cluster.cells(),
             shard_down: vec![0.0],
+            agg_cells: Vec::new(),
+            agg_down_until: Vec::new(),
+            agg_of: vec![None; m],
             default_link: LinkModel::unbounded(),
             b_default,
             available: available.to_vec(),
@@ -154,6 +176,33 @@ impl ClusterState {
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shard_down = vec![0.0; shards.max(1)];
         self
+    }
+
+    /// Install the hierarchical aggregation topology: one aggregator per
+    /// configured cell, and the worker→aggregator routing table (workers
+    /// in unconfigured cells keep the flat path). A disabled spec leaves
+    /// the state exactly as built.
+    pub fn with_hierarchy(mut self, hierarchy: &HierarchySpec) -> Self {
+        if !hierarchy.enabled() {
+            return self;
+        }
+        self.agg_cells = hierarchy.cells.iter().map(|c| c.cell.clone()).collect();
+        self.agg_down_until = vec![0.0; self.agg_cells.len()];
+        self.agg_of = (0..self.m()).map(|w| self.route_to_agg(&self.cells[w])).collect();
+        self
+    }
+
+    /// The aggregator index serving a cell label, if any.
+    fn route_to_agg(&self, cell: &str) -> Option<usize> {
+        if cell.is_empty() {
+            return None;
+        }
+        self.agg_cells.iter().position(|c| c == cell)
+    }
+
+    /// True while aggregator `a` is inside a crash outage.
+    pub fn agg_down(&self, a: usize, now: f64) -> bool {
+        self.agg_down_until[a] > now
     }
 
     /// The virtual time worker `w`'s commit may actually depart: `now`,
@@ -289,6 +338,7 @@ impl ClusterState {
                 self.blackout_until.push(0.0);
                 self.down_until.push(0.0);
                 self.cells.push(spec.cell.clone());
+                self.agg_of.push(self.route_to_agg(&spec.cell));
                 Ok(ClusterDelta::Joined(self.m() - 1))
             }
             ClusterEvent::WorkerLeave { worker, .. } => {
@@ -368,6 +418,26 @@ impl ClusterState {
                     "cell_crash '{cell}' reached the live cluster unexpanded; run the spec \
                      through ExperimentSpec::expanded first"
                 );
+            }
+            ClusterEvent::AggregatorCrash { t, cell, restart_after } => {
+                let Some(a) = self.agg_cells.iter().position(|c| c == cell) else {
+                    bail!(
+                        "aggregator_crash targets cell '{cell}' but no aggregator serves it \
+                         (was `with_hierarchy` applied?)"
+                    );
+                };
+                if !restart_after.is_finite() || *restart_after <= 0.0 {
+                    bail!("aggregator restart_after must be positive, got {restart_after}");
+                }
+                if self.agg_down_until[a] > *t {
+                    bail!(
+                        "aggregator '{cell}' crashed at t={t} but is already down until {:.1}",
+                        self.agg_down_until[a]
+                    );
+                }
+                let until = t + restart_after;
+                self.agg_down_until[a] = until;
+                Ok(ClusterDelta::AggDown { agg: a, until })
             }
             ClusterEvent::ShardFailure { t, shard, recover_after } => {
                 if *shard >= self.shard_down.len() {
@@ -685,6 +755,69 @@ mod tests {
                 cell: Some("edge-z".to_string()),
             })
             .is_ok());
+    }
+
+    #[test]
+    fn hierarchy_routes_cells_and_tracks_agg_outages() {
+        use crate::hierarchy::{CellAggSpec, HierarchySpec};
+        let mut spec_cluster = cluster();
+        spec_cluster.workers[0].cell = "edge-a".to_string();
+        spec_cluster.workers[2].cell = "edge-b".to_string();
+        let hier = HierarchySpec {
+            cells: vec![CellAggSpec::new("edge-a"), CellAggSpec::new("edge-b")],
+            ..HierarchySpec::default()
+        };
+        let mut s = ClusterState::new(&spec_cluster, SyncModelKind::Adsp, 32, &[32])
+            .with_hierarchy(&hier);
+        // Worker 1 has no cell → flat path.
+        assert_eq!(s.agg_of, vec![Some(0), None, Some(1)]);
+        assert!(!s.agg_down(0, 5.0));
+        let ev = ClusterEvent::AggregatorCrash {
+            t: 10.0,
+            cell: "edge-a".to_string(),
+            restart_after: 20.0,
+        };
+        assert_eq!(s.apply_event(&ev).unwrap(), ClusterDelta::AggDown { agg: 0, until: 30.0 });
+        assert!(s.agg_down(0, 15.0));
+        assert!(!s.agg_down(0, 30.0));
+        assert!(!s.agg_down(1, 15.0));
+        // Overlapping outage on one aggregator rejected; later one fine.
+        assert!(s
+            .apply_event(&ClusterEvent::AggregatorCrash {
+                t: 20.0,
+                cell: "edge-a".to_string(),
+                restart_after: 5.0,
+            })
+            .is_err());
+        assert!(s
+            .apply_event(&ClusterEvent::AggregatorCrash {
+                t: 40.0,
+                cell: "edge-a".to_string(),
+                restart_after: 5.0,
+            })
+            .is_ok());
+        // Unserved cell rejected.
+        assert!(s
+            .apply_event(&ClusterEvent::AggregatorCrash {
+                t: 50.0,
+                cell: "edge-z".to_string(),
+                restart_after: 5.0,
+            })
+            .is_err());
+        // A joiner into a served cell routes through its aggregator.
+        let mut joiner = WorkerSpec::new(1.0, 0.1);
+        joiner.cell = "edge-b".to_string();
+        s.apply_event(&ClusterEvent::WorkerJoin { t: 60.0, spec: joiner }).unwrap();
+        assert_eq!(s.agg_of[3], Some(1));
+        // Without a hierarchy, the crash event is rejected outright.
+        let mut flat = ClusterState::new(&cluster(), SyncModelKind::Adsp, 32, &[32]);
+        assert!(flat
+            .apply_event(&ClusterEvent::AggregatorCrash {
+                t: 1.0,
+                cell: "edge-a".to_string(),
+                restart_after: 5.0,
+            })
+            .is_err());
     }
 
     #[test]

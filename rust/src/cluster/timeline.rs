@@ -56,8 +56,8 @@ impl ClusterTimeline {
             .count()
     }
 
-    /// True when the script contains any fault event (worker crash or PS
-    /// shard failure) — engines then seed their checkpoint store so
+    /// True when the script contains any fault event (worker, aggregator
+    /// or PS shard failure) — engines then seed their checkpoint store so
     /// failover always has a consistent cut to restore.
     pub fn has_fault_events(&self) -> bool {
         self.events.iter().any(|e| {
@@ -65,9 +65,18 @@ impl ClusterTimeline {
                 e,
                 ClusterEvent::WorkerCrash { .. }
                     | ClusterEvent::CellCrash { .. }
+                    | ClusterEvent::AggregatorCrash { .. }
                     | ClusterEvent::ShardFailure { .. }
             )
         })
+    }
+
+    /// True when the script crashes any edge aggregator. A zero-cost
+    /// passthrough hierarchy with aggregator crashes is *not* degenerate
+    /// (the outage changes behaviour), so engines consult this before
+    /// eliding the tier.
+    pub fn has_aggregator_crash(&self) -> bool {
+        self.events.iter().any(|e| matches!(e, ClusterEvent::AggregatorCrash { .. }))
     }
 
     /// Check the script against the evolving membership it creates:
@@ -107,6 +116,7 @@ impl ClusterTimeline {
         // detection; 0.0 = none).
         let mut worker_down = vec![0.0f64; initial_m];
         let mut shard_down: Vec<(usize, f64)> = Vec::new();
+        let mut agg_down: Vec<(String, f64)> = Vec::new();
         for (i, ev) in self.events.iter().enumerate() {
             let t = ev.t();
             if !t.is_finite() || t < 0.0 {
@@ -211,6 +221,31 @@ impl ClusterTimeline {
                         "timeline event {i}: cell_crash '{cell}' must be expanded to \
                          per-worker crashes (run the spec through ExperimentSpec::expanded)"
                     );
+                }
+                ClusterEvent::AggregatorCrash { t, cell, restart_after } => {
+                    if cell.is_empty() {
+                        bail!("timeline event {i}: aggregator_crash cell name must be non-empty");
+                    }
+                    if !restart_after.is_finite() || *restart_after <= 0.0 {
+                        bail!(
+                            "timeline event {i}: aggregator restart_after must be positive, \
+                             got {restart_after}"
+                        );
+                    }
+                    // Whether `cell` actually has a configured aggregator is
+                    // a hierarchy-spec question — `ExperimentSpec::validate`
+                    // cross-checks it; here we only catch overlapping
+                    // outages on one aggregator.
+                    if let Some((_, until)) = agg_down.iter().find(|(c, _)| c == cell) {
+                        if *until > *t {
+                            bail!(
+                                "timeline event {i}: aggregator '{cell}' is already down \
+                                 until {until:.1} at t={t}"
+                            );
+                        }
+                    }
+                    agg_down.retain(|(c, _)| c != cell);
+                    agg_down.push((cell.clone(), t + restart_after));
                 }
                 ClusterEvent::ShardFailure { t, shard, recover_after } => {
                     if shards != usize::MAX && *shard >= shards {
@@ -413,6 +448,37 @@ mod tests {
             ClusterEvent::ShardFailure { t: 20.0, shard: 1, recover_after: 5.0 },
         ]);
         assert!(shard_overlap.validate_full(2, 4, &[]).is_err());
+    }
+
+    #[test]
+    fn validate_checks_aggregator_crashes() {
+        let crash = |t: f64, cell: &str, after: f64| ClusterEvent::AggregatorCrash {
+            t,
+            cell: cell.to_string(),
+            restart_after: after,
+        };
+        // Well-formed crashes pass (hierarchy membership is checked at the
+        // spec level, not here).
+        let ok = ClusterTimeline::new(vec![crash(10.0, "edge-a", 5.0)]);
+        assert!(ok.validate(2).is_ok());
+        assert!(ok.has_fault_events());
+        assert!(ok.has_aggregator_crash());
+        assert!(!ClusterTimeline::default().has_aggregator_crash());
+        // Empty cell name / non-positive restart window.
+        assert!(ClusterTimeline::new(vec![crash(10.0, "", 5.0)]).validate(2).is_err());
+        assert!(ClusterTimeline::new(vec![crash(10.0, "edge-a", 0.0)]).validate(2).is_err());
+        // Overlapping outages on one aggregator; different cells are fine.
+        let overlap = ClusterTimeline::new(vec![
+            crash(10.0, "edge-a", 30.0),
+            crash(20.0, "edge-a", 5.0),
+        ]);
+        assert!(overlap.validate(2).is_err());
+        let disjoint = ClusterTimeline::new(vec![
+            crash(10.0, "edge-a", 30.0),
+            crash(20.0, "edge-b", 5.0),
+            crash(50.0, "edge-a", 5.0),
+        ]);
+        assert!(disjoint.validate(2).is_ok());
     }
 
     #[test]

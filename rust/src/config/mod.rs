@@ -5,4 +5,6 @@ pub mod profiles;
 pub mod spec;
 
 pub use profiles::{ec2_cluster, geekbench_cluster, ratio_cluster, scale_speeds_to_heterogeneity};
-pub use spec::{ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec};
+pub use spec::{
+    ClusterSpec, CohortLinkDist, CohortSpec, Dist, ExperimentSpec, SyncSpec, WorkerSpec,
+};

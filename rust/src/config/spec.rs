@@ -8,7 +8,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{ClusterEvent, ClusterTimeline};
 use crate::fault::FaultSpec;
-use crate::network::NetworkSpec;
+use crate::hierarchy::HierarchySpec;
+use crate::network::{LinkModel, NetworkSpec};
 use crate::sync::SyncModelKind;
 use crate::util::{Json, Rng};
 
@@ -126,6 +127,65 @@ impl Dist {
     }
 }
 
+/// Per-cohort link-attribute distributions: each member draws its own
+/// [`LinkModel`] so fig17/fig18-style fleets can stress the network layer
+/// without writing out a million link entries. Point distributions with
+/// the degenerate values reproduce explicit links bit for bit (and, like
+/// every `Point`, never touch the RNG stream).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CohortLinkDist {
+    /// Link bandwidth distribution in bytes/s (`0` = unbounded).
+    pub bandwidth_bytes_per_sec: Dist,
+    /// One-way link latency distribution in seconds.
+    pub latency_secs: Dist,
+    /// Multiplicative transfer-time jitter amplitude shared by every
+    /// member link (a point value — jitter is already a randomization).
+    pub jitter: f64,
+}
+
+impl CohortLinkDist {
+    fn validate(&self) -> Result<()> {
+        self.bandwidth_bytes_per_sec.validate("link bandwidth")?;
+        self.latency_secs.validate("link latency")?;
+        if !self.jitter.is_finite() || !(0.0..1.0).contains(&self.jitter) {
+            bail!("cohort link jitter must be in [0,1), got {}", self.jitter);
+        }
+        Ok(())
+    }
+
+    /// Draw one member's link (bandwidth first, then latency — the pinned
+    /// order; see [`ExperimentSpec::expanded`]).
+    fn sample(&self, rng: &mut Rng) -> LinkModel {
+        LinkModel {
+            bandwidth_bytes_per_sec: self.bandwidth_bytes_per_sec.sample(rng),
+            latency_secs: self.latency_secs.sample(rng),
+            jitter: self.jitter,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bandwidth_bytes_per_sec", self.bandwidth_bytes_per_sec.to_json()),
+            ("latency_secs", self.latency_secs.to_json()),
+            ("jitter", Json::num(self.jitter)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(CohortLinkDist {
+            bandwidth_bytes_per_sec: match v.get("bandwidth_bytes_per_sec") {
+                Some(d) => Dist::from_json(d).context("parsing cohort link bandwidth")?,
+                None => Dist::Point(0.0),
+            },
+            latency_secs: match v.get("latency_secs") {
+                Some(d) => Dist::from_json(d).context("parsing cohort link latency")?,
+                None => Dist::Point(0.0),
+            },
+            jitter: v.f64_or("jitter", 0.0)?,
+        })
+    }
+}
+
 /// A fleet cohort: `count` workers drawn from shared distributions
 /// instead of written out one JSON object each — the only way a 1M-device
 /// spec stays human-sized. [`ExperimentSpec::expanded`] turns each cohort
@@ -145,12 +205,17 @@ pub struct CohortSpec {
     /// `cells[i % cells.len()]`); empty = ungrouped. Cell-targeted
     /// blackout/crash events can then drop one slice of the cohort.
     pub cells: Vec<String>,
+    /// Per-member link distributions; `None` = members inherit the
+    /// network section's `default_link` (no RNG draws). When any cohort
+    /// carries one, [`ExperimentSpec::expanded`] materializes the full
+    /// per-worker `network.links` table.
+    pub link: Option<CohortLinkDist>,
 }
 
 impl CohortSpec {
     /// A cohort of `count` members drawn from `speed` and `comm_secs`.
     pub fn new(count: usize, speed: Dist, comm_secs: Dist) -> Self {
-        CohortSpec { count, speed, comm_secs, batch_size: 0, cells: Vec::new() }
+        CohortSpec { count, speed, comm_secs, batch_size: 0, cells: Vec::new(), link: None }
     }
 
     fn validate(&self) -> Result<()> {
@@ -159,6 +224,9 @@ impl CohortSpec {
         }
         self.speed.validate("speed")?;
         self.comm_secs.validate("comm_secs")?;
+        if let Some(link) = &self.link {
+            link.validate()?;
+        }
         Ok(())
     }
 
@@ -174,6 +242,9 @@ impl CohortSpec {
                 "cells",
                 Json::Arr(self.cells.iter().map(|c| Json::str(c.clone())).collect()),
             ));
+        }
+        if let Some(link) = &self.link {
+            pairs.push(("link", link.to_json()));
         }
         Json::obj(pairs)
     }
@@ -195,6 +266,11 @@ impl CohortSpec {
                     .collect::<Result<_>>()?,
                 None => Vec::new(),
             },
+            link: v
+                .get("link")
+                .map(CohortLinkDist::from_json)
+                .transpose()
+                .context("parsing cohort link")?,
         })
     }
 }
@@ -376,6 +452,12 @@ pub struct ExperimentSpec {
     /// `timeline`. The default is degenerate (checkpointing off) and
     /// bit-identical to the pre-fault behaviour.
     pub fault: FaultSpec,
+    /// Hierarchical fog aggregation (`hierarchy` subsystem): per-cell
+    /// edge aggregators between the workers and the global PS. The
+    /// default has no aggregators; it — and any zero-cost passthrough
+    /// section without aggregator crashes — is bit-identical to the flat
+    /// runs (both engines elide the tier).
+    pub hierarchy: HierarchySpec,
     /// Largest population for which the report materializes the
     /// per-worker `workers` vector; above it the report carries only the
     /// streaming aggregates (`breakdown`, `bytes_total`, totals), keeping
@@ -410,6 +492,7 @@ impl ExperimentSpec {
             timeline: ClusterTimeline::default(),
             network: NetworkSpec::default(),
             fault: FaultSpec::default(),
+            hierarchy: HierarchySpec::default(),
             worker_metrics_cap: 4096,
         }
     }
@@ -514,6 +597,10 @@ impl ExperimentSpec {
         if let Some(f) = v.get("fault") {
             spec.fault = FaultSpec::from_json(f).context("parsing fault section")?;
         }
+        if let Some(h) = v.get("hierarchy") {
+            spec.hierarchy =
+                HierarchySpec::from_json(h).context("parsing hierarchy section")?;
+        }
         spec.worker_metrics_cap =
             v.usize_or("worker_metrics_cap", spec.worker_metrics_cap)?;
         spec.validate()?;
@@ -594,6 +681,7 @@ impl ExperimentSpec {
             ("timeline", self.timeline.to_json()),
             ("network", self.network.to_json()),
             ("fault", self.fault.to_json()),
+            ("hierarchy", self.hierarchy.to_json()),
             ("worker_metrics_cap", Json::num(self.worker_metrics_cap as f64)),
         ])
     }
@@ -635,14 +723,37 @@ impl ExperimentSpec {
         let mut spec = self.clone();
         let cohorts = std::mem::take(&mut spec.cluster.cohorts);
         spec.cluster.workers.reserve(cohorts.iter().map(|c| c.count).sum());
+        // A cohort with link distributions needs the per-worker link table
+        // materialized; explicit workers keep their entries (or inherit
+        // the default link when none were written out).
+        let draws_links = cohorts.iter().any(|c| c.link.is_some());
+        if draws_links {
+            let explicit_m = spec.cluster.workers.len();
+            if spec.network.links.is_empty() {
+                spec.network.links = vec![spec.network.default_link.clone(); explicit_m];
+            } else if spec.network.links.len() != explicit_m {
+                bail!(
+                    "network.links must cover exactly the explicit workers when cohorts \
+                     draw links (got {} links for {explicit_m} explicit workers)",
+                    spec.network.links.len()
+                );
+            }
+        }
         for (ci, cohort) in cohorts.iter().enumerate() {
             cohort.validate()?;
             let mut rng = Rng::new(self.seed ^ COHORT_STREAM).split(ci as u64 + 1);
             for i in 0..cohort.count {
-                // Fixed draw order (speed, then comm) so adding point
-                // attributes later cannot silently reshuffle the fleet.
+                // Fixed draw order (speed, then comm, then the optional
+                // link's bandwidth and latency) so adding point attributes
+                // later cannot silently reshuffle the fleet.
                 let speed = cohort.speed.sample(&mut rng);
                 let comm_secs = cohort.comm_secs.sample(&mut rng);
+                if draws_links {
+                    spec.network.links.push(match &cohort.link {
+                        Some(link) => link.sample(&mut rng),
+                        None => spec.network.default_link.clone(),
+                    });
+                }
                 let cell = if cohort.cells.is_empty() {
                     String::new()
                 } else {
@@ -723,8 +834,23 @@ impl ExperimentSpec {
             bail!("ps_apply_secs must be non-negative");
         }
         self.fault.validate()?;
-        self.timeline.validate_full(self.cluster.m(), self.shards, &self.cluster.cells())?;
+        let cells = self.cluster.cells();
+        self.timeline.validate_full(self.cluster.m(), self.shards, &cells)?;
         self.network.validate(self.cluster.m())?;
+        self.hierarchy.validate(&cells)?;
+        // Aggregator crashes must target a cell with a configured
+        // aggregator (the live state rejects them too; catching it here
+        // gives a load-time error instead of a mid-run one).
+        for (i, ev) in self.timeline.events().iter().enumerate() {
+            if let ClusterEvent::AggregatorCrash { cell, .. } = ev {
+                if !self.hierarchy.cells.iter().any(|c| c.cell == *cell) {
+                    bail!(
+                        "timeline event {i}: aggregator_crash targets cell '{cell}' but the \
+                         hierarchy section configures no aggregator for it"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -937,6 +1063,7 @@ mod tests {
                     comm_secs: Dist::Uniform { lo: 0.1, hi: 0.5 },
                     batch_size: 64,
                     cells: vec!["cell-a".into(), "cell-b".into()],
+                    link: None,
                 },
                 CohortSpec::new(10, Dist::Point(2.0), Dist::Point(0.3)),
             ]),
@@ -988,6 +1115,7 @@ mod tests {
                     comm_secs: Dist::Point(0.2),
                     batch_size: 0,
                     cells: vec!["edge-a".into(), "edge-b".into()],
+                    link: None,
                 },
             ]),
             SyncSpec::new(SyncModelKind::Adsp),
@@ -1060,6 +1188,126 @@ mod tests {
         assert_eq!(parsed.cluster.cohorts[0].speed, Dist::Point(1.0));
         assert_eq!(parsed.cluster.cohorts[0].comm_secs, Dist::Point(0.2));
         assert_eq!(parsed.expanded().unwrap().unwrap().cluster.m(), 4);
+    }
+
+    #[test]
+    fn hierarchy_section_roundtrips_and_validates_through_spec() {
+        use crate::cluster::ClusterEvent;
+        use crate::hierarchy::{AggDownMode, CellAggSpec, FlushPolicy, HierarchySpec};
+        use crate::network::LinkModel;
+        let mut workers = vec![WorkerSpec::new(1.0, 0.2), WorkerSpec::new(0.5, 0.3)];
+        workers[0].cell = "edge-a".to_string();
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(workers),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        // Absent section stays disabled through a round trip.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert!(!back.hierarchy.enabled());
+        spec.hierarchy = HierarchySpec {
+            cells: vec![CellAggSpec {
+                cell: "edge-a".into(),
+                link: Some(LinkModel::with_bandwidth(1e6)),
+                comm_secs: Some(0.4),
+                flush: Some(FlushPolicy::EveryK(4)),
+            }],
+            default_comm_secs: 0.1,
+            on_agg_down: AggDownMode::Direct,
+            ..HierarchySpec::default()
+        };
+        spec.validate().unwrap();
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.hierarchy, spec.hierarchy);
+        // An aggregator for a cell no worker carries is rejected.
+        spec.hierarchy.cells[0].cell = "edge-z".into();
+        assert!(spec.validate().is_err());
+        spec.hierarchy.cells[0].cell = "edge-a".into();
+        // Aggregator crashes must target a configured aggregator.
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::AggregatorCrash {
+            t: 30.0,
+            cell: "edge-a".to_string(),
+            restart_after: 10.0,
+        }]);
+        spec.validate().unwrap();
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::AggregatorCrash {
+            t: 30.0,
+            cell: "edge-b".to_string(),
+            restart_after: 10.0,
+        }]);
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn cohort_link_dists_materialize_the_link_table() {
+        use crate::network::LinkModel;
+        let mut spec = ExperimentSpec::new(
+            "mlp_quick",
+            ClusterSpec::new(vec![WorkerSpec::new(1.0, 0.2)]).with_cohorts(vec![
+                CohortSpec {
+                    count: 6,
+                    speed: Dist::Point(1.0),
+                    comm_secs: Dist::Point(0.2),
+                    batch_size: 0,
+                    cells: Vec::new(),
+                    link: Some(CohortLinkDist {
+                        bandwidth_bytes_per_sec: Dist::Uniform { lo: 1e5, hi: 1e6 },
+                        latency_secs: Dist::Point(0.01),
+                        jitter: 0.0,
+                    }),
+                },
+                CohortSpec::new(2, Dist::Point(2.0), Dist::Point(0.3)),
+            ]),
+            SyncSpec::new(SyncModelKind::Adsp),
+        );
+        spec.seed = 11;
+        spec.network.default_link = LinkModel::with_bandwidth(5e5);
+        // Cohort links survive the JSON round trip un-expanded.
+        let back = ExperimentSpec::from_json_str(&spec.to_json().dump_pretty()).unwrap();
+        assert_eq!(back.cluster.cohorts, spec.cluster.cohorts);
+        let ex = spec.expanded().unwrap().unwrap();
+        ex.validate().unwrap();
+        // One link per worker: explicit worker and the link-less cohort
+        // get the default; the drawing cohort gets sampled bandwidths.
+        assert_eq!(ex.network.links.len(), 9);
+        assert_eq!(ex.network.links[0].bandwidth_bytes_per_sec, 5e5);
+        assert!(ex.network.links[1..=6]
+            .iter()
+            .all(|l| (1e5..=1e6).contains(&l.bandwidth_bytes_per_sec)));
+        assert!((ex.network.links[1].latency_secs - 0.01).abs() < 1e-12);
+        assert_eq!(ex.network.links[7].bandwidth_bytes_per_sec, 5e5);
+        // Deterministic per seed.
+        let ex2 = back.expanded().unwrap().unwrap();
+        assert_eq!(ex2.network.links, ex.network.links);
+        // Point link dists reproduce an explicit link table exactly, and
+        // the speed/comm draws are untouched by the link draws (Point
+        // never samples).
+        let mut point = spec.clone();
+        point.cluster.cohorts[0].link = Some(CohortLinkDist {
+            bandwidth_bytes_per_sec: Dist::Point(2.5e5),
+            latency_secs: Dist::Point(0.02),
+            jitter: 0.1,
+        });
+        let exp = point.expanded().unwrap().unwrap();
+        assert!(exp.network.links[1..=6].iter().all(|l| {
+            *l == LinkModel {
+                bandwidth_bytes_per_sec: 2.5e5,
+                latency_secs: 0.02,
+                jitter: 0.1,
+            }
+        }));
+        for (a, b) in ex.cluster.workers.iter().zip(&exp.cluster.workers) {
+            assert_eq!(a, b);
+        }
+        // Bad jitter rejected.
+        point.cluster.cohorts[0].link.as_mut().unwrap().jitter = 1.5;
+        assert!(point.validate().is_err());
+        // An explicit link table of the wrong arity is rejected when
+        // cohorts draw links.
+        let mut mismatched = spec.clone();
+        mismatched.network.links =
+            vec![LinkModel::unbounded(), LinkModel::unbounded()];
+        assert!(mismatched.expanded().is_err());
     }
 
     #[test]

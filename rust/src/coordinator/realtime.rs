@@ -34,6 +34,18 @@
 //! model is a simulator-side concept — here real thread scheduling plays
 //! that role.
 //!
+//! **Hierarchy** (`spec.hierarchy`, see `crate::hierarchy`): each
+//! configured cell gets an edge-aggregator *relay thread* between its
+//! member workers and the PS drain. Members send their commits to the
+//! relay, which buffers them under the cell's flush policy, sleeps one
+//! emulated trunk transfer per flush, and forwards the member messages
+//! upstream; replies flow straight back over each message's own channel.
+//! Degenerate sections elide the tier under the same conditions as the
+//! simulator. An aggregator crash here is a *soft* outage — the relay
+//! holds (`Stall`) or flat-forwards (`Direct`) its traffic, but never
+//! loses it — where the simulator models hard state loss; DESIGN.md
+//! §Hierarchy records the difference.
+//!
 //! `time_scale` compresses virtual seconds into wall seconds (0.02 → a
 //! 60-second check period passes in 1.2 s) so examples finish quickly while
 //! preserving every rate *ratio*.
@@ -48,6 +60,7 @@ use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::make_source;
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
+use crate::hierarchy::{AggDownMode, Aggregator, FlushDecision};
 use crate::metrics::{Breakdown, ConvergenceDetector, WorkerMetrics};
 use crate::obs::{
     AttributionLedger, ObsHub, Span, SpanId, SpanPhase, SpanState, SpanTrack, TimeClass,
@@ -194,6 +207,18 @@ impl RealtimeEngine {
             ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
                 .with_network(&spec.network)
                 .with_shards(spec.shards);
+        // The aggregation tier is elided under the same conditions as the
+        // simulator: disabled sections, and zero-cost passthrough with no
+        // aggregator crash in the timeline (see `SimEngine::new`).
+        let hier_active = spec.hierarchy.enabled()
+            && !(spec.hierarchy.is_zero_cost_passthrough()
+                && !spec.timeline.has_aggregator_crash());
+        let cluster_state = if hier_active {
+            cluster_state.with_hierarchy(&spec.hierarchy)
+        } else {
+            cluster_state
+        };
+        let agg_of = cluster_state.agg_of.clone();
         let batch_sizes = cluster_state.batch_sizes.clone();
         let k_variants = probe.manifest.k_variants(cluster_state.b_default());
         let init = probe.init_params()?;
@@ -243,11 +268,48 @@ impl RealtimeEngine {
         let init_seed = if fault_active { Some(init.clone()) } else { None };
 
         let outcome = std::thread::scope(|scope| -> Result<RunReport> {
+            // ---------------- edge aggregator relays ----------------
+            // One relay thread per hierarchy cell; members send to the
+            // relay's channel instead of the PS drain, and the relay
+            // forwards flushed batches to `commit_tx` (one emulated trunk
+            // transfer per flush).
+            let agg_txs: Vec<mpsc::Sender<CommitMsg>> = if hier_active {
+                (0..spec.hierarchy.cells.len())
+                    .map(|a| {
+                        let (tx, rx) = mpsc::channel::<CommitMsg>();
+                        let agg = Aggregator::from_spec(&spec.hierarchy, a);
+                        let shared2 = shared.clone();
+                        let out = commit_tx.clone();
+                        let mode = spec.hierarchy.on_agg_down;
+                        let seed = spec.seed;
+                        scope.spawn(move || {
+                            agg_relay_loop(
+                                a,
+                                agg,
+                                rx,
+                                out,
+                                shared2,
+                                scale,
+                                bytes_per_commit,
+                                mode,
+                                seed,
+                            );
+                        });
+                        tx
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+
             // ---------------- worker threads ----------------
             for w in 0..m {
                 let spec = spec.clone();
                 let shared = shared.clone();
-                let commit_tx = commit_tx.clone();
+                let commit_tx = match agg_of.get(w).copied().flatten() {
+                    Some(a) => agg_txs[a].clone(),
+                    None => commit_tx.clone(),
+                };
                 scope.spawn(move || {
                     if let Err(e) =
                         worker_loop(w, &spec, scale, shared.clone(), commit_tx, None, 0)
@@ -316,6 +378,9 @@ impl RealtimeEngine {
                 _ => f64::INFINITY,
             };
             let mut pending_restarts: Vec<(f64, usize)> = Vec::new();
+            // Aggregator outage ends still owed a policy re-notification
+            // (the relay threads watch `agg_down_until` themselves).
+            let mut pending_agg_restarts: Vec<f64> = Vec::new();
             let mut ps_down_until = 0.0f64;
             let mut ps_recover_pending = false;
             // Fault/report counters the unified RunReport surfaces: lost
@@ -402,7 +467,14 @@ impl RealtimeEngine {
                             let boot = ps.snapshot();
                             let spec2 = spec.clone();
                             let shared2 = shared.clone();
-                            let tx = spawn_tx.clone().expect("join without spawn_tx");
+                            // A joiner landing in a hierarchical cell
+                            // routes through that cell's relay.
+                            let joined_agg =
+                                shared.cluster.lock().unwrap().agg_of.get(wj).copied().flatten();
+                            let tx = match joined_agg {
+                                Some(a) => agg_txs[a].clone(),
+                                None => spawn_tx.clone().expect("join without spawn_tx"),
+                            };
                             scope.spawn(move || {
                                 if let Err(e) = worker_loop(
                                     wj,
@@ -443,6 +515,18 @@ impl RealtimeEngine {
                             );
                             if let Some(h) = &hub {
                                 h.inc("fault/worker_crashes");
+                            }
+                        }
+                        ClusterDelta::AggDown { agg, until } => {
+                            // The relay thread reads `agg_down_until` on
+                            // its own loop and holds (Stall) or
+                            // flat-forwards (Direct) its traffic; the
+                            // scheduler only owes the policy notifications
+                            // on both edges of the outage.
+                            let _ = agg;
+                            pending_agg_restarts.push(until);
+                            if let Some(h) = &hub {
+                                h.inc("hierarchy/agg_crashes");
                             }
                         }
                         ClusterDelta::ShardDown { shard: _, until } => {
@@ -520,7 +604,12 @@ impl RealtimeEngine {
                         let boot = ps.snapshot();
                         let spec2 = spec.clone();
                         let shared2 = shared.clone();
-                        let tx = spawn_tx.clone().expect("restart without spawn_tx");
+                        let restart_agg =
+                            shared.cluster.lock().unwrap().agg_of.get(wr).copied().flatten();
+                        let tx = match restart_agg {
+                            Some(a) => agg_txs[a].clone(),
+                            None => spawn_tx.clone().expect("restart without spawn_tx"),
+                        };
                         let generation = crash_gen[wr];
                         scope.spawn(move || {
                             if let Err(e) = worker_loop(
@@ -540,6 +629,21 @@ impl RealtimeEngine {
                             h.inc("fault/worker_restarts");
                             let data = vec![("worker", Json::Num(wr as f64))];
                             h.event(now_v, "worker_restart", data);
+                        }
+                        shared.with_view(now_v, |p, v| p.on_cluster_change(v));
+                    }
+                }
+
+                // Aggregator outage ends: re-notify the policy once the
+                // cell reconnects (mirrors the blackout lift; the relay
+                // itself resumes flushing off the shared cluster state).
+                if !pending_agg_restarts.is_empty() {
+                    let before = pending_agg_restarts.len();
+                    pending_agg_restarts.retain(|&t| t > now_v);
+                    if pending_agg_restarts.len() != before {
+                        if let Some(h) = &hub {
+                            h.inc("hierarchy/agg_restarts");
+                            h.event(now_v, "agg_restart", vec![]);
                         }
                         shared.with_view(now_v, |p, v| p.on_cluster_change(v));
                     }
@@ -841,6 +945,180 @@ fn take_checkpoint(
         let data = vec![("version", Json::Num(report_version as f64))];
         h.event(now_v, "checkpoint", data);
     }
+}
+
+/// One cell's edge-aggregator relay thread (hierarchical runs only):
+/// member commits arrive on `rx`, buffer under the cell's flush policy,
+/// and go upstream together — one emulated trunk transfer per flush —
+/// before the per-member messages are forwarded to the PS drain. Replies
+/// flow straight back to the members over each message's own channel, so
+/// a member blocked on its reply is exactly a member waiting out the
+/// edge buffer: that window is charged to `TimeClass::EdgeWait` here and
+/// the ledger's frontier clamping keeps the worker's own later `PsWait`
+/// charge from double-counting it.
+///
+/// An aggregator crash here is a *soft* outage, unlike the simulator's
+/// hard state loss: `Stall` holds the buffer until the outage ends (the
+/// cell is cut off but nothing is retrained), `Direct` forwards traffic
+/// immediately without the trunk sleep (the flat-path fallback). The
+/// asymmetry is deliberate — a relay thread cannot un-send a blocked
+/// member's reply channel without hanging it — and is documented in
+/// DESIGN.md §Hierarchy. (`too_many_arguments` is in the crate-wide
+/// style allows.)
+fn agg_relay_loop(
+    a: usize,
+    mut agg: Aggregator,
+    rx: mpsc::Receiver<CommitMsg>,
+    out: mpsc::Sender<CommitMsg>,
+    shared: Arc<Shared>,
+    scale: f64,
+    dense_bytes: u64,
+    on_agg_down: AggDownMode,
+    seed: u64,
+) {
+    let start = *shared.start.wait();
+    // Trunk-jitter stream: per aggregator, independent of the worker
+    // streams (offset well past any worker index).
+    let mut net_rng = crate::util::Rng::new(seed ^ 0xA66 ^ (((a as u64) + 1) << 40));
+    let mut buf: Vec<(CommitMsg, f64)> = Vec::new();
+    let mut held_by_outage = false;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            // Buffered messages drop with their reply senders, so blocked
+            // members fail their recv and exit — same as the PS drain.
+            return;
+        }
+        let now_v = start.elapsed().as_secs_f64() / scale;
+        let down = {
+            let c = shared.cluster.lock().unwrap();
+            c.agg_down_until.get(a).is_some_and(|&until| until > now_v)
+        };
+        if down && on_agg_down == AggDownMode::Direct && !buf.is_empty() {
+            // Flat fallback: release everything held, no trunk sleep.
+            if let Some(h) = &shared.obs {
+                h.add("hierarchy/direct_fallbacks", buf.len() as u64);
+            }
+            {
+                let mut attr = shared.attr.lock().unwrap();
+                for (m, arrived) in buf.iter() {
+                    attr.charge(m.worker, TimeClass::EdgeWait, *arrived, now_v);
+                }
+            }
+            for (m, _) in buf.drain(..) {
+                if out.send(m).is_err() {
+                    return;
+                }
+            }
+            agg.reset_outage();
+            held_by_outage = false;
+        }
+        if down && on_agg_down == AggDownMode::Stall && !buf.is_empty() {
+            held_by_outage = true;
+        }
+        if !down {
+            // Outage over: release what the stall held; then serve any
+            // armed flush timer that has come due.
+            if held_by_outage {
+                held_by_outage = false;
+                if !relay_flush(
+                    &mut agg, &mut buf, &out, &shared, start, scale, dense_bytes, &mut net_rng,
+                ) {
+                    return;
+                }
+            }
+            if let Some(t) = agg.timer_at() {
+                if now_v >= t && agg.on_timer(now_v) {
+                    if !relay_flush(
+                        &mut agg, &mut buf, &out, &shared, start, scale, dense_bytes,
+                        &mut net_rng,
+                    ) {
+                        return;
+                    }
+                }
+            }
+        }
+        match rx.recv_timeout(Duration::from_millis(2)) {
+            Ok(msg) => {
+                let arrived = start.elapsed().as_secs_f64() / scale;
+                if down && on_agg_down == AggDownMode::Direct {
+                    if let Some(h) = &shared.obs {
+                        h.inc("hierarchy/direct_fallbacks");
+                    }
+                    if out.send(msg).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                let decision = agg.on_buffer(arrived, msg.up_bytes);
+                buf.push((msg, arrived));
+                if let Some(h) = &shared.obs {
+                    h.inc("hierarchy/member_arrivals");
+                }
+                if down {
+                    held_by_outage = true; // Stall: hold until restart
+                    continue;
+                }
+                if decision == FlushDecision::FlushNow
+                    && !relay_flush(
+                        &mut agg, &mut buf, &out, &shared, start, scale, dense_bytes,
+                        &mut net_rng,
+                    )
+                {
+                    return;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Forward the relay's buffer upstream: one emulated trunk transfer
+/// (propagation + link serialization of the combined payload — dense for
+/// a combined flush, the summed member wire sizes in passthrough mode),
+/// then the per-member messages in arrival order. Returns false when the
+/// downstream drain is gone and the relay should exit.
+/// (`too_many_arguments` is in the crate-wide style allows.)
+fn relay_flush(
+    agg: &mut Aggregator,
+    buf: &mut Vec<(CommitMsg, f64)>,
+    out: &mpsc::Sender<CommitMsg>,
+    shared: &Shared,
+    start: Instant,
+    scale: f64,
+    dense_bytes: u64,
+    net_rng: &mut crate::util::Rng,
+) -> bool {
+    if buf.is_empty() {
+        return true;
+    }
+    let trunk_bytes: u64 = if agg.passthrough {
+        buf.iter().map(|(m, _)| m.up_bytes).sum()
+    } else {
+        dense_bytes
+    };
+    let now_v = start.elapsed().as_secs_f64() / scale;
+    let up_extra = agg.link.transfer_secs_jittered(trunk_bytes, net_rng);
+    sleep_interruptible((agg.comm_secs / 2.0 + up_extra).max(0.0) * scale, &shared.stop);
+    agg.note_flush(now_v, trunk_bytes);
+    let fwd_v = start.elapsed().as_secs_f64() / scale;
+    if let Some(h) = &shared.obs {
+        h.inc("hierarchy/flushes");
+        h.add("hierarchy/trunk_bytes_up", trunk_bytes);
+        h.observe("hierarchy/flush_batch", buf.len() as f64);
+    }
+    {
+        let mut attr = shared.attr.lock().unwrap();
+        for (m, arrived) in buf.iter() {
+            attr.charge(m.worker, TimeClass::EdgeWait, *arrived, fwd_v);
+        }
+    }
+    for (m, _) in buf.drain(..) {
+        if out.send(m).is_err() {
+            return false;
+        }
+    }
+    true
 }
 
 /// Record one worker-track lineage span when the hub has spans armed;

@@ -1,0 +1,218 @@
+//! Fig. 18 (reproduction extension) — hierarchical fog aggregation tier.
+//!
+//! The paper's topology is flat: every edge worker pushes straight into the
+//! global parameter server, and §5's ingress measurements show the PS pipe
+//! becoming the bottleneck as the fleet grows. This experiment adds the
+//! natural edge-computing remedy — a tier of per-cell fog aggregators
+//! ([`crate::hierarchy`]) that locally combine member commits and forward
+//! one merged commit per flush over the trunk — and measures what the tier
+//! buys under communication stress.
+//!
+//! Every configuration runs twice on the artifact-free `fleet_proxy`
+//! runtime: **flat** (no `hierarchy` section) and **hier** (one aggregator
+//! per cell, combining every [`FLUSH_K`] member commits). Both share a
+//! deliberately undersized PS-ingress pipe (`INGRESS_BYTES_PER_WORKER` per
+//! member), so the flat runs queue at tier two while the hierarchical runs
+//! amortize the pipe across combined commits. Three stress scenarios:
+//!
+//! * `ingress_stress` — no cluster events; pure ingress contention, swept
+//!   across fleet sizes.
+//! * `blackout` — the connectivity-loss preset from
+//!   [`crate::cluster::scenarios`] on top of the ingress cap.
+//! * `crash_storm` — the worker-churn preset; exercises contribution
+//!   purging when members die mid-buffer.
+//!
+//! Reported per row: the waiting-time attribution shares for tier two
+//! (`ingress_wait_share`, [`TimeClass::IngressWait`]) and tier one
+//! (`edge_wait_share`, [`TimeClass::EdgeWait`]), plus trunk flush counts.
+//! Expected shape (the CI smoke gate): for every (scenario, workers) pair
+//! the hierarchical `ingress_wait_share` is strictly below the flat one —
+//! the fog tier converts global queueing into cheaper local buffering.
+
+use anyhow::Result;
+
+use crate::cluster::scenarios;
+use crate::config::{ClusterSpec, CohortSpec, Dist, ExperimentSpec, SyncSpec};
+use crate::hierarchy::{CellAggSpec, FlushPolicy, HierarchySpec};
+use crate::obs::{ObsConfig, ObsHub, TimeClass};
+use crate::run::Run;
+use crate::sync::SyncModelKind;
+
+use super::common::{fmt, Scale, SeriesTable};
+
+/// Member commits combined per trunk flush.
+pub const FLUSH_K: usize = 8;
+
+/// Cells (= aggregators) the cohort is dealt across, round-robin.
+pub const NUM_CELLS: usize = 8;
+
+/// PS-ingress budget per fleet member, bytes/s. `fleet_proxy` commits are
+/// 1 KiB and members commit every few seconds, so this undersizes the pipe
+/// by roughly 2-4x for flat runs while a combine-every-8 tier fits.
+pub const INGRESS_BYTES_PER_WORKER: f64 = 100.0;
+
+/// The fig18 experiment for `n` fleet members: one cohort with the fig17
+/// heterogeneity profile, dealt across [`NUM_CELLS`] cells, behind an
+/// undersized ingress pipe. `hierarchical` adds one aggregator per cell
+/// combining every [`FLUSH_K`] member commits over a 50 ms trunk hop.
+pub fn hier_spec(kind: SyncModelKind, n: usize, hierarchical: bool) -> ExperimentSpec {
+    let mut cohort = CohortSpec::new(
+        n,
+        Dist::LogNormal { median: 1.0, sigma: 0.5 },
+        Dist::Uniform { lo: 0.05, hi: 0.3 },
+    );
+    cohort.cells = (0..NUM_CELLS).map(|c| format!("edge-{c}")).collect();
+    let cluster = ClusterSpec::new(Vec::new()).with_cohorts(vec![cohort]);
+
+    let mut sync = SyncSpec::new(kind);
+    sync.gamma = 30.0;
+    sync.epoch_secs = 240.0;
+    sync.eval_window_secs = 20.0;
+    sync.tau = 8;
+    sync.staleness = 3;
+
+    let mut spec = ExperimentSpec::new("fleet_proxy", cluster, sync);
+    spec.batch_size = 32;
+    spec.seed = 42;
+    spec.eval_interval_secs = 30.0;
+    spec.max_virtual_secs = 60.0;
+    spec.max_total_steps = (n as u64) * 100;
+    // Fixed horizon (as fig17): shares are time integrals, so every
+    // configuration must observe the same window.
+    spec.convergence_tol = 0.0;
+    spec.target_loss = 0.0;
+    spec.network.ingress_bytes_per_sec = INGRESS_BYTES_PER_WORKER * n as f64;
+    if hierarchical {
+        spec.hierarchy = HierarchySpec {
+            cells: (0..NUM_CELLS).map(|c| CellAggSpec::new(&format!("edge-{c}"))).collect(),
+            default_comm_secs: 0.05,
+            default_flush: Some(FlushPolicy::EveryK(FLUSH_K)),
+            ..HierarchySpec::default()
+        };
+    }
+    spec
+}
+
+/// The stress scenarios compared (first entry has no cluster events).
+pub const SCENARIOS: [&str; 3] = ["ingress_stress", "blackout", "crash_storm"];
+
+/// Fleet sizes swept at `scale` for the `ingress_stress` scenario; the
+/// event-driven scenarios run only the first (smallest) population.
+pub fn populations(scale: Scale) -> Vec<usize> {
+    if scale.is_full() {
+        vec![96, 1_024, 4_096]
+    } else {
+        vec![48, 96, 192]
+    }
+}
+
+fn run_one(spec: ExperimentSpec) -> Result<(crate::run::RunReport, u64)> {
+    let hub = ObsHub::new(ObsConfig::metrics_only());
+    let report = Run::from_spec(spec).observability(&hub).execute()?;
+    let flushes = report.metrics.as_ref().map_or(0, |m| m.counter("hierarchy/flushes"));
+    Ok((report, flushes))
+}
+
+pub fn run(scale: Scale) -> Result<SeriesTable> {
+    let mut table = SeriesTable::new(
+        "fig18_hierarchy",
+        &[
+            "scenario",
+            "workers",
+            "tier",
+            "total_steps",
+            "total_commits",
+            "flushes",
+            "final_loss",
+            "wasted_steps",
+            "ingress_wait_share",
+            "edge_wait_share",
+            "sync_stall_share",
+        ],
+    );
+
+    let pops = populations(scale);
+    for scenario in SCENARIOS {
+        let ns: &[usize] = if scenario == "ingress_stress" { &pops } else { &pops[..1] };
+        for &n in ns {
+            for hierarchical in [false, true] {
+                // Expand the cohort first so the scenario presets see the
+                // materialized per-worker cells.
+                let mut spec = hier_spec(SyncModelKind::Adsp, n, hierarchical)
+                    .expanded()?
+                    .expect("cohorts must expand");
+                if scenario != "ingress_stress" {
+                    spec.timeline =
+                        scenarios::preset(scenario, &spec.cluster, spec.max_virtual_secs)?;
+                }
+                spec.validate()?;
+                let (report, flushes) = run_one(spec)?;
+                let attr = report.attribution.as_ref().expect("sim reports attribution");
+                table.push_row(vec![
+                    scenario.to_string(),
+                    n.to_string(),
+                    if hierarchical { "hier".into() } else { "flat".into() },
+                    report.total_steps.to_string(),
+                    report.total_commits.to_string(),
+                    flushes.to_string(),
+                    fmt(report.final_loss),
+                    report.wasted_steps.to_string(),
+                    fmt(attr.share(TimeClass::IngressWait)),
+                    fmt(attr.share(TimeClass::EdgeWait)),
+                    fmt(attr.sync_stall_share()),
+                ]);
+            }
+        }
+    }
+    table.write_csv()?;
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hier_spec_validates_flat_and_hierarchical() {
+        let flat = hier_spec(SyncModelKind::Adsp, 96, false);
+        assert!(!flat.hierarchy.enabled());
+        flat.validate().unwrap();
+        let hier = hier_spec(SyncModelKind::Adsp, 96, true);
+        assert_eq!(hier.hierarchy.cells.len(), NUM_CELLS);
+        hier.validate().unwrap();
+        let expanded = hier.expanded().unwrap().expect("cohorts must expand");
+        assert_eq!(expanded.cluster.workers.len(), 96);
+        // Cells dealt round-robin: every aggregator has members.
+        for agg in &expanded.hierarchy.cells {
+            assert!(
+                expanded.cluster.workers.iter().any(|w| w.cell == agg.cell),
+                "aggregator {} has no members",
+                agg.cell
+            );
+        }
+    }
+
+    #[test]
+    fn fog_tier_cuts_ingress_wait_under_stress() {
+        // The acceptance shape on a scaled-down ingress-stress pair: the
+        // hierarchical run's tier-2 waiting share must be strictly below
+        // the flat run's, with the buffering showing up in tier 1 instead.
+        let share = |hierarchical: bool| {
+            let spec = hier_spec(SyncModelKind::Adsp, 48, hierarchical);
+            let (report, flushes) = run_one(spec).unwrap();
+            let attr = report.attribution.as_ref().unwrap().clone();
+            (attr.share(TimeClass::IngressWait), attr.share(TimeClass::EdgeWait), flushes)
+        };
+        let (flat_ingress, flat_edge, flat_flushes) = share(false);
+        let (hier_ingress, hier_edge, hier_flushes) = share(true);
+        assert_eq!(flat_edge, 0.0, "flat run charged the EdgeWait lane");
+        assert_eq!(flat_flushes, 0, "flat run flushed a trunk");
+        assert!(flat_ingress > 0.0, "ingress cap produced no tier-2 waiting");
+        assert!(
+            hier_ingress < flat_ingress,
+            "fog tier failed to cut ingress waiting: {hier_ingress} vs {flat_ingress}"
+        );
+        assert!(hier_edge > 0.0, "hierarchical run charged no EdgeWait");
+        assert!(hier_flushes > 0, "aggregators never flushed");
+    }
+}

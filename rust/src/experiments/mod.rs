@@ -17,6 +17,7 @@ pub mod fig14;
 pub mod fig15;
 pub mod fig16;
 pub mod fig17;
+pub mod fig18;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -29,7 +30,7 @@ pub use common::{Scale, SeriesTable};
 
 use anyhow::Result;
 
-/// Run a figure by name ("fig1" … "fig17"); returns the printed table.
+/// Run a figure by name ("fig1" … "fig18"); returns the printed table.
 pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
     match name {
         "fig1" => fig1::run(scale),
@@ -48,12 +49,13 @@ pub fn run_by_name(name: &str, scale: Scale) -> Result<SeriesTable> {
         "fig15" => fig15::run(scale),
         "fig16" => fig16::run(scale),
         "fig17" => fig17::run(scale),
-        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig17)"),
+        "fig18" => fig18::run(scale),
+        other => anyhow::bail!("unknown experiment '{other}' (fig1,fig3..fig18)"),
     }
 }
 
 /// Every figure `run_by_name` accepts, in `adsp experiment all` order.
-pub const ALL_FIGURES: [&str; 16] = [
+pub const ALL_FIGURES: [&str; 17] = [
     "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "fig13", "fig14", "fig15", "fig16", "fig17",
+    "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
 ];

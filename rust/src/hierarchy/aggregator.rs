@@ -1,0 +1,233 @@
+//! The edge aggregator's engine-agnostic core: the flush state machine
+//! and the delta combiner. Both engines own one `Aggregator` per
+//! configured cell and feed it buffer/timer notifications; the aggregator
+//! answers *when* to flush, never *what* the flush costs — transfer
+//! times, ingress admission and apply scheduling stay in the engines.
+
+use crate::network::LinkModel;
+use crate::runtime::ParamSet;
+
+use super::spec::{FlushPolicy, HierarchySpec};
+
+/// What to do after buffering one member commit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlushDecision {
+    /// Forward the buffer upstream immediately.
+    FlushNow,
+    /// Keep buffering and fire a flush timer at this virtual time (the
+    /// engine schedules it; a later buffer call never re-arms an
+    /// already-armed timer).
+    ArmTimer(f64),
+    /// Keep buffering; an earlier decision already covers the flush.
+    Wait,
+}
+
+/// One cell's edge aggregator: resolved trunk parameters plus the flush
+/// state machine.
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    /// The cell this aggregator serves.
+    pub cell: String,
+    /// Aggregator → PS trunk link.
+    pub link: LinkModel,
+    /// Aggregator → PS commit round-trip seconds.
+    pub comm_secs: f64,
+    /// When buffered member commits go upstream.
+    pub flush: FlushPolicy,
+    /// Forward member payloads unchanged instead of combining.
+    pub passthrough: bool,
+    /// Member commits buffered since the last flush.
+    buffered: usize,
+    /// Payload bytes buffered since the last flush.
+    buffered_bytes: u64,
+    /// Armed flush-timer deadline (`f64::INFINITY` = none).
+    timer_at: f64,
+    /// Earliest next flush under the adaptive budget (`0.0` initially).
+    next_allowed: f64,
+}
+
+impl Aggregator {
+    /// Build the aggregator for `spec.cells[i]` with defaults resolved.
+    pub fn from_spec(spec: &HierarchySpec, i: usize) -> Self {
+        Aggregator {
+            cell: spec.cells[i].cell.clone(),
+            link: spec.link_for(i).clone(),
+            comm_secs: spec.comm_secs_for(i),
+            flush: spec.flush_for(i),
+            passthrough: spec.passthrough,
+            buffered: 0,
+            buffered_bytes: 0,
+            timer_at: f64::INFINITY,
+            next_allowed: 0.0,
+        }
+    }
+
+    /// Member commits currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buffered
+    }
+
+    /// Payload bytes currently buffered.
+    pub fn buffered_bytes(&self) -> u64 {
+        self.buffered_bytes
+    }
+
+    /// The armed flush-timer deadline, if any.
+    pub fn timer_at(&self) -> Option<f64> {
+        self.timer_at.is_finite().then_some(self.timer_at)
+    }
+
+    /// Note one member commit of `bytes` buffered at `now`; returns the
+    /// flush decision.
+    pub fn on_buffer(&mut self, now: f64, bytes: u64) -> FlushDecision {
+        self.buffered += 1;
+        self.buffered_bytes += bytes;
+        match self.flush {
+            FlushPolicy::EveryK(k) => {
+                if self.buffered >= k {
+                    FlushDecision::FlushNow
+                } else {
+                    FlushDecision::Wait
+                }
+            }
+            FlushPolicy::IntervalSecs(secs) => {
+                if self.timer_at.is_finite() {
+                    FlushDecision::Wait
+                } else {
+                    self.timer_at = now + secs;
+                    FlushDecision::ArmTimer(self.timer_at)
+                }
+            }
+            FlushPolicy::AdaptiveBudget { .. } => {
+                if now >= self.next_allowed {
+                    FlushDecision::FlushNow
+                } else if self.timer_at.is_finite() {
+                    FlushDecision::Wait
+                } else {
+                    self.timer_at = self.next_allowed;
+                    FlushDecision::ArmTimer(self.timer_at)
+                }
+            }
+        }
+    }
+
+    /// The flush timer fired at `now`; returns true when a flush is due
+    /// (i.e. anything is buffered). Stale timers after a crash must be
+    /// filtered by the engine (incarnation gating) before calling this.
+    pub fn on_timer(&mut self, _now: f64) -> bool {
+        self.timer_at = f64::INFINITY;
+        self.buffered > 0
+    }
+
+    /// A flush departed at `now` carrying `trunk_bytes`; resets the
+    /// buffer counters and spaces the next adaptive-budget flush.
+    pub fn note_flush(&mut self, now: f64, trunk_bytes: u64) {
+        self.buffered = 0;
+        self.buffered_bytes = 0;
+        self.timer_at = f64::INFINITY;
+        if let FlushPolicy::AdaptiveBudget { bytes_per_sec } = self.flush {
+            self.next_allowed = now + trunk_bytes as f64 / bytes_per_sec;
+        }
+    }
+
+    /// The aggregator crashed: drop the buffer state (the engine owns the
+    /// buffered payloads and accounts their loss exactly once).
+    pub fn reset_outage(&mut self) {
+        self.buffered = 0;
+        self.buffered_bytes = 0;
+        self.timer_at = f64::INFINITY;
+    }
+
+    /// Element-wise merge of one member delta into the combined update
+    /// (sum-of-deltas: the PS applies the combined commit once with the
+    /// same η, which is exactly the flat result for the linear SGD apply).
+    pub fn combine(into: &mut ParamSet, u: &ParamSet) {
+        debug_assert_eq!(into.num_leaves(), u.num_leaves());
+        for (a, b) in into.leaves.iter_mut().zip(&u.leaves) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchy::spec::CellAggSpec;
+
+    fn agg(flush: FlushPolicy) -> Aggregator {
+        let spec = HierarchySpec {
+            cells: vec![CellAggSpec::new("edge-a")],
+            default_flush: Some(flush),
+            ..HierarchySpec::default()
+        };
+        Aggregator::from_spec(&spec, 0)
+    }
+
+    #[test]
+    fn every_k_flushes_on_the_kth_commit() {
+        let mut a = agg(FlushPolicy::EveryK(3));
+        assert_eq!(a.on_buffer(1.0, 10), FlushDecision::Wait);
+        assert_eq!(a.on_buffer(2.0, 10), FlushDecision::Wait);
+        assert_eq!(a.on_buffer(3.0, 10), FlushDecision::FlushNow);
+        assert_eq!(a.buffered(), 3);
+        assert_eq!(a.buffered_bytes(), 30);
+        a.note_flush(3.0, 30);
+        assert_eq!(a.buffered(), 0);
+        // k = 1 forwards every commit.
+        let mut a = agg(FlushPolicy::EveryK(1));
+        assert_eq!(a.on_buffer(1.0, 10), FlushDecision::FlushNow);
+    }
+
+    #[test]
+    fn interval_arms_one_timer_per_window() {
+        let mut a = agg(FlushPolicy::IntervalSecs(2.0));
+        assert_eq!(a.on_buffer(1.0, 10), FlushDecision::ArmTimer(3.0));
+        // Later buffers inside the window don't re-arm.
+        assert_eq!(a.on_buffer(2.0, 10), FlushDecision::Wait);
+        assert!(a.on_timer(3.0));
+        a.note_flush(3.0, 20);
+        // Next window arms fresh.
+        assert_eq!(a.on_buffer(5.0, 10), FlushDecision::ArmTimer(7.0));
+        // A timer firing over an empty buffer is not a flush.
+        a.note_flush(7.0, 10);
+        let mut empty = agg(FlushPolicy::IntervalSecs(2.0));
+        assert!(!empty.on_timer(9.0));
+    }
+
+    #[test]
+    fn adaptive_budget_spaces_flushes() {
+        let mut a = agg(FlushPolicy::AdaptiveBudget { bytes_per_sec: 100.0 });
+        // First commit flushes immediately (nothing to space against).
+        assert_eq!(a.on_buffer(0.0, 50), FlushDecision::FlushNow);
+        a.note_flush(0.0, 200);
+        // 200 bytes over 100 B/s = 2 s spacing; a commit at t=1 waits.
+        assert_eq!(a.on_buffer(1.0, 50), FlushDecision::ArmTimer(2.0));
+        assert_eq!(a.on_buffer(1.5, 50), FlushDecision::Wait);
+        assert!(a.on_timer(2.0));
+        a.note_flush(2.0, 100);
+        // Past the spacing, flushes are immediate again.
+        assert_eq!(a.on_buffer(10.0, 50), FlushDecision::FlushNow);
+    }
+
+    #[test]
+    fn outage_resets_the_buffer() {
+        let mut a = agg(FlushPolicy::IntervalSecs(5.0));
+        a.on_buffer(1.0, 10);
+        assert_eq!(a.timer_at(), Some(6.0));
+        a.reset_outage();
+        assert_eq!(a.buffered(), 0);
+        assert_eq!(a.timer_at(), None);
+        assert!(!a.on_timer(6.0));
+    }
+
+    #[test]
+    fn combine_sums_deltas() {
+        let mut a = ParamSet { leaves: vec![vec![1.0, 2.0], vec![3.0]] };
+        let b = ParamSet { leaves: vec![vec![0.5, -1.0], vec![2.0]] };
+        Aggregator::combine(&mut a, &b);
+        assert_eq!(a.leaves, vec![vec![1.5, 1.0], vec![5.0]]);
+    }
+}

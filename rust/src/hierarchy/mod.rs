@@ -1,0 +1,43 @@
+//! Hierarchical fog aggregation tier: per-cell edge aggregators between
+//! the workers and the global sharded PS.
+//!
+//! ADSP's single parameter server is the scalability ceiling for
+//! "millions of edge devices": every commit crosses one ingress pipe.
+//! This subsystem promotes the existing worker *cells* (the correlated
+//! fault groups on [`crate::config::WorkerSpec`]) to a real aggregation
+//! topology — the "From Federated to Fog Learning" architecture:
+//!
+//! * **Tier 1** — each configured cell gets an edge [`Aggregator`] that
+//!   receives member commits over the members' existing
+//!   [`crate::network::LinkModel`]s, locally combines them (sum of deltas
+//!   with step counts; or passthrough forwarding), and forwards one
+//!   combined commit upstream per flush.
+//! * **Tier 2** — the combined commit crosses the aggregator's own trunk
+//!   link plus the shared PS [`crate::network::IngressQueue`], and the
+//!   global sharded PS applies it once.
+//!
+//! The [`FlushPolicy`] sets the tier-1 cadence: every-k-commits, a fixed
+//! interval, or an adaptive trunk-byte budget (Wang et al., "Adaptive
+//! Federated Learning in Resource Constrained Edge Computing Systems").
+//! Aggregator crashes ride the cluster timeline
+//! ([`crate::cluster::ClusterEvent::AggregatorCrash`]): a crash is a
+//! cell-wide outage — buffered and in-flight combined commits are lost
+//! (counted into `wasted_steps` exactly once), members stall or fall back
+//! to the flat path per [`AggDownMode`], and sync policies are notified
+//! through `on_cluster_change` at both the crash and the recovery.
+//!
+//! **Bit-identity pin**: a spec with no `hierarchy` section — or a
+//! zero-cost passthrough section
+//! ([`HierarchySpec::is_zero_cost_passthrough`]) with no aggregator crash
+//! events — adds exactly zero time and zero event reordering, and both
+//! engines elide the tier entirely, reproducing the flat runs bit for bit
+//! for every sync policy (pinned by the integration and fuzz suites).
+//! Attribution gains a `TimeClass::EdgeWait` lane and spans a
+//! `SpanPhase::EdgeAggregate` leg, so `adsp analyze` separates tier-1
+//! from tier-2 waiting.
+
+pub mod aggregator;
+pub mod spec;
+
+pub use aggregator::{Aggregator, FlushDecision};
+pub use spec::{AggDownMode, CellAggSpec, FlushPolicy, HierarchySpec};

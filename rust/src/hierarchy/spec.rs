@@ -1,0 +1,427 @@
+//! The validated `hierarchy` section of an experiment spec.
+
+use anyhow::{bail, Context, Result};
+
+use crate::network::LinkModel;
+use crate::util::Json;
+
+/// When an edge aggregator forwards its buffered member commits upstream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FlushPolicy {
+    /// Flush as soon as `k` member commits are buffered (`k = 1` =
+    /// forward every commit immediately — the passthrough cadence).
+    EveryK(usize),
+    /// Flush at most once per `secs` seconds: the first commit buffered
+    /// after a flush arms a timer, and everything buffered when it fires
+    /// goes upstream together.
+    IntervalSecs(f64),
+    /// Resource-budgeted cadence (Wang et al., "Adaptive Federated
+    /// Learning in Resource Constrained Edge Computing Systems"): flushes
+    /// are spaced at least `payload / bytes_per_sec` apart, so the trunk
+    /// never carries more than the budgeted byte rate. A commit arriving
+    /// inside the spacing window waits for it to elapse.
+    AdaptiveBudget {
+        /// Trunk byte budget in bytes per second (must be positive).
+        bytes_per_sec: f64,
+    },
+}
+
+impl FlushPolicy {
+    /// Validate the policy's parameters.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            FlushPolicy::EveryK(k) => {
+                if k == 0 {
+                    bail!("flush every_k needs k >= 1");
+                }
+            }
+            FlushPolicy::IntervalSecs(s) => {
+                if !s.is_finite() || s <= 0.0 {
+                    bail!("flush interval must be positive, got {s}");
+                }
+            }
+            FlushPolicy::AdaptiveBudget { bytes_per_sec } => {
+                if !bytes_per_sec.is_finite() || bytes_per_sec <= 0.0 {
+                    bail!("adaptive flush budget must be positive, got {bytes_per_sec}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON object form (tagged by `kind`).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            FlushPolicy::EveryK(k) => Json::obj(vec![
+                ("kind", Json::str("every_k")),
+                ("k", Json::num(k as f64)),
+            ]),
+            FlushPolicy::IntervalSecs(s) => Json::obj(vec![
+                ("kind", Json::str("interval")),
+                ("secs", Json::num(s)),
+            ]),
+            FlushPolicy::AdaptiveBudget { bytes_per_sec } => Json::obj(vec![
+                ("kind", Json::str("adaptive")),
+                ("bytes_per_sec", Json::num(bytes_per_sec)),
+            ]),
+        }
+    }
+
+    /// Parse the [`FlushPolicy::to_json`] form back.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(match v.req("kind")?.as_str()? {
+            "every_k" => FlushPolicy::EveryK(v.req("k")?.as_usize()?),
+            "interval" => FlushPolicy::IntervalSecs(v.req("secs")?.as_f64()?),
+            "adaptive" => FlushPolicy::AdaptiveBudget {
+                bytes_per_sec: v.req("bytes_per_sec")?.as_f64()?,
+            },
+            other => bail!("unknown flush policy kind '{other}'"),
+        })
+    }
+}
+
+/// What a cell's members do while their aggregator is inside a crash
+/// outage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggDownMode {
+    /// Members stall: commits issued during the outage wait at the edge
+    /// until the aggregator restarts (the cell is cut off — the fog
+    /// default, since members usually have no PS route of their own).
+    #[default]
+    Stall,
+    /// Members fall back to the flat path: commits issued during the
+    /// outage go straight to the PS ingress over the member's own link.
+    Direct,
+}
+
+impl AggDownMode {
+    /// The JSON / CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggDownMode::Stall => "stall",
+            AggDownMode::Direct => "direct",
+        }
+    }
+
+    /// Parse a JSON / CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "stall" => Ok(AggDownMode::Stall),
+            "direct" => Ok(AggDownMode::Direct),
+            other => bail!("unknown on_agg_down mode '{other}' (stall | direct)"),
+        }
+    }
+}
+
+/// One cell's edge aggregator: its upstream link, round-trip overhead and
+/// (optionally) a flush policy overriding the section default.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellAggSpec {
+    /// The worker cell this aggregator serves (must be a non-empty label
+    /// carried by at least one worker).
+    pub cell: String,
+    /// Aggregator → PS trunk link; `None` = the section's `default_link`.
+    pub link: Option<LinkModel>,
+    /// Aggregator → PS commit round-trip seconds (the trunk analogue of a
+    /// worker's `comm_secs`); `None` = the section's `default_comm_secs`.
+    pub comm_secs: Option<f64>,
+    /// Flush policy override; `None` = the section's `default_flush`.
+    pub flush: Option<FlushPolicy>,
+}
+
+impl CellAggSpec {
+    /// An aggregator for `cell` using the section defaults everywhere.
+    pub fn new(cell: &str) -> Self {
+        CellAggSpec { cell: cell.to_string(), link: None, comm_secs: None, flush: None }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![("cell", Json::str(self.cell.clone()))];
+        if let Some(l) = &self.link {
+            pairs.push(("link", l.to_json()));
+        }
+        if let Some(c) = self.comm_secs {
+            pairs.push(("comm_secs", Json::num(c)));
+        }
+        if let Some(f) = &self.flush {
+            pairs.push(("flush", f.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(CellAggSpec {
+            cell: v.req("cell")?.as_str()?.to_string(),
+            link: v.get("link").map(LinkModel::from_json).transpose().context("agg link")?,
+            comm_secs: v.get("comm_secs").map(|c| c.as_f64()).transpose()?,
+            flush: v.get("flush").map(FlushPolicy::from_json).transpose().context("agg flush")?,
+        })
+    }
+}
+
+/// The two-tier fog topology of one experiment: per-cell edge aggregators
+/// between the workers and the global sharded PS. The default
+/// (`HierarchySpec::default()`) has no aggregators and reproduces the flat
+/// single-tier runs bit for bit; so does any *zero-cost passthrough*
+/// section (see [`HierarchySpec::is_zero_cost_passthrough`]) — both engines
+/// elide the tier entirely in those cases, which is the structural pin that
+/// keeps the paper reproduction intact.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HierarchySpec {
+    /// One aggregator per listed cell; workers in unlisted (or empty)
+    /// cells keep the flat path.
+    pub cells: Vec<CellAggSpec>,
+    /// Trunk link for aggregators without an explicit `link`.
+    pub default_link: LinkModel,
+    /// Trunk round-trip seconds for aggregators without an explicit
+    /// `comm_secs` (default `0.0`).
+    pub default_comm_secs: f64,
+    /// Flush policy for aggregators without an explicit `flush`
+    /// (default `EveryK(1)` — forward every commit).
+    pub default_flush: Option<FlushPolicy>,
+    /// Passthrough mode: forward each member payload upstream unchanged
+    /// instead of combining buffered deltas into one dense commit.
+    pub passthrough: bool,
+    /// Member behaviour during an aggregator crash outage.
+    pub on_agg_down: AggDownMode,
+}
+
+impl HierarchySpec {
+    /// True when the section configures at least one aggregator.
+    pub fn enabled(&self) -> bool {
+        !self.cells.is_empty()
+    }
+
+    /// The resolved trunk link of aggregator `i`.
+    pub fn link_for(&self, i: usize) -> &LinkModel {
+        self.cells[i].link.as_ref().unwrap_or(&self.default_link)
+    }
+
+    /// The resolved trunk round-trip seconds of aggregator `i`.
+    pub fn comm_secs_for(&self, i: usize) -> f64 {
+        self.cells[i].comm_secs.unwrap_or(self.default_comm_secs)
+    }
+
+    /// The resolved flush policy of aggregator `i`.
+    pub fn flush_for(&self, i: usize) -> FlushPolicy {
+        self.cells[i]
+            .flush
+            .or(self.default_flush)
+            .unwrap_or(FlushPolicy::EveryK(1))
+    }
+
+    /// True when every aggregator is a zero-cost passthrough: payloads
+    /// forwarded unchanged, every commit immediately, over degenerate
+    /// links with zero round-trip overhead. Such a tier adds exactly zero
+    /// time and zero reordering anywhere, so (absent aggregator crash
+    /// events) the engines elide it and take the flat path — the
+    /// bit-identity pin.
+    pub fn is_zero_cost_passthrough(&self) -> bool {
+        self.passthrough
+            && (0..self.cells.len()).all(|i| {
+                self.link_for(i).is_degenerate()
+                    && self.comm_secs_for(i) == 0.0
+                    && self.flush_for(i) == FlushPolicy::EveryK(1)
+            })
+    }
+
+    /// Check the section against the (expanded) per-worker cell labels.
+    pub fn validate(&self, worker_cells: &[String]) -> Result<()> {
+        self.default_link.validate().context("hierarchy.default_link")?;
+        if !self.default_comm_secs.is_finite() || self.default_comm_secs < 0.0 {
+            bail!("hierarchy.default_comm_secs must be finite and >= 0");
+        }
+        if let Some(f) = &self.default_flush {
+            f.validate().context("hierarchy.default_flush")?;
+        }
+        for (i, c) in self.cells.iter().enumerate() {
+            if c.cell.is_empty() {
+                bail!("hierarchy.cells[{i}]: cell label must be non-empty");
+            }
+            if self.cells[..i].iter().any(|p| p.cell == c.cell) {
+                bail!("hierarchy.cells[{i}]: duplicate aggregator for cell '{}'", c.cell);
+            }
+            if !worker_cells.iter().any(|wc| *wc == c.cell) {
+                bail!(
+                    "hierarchy.cells[{i}]: cell '{}' matches no worker in the cluster",
+                    c.cell
+                );
+            }
+            if let Some(l) = &c.link {
+                l.validate().with_context(|| format!("hierarchy.cells[{i}].link"))?;
+            }
+            if let Some(cs) = c.comm_secs {
+                if !cs.is_finite() || cs < 0.0 {
+                    bail!("hierarchy.cells[{i}].comm_secs must be finite and >= 0");
+                }
+            }
+            if let Some(f) = &c.flush {
+                f.validate().with_context(|| format!("hierarchy.cells[{i}].flush"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// JSON object form (the `hierarchy` key of an experiment spec).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("cells", Json::Arr(self.cells.iter().map(CellAggSpec::to_json).collect())),
+            ("default_link", self.default_link.to_json()),
+            ("default_comm_secs", Json::num(self.default_comm_secs)),
+        ];
+        if let Some(f) = &self.default_flush {
+            pairs.push(("default_flush", f.to_json()));
+        }
+        pairs.push(("passthrough", Json::Bool(self.passthrough)));
+        pairs.push(("on_agg_down", Json::str(self.on_agg_down.name())));
+        Json::obj(pairs)
+    }
+
+    /// Parse from JSON; absent keys default to the degenerate section.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cells = match v.get("cells") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    CellAggSpec::from_json(c)
+                        .with_context(|| format!("hierarchy.cells[{i}]"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let default_link = match v.get("default_link") {
+            Some(l) => LinkModel::from_json(l).context("hierarchy.default_link")?,
+            None => LinkModel::unbounded(),
+        };
+        Ok(HierarchySpec {
+            cells,
+            default_link,
+            default_comm_secs: v.f64_or("default_comm_secs", 0.0)?,
+            default_flush: v
+                .get("default_flush")
+                .map(FlushPolicy::from_json)
+                .transpose()
+                .context("hierarchy.default_flush")?,
+            passthrough: v.bool_or("passthrough", false)?,
+            on_agg_down: AggDownMode::parse(v.str_or("on_agg_down", "stall")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn section() -> HierarchySpec {
+        HierarchySpec {
+            cells: vec![
+                CellAggSpec {
+                    cell: "edge-a".into(),
+                    link: Some(LinkModel::with_bandwidth(1e6)),
+                    comm_secs: Some(0.4),
+                    flush: Some(FlushPolicy::EveryK(4)),
+                },
+                CellAggSpec::new("edge-b"),
+            ],
+            default_link: LinkModel { bandwidth_bytes_per_sec: 5e5, latency_secs: 0.02, jitter: 0.0 },
+            default_comm_secs: 0.1,
+            default_flush: Some(FlushPolicy::IntervalSecs(2.0)),
+            passthrough: false,
+            on_agg_down: AggDownMode::Direct,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let h = section();
+        let back = HierarchySpec::from_json(&Json::parse(&h.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, h);
+        // Empty object = the disabled default.
+        let sparse = HierarchySpec::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(!sparse.enabled());
+        assert_eq!(sparse, HierarchySpec::default());
+    }
+
+    #[test]
+    fn defaults_resolve_per_cell() {
+        let h = section();
+        assert_eq!(h.link_for(0).bandwidth_bytes_per_sec, 1e6);
+        assert_eq!(h.link_for(1).bandwidth_bytes_per_sec, 5e5);
+        assert_eq!(h.comm_secs_for(0), 0.4);
+        assert_eq!(h.comm_secs_for(1), 0.1);
+        assert_eq!(h.flush_for(0), FlushPolicy::EveryK(4));
+        assert_eq!(h.flush_for(1), FlushPolicy::IntervalSecs(2.0));
+    }
+
+    #[test]
+    fn zero_cost_passthrough_detected() {
+        let mut h = HierarchySpec {
+            cells: vec![CellAggSpec::new("edge-a")],
+            passthrough: true,
+            ..HierarchySpec::default()
+        };
+        assert!(h.is_zero_cost_passthrough());
+        // Any cost knocks it out.
+        h.default_comm_secs = 0.1;
+        assert!(!h.is_zero_cost_passthrough());
+        h.default_comm_secs = 0.0;
+        h.default_flush = Some(FlushPolicy::EveryK(2));
+        assert!(!h.is_zero_cost_passthrough());
+        h.default_flush = Some(FlushPolicy::EveryK(1));
+        assert!(h.is_zero_cost_passthrough());
+        h.passthrough = false;
+        assert!(!h.is_zero_cost_passthrough());
+    }
+
+    #[test]
+    fn validation_rejects_bad_sections() {
+        let cells = vec!["edge-a".to_string(), "edge-b".to_string(), String::new()];
+        section().validate(&cells).unwrap();
+        // Unknown cell.
+        let mut h = section();
+        h.cells[1].cell = "edge-z".into();
+        assert!(h.validate(&cells).is_err());
+        // Duplicate cell.
+        let mut h = section();
+        h.cells[1].cell = "edge-a".into();
+        assert!(h.validate(&cells).is_err());
+        // Empty label.
+        let mut h = section();
+        h.cells[0].cell = String::new();
+        assert!(h.validate(&cells).is_err());
+        // Bad flush parameters.
+        let mut h = section();
+        h.cells[0].flush = Some(FlushPolicy::EveryK(0));
+        assert!(h.validate(&cells).is_err());
+        let mut h = section();
+        h.default_flush = Some(FlushPolicy::IntervalSecs(0.0));
+        assert!(h.validate(&cells).is_err());
+        let mut h = section();
+        h.cells[0].flush = Some(FlushPolicy::AdaptiveBudget { bytes_per_sec: -1.0 });
+        assert!(h.validate(&cells).is_err());
+        // Negative trunk overhead.
+        let mut h = section();
+        h.cells[0].comm_secs = Some(-0.5);
+        assert!(h.validate(&cells).is_err());
+    }
+
+    #[test]
+    fn flush_policy_roundtrip_and_modes() {
+        for f in [
+            FlushPolicy::EveryK(3),
+            FlushPolicy::IntervalSecs(1.5),
+            FlushPolicy::AdaptiveBudget { bytes_per_sec: 2e6 },
+        ] {
+            let back =
+                FlushPolicy::from_json(&Json::parse(&f.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(back, f);
+        }
+        assert!(FlushPolicy::from_json(&Json::parse(r#"{"kind":"never"}"#).unwrap()).is_err());
+        for m in [AggDownMode::Stall, AggDownMode::Direct] {
+            assert_eq!(AggDownMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(AggDownMode::parse("panic").is_err());
+    }
+}

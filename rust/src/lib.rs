@@ -49,6 +49,7 @@ pub mod data;
 #[allow(missing_docs)]
 pub mod experiments;
 pub mod fault;
+pub mod hierarchy;
 #[allow(missing_docs)]
 pub mod metrics;
 pub mod network;
@@ -65,6 +66,7 @@ pub mod util;
 pub use cluster::{ClusterEvent, ClusterState, ClusterTimeline, FuzzConfig, FuzzIntensity};
 pub use config::{ClusterSpec, ExperimentSpec, SyncSpec, WorkerSpec};
 pub use fault::{Checkpoint, CheckpointPolicy, CheckpointStore, FaultSpec};
+pub use hierarchy::{AggDownMode, Aggregator, FlushPolicy, HierarchySpec};
 pub use network::{LinkModel, NetworkSpec};
 pub use obs::{
     AttributionLedger, AttributionReport, CommitLineage, MetricsRegistry, ObsConfig, ObsHub, Span,

@@ -37,7 +37,7 @@ USAGE:
              [--link-bw BPS] [--link-latency SECS]
              [--checkpoint-every SECS] [--out FILE.json]
              [--metrics FILE.json] [--trace FILE.jsonl] [--spans]
-  adsp experiment <fig1|fig3..fig17|all> [--full]
+  adsp experiment <fig1|fig3..fig18|all> [--full]
   adsp analyze <report.json|trace.jsonl> [--chrome FILE.json]
   adsp inspect <model>
   adsp list
@@ -333,7 +333,7 @@ fn main() -> Result<()> {
         "experiment" => {
             let args = Args::parse(rest, &["full"])?;
             let Some(name) = args.positional.first() else {
-                bail!("usage: adsp experiment <fig1|fig3..fig17|all> [--full]");
+                bail!("usage: adsp experiment <fig1|fig3..fig18|all> [--full]");
             };
             let scale = if args.has("full") { Scale::Full } else { Scale::Bench };
             if name == "all" {

@@ -35,10 +35,10 @@ use anyhow::{bail, Result};
 use crate::util::Json;
 
 /// Number of attribution classes (including the derived `idle`).
-pub const NUM_CLASSES: usize = 9;
+pub const NUM_CLASSES: usize = 10;
 
 /// Number of classes charged explicitly (everything but `idle`).
-pub const NUM_CHARGED: usize = 8;
+pub const NUM_CHARGED: usize = 9;
 
 /// What a worker-second was spent on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,9 +60,13 @@ pub enum TimeClass {
     Blackout = 6,
     /// Crashed / not yet restarted.
     Down = 7,
+    /// Waiting at the tier-1 edge aggregator: buffered for a flush, in
+    /// trunk transit, or stalled by an aggregator outage (hierarchical
+    /// runs only — flat runs never charge this lane).
+    EdgeWait = 8,
     /// Residual: converged early, ran out of steps, or otherwise
     /// unaccounted (derived at finalize, never charged directly).
-    Idle = 8,
+    Idle = 9,
 }
 
 impl TimeClass {
@@ -71,6 +75,7 @@ impl TimeClass {
         TimeClass::Compute,
         TimeClass::Serialize,
         TimeClass::Network,
+        TimeClass::EdgeWait,
         TimeClass::IngressWait,
         TimeClass::PsWait,
         TimeClass::BarrierWait,
@@ -84,6 +89,7 @@ impl TimeClass {
         TimeClass::Compute,
         TimeClass::Serialize,
         TimeClass::Network,
+        TimeClass::EdgeWait,
         TimeClass::IngressWait,
         TimeClass::PsWait,
         TimeClass::BarrierWait,
@@ -102,6 +108,7 @@ impl TimeClass {
             TimeClass::BarrierWait => "barrier_wait",
             TimeClass::Blackout => "blackout",
             TimeClass::Down => "down",
+            TimeClass::EdgeWait => "edge_wait",
             TimeClass::Idle => "idle",
         }
     }
@@ -116,14 +123,14 @@ impl TimeClass {
         bail!("unknown attribution class '{s}'")
     }
 
-    /// Lane index (`idle` = 8).
+    /// Lane index (`idle` = 9).
     pub fn index(&self) -> usize {
         *self as usize
     }
 
     /// True for the classes the paper counts as *waiting* (neither
     /// useful compute nor being dead/idle): serialize, network,
-    /// ingress_wait, ps_wait, barrier_wait, blackout.
+    /// edge_wait, ingress_wait, ps_wait, barrier_wait, blackout.
     pub fn is_waiting(&self) -> bool {
         !matches!(self, TimeClass::Compute | TimeClass::Down | TimeClass::Idle)
     }
@@ -309,10 +316,13 @@ impl AttributionReport {
         let parse_row = |v: &Json| -> Result<[f64; NUM_CLASSES]> {
             let mut row = [0.0f64; NUM_CLASSES];
             for c in TimeClass::ALL {
-                row[c.index()] = v
-                    .get(c.name())
-                    .ok_or_else(|| anyhow::anyhow!("attribution row missing '{}'", c.name()))?
-                    .as_f64()?;
+                // Absent classes read as 0.0 so reports written before a
+                // class existed (e.g. pre-hierarchy `edge_wait`) still
+                // parse.
+                row[c.index()] = match v.get(c.name()) {
+                    Some(x) => x.as_f64()?,
+                    None => 0.0,
+                };
             }
             Ok(row)
         };

@@ -53,8 +53,13 @@ pub enum SpanPhase {
     Serialize,
     /// The push held by a connectivity blackout.
     BlackoutHold,
-    /// Link transit of the update toward the PS.
+    /// Link transit of the update toward the PS (or, under a hierarchy,
+    /// toward the member's edge aggregator).
     Uplink,
+    /// The tier-1 edge-aggregation leg: buffered at the cell aggregator
+    /// waiting for a flush, plus the combined commit's trunk transit to
+    /// the PS (hierarchical runs only).
+    EdgeAggregate,
     /// Queued at the shared PS-ingress pipe.
     IngressWait,
     /// Waiting for the PS apply slot (shard FIFO / failover hold).
@@ -67,11 +72,12 @@ pub enum SpanPhase {
 
 impl SpanPhase {
     /// Every phase, lifecycle order.
-    pub const ALL: [SpanPhase; 8] = [
+    pub const ALL: [SpanPhase; 9] = [
         SpanPhase::Compute,
         SpanPhase::Serialize,
         SpanPhase::BlackoutHold,
         SpanPhase::Uplink,
+        SpanPhase::EdgeAggregate,
         SpanPhase::IngressWait,
         SpanPhase::PsWait,
         SpanPhase::Apply,
@@ -85,6 +91,7 @@ impl SpanPhase {
             SpanPhase::Serialize => "serialize",
             SpanPhase::BlackoutHold => "blackout_hold",
             SpanPhase::Uplink => "uplink",
+            SpanPhase::EdgeAggregate => "edge_aggregate",
             SpanPhase::IngressWait => "ingress_wait",
             SpanPhase::PsWait => "ps_wait",
             SpanPhase::Apply => "apply",

@@ -139,10 +139,11 @@ pub fn check_report_invariants(spec: &ExperimentSpec, report: &RunReport) -> Res
     let can_waste = spec.timeline.crash_count() > 0
         || has_leave
         || has_shard_failure
+        || spec.timeline.has_aggregator_crash()
         || spec.drop_commit_prob > 0.0;
     if report.wasted_steps > 0 && !can_waste {
         bail!(
-            "wasted_steps = {} with no crash/leave/shard-failure events and drop_commit_prob = 0",
+            "wasted_steps = {} with no crash/leave/shard/aggregator failures and drop_commit_prob = 0",
             report.wasted_steps
         );
     }
@@ -248,7 +249,7 @@ pub fn check_report_invariants(spec: &ExperimentSpec, report: &RunReport) -> Res
         }
     }
 
-    // Attribution conservation: every worker's nine classes must sum to
+    // Attribution conservation: every worker's ten classes must sum to
     // the report duration (the ledger derives idle as duration minus the
     // charged lanes, so this holds by construction — a violation means an
     // engine charged outside the ledger). Absent only in pre-attribution
@@ -506,7 +507,7 @@ mod tests {
         // Keep the worker rows consistent so the total check is the one
         // that fires.
         a.workers[0][0] += 1.0;
-        a.workers[0][8] -= 1.0;
+        a.workers[0][9] -= 1.0;
         let err = check_report_invariants(&spec, &r).unwrap_err().to_string();
         assert!(err.contains("conservation") || err.contains("negative"), "got: {err}");
 

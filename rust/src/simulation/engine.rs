@@ -15,12 +15,22 @@
 //!
 //! The scheduler's `Checkpoint` (every Γ), `Eval` (every eval interval) and
 //! `EpochStart` events drive the policy callbacks.
+//!
+//! Hierarchical runs (`spec.hierarchy`) insert a tier-1 edge aggregator
+//! between a cell's members and the PS: member commits travel their own
+//! `O_i/2` + link time to the aggregator (`AggArrive`), buffer under the
+//! cell's flush policy, and go upstream combined as one trunk commit
+//! (`AggCommitArrive` → `AggCommitApply`) paying one ingress admission
+//! and one apply service for the whole batch. Degenerate sections elide
+//! the tier entirely (see `SimEngine::new`), keeping flat runs
+//! bit-identical.
 
 use anyhow::{Context, Result};
 use crate::cluster::{ClusterDelta, ClusterState};
 use crate::config::ExperimentSpec;
 use crate::data::{make_source, DataSource};
 use crate::fault::{Checkpoint, CheckpointPolicy, CheckpointStore};
+use crate::hierarchy::{AggDownMode, Aggregator, FlushDecision};
 use crate::metrics::{ConvergenceDetector, LossLog, MetricsSlab, WorkerMetrics};
 use crate::network::IngressQueue;
 use crate::obs::{
@@ -61,6 +71,23 @@ enum EventKind {
     /// PS failover completes: once no shard is still down, the policy is
     /// re-notified so it can re-anchor (mirrors `BlackoutLift`).
     PsRecover,
+    /// Hierarchical runs only: a member commit physically reaches its
+    /// cell's edge aggregator (the tier-1 analogue of `CommitArrive`;
+    /// worker-bound, so a crash cancels it like any commit leg).
+    AggArrive(usize),
+    /// A trunk flush (keyed by flush id) physically reaches the PS
+    /// ingress. Not worker-bound: an aggregator crash purges the flush
+    /// record instead, and the orphaned event finds nothing and drops.
+    AggCommitArrive(usize),
+    /// The trunk flush cleared the ingress pipe / failover hold and its
+    /// combined update is applied.
+    AggCommitApply(usize),
+    /// An armed edge flush timer fires for aggregator `a` (stale timers
+    /// are recognized by deadline mismatch).
+    AggFlushTimer(usize),
+    /// An aggregator's crash outage ends: the policy is re-notified
+    /// (mirrors `BlackoutLift`/`PsRecover`).
+    AggRestart(usize),
 }
 
 impl EventKind {
@@ -79,6 +106,11 @@ impl EventKind {
             EventKind::CkptSave => "ckpt_save",
             EventKind::WorkerRestart(_) => "worker_restart",
             EventKind::PsRecover => "ps_recover",
+            EventKind::AggArrive(_) => "agg_arrive",
+            EventKind::AggCommitArrive(_) => "agg_commit_arrive",
+            EventKind::AggCommitApply(_) => "agg_commit_apply",
+            EventKind::AggFlushTimer(_) => "agg_flush_timer",
+            EventKind::AggRestart(_) => "agg_restart",
         }
     }
 
@@ -88,7 +120,8 @@ impl EventKind {
             EventKind::Ready(w)
             | EventKind::CommitArrive(w)
             | EventKind::CommitApply(w)
-            | EventKind::WorkerRestart(w) => Some(*w),
+            | EventKind::WorkerRestart(w)
+            | EventKind::AggArrive(w) => Some(*w),
             _ => None,
         }
     }
@@ -185,6 +218,64 @@ impl SpanChains {
     }
 }
 
+/// One member commit buffered at an edge aggregator, owning everything
+/// the later PS-side accounting needs. Buffering *moves* the worker's
+/// in-flight lanes here, so the lanes-level drop paths see nothing and a
+/// worker crash purges these exactly once
+/// (`purge_worker_from_hierarchy`).
+struct Contribution {
+    worker: usize,
+    u: ParamSet,
+    /// Compressed wire size of the member's uplink leg.
+    bytes: u64,
+    /// Local steps the commit carries (wasted if the tier loses it).
+    steps: u64,
+    /// Pre-drawn link time for the member's pull leg home.
+    down_extra: f64,
+    /// When the commit reached the aggregator (edge-wait attribution and
+    /// the `EdgeAggregate` span anchor here).
+    arrived: f64,
+}
+
+/// A member commit's share of a flush in trunk transit (the payload
+/// itself lives combined in [`FlushInFlight::u`]).
+struct FlushMember {
+    worker: usize,
+    bytes: u64,
+    steps: u64,
+    down_extra: f64,
+    arrived: f64,
+}
+
+impl FlushMember {
+    fn of(c: &Contribution) -> Self {
+        FlushMember {
+            worker: c.worker,
+            bytes: c.bytes,
+            steps: c.steps,
+            down_extra: c.down_extra,
+            arrived: c.arrived,
+        }
+    }
+}
+
+/// A combined (or passthrough) trunk flush, keyed by flush id from
+/// departure until its PS apply. An aggregator crash purges the entries
+/// still in trunk transit (`at_ps == false`); their queued events then
+/// find nothing and drop — the "dropped exactly once" invariant.
+struct FlushInFlight {
+    agg: usize,
+    u: ParamSet,
+    trunk_bytes: u64,
+    /// Trunk return leg: striped O/2 plus the pre-drawn dense pull time.
+    trunk_down: f64,
+    /// Set once the flush clears the trunk and reaches the PS ingress —
+    /// past that point it is out of the aggregator's hands, so a crash
+    /// no longer loses it.
+    at_ps: bool,
+    members: Vec<FlushMember>,
+}
+
 /// The deterministic discrete-event engine driving one experiment
 /// (see the module docs and `simulation/mod.rs`).
 pub struct SimEngine {
@@ -279,6 +370,18 @@ pub struct SimEngine {
     /// Commit-lineage span state; armed in `run_observed` iff the hub has
     /// spans enabled.
     chains: Option<SpanChains>,
+    /// One edge aggregator per hierarchy cell — empty when the tier is
+    /// disabled *or* elided (zero-cost passthrough with no aggregator
+    /// crashes in the timeline), which is how degenerate hierarchy
+    /// sections stay bit-identical to flat runs.
+    aggs: Vec<Aggregator>,
+    /// Member commits buffered at each aggregator awaiting a flush.
+    agg_buffers: Vec<Vec<Contribution>>,
+    /// Flushes between trunk departure and PS apply, keyed by flush id
+    /// (a BTreeMap so crash purges iterate deterministically — purge
+    /// order feeds the event queue's insertion-order tie-break).
+    flushes: std::collections::BTreeMap<usize, FlushInFlight>,
+    next_flush_id: usize,
 }
 
 /// Extra per-shard overhead as a fraction of the split cost — the RPC and
@@ -315,6 +418,24 @@ impl SimEngine {
             ClusterState::new(&spec.cluster, spec.sync.kind, spec.batch_size, &available)
                 .with_network(&spec.network)
                 .with_shards(spec.shards);
+        // The aggregation tier is *elided* — not just idle — whenever it
+        // cannot change any observable time: disabled sections, and
+        // zero-cost passthrough sections with no aggregator crash in the
+        // timeline. Eliding keeps the flat event sequence untouched, so
+        // those runs stay bit-identical to single-tier ones (pinned in
+        // tests/integration.rs).
+        let hier_active = spec.hierarchy.enabled()
+            && !(spec.hierarchy.is_zero_cost_passthrough()
+                && !spec.timeline.has_aggregator_crash());
+        let cluster =
+            if hier_active { cluster.with_hierarchy(&spec.hierarchy) } else { cluster };
+        let aggs: Vec<Aggregator> = if hier_active {
+            (0..spec.hierarchy.cells.len())
+                .map(|i| Aggregator::from_spec(&spec.hierarchy, i))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let b_default = cluster.b_default();
 
         let spec_seed = spec.seed;
@@ -408,6 +529,10 @@ impl SimEngine {
             obs: None,
             attr: AttributionLedger::new(m, horizon),
             chains: None,
+            agg_buffers: (0..aggs.len()).map(|_| Vec::new()).collect(),
+            aggs,
+            flushes: std::collections::BTreeMap::new(),
+            next_flush_id: 0,
         })
     }
 
@@ -583,7 +708,14 @@ impl SimEngine {
         // accounting bit-identical.
         let depart = self.cluster.departure_time(w, self.now);
         let blackout_wait = depart - self.now;
-        let oneway = self.oneway_secs(w);
+        // Hierarchical runs route the commit to the cell's edge
+        // aggregator instead: the member leg is the worker's own O/2 +
+        // link time with no shard striping (the edge leg never touches
+        // the PS shards). Same jitter draws, in the same order, so the
+        // stream stays aligned with the flat path.
+        let via_agg = !self.aggs.is_empty() && self.cluster.agg_of[w].is_some();
+        let oneway =
+            if via_agg { self.cluster.comms[w] / 2.0 } else { self.oneway_secs(w) };
         let up_extra =
             self.cluster.links[w].transfer_secs_jittered(up_bytes, &mut self.net_rng);
         let down_extra =
@@ -625,7 +757,9 @@ impl SimEngine {
                 h.observe("net/blackout_hold_secs", blackout_wait);
             }
         }
-        self.push_event(arrive, EventKind::CommitArrive(w));
+        let kind =
+            if via_agg { EventKind::AggArrive(w) } else { EventKind::CommitArrive(w) };
+        self.push_event(arrive, kind);
         Ok(())
     }
 
@@ -839,6 +973,376 @@ impl SimEngine {
         Ok(())
     }
 
+    /// The member commit reached its cell's edge aggregator: hand the
+    /// payload and its accounting to the tier and ask the flush policy
+    /// what to do. An aggregator inside a crash outage either stalls the
+    /// commit at the edge until restart (`Stall` — the cell has no PS
+    /// route of its own) or lets it fall through to the flat path
+    /// (`Direct`).
+    fn on_agg_arrive(&mut self, w: usize, obs: &mut dyn RunObserver) -> Result<()> {
+        if !self.cluster.active[w] {
+            return self.drop_in_flight(w);
+        }
+        if self.lanes.in_flight[w].is_none() {
+            return Ok(()); // a crash already dropped this commit
+        }
+        let a = self.cluster.agg_of[w].expect("AggArrive for a flat-routed worker");
+        if self.cluster.agg_down(a, self.now) {
+            match self.spec.hierarchy.on_agg_down {
+                AggDownMode::Stall => {
+                    let until = self.cluster.agg_down_until[a];
+                    self.metrics.comm_secs[w] += (until - self.now)
+                        .min((self.spec.max_virtual_secs - self.now).max(0.0));
+                    self.attr.charge(w, TimeClass::EdgeWait, self.now, until);
+                    if let Some(h) = self.obs.clone() {
+                        h.inc("hierarchy/stalled_arrivals");
+                    }
+                    self.push_event(until, EventKind::AggArrive(w));
+                    return Ok(());
+                }
+                AggDownMode::Direct => {
+                    // This arrival doubles as the PS arrival: the
+                    // member's own link time was already paid on the way
+                    // here, and the flat path takes over from ingress on.
+                    if let Some(h) = self.obs.clone() {
+                        h.inc("hierarchy/direct_fallbacks");
+                    }
+                    return self.on_commit_arrive(w, obs);
+                }
+            }
+        }
+        let u = self.lanes.in_flight[w].take().expect("checked above");
+        let bytes = self.lanes.in_flight_bytes[w]
+            .take()
+            .unwrap_or(self.runtime.manifest.bytes_per_commit as u64);
+        let steps = std::mem::take(&mut self.lanes.in_flight_steps[w]);
+        let down_extra = std::mem::take(&mut self.lanes.down_extra[w]);
+        self.agg_buffers[a].push(Contribution {
+            worker: w,
+            u,
+            bytes,
+            steps,
+            down_extra,
+            arrived: self.now,
+        });
+        if let Some(h) = self.obs.clone() {
+            h.inc("hierarchy/member_arrivals");
+        }
+        match self.aggs[a].on_buffer(self.now, bytes) {
+            FlushDecision::FlushNow => self.do_flush(a)?,
+            FlushDecision::ArmTimer(t) => self.push_event(t, EventKind::AggFlushTimer(a)),
+            FlushDecision::Wait => {}
+        }
+        Ok(())
+    }
+
+    /// Forward aggregator `a`'s buffer upstream: combine the member
+    /// deltas into one dense trunk commit (or, in passthrough mode, one
+    /// trunk transfer per member payload), draw the trunk link terms and
+    /// schedule the PS arrival. Buffer wait + trunk transit is charged to
+    /// each member as `EdgeWait` — the tier-1 lane `adsp analyze` splits
+    /// from the tier-2 `ingress_wait`/`ps_wait` lanes.
+    fn do_flush(&mut self, a: usize) -> Result<()> {
+        let contributions = std::mem::take(&mut self.agg_buffers[a]);
+        if contributions.is_empty() {
+            return Ok(());
+        }
+        let dense_bytes = self.runtime.manifest.bytes_per_commit as u64;
+        let mut batches: Vec<(ParamSet, u64, Vec<FlushMember>)> = Vec::new();
+        if self.aggs[a].passthrough {
+            for c in contributions {
+                let member = FlushMember::of(&c);
+                batches.push((c.u, c.bytes, vec![member]));
+            }
+        } else {
+            let mut combined: Option<ParamSet> = None;
+            let mut members = Vec::with_capacity(contributions.len());
+            for c in contributions {
+                members.push(FlushMember::of(&c));
+                match &mut combined {
+                    None => combined = Some(c.u),
+                    Some(into) => Aggregator::combine(into, &c.u),
+                }
+            }
+            // The combined trunk commit is dense: summing deltas fills in
+            // every coordinate any member touched.
+            batches.push((combined.expect("non-empty"), dense_bytes, members));
+        }
+        let n_flushes = batches.len() as u64;
+        let mut trunk_bytes_total = 0u64;
+        for (u, trunk_bytes, members) in batches {
+            trunk_bytes_total += trunk_bytes;
+            // The trunk leg *does* stripe across the PS shards, exactly
+            // like a flat worker's commit leg would.
+            let oneway_t =
+                self.aggs[a].comm_secs / 2.0 * shard_split_factor(self.spec.shards);
+            let up_t =
+                self.aggs[a].link.transfer_secs_jittered(trunk_bytes, &mut self.net_rng);
+            let down_t =
+                self.aggs[a].link.transfer_secs_jittered(dense_bytes, &mut self.net_rng);
+            let arrive = self.now + oneway_t + up_t;
+            for m in &members {
+                let w = m.worker;
+                self.metrics.comm_secs[w] += (arrive - m.arrived)
+                    .min((self.spec.max_virtual_secs - m.arrived).max(0.0));
+                self.attr.charge(w, TimeClass::EdgeWait, m.arrived, arrive);
+                self.emit_span(
+                    w,
+                    SpanPhase::EdgeAggregate,
+                    SpanState::Completed,
+                    m.arrived,
+                    arrive,
+                );
+            }
+            let fid = self.next_flush_id;
+            self.next_flush_id += 1;
+            self.flushes.insert(
+                fid,
+                FlushInFlight {
+                    agg: a,
+                    u,
+                    trunk_bytes,
+                    trunk_down: oneway_t + down_t,
+                    at_ps: false,
+                    members,
+                },
+            );
+            self.push_event(arrive, EventKind::AggCommitArrive(fid));
+        }
+        self.aggs[a].note_flush(self.now, trunk_bytes_total);
+        if let Some(h) = self.obs.clone() {
+            h.add("hierarchy/flushes", n_flushes);
+            h.add("hierarchy/trunk_bytes_up", trunk_bytes_total);
+        }
+        Ok(())
+    }
+
+    /// The trunk flush physically reached the PS ingress: admit its
+    /// payload to the shared pipe — one admission per flush, which is the
+    /// whole point of the tier — and apply now, or once it clears.
+    fn on_agg_commit_arrive(&mut self, fid: usize, obs: &mut dyn RunObserver) -> Result<()> {
+        let (trunk_bytes, first_worker) = match self.flushes.get_mut(&fid) {
+            Some(f) => {
+                f.at_ps = true; // past this point a crash no longer loses it
+                (f.trunk_bytes, f.members.first().map(|m| m.worker))
+            }
+            None => return Ok(()), // purged by an aggregator crash
+        };
+        // The lineage span for a delayed admission threads onto the first
+        // member's chain (one physical queue slot, many logical commits).
+        let ctx = match (&self.chains, first_worker) {
+            (Some(c), Some(w)) => {
+                Some(SpanCtx { worker: w, commit: c.seq[w], parent: c.last[w] })
+            }
+            _ => None,
+        };
+        let (ingress_clear, span_id) =
+            self.ingress.admit_observed(self.now, trunk_bytes, self.obs.as_ref(), ctx);
+        if let (Some(c), Some(id), Some(w)) = (self.chains.as_mut(), span_id, first_worker)
+        {
+            c.last[w] = Some(id);
+        }
+        let cleared = ingress_clear.max(self.cluster.ps_down_until());
+        let workers: Vec<usize> =
+            self.flushes[&fid].members.iter().map(|m| m.worker).collect();
+        for &w in &workers {
+            self.attr.charge(w, TimeClass::IngressWait, self.now, ingress_clear);
+            self.attr.charge(w, TimeClass::PsWait, ingress_clear.max(self.now), cleared);
+            if cleared > self.now {
+                self.metrics.comm_secs[w] += (cleared - self.now)
+                    .min((self.spec.max_virtual_secs - self.now).max(0.0));
+            }
+        }
+        if let Some(h) = self.obs.clone() {
+            h.inc("net/ingress_admissions");
+            if cleared > self.now {
+                h.inc("net/ingress_delays");
+                h.observe("net/ingress_wait_secs", cleared - self.now);
+            }
+        }
+        if cleared > self.now {
+            self.push_event(cleared, EventKind::AggCommitApply(fid));
+            return Ok(());
+        }
+        self.on_agg_commit_apply(fid, obs)
+    }
+
+    /// Apply one trunk flush at the PS: one fault-injection draw, one
+    /// apply of the combined delta, one service occupancy — then every
+    /// member commit it carried gets its own bookkeeping, policy
+    /// callback, and pull leg home (trunk return + member O/2 + member
+    /// link time).
+    fn on_agg_commit_apply(&mut self, fid: usize, obs: &mut dyn RunObserver) -> Result<()> {
+        if !self.flushes.contains_key(&fid) {
+            return Ok(()); // purged by an aggregator crash
+        }
+        // A shard failed after this apply was scheduled: hold the flush
+        // until failover completes (mirrors the flat path).
+        let ps_down = self.cluster.ps_down_until();
+        if ps_down > self.now {
+            let workers: Vec<usize> =
+                self.flushes[&fid].members.iter().map(|m| m.worker).collect();
+            for &w in &workers {
+                self.metrics.comm_secs[w] += (ps_down - self.now)
+                    .min((self.spec.max_virtual_secs - self.now).max(0.0));
+                self.attr.charge(w, TimeClass::PsWait, self.now, ps_down);
+            }
+            self.push_event(ps_down, EventKind::AggCommitApply(fid));
+            return Ok(());
+        }
+        let f = self.flushes.remove(&fid).expect("checked above");
+        let dense_bytes = self.runtime.manifest.bytes_per_commit as u64;
+        if self.spec.drop_commit_prob > 0.0
+            && self.fault_rng.next_f64() < self.spec.drop_commit_prob
+        {
+            // One draw per flush: the trunk commit is lost whole, so
+            // every member commit it carried is dropped with it.
+            if let Some(h) = self.obs.clone() {
+                h.add("fault/dropped_commits", f.members.len() as u64);
+            }
+            for m in &f.members {
+                let w = m.worker;
+                self.dropped_commits += 1;
+                self.wasted_steps += m.steps;
+                self.lanes.pending_pull[w] = Some(self.global.clone());
+                let ready =
+                    self.now + f.trunk_down + self.cluster.comms[w] / 2.0 + m.down_extra;
+                self.attr.charge(w, TimeClass::Network, self.now, ready);
+                self.emit_span(w, SpanPhase::Apply, SpanState::DroppedFault, self.now, self.now);
+                self.emit_span(w, SpanPhase::Downlink, SpanState::Completed, self.now, ready);
+                if let Some(c) = self.chains.as_mut() {
+                    c.last[w] = None;
+                    c.anchor[w] = ready;
+                }
+                self.push_event(ready, EventKind::Ready(w));
+            }
+            return Ok(());
+        }
+        let eta = self.spec.eta();
+        let mu = self.spec.sync.ps_momentum as f32;
+        if self.use_xla_apply {
+            if mu > 0.0 {
+                self.runtime
+                    .apply_commit_momentum(&mut self.global, &f.u, &mut self.velocity, eta, mu)?;
+            } else {
+                self.runtime.apply_commit(&mut self.global, &f.u, eta)?;
+            }
+        } else if mu > 0.0 {
+            native::apply_commit_momentum(&mut self.global, &f.u, &mut self.velocity, eta, mu);
+        } else {
+            native::apply_commit(&mut self.global, &f.u, eta);
+        }
+
+        let ps_busy_before = self.ps_busy;
+        let done = self.ps_apply_done();
+        if let Some(h) = self.obs.clone() {
+            h.observe("sim/ps_apply_turnaround_secs", done - self.now);
+            h.max_gauge("sim/ps_backlog_secs_peak", (self.ps_busy - self.now).max(0.0));
+        }
+        for m in &f.members {
+            let w = m.worker;
+            self.progress.bump_commits(w);
+            self.total_commits += 1;
+            self.metrics.commits[w] += 1;
+            self.metrics.bytes_up[w] += m.bytes;
+            self.metrics.bytes_down[w] += dense_bytes;
+            self.bytes_total += m.bytes + dense_bytes;
+            self.commits_since_ckpt += 1;
+            self.steps_since_ckpt += m.steps;
+            self.with_view(|policy, view| policy.on_commit_applied(w, view));
+            obs.on_commit_applied(self.now, w, self.total_commits);
+            if let Some(h) = self.obs.clone() {
+                h.add("net/bytes_up", m.bytes);
+                h.add("net/bytes_down", dense_bytes);
+                let total = self.total_commits as f64;
+                let data =
+                    vec![("worker", Json::Num(w as f64)), ("total", Json::Num(total))];
+                h.event(self.now, "commit", data);
+            }
+            let ready = done + f.trunk_down + self.cluster.comms[w] / 2.0 + m.down_extra;
+            self.attr.charge(w, TimeClass::PsWait, self.now, done);
+            self.attr.charge(w, TimeClass::Network, done, ready);
+            if self.chains.is_some() {
+                let apply_start =
+                    if done > self.now { ps_busy_before.max(self.now) } else { done };
+                if apply_start > self.now {
+                    self.emit_span(w, SpanPhase::PsWait, SpanState::Completed, self.now, apply_start);
+                }
+                self.emit_span(w, SpanPhase::Apply, SpanState::Completed, apply_start, done);
+                self.emit_span(w, SpanPhase::Downlink, SpanState::Completed, done, ready);
+                let c = self.chains.as_mut().expect("checked above");
+                c.last[w] = None;
+                c.anchor[w] = ready;
+            }
+            self.lanes.pending_pull[w] = Some(self.global.clone());
+            self.push_event(ready, EventKind::Ready(w));
+        }
+        // Failover bookkeeping and the commit-count checkpoint trigger
+        // fire once per flush, after all member commits are counted.
+        if let CheckpointPolicy::EveryCommits(n) = self.spec.fault.checkpoint {
+            if self.commits_since_ckpt >= n {
+                self.do_checkpoint(obs);
+            }
+        }
+        Ok(())
+    }
+
+    /// An armed edge flush timer fired. Stale timers — a flush or a crash
+    /// already cleared them — are recognized by deadline mismatch.
+    fn on_agg_flush_timer(&mut self, a: usize) -> Result<()> {
+        if self.aggs[a].timer_at() != Some(self.now) {
+            return Ok(());
+        }
+        if self.aggs[a].on_timer(self.now) {
+            self.do_flush(a)?;
+        }
+        Ok(())
+    }
+
+    /// Remove every hierarchy-tier trace of worker `w` (buffered
+    /// contributions and memberships of in-flight flushes) after it
+    /// crashes or leaves, wasting the carried steps exactly once. A
+    /// combined payload already merged the worker's delta — like a real
+    /// trunk packet the bytes are sent; only the member-side bookkeeping
+    /// dies. The aggregator's buffered count is left as-is: it only ever
+    /// over-counts, making the next flush at worst earlier (`do_flush`
+    /// forwards whatever is actually buffered).
+    fn purge_worker_from_hierarchy(&mut self, w: usize) {
+        if self.aggs.is_empty() {
+            return;
+        }
+        let mut lost = 0u64;
+        for buf in &mut self.agg_buffers {
+            let mut i = 0;
+            while i < buf.len() {
+                if buf[i].worker == w {
+                    let c = buf.remove(i);
+                    self.wasted_steps += c.steps;
+                    lost += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        for f in self.flushes.values_mut() {
+            let mut i = 0;
+            while i < f.members.len() {
+                if f.members[i].worker == w {
+                    let m = f.members.remove(i);
+                    self.wasted_steps += m.steps;
+                    lost += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        if lost > 0 {
+            if let Some(h) = self.obs.clone() {
+                h.add("hierarchy/purged_contributions", lost);
+            }
+        }
+    }
+
     fn do_eval(&mut self, obs: &mut dyn RunObserver) -> Result<()> {
         let eb = self.runtime.manifest.eval.b;
         let (x, y) = self.eval_source.eval_batch(eb);
@@ -971,6 +1475,7 @@ impl SimEngine {
                     self.attr.charge(w, TimeClass::BarrierWait, start, self.now);
                 }
                 self.lanes.pending_pull[w] = None;
+                self.purge_worker_from_hierarchy(w);
             }
             ClusterDelta::Crashed { worker: w, until } => {
                 // Unclean crash: the uncommitted accumulator and the
@@ -997,10 +1502,74 @@ impl SimEngine {
                 }
                 self.lanes.pending_pull[w] = None;
                 self.drop_in_flight(w)?;
+                self.purge_worker_from_hierarchy(w);
                 // The outage itself is down time (the ledger trims any
                 // overlap with charges the cancelled chain already made).
                 self.attr.charge(w, TimeClass::Down, self.now, until);
                 self.push_event(until, EventKind::WorkerRestart(w));
+            }
+            ClusterDelta::AggDown { agg: a, until } => {
+                // Aggregator crash: the edge tier's state for this cell
+                // is lost — buffered member commits and combined flushes
+                // still in trunk transit are dropped, each member's steps
+                // wasted exactly once. Flushes already at the PS ingress
+                // (`at_ps`) survive: they are out of the aggregator's
+                // hands. Members waiting on replies are released per the
+                // section's `on_agg_down` mode (Stall: when the cell
+                // reconnects at restart; Direct: immediately); commits
+                // still in transit *to* the aggregator decide at their
+                // arrival (`on_agg_arrive`).
+                if let Some(h) = self.obs.clone() {
+                    h.inc("hierarchy/agg_crashes");
+                }
+                self.aggs[a].reset_outage();
+                let stall = self.spec.hierarchy.on_agg_down == AggDownMode::Stall;
+                let release = if stall { until } else { self.now };
+                let mut lost_members: Vec<FlushMember> =
+                    std::mem::take(&mut self.agg_buffers[a])
+                        .iter()
+                        .map(FlushMember::of)
+                        .collect();
+                let doomed: Vec<usize> = self
+                    .flushes
+                    .iter()
+                    .filter(|(_, f)| f.agg == a && !f.at_ps)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in doomed {
+                    let f = self.flushes.remove(&id).expect("listed above");
+                    lost_members.extend(f.members);
+                }
+                if let Some(h) = self.obs.clone() {
+                    h.add("hierarchy/commits_lost_to_agg_crash", lost_members.len() as u64);
+                }
+                for m in lost_members {
+                    let w = m.worker;
+                    self.wasted_steps += m.steps;
+                    // Edge wait until the loss is learned, then the
+                    // re-pull of the (unchanged) global model rides home.
+                    self.attr.charge(w, TimeClass::EdgeWait, m.arrived, release);
+                    self.emit_span(
+                        w,
+                        SpanPhase::EdgeAggregate,
+                        SpanState::DroppedCrash,
+                        m.arrived,
+                        self.now,
+                    );
+                    if let Some(c) = self.chains.as_mut() {
+                        c.last[w] = None;
+                    }
+                    let ready = release + self.cluster.comms[w] / 2.0 + m.down_extra;
+                    self.metrics.comm_secs[w] += (ready - self.now)
+                        .min((self.spec.max_virtual_secs - self.now).max(0.0));
+                    self.attr.charge(w, TimeClass::Network, release, ready);
+                    if let Some(c) = self.chains.as_mut() {
+                        c.anchor[w] = ready;
+                    }
+                    self.lanes.pending_pull[w] = Some(self.global.clone());
+                    self.push_event(ready, EventKind::Ready(w));
+                }
+                self.push_event(until, EventKind::AggRestart(a));
             }
             ClusterDelta::ShardDown { shard: _, until } => {
                 // Failover: every shard rolls back together to the last
@@ -1244,6 +1813,30 @@ impl SimEngine {
                         if let Some(h) = &hub {
                             h.inc("fault/ps_recoveries");
                             h.event(self.now, "ps_recover", vec![]);
+                        }
+                        self.with_view(|policy, view| policy.on_cluster_change(view));
+                    }
+                }
+                EventKind::AggArrive(w) => {
+                    self.on_agg_arrive(w, obs)?;
+                }
+                EventKind::AggCommitArrive(fid) => {
+                    self.on_agg_commit_arrive(fid, obs)?;
+                }
+                EventKind::AggCommitApply(fid) => {
+                    self.on_agg_commit_apply(fid, obs)?;
+                }
+                EventKind::AggFlushTimer(a) => {
+                    self.on_agg_flush_timer(a)?;
+                }
+                EventKind::AggRestart(a) => {
+                    // The cell reconnected: re-notify the policy so it
+                    // can re-anchor (mirrors `BlackoutLift`/`PsRecover`).
+                    if !self.cluster.agg_down(a, self.now) {
+                        if let Some(h) = &hub {
+                            h.inc("hierarchy/agg_restarts");
+                            let data = vec![("agg", Json::Num(a as f64))];
+                            h.event(self.now, "agg_restart", data);
                         }
                         self.with_view(|policy, view| policy.on_cluster_change(view));
                     }

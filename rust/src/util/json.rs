@@ -106,6 +106,10 @@ impl Json {
         self.get(key).map(|j| j.as_str()).transpose().map(|o| o.unwrap_or(default))
     }
 
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        self.get(key).map(|j| j.as_bool()).transpose().map(|o| o.unwrap_or(default))
+    }
+
     // ---------------- builders ----------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {

@@ -186,6 +186,7 @@ fn prop_fuzzed_timelines_always_validate() {
         cfg.event_mix.leave = r.below(6) as u32;
         cfg.event_mix.crash = r.below(6) as u32;
         cfg.event_mix.shard = r.below(6) as u32;
+        cfg.event_mix.agg_crash = r.below(6) as u32;
         let seed = r.next_u64();
         let tl = cfg.generate(seed);
         assert!(!tl.is_empty(), "case {case} seed {seed}: empty timeline for a live fleet");
@@ -332,6 +333,61 @@ fn fuzzed_cohort_spec_equals_its_explicit_expansion() {
             let a = sim_run(&spec, &tag);
             let b = sim_run(&explicit, &tag);
             with_dump(&spec, &tag, || {
+                assert_reports_bit_identical(&a, &b, &tag);
+            });
+        }
+    }
+}
+
+#[test]
+fn fuzzed_flat_equals_zero_cost_passthrough_hierarchy_bitwise() {
+    // The fog tier's structural pin: a passthrough hierarchy whose
+    // aggregators add zero cost (degenerate trunks, zero overhead,
+    // flush-every-commit) and never crash *is* the flat topology — the
+    // engines elide the tier, so the pair must agree bit for bit under
+    // every policy, on fuzzed fleets and timelines.
+    use adsp::cluster::{ClusterEvent, ClusterTimeline};
+    use adsp::hierarchy::{CellAggSpec, HierarchySpec};
+    for seed in fuzz_seeds() {
+        for kind in SyncModelKind::ALL {
+            let tag = format!("hier-{}-seed{seed}", kind.name());
+            let mut flat = random_fleet_spec(seed, kind, FuzzIntensity::Light);
+            // Normalize the pair under test: no fuzzed fog tier, no
+            // aggregator crashes (a crashed zero-cost tier is *not*
+            // degenerate and legitimately diverges).
+            flat.hierarchy = HierarchySpec::default();
+            let events: Vec<ClusterEvent> = flat
+                .timeline
+                .events()
+                .iter()
+                .filter(|e| !matches!(e, ClusterEvent::AggregatorCrash { .. }))
+                .cloned()
+                .collect();
+            flat.timeline = ClusterTimeline::new(events);
+            // Aggregate every labelled cell of the expanded fleet.
+            let labels = {
+                let mut seen: Vec<String> = Vec::new();
+                for c in FuzzConfig::for_spec(&flat, FuzzIntensity::Light).cells {
+                    if !c.is_empty() && !seen.contains(&c) {
+                        seen.push(c);
+                    }
+                }
+                seen
+            };
+            if labels.is_empty() {
+                continue; // unlabelled fleet: nothing to aggregate
+            }
+            let mut hier = flat.clone();
+            hier.hierarchy = HierarchySpec {
+                cells: labels.iter().map(|l| CellAggSpec::new(l)).collect(),
+                passthrough: true,
+                ..HierarchySpec::default()
+            };
+            assert!(hier.hierarchy.is_zero_cost_passthrough(), "{tag}: pin setup");
+            hier.validate().unwrap_or_else(|e| panic!("{tag}: {e}"));
+            let a = sim_run(&flat, &tag);
+            let b = sim_run(&hier, &tag);
+            with_dump(&hier, &tag, || {
                 assert_reports_bit_identical(&a, &b, &tag);
             });
         }

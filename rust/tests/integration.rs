@@ -1449,3 +1449,224 @@ fn fleet_proxy_losses_decrease_and_report_parses() {
     assert_eq!(back.events_processed(), a.events_processed());
     assert_eq!(back.to_json(), a.to_json(), "fleet report JSON drifted");
 }
+
+// ---------------------------------------------------------------------------
+// hierarchical fog aggregation tier
+// ---------------------------------------------------------------------------
+//
+// All on the artifact-free fleet_proxy runtime, so the fog tier has full
+// tier-1 coverage on every checkout.
+
+use adsp::hierarchy::{AggDownMode, CellAggSpec, FlushPolicy, HierarchySpec};
+
+/// The three-worker spec with cells assigned: workers 0 and 1 in
+/// `edge-a`, worker 2 in `edge-b`.
+fn celled_spec(kind: SyncModelKind) -> ExperimentSpec {
+    let mut spec = tiny_spec("fleet_proxy", kind);
+    spec.cluster.workers[0].cell = "edge-a".into();
+    spec.cluster.workers[1].cell = "edge-a".into();
+    spec.cluster.workers[2].cell = "edge-b".into();
+    spec
+}
+
+/// A real (non-degenerate) fog tier over both cells: combine every 2
+/// member commits, nonzero trunk overhead.
+fn fog_section() -> HierarchySpec {
+    HierarchySpec {
+        cells: vec![CellAggSpec::new("edge-a"), CellAggSpec::new("edge-b")],
+        default_comm_secs: 0.3,
+        default_flush: Some(FlushPolicy::EveryK(2)),
+        ..HierarchySpec::default()
+    }
+}
+
+#[test]
+fn degenerate_hierarchy_bit_identical_for_every_sync_model() {
+    // Acceptance pin: the fog tier must not perturb the flat path. A run
+    // with no `hierarchy` section, and a run whose section is an
+    // *explicitly* zero-cost passthrough (degenerate trunks, zero
+    // overhead, flush-every-commit, no crashes), must produce
+    // bit-identical reports for every sync model.
+    for kind in SyncModelKind::ALL {
+        let spec = celled_spec(kind);
+        let base = Run::from_spec(spec.clone()).backend(Backend::Sim).execute().unwrap();
+        let mut degenerate = spec;
+        degenerate.hierarchy = HierarchySpec {
+            cells: vec![CellAggSpec::new("edge-a"), CellAggSpec::new("edge-b")],
+            passthrough: true,
+            ..HierarchySpec::default()
+        };
+        assert!(degenerate.hierarchy.is_zero_cost_passthrough());
+        degenerate.validate().unwrap();
+        let same = Run::from_spec(degenerate).backend(Backend::Sim).execute().unwrap();
+        assert_reports_bit_identical(&base, &same, &format!("fog pin under {}", kind.name()));
+    }
+}
+
+#[test]
+fn hierarchical_runs_batch_commits_and_charge_edge_wait() {
+    // A combining tier under a commit-heavy policy: fewer trunk flushes
+    // than member arrivals, per-member commit accounting intact (one
+    // applied commit per member contribution), and the buffering window
+    // showing up in the EdgeWait attribution lane.
+    use adsp::obs::{ObsConfig, ObsHub, TimeClass};
+    let mut spec = celled_spec(SyncModelKind::Tap);
+    spec.hierarchy = fog_section();
+    spec.validate().unwrap();
+    let hub = ObsHub::new(ObsConfig::metrics_only());
+    let report = Run::from_spec(spec.clone()).observability(&hub).execute().unwrap();
+    assert!(report.total_commits > 0, "hierarchical run never committed");
+    assert!(report.final_loss.is_finite());
+    assert!(report.best_loss < report.loss_log.first_loss().unwrap(), "training regressed");
+    assert_eq!(report.wasted_steps, 0, "crash-free fog tier wasted work");
+    let m = report.metrics.as_ref().expect("metrics missing");
+    let arrivals = m.counter("hierarchy/member_arrivals");
+    let flushes = m.counter("hierarchy/flushes");
+    assert!(arrivals > 0, "no member commits reached an aggregator");
+    assert!(flushes > 0, "aggregators never flushed");
+    assert!(flushes < arrivals, "every-2 flush policy never batched: {flushes} of {arrivals}");
+    assert!(m.counter("hierarchy/trunk_bytes_up") > 0, "trunk moved no bytes");
+    let attr = report.attribution.as_ref().expect("attribution missing");
+    assert!(
+        attr.total[TimeClass::EdgeWait as usize] > 0.0,
+        "edge buffering charged no EdgeWait time"
+    );
+    // Determinism of the whole tier.
+    let again = Run::from_spec(spec).execute().unwrap();
+    assert_reports_bit_identical(&report, &again, "hierarchical determinism");
+}
+
+#[test]
+fn aggregator_crash_wastes_inflight_work_exactly_once() {
+    // Crash `edge-a`'s aggregator while its buffer is guaranteed
+    // non-empty (a flush threshold the run can never reach): the buffered
+    // member work is wasted exactly once, the flat-path worker keeps the
+    // run alive, and the whole script replays bit for bit.
+    use adsp::obs::{ObsConfig, ObsHub};
+    let mut spec = celled_spec(SyncModelKind::Tap);
+    spec.convergence_window = 10_000; // run to the horizon
+    spec.cluster.workers[2].cell = String::new(); // worker 2 stays flat
+    spec.hierarchy = HierarchySpec {
+        cells: vec![CellAggSpec::new("edge-a")],
+        default_flush: Some(FlushPolicy::EveryK(100_000)),
+        ..HierarchySpec::default()
+    };
+    spec.timeline = ClusterTimeline::new(vec![ClusterEvent::AggregatorCrash {
+        t: 60.0,
+        cell: "edge-a".into(),
+        restart_after: 10.0,
+    }]);
+    spec.validate().unwrap();
+    let hub = ObsHub::new(ObsConfig::metrics_only());
+    let report = Run::from_spec(spec.clone()).observability(&hub).execute().unwrap();
+    let m = report.metrics.as_ref().expect("metrics missing");
+    assert_eq!(m.counter("hierarchy/agg_crashes"), 1);
+    assert_eq!(m.counter("hierarchy/agg_restarts"), 1, "recovery never re-notified");
+    let lost = m.counter("hierarchy/commits_lost_to_agg_crash");
+    assert!(lost > 0, "crash found an empty buffer despite the unreachable threshold");
+    assert!(report.wasted_steps > 0, "lost contributions wasted no steps");
+    assert!(report.total_commits > 0, "the flat-path worker stopped committing");
+    adsp::run::check_report_invariants(&spec, &report).unwrap();
+    let again = Run::from_spec(spec).execute().unwrap();
+    assert_eq!(report.wasted_steps, again.wasted_steps, "waste accounting not deterministic");
+    assert_reports_bit_identical(&report, &again, "agg crash determinism");
+}
+
+#[test]
+fn agg_down_members_stall_or_fall_back_per_spec() {
+    // The two outage behaviours: Stall holds member commits at the edge
+    // (EdgeWait grows, arrivals re-queue), Direct reroutes them onto the
+    // flat path for the outage window.
+    use adsp::obs::{ObsConfig, ObsHub};
+    let run_mode = |mode: AggDownMode| {
+        let mut spec = celled_spec(SyncModelKind::Tap);
+        spec.convergence_window = 10_000;
+        spec.hierarchy = fog_section();
+        spec.hierarchy.on_agg_down = mode;
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::AggregatorCrash {
+            t: 40.0,
+            cell: "edge-a".into(),
+            restart_after: 30.0,
+        }]);
+        spec.validate().unwrap();
+        let hub = ObsHub::new(ObsConfig::metrics_only());
+        let report = Run::from_spec(spec).observability(&hub).execute().unwrap();
+        assert!(report.final_loss.is_finite(), "{mode:?} diverged");
+        assert!(report.total_commits > 0, "{mode:?} stopped committing");
+        report
+    };
+    let stalled = run_mode(AggDownMode::Stall);
+    let m = stalled.metrics.as_ref().unwrap();
+    assert!(
+        m.counter("hierarchy/stalled_arrivals") > 0,
+        "no member commit waited out the outage"
+    );
+    assert_eq!(m.counter("hierarchy/direct_fallbacks"), 0, "Stall leaked onto the flat path");
+    let direct = run_mode(AggDownMode::Direct);
+    let m = direct.metrics.as_ref().unwrap();
+    assert!(
+        m.counter("hierarchy/direct_fallbacks") > 0,
+        "no member commit fell back to the flat path"
+    );
+    assert_eq!(m.counter("hierarchy/stalled_arrivals"), 0, "Direct stalled an arrival");
+}
+
+#[test]
+fn realtime_engine_runs_hierarchical_cells() {
+    // Wall-clock fog tier: relay threads buffer member commits, flush
+    // them upstream over one emulated trunk transfer, and the run
+    // completes with batched flushes visible in the hub.
+    use adsp::obs::{ObsConfig, ObsHub};
+    let mut spec = celled_spec(SyncModelKind::Adsp);
+    spec.max_virtual_secs = 120.0;
+    spec.max_total_steps = 1500;
+    spec.eval_interval_secs = 10.0;
+    spec.hierarchy = fog_section();
+    spec.hierarchy.default_comm_secs = 0.1;
+    spec.validate().unwrap();
+    let hub = ObsHub::new(ObsConfig::metrics_only());
+    let out = Run::from_spec(spec)
+        .backend(Backend::Realtime { time_scale: 0.01 })
+        .observability(&hub)
+        .execute()
+        .unwrap();
+    assert!(out.total_steps > 0, "no steps trained");
+    assert!(out.total_commits > 0, "no commits crossed the fog tier");
+    assert!(out.final_loss.is_finite());
+    let m = out.metrics.as_ref().expect("metrics missing");
+    assert!(m.counter("hierarchy/flushes") > 0, "relays never flushed");
+    assert!(
+        m.counter("hierarchy/member_arrivals") >= m.counter("hierarchy/flushes"),
+        "more flushes than member arrivals"
+    );
+    assert!(out.wall_secs < 30.0, "realtime fog run took too long: {}", out.wall_secs);
+}
+
+#[test]
+fn realtime_relays_survive_aggregator_crash() {
+    // A crash mid-run under both outage modes: the relay holds (Stall) or
+    // flat-forwards (Direct) and the run always completes.
+    for mode in [AggDownMode::Stall, AggDownMode::Direct] {
+        let mut spec = celled_spec(SyncModelKind::Adsp);
+        spec.max_virtual_secs = 120.0;
+        spec.max_total_steps = 1500;
+        spec.eval_interval_secs = 10.0;
+        spec.hierarchy = fog_section();
+        spec.hierarchy.default_comm_secs = 0.05;
+        spec.hierarchy.on_agg_down = mode;
+        spec.timeline = ClusterTimeline::new(vec![ClusterEvent::AggregatorCrash {
+            t: 40.0,
+            cell: "edge-a".into(),
+            restart_after: 20.0,
+        }]);
+        spec.validate().unwrap();
+        let out = Run::from_spec(spec)
+            .backend(Backend::Realtime { time_scale: 0.01 })
+            .execute()
+            .unwrap();
+        assert!(out.total_steps > 0, "{mode:?}: no steps trained");
+        assert!(out.total_commits > 0, "{mode:?}: no commits survived the outage");
+        assert!(out.final_loss.is_finite(), "{mode:?} diverged");
+        assert!(out.wall_secs < 30.0, "{mode:?}: realtime crash run took too long");
+    }
+}
